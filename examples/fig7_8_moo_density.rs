@@ -1,0 +1,155 @@
+//! Figs 6/7/8 + §3-E2: MOO-adaptive training under the paper's C1/C2
+//! network configurations.
+//!
+//! * prints the emulated schedule (Fig 6),
+//! * trains with the full flexible stack + MOO controller,
+//! * prints the KDE of CRs used over training (Fig 7),
+//! * prints the density of collectives used (Fig 8),
+//! * compares final accuracy against the best static-CR AR-Topk run and
+//!   DenseSGD (§3-E2's claim: adaptive >= static, ~DenseSGD level).
+//!
+//!     cargo run --release --example fig7_8_moo_density -- [--steps 800]
+//!         [--model ViT]
+
+use anyhow::Result;
+use flexcomm::artopk::{ArFlavor, SelectionPolicy};
+use flexcomm::collectives::CollectiveKind;
+use flexcomm::coordinator::adaptive::AdaptiveConfig;
+use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, Trainer};
+use flexcomm::experiments::{
+    print_kde, proxy_cfg, run_proxy, write_csv, GPU_COMPRESS_SPEEDUP, PAPER_COMPUTE_MS,
+    PAPER_MODELS,
+};
+use flexcomm::netsim::schedule::NetSchedule;
+use flexcomm::util::cli::Args;
+use flexcomm::util::table::Table;
+
+const PROXY_PARAMS: f64 = 53_664.0;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    let steps = args.u64_or("steps", 800)?;
+    let model = args.str_or("model", "ViT");
+    let (_, params) = PAPER_MODELS
+        .iter()
+        .find(|(m, _)| *m == model)
+        .copied()
+        .unwrap_or(("ViT", 86.6e6));
+    let compute_ms = PAPER_COMPUTE_MS
+        .iter()
+        .find(|(m, _)| *m == model)
+        .map(|(_, c)| *c)
+        .unwrap_or(110.0);
+    let msg_scale = params / PROXY_PARAMS;
+    let spe = steps / 50; // 50 virtual epochs like the paper
+
+    let mk = |strategy, cr: CrControl, schedule: NetSchedule, seed| {
+        let mut cfg = proxy_cfg(strategy, cr, steps, seed);
+        cfg.schedule = schedule;
+        cfg.steps_per_epoch = spe.max(1);
+        cfg.msg_scale = msg_scale;
+        cfg.comp_scale = msg_scale / GPU_COMPRESS_SPEEDUP;
+        cfg.compute =
+            flexcomm::coordinator::worker::ComputeModel::with_jitter(compute_ms * 1e-3, 0.05);
+        run_proxy(cfg, seed)
+    };
+
+    let mut summary = Table::new(["config", "method", "best acc (%)", "mean t_step (ms)"]);
+    let mut csv = String::from("config,step,cr,collective,alpha_ms,bw_gbps\n");
+
+    for cname in ["c1", "c2"] {
+        let schedule = NetSchedule::preset(cname, 50.0).unwrap();
+        println!("\n=== Configuration {} (Fig 6) ===", cname.to_uppercase());
+        let mut t = Table::new(["from epoch", "alpha (ms)", "bw (Gbps)"]);
+        for p in schedule.phases() {
+            t.row([
+                format!("{:.0}", p.from_epoch),
+                format!("{:.0}", p.link.alpha_ms()),
+                format!("{:.0}", p.link.bw_gbps()),
+            ]);
+        }
+        t.print();
+
+        // MOO-adaptive flexible run.
+        let adaptive = mk(
+            Strategy::Flexible { policy: SelectionPolicy::Star },
+            CrControl::Adaptive(AdaptiveConfig { probe_iters: 5, ..Default::default() }),
+            schedule.clone(),
+            3,
+        );
+        // Static baselines.
+        let static_01 = mk(
+            Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+            CrControl::Static(0.01),
+            schedule.clone(),
+            3,
+        );
+        let dense = mk(
+            Strategy::DenseSgd { flavor: DenseFlavor::Auto },
+            CrControl::Static(1.0),
+            schedule.clone(),
+            3,
+        );
+
+        // Fig 7: KDE of log10(CR) used.
+        let crs: Vec<f64> = adaptive.metrics.crs_used().iter().map(|c| c.log10()).collect();
+        println!("\nFig 7 — density of log10(CR) used ({}):", cname.to_uppercase());
+        print_kde(&format!("{} adaptive CRs", cname), &crs, -3.2, -0.8);
+
+        // Fig 8: collective densities.
+        println!("\nFig 8 — collective usage ({}):", cname.to_uppercase());
+        let used = adaptive.metrics.collectives_used();
+        let mut tab = Table::new(["collective", "steps", "share"]);
+        for kind in [
+            CollectiveKind::AllgatherTopk,
+            CollectiveKind::ArTopkRing,
+            CollectiveKind::ArTopkTree,
+        ] {
+            let c = used.iter().filter(|&&k| k == kind).count();
+            tab.row([
+                kind.name().to_string(),
+                c.to_string(),
+                format!("{:.1}%", 100.0 * c as f64 / used.len() as f64),
+            ]);
+        }
+        tab.print();
+
+        for m in &adaptive.metrics.steps {
+            csv.push_str(&format!(
+                "{cname},{},{:.5},{},{:.2},{:.2}\n",
+                m.step,
+                m.cr,
+                m.collective.name(),
+                m.alpha_ms,
+                m.bw_gbps
+            ));
+        }
+
+        let acc = |t: &Trainer| t.metrics.best_accuracy().unwrap_or(f64::NAN) * 100.0;
+        let ms = |t: &Trainer| t.metrics.summary().mean_step_s * 1e3;
+        summary.row([
+            cname.to_uppercase(),
+            "MOO-adaptive".into(),
+            format!("{:.2}", acc(&adaptive)),
+            format!("{:.2}", ms(&adaptive)),
+        ]);
+        summary.row([
+            cname.to_uppercase(),
+            "STAR-Topk 0.01".into(),
+            format!("{:.2}", acc(&static_01)),
+            format!("{:.2}", ms(&static_01)),
+        ]);
+        summary.row([
+            cname.to_uppercase(),
+            "DenseSGD".into(),
+            format!("{:.2}", acc(&dense)),
+            format!("{:.2}", ms(&dense)),
+        ]);
+    }
+
+    println!("\n== §3-E2 — MOO-adaptive vs static ({model} proxy) ==");
+    summary.print();
+    let p = write_csv("results/fig7_8_moo.csv", &csv)?;
+    println!("\nper-step CR/collective trace -> {p}");
+    Ok(())
+}

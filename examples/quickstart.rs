@@ -1,0 +1,71 @@
+//! Quickstart: train one model with DenseSGD vs AR-Topk on a constrained
+//! link and see the speed/accuracy trade the paper is about.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Uses the pure-rust host model so it runs in seconds with no artifacts.
+
+use flexcomm::artopk::{ArFlavor, SelectionPolicy};
+use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
+use flexcomm::coordinator::worker::ComputeModel;
+use flexcomm::netsim::cost_model::LinkParams;
+use flexcomm::netsim::schedule::NetSchedule;
+use flexcomm::runtime::HostMlp;
+use flexcomm::util::table::Table;
+
+fn run(strategy: Strategy, cr: f64, label: &str) -> (String, f64, f64, f64) {
+    let cfg = TrainConfig {
+        n_workers: 8,
+        steps: 300,
+        steps_per_epoch: 30,
+        lr: 0.2,
+        momentum: 0.9,
+        strategy,
+        cr: CrControl::Static(cr),
+        // A constrained inter-node link: 4 ms latency, 2 Gbps.
+        schedule: NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 2.0)),
+        compute: ComputeModel::with_jitter(0.020, 0.05),
+        eval_every: 30,
+        seed: 7,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(7)));
+    t.run();
+    let s = t.metrics.summary();
+    (
+        label.to_string(),
+        s.mean_step_s * 1e3,
+        t.metrics.best_accuracy().unwrap_or(f64::NAN) * 100.0,
+        t.clock.now(),
+    )
+}
+
+fn main() {
+    println!("flexcomm quickstart — DenseSGD vs AR-Topk on a 4ms/2Gbps link\n");
+    let rows = vec![
+        run(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, "DenseSGD (Ring-AR)"),
+        run(
+            Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+            0.01,
+            "STAR-Topk CR 0.01 (ART-Ring)",
+        ),
+        run(Strategy::Flexible { policy: SelectionPolicy::Star }, 0.01, "Flexible CR 0.01"),
+    ];
+    let mut t = Table::new(["method", "t_step (ms)", "best acc (%)", "total time (s)"]);
+    for (label, ms, acc, total) in &rows {
+        t.row([
+            label.clone(),
+            format!("{ms:.2}"),
+            format!("{acc:.2}"),
+            format!("{total:.1}"),
+        ]);
+    }
+    t.print();
+    println!(
+        "\nSame step budget: the flexible strategy (Eqn 5 collective choice) finishes \
+         {:.1}x faster than DenseSGD and {:.1}x faster than fixed ART-Ring — at this \
+         model size and link, AG is the right collective and the selector finds it.",
+        rows[0].3 / rows[2].3,
+        rows[1].3 / rows[2].3
+    );
+}

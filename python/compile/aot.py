@@ -1,0 +1,158 @@
+"""AOT compiler: lower every L2 graph to HLO *text* artifacts for rust.
+
+HLO text (NOT ``lowered.compile()`` or serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py.
+
+Per preset this writes into ``artifacts/``:
+
+  <name>_grad.hlo.txt    (params, batch...)             -> (loss, grads)
+  <name>_eval.hlo.txt    (params, batch...)             -> (loss, ncorrect)
+  <name>_step.hlo.txt    (params, mom, grads, lr, m, wd) -> (params', mom')
+  <name>_layout.txt      "name offset size" per parameter tensor
+  <name>_meta.txt        key=value shape/config manifest
+  ef_topk_<P>.hlo.txt    (g[P], res[P], k)  -> (g_c, res', |gc|^2, |ge|^2, tau)
+
+Python runs ONCE at build time (``make artifacts``); the rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import hashlib
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import ef_compress as efc
+from .kernels import topk_threshold as tkt
+
+DEFAULT_PRESETS = ["mlp", "mlp-wide", "tiny", "small"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} bytes)")
+
+
+def _f32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def _i32(shape=()):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def export_ef_topk(out_dir: str, p: int, rounds: int, force: bool) -> None:
+    """Fused threshold-estimation + EF-compress graph over a size-p gradient."""
+    path = os.path.join(out_dir, f"ef_topk_{p}.hlo.txt")
+    if os.path.exists(path) and not force:
+        print(f"  skip {path} (exists)")
+        return
+
+    def f(g, residual, k):
+        g_e = g + residual
+        tau = tkt.estimate_threshold(g_e, k, rounds=rounds)
+        g_c, res, norm_c, norm_e = efc.ef_compress(g, residual, tau)
+        return g_c, res, norm_c, norm_e, tau
+
+    lowered = jax.jit(f).lower(_f32((p,)), _f32((p,)), _f32())
+    _write(path, to_hlo_text(lowered))
+
+
+def export_preset(out_dir: str, name: str, force: bool) -> None:
+    if name in M.TRANSFORMER_PRESETS:
+        kind, cfg = "transformer", M.TRANSFORMER_PRESETS[name]
+        layout = M.transformer_layout(cfg)
+        batch_specs = [_i32((cfg.batch, cfg.seq + 1))]
+        meta = dict(
+            kind=kind, vocab=cfg.vocab, dim=cfg.dim, layers=cfg.layers,
+            heads=cfg.heads, seq=cfg.seq, batch=cfg.batch,
+            use_pallas=int(cfg.use_pallas),
+        )
+    elif name in M.MLP_PRESETS:
+        kind, cfg = "mlp", M.MLP_PRESETS[name]
+        layout = M.mlp_layout(cfg)
+        batch_specs = [_f32((cfg.batch, cfg.features)), _i32((cfg.batch,))]
+        meta = dict(
+            kind=kind, features=cfg.features, classes=cfg.classes,
+            batch=cfg.batch, hidden=",".join(map(str, cfg.hidden)),
+        )
+    else:
+        raise SystemExit(f"unknown preset {name!r}")
+
+    p = M.param_count(layout)
+    meta["param_count"] = p
+    print(f"preset {name}: kind={kind} params={p:,}")
+
+    layout_path = os.path.join(out_dir, f"{name}_layout.txt")
+    if not os.path.exists(layout_path) or force:
+        rows = "\n".join(f"{n} {o} {s}" for n, o, s in M.layout_sizes(layout))
+        _write(layout_path, rows + "\n")
+    meta_path = os.path.join(out_dir, f"{name}_meta.txt")
+    if not os.path.exists(meta_path) or force:
+        _write(meta_path, "".join(f"{k}={v}\n" for k, v in sorted(meta.items())))
+
+    jobs = [
+        (f"{name}_grad.hlo.txt", M.grad_fn(kind, cfg), [_f32((p,))] + batch_specs),
+        (f"{name}_eval.hlo.txt", M.eval_fn(kind, cfg), [_f32((p,))] + batch_specs),
+        (
+            f"{name}_step.hlo.txt",
+            M.sgd_step_fn(),
+            [_f32((p,)), _f32((p,)), _f32((p,)), _f32(), _f32(), _f32()],
+        ),
+    ]
+    for fname, fn, specs in jobs:
+        path = os.path.join(out_dir, fname)
+        if os.path.exists(path) and not force:
+            print(f"  skip {path} (exists)")
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        _write(path, to_hlo_text(lowered))
+
+    export_ef_topk(out_dir, p, rounds=25, force=force)
+
+    # Initial parameter snapshot so rust and python agree on init exactly.
+    init_path = os.path.join(out_dir, f"{name}_init.f32")
+    if not os.path.exists(init_path) or force:
+        params = M.init_params(layout, seed=0)
+        import numpy as np
+
+        np.asarray(params, dtype="<f4").tofile(init_path)
+        digest = hashlib.sha256(open(init_path, "rb").read()).hexdigest()[:16]
+        print(f"  wrote {init_path} ({p} f32, sha256:{digest})")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--presets", default=",".join(DEFAULT_PRESETS),
+        help="comma-separated preset names "
+        f"(transformers: {sorted(M.TRANSFORMER_PRESETS)}, mlps: {sorted(M.MLP_PRESETS)})",
+    )
+    ap.add_argument("--force", action="store_true", help="rebuild even if present")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    for name in [s for s in args.presets.split(",") if s]:
+        export_preset(args.out_dir, name, args.force)
+    print("aot: done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (interpret=True on CPU) + pure-jnp reference oracles."""
+
+from . import ef_compress, matmul, ref, topk_threshold  # noqa: F401

@@ -1,0 +1,89 @@
+"""L1 Pallas kernel: fused error-feedback compression step (paper Eqn 2).
+
+Once a threshold tau is known (from ``topk_threshold.estimate_threshold``),
+the per-step compression work is four elementwise/reduction passes:
+
+    g_e  = g + residual
+    g_c  = g_e * [|g_e| >= tau]
+    res' = g_e - g_c
+    gain terms ||g_c||^2, ||g_e||^2        (GraVAC compression gain)
+
+Done naively that is 4+ HBM round-trips over a tensor the size of the model.
+This kernel fuses all of it into ONE pass: each block is read once from HBM
+into VMEM, produces both output blocks and two partial-sum lanes.  That is
+the roofline move for a bandwidth-bound op — see EXPERIMENTS.md §Perf for
+the measured pass-count ablation.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _ef_kernel(g_ref, r_ref, tau_ref, gc_ref, rn_ref, nc_ref, ne_ref):
+    tau = tau_ref[0]
+    g_e = g_ref[...] + r_ref[...]
+    keep = jnp.abs(g_e) >= tau
+    g_c = jnp.where(keep, g_e, jnp.zeros_like(g_e))
+    gc_ref[...] = g_c
+    rn_ref[...] = g_e - g_c
+    nc_ref[0] = jnp.sum(g_c * g_c)
+    ne_ref[0] = jnp.sum(g_e * g_e)
+
+
+def _pad_flat(x, block):
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    np_ = -(-n // block) * block
+    return jnp.pad(flat, (0, np_ - n)), n
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def ef_compress(g, residual, tau, *, block=BLOCK):
+    """Fused EF-compress. Returns (g_c, residual', ||g_c||^2, ||g_e||^2).
+
+    Shapes of ``g`` and ``residual`` must match; output tensors keep that
+    shape. ``tau`` is a scalar (may be traced).
+    """
+    shape = g.shape
+    gp, n = _pad_flat(g, block)
+    rp, _ = _pad_flat(residual, block)
+    nblocks = gp.shape[0] // block
+    tau_arr = jnp.asarray(tau, jnp.float32).reshape(1)
+    g_c, res, nc, ne = pl.pallas_call(
+        _ef_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(gp.shape, jnp.float32),
+            jax.ShapeDtypeStruct(gp.shape, jnp.float32),
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+            jax.ShapeDtypeStruct((nblocks,), jnp.float32),
+        ],
+        interpret=True,
+    )(gp, rp, tau_arr)
+    return (
+        g_c[:n].reshape(shape),
+        res[:n].reshape(shape),
+        jnp.sum(nc),
+        jnp.sum(ne),
+    )
+
+
+def vmem_bytes(block=BLOCK, dtype_bytes=4):
+    """VMEM working set per grid step: 2 in blocks + 2 out blocks + scalars."""
+    return 4 * block * dtype_bytes + 3 * dtype_bytes

@@ -1,0 +1,123 @@
+"""L1 Pallas kernel: MXU-tiled matmul, the dense-layer hot spot of the L2 model.
+
+Hardware adaptation (see DESIGN.md §7): the paper's GPU training relies on
+cuBLAS threadblock tiling through shared memory.  On TPU the analogue is a
+BlockSpec-scheduled HBM->VMEM pipeline feeding the 128x128 MXU systolic
+array.  The grid is (m/bm, n/bn, k/bk) with the contraction axis innermost so
+a single VMEM-resident output block accumulates across the k steps
+(double-buffered input blocks stream past it).
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO.  Structure (block
+shapes, accumulation order, one-pass fusion) is what we optimize; CPU
+wallclock of interpret mode is NOT a TPU proxy.
+
+Autodiff: ``pl.pallas_call`` has no VJP, so ``matmul`` carries a
+``jax.custom_vjp`` whose forward and backward passes all route through the
+same Pallas kernel (dx = dy @ w^T, dw = x^T @ dy) — the backward pass of the
+L2 model therefore exercises the kernel as well.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-shaped tiles. 128 matches the MXU systolic array edge; VMEM
+# footprint per step = (bm*bk + bk*bn + bm*bn) * 4B = 192 KiB at 128^3,
+# comfortably inside the ~16 MiB/core VMEM with room for double buffering.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One (bm, bn) output block; accumulates over the innermost k grid axis."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, b: int) -> int:
+    return -(-x // b) * b
+
+
+def _matmul_padded(x, w, bm, bn, bk):
+    """Pallas call on shapes already padded to block multiples."""
+    m, k = x.shape
+    _, n = w.shape
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_fwd_only(x, w, *, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """Tiled matmul without the custom-vjp wrapper (used by tests/bench)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    out = _matmul_padded(xp, wp, bm, bn, bk)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(x, w):
+    """Differentiable tiled-Pallas matmul: (m,k) @ (k,n) -> (m,n)."""
+    return matmul_fwd_only(x, w)
+
+
+def _mm_fwd(x, w):
+    return matmul_fwd_only(x, w), (x, w)
+
+
+def _mm_bwd(res, dy):
+    x, w = res
+    # Both grads go through the same Pallas kernel.
+    dx = matmul_fwd_only(dy, w.T)
+    dw = matmul_fwd_only(x.T, dy)
+    return dx, dw
+
+
+matmul.defvjp(_mm_fwd, _mm_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk"))
+def matmul_jit(x, w, *, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    return matmul_fwd_only(x, w, bm=bm, bn=bn, bk=bk)
+
+
+def vmem_bytes(bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K, dtype_bytes=4):
+    """Estimated VMEM working set per grid step (for DESIGN/EXPERIMENTS §Perf)."""
+    return (bm * bk + bk * bn + bm * bn) * dtype_bytes
+
+
+def mxu_utilization_estimate(m, n, k, bm=BLOCK_M, bn=BLOCK_N, bk=BLOCK_K):
+    """Fraction of MXU issue slots doing useful work, from padding overhead.
+
+    The MXU processes full 128x128 tiles; edge blocks waste the padded
+    fraction.  This is the structural estimate recorded in EXPERIMENTS §Perf
+    (interpret mode gives no hardware counters).
+    """
+    mp, np_, kp = _ceil_to(m, bm), _ceil_to(n, bn), _ceil_to(k, bk)
+    useful = m * n * k
+    issued = mp * np_ * kp
+    return useful / issued

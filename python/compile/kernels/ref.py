@@ -1,0 +1,55 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: pytest sweeps (see
+``python/tests/test_kernels.py``) assert the Pallas implementations match
+these references with ``assert_allclose`` across shapes and dtypes drawn by
+hypothesis.  Keep them boring and obviously-correct.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain dense matmul: (m, k) @ (k, n) -> (m, n) in f32 accumulation."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def count_above_ref(g: jnp.ndarray, tau) -> jnp.ndarray:
+    """Number of elements with |g| > tau (scalar f32 count)."""
+    return jnp.sum((jnp.abs(g) > tau).astype(jnp.float32))
+
+
+def threshold_topk_ref(g: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Exact magnitude threshold that keeps the top-k entries of |g|.
+
+    Returns the k-th largest magnitude; masking with ``|g| >= tau`` keeps at
+    least k entries (more under ties).
+    """
+    mags = jnp.sort(jnp.abs(g.reshape(-1)))[::-1]
+    return mags[k - 1]
+
+
+def mask_ref(g: jnp.ndarray, tau) -> jnp.ndarray:
+    """Zero every entry with |g| < tau (keep >= tau)."""
+    return jnp.where(jnp.abs(g) >= tau, g, jnp.zeros_like(g))
+
+
+def ef_compress_ref(g, residual, tau):
+    """Fused error-feedback compression step (Eqn 2 of the paper).
+
+    g_e  = g + residual            (error-fed gradient)
+    g_c  = g_e  masked at |.| >= tau
+    res' = g_e - g_c
+    Also returns the compression-gain terms ||g_c||^2 and ||g_e||^2
+    (GraVAC gain = E||g_c||^2 / E||g_e||^2).
+    """
+    g_e = g + residual
+    g_c = jnp.where(jnp.abs(g_e) >= tau, g_e, jnp.zeros_like(g_e))
+    res = g_e - g_c
+    norm_c = jnp.sum(g_c * g_c)
+    norm_e = jnp.sum(g_e * g_e)
+    return g_c, res, norm_c, norm_e
+
+
+def sq_norm_ref(g: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(g * g)

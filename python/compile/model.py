@@ -1,0 +1,306 @@
+"""L2: the jax compute graphs AOT-lowered for the rust coordinator.
+
+Two model families act as proxies for the paper's four DNNs (DESIGN.md §3):
+
+  * ``transformer`` — a decoder-only LM (configurable depth/width).  Its
+    dense projections route through the L1 Pallas matmul kernel so the
+    kernel lowers into the same HLO artifact the rust runtime executes.
+  * ``mlp`` — a small classifier over synthetic feature clusters; the fast
+    model for tests and the quickstart example.
+
+Exported graphs per preset (see ``aot.py``):
+
+  grad : (params[P], tokens/x..)              -> (loss, grads[P])
+  eval : (params[P], tokens/x..)              -> (loss, ncorrect)
+  step : (params[P], mom[P], grads[P], hyper) -> (params', mom')
+
+All parameters live in ONE flat f32 vector with a published layout
+(name/offset/size per layer) — the rust side needs layer boundaries for
+LWTopk and the flat view for fused AR-Topk, and a flat vector makes the
+PJRT ABI trivial.
+"""
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.matmul import matmul as pallas_matmul
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    vocab: int
+    dim: int
+    layers: int
+    heads: int
+    seq: int
+    batch: int  # per-worker batch size baked into the artifact
+    use_pallas: bool = True  # route MLP-block matmuls through the L1 kernel
+
+    @property
+    def mlp_hidden(self) -> int:
+        return 4 * self.dim
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    name: str
+    features: int
+    hidden: Tuple[int, ...]
+    classes: int
+    batch: int
+
+
+# ---------------------------------------------------------------------------
+# Presets. Transformer presets are sized to ladder up toward the paper's
+# model scales; cost-model experiments additionally use the paper's exact
+# parameter counts (defined rust-side) since only M matters there.
+# ---------------------------------------------------------------------------
+TRANSFORMER_PRESETS: Dict[str, TransformerConfig] = {
+    c.name: c
+    for c in [
+        TransformerConfig("tiny", vocab=256, dim=64, layers=2, heads=2, seq=32, batch=8),
+        TransformerConfig("small", vocab=512, dim=192, layers=4, heads=4, seq=64, batch=8),
+        TransformerConfig("base", vocab=2048, dim=512, layers=8, heads=8, seq=128, batch=8),
+        TransformerConfig("large", vocab=4096, dim=768, layers=12, heads=12, seq=128, batch=4),
+    ]
+}
+
+MLP_PRESETS: Dict[str, MlpConfig] = {
+    c.name: c
+    for c in [
+        MlpConfig("mlp", features=64, hidden=(256, 128), classes=16, batch=32),
+        MlpConfig("mlp-wide", features=128, hidden=(1024, 512, 256), classes=32, batch=32),
+    ]
+}
+
+
+# ---------------------------------------------------------------------------
+# Flat parameter layout
+# ---------------------------------------------------------------------------
+def transformer_layout(cfg: TransformerConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) for every parameter tensor ("layer" for LWTopk)."""
+    ly: List[Tuple[str, Tuple[int, ...]]] = [
+        ("tok_embed", (cfg.vocab, cfg.dim)),
+        ("pos_embed", (cfg.seq, cfg.dim)),
+    ]
+    for i in range(cfg.layers):
+        p = f"block{i}."
+        ly += [
+            (p + "ln1.g", (cfg.dim,)),
+            (p + "ln1.b", (cfg.dim,)),
+            (p + "attn.qkv", (cfg.dim, 3 * cfg.dim)),
+            (p + "attn.out", (cfg.dim, cfg.dim)),
+            (p + "ln2.g", (cfg.dim,)),
+            (p + "ln2.b", (cfg.dim,)),
+            (p + "mlp.fc", (cfg.dim, cfg.mlp_hidden)),
+            (p + "mlp.proj", (cfg.mlp_hidden, cfg.dim)),
+        ]
+    ly += [
+        ("lnf.g", (cfg.dim,)),
+        ("lnf.b", (cfg.dim,)),
+        ("head", (cfg.dim, cfg.vocab)),
+    ]
+    return ly
+
+
+def mlp_layout(cfg: MlpConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    dims = (cfg.features,) + cfg.hidden + (cfg.classes,)
+    ly: List[Tuple[str, Tuple[int, ...]]] = []
+    for i in range(len(dims) - 1):
+        ly.append((f"fc{i}.w", (dims[i], dims[i + 1])))
+        ly.append((f"fc{i}.b", (dims[i + 1],)))
+    return ly
+
+
+def layout_sizes(layout) -> List[Tuple[str, int, int]]:
+    """(name, offset, size) rows; also what ``aot.py`` writes to *_layout.txt."""
+    rows, off = [], 0
+    for name, shape in layout:
+        size = 1
+        for s in shape:
+            size *= s
+        rows.append((name, off, size))
+        off += size
+    return rows
+
+
+def param_count(layout) -> int:
+    rows = layout_sizes(layout)
+    return rows[-1][1] + rows[-1][2] if rows else 0
+
+
+def unflatten(flat: jnp.ndarray, layout) -> Dict[str, jnp.ndarray]:
+    out, off = {}, 0
+    for name, shape in layout:
+        size = 1
+        for s in shape:
+            size *= s
+        out[name] = jax.lax.dynamic_slice_in_dim(flat, off, size).reshape(shape)
+        off += size
+    return out
+
+
+def init_params(layout, seed: int = 0) -> jnp.ndarray:
+    """Scaled-normal init, returned as the flat vector the artifacts consume."""
+    key = jax.random.PRNGKey(seed)
+    chunks = []
+    for name, shape in layout:
+        key, sub = jax.random.split(key)
+        fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+        if name.endswith((".b", "ln1.g", "ln2.g", "lnf.g")):
+            base = jnp.ones(shape) if name.endswith(".g") else jnp.zeros(shape)
+            chunks.append(base.reshape(-1).astype(jnp.float32))
+        else:
+            std = (2.0 / fan_in) ** 0.5 * (0.02 ** 0.0)
+            std = min(std, 0.08) if len(shape) > 1 else 0.02
+            chunks.append(
+                (jax.random.normal(sub, shape) * std).reshape(-1).astype(jnp.float32)
+            )
+    return jnp.concatenate(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward
+# ---------------------------------------------------------------------------
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _dense(x2d, w, use_pallas: bool):
+    """(rows, k) @ (k, n); the Pallas kernel is the MLP-block hot path."""
+    if use_pallas:
+        return pallas_matmul(x2d, w)
+    return jnp.matmul(x2d, w, preferred_element_type=jnp.float32)
+
+
+def transformer_logits(cfg: TransformerConfig, params: Dict[str, jnp.ndarray], tokens):
+    """tokens [B, T] int32 -> logits [B, T, V]."""
+    b, t = tokens.shape
+    d = cfg.dim
+    x = params["tok_embed"][tokens] + params["pos_embed"][None, :t, :]
+    causal = jnp.tril(jnp.ones((t, t), jnp.float32))
+    neg = jnp.float32(-1e9)
+    for i in range(cfg.layers):
+        p = f"block{i}."
+        h = _layer_norm(x, params[p + "ln1.g"], params[p + "ln1.b"])
+        qkv = jnp.matmul(h.reshape(b * t, d), params[p + "attn.qkv"]).reshape(
+            b, t, 3, cfg.heads, d // cfg.heads
+        )
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        att = jnp.einsum("bthd,bshd->bhts", q, k) / jnp.sqrt(d / cfg.heads)
+        att = jnp.where(causal[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhts,bshd->bthd", att, v).reshape(b, t, d)
+        x = x + jnp.matmul(o.reshape(b * t, d), params[p + "attn.out"]).reshape(b, t, d)
+        h = _layer_norm(x, params[p + "ln2.g"], params[p + "ln2.b"])
+        # MLP block: the FLOP hot spot — routed through the L1 Pallas kernel.
+        hh = _dense(h.reshape(b * t, d), params[p + "mlp.fc"], cfg.use_pallas)
+        hh = jax.nn.gelu(hh)
+        hh = _dense(hh, params[p + "mlp.proj"], cfg.use_pallas)
+        x = x + hh.reshape(b, t, d)
+    x = _layer_norm(x, params["lnf.g"], params["lnf.b"])
+    logits = jnp.matmul(x.reshape(b * t, d), params["head"]).reshape(b, t, cfg.vocab)
+    return logits
+
+
+def transformer_loss(cfg: TransformerConfig, flat_params, tokens):
+    """tokens [B, T+1]: positions 0..T-1 are inputs, 1..T targets."""
+    layout = transformer_layout(cfg)
+    params = unflatten(flat_params, layout)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = transformer_logits(cfg, params, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+def transformer_eval(cfg: TransformerConfig, flat_params, tokens):
+    layout = transformer_layout(cfg)
+    params = unflatten(flat_params, layout)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = transformer_logits(cfg, params, inp)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == tgt).astype(jnp.float32))
+    return jnp.mean(nll), correct
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier forward
+# ---------------------------------------------------------------------------
+def mlp_logits(cfg: MlpConfig, params, x):
+    h = x
+    n = len(cfg.hidden) + 1
+    for i in range(n):
+        h = jnp.matmul(h, params[f"fc{i}.w"]) + params[f"fc{i}.b"]
+        if i < n - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def mlp_loss(cfg: MlpConfig, flat_params, x, y):
+    params = unflatten(flat_params, mlp_layout(cfg))
+    logits = mlp_logits(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    return jnp.mean(nll)
+
+
+def mlp_eval(cfg: MlpConfig, flat_params, x, y):
+    params = unflatten(flat_params, mlp_layout(cfg))
+    logits = mlp_logits(cfg, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return jnp.mean(nll), correct
+
+
+# ---------------------------------------------------------------------------
+# Graphs exported by aot.py
+# ---------------------------------------------------------------------------
+def grad_fn(kind: str, cfg):
+    """(flat_params, batch...) -> (loss, flat_grads)."""
+    if kind == "transformer":
+
+        def f(flat_params, tokens):
+            loss, grads = jax.value_and_grad(
+                lambda p: transformer_loss(cfg, p, tokens)
+            )(flat_params)
+            return loss, grads
+
+        return f
+    if kind == "mlp":
+
+        def f(flat_params, x, y):
+            loss, grads = jax.value_and_grad(lambda p: mlp_loss(cfg, p, x, y))(
+                flat_params
+            )
+            return loss, grads
+
+        return f
+    raise ValueError(kind)
+
+
+def eval_fn(kind: str, cfg):
+    if kind == "transformer":
+        return lambda p, tokens: transformer_eval(cfg, p, tokens)
+    if kind == "mlp":
+        return lambda p, x, y: mlp_eval(cfg, p, x, y)
+    raise ValueError(kind)
+
+
+def sgd_step_fn():
+    """Momentum-SGD update: (params, mom, grads, lr, momentum, wd) -> (params', mom')."""
+
+    def f(params, mom, grads, lr, momentum, weight_decay):
+        g = grads + weight_decay * params
+        mom_new = momentum * mom + g
+        return params - lr * mom_new, mom_new
+
+    return f

@@ -1,0 +1,216 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes/dtypes/block sizes; every property asserts
+``assert_allclose`` against the reference.  This is the CORE correctness
+signal for the compute layer — the same kernels lower into the HLO the rust
+runtime executes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ef_compress as efc
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+from compile.kernels import topk_threshold as tkt
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _arr(rng, shape, dtype=np.float32, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, bm, bn, bk, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, (m, k)), _arr(rng, (k, n))
+    got = mm.matmul_fwd_only(jnp.array(x), jnp.array(w), bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.matmul_ref(x, w)), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(2, 48),
+    k=st.integers(2, 48),
+    n=st.integers(2, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_vjp_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = jnp.array(_arr(rng, (m, k))), jnp.array(_arr(rng, (k, n)))
+    gx, gw = jax.grad(lambda a, b: jnp.sum(mm.matmul(a, b) ** 2), (0, 1))(x, w)
+    rx, rw = jax.grad(lambda a, b: jnp.sum(ref.matmul_ref(a, b) ** 2), (0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_bf16_inputs_accumulate_f32():
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((33, 47)).astype(jnp.bfloat16)
+    w = rng.standard_normal((47, 29)).astype(jnp.bfloat16)
+    got = mm.matmul_fwd_only(jnp.array(x), jnp.array(w), bm=16, bn=16, bk=16)
+    assert got.dtype == jnp.float32
+    want = ref.matmul_ref(
+        jnp.array(x, jnp.float32), jnp.array(w, jnp.float32)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=3e-2, atol=3e-2)
+
+
+def test_mxu_utilization_estimate_bounds():
+    assert mm.mxu_utilization_estimate(128, 128, 128) == 1.0
+    u = mm.mxu_utilization_estimate(129, 128, 128)
+    assert 0.0 < u < 1.0
+    assert mm.vmem_bytes() == (128 * 128 * 3) * 4
+
+
+# ---------------------------------------------------------------------------
+# count / absmax / threshold / mask
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 20000),
+    tau=st.floats(0.0, 3.0),
+    block=st.sampled_from([256, 1024, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_count_above_matches_ref(n, tau, block, seed):
+    rng = np.random.default_rng(seed)
+    g = _arr(rng, (n,))
+    got = tkt.count_above(jnp.array(g), tau, block=block)
+    np.testing.assert_allclose(float(got), float(ref.count_above_ref(g, tau)))
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(1, 20000), seed=st.integers(0, 2**31 - 1))
+def test_abs_max_matches_ref(n, seed):
+    rng = np.random.default_rng(seed)
+    g = _arr(rng, (n,))
+    got = tkt.abs_max(jnp.array(g), block=1024)
+    np.testing.assert_allclose(float(got), float(np.max(np.abs(g))), rtol=1e-6)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(64, 20000),
+    frac=st.floats(0.005, 0.5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mstopk_keeps_about_k(n, frac, seed):
+    rng = np.random.default_rng(seed)
+    g = _arr(rng, (n,))
+    k = max(1, int(n * frac))
+    masked, tau = tkt.mstopk(jnp.array(g), float(k), rounds=25, block=1024)
+    kept = int(np.sum(np.asarray(masked) != 0.0))
+    # Continuous values: 25 bisection rounds pin the count to within ~2%+1.
+    assert abs(kept - k) <= max(2, int(0.02 * k) + 1), (kept, k)
+    # Every kept entry must dominate every dropped entry in magnitude.
+    mags = np.abs(g)
+    kept_mask = np.asarray(masked) != 0.0
+    if kept and kept < n:
+        assert mags[kept_mask].min() >= mags[~kept_mask].max() - 1e-6
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 8192),
+    tau=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mask_matches_ref(n, tau, seed):
+    rng = np.random.default_rng(seed)
+    g = _arr(rng, (n,))
+    got = tkt.mask(jnp.array(g), tau, block=1024)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.mask_ref(g, tau)))
+
+
+def test_mask_preserves_2d_shape():
+    rng = np.random.default_rng(1)
+    g = _arr(rng, (37, 53))
+    got = tkt.mask(jnp.array(g), 0.7, block=256)
+    assert got.shape == g.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.mask_ref(g, 0.7)))
+
+
+# ---------------------------------------------------------------------------
+# fused EF-compress
+# ---------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 20000),
+    tau=st.floats(0.0, 2.0),
+    rscale=st.floats(0.0, 1.0),
+    block=st.sampled_from([256, 4096]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ef_compress_matches_ref(n, tau, rscale, block, seed):
+    rng = np.random.default_rng(seed)
+    g, r = _arr(rng, (n,)), _arr(rng, (n,), scale=rscale)
+    gc, res, nc, ne = efc.ef_compress(jnp.array(g), jnp.array(r), tau, block=block)
+    rgc, rres, rnc, rne = ref.ef_compress_ref(g, r, tau)
+    np.testing.assert_allclose(np.asarray(gc), np.asarray(rgc), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(res), np.asarray(rres), rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(nc), float(rnc), rtol=1e-4)
+    np.testing.assert_allclose(float(ne), float(rne), rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(n=st.integers(2, 8192), seed=st.integers(0, 2**31 - 1))
+def test_ef_compress_invariants(n, seed):
+    """Structural invariants: g_c + res == g_e, supports disjoint, gain <= 1."""
+    rng = np.random.default_rng(seed)
+    g, r = _arr(rng, (n,)), _arr(rng, (n,), scale=0.3)
+    tau = float(np.median(np.abs(g + r)))
+    gc, res, nc, ne = efc.ef_compress(jnp.array(g), jnp.array(r), tau, block=1024)
+    gc, res = np.asarray(gc), np.asarray(res)
+    np.testing.assert_allclose(gc + res, g + r, rtol=1e-6, atol=1e-7)
+    assert np.all((gc == 0.0) | (res == 0.0))
+    assert float(nc) <= float(ne) * (1 + 1e-5)
+
+
+def test_ef_compress_tau_zero_is_identity():
+    rng = np.random.default_rng(3)
+    g, r = _arr(rng, (1000,)), _arr(rng, (1000,))
+    gc, res, nc, ne = efc.ef_compress(jnp.array(g), jnp.array(r), 0.0, block=256)
+    np.testing.assert_allclose(np.asarray(gc), g + r, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(res), np.zeros_like(g), atol=1e-7)
+    np.testing.assert_allclose(float(nc), float(ne), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: estimate tau then fused compress == exact top-k semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cr", [0.1, 0.01, 0.004])
+def test_threshold_plus_ef_matches_exact_topk(cr):
+    rng = np.random.default_rng(7)
+    n = 50000
+    g = rng.standard_normal(n).astype(np.float32)
+    r = np.zeros(n, np.float32)
+    k = int(n * cr)
+    tau = tkt.estimate_threshold(jnp.array(g), float(k), rounds=25, block=4096)
+    gc, _, nc, ne = efc.ef_compress(jnp.array(g), jnp.array(r), tau, block=4096)
+    kept = int(np.sum(np.asarray(gc) != 0))
+    assert abs(kept - k) <= max(2, int(0.02 * k) + 1)
+    gain = float(nc) / float(ne)
+    exact_tau = float(ref.threshold_topk_ref(jnp.array(g), k))
+    exact_gain = float(np.sum(g[np.abs(g) >= exact_tau] ** 2) / np.sum(g**2))
+    np.testing.assert_allclose(gain, exact_gain, rtol=0.05)

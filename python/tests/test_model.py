@@ -1,0 +1,177 @@
+"""L2 model correctness: layouts, shapes, loss/grad sanity, SGD step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+TINY = M.TRANSFORMER_PRESETS["tiny"]
+MLP = M.MLP_PRESETS["mlp"]
+
+
+def _tokens(rng, cfg, batch=None):
+    b = batch or cfg.batch
+    return rng.integers(0, cfg.vocab, size=(b, cfg.seq + 1)).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# layout
+# ---------------------------------------------------------------------------
+def test_layout_offsets_are_contiguous():
+    for layout in (M.transformer_layout(TINY), M.mlp_layout(MLP)):
+        rows = M.layout_sizes(layout)
+        off = 0
+        for _, o, s in rows:
+            assert o == off
+            assert s > 0
+            off += s
+        assert off == M.param_count(layout)
+
+
+def test_transformer_layout_param_count_formula():
+    cfg = TINY
+    d, v, t = cfg.dim, cfg.vocab, cfg.seq
+    per_block = 4 * d + 3 * d * d + d * d + 8 * d * d  # ln + qkv + out + mlp
+    want = v * d + t * d + cfg.layers * per_block + 2 * d + d * v
+    assert M.param_count(M.transformer_layout(cfg)) == want
+
+
+def test_unflatten_roundtrip():
+    layout = M.mlp_layout(MLP)
+    p = M.init_params(layout, seed=1)
+    tree = M.unflatten(p, layout)
+    rebuilt = jnp.concatenate([tree[n].reshape(-1) for n, _ in layout])
+    np.testing.assert_array_equal(np.asarray(rebuilt), np.asarray(p))
+
+
+def test_init_params_deterministic():
+    layout = M.transformer_layout(TINY)
+    a = M.init_params(layout, seed=0)
+    b = M.init_params(layout, seed=0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = M.init_params(layout, seed=1)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+# ---------------------------------------------------------------------------
+# transformer forward/backward
+# ---------------------------------------------------------------------------
+def test_transformer_loss_near_uniform_at_init():
+    rng = np.random.default_rng(0)
+    layout = M.transformer_layout(TINY)
+    p = M.init_params(layout, seed=0)
+    loss = M.transformer_loss(TINY, p, jnp.array(_tokens(rng, TINY)))
+    # Random init ~ uniform over vocab -> loss ~ ln(V).
+    assert abs(float(loss) - np.log(TINY.vocab)) < 1.5
+
+
+def test_transformer_grad_shapes_and_nonzero():
+    rng = np.random.default_rng(1)
+    layout = M.transformer_layout(TINY)
+    p = M.init_params(layout, seed=0)
+    f = M.grad_fn("transformer", TINY)
+    loss, grads = f(p, jnp.array(_tokens(rng, TINY)))
+    assert grads.shape == p.shape
+    assert np.isfinite(float(loss))
+    assert float(jnp.sum(jnp.abs(grads))) > 0
+
+
+def test_transformer_causality():
+    """Changing a future token must not change logits at earlier positions."""
+    rng = np.random.default_rng(2)
+    layout = M.transformer_layout(TINY)
+    p = M.unflatten(M.init_params(layout, seed=0), layout)
+    toks = _tokens(rng, TINY, batch=1)[:, :-1]
+    la = M.transformer_logits(TINY, p, jnp.array(toks))
+    toks2 = toks.copy()
+    toks2[0, -1] = (toks2[0, -1] + 1) % TINY.vocab
+    lb = M.transformer_logits(TINY, p, jnp.array(toks2))
+    np.testing.assert_allclose(
+        np.asarray(la[0, :-1]), np.asarray(lb[0, :-1]), rtol=1e-5, atol=1e-5
+    )
+    assert not np.allclose(np.asarray(la[0, -1]), np.asarray(lb[0, -1]))
+
+
+def test_transformer_eval_counts_bounded():
+    rng = np.random.default_rng(3)
+    p = M.init_params(M.transformer_layout(TINY), seed=0)
+    loss, correct = M.eval_fn("transformer", TINY)(p, jnp.array(_tokens(rng, TINY)))
+    total = TINY.batch * TINY.seq
+    assert 0.0 <= float(correct) <= total
+
+
+def test_transformer_learns_constant_sequence():
+    """A few SGD steps on a repeated token must drive the loss down hard."""
+    cfg = TINY
+    p = M.init_params(M.transformer_layout(cfg), seed=0)
+    toks = jnp.full((cfg.batch, cfg.seq + 1), 7, jnp.int32)
+    f = jax.jit(M.grad_fn("transformer", cfg))
+    first = None
+    for _ in range(12):
+        loss, g = f(p, toks)
+        first = first if first is not None else float(loss)
+        p = p - 0.5 * g
+    assert float(loss) < first * 0.2, (first, float(loss))
+
+
+# ---------------------------------------------------------------------------
+# mlp
+# ---------------------------------------------------------------------------
+def _cluster_batch(rng, cfg):
+    y = rng.integers(0, cfg.classes, size=cfg.batch).astype(np.int32)
+    centers = rng.standard_normal((cfg.classes, cfg.features)).astype(np.float32) * 2
+    x = centers[y] + rng.standard_normal((cfg.batch, cfg.features)).astype(np.float32) * 0.3
+    return x, y
+
+
+def test_mlp_grad_and_learning():
+    rng = np.random.default_rng(0)
+    p = M.init_params(M.mlp_layout(MLP), seed=0)
+    x, y = _cluster_batch(rng, MLP)
+    f = jax.jit(M.grad_fn("mlp", MLP))
+    losses = []
+    for _ in range(60):
+        loss, g = f(p, jnp.array(x), jnp.array(y))
+        losses.append(float(loss))
+        p = p - 0.2 * g
+    assert losses[-1] < losses[0] * 0.3
+
+
+def test_mlp_eval_perfect_after_overfit():
+    rng = np.random.default_rng(1)
+    p = M.init_params(M.mlp_layout(MLP), seed=0)
+    x, y = _cluster_batch(rng, MLP)
+    f = jax.jit(M.grad_fn("mlp", MLP))
+    for _ in range(150):
+        _, g = f(p, jnp.array(x), jnp.array(y))
+        p = p - 0.2 * g
+    _, correct = M.eval_fn("mlp", MLP)(p, jnp.array(x), jnp.array(y))
+    assert float(correct) >= 0.9 * MLP.batch
+
+
+# ---------------------------------------------------------------------------
+# sgd step graph
+# ---------------------------------------------------------------------------
+def test_sgd_step_matches_manual():
+    rng = np.random.default_rng(5)
+    p = rng.standard_normal(100).astype(np.float32)
+    m = rng.standard_normal(100).astype(np.float32)
+    g = rng.standard_normal(100).astype(np.float32)
+    lr, mom, wd = 0.1, 0.9, 0.0005
+    f = M.sgd_step_fn()
+    p2, m2 = f(jnp.array(p), jnp.array(m), jnp.array(g), lr, mom, wd)
+    gm = g + wd * p
+    want_m = mom * m + gm
+    want_p = p - lr * want_m
+    np.testing.assert_allclose(np.asarray(m2), want_m, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(p2), want_p, rtol=1e-5)
+
+
+@pytest.mark.parametrize("preset", ["tiny", "small"])
+def test_presets_resolve(preset):
+    cfg = M.TRANSFORMER_PRESETS[preset]
+    assert M.param_count(M.transformer_layout(cfg)) > 0

@@ -1,0 +1,103 @@
+"""L1 perf-structure checks (EXPERIMENTS.md §Perf): VMEM budgets, MXU
+utilization estimates, and the one-pass fusion of ef_compress — the
+structural properties we optimize for TPU (interpret-mode wallclock is not
+a TPU proxy; structure is)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.kernels import ef_compress as efc
+from compile.kernels import matmul as mm
+from compile.kernels import topk_threshold as tkt
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_matmul_vmem_budget_under_double_buffering():
+    # 3 f32 tiles of 128^2 = 192 KiB; 2x for double buffering still < 1 MiB,
+    # i.e. ~6% of a 16 MiB VMEM — the budget DESIGN.md §7 records.
+    assert mm.vmem_bytes() == 3 * 128 * 128 * 4
+    assert 2 * mm.vmem_bytes() < 1 << 20
+
+
+def test_mxu_utilization_of_shipped_presets():
+    # Every transformer preset's hot matmuls (b*t x d) @ (d x 4d): estimate
+    # utilization and require the big presets to be exactly MXU-aligned.
+    for name, cfg in M.TRANSFORMER_PRESETS.items():
+        rows = cfg.batch * cfg.seq
+        u = mm.mxu_utilization_estimate(rows, cfg.mlp_hidden, cfg.dim)
+        assert 0.0 < u <= 1.0
+        if name in ("base", "large"):
+            assert u == 1.0, f"{name}: dims must be multiples of 128, got {u}"
+
+
+def test_ef_compress_vmem_budget():
+    # 4 streams x 4096 f32 = 64 KiB per grid step.
+    assert efc.vmem_bytes() == 4 * 4096 * 4 + 12
+    assert efc.vmem_bytes() < 1 << 17
+
+
+def _count(text: str, needle: str) -> int:
+    return text.count(needle)
+
+
+def test_ef_compress_is_single_fused_pass():
+    """The fused kernel must lower to ONE pallas region over the tensor —
+    the 4-pass naive chain would show four. We count the kernel-body marker
+    in the jaxpr (each pallas_call appears once per lowered call site)."""
+    g = jax.ShapeDtypeStruct((8192,), jnp.float32)
+    tau = jax.ShapeDtypeStruct((), jnp.float32)
+    jaxpr = jax.make_jaxpr(lambda a, b, t: efc.ef_compress(a, b, t))(g, g, tau)
+    n_pallas = _count(str(jaxpr), "pallas_call")
+    assert n_pallas == 1, f"expected 1 fused pallas_call, found {n_pallas}"
+
+
+def test_threshold_estimation_pass_count_matches_rounds():
+    """estimate_threshold runs exactly `rounds` counting passes (plus one
+    absmax) — the Fig 2 cost profile. The count kernel sits inside a
+    fori_loop, so the jaxpr shows absmax + the loop-body count call."""
+    g = jax.ShapeDtypeStruct((8192,), jnp.float32)
+    k = jax.ShapeDtypeStruct((), jnp.float32)
+    jaxpr = str(jax.make_jaxpr(lambda a, kk: tkt.estimate_threshold(a, kk, rounds=25))(g, k))
+    # One absmax pallas_call + one count pallas_call inside the while body.
+    assert _count(jaxpr, "pallas_call") == 2, jaxpr.count("pallas_call")
+    assert "while" in jaxpr or "scan" in jaxpr
+
+
+def test_fused_ef_matches_two_pass_composition():
+    """Numerics of the fused one-pass kernel == mask + manual residual
+    (the pre-fusion implementation) — the optimization changed pass count,
+    not results."""
+    rng = np.random.default_rng(0)
+    g = rng.standard_normal(5000).astype(np.float32)
+    r = (rng.standard_normal(5000) * 0.2).astype(np.float32)
+    tau = 0.8
+    gc1, res1, nc1, ne1 = efc.ef_compress(jnp.array(g), jnp.array(r), tau, block=1024)
+    g_e = g + r
+    gc2 = np.asarray(tkt.mask(jnp.array(g_e), tau, block=1024))
+    res2 = g_e - gc2
+    np.testing.assert_allclose(np.asarray(gc1), gc2, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(np.asarray(res1), res2, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(float(nc1), float(np.sum(gc2**2)), rtol=1e-4)
+    np.testing.assert_allclose(float(ne1), float(np.sum(g_e**2)), rtol=1e-4)
+
+
+def test_grad_artifact_single_forward_trace():
+    """value_and_grad must not re-trace the forward inside the backward:
+    the tiny preset's jaxpr contains each Pallas matmul call site a bounded
+    number of times (fwd + the two VJP matmuls), not doubled by remat."""
+    cfg = M.TRANSFORMER_PRESETS["tiny"]
+    p = M.param_count(M.transformer_layout(cfg))
+    f = M.grad_fn("transformer", cfg)
+    jaxpr = str(
+        jax.make_jaxpr(f)(
+            jax.ShapeDtypeStruct((p,), jnp.float32),
+            jax.ShapeDtypeStruct((cfg.batch, cfg.seq + 1), jnp.int32),
+        )
+    )
+    n = _count(jaxpr, "pallas_call")
+    # 2 MLP matmuls/layer x 2 layers = 4 fwd sites, each with dx+dw in the
+    # bwd = 12 total. Anything >> that indicates recomputation.
+    assert n <= 14, f"pallas_call sites {n} — forward likely recomputed"

@@ -1,0 +1,84 @@
+//! Perf-pass micro-benches for the L3 hot paths (EXPERIMENTS.md §Perf):
+//! Top-k selection (heap vs quickselect), MSTopk threshold rounds, ring
+//! allreduce arithmetic, sparse allgather scatter, EF bookkeeping, and a
+//! full trainer step on the proxy model.
+//!
+//!     cargo bench --bench hotpath
+
+use flexcomm::artopk::{ArFlavor, ArTopk, SelectionPolicy};
+use flexcomm::collectives::ring_allreduce;
+use flexcomm::compress::topk::{topk_indices, topk_indices_select};
+use flexcomm::compress::{Compressor, EfState, MsTopk};
+use flexcomm::netsim::cost_model::LinkParams;
+use flexcomm::tensor::Layout;
+use flexcomm::util::bench::Bencher;
+use flexcomm::util::rng::Rng;
+
+fn main() {
+    let fast = std::env::var("FLEXCOMM_BENCH_FAST").is_ok();
+    let dim: usize = if fast { 200_000 } else { 4_000_000 };
+    let mut rng = Rng::new(0);
+    let mut g = vec![0.0f32; dim];
+    rng.fill_normal(&mut g, 1.0);
+    let k = dim / 100;
+    let mut b = Bencher::from_env();
+
+    // Top-k selection: the paper's max-heap vs quickselect.
+    b.bench(&format!("topk heap        G={dim} k={k}"), || {
+        Bencher::black_box(topk_indices(&g, k));
+    });
+    b.bench(&format!("topk quickselect G={dim} k={k}"), || {
+        Bencher::black_box(topk_indices_select(&g, k));
+    });
+
+    // MSTopk threshold rounds.
+    for rounds in [10u32, 25] {
+        let mut ms = MsTopk::new(rounds);
+        b.bench(&format!("mstopk rounds={rounds} G={dim}"), || {
+            Bencher::black_box(ms.compress(&g, 0.01, &Layout::single(dim)));
+        });
+    }
+
+    // Ring allreduce arithmetic (data path, 8 workers).
+    let n = 8;
+    let bufs: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut v = vec![0.0; dim / 4];
+            Rng::new(i as u64).fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let link = LinkParams::from_ms_gbps(1.0, 10.0);
+    b.bench(&format!("ring_allreduce data n={n} m={}", dim / 4), || {
+        let mut bb = bufs.clone();
+        Bencher::black_box(ring_allreduce(&mut bb, link));
+    });
+
+    // Full AR-Topk exchange (compress + residuals + reduce).
+    let grads: Vec<Vec<f32>> = (0..n)
+        .map(|i| {
+            let mut v = vec![0.0; dim / 4];
+            Rng::new(100 + i as u64).fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let mut art = ArTopk::new(SelectionPolicy::Star, ArFlavor::Ring);
+    b.bench(&format!("artopk exchange n={n} G={} cr=0.01", dim / 4), || {
+        let mut ef: Vec<EfState> = (0..n).map(|_| EfState::new(dim / 4)).collect();
+        Bencher::black_box(art.exchange(&grads, &mut ef, 0.01, 0, link));
+    });
+
+    // EF bookkeeping alone.
+    let mut ef = EfState::new(dim);
+    let sparse = flexcomm::compress::SparseGrad {
+        indices: (0..k as u32).collect(),
+        values: vec![1.0; k],
+        dense_len: dim,
+    };
+    b.bench(&format!("error-feedback update G={dim}"), || {
+        let ge = ef.error_fed(&g);
+        ef.update(Bencher::black_box(ge), &sparse);
+    });
+
+    println!("\n{} measurements recorded (see EXPERIMENTS.md §Perf).", b.results.len());
+}

@@ -1,0 +1,354 @@
+//! AR-Topk compression + communication (paper §3, Algorithm 1) — the core
+//! contribution: an Allreduce-compatible Top-k.
+//!
+//! Per step, on each worker `r` with error-fed gradient `G_(i,r)`:
+//! 1. local Top-k -> `(g_(i,r), ix_(i,r))`
+//! 2. select ONE broadcasting worker `r̃`:
+//!    * STAR-Topk: round-robin `r̃ = i % N` (staleness-based)
+//!    * VAR-Topk : allgather each worker's `‖g_c‖²`, pick the max
+//!      (variance-based; costs one extra 4N-byte AG — Alg 1 lines 10-13)
+//! 3. Broadcast `ix_(i,r̃)` from `r̃` (cost: Mc index bytes)
+//! 4. every worker gathers ITS OWN values at those indices, updates its
+//!    residual against them (lines 15-16)
+//! 5. AllReduce (ring or tree) the k values (cost: Mc value bytes)
+//!
+//! Total cost = Eqn 4a (ring) / 4b (tree); the flexible strategy picks
+//! ring/tree/AG per Eqn 5 ([`crate::coordinator::selector`]).
+
+use crate::collectives::{broadcast, ring_allreduce, tree_allreduce, CommReport};
+use crate::compress::{k_for, EfState, SparseGrad};
+use crate::compress::topk::TopK;
+use crate::netsim::cost_model::LinkParams;
+
+/// Worker-selection policy (§3-B).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionPolicy {
+    /// Staleness-based round-robin (STAR-Topk).
+    Star,
+    /// Gradient-variance based (VAR-Topk).
+    Var,
+}
+
+impl SelectionPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SelectionPolicy::Star => "STAR-Topk",
+            SelectionPolicy::Var => "VAR-Topk",
+        }
+    }
+}
+
+/// Which allreduce flavour reduces the values.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArFlavor {
+    Ring,
+    Tree,
+}
+
+/// Outcome of one AR-Topk exchange.
+#[derive(Debug)]
+pub struct ArTopkResult {
+    /// The aggregated (SUMMED, not yet averaged) sparse update, identical
+    /// on every worker.
+    pub update: SparseGrad,
+    /// Rank that broadcast its indices this step (Fig 4 density data).
+    pub selected: usize,
+    /// Simulated communication time (selection AG + broadcast + AR).
+    pub comm: CommReport,
+    /// Gain statistics per worker: (‖g_c‖² at broadcast indices, ‖g_e‖²).
+    pub gain_terms: Vec<(f64, f64)>,
+    /// Wall-clock compression cost on the CRITICAL PATH: workers compress
+    /// concurrently in a real cluster, so this is the max of the
+    /// per-worker selection/gather times, not their sum (perf pass,
+    /// EXPERIMENTS.md §Perf).
+    pub comp_wall_s: f64,
+}
+
+/// AR-Topk operator. Holds the Top-k selector; residuals stay in the
+/// caller's [`EfState`]s (one per worker) so compressors are swappable.
+#[derive(Debug, Clone)]
+pub struct ArTopk {
+    pub policy: SelectionPolicy,
+    pub flavor: ArFlavor,
+    topk: TopK,
+}
+
+impl ArTopk {
+    pub fn new(policy: SelectionPolicy, flavor: ArFlavor) -> Self {
+        ArTopk { policy, flavor, topk: TopK::with_quickselect() }
+    }
+
+    /// Use the paper's max-heap Top-k instead of quickselect.
+    pub fn with_heap_topk(mut self) -> Self {
+        self.topk = TopK::new();
+        self
+    }
+
+    /// Execute one AR-Topk round (Alg 1 lines 5-17).
+    ///
+    /// `grads[r]` is worker r's RAW gradient for this step; `ef[r]` its
+    /// error-feedback state (updated in place). `step` drives round-robin
+    /// selection. Returns the summed sparse update (caller averages by N).
+    pub fn exchange(
+        &mut self,
+        grads: &[Vec<f32>],
+        ef: &mut [EfState],
+        cr: f64,
+        step: u64,
+        link: LinkParams,
+    ) -> ArTopkResult {
+        let n = grads.len();
+        assert!(n >= 1);
+        assert_eq!(ef.len(), n);
+        let dim = grads[0].len();
+        let k = k_for(cr, dim);
+        let mut comm = CommReport::default();
+
+        // Line 5: error-fed gradients (per worker, concurrent in reality).
+        let mut comp_wall_s: f64 = 0.0;
+        let g_e: Vec<Vec<f32>> = (0..n)
+            .map(|r| {
+                let t0 = std::time::Instant::now();
+                let v = ef[r].error_fed(&grads[r]);
+                comp_wall_s = comp_wall_s.max(t0.elapsed().as_secs_f64());
+                v
+            })
+            .collect();
+
+        // Lines 6-13: local top-k + worker selection.
+        //
+        // Perf note (EXPERIMENTS.md §Perf): STAR selection is known up
+        // front (i % N), and only the selected worker's indices are ever
+        // used — so ONLY that worker runs Top-k. VAR needs every worker's
+        // ||g_c||² and therefore every worker's local top-k; those run
+        // concurrently on a real cluster, so the wall charge is the MAX
+        // per-worker time, not the sum.
+        let (selected, sel_idx) = match self.policy {
+            SelectionPolicy::Star => {
+                let selected = (step % n as u64) as usize;
+                let t0 = std::time::Instant::now();
+                let idx = self.topk.select(&g_e[selected], k);
+                comp_wall_s += t0.elapsed().as_secs_f64();
+                (selected, idx)
+            }
+            SelectionPolicy::Var => {
+                let mut per_worker_max = 0.0f64;
+                let mut local_idx: Vec<Vec<u32>> = Vec::with_capacity(n);
+                let mut vars: Vec<f64> = Vec::with_capacity(n);
+                for r in 0..n {
+                    let t0 = std::time::Instant::now();
+                    let idx = self.topk.select(&g_e[r], k);
+                    let var: f64 = idx
+                        .iter()
+                        .map(|&i| (g_e[r][i as usize] as f64).powi(2))
+                        .sum();
+                    per_worker_max = per_worker_max.max(t0.elapsed().as_secs_f64());
+                    vars.push(var);
+                    local_idx.push(idx);
+                }
+                comp_wall_s += per_worker_max;
+                // Sync variances via AG of one f32 per worker (4N bytes,
+                // negligible but still charged).
+                let parts: Vec<Vec<f32>> = vars.iter().map(|&v| vec![v as f32]).collect();
+                let (_, rep) = crate::collectives::allgather_concat(&parts, link);
+                comm.merge(rep);
+                let selected = vars
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                (selected, local_idx.swap_remove(selected))
+            }
+        };
+
+        // Line 14: broadcast the selected worker's indices.
+        let (bcast_idx, rep) = broadcast(&sel_idx, selected, n, link);
+        comm.merge(rep);
+
+        // Lines 15-16: every worker gathers its own values at those indices
+        // and updates its residual against exactly what it sent
+        // (concurrent per worker -> max wall charge).
+        let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut gain_terms = Vec::with_capacity(n);
+        let mut gather_max = 0.0f64;
+        for r in 0..n {
+            let t0 = std::time::Instant::now();
+            let vals: Vec<f32> =
+                bcast_idx.iter().map(|&i| g_e[r][i as usize]).collect();
+            let sent_sq: f64 = vals.iter().map(|&v| (v as f64).powi(2)).sum();
+            let total_sq: f64 = g_e[r].iter().map(|&v| (v as f64).powi(2)).sum();
+            gather_max = gather_max.max(t0.elapsed().as_secs_f64());
+            gain_terms.push((sent_sq, total_sq));
+            bufs.push(vals);
+        }
+        comp_wall_s += gather_max;
+        for (r, g) in g_e.into_iter().enumerate() {
+            // Consume g_e into the residual update (no copy).
+            ef[r].update_at_indices(g, &bcast_idx);
+        }
+
+        // Line 17: allreduce the values at the broadcast indices.
+        let rep = match self.flavor {
+            ArFlavor::Ring => ring_allreduce(&mut bufs, link),
+            ArFlavor::Tree => tree_allreduce(&mut bufs, link),
+        };
+        comm.merge(rep);
+
+        ArTopkResult {
+            update: SparseGrad {
+                indices: bcast_idx,
+                values: bufs.into_iter().next().unwrap_or_default(),
+                dense_len: dim,
+            },
+            selected,
+            comm,
+            gain_terms,
+            comp_wall_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model;
+    use crate::util::proptest::{check, close, ensure};
+
+    fn link() -> LinkParams {
+        LinkParams::from_ms_gbps(1.0, 10.0)
+    }
+
+    fn setup(n: usize, dim: usize, seed: u64) -> (Vec<Vec<f32>>, Vec<EfState>) {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let grads = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; dim];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let ef = (0..n).map(|_| EfState::new(dim)).collect();
+        (grads, ef)
+    }
+
+    #[test]
+    fn star_round_robin_selection() {
+        let (grads, mut ef) = setup(4, 64, 0);
+        let mut art = ArTopk::new(SelectionPolicy::Star, ArFlavor::Ring);
+        for step in 0..8u64 {
+            let r = art.exchange(&grads, &mut ef, 0.1, step, link());
+            assert_eq!(r.selected, (step % 4) as usize);
+        }
+    }
+
+    #[test]
+    fn var_selects_max_variance_worker() {
+        let dim = 100;
+        let mut grads = vec![vec![0.01f32; dim]; 4];
+        grads[2] = vec![5.0; dim]; // dominant gradient mass on rank 2
+        let mut ef: Vec<EfState> = (0..4).map(|_| EfState::new(dim)).collect();
+        let mut art = ArTopk::new(SelectionPolicy::Var, ArFlavor::Ring);
+        let r = art.exchange(&grads, &mut ef, 0.1, 0, link());
+        assert_eq!(r.selected, 2);
+    }
+
+    #[test]
+    fn update_sums_values_at_broadcast_indices() {
+        let (grads, mut ef) = setup(3, 50, 1);
+        let mut art = ArTopk::new(SelectionPolicy::Star, ArFlavor::Ring);
+        let r = art.exchange(&grads, &mut ef, 0.2, 0, link());
+        let k = k_for(0.2, 50);
+        assert_eq!(r.update.k(), k);
+        for (&i, &v) in r.update.indices.iter().zip(&r.update.values) {
+            let want: f32 = grads.iter().map(|g| g[i as usize]).sum();
+            assert!((v - want).abs() < 1e-4, "idx {i}: {v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn residuals_follow_alg1_lines_15_16() {
+        let (grads, mut ef) = setup(2, 30, 2);
+        let mut art = ArTopk::new(SelectionPolicy::Star, ArFlavor::Tree);
+        let r = art.exchange(&grads, &mut ef, 0.1, 0, link());
+        let chosen: std::collections::HashSet<u32> = r.update.indices.iter().copied().collect();
+        for (w, e) in ef.iter().enumerate() {
+            for (i, &res) in e.residual.iter().enumerate() {
+                if chosen.contains(&(i as u32)) {
+                    assert_eq!(res, 0.0, "worker {w} idx {i} sent but residual kept");
+                } else {
+                    assert_eq!(res, grads[w][i], "worker {w} idx {i} dropped mass lost");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn error_feedback_conserves_mass_across_steps() {
+        check("artopk EF conservation", 25, |gen| {
+            let n = gen.usize_in(2, 5);
+            let dim = gen.usize_in(20, 120);
+            let (grads, mut ef) = setup(n, dim, gen.rng.next_u64());
+            let mut art = ArTopk::new(SelectionPolicy::Star, ArFlavor::Ring);
+            // After one exchange: residual + sent == g_e (per worker).
+            let g_e0: Vec<Vec<f32>> = (0..n).map(|r| ef[r].error_fed(&grads[r])).collect();
+            let r = art.exchange(&grads, &mut ef, 0.15, 0, link());
+            for w in 0..n {
+                let mut reconstructed = ef[w].residual.clone();
+                for &i in &r.update.indices {
+                    reconstructed[i as usize] = g_e0[w][i as usize];
+                }
+                crate::util::proptest::all_close(&reconstructed, &g_e0[w], 1e-5)
+                    .map_err(|e| format!("worker {w}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn comm_cost_matches_eqn4() {
+        // Ring: α[2(N-1)+logN] + Mcβ[2(N-1)/N + logN] with Mc = 4k bytes.
+        let n = 8;
+        let dim = 80_000;
+        let cr = 0.1;
+        let (grads, mut ef) = setup(n, dim, 3);
+        let mut ring = ArTopk::new(SelectionPolicy::Star, ArFlavor::Ring);
+        let r = ring.exchange(&grads, &mut ef, cr, 0, link());
+        let m = 4.0 * dim as f64;
+        let want = cost_model::art_ring(link(), m, n, cr);
+        close(r.comm.seconds, want, 1e-6).unwrap();
+
+        let (grads, mut ef) = setup(n, dim, 4);
+        let mut tree = ArTopk::new(SelectionPolicy::Star, ArFlavor::Tree);
+        let r = tree.exchange(&grads, &mut ef, cr, 0, link());
+        let want = cost_model::art_tree(link(), m, n, cr);
+        close(r.comm.seconds, want, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn var_costs_more_than_star() {
+        let n = 8;
+        let (grads, mut ef1) = setup(n, 10_000, 5);
+        let mut ef2 = ef1.clone();
+        let mut star = ArTopk::new(SelectionPolicy::Star, ArFlavor::Ring);
+        let mut var = ArTopk::new(SelectionPolicy::Var, ArFlavor::Ring);
+        let rs = star.exchange(&grads, &mut ef1, 0.01, 0, link());
+        let rv = var.exchange(&grads, &mut ef2, 0.01, 0, link());
+        assert!(rv.comm.seconds > rs.comm.seconds, "VAR must pay the extra AG");
+    }
+
+    #[test]
+    fn gain_terms_bounded() {
+        check("artopk gain in [0,1]", 20, |gen| {
+            let n = gen.usize_in(2, 4);
+            let dim = gen.usize_in(50, 200);
+            let (grads, mut ef) = setup(n, dim, gen.rng.next_u64());
+            let mut art = ArTopk::new(SelectionPolicy::Var, ArFlavor::Ring);
+            let r = art.exchange(&grads, &mut ef, 0.1, 0, link());
+            for &(c, e) in &r.gain_terms {
+                ensure(c >= 0.0 && c <= e * (1.0 + 1e-9), format!("gain terms {c} {e}"))?;
+            }
+            Ok(())
+        });
+    }
+}

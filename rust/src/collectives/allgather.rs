@@ -1,0 +1,172 @@
+//! Allgather: recursive doubling (Table I row 5):
+//! `α·log N + (N-1)Mβ` where M is the per-worker contribution.
+//!
+//! Two flavours: a dense concat used by VAR-Topk's variance exchange, and
+//! the sparse (values + indices) gather that synchronizes Top-k compressed
+//! gradients (the paper's AG baseline path).
+
+use crate::collectives::{ceil_log2, CommReport};
+use crate::compress::SparseGrad;
+use crate::netsim::cost_model::LinkParams;
+
+/// Dense allgather: every worker contributes `parts[w]`; returns the
+/// concatenation (identical on every worker) and the comm report.
+///
+/// Recursive-doubling round structure: in round d each worker exchanges the
+/// `2^d · M` bytes it has accumulated so far.
+pub fn allgather_concat(parts: &[Vec<f32>], link: LinkParams) -> (Vec<f32>, CommReport) {
+    let n = parts.len();
+    assert!(n >= 1);
+    let mut report = CommReport::default();
+    let m_bytes = 4.0 * parts.iter().map(|p| p.len()).max().unwrap_or(0) as f64;
+    let mut out = Vec::with_capacity(parts.iter().map(|p| p.len()).sum());
+    for p in parts {
+        out.extend_from_slice(p);
+    }
+    if n > 1 {
+        // Recursive doubling: round d exchanges 2^d blocks; total (N-1)M.
+        let rounds = ceil_log2(n);
+        let mut sent_blocks = 0.0;
+        for d in 0..rounds {
+            let blocks = f64::min((1u64 << d) as f64, n as f64 - 1.0 - sent_blocks);
+            report.add_round(link, blocks * m_bytes);
+            sent_blocks += blocks;
+        }
+    }
+    (out, report)
+}
+
+/// Sparse Top-k allgather (the AG compression path, §3-D): each worker
+/// contributes `k` (index, value) pairs = `8k` bytes; every worker ends with
+/// the elementwise SUM of all scattered contributions in a dense vector.
+///
+/// Cost: `α·log N + 2Mcβ(N-1)` with `Mc = 4k` value-bytes (indices double it).
+pub fn allgather_sparse(
+    parts: &[SparseGrad],
+    dense_len: usize,
+    link: LinkParams,
+) -> (Vec<f32>, CommReport) {
+    let n = parts.len();
+    assert!(n >= 1);
+    let mut report = CommReport::default();
+    let per_worker_bytes =
+        8.0 * parts.iter().map(|p| p.indices.len()).max().unwrap_or(0) as f64;
+    let mut dense = vec![0.0f32; dense_len];
+    for p in parts {
+        debug_assert_eq!(p.dense_len, dense_len);
+        for (&i, &v) in p.indices.iter().zip(&p.values) {
+            dense[i as usize] += v;
+        }
+    }
+    if n > 1 {
+        let rounds = ceil_log2(n);
+        let mut sent_blocks = 0.0;
+        for d in 0..rounds {
+            let blocks = f64::min((1u64 << d) as f64, n as f64 - 1.0 - sent_blocks);
+            report.add_round(link, blocks * per_worker_bytes);
+            sent_blocks += blocks;
+        }
+    }
+    (dense, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model;
+    use crate::util::proptest::{check, ensure};
+
+    fn link() -> LinkParams {
+        LinkParams::from_ms_gbps(1.0, 10.0)
+    }
+
+    #[test]
+    fn concat_order_and_content() {
+        let parts = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let (out, _) = allgather_concat(&parts, link());
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn dense_time_matches_closed_form_pow2() {
+        for n in [2usize, 4, 8, 16] {
+            let m = 256;
+            let parts = vec![vec![1.0f32; m]; n];
+            let (_, r) = allgather_concat(&parts, link());
+            let want = cost_model::allgather(link(), 4.0 * m as f64, n);
+            assert!(
+                (r.seconds - want).abs() / want < 1e-9,
+                "n={n}: sim {} vs model {}",
+                r.seconds,
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_sums_overlapping_indices() {
+        let a = SparseGrad { indices: vec![0, 3], values: vec![1.0, 2.0], dense_len: 5 };
+        let b = SparseGrad { indices: vec![3, 4], values: vec![10.0, 20.0], dense_len: 5 };
+        let (dense, _) = allgather_sparse(&[a, b], 5, link());
+        assert_eq!(dense, vec![1.0, 0.0, 0.0, 12.0, 20.0]);
+    }
+
+    #[test]
+    fn sparse_time_matches_ag_topk_cost() {
+        // k entries per worker -> Mc = 4k bytes; cost formula uses 2*Mc.
+        let n = 8;
+        let dense_len = 100_000;
+        let k = 1000;
+        let parts: Vec<SparseGrad> = (0..n)
+            .map(|w| SparseGrad {
+                indices: (0..k as u32).collect(),
+                values: vec![w as f32; k],
+                dense_len,
+            })
+            .collect();
+        let (_, r) = allgather_sparse(&parts, dense_len, link());
+        let m = 4.0 * dense_len as f64;
+        let c = k as f64 / dense_len as f64;
+        let want = cost_model::ag_topk(link(), m, n, c);
+        assert!(
+            (r.seconds - want).abs() / want < 1e-9,
+            "sim {} vs model {}",
+            r.seconds,
+            want
+        );
+    }
+
+    #[test]
+    fn property_sparse_equals_dense_scatter_sum() {
+        check("sparse AG == scatter-add", 50, |g| {
+            let n = g.usize_in(1, 6);
+            let len = g.usize_in(4, 200);
+            let mut want = vec![0.0f32; len];
+            let mut parts = Vec::new();
+            for _ in 0..n {
+                let k = g.usize_in(0, len.min(16));
+                let idx = g.rng.sample_indices(len, k);
+                let vals = g.vec_normal(k, 1.0);
+                for (&i, &v) in idx.iter().zip(&vals) {
+                    want[i] += v;
+                }
+                parts.push(SparseGrad {
+                    indices: idx.iter().map(|&i| i as u32).collect(),
+                    values: vals,
+                    dense_len: len,
+                });
+            }
+            let (dense, _) = allgather_sparse(&parts, len, link());
+            crate::util::proptest::all_close(&dense, &want, 1e-5)
+        });
+    }
+
+    #[test]
+    fn single_worker_no_comm() {
+        let parts = vec![vec![1.0, 2.0]];
+        let (out, r) = allgather_concat(&parts, link());
+        assert_eq!(out, vec![1.0, 2.0]);
+        assert_eq!(r.seconds, 0.0);
+        ensure(r.rounds == 0, "rounds").unwrap();
+    }
+}

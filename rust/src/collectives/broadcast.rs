@@ -1,0 +1,72 @@
+//! Binomial-tree broadcast (Table I row 4): `α·log N + log N·Mβ`.
+//!
+//! AR-Topk's first phase: the selected worker disperses its top-k *indices*
+//! to everyone (Alg 1 line 14).
+
+use crate::collectives::{ceil_log2, CommReport};
+use crate::netsim::cost_model::LinkParams;
+
+/// Broadcast `data` from `src` to all `n` workers; returns the per-worker
+/// received copy (trivially `data.clone()` — the data movement is the time
+/// model; the bytes are what matters) and the comm report.
+pub fn broadcast_bytes(bytes: f64, src: usize, n: usize, link: LinkParams) -> CommReport {
+    assert!(src < n, "src {src} out of range for n={n}");
+    let mut report = CommReport::default();
+    if n <= 1 {
+        return report;
+    }
+    for _ in 0..ceil_log2(n) {
+        report.add_round(link, bytes);
+    }
+    report
+}
+
+/// Typed convenience wrapper: broadcast a u32 index list.
+pub fn broadcast(data: &[u32], src: usize, n: usize, link: LinkParams) -> (Vec<u32>, CommReport) {
+    let report = broadcast_bytes(4.0 * data.len() as f64, src, n, link);
+    (data.to_vec(), report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model;
+
+    fn link() -> LinkParams {
+        LinkParams::from_ms_gbps(1.0, 10.0)
+    }
+
+    #[test]
+    fn time_matches_closed_form_pow2() {
+        for n in [2usize, 4, 8, 16] {
+            let m = 4096.0;
+            let r = broadcast_bytes(m, 0, n, link());
+            let want = cost_model::broadcast(link(), m, n);
+            assert!(
+                (r.seconds - want).abs() / want < 1e-9,
+                "n={n}: sim {} vs model {}",
+                r.seconds,
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn content_is_replicated() {
+        let (out, r) = broadcast(&[5, 7, 9], 2, 4, link());
+        assert_eq!(out, vec![5, 7, 9]);
+        assert_eq!(r.rounds, 2);
+    }
+
+    #[test]
+    fn single_node_free() {
+        let r = broadcast_bytes(1e6, 0, 1, link());
+        assert_eq!(r.seconds, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn bad_src_panics() {
+        broadcast_bytes(1.0, 3, 2, link());
+    }
+}

@@ -1,0 +1,106 @@
+//! Communication collectives over in-process worker buffers.
+//!
+//! Every op REALLY moves/reduces the data (numerics are exact, not mocked)
+//! and returns the wall-time a cluster of N single-GPU nodes on the
+//! simulated link would have spent, derived from the op's round structure:
+//! each round costs `α + bytes_sent_per_worker · β`. For power-of-two N the
+//! totals equal the closed forms in [`crate::netsim::cost_model`] — that
+//! equivalence is what the unit tests pin down (the paper validates the
+//! same algebra on hardware in Tables II/VI).
+
+pub mod allgather;
+pub mod broadcast;
+pub mod ps;
+pub mod ring_allreduce;
+pub mod tree_allreduce;
+
+pub use allgather::{allgather_concat, allgather_sparse};
+pub use broadcast::broadcast;
+pub use ps::ps_exchange;
+pub use ring_allreduce::ring_allreduce;
+pub use tree_allreduce::tree_allreduce;
+
+use crate::netsim::cost_model::LinkParams;
+
+/// Simulated time + traffic accounting for one collective call.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CommReport {
+    /// Simulated wall-clock seconds for the whole op.
+    pub seconds: f64,
+    /// Total bytes a single worker put on the wire (per-worker egress).
+    pub bytes_per_worker: f64,
+    /// Number of latency-bearing rounds.
+    pub rounds: u32,
+}
+
+impl CommReport {
+    pub(crate) fn add_round(&mut self, link: LinkParams, bytes: f64) {
+        self.seconds += link.alpha + bytes * link.beta;
+        self.bytes_per_worker += bytes;
+        self.rounds += 1;
+    }
+
+    pub fn merge(&mut self, other: CommReport) {
+        self.seconds += other.seconds;
+        self.bytes_per_worker += other.bytes_per_worker;
+        self.rounds += other.rounds;
+    }
+}
+
+/// Which collective a training step used (for the Fig 8 density plots and
+/// the metrics log).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    RingAllreduce,
+    TreeAllreduce,
+    AllgatherTopk,
+    ArTopkRing,
+    ArTopkTree,
+    PsStar,
+}
+
+impl CollectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::RingAllreduce => "Ring-AR",
+            CollectiveKind::TreeAllreduce => "Tree-AR",
+            CollectiveKind::AllgatherTopk => "AG",
+            CollectiveKind::ArTopkRing => "ART-Ring",
+            CollectiveKind::ArTopkTree => "ART-Tree",
+            CollectiveKind::PsStar => "PS",
+        }
+    }
+}
+
+pub(crate) fn ceil_log2(n: usize) -> u32 {
+    assert!(n >= 1);
+    usize::BITS - (n - 1).leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ceil_log2_values() {
+        assert_eq!(ceil_log2(1), 0);
+        assert_eq!(ceil_log2(2), 1);
+        assert_eq!(ceil_log2(3), 2);
+        assert_eq!(ceil_log2(8), 3);
+        assert_eq!(ceil_log2(9), 4);
+    }
+
+    #[test]
+    fn report_accumulates() {
+        let l = LinkParams::from_ms_gbps(1.0, 8.0); // beta = 1e-9 s/B
+        let mut r = CommReport::default();
+        r.add_round(l, 1e6);
+        assert!((r.seconds - (1e-3 + 1e-3)).abs() < 1e-12);
+        assert_eq!(r.rounds, 1);
+        let mut r2 = CommReport::default();
+        r2.add_round(l, 2e6);
+        r.merge(r2);
+        assert_eq!(r.rounds, 2);
+        assert!((r.bytes_per_worker - 3e6).abs() < 1e-6);
+    }
+}

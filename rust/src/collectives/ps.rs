@@ -1,0 +1,87 @@
+//! Parameter-server (star topology) exchange (Table I row 1):
+//! `2α + 2(N-1)Mβ` — the server's link carries `(N-1)M` in each direction.
+//!
+//! Implemented as the DenseSGD baseline the paper contrasts with
+//! decentralized AR; O(MN) bandwidth makes it the scale-out strawman.
+
+use crate::collectives::CommReport;
+use crate::netsim::cost_model::LinkParams;
+
+/// PS exchange with `server` as the star center: gathers all buffers,
+/// sums them, and pushes the sum back. After the call every buffer holds
+/// the elementwise sum.
+pub fn ps_exchange(bufs: &mut [Vec<f32>], server: usize, link: LinkParams) -> CommReport {
+    let n = bufs.len();
+    assert!(server < n, "server {server} out of range for n={n}");
+    let m = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == m), "buffer length mismatch");
+    let mut report = CommReport::default();
+    if n == 1 || m == 0 {
+        return report;
+    }
+    let m_bytes = 4.0 * m as f64;
+
+    // Gather: the server's ingress carries (N-1)·M bytes in one round.
+    let mut sum = bufs[server].clone();
+    for (w, b) in bufs.iter().enumerate() {
+        if w != server {
+            for (s, v) in sum.iter_mut().zip(b) {
+                *s += v;
+            }
+        }
+    }
+    report.add_round(link, (n as f64 - 1.0) * m_bytes);
+
+    // Scatter: egress carries (N-1)·M bytes back.
+    for b in bufs.iter_mut() {
+        b.copy_from_slice(&sum);
+    }
+    report.add_round(link, (n as f64 - 1.0) * m_bytes);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model;
+
+    fn link() -> LinkParams {
+        LinkParams::from_ms_gbps(1.0, 10.0)
+    }
+
+    #[test]
+    fn sums_exactly() {
+        let mut bufs = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        ps_exchange(&mut bufs, 0, link());
+        for b in &bufs {
+            assert_eq!(b, &vec![9.0, 12.0]);
+        }
+    }
+
+    #[test]
+    fn time_matches_closed_form() {
+        let n = 8;
+        let m = 1000;
+        let mut bufs = vec![vec![1.0f32; m]; n];
+        let r = ps_exchange(&mut bufs, 0, link());
+        let want = cost_model::ps_star(link(), 4.0 * m as f64, n);
+        assert!(
+            (r.seconds - want).abs() / want < 1e-9,
+            "sim {} vs model {}",
+            r.seconds,
+            want
+        );
+        assert_eq!(r.rounds, 2);
+    }
+
+    #[test]
+    fn ps_scales_worse_than_ring_in_bandwidth() {
+        let l = LinkParams::from_ms_gbps(0.1, 1.0);
+        let m = 100_000;
+        let mut a = vec![vec![1.0f32; m]; 16];
+        let mut b = vec![vec![1.0f32; m]; 16];
+        let ps = ps_exchange(&mut a, 0, l);
+        let ring = crate::collectives::ring_allreduce(&mut b, l);
+        assert!(ps.seconds > 5.0 * ring.seconds);
+    }
+}

@@ -1,0 +1,159 @@
+//! Ring allreduce: reduce-scatter followed by allgather, the
+//! bandwidth-optimal collective (Table I row 2).
+//!
+//! Round structure: `2(N-1)` rounds, each worker sending one `M/N` chunk —
+//! total `2(N-1)α + 2((N-1)/N)Mβ`, matching
+//! [`cost_model::ring_allreduce`](crate::netsim::cost_model::ring_allreduce).
+
+use crate::collectives::CommReport;
+use crate::netsim::cost_model::LinkParams;
+
+/// In-place SUM ring-allreduce over per-worker buffers (all same length).
+/// After the call every buffer holds the elementwise sum.
+pub fn ring_allreduce(bufs: &mut [Vec<f32>], link: LinkParams) -> CommReport {
+    let n = bufs.len();
+    assert!(n >= 1);
+    let m = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == m), "buffer length mismatch");
+    let mut report = CommReport::default();
+    if n == 1 || m == 0 {
+        return report;
+    }
+
+    // Chunk boundaries: chunk i covers [start(i), start(i+1)).
+    let start = |i: usize| i * m / n;
+    let chunk_range = |i: usize| start(i % n)..start(i % n + 1);
+    let chunk_bytes = 4.0 * m as f64 / n as f64;
+
+    // Reusable per-round scratch (perf: one allocation per call, not per
+    // round — see EXPERIMENTS.md §Perf).
+    let max_chunk = start(1).max(m - start(n - 1));
+    let mut outgoing: Vec<Vec<f32>> = vec![Vec::with_capacity(max_chunk); n];
+
+    // Phase 1: reduce-scatter. Round r: worker w sends chunk (w - r) mod n
+    // to worker (w + 1) mod n, which accumulates it. After n-1 rounds worker
+    // w owns the fully reduced chunk (w + 1) mod n.
+    for r in 0..n - 1 {
+        // Snapshot the outgoing chunks first (all sends happen in parallel).
+        for w in 0..n {
+            outgoing[w].clear();
+            outgoing[w].extend_from_slice(&bufs[w][chunk_range(w + n - r % n + n)]);
+        }
+        for w in 0..n {
+            let dst = (w + 1) % n;
+            let rng = chunk_range(w + n - r % n + n);
+            for (dv, sv) in bufs[dst][rng].iter_mut().zip(&outgoing[w]) {
+                *dv += sv;
+            }
+        }
+        report.add_round(link, chunk_bytes);
+    }
+
+    // Phase 2: allgather. Round r: worker w sends its owned (reduced) chunk
+    // which then propagates around the ring.
+    for r in 0..n - 1 {
+        for w in 0..n {
+            outgoing[w].clear();
+            outgoing[w].extend_from_slice(&bufs[w][chunk_range(w + 1 + n - r % n + n)]);
+        }
+        for w in 0..n {
+            let dst = (w + 1) % n;
+            let rng = chunk_range(w + 1 + n - r % n + n);
+            bufs[dst][rng.clone()].copy_from_slice(&outgoing[w]);
+        }
+        report.add_round(link, chunk_bytes);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model;
+    use crate::util::proptest::{all_close, check, ensure};
+    use crate::util::rng::Rng;
+
+    fn link() -> LinkParams {
+        LinkParams::from_ms_gbps(2.0, 10.0)
+    }
+
+    #[test]
+    fn sums_exactly() {
+        let mut bufs = vec![
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            vec![10.0, 20.0, 30.0, 40.0, 50.0],
+            vec![100.0, 200.0, 300.0, 400.0, 500.0],
+        ];
+        ring_allreduce(&mut bufs, link());
+        for b in &bufs {
+            assert_eq!(b, &vec![111.0, 222.0, 333.0, 444.0, 555.0]);
+        }
+    }
+
+    #[test]
+    fn time_matches_closed_form() {
+        // Chunked model matches the Table I closed form exactly when n | m.
+        let n = 8;
+        let m = 8 * 1000;
+        let mut bufs = vec![vec![1.0f32; m]; n];
+        let r = ring_allreduce(&mut bufs, link());
+        let want = cost_model::ring_allreduce(link(), 4.0 * m as f64, n);
+        assert!(
+            (r.seconds - want).abs() / want < 1e-9,
+            "sim {} vs model {}",
+            r.seconds,
+            want
+        );
+        assert_eq!(r.rounds, 2 * (n as u32 - 1));
+    }
+
+    #[test]
+    fn property_sum_any_n_m() {
+        check("ring allreduce sums for any n,m", 60, |g| {
+            let n = g.usize_in(1, 9);
+            let m = g.usize_in(1, 200);
+            let bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(m, 1.0)).collect();
+            let mut want = vec![0.0f32; m];
+            for b in &bufs {
+                for (w, v) in want.iter_mut().zip(b) {
+                    *w += v;
+                }
+            }
+            let mut got = bufs.clone();
+            ring_allreduce(&mut got, link());
+            for (w, b) in got.iter().enumerate() {
+                all_close(b, &want, 1e-4).map_err(|e| format!("worker {w}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn single_worker_is_noop() {
+        let mut bufs = vec![vec![1.0, 2.0]];
+        let r = ring_allreduce(&mut bufs, link());
+        assert_eq!(r.seconds, 0.0);
+        assert_eq!(bufs[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        check("ring deterministic", 20, |g| {
+            let n = g.usize_in(2, 6);
+            let m = g.usize_in(1, 64);
+            let bufs: Vec<Vec<f32>> = (0..n)
+                .map(|i| {
+                    let mut r = Rng::new(i as u64);
+                    let mut v = vec![0.0; m];
+                    r.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let mut a = bufs.clone();
+            let mut b = bufs;
+            let ra = ring_allreduce(&mut a, link());
+            let rb = ring_allreduce(&mut b, link());
+            ensure(a == b && ra == rb, "nondeterministic")
+        });
+    }
+}

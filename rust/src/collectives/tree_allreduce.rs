@@ -1,0 +1,126 @@
+//! Binomial-tree allreduce: reduce to rank 0, then broadcast back
+//! (Table I row 3): `2α·log N + 2·log N·Mβ` for power-of-two N.
+
+use crate::collectives::{ceil_log2, CommReport};
+use crate::netsim::cost_model::LinkParams;
+
+/// In-place SUM tree-allreduce. After the call every buffer holds the sum.
+pub fn tree_allreduce(bufs: &mut [Vec<f32>], link: LinkParams) -> CommReport {
+    let n = bufs.len();
+    assert!(n >= 1);
+    let m = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == m), "buffer length mismatch");
+    let mut report = CommReport::default();
+    if n == 1 || m == 0 {
+        return report;
+    }
+    let bytes = 4.0 * m as f64;
+    let rounds = ceil_log2(n);
+
+    // Reduce phase: at round d, ranks with bit d set send to (rank - 2^d).
+    for d in 0..rounds {
+        let step = 1usize << d;
+        let mut any = false;
+        for w in (0..n).rev() {
+            if w & step != 0 && w & (step - 1) == 0 {
+                let dst = w - step;
+                let (lo, hi) = bufs.split_at_mut(w);
+                for (dv, sv) in lo[dst].iter_mut().zip(&hi[0]) {
+                    *dv += sv;
+                }
+                any = true;
+            }
+        }
+        if any {
+            report.add_round(link, bytes);
+        }
+    }
+
+    // Broadcast phase: mirror of the reduce (highest bit first).
+    for d in (0..rounds).rev() {
+        let step = 1usize << d;
+        let mut any = false;
+        for w in 0..n {
+            if w & step != 0 && w & (step - 1) == 0 {
+                let src = w - step;
+                let (lo, hi) = bufs.split_at_mut(w);
+                hi[0].copy_from_slice(&lo[src]);
+                any = true;
+            }
+        }
+        if any {
+            report.add_round(link, bytes);
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model;
+    use crate::util::proptest::{all_close, check};
+
+    fn link() -> LinkParams {
+        LinkParams::from_ms_gbps(1.0, 10.0)
+    }
+
+    #[test]
+    fn sums_exactly_pow2() {
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|w| vec![w as f32 + 1.0; 3]).collect();
+        tree_allreduce(&mut bufs, link());
+        for b in &bufs {
+            assert_eq!(b, &vec![10.0, 10.0, 10.0]);
+        }
+    }
+
+    #[test]
+    fn time_matches_closed_form_pow2() {
+        for n in [2usize, 4, 8, 16] {
+            let m = 1024;
+            let mut bufs = vec![vec![1.0f32; m]; n];
+            let r = tree_allreduce(&mut bufs, link());
+            let want = cost_model::tree_allreduce(link(), 4.0 * m as f64, n);
+            assert!(
+                (r.seconds - want).abs() / want < 1e-9,
+                "n={n}: sim {} vs model {}",
+                r.seconds,
+                want
+            );
+        }
+    }
+
+    #[test]
+    fn property_sum_any_n() {
+        check("tree allreduce sums", 60, |g| {
+            let n = g.usize_in(1, 13);
+            let m = g.usize_in(1, 128);
+            let bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(m, 1.0)).collect();
+            let mut want = vec![0.0f32; m];
+            for b in &bufs {
+                for (w, v) in want.iter_mut().zip(b) {
+                    *w += v;
+                }
+            }
+            let mut got = bufs;
+            tree_allreduce(&mut got, link());
+            for (w, b) in got.iter().enumerate() {
+                all_close(b, &want, 1e-4).map_err(|e| format!("worker {w}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tree_beats_ring_on_high_latency() {
+        // The paper's motivation for ART-Tree: fewer latency-bearing rounds.
+        let slow = LinkParams::from_ms_gbps(100.0, 10.0);
+        let m = 1000;
+        let mut a = vec![vec![1.0f32; m]; 8];
+        let mut b = vec![vec![1.0f32; m]; 8];
+        let tr = tree_allreduce(&mut a, slow);
+        let rr = crate::collectives::ring_allreduce(&mut b, slow);
+        assert!(tr.seconds < rr.seconds);
+        assert!(tr.rounds < rr.rounds);
+    }
+}

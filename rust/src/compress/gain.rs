@@ -1,0 +1,131 @@
+//! Compression gain (GraVAC [2], §2-C3): `E||g_c||² / E||g_e||²` — the
+//! statistical-efficiency heuristic that drives the MOO controller.
+//!
+//! Gain ≈ 1 means compression lost little signal; small gain means heavy
+//! information loss. Fig 3 plots these trajectories; the adaptive
+//! controller re-explores CRs when the inter-iteration gain drifts beyond
+//! `gain-threshold` (10% in the paper).
+
+use crate::util::stats::Ewma;
+
+/// Instantaneous gain of one compression event.
+pub fn gain(sq_norm_compressed: f64, sq_norm_error_fed: f64) -> f64 {
+    if sq_norm_error_fed <= 0.0 {
+        return 1.0; // nothing to lose
+    }
+    (sq_norm_compressed / sq_norm_error_fed).clamp(0.0, 1.0)
+}
+
+/// Tracks smoothed gain and fires when it drifts beyond a threshold
+/// relative to the last *accepted* level (the paper's 10% trigger).
+#[derive(Debug, Clone)]
+pub struct GainTracker {
+    ewma: Ewma,
+    /// Gain level at the last accepted (re-)configuration.
+    anchor: Option<f64>,
+    /// Relative-change trigger, e.g. 0.1 for 10%.
+    pub threshold: f64,
+    history: Vec<f64>,
+}
+
+impl GainTracker {
+    pub fn new(threshold: f64) -> Self {
+        assert!(threshold > 0.0);
+        GainTracker {
+            ewma: Ewma::new(0.2),
+            anchor: None,
+            threshold,
+            history: Vec::new(),
+        }
+    }
+
+    /// Record one step's gain; returns `true` if the smoothed gain drifted
+    /// past the threshold since the last anchor (i.e. re-exploration due).
+    pub fn record(&mut self, g: f64) -> bool {
+        let smoothed = self.ewma.update(g);
+        self.history.push(g);
+        match self.anchor {
+            None => {
+                self.anchor = Some(smoothed);
+                false
+            }
+            Some(a) => {
+                let drift = if a > 0.0 { (smoothed - a).abs() / a } else { 0.0 };
+                drift > self.threshold
+            }
+        }
+    }
+
+    /// Accept the current level as the new anchor (after re-configuring).
+    pub fn rearm(&mut self) {
+        self.anchor = self.ewma.get();
+    }
+
+    pub fn smoothed(&self) -> Option<f64> {
+        self.ewma.get()
+    }
+
+    pub fn history(&self) -> &[f64] {
+        &self.history
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gain_formula() {
+        assert_eq!(gain(0.5, 1.0), 0.5);
+        assert_eq!(gain(2.0, 1.0), 1.0); // clamped
+        assert_eq!(gain(0.0, 0.0), 1.0); // degenerate
+    }
+
+    #[test]
+    fn stable_gain_never_triggers() {
+        let mut t = GainTracker::new(0.1);
+        let mut fired = false;
+        for _ in 0..100 {
+            fired |= t.record(0.8);
+        }
+        assert!(!fired);
+    }
+
+    #[test]
+    fn drift_triggers_and_rearm_resets() {
+        let mut t = GainTracker::new(0.1);
+        for _ in 0..20 {
+            assert!(!t.record(0.8));
+        }
+        // Collapse the gain (e.g. step-size decay regime): must fire.
+        let mut fired = false;
+        for _ in 0..20 {
+            fired |= t.record(0.4);
+        }
+        assert!(fired);
+        t.rearm();
+        // Stable at the new level: no more firing.
+        let mut fired2 = false;
+        for _ in 0..20 {
+            fired2 |= t.record(t.smoothed().unwrap());
+        }
+        assert!(!fired2);
+    }
+
+    #[test]
+    fn lower_cr_gives_lower_gain_on_gaussian() {
+        // Shape check backing Fig 3: gain falls with CR.
+        use crate::compress::{Compressor, TopK};
+        use crate::tensor::Layout;
+        let mut gen = crate::util::proptest::Gen { rng: crate::util::rng::Rng::new(2) };
+        let g = gen.vec_normal(20_000, 1.0);
+        let e: f64 = g.iter().map(|&v| (v as f64).powi(2)).sum();
+        let mut prev = 1.1;
+        for cr in [0.5, 0.1, 0.01, 0.001] {
+            let s = TopK::new().compress(&g, cr, &Layout::single(g.len()));
+            let gg = gain(s.sq_norm(), e);
+            assert!(gg < prev, "gain not decreasing at cr={cr}");
+            prev = gg;
+        }
+    }
+}

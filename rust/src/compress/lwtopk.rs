@@ -1,0 +1,124 @@
+//! Layerwise Top-k (LWTopk [20], §2-C3): top `k%` PER LAYER, so every layer
+//! contributes in proportion to its size.
+//!
+//! The paper's critique (and why AR-Topk compresses the fused tensor
+//! instead): with skewed gradients, a fixed per-layer quota drops critical
+//! updates that cluster in a few layers. The accuracy gap in Table V
+//! follows from exactly this behaviour.
+
+use crate::compress::{k_for, Compressor, SparseGrad};
+use crate::compress::topk::topk_indices_select;
+use crate::tensor::Layout;
+
+/// Layerwise exact top-k compressor.
+#[derive(Debug, Clone, Default)]
+pub struct LwTopk;
+
+impl LwTopk {
+    pub fn new() -> Self {
+        LwTopk
+    }
+}
+
+impl Compressor for LwTopk {
+    fn name(&self) -> &'static str {
+        "lwtopk"
+    }
+
+    fn compress(&mut self, g: &[f32], cr: f64, layout: &Layout) -> SparseGrad {
+        assert_eq!(
+            layout.total(),
+            g.len(),
+            "layout total {} != gradient len {}",
+            layout.total(),
+            g.len()
+        );
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for layer in &layout.layers {
+            let seg = &g[layer.offset..layer.offset + layer.size];
+            let k = k_for(cr, seg.len());
+            for local in topk_indices_select(seg, k) {
+                let global = (layer.offset + local as usize) as u32;
+                indices.push(global);
+                values.push(seg[local as usize]);
+            }
+        }
+        SparseGrad { indices, values, dense_len: g.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::topk::TopK;
+    use crate::util::proptest::{check, ensure};
+
+    #[test]
+    fn per_layer_quota() {
+        let layout = Layout::from_sizes(&[("a", 10), ("b", 10)]);
+        // All large values live in layer a; LWTopk must still pick from b.
+        let mut g = vec![0.0f32; 20];
+        for i in 0..10 {
+            g[i] = 100.0 + i as f32;
+        }
+        for i in 10..20 {
+            g[i] = 0.001 * i as f32;
+        }
+        let s = LwTopk::new().compress(&g, 0.2, &layout);
+        assert_eq!(s.k(), 4); // 2 per layer
+        let from_b = s.indices.iter().filter(|&&i| i >= 10).count();
+        assert_eq!(from_b, 2, "layer b must contribute its quota");
+    }
+
+    #[test]
+    fn fused_topk_beats_lwtopk_on_skewed_gradients() {
+        // The paper's argument for fused compression: when critical mass
+        // clusters in one layer, fused top-k keeps more of the energy.
+        let layout = Layout::from_sizes(&[("hot", 50), ("cold", 50)]);
+        let mut g = vec![0.01f32; 100];
+        for i in 0..50 {
+            g[i] = 1.0 + i as f32 * 0.1;
+        }
+        let lw = LwTopk::new().compress(&g, 0.2, &layout);
+        let fused = TopK::new().compress(&g, 0.2, &layout);
+        assert!(fused.sq_norm() > lw.sq_norm());
+    }
+
+    #[test]
+    fn indices_global_and_sorted_within_layer() {
+        check("lwtopk indices valid", 60, |gen| {
+            let l1 = gen.usize_in(1, 50);
+            let l2 = gen.usize_in(1, 50);
+            let layout = Layout::from_sizes(&[("x", l1), ("y", l2)]);
+            let g = gen.vec_normal(l1 + l2, 1.0);
+            let cr = gen.f64_in(0.01, 0.9);
+            let s = LwTopk::new().compress(&g, cr, &layout);
+            for (&i, &v) in s.indices.iter().zip(&s.values) {
+                ensure((i as usize) < g.len(), "index out of range")?;
+                ensure(v == g[i as usize], "value mismatch")?;
+            }
+            // No duplicates.
+            let mut sorted = s.indices.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            ensure(sorted.len() == s.indices.len(), "duplicate indices")
+        });
+    }
+
+    #[test]
+    fn k_matches_per_layer_sum() {
+        let layout = Layout::from_sizes(&[("a", 100), ("b", 1000), ("c", 17)]);
+        let g = vec![1.0f32; 1117];
+        let s = LwTopk::new().compress(&g, 0.01, &layout);
+        // ceil(1)+ceil(10)+ceil(0.17) = 1 + 10 + 1
+        assert_eq!(s.k(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "layout total")]
+    fn layout_mismatch_panics() {
+        let layout = Layout::single(5);
+        LwTopk::new().compress(&[1.0; 6], 0.5, &layout);
+    }
+}

@@ -1,0 +1,190 @@
+//! Gradient compressors with error feedback (paper §2-C, Eqn 2).
+//!
+//! All compressors produce a [`SparseGrad`] from an error-fed gradient.
+//! Residual bookkeeping (Eqn 2) lives in [`EfState`], shared by every
+//! compressor and by AR-Topk.  Compression *time* is measured for real
+//! (these run on the actual coordinator CPU — Fig 2 regenerates from these
+//! measurements); communication time is simulated by the collectives.
+
+pub mod gain;
+pub mod lwtopk;
+pub mod mstopk;
+pub mod randomk;
+pub mod topk;
+
+pub use gain::GainTracker;
+pub use lwtopk::LwTopk;
+pub use mstopk::MsTopk;
+pub use randomk::RandomK;
+pub use topk::{topk_indices, TopK};
+
+use crate::tensor::Layout;
+use anyhow::{bail, Result};
+
+/// A compressed gradient: `k` (index, value) pairs over a dense vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseGrad {
+    pub indices: Vec<u32>,
+    pub values: Vec<f32>,
+    pub dense_len: usize,
+}
+
+impl SparseGrad {
+    pub fn k(&self) -> usize {
+        debug_assert_eq!(self.indices.len(), self.values.len());
+        self.indices.len()
+    }
+
+    /// Wire size in bytes for AG-style exchange (values + indices).
+    pub fn wire_bytes(&self) -> usize {
+        8 * self.k()
+    }
+
+    /// Scatter into a fresh dense vector.
+    pub fn to_dense(&self) -> Vec<f32> {
+        let mut out = vec![0.0; self.dense_len];
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] += v;
+        }
+        out
+    }
+
+    /// Sum of squared values (the gain numerator ||g_c||^2).
+    pub fn sq_norm(&self) -> f64 {
+        self.values.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+}
+
+/// Common interface: compress an (error-fed) gradient at ratio `cr`.
+pub trait Compressor {
+    fn name(&self) -> &'static str;
+    /// `layout` supplies layer boundaries (used by LWTopk; others ignore it).
+    fn compress(&mut self, g: &[f32], cr: f64, layout: &Layout) -> SparseGrad;
+}
+
+/// Compressor selection by name (config/CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompressorKind {
+    TopK,
+    LwTopk,
+    MsTopk,
+    RandomK,
+}
+
+impl CompressorKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "topk" => CompressorKind::TopK,
+            "lwtopk" => CompressorKind::LwTopk,
+            "mstopk" => CompressorKind::MsTopk,
+            "randomk" => CompressorKind::RandomK,
+            _ => bail!("unknown compressor `{s}` (topk|lwtopk|mstopk|randomk)"),
+        })
+    }
+
+    pub fn build(&self, seed: u64) -> Box<dyn Compressor> {
+        match self {
+            CompressorKind::TopK => Box::new(TopK::new()),
+            CompressorKind::LwTopk => Box::new(LwTopk::new()),
+            CompressorKind::MsTopk => Box::new(MsTopk::new(25)),
+            CompressorKind::RandomK => Box::new(RandomK::new(seed)),
+        }
+    }
+}
+
+/// Error-feedback state for one worker (Eqn 2): residuals accumulate the
+/// gradient mass that compression dropped.
+#[derive(Debug, Clone)]
+pub struct EfState {
+    pub residual: Vec<f32>,
+}
+
+impl EfState {
+    pub fn new(dim: usize) -> Self {
+        EfState { residual: vec![0.0; dim] }
+    }
+
+    /// `g_e = g + residual` (Eqn 2a).
+    pub fn error_fed(&self, g: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(g.len(), self.residual.len());
+        g.iter().zip(&self.residual).map(|(a, b)| a + b).collect()
+    }
+
+    /// Update residual after compressing `g_e` into `sparse`
+    /// (Eqn 2b: residual = g_e - g_c). Consumes `g_e` to avoid a copy.
+    pub fn update(&mut self, mut g_e: Vec<f32>, sparse: &SparseGrad) {
+        for (&i, _) in sparse.indices.iter().zip(&sparse.values) {
+            g_e[i as usize] = 0.0;
+        }
+        self.residual = g_e;
+    }
+
+    /// residual update for AR-Topk's broadcast-index path: the *sent*
+    /// entries are exactly the broadcast indices, regardless of the local
+    /// top-k (Alg 1 lines 15-16).
+    pub fn update_at_indices(&mut self, mut g_e: Vec<f32>, indices: &[u32]) {
+        for &i in indices {
+            g_e[i as usize] = 0.0;
+        }
+        self.residual = g_e;
+    }
+
+    pub fn reset(&mut self) {
+        self.residual.iter_mut().for_each(|r| *r = 0.0);
+    }
+}
+
+/// Exact top-k count for a compression ratio: `ceil(cr * len)`, min 1.
+pub fn k_for(cr: f64, len: usize) -> usize {
+    ((cr * len as f64).ceil() as usize).clamp(1, len)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparse_grad_roundtrip() {
+        let s = SparseGrad { indices: vec![1, 3], values: vec![2.0, -4.0], dense_len: 5 };
+        assert_eq!(s.k(), 2);
+        assert_eq!(s.wire_bytes(), 16);
+        assert_eq!(s.to_dense(), vec![0.0, 2.0, 0.0, -4.0, 0.0]);
+        assert!((s.sq_norm() - 20.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ef_state_eqn2() {
+        let mut ef = EfState::new(4);
+        ef.residual = vec![0.5, 0.0, -0.5, 0.0];
+        let g = vec![1.0, 2.0, 3.0, 4.0];
+        let g_e = ef.error_fed(&g);
+        assert_eq!(g_e, vec![1.5, 2.0, 2.5, 4.0]);
+        let sparse = SparseGrad { indices: vec![1, 3], values: vec![2.0, 4.0], dense_len: 4 };
+        ef.update(g_e, &sparse);
+        // Sent coordinates zeroed; dropped mass kept.
+        assert_eq!(ef.residual, vec![1.5, 0.0, 2.5, 0.0]);
+    }
+
+    #[test]
+    fn k_for_bounds() {
+        assert_eq!(k_for(0.1, 100), 10);
+        assert_eq!(k_for(0.001, 100), 1); // ceil + min 1
+        assert_eq!(k_for(1.0, 7), 7);
+        assert_eq!(k_for(0.0, 7), 1); // never zero
+        assert_eq!(k_for(0.015, 1000), 15);
+    }
+
+    #[test]
+    fn kind_parse_and_build() {
+        for (s, n) in [
+            ("topk", "topk"),
+            ("lwtopk", "lwtopk"),
+            ("mstopk", "mstopk"),
+            ("randomk", "randomk"),
+        ] {
+            let k = CompressorKind::parse(s).unwrap();
+            assert_eq!(k.build(0).name(), n);
+        }
+        assert!(CompressorKind::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Random-k baseline (§2-C1): keep k uniformly random coordinates.
+//!
+//! With a SHARED seed sequence all workers draw the same indices each step,
+//! which makes Random-k natively allreduce-compatible — the paper cites it
+//! as the AR-friendly compressor with poor convergence; the ablation bench
+//! uses it as the lower bound on statistical efficiency.
+
+use crate::compress::{k_for, Compressor, SparseGrad};
+use crate::tensor::Layout;
+use crate::util::rng::Rng;
+
+/// Random-k compressor. Workers constructed with the same seed draw
+/// identical index sets on every call (call-count keyed).
+#[derive(Debug, Clone)]
+pub struct RandomK {
+    seed: u64,
+    calls: u64,
+}
+
+impl RandomK {
+    pub fn new(seed: u64) -> Self {
+        RandomK { seed, calls: 0 }
+    }
+
+    /// The index set for a given step (pure function of seed + step).
+    pub fn indices_for_step(&self, step: u64, len: usize, k: usize) -> Vec<usize> {
+        let mut rng = Rng::new(self.seed ^ step.wrapping_mul(0xA076_1D64_78BD_642F));
+        rng.sample_indices(len, k)
+    }
+}
+
+impl Compressor for RandomK {
+    fn name(&self) -> &'static str {
+        "randomk"
+    }
+
+    fn compress(&mut self, g: &[f32], cr: f64, _layout: &Layout) -> SparseGrad {
+        let k = k_for(cr, g.len());
+        let idx = self.indices_for_step(self.calls, g.len(), k);
+        self.calls += 1;
+        SparseGrad {
+            indices: idx.iter().map(|&i| i as u32).collect(),
+            values: idx.iter().map(|&i| g[i]).collect(),
+            dense_len: g.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    #[test]
+    fn same_seed_same_indices_across_workers() {
+        let layout = Layout::single(100);
+        let mut a = RandomK::new(9);
+        let mut b = RandomK::new(9);
+        let ga = crate::util::rng::Rng::new(1).fork(0);
+        let _ = ga;
+        let g1: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let g2: Vec<f32> = (0..100).map(|i| -(i as f32)).collect();
+        for _ in 0..5 {
+            let sa = a.compress(&g1, 0.1, &layout);
+            let sb = b.compress(&g2, 0.1, &layout);
+            assert_eq!(sa.indices, sb.indices, "AR-compatibility requires shared indices");
+        }
+    }
+
+    #[test]
+    fn different_steps_differ() {
+        let layout = Layout::single(1000);
+        let mut c = RandomK::new(3);
+        let g = vec![1.0f32; 1000];
+        let s1 = c.compress(&g, 0.05, &layout);
+        let s2 = c.compress(&g, 0.05, &layout);
+        assert_ne!(s1.indices, s2.indices);
+    }
+
+    #[test]
+    fn k_and_validity() {
+        check("randomk validity", 60, |gen| {
+            let n = gen.usize_in(1, 400);
+            let g = gen.vec_normal(n, 1.0);
+            let cr = gen.f64_in(0.01, 1.0);
+            let mut c = RandomK::new(gen.rng.next_u64());
+            let s = c.compress(&g, cr, &Layout::single(n));
+            ensure(s.k() == k_for(cr, n), "wrong k")?;
+            for (&i, &v) in s.indices.iter().zip(&s.values) {
+                ensure(v == g[i as usize], "value mismatch")?;
+            }
+            let mut sorted = s.indices.clone();
+            sorted.dedup();
+            ensure(sorted.len() == s.k(), "duplicates")
+        });
+    }
+}

@@ -1,0 +1,192 @@
+//! Exact fused Top-k — the compressor inside AR-Topk (§3-A).
+//!
+//! The paper sorts with a max-heap over the fused (all-layer) gradient:
+//! heapify is O(G), extracting k maxima O(k·log G).  That heap path is
+//! implemented here verbatim; [`topk_indices_select`] is the
+//! quickselect alternative (O(G) expected) used by the perf pass — both
+//! return identical sets (property-tested) so the trainer can switch via
+//! [`TopK::with_quickselect`].
+
+use crate::compress::{k_for, Compressor, SparseGrad};
+use crate::tensor::Layout;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// (|value|, index) heap entry with total order on magnitude then index.
+#[derive(PartialEq)]
+struct Entry(f32, u32);
+
+impl Eq for Entry {}
+
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Entry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Magnitudes are finite in practice; ties broken by lower index so
+        // results are deterministic across runs and machines.
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.1.cmp(&self.1))
+    }
+}
+
+/// Max-heap top-k (paper's method): O(G) heapify + O(k log G) pops.
+pub fn topk_indices(g: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(g.len());
+    let heap: BinaryHeap<Entry> = g
+        .iter()
+        .enumerate()
+        .map(|(i, &v)| Entry(v.abs(), i as u32))
+        .collect();
+    let mut heap = heap;
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        out.push(heap.pop().expect("k <= len").1);
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Quickselect top-k: O(G) expected. Same selection as [`topk_indices`]
+/// (ties broken by lower index).
+pub fn topk_indices_select(g: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(g.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    if k == g.len() {
+        return (0..g.len() as u32).collect();
+    }
+    let mut pairs: Vec<(f32, u32)> =
+        g.iter().enumerate().map(|(i, &v)| (v.abs(), i as u32)).collect();
+    // Order DESC by magnitude, ties ASC by index; take the first k.
+    pairs.select_nth_unstable_by(k - 1, |a, b| {
+        b.0.partial_cmp(&a.0)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| a.1.cmp(&b.1))
+    });
+    let mut out: Vec<u32> = pairs[..k].iter().map(|&(_, i)| i).collect();
+    out.sort_unstable();
+    out
+}
+
+/// Fused-tensor exact Top-k compressor.
+#[derive(Debug, Clone)]
+pub struct TopK {
+    quickselect: bool,
+}
+
+impl TopK {
+    pub fn new() -> Self {
+        TopK { quickselect: false }
+    }
+
+    /// Perf-pass variant: expected-O(G) selection instead of the heap.
+    pub fn with_quickselect() -> Self {
+        TopK { quickselect: true }
+    }
+
+    pub fn select(&self, g: &[f32], k: usize) -> Vec<u32> {
+        if self.quickselect {
+            topk_indices_select(g, k)
+        } else {
+            topk_indices(g, k)
+        }
+    }
+}
+
+impl Default for TopK {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Compressor for TopK {
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+
+    fn compress(&mut self, g: &[f32], cr: f64, _layout: &Layout) -> SparseGrad {
+        let k = k_for(cr, g.len());
+        let indices = self.select(g, k);
+        let values = indices.iter().map(|&i| g[i as usize]).collect();
+        SparseGrad { indices, values, dense_len: g.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    #[test]
+    fn picks_largest_magnitudes() {
+        let g = [0.1, -5.0, 2.0, 0.0, 3.0, -0.2];
+        assert_eq!(topk_indices(&g, 3), vec![1, 2, 4]);
+        assert_eq!(topk_indices_select(&g, 3), vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn ties_break_by_lower_index() {
+        let g = [1.0, -1.0, 1.0, 1.0];
+        assert_eq!(topk_indices(&g, 2), vec![0, 1]);
+        assert_eq!(topk_indices_select(&g, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn k_edge_cases() {
+        let g = [1.0, 2.0];
+        assert_eq!(topk_indices(&g, 0), Vec::<u32>::new());
+        assert_eq!(topk_indices(&g, 2), vec![0, 1]);
+        assert_eq!(topk_indices(&g, 99), vec![0, 1]);
+        assert_eq!(topk_indices_select(&g, 99), vec![0, 1]);
+    }
+
+    #[test]
+    fn heap_and_quickselect_agree() {
+        check("heap == quickselect", 150, |g| {
+            let n = g.usize_in(1, 500);
+            let v = g.vec_normal(n, 1.0);
+            let k = g.usize_in(0, n);
+            ensure(
+                topk_indices(&v, k) == topk_indices_select(&v, k),
+                format!("mismatch n={n} k={k}"),
+            )
+        });
+    }
+
+    #[test]
+    fn selected_dominate_dropped() {
+        check("topk dominance", 100, |g| {
+            let n = g.usize_in(2, 300);
+            let v = g.vec_normal(n, 1.0);
+            let k = g.usize_in(1, n - 1);
+            let idx = topk_indices(&v, k);
+            let min_kept = idx.iter().map(|&i| v[i as usize].abs()).fold(f32::MAX, f32::min);
+            let chosen: std::collections::HashSet<u32> = idx.into_iter().collect();
+            for (i, &x) in v.iter().enumerate() {
+                if !chosen.contains(&(i as u32)) {
+                    ensure(x.abs() <= min_kept + 1e-7, format!("dropped {i} bigger"))?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compressor_interface() {
+        let mut c = TopK::new();
+        let layout = Layout::single(10);
+        let g: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let s = c.compress(&g, 0.3, &layout);
+        assert_eq!(s.k(), 3);
+        assert_eq!(s.indices, vec![7, 8, 9]);
+        assert_eq!(s.values, vec![7.0, 8.0, 9.0]);
+        assert_eq!(c.name(), "topk");
+    }
+}

@@ -1,0 +1,213 @@
+//! MOO-adaptive compression controller (§3-E).
+//!
+//! Triggers, exactly as the paper specifies:
+//! * **gain drift** ≥ `gain_threshold` (10%) — re-profile the candidate CR
+//!   ladder: checkpoint, run each candidate for `probe_iters` steps
+//!   recording (t_comp, t_sync, gain), restore, rebuild the MOO problem,
+//!   solve (NSGA-II) for the knee-point `c_optimal`;
+//! * **network change** (probe detects α or bandwidth drift) — keep the
+//!   measured gain/comp profiles but re-predict each candidate's `t_sync`
+//!   from the α-β cost model at the new link, re-solve.
+//!
+//! Exploration happens entirely under in-memory checkpoint/restore so
+//! candidate CRs never damage the model (the paper's checkpoint-restore in
+//! system memory). Its simulated time is accounted in
+//! [`Trainer::explore_overhead_s`].
+
+use crate::coordinator::selector;
+use crate::coordinator::trainer::Trainer;
+use crate::moo::problem::{candidate_crs, CandidateProfile, CrProblem};
+use crate::netsim::cost_model::LinkParams;
+
+/// Adaptive-CR configuration (defaults = the paper's §3-E1 values).
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    pub c_low: f64,
+    pub c_high: f64,
+    /// Geometric step between candidate CRs.
+    pub factor: f64,
+    /// Iterations each candidate runs during exploration.
+    pub probe_iters: u64,
+    /// Relative gain-drift trigger (0.1 = 10%).
+    pub gain_threshold: f64,
+    /// NSGA-II seed.
+    pub seed: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            c_low: 0.001,
+            c_high: 0.1,
+            factor: 3.0,
+            probe_iters: 10,
+            gain_threshold: 0.1,
+            seed: 0,
+        }
+    }
+}
+
+/// Controller state carried by the trainer.
+#[derive(Debug)]
+pub struct AdaptiveState {
+    pub cfg: AdaptiveConfig,
+    /// Last measured candidate profiles (refreshed on gain triggers).
+    profiles: Option<Vec<CandidateProfile>>,
+    /// How many explorations ran (observability/tests).
+    pub explorations: u64,
+    /// How many re-solves ran (gain + network triggers).
+    pub resolves: u64,
+}
+
+impl AdaptiveState {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        AdaptiveState { cfg, profiles: None, explorations: 0, resolves: 0 }
+    }
+
+    /// Entry point called by the trainer after every recorded step.
+    pub fn maybe_adapt(
+        &mut self,
+        t: &mut Trainer,
+        net_changed: bool,
+        gain_fired: bool,
+        probed: LinkParams,
+    ) {
+        let need_explore = self.profiles.is_none() || gain_fired;
+        if !(need_explore || net_changed) {
+            return;
+        }
+        if need_explore {
+            self.profiles = Some(self.explore(t, probed));
+            self.explorations += 1;
+            t.gain_tracker.rearm();
+        } else if let Some(profiles) = &mut self.profiles {
+            // Network changed: re-predict t_sync at the new link only.
+            for p in profiles.iter_mut() {
+                p.t_sync = selector::choose(probed, t.model_bytes(), t.cfg.n_workers, p.cr)
+                    .predicted_s;
+            }
+        }
+        let profiles = self.profiles.as_ref().expect("profiles set");
+        let c_opt = CrProblem::new(profiles.clone()).solve(self.cfg.seed);
+        t.cur_cr = c_opt.clamp(self.cfg.c_low, self.cfg.c_high);
+        self.resolves += 1;
+    }
+
+    /// Probe every candidate CR for `probe_iters` steps under
+    /// checkpoint/restore; returns measured profiles.
+    fn explore(&self, t: &mut Trainer, probed: LinkParams) -> Vec<CandidateProfile> {
+        let ck = t.snapshot();
+        let saved_cr = t.cur_cr;
+        let mut out = Vec::new();
+        let mut overhead = 0.0;
+        for cr in candidate_crs(self.cfg.c_low, self.cfg.c_high, self.cfg.factor) {
+            t.cur_cr = cr;
+            let (mut tc, mut ts, mut ga) = (0.0, 0.0, 0.0);
+            for _ in 0..self.cfg.probe_iters {
+                let m = t.step_once(false, probed);
+                tc += m.t_comp;
+                ts += m.t_sync;
+                ga += m.gain;
+                overhead += m.t_step();
+            }
+            let k = self.cfg.probe_iters as f64;
+            out.push(CandidateProfile {
+                cr,
+                t_comp: tc / k,
+                t_sync: ts / k,
+                gain: (ga / k).clamp(1e-6, 1.0),
+            });
+            t.restore(&ck);
+        }
+        t.cur_cr = saved_cr;
+        t.explore_overhead_s += overhead;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artopk::{ArFlavor, SelectionPolicy};
+    use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig};
+    use crate::coordinator::worker::ComputeModel;
+    use crate::netsim::schedule::NetSchedule;
+    use crate::runtime::host_model::HostMlp;
+
+    fn adaptive_trainer(schedule: NetSchedule, steps: u64) -> Trainer {
+        let cfg = TrainConfig {
+            n_workers: 4,
+            steps,
+            steps_per_epoch: 25,
+            lr: 0.3,
+            momentum: 0.6,
+            strategy: Strategy::Flexible { policy: SelectionPolicy::Star },
+            cr: CrControl::Adaptive(AdaptiveConfig {
+                probe_iters: 3,
+                ..Default::default()
+            }),
+            schedule,
+            compute: ComputeModel::fixed(0.005),
+            eval_every: 0,
+            seed: 5,
+            ..Default::default()
+        };
+        Trainer::new(cfg, Box::new(HostMlp::default_preset(11)))
+    }
+
+    #[test]
+    fn first_step_triggers_exploration_and_sets_cr() {
+        let mut t = adaptive_trainer(NetSchedule::c2(4.0), 5);
+        t.run();
+        assert!(t.cur_cr >= 0.001 && t.cur_cr <= 0.1);
+        assert!(t.explore_overhead_s > 0.0, "exploration must cost time");
+        // Main log only contains the recorded steps.
+        assert_eq!(t.metrics.steps.len(), 5);
+    }
+
+    #[test]
+    fn exploration_does_not_corrupt_training() {
+        // With restore, adaptive training must still learn.
+        let mut t = adaptive_trainer(NetSchedule::c2(8.0), 200);
+        t.run();
+        let acc = t.metrics.final_accuracy().unwrap();
+        assert!(acc > 0.7, "adaptive accuracy {acc}");
+    }
+
+    #[test]
+    fn network_change_triggers_resolve_without_new_exploration() {
+        // C2 at short epochs -> several network phase changes within run.
+        let mut t = adaptive_trainer(NetSchedule::c2(4.0), 100);
+        t.run();
+        let st = {
+            // Reach into the trainer's adaptive state via a fresh controller
+            // run — instead verify observable effect: CR stayed in bounds
+            // and multiple collectives/CRs were used across phases.
+            let crs = t.metrics.crs_used();
+            let distinct: std::collections::BTreeSet<u64> =
+                crs.iter().map(|c| (c * 1e6) as u64).collect();
+            distinct
+        };
+        assert!(st.len() >= 2, "adaptive CR never moved: {st:?}");
+    }
+
+    #[test]
+    fn fixed_strategy_with_static_cr_never_adapts() {
+        let cfg = TrainConfig {
+            n_workers: 4,
+            steps: 30,
+            strategy: Strategy::ArTopkFixed {
+                policy: SelectionPolicy::Star,
+                flavor: ArFlavor::Ring,
+            },
+            cr: CrControl::Static(0.02),
+            compute: ComputeModel::fixed(0.005),
+            seed: 2,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(1)));
+        t.run();
+        assert!(t.metrics.crs_used().iter().all(|&c| (c - 0.02).abs() < 1e-12));
+        assert_eq!(t.explore_overhead_s, 0.0);
+    }
+}

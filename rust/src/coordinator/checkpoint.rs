@@ -1,0 +1,40 @@
+//! In-memory checkpoint/restore (§3-E): the MOO controller snapshots the
+//! full training state before probing candidate CRs and restores it after,
+//! so exploration can't degrade the model. System-memory only — the paper
+//! explicitly avoids disk round-trips here.
+
+/// A full training-state snapshot.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub params: Vec<f32>,
+    pub momentum: Vec<f32>,
+    pub residuals: Vec<Vec<f32>>,
+    pub step: u64,
+    pub clock: f64,
+}
+
+impl Checkpoint {
+    /// Approximate heap footprint (bytes) — exploration keeps exactly one.
+    pub fn size_bytes(&self) -> usize {
+        4 * (self.params.len()
+            + self.momentum.len()
+            + self.residuals.iter().map(|r| r.len()).sum::<usize>())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_accounting() {
+        let c = Checkpoint {
+            params: vec![0.0; 10],
+            momentum: vec![0.0; 10],
+            residuals: vec![vec![0.0; 10]; 4],
+            step: 3,
+            clock: 1.0,
+        };
+        assert_eq!(c.size_bytes(), 4 * (10 + 10 + 40));
+    }
+}

@@ -1,0 +1,211 @@
+//! Per-step metrics: the timing breakdown of Eqn 3 plus everything the
+//! paper's tables/figures are built from (loss, collective used, CR,
+//! broadcasting rank, gain).
+
+use crate::collectives::CollectiveKind;
+use crate::util::stats;
+
+/// One training step's record.
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: u64,
+    pub epoch: f64,
+    pub loss: f64,
+    /// Simulated forward+backward seconds (max over workers).
+    pub t_compute: f64,
+    /// MEASURED compression (+decompression) seconds on the coordinator.
+    pub t_comp: f64,
+    /// Simulated communication seconds.
+    pub t_sync: f64,
+    pub collective: CollectiveKind,
+    pub cr: f64,
+    /// Rank that broadcast its indices (AR-Topk only).
+    pub selected_rank: Option<usize>,
+    pub gain: f64,
+    /// Probed link at this step (ms, Gbps).
+    pub alpha_ms: f64,
+    pub bw_gbps: f64,
+}
+
+impl StepMetrics {
+    /// Total step time (Eqn 3, `t_IO` folded into compute).
+    pub fn t_step(&self) -> f64 {
+        self.t_compute + self.t_comp + self.t_sync
+    }
+}
+
+/// Append-only metrics log with summary/CSV export.
+#[derive(Debug, Default)]
+pub struct MetricsLog {
+    pub steps: Vec<StepMetrics>,
+    /// (epoch, eval loss, eval accuracy) records.
+    pub evals: Vec<(f64, f64, f64)>,
+}
+
+/// Aggregate view over a step range.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub steps: usize,
+    pub mean_step_s: f64,
+    pub mean_compute_s: f64,
+    pub mean_comp_s: f64,
+    pub mean_sync_s: f64,
+    pub mean_gain: f64,
+    pub final_loss: f64,
+}
+
+impl MetricsLog {
+    pub fn record(&mut self, m: StepMetrics) {
+        self.steps.push(m);
+    }
+
+    pub fn record_eval(&mut self, epoch: f64, loss: f64, acc: f64) {
+        self.evals.push((epoch, loss, acc));
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.evals.last().map(|&(_, _, a)| a)
+    }
+
+    /// Best (max) eval accuracy — the "Acc." column of Tables III-V.
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.evals.iter().map(|&(_, _, a)| a).fold(None, |m, a| {
+            Some(m.map_or(a, |b: f64| b.max(a)))
+        })
+    }
+
+    pub fn summary(&self) -> Summary {
+        self.summary_range(0, self.steps.len())
+    }
+
+    pub fn summary_range(&self, from: usize, to: usize) -> Summary {
+        let s = &self.steps[from..to];
+        let col = |f: fn(&StepMetrics) -> f64| -> Vec<f64> { s.iter().map(f).collect() };
+        Summary {
+            steps: s.len(),
+            mean_step_s: stats::mean(&col(StepMetrics::t_step)),
+            mean_compute_s: stats::mean(&col(|m| m.t_compute)),
+            mean_comp_s: stats::mean(&col(|m| m.t_comp)),
+            mean_sync_s: stats::mean(&col(|m| m.t_sync)),
+            mean_gain: stats::mean(&col(|m| m.gain)),
+            final_loss: s.last().map(|m| m.loss).unwrap_or(f64::NAN),
+        }
+    }
+
+    /// Density inputs for the paper's KDE figures.
+    pub fn selected_ranks(&self) -> Vec<f64> {
+        self.steps
+            .iter()
+            .filter_map(|m| m.selected_rank.map(|r| r as f64))
+            .collect()
+    }
+
+    pub fn crs_used(&self) -> Vec<f64> {
+        self.steps.iter().map(|m| m.cr).collect()
+    }
+
+    pub fn collectives_used(&self) -> Vec<CollectiveKind> {
+        self.steps.iter().map(|m| m.collective).collect()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "step,epoch,loss,t_compute,t_comp,t_sync,t_step,collective,cr,selected_rank,gain,alpha_ms,bw_gbps\n",
+        );
+        for m in &self.steps {
+            out.push_str(&format!(
+                "{},{:.4},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.6},{},{:.4},{:.3},{:.3}\n",
+                m.step,
+                m.epoch,
+                m.loss,
+                m.t_compute,
+                m.t_comp,
+                m.t_sync,
+                m.t_step(),
+                m.collective.name(),
+                m.cr,
+                m.selected_rank.map(|r| r.to_string()).unwrap_or_default(),
+                m.gain,
+                m.alpha_ms,
+                m.bw_gbps,
+            ));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &str) -> anyhow::Result<()> {
+        std::fs::write(path, self.to_csv())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(step: u64, sync: f64) -> StepMetrics {
+        StepMetrics {
+            step,
+            epoch: step as f64 / 10.0,
+            loss: 1.0 / (step as f64 + 1.0),
+            t_compute: 0.01,
+            t_comp: 0.002,
+            t_sync: sync,
+            collective: CollectiveKind::ArTopkRing,
+            cr: 0.01,
+            selected_rank: Some((step % 4) as usize),
+            gain: 0.8,
+            alpha_ms: 4.0,
+            bw_gbps: 20.0,
+        }
+    }
+
+    #[test]
+    fn t_step_is_eqn3() {
+        assert!((m(0, 0.05).t_step() - 0.062).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_means() {
+        let mut log = MetricsLog::default();
+        log.record(m(0, 0.05));
+        log.record(m(1, 0.15));
+        let s = log.summary();
+        assert_eq!(s.steps, 2);
+        assert!((s.mean_sync_s - 0.10).abs() < 1e-12);
+        assert!((s.mean_step_s - 0.112).abs() < 1e-12);
+        assert!((s.final_loss - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn accuracy_tracking() {
+        let mut log = MetricsLog::default();
+        assert!(log.final_accuracy().is_none());
+        log.record_eval(1.0, 0.5, 0.7);
+        log.record_eval(2.0, 0.4, 0.9);
+        log.record_eval(3.0, 0.45, 0.85);
+        assert_eq!(log.final_accuracy(), Some(0.85));
+        assert_eq!(log.best_accuracy(), Some(0.9));
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = MetricsLog::default();
+        log.record(m(0, 0.1));
+        let csv = log.to_csv();
+        assert!(csv.starts_with("step,epoch,loss"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("ART-Ring"));
+    }
+
+    #[test]
+    fn density_extracts() {
+        let mut log = MetricsLog::default();
+        for i in 0..8 {
+            log.record(m(i, 0.1));
+        }
+        assert_eq!(log.selected_ranks().len(), 8);
+        assert_eq!(log.crs_used()[0], 0.01);
+        assert_eq!(log.collectives_used()[0], CollectiveKind::ArTopkRing);
+    }
+}

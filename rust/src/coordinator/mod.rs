@@ -1,0 +1,15 @@
+//! L3 coordinator: the synchronous data-parallel training loop, collective
+//! selection (Eqn 5), and the MOO-adaptive compression controller (§3-E).
+
+pub mod adaptive;
+pub mod checkpoint;
+pub mod metrics;
+pub mod policy_switch;
+pub mod selector;
+pub mod trainer;
+pub mod worker;
+
+pub use adaptive::AdaptiveConfig;
+pub use metrics::{MetricsLog, StepMetrics};
+pub use trainer::{Strategy, TrainConfig, Trainer};
+pub use worker::{ComputeModel, GradSource};

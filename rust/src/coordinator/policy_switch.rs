@@ -1,0 +1,169 @@
+//! Automatic STAR/VAR worker-selection switching — the paper's stated
+//! future work (§5): "combine the two approaches where AR-Topk
+//! automatically switches between the two based on the DNN test
+//! performance with each approach."
+//!
+//! Trial/commit controller: run a trial window under STAR, then one under
+//! VAR, score each by the mean per-step loss improvement, commit to the
+//! winner for a longer period, then re-trial. All thresholds are
+//! data-driven (loss deltas), no oracle access.
+
+use crate::artopk::SelectionPolicy;
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Phase {
+    TrialStar,
+    TrialVar,
+    Committed(SelectionPolicy),
+}
+
+/// Trial/commit policy switcher.
+#[derive(Debug, Clone)]
+pub struct PolicySwitcher {
+    phase: Phase,
+    /// Steps per trial window.
+    pub trial_window: u64,
+    /// Steps to stay committed before re-trialling.
+    pub commit_period: u64,
+    steps_in_phase: u64,
+    first_loss: Option<f64>,
+    last_loss: f64,
+    star_score: f64,
+    var_score: f64,
+    /// Number of completed trial->commit cycles (observability).
+    pub cycles: u64,
+}
+
+impl PolicySwitcher {
+    pub fn new(trial_window: u64, commit_period: u64) -> Self {
+        assert!(trial_window >= 2 && commit_period >= trial_window);
+        PolicySwitcher {
+            phase: Phase::TrialStar,
+            trial_window,
+            commit_period,
+            steps_in_phase: 0,
+            first_loss: None,
+            last_loss: f64::NAN,
+            star_score: 0.0,
+            var_score: 0.0,
+            cycles: 0,
+        }
+    }
+
+    /// The policy to use for the upcoming step.
+    pub fn current(&self) -> SelectionPolicy {
+        match self.phase {
+            Phase::TrialStar => SelectionPolicy::Star,
+            Phase::TrialVar => SelectionPolicy::Var,
+            Phase::Committed(p) => p,
+        }
+    }
+
+    /// Committed policy if out of trial (for logs/tests).
+    pub fn committed(&self) -> Option<SelectionPolicy> {
+        match self.phase {
+            Phase::Committed(p) => Some(p),
+            _ => None,
+        }
+    }
+
+    /// Record the loss observed on a completed step; advances phases.
+    pub fn observe(&mut self, loss: f64) {
+        if self.first_loss.is_none() {
+            self.first_loss = Some(loss);
+        }
+        self.last_loss = loss;
+        self.steps_in_phase += 1;
+        match self.phase {
+            Phase::TrialStar if self.steps_in_phase >= self.trial_window => {
+                self.star_score = self.window_improvement();
+                self.enter(Phase::TrialVar);
+            }
+            Phase::TrialVar if self.steps_in_phase >= self.trial_window => {
+                self.var_score = self.window_improvement();
+                // Higher improvement (loss drop per step) wins; ties -> STAR
+                // (cheaper: no variance allgather).
+                let winner = if self.var_score > self.star_score {
+                    SelectionPolicy::Var
+                } else {
+                    SelectionPolicy::Star
+                };
+                self.cycles += 1;
+                self.enter(Phase::Committed(winner));
+            }
+            Phase::Committed(_) if self.steps_in_phase >= self.commit_period => {
+                self.enter(Phase::TrialStar);
+            }
+            _ => {}
+        }
+    }
+
+    fn window_improvement(&self) -> f64 {
+        let first = self.first_loss.unwrap_or(self.last_loss);
+        (first - self.last_loss) / self.steps_in_phase.max(1) as f64
+    }
+
+    fn enter(&mut self, phase: Phase) {
+        self.phase = phase;
+        self.steps_in_phase = 0;
+        self.first_loss = None;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trial_then_commit_cycle() {
+        let mut s = PolicySwitcher::new(5, 20);
+        assert_eq!(s.current(), SelectionPolicy::Star);
+        // STAR trial: loss falls fast (improvement 0.1/step).
+        for i in 0..5 {
+            s.observe(1.0 - 0.1 * i as f64);
+        }
+        assert_eq!(s.current(), SelectionPolicy::Var);
+        // VAR trial: loss falls slowly.
+        for i in 0..5 {
+            s.observe(0.6 - 0.01 * i as f64);
+        }
+        assert_eq!(s.committed(), Some(SelectionPolicy::Star));
+        assert_eq!(s.cycles, 1);
+        // Committed for 20 steps, then re-trials.
+        for _ in 0..20 {
+            s.observe(0.5);
+        }
+        assert_eq!(s.current(), SelectionPolicy::Star);
+        assert!(s.committed().is_none());
+    }
+
+    #[test]
+    fn var_wins_when_it_improves_more() {
+        let mut s = PolicySwitcher::new(4, 8);
+        for _ in 0..4 {
+            s.observe(1.0); // STAR: flat
+        }
+        for i in 0..4 {
+            s.observe(1.0 - 0.2 * i as f64); // VAR: improving
+        }
+        assert_eq!(s.committed(), Some(SelectionPolicy::Var));
+    }
+
+    #[test]
+    fn ties_prefer_star() {
+        let mut s = PolicySwitcher::new(3, 6);
+        for _ in 0..3 {
+            s.observe(1.0);
+        }
+        for _ in 0..3 {
+            s.observe(1.0);
+        }
+        assert_eq!(s.committed(), Some(SelectionPolicy::Star));
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_windows_rejected() {
+        PolicySwitcher::new(1, 0);
+    }
+}

@@ -1,0 +1,127 @@
+//! Flexible collective selection (§3-D): given the probed link, model
+//! size, cluster size and current CR, pick the cheapest of
+//! {AG, ART-Ring, ART-Tree} — the paper's Eqn 5 decision procedure.
+//!
+//! Two equivalent deciders are provided: the threshold form (Eqn 5a/5b/5c,
+//! exactly as printed) and the argmin of the closed-form costs. They agree
+//! everywhere (property-tested in `cost_model`); the trainer uses
+//! [`choose`] and the tests cross-check [`choose_eqn5`].
+
+use crate::artopk::ArFlavor;
+use crate::collectives::CollectiveKind;
+use crate::netsim::cost_model::{
+    self, prefer_ring_over_ag, prefer_ring_over_tree, prefer_tree_over_ag,
+    CompressedCollective, LinkParams,
+};
+
+/// Decision record (also logged so Fig 8 can be regenerated).
+#[derive(Debug, Clone, Copy)]
+pub struct Choice {
+    pub kind: CollectiveKind,
+    /// Predicted communication seconds at the probed link.
+    pub predicted_s: f64,
+}
+
+/// Cheapest compressed collective by direct cost evaluation.
+pub fn choose(link: LinkParams, m_bytes: f64, n: usize, cr: f64) -> Choice {
+    let best = cost_model::optimal_collective(link, m_bytes, n, cr);
+    let kind = match best {
+        CompressedCollective::AllgatherTopk => CollectiveKind::AllgatherTopk,
+        CompressedCollective::ArTopkRing => CollectiveKind::ArTopkRing,
+        CompressedCollective::ArTopkTree => CollectiveKind::ArTopkTree,
+    };
+    Choice { kind, predicted_s: best.cost(link, m_bytes, n, cr) }
+}
+
+/// The paper's literal decision procedure: Eqn 5a picks the AR flavour,
+/// then Eqn 5b/5c compares that flavour against AG.
+pub fn choose_eqn5(link: LinkParams, m_bytes: f64, n: usize, cr: f64) -> CollectiveKind {
+    if prefer_ring_over_tree(link, m_bytes, n, cr) {
+        if prefer_ring_over_ag(link, m_bytes, n, cr) {
+            CollectiveKind::ArTopkRing
+        } else {
+            CollectiveKind::AllgatherTopk
+        }
+    } else if prefer_tree_over_ag(link, m_bytes, n, cr) {
+        CollectiveKind::ArTopkTree
+    } else {
+        CollectiveKind::AllgatherTopk
+    }
+}
+
+/// Dense path: ring vs tree allreduce for DenseSGD.
+pub fn choose_dense(link: LinkParams, m_bytes: f64, n: usize) -> CollectiveKind {
+    if cost_model::ring_allreduce(link, m_bytes, n)
+        <= cost_model::tree_allreduce(link, m_bytes, n)
+    {
+        CollectiveKind::RingAllreduce
+    } else {
+        CollectiveKind::TreeAllreduce
+    }
+}
+
+/// Map the chosen collective to the AR flavour AR-Topk should run with
+/// (None = the AG path).
+pub fn ar_flavor(kind: CollectiveKind) -> Option<ArFlavor> {
+    match kind {
+        CollectiveKind::ArTopkRing => Some(ArFlavor::Ring),
+        CollectiveKind::ArTopkTree => Some(ArFlavor::Tree),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    fn l(ms: f64, gbps: f64) -> LinkParams {
+        LinkParams::from_ms_gbps(ms, gbps)
+    }
+
+    #[test]
+    fn eqn5_and_argmin_agree() {
+        check("selector: eqn5 == argmin", 400, |g| {
+            let n = *g.choose(&[2usize, 4, 8, 16]);
+            let link = l(g.f64_in(0.1, 100.0), g.f64_in(0.3, 50.0));
+            let m = g.f64_in(1e6, 4e9);
+            let cr = g.f64_in(1e-4, 0.3);
+            let a = choose(link, m, n, cr).kind;
+            let b = choose_eqn5(link, m, n, cr);
+            ensure(a == b, format!("argmin {a:?} vs eqn5 {b:?} (n={n}, m={m}, cr={cr})"))
+        });
+    }
+
+    #[test]
+    fn paper_regimes() {
+        let resnet18 = 4.0 * 11.7e6;
+        let vit = 4.0 * 86.6e6;
+        // Table VI anchors.
+        assert_eq!(choose(l(1.0, 10.0), resnet18, 8, 0.001).kind, CollectiveKind::AllgatherTopk);
+        assert_eq!(choose(l(1.0, 10.0), resnet18, 8, 0.1).kind, CollectiveKind::ArTopkRing);
+        assert_eq!(choose(l(1.0, 1.0), vit, 8, 0.01).kind, CollectiveKind::ArTopkRing);
+        // Dense: high latency favours tree.
+        assert_eq!(choose_dense(l(100.0, 10.0), 4e6, 8), CollectiveKind::TreeAllreduce);
+        assert_eq!(choose_dense(l(0.1, 10.0), 4e8, 8), CollectiveKind::RingAllreduce);
+    }
+
+    #[test]
+    fn predicted_cost_is_positive_and_minimal() {
+        let c = choose(l(4.0, 20.0), 4e8, 8, 0.01);
+        assert!(c.predicted_s > 0.0);
+        for k in [
+            CompressedCollective::AllgatherTopk,
+            CompressedCollective::ArTopkRing,
+            CompressedCollective::ArTopkTree,
+        ] {
+            assert!(c.predicted_s <= k.cost(l(4.0, 20.0), 4e8, 8, 0.01) + 1e-15);
+        }
+    }
+
+    #[test]
+    fn flavor_mapping() {
+        assert_eq!(ar_flavor(CollectiveKind::ArTopkRing), Some(crate::artopk::ArFlavor::Ring));
+        assert_eq!(ar_flavor(CollectiveKind::ArTopkTree), Some(crate::artopk::ArFlavor::Tree));
+        assert_eq!(ar_flavor(CollectiveKind::AllgatherTopk), None);
+    }
+}

@@ -1,0 +1,648 @@
+//! The synchronous data-parallel training loop (Eqn 1/3) with flexible
+//! compression-communication (the paper's full system).
+//!
+//! Per step: every worker computes a gradient (PJRT artifact or host
+//! model), the chosen strategy compresses + exchanges it (real data
+//! movement, simulated α-β time), and the shared parameters take a
+//! momentum-SGD step. The [`super::adaptive`] controller may retune the CR
+//! (MOO/NSGA-II) and the collective (Eqn 5) as the probed network drifts.
+
+use crate::artopk::{ArFlavor, ArTopk, SelectionPolicy};
+use crate::collectives::{
+    allgather_sparse, ps_exchange, ring_allreduce, tree_allreduce, CollectiveKind, CommReport,
+};
+use crate::compress::{gain::gain, Compressor, CompressorKind, EfState, GainTracker};
+use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveState};
+use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::metrics::{MetricsLog, StepMetrics};
+use crate::coordinator::selector;
+use crate::coordinator::worker::{ComputeModel, GradSource};
+use crate::netsim::probe::Probe;
+use crate::netsim::schedule::NetSchedule;
+use crate::netsim::VirtualClock;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Dense allreduce flavour for the DenseSGD baseline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DenseFlavor {
+    Ring,
+    Tree,
+    /// Parameter-server star (scale-out strawman).
+    Ps,
+    /// Pick ring/tree per step from the probed link.
+    Auto,
+}
+
+/// Compression-communication strategy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Strategy {
+    /// No compression; dense allreduce (the paper's DenseSGD baseline).
+    DenseSgd { flavor: DenseFlavor },
+    /// Compress with `kind`, synchronize via Allgather (LW/MS-Topk path).
+    AgCompress { kind: CompressorKind },
+    /// AR-Topk with a fixed AR flavour (§3-A/B).
+    ArTopkFixed { policy: SelectionPolicy, flavor: ArFlavor },
+    /// Full flexible strategy: pick AG vs ART-Ring vs ART-Tree per step by
+    /// Eqn 5 on the probed link (§3-D).
+    Flexible { policy: SelectionPolicy },
+    /// AR-Topk that AUTO-switches STAR<->VAR from observed loss improvement
+    /// (the paper's §5 future work), with the Eqn 5 ring/tree choice.
+    ArTopkAuto { flavor: ArFlavor },
+}
+
+impl Strategy {
+    pub fn is_compressed(&self) -> bool {
+        !matches!(self, Strategy::DenseSgd { .. })
+    }
+}
+
+/// Compression-ratio control.
+#[derive(Debug, Clone)]
+pub enum CrControl {
+    Static(f64),
+    /// MOO-adaptive (§3-E): candidate exploration + NSGA-II knee point.
+    Adaptive(AdaptiveConfig),
+}
+
+/// Full training configuration.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub n_workers: usize,
+    pub steps: u64,
+    pub steps_per_epoch: u64,
+    pub lr: f32,
+    pub momentum: f32,
+    pub weight_decay: f32,
+    /// `(step, factor)` learning-rate decay events.
+    pub lr_decay: Vec<(u64, f32)>,
+    pub strategy: Strategy,
+    pub cr: CrControl,
+    pub schedule: NetSchedule,
+    pub compute: ComputeModel,
+    /// Probe observation noise fraction.
+    pub probe_noise: f64,
+    /// Message-size scale for SIMULATED communication/compression time:
+    /// proxy-model experiments set this to `paper_params / proxy_params`
+    /// so step-time tables carry the paper's message magnitudes while the
+    /// numerics stay real (DESIGN.md §3). 1.0 = honest proxy size.
+    pub msg_scale: f64,
+    /// Multiplier on MEASURED compression time. Proxy experiments use
+    /// `msg_scale / GPU_COMPRESS_SPEEDUP`: compression is O(G) so it
+    /// extrapolates linearly in size, divided by the accelerator-vs-CPU
+    /// throughput ratio (experiments::GPU_COMPRESS_SPEEDUP). 1.0 = honest
+    /// measured time on this host.
+    pub comp_scale: f64,
+    /// Evaluate every N steps (0 = only at the end).
+    pub eval_every: u64,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            n_workers: 8,
+            steps: 200,
+            steps_per_epoch: 50,
+            lr: 0.1,
+            momentum: 0.9,
+            weight_decay: 0.0,
+            lr_decay: Vec::new(),
+            strategy: Strategy::DenseSgd { flavor: DenseFlavor::Ring },
+            cr: CrControl::Static(0.01),
+            schedule: NetSchedule::static_link(
+                crate::netsim::cost_model::LinkParams::from_ms_gbps(4.0, 20.0),
+            ),
+            compute: ComputeModel::fixed(0.02),
+            probe_noise: 0.02,
+            msg_scale: 1.0,
+            comp_scale: 1.0,
+            eval_every: 0,
+            seed: 0,
+        }
+    }
+}
+
+/// The coordinator-side trainer.
+pub struct Trainer {
+    pub cfg: TrainConfig,
+    source: Box<dyn GradSource>,
+    pub params: Vec<f32>,
+    momentum_buf: Vec<f32>,
+    ef: Vec<EfState>,
+    compressor: Box<dyn Compressor>,
+    artopk_op: ArTopk,
+    probe: Probe,
+    pub clock: VirtualClock,
+    pub metrics: MetricsLog,
+    rng: Rng,
+    step: u64,
+    pub cur_cr: f64,
+    pub gain_tracker: GainTracker,
+    adaptive: Option<AdaptiveState>,
+    lr_cur: f32,
+    /// Simulated seconds spent in candidate exploration (kept out of the
+    /// restored clock, reported separately).
+    pub explore_overhead_s: f64,
+    /// STAR/VAR auto-switcher (ArTopkAuto strategy only).
+    pub policy_switcher: Option<crate::coordinator::policy_switch::PolicySwitcher>,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig, mut source: Box<dyn GradSource>) -> Self {
+        let params = source.init_params();
+        let dim = source.dim();
+        assert_eq!(params.len(), dim);
+        let n = cfg.n_workers;
+        let (cur_cr, adaptive, gain_threshold) = match &cfg.cr {
+            CrControl::Static(c) => (*c, None, 0.1),
+            CrControl::Adaptive(a) => {
+                (a.c_high, Some(AdaptiveState::new(a.clone())), a.gain_threshold)
+            }
+        };
+        let compressor = match cfg.strategy {
+            Strategy::AgCompress { kind } => kind.build(cfg.seed),
+            _ => CompressorKind::TopK.build(cfg.seed),
+        };
+        let (policy, flavor) = match cfg.strategy {
+            Strategy::ArTopkFixed { policy, flavor } => (policy, flavor),
+            Strategy::Flexible { policy } => (policy, ArFlavor::Ring),
+            Strategy::ArTopkAuto { flavor } => (SelectionPolicy::Star, flavor),
+            _ => (SelectionPolicy::Star, ArFlavor::Ring),
+        };
+        let probe = Probe::new(cfg.schedule.clone(), cfg.probe_noise, cfg.seed ^ 0xBEEF);
+        let policy_switcher = match cfg.strategy {
+            Strategy::ArTopkAuto { .. } => Some(
+                crate::coordinator::policy_switch::PolicySwitcher::new(10, 50),
+            ),
+            _ => None,
+        };
+        Trainer {
+            policy_switcher,
+            momentum_buf: vec![0.0; dim],
+            ef: (0..n).map(|_| EfState::new(dim)).collect(),
+            compressor,
+            artopk_op: ArTopk::new(policy, flavor),
+            probe,
+            clock: VirtualClock::new(),
+            metrics: MetricsLog::default(),
+            rng: Rng::new(cfg.seed ^ 0x7EA1),
+            step: 0,
+            cur_cr,
+            gain_tracker: GainTracker::new(gain_threshold),
+            adaptive,
+            lr_cur: cfg.lr,
+            explore_overhead_s: 0.0,
+            params,
+            cfg,
+            source,
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.step
+    }
+
+    pub fn epoch(&self) -> f64 {
+        self.step as f64 / self.cfg.steps_per_epoch as f64
+    }
+
+    pub fn source_name(&self) -> String {
+        self.source.name()
+    }
+
+    /// Effective message bytes (selector + cost predictions): the flat
+    /// gradient size scaled by `msg_scale`.
+    pub fn model_bytes(&self) -> f64 {
+        4.0 * self.source.dim() as f64 * self.cfg.msg_scale
+    }
+
+    /// Scale a link so β-terms charge `msg_scale`-times the actual bytes
+    /// (equivalent to a msg_scale-times bigger message; α unchanged).
+    fn scaled(&self, l: crate::netsim::cost_model::LinkParams) -> crate::netsim::cost_model::LinkParams {
+        crate::netsim::cost_model::LinkParams { alpha: l.alpha, beta: l.beta * self.cfg.msg_scale }
+    }
+
+    /// Run the configured number of steps (with eval + adaptation hooks).
+    pub fn run(&mut self) {
+        while self.step < self.cfg.steps {
+            self.run_one_scheduled_step();
+        }
+        // Final eval.
+        let (loss, acc) = self.source.eval(&self.params);
+        self.metrics.record_eval(self.epoch(), loss, acc);
+    }
+
+    /// One public step incl. probe-driven adaptation + periodic eval.
+    pub fn run_one_scheduled_step(&mut self) {
+        let epoch = self.epoch();
+        let (obs, net_changed) = self.probe.measure_and_detect(epoch);
+        let m = self.step_once(true, obs.link());
+        let gain_fired = self.gain_tracker.record(m.gain);
+        if self.adaptive.is_some() && self.cfg.strategy.is_compressed() {
+            self.maybe_adapt(net_changed, gain_fired, obs.link());
+        }
+        if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0 {
+            let (loss, acc) = self.source.eval(&self.params);
+            self.metrics.record_eval(self.epoch(), loss, acc);
+        }
+    }
+
+    /// Execute exactly one training step at the current CR/strategy.
+    /// `record` controls whether it lands in the main metrics log.
+    /// Returns the step's metrics either way.
+    pub fn step_once(
+        &mut self,
+        record: bool,
+        probed: crate::netsim::cost_model::LinkParams,
+    ) -> StepMetrics {
+        let n = self.cfg.n_workers;
+        let epoch = self.epoch();
+        let true_link = self.scaled(self.cfg.schedule.at(epoch));
+        let t_compute = self.cfg.compute.step_time(n, &mut self.rng);
+
+        // Per-worker gradients (real computation — PJRT or host backprop).
+        let mut losses = Vec::with_capacity(n);
+        let mut grads = Vec::with_capacity(n);
+        for w in 0..n {
+            let (loss, g) = self.source.grad(&self.params, w, n, self.step);
+            losses.push(loss);
+            grads.push(g);
+        }
+        let loss = losses.iter().sum::<f64>() / n as f64;
+
+        // Exchange. Measured compression time is rescaled by comp_scale
+        // (see TrainConfig::comp_scale); honest at comp_scale = 1.
+        let (update, comm, t_comp, collective, selected, step_gain) =
+            self.exchange(&grads, true_link, probed);
+        let t_comp = t_comp * self.cfg.comp_scale;
+
+        // Momentum-SGD update (identical params on every worker).
+        self.apply_lr_decay();
+        let lr = self.lr_cur;
+        let mu = self.cfg.momentum;
+        let wd = self.cfg.weight_decay;
+        for i in 0..self.params.len() {
+            let g = update[i] + wd * self.params[i];
+            self.momentum_buf[i] = mu * self.momentum_buf[i] + g;
+            self.params[i] -= lr * self.momentum_buf[i];
+        }
+
+        let m = StepMetrics {
+            step: self.step,
+            epoch,
+            loss,
+            t_compute,
+            t_comp,
+            t_sync: comm.seconds,
+            collective,
+            cr: if self.cfg.strategy.is_compressed() { self.cur_cr } else { 1.0 },
+            selected_rank: selected,
+            gain: step_gain,
+            alpha_ms: probed.alpha_ms(),
+            bw_gbps: probed.bw_gbps(),
+        };
+        self.clock.advance(m.t_step());
+        if let Some(sw) = &mut self.policy_switcher {
+            sw.observe(m.loss);
+        }
+        if record {
+            self.metrics.record(m.clone());
+        }
+        self.step += 1;
+        m
+    }
+
+    /// Compress + communicate per the strategy. Returns
+    /// (mean update, comm report, measured t_comp, collective, selected rank, gain).
+    fn exchange(
+        &mut self,
+        grads: &[Vec<f32>],
+        true_link: crate::netsim::cost_model::LinkParams,
+        probed: crate::netsim::cost_model::LinkParams,
+    ) -> (Vec<f32>, CommReport, f64, CollectiveKind, Option<usize>, f64) {
+        let n = self.cfg.n_workers;
+        
+        match self.cfg.strategy {
+            Strategy::DenseSgd { flavor } => {
+                let mut bufs = grads.to_vec();
+                let (report, kind) = match flavor {
+                    DenseFlavor::Ring => {
+                        (ring_allreduce(&mut bufs, true_link), CollectiveKind::RingAllreduce)
+                    }
+                    DenseFlavor::Tree => {
+                        (tree_allreduce(&mut bufs, true_link), CollectiveKind::TreeAllreduce)
+                    }
+                    DenseFlavor::Ps => {
+                        (ps_exchange(&mut bufs, 0, true_link), CollectiveKind::PsStar)
+                    }
+                    DenseFlavor::Auto => {
+                        match selector::choose_dense(probed, self.model_bytes(), n) {
+                            CollectiveKind::RingAllreduce => (
+                                ring_allreduce(&mut bufs, true_link),
+                                CollectiveKind::RingAllreduce,
+                            ),
+                            _ => (
+                                tree_allreduce(&mut bufs, true_link),
+                                CollectiveKind::TreeAllreduce,
+                            ),
+                        }
+                    }
+                };
+                let mut update = bufs.into_iter().next().unwrap();
+                crate::tensor::scale(&mut update, 1.0 / n as f32);
+                (update, report, 0.0, kind, None, 1.0)
+            }
+
+            Strategy::AgCompress { .. } => {
+                self.ag_exchange(grads, true_link, CollectiveKind::AllgatherTopk)
+            }
+
+            Strategy::ArTopkFixed { flavor, .. } => {
+                self.artopk_op.flavor = flavor;
+                self.art_exchange(grads, true_link)
+            }
+
+            Strategy::Flexible { .. } => {
+                let choice = selector::choose(probed, self.model_bytes(), n, self.cur_cr);
+                match selector::ar_flavor(choice.kind) {
+                    Some(f) => {
+                        self.artopk_op.flavor = f;
+                        self.art_exchange(grads, true_link)
+                    }
+                    None => self.ag_exchange(grads, true_link, CollectiveKind::AllgatherTopk),
+                }
+            }
+
+            Strategy::ArTopkAuto { flavor } => {
+                let policy = self
+                    .policy_switcher
+                    .as_ref()
+                    .expect("switcher set for ArTopkAuto")
+                    .current();
+                self.artopk_op.policy = policy;
+                self.artopk_op.flavor = flavor;
+                self.art_exchange(grads, true_link)
+            }
+        }
+    }
+
+    /// AG path: compress each worker's error-fed gradient, allgather.
+    fn ag_exchange(
+        &mut self,
+        grads: &[Vec<f32>],
+        true_link: crate::netsim::cost_model::LinkParams,
+        kind: CollectiveKind,
+    ) -> (Vec<f32>, CommReport, f64, CollectiveKind, Option<usize>, f64) {
+        let n = self.cfg.n_workers;
+        let dim = self.source.dim();
+        let layout = self.source.layout().clone();
+        let mut parts = Vec::with_capacity(n);
+        let mut t_comp_max = 0.0f64;
+        let mut gain_acc = 0.0f64;
+        for w in 0..n {
+            let g_e = self.ef[w].error_fed(&grads[w]);
+            let t0 = Instant::now();
+            let sparse = self.compressor.compress(&g_e, self.cur_cr, &layout);
+            t_comp_max = t_comp_max.max(t0.elapsed().as_secs_f64());
+            let e_sq = crate::tensor::sq_norm(&g_e);
+            gain_acc += gain(sparse.sq_norm(), e_sq);
+            self.ef[w].update(g_e, &sparse);
+            parts.push(sparse);
+        }
+        let (mut dense, report) = allgather_sparse(&parts, dim, true_link);
+        crate::tensor::scale(&mut dense, 1.0 / n as f32);
+        (dense, report, t_comp_max, kind, None, gain_acc / n as f64)
+    }
+
+    /// AR-Topk path (Alg 1).
+    fn art_exchange(
+        &mut self,
+        grads: &[Vec<f32>],
+        true_link: crate::netsim::cost_model::LinkParams,
+    ) -> (Vec<f32>, CommReport, f64, CollectiveKind, Option<usize>, f64) {
+        let n = self.cfg.n_workers;
+        let kind = match self.artopk_op.flavor {
+            ArFlavor::Ring => CollectiveKind::ArTopkRing,
+            ArFlavor::Tree => CollectiveKind::ArTopkTree,
+        };
+        let res = self
+            .artopk_op
+            .exchange(grads, &mut self.ef, self.cur_cr, self.step, true_link);
+        // Critical-path compression time (parallel workers): see §Perf.
+        let t_comp = res.comp_wall_s;
+        let mut update = res.update.to_dense();
+        crate::tensor::scale(&mut update, 1.0 / n as f32);
+        let g = res
+            .gain_terms
+            .iter()
+            .map(|&(c, e)| gain(c, e))
+            .sum::<f64>()
+            / n as f64;
+        (update, res.comm, t_comp, kind, Some(res.selected), g)
+    }
+
+    fn apply_lr_decay(&mut self) {
+        let mut lr = self.cfg.lr;
+        for &(at, factor) in &self.cfg.lr_decay {
+            if self.step >= at {
+                lr *= factor;
+            }
+        }
+        self.lr_cur = lr;
+    }
+
+    // -- checkpoint/restore (used by the MOO exploration) ------------------
+
+    pub fn snapshot(&self) -> Checkpoint {
+        Checkpoint {
+            params: self.params.clone(),
+            momentum: self.momentum_buf.clone(),
+            residuals: self.ef.iter().map(|e| e.residual.clone()).collect(),
+            step: self.step,
+            clock: self.clock.now(),
+        }
+    }
+
+    pub fn restore(&mut self, ck: &Checkpoint) {
+        self.params = ck.params.clone();
+        self.momentum_buf = ck.momentum.clone();
+        for (e, r) in self.ef.iter_mut().zip(&ck.residuals) {
+            e.residual = r.clone();
+        }
+        self.step = ck.step;
+        self.clock = VirtualClock::new();
+        self.clock.advance(ck.clock);
+    }
+
+    /// Delegate to the adaptive controller (split out to keep borrows
+    /// simple — the controller re-enters `step_once` during exploration).
+    fn maybe_adapt(
+        &mut self,
+        net_changed: bool,
+        gain_fired: bool,
+        probed: crate::netsim::cost_model::LinkParams,
+    ) {
+        let mut state = self.adaptive.take().expect("adaptive state");
+        state.maybe_adapt(self, net_changed, gain_fired, probed);
+        self.adaptive = Some(state);
+    }
+
+    pub fn eval_now(&mut self) -> (f64, f64) {
+        self.source.eval(&self.params)
+    }
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model::LinkParams;
+    use crate::runtime::host_model::HostMlp;
+
+    fn quick_cfg(strategy: Strategy, cr: f64, steps: u64) -> TrainConfig {
+        TrainConfig {
+            n_workers: 4,
+            steps,
+            steps_per_epoch: 20,
+            lr: 0.3,
+            momentum: 0.6,
+            weight_decay: 0.0,
+            strategy,
+            cr: CrControl::Static(cr),
+            compute: ComputeModel::fixed(0.01),
+            eval_every: 0,
+            seed: 42,
+            ..Default::default()
+        }
+    }
+
+    fn train(strategy: Strategy, cr: f64, steps: u64) -> Trainer {
+        let cfg = quick_cfg(strategy, cr, steps);
+        let src = Box::new(HostMlp::default_preset(7));
+        let mut t = Trainer::new(cfg, src);
+        t.run();
+        t
+    }
+
+    #[test]
+    fn dense_sgd_learns() {
+        let t = train(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, 120);
+        let acc = t.metrics.final_accuracy().unwrap();
+        assert!(acc > 0.8, "dense accuracy {acc}");
+        let s = t.metrics.summary();
+        assert!(s.final_loss < 0.5, "loss {}", s.final_loss);
+        assert_eq!(s.mean_comp_s, 0.0);
+    }
+
+    #[test]
+    fn ag_topk_learns_with_error_feedback() {
+        let t = train(Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05, 250);
+        let acc = t.metrics.final_accuracy().unwrap();
+        assert!(acc > 0.75, "AG topk accuracy {acc}");
+        assert!(t.metrics.summary().mean_gain < 1.0);
+    }
+
+    #[test]
+    fn artopk_star_learns() {
+        let t = train(
+            Strategy::ArTopkFixed {
+                policy: SelectionPolicy::Star,
+                flavor: ArFlavor::Ring,
+            },
+            0.05,
+            250,
+        );
+        let acc = t.metrics.final_accuracy().unwrap();
+        assert!(acc > 0.75, "STAR accuracy {acc}");
+        // Round-robin rank density (Fig 4 shape).
+        let ranks = t.metrics.selected_ranks();
+        assert_eq!(ranks.len(), 250);
+        for r in 0..4 {
+            let count = ranks.iter().filter(|&&x| x as usize == r).count();
+            assert!((count as i64 - 62).abs() <= 2, "rank {r} count {count}");
+        }
+    }
+
+    #[test]
+    fn compressed_steps_are_faster_than_dense_on_slow_net() {
+        let slow = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 0.05));
+        let mk = |s: Strategy, cr| {
+            let mut cfg = quick_cfg(s, cr, 20);
+            cfg.schedule = slow.clone();
+            let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(1)));
+            t.run();
+            t.metrics.summary().mean_step_s
+        };
+        let dense = mk(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0);
+        let comp = mk(
+            Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+            0.01,
+        );
+        assert!(comp < dense, "compressed {comp} vs dense {dense}");
+    }
+
+    #[test]
+    fn flexible_switches_collectives_when_link_crosses_eqn5_boundary() {
+        // 2M params at CR 0.1, N=4: Eqn 5b threshold α/β ≈ Mc·0.417 ≈ 3.3e5.
+        // Phase A (0.1 ms, 1 Gbps): α/β = 1.25e4  -> ART-Ring.
+        // Phase B (100 ms, 25 Gbps): α/β = 3.1e8  -> AG.
+        use crate::netsim::schedule::Phase;
+        let sched = NetSchedule::piecewise(
+            "boundary",
+            vec![
+                Phase { from_epoch: 0.0, link: LinkParams::from_ms_gbps(0.1, 1.0) },
+                Phase { from_epoch: 2.0, link: LinkParams::from_ms_gbps(100.0, 25.0) },
+            ],
+        );
+        let mut cfg = quick_cfg(Strategy::Flexible { policy: SelectionPolicy::Star }, 0.1, 80);
+        cfg.schedule = sched;
+        cfg.steps_per_epoch = 20;
+        let src = Box::new(crate::runtime::host_model::SyntheticGrad::new(2_000_000, 3));
+        let mut t = Trainer::new(cfg, src);
+        t.run();
+        let used: Vec<&str> = t.metrics.collectives_used().iter().map(|c| c.name()).collect();
+        assert!(used[..30].iter().all(|&c| c == "ART-Ring"), "phase A: {:?}", &used[..5]);
+        assert!(used[50..].iter().all(|&c| c == "AG"), "phase B: {:?}", &used[75..]);
+    }
+
+    #[test]
+    fn lr_decay_applies() {
+        let mut cfg = quick_cfg(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, 10);
+        cfg.lr = 1.0;
+        cfg.lr_decay = vec![(5, 0.1)];
+        let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(2)));
+        t.run();
+        assert!((t.lr_cur - 0.1).abs() < 1e-6);
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip() {
+        let cfg = quick_cfg(
+            Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+            0.05,
+            0,
+        );
+        let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(3)));
+        let link = LinkParams::from_ms_gbps(4.0, 20.0);
+        for _ in 0..5 {
+            t.step_once(false, link);
+        }
+        let ck = t.snapshot();
+        let params_at_ck = t.params.clone();
+        for _ in 0..5 {
+            t.step_once(false, link);
+        }
+        assert_ne!(t.params, params_at_ck);
+        t.restore(&ck);
+        assert_eq!(t.params, params_at_ck);
+        assert_eq!(t.step_count(), 5);
+    }
+
+    #[test]
+    fn clock_accumulates_step_times() {
+        let t = train(Strategy::DenseSgd { flavor: DenseFlavor::Tree }, 1.0, 10);
+        let total: f64 = t.metrics.steps.iter().map(|m| m.t_step()).sum();
+        assert!((t.clock.now() - total).abs() < 1e-9);
+    }
+}

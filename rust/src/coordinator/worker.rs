@@ -1,0 +1,124 @@
+//! Worker abstractions: the gradient source interface every model backend
+//! implements, and the per-worker compute-time model.
+
+use crate::tensor::Layout;
+use crate::util::rng::Rng;
+
+/// A model backend that produces per-worker gradients.
+///
+/// Implementations: [`crate::runtime::host_model::HostMlp`] (pure-rust
+/// backprop, fast simulator-only experiments),
+/// [`crate::runtime::host_model::SyntheticGrad`] (cost-only experiments at
+/// paper-scale tensor sizes), and [`crate::runtime::pjrt_model::PjrtModel`]
+/// (the real L2 artifact executed via PJRT — the production path).
+pub trait GradSource {
+    /// Flat parameter dimension.
+    fn dim(&self) -> usize;
+
+    /// Layer layout (for LWTopk and bucketing).
+    fn layout(&self) -> &Layout;
+
+    /// Initial parameter vector.
+    fn init_params(&mut self) -> Vec<f32>;
+
+    /// Compute (loss, gradient) for `worker`'s shard at `step`.
+    fn grad(
+        &mut self,
+        params: &[f32],
+        worker: usize,
+        n_workers: usize,
+        step: u64,
+    ) -> (f64, Vec<f32>);
+
+    /// Held-out evaluation: (loss, top-1 accuracy in [0,1]).
+    fn eval(&mut self, params: &[f32]) -> (f64, f64);
+
+    /// Short descriptor for logs.
+    fn name(&self) -> String;
+}
+
+/// Per-step compute-time model for the simulated cluster.
+///
+/// The paper's `t_compute` is a property of the model/GPU (Fig 1a); the
+/// simulated workers draw `base · (1 + jitter)` with an optional straggler
+/// tail — the synchronous step waits for the max.
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    /// Mean per-step forward+backward seconds.
+    pub base: f64,
+    /// Uniform jitter fraction (±).
+    pub jitter: f64,
+    /// Probability a worker straggles this step.
+    pub straggler_prob: f64,
+    /// Multiplier applied to a straggler's compute time.
+    pub straggler_slowdown: f64,
+}
+
+impl ComputeModel {
+    pub fn fixed(base: f64) -> Self {
+        ComputeModel { base, jitter: 0.0, straggler_prob: 0.0, straggler_slowdown: 1.0 }
+    }
+
+    pub fn with_jitter(base: f64, jitter: f64) -> Self {
+        ComputeModel { base, jitter, straggler_prob: 0.0, straggler_slowdown: 1.0 }
+    }
+
+    /// Synchronous-step compute time: max over the N workers' draws.
+    pub fn step_time(&self, n_workers: usize, rng: &mut Rng) -> f64 {
+        let mut worst: f64 = 0.0;
+        for _ in 0..n_workers.max(1) {
+            let mut t = self.base * (1.0 + self.jitter * (2.0 * rng.f64() - 1.0));
+            if self.straggler_prob > 0.0 && rng.f64() < self.straggler_prob {
+                t *= self.straggler_slowdown;
+            }
+            worst = worst.max(t);
+        }
+        worst
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_model_is_exact() {
+        let mut rng = Rng::new(0);
+        let m = ComputeModel::fixed(0.03);
+        for _ in 0..10 {
+            assert_eq!(m.step_time(8, &mut rng), 0.03);
+        }
+    }
+
+    #[test]
+    fn jitter_bounded_and_max_grows_with_n() {
+        let mut rng = Rng::new(1);
+        let m = ComputeModel::with_jitter(0.1, 0.2);
+        let mut one = 0.0;
+        let mut eight = 0.0;
+        for _ in 0..200 {
+            one += m.step_time(1, &mut rng);
+            eight += m.step_time(8, &mut rng);
+        }
+        assert!(eight > one, "max over 8 draws must exceed single draw on average");
+        for _ in 0..100 {
+            let t = m.step_time(4, &mut rng);
+            assert!(t >= 0.08 - 1e-12 && t <= 0.12 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn stragglers_create_a_tail() {
+        let mut rng = Rng::new(2);
+        let m = ComputeModel {
+            base: 0.01,
+            jitter: 0.0,
+            straggler_prob: 0.1,
+            straggler_slowdown: 10.0,
+        };
+        let times: Vec<f64> = (0..300).map(|_| m.step_time(8, &mut rng)).collect();
+        let slow = times.iter().filter(|&&t| t > 0.05).count();
+        assert!(slow > 100, "with 8 workers at p=0.1, most steps hit a straggler: {slow}");
+        assert!(slow < 300);
+    }
+}

@@ -1,0 +1,10 @@
+//! Synthetic workloads (DESIGN.md §3 substitutions).
+//!
+//! The paper trains vision models on CIFAR100/Food101/Caltech101/256; this
+//! repo substitutes learnable synthetic tasks with the same *statistical*
+//! roles: sharded per worker, optional non-i.i.d. skew (the federated
+//! scenario of §4), deterministic per seed.
+
+pub mod synth;
+
+pub use synth::{ClusterDataset, MarkovCorpus};

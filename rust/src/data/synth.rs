@@ -1,0 +1,241 @@
+//! Synthetic dataset generators.
+//!
+//! * [`ClusterDataset`] — Gaussian class clusters for the MLP classifier
+//!   (accuracy is measurable, so the Tables III/IV/V harnesses get a real
+//!   top-1 number).
+//! * [`MarkovCorpus`] — first-order Markov token streams for the
+//!   transformer LM (next-token accuracy has a learnable ceiling).
+
+use crate::util::rng::Rng;
+
+/// Gaussian-cluster classification data.
+///
+/// `classes` centers drawn N(0, sep²·I); samples are center + N(0, noise²).
+/// Worker shards can be i.i.d. or skewed (each worker over-samples a
+/// subset of classes — the paper's unbalanced federated setting).
+#[derive(Debug, Clone)]
+pub struct ClusterDataset {
+    pub features: usize,
+    pub classes: usize,
+    centers: Vec<Vec<f32>>,
+    noise: f32,
+    seed: u64,
+}
+
+impl ClusterDataset {
+    pub fn new(features: usize, classes: usize, sep: f32, noise: f32, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xC1A5_5E5);
+        let centers = (0..classes)
+            .map(|_| {
+                let mut c = vec![0.0f32; features];
+                rng.fill_normal(&mut c, sep);
+                c
+            })
+            .collect();
+        ClusterDataset { features, classes, centers, noise, seed }
+    }
+
+    /// Draw a batch for `worker` at `step`. `skew` in [0,1]: 0 = i.i.d.;
+    /// 1 = worker sees only its own class subset.
+    pub fn batch(
+        &self,
+        worker: usize,
+        n_workers: usize,
+        step: u64,
+        batch: usize,
+        skew: f64,
+    ) -> (Vec<f32>, Vec<i32>) {
+        let mut rng = Rng::new(
+            self.seed
+                ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ step.wrapping_mul(0xA076_1D64_78BD_642F),
+        );
+        let mut x = Vec::with_capacity(batch * self.features);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let class = if rng.f64() < skew {
+                // Biased: classes assigned round-robin to workers.
+                let mine: Vec<usize> = (0..self.classes)
+                    .filter(|c| c % n_workers.max(1) == worker % n_workers.max(1))
+                    .collect();
+                if mine.is_empty() {
+                    rng.below(self.classes)
+                } else {
+                    mine[rng.below(mine.len())]
+                }
+            } else {
+                rng.below(self.classes)
+            };
+            y.push(class as i32);
+            for f in 0..self.features {
+                x.push(self.centers[class][f] + rng.normal_f32(0.0, self.noise));
+            }
+        }
+        (x, y)
+    }
+
+    /// A held-out evaluation batch (worker-independent).
+    pub fn eval_batch(&self, batch: usize) -> (Vec<f32>, Vec<i32>) {
+        self.batch(usize::MAX / 2, 1, u64::MAX / 2, batch, 0.0)
+    }
+}
+
+/// First-order Markov token corpus with a skewed transition matrix.
+///
+/// Each token has `branch` likely successors (one dominant), so a
+/// well-trained LM's next-token accuracy approaches the dominant-successor
+/// probability — a real learnability ceiling to train against.
+#[derive(Debug, Clone)]
+pub struct MarkovCorpus {
+    pub vocab: usize,
+    /// transitions[t] = (successor ids, cumulative weights)
+    succ: Vec<Vec<usize>>,
+    dominant_p: f64,
+    seed: u64,
+}
+
+impl MarkovCorpus {
+    pub fn new(vocab: usize, branch: usize, dominant_p: f64, seed: u64) -> Self {
+        assert!(branch >= 1 && vocab >= branch);
+        assert!((0.0..=1.0).contains(&dominant_p));
+        let mut rng = Rng::new(seed ^ 0x3A5C_0FFE);
+        let succ = (0..vocab)
+            .map(|_| {
+                let mut s: Vec<usize> = Vec::with_capacity(branch);
+                while s.len() < branch {
+                    let c = rng.below(vocab);
+                    if !s.contains(&c) {
+                        s.push(c);
+                    }
+                }
+                s
+            })
+            .collect();
+        MarkovCorpus { vocab, succ, dominant_p, seed }
+    }
+
+    fn next_token(&self, cur: usize, rng: &mut Rng) -> usize {
+        let succ = &self.succ[cur];
+        if rng.f64() < self.dominant_p {
+            succ[0]
+        } else if succ.len() > 1 {
+            succ[1 + rng.below(succ.len() - 1)]
+        } else {
+            succ[0]
+        }
+    }
+
+    /// Sequence batch [batch, seq+1] (i32, flattened row-major) for a
+    /// worker/step — the layout the `<model>_grad` artifact consumes.
+    pub fn batch(&self, worker: usize, step: u64, batch: usize, seq: usize) -> Vec<i32> {
+        let mut rng = Rng::new(
+            self.seed
+                ^ (worker as u64).wrapping_mul(0x2545_F491_4F6C_DD1D)
+                ^ step.wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let mut out = Vec::with_capacity(batch * (seq + 1));
+        for _ in 0..batch {
+            let mut cur = rng.below(self.vocab);
+            out.push(cur as i32);
+            for _ in 0..seq {
+                cur = self.next_token(cur, &mut rng);
+                out.push(cur as i32);
+            }
+        }
+        out
+    }
+
+    /// The Bayes-optimal next-token accuracy (predict the dominant
+    /// successor): equals `dominant_p` + residual mass on ties.
+    pub fn accuracy_ceiling(&self) -> f64 {
+        self.dominant_p.max(1.0 - self.dominant_p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cluster_batches_deterministic_and_shaped() {
+        let ds = ClusterDataset::new(8, 4, 2.0, 0.2, 1);
+        let (x1, y1) = ds.batch(0, 4, 7, 16, 0.0);
+        let (x2, y2) = ds.batch(0, 4, 7, 16, 0.0);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        assert_eq!(x1.len(), 16 * 8);
+        assert_eq!(y1.len(), 16);
+        assert!(y1.iter().all(|&y| (0..4).contains(&y)));
+        // Different steps and workers differ.
+        let (x3, _) = ds.batch(0, 4, 8, 16, 0.0);
+        assert_ne!(x1, x3);
+        let (x4, _) = ds.batch(1, 4, 7, 16, 0.0);
+        assert_ne!(x1, x4);
+    }
+
+    #[test]
+    fn skew_biases_class_distribution() {
+        let ds = ClusterDataset::new(4, 8, 2.0, 0.1, 2);
+        let (_, y) = ds.batch(0, 4, 0, 400, 1.0);
+        // Worker 0 of 4 with 8 classes sees only classes {0, 4}.
+        assert!(y.iter().all(|&c| c == 0 || c == 4), "saw {:?}", &y[..8]);
+        let (_, y_iid) = ds.batch(0, 4, 0, 400, 0.0);
+        let distinct: std::collections::HashSet<i32> = y_iid.iter().copied().collect();
+        assert!(distinct.len() >= 6);
+    }
+
+    #[test]
+    fn nearest_center_classifies_cluster_data() {
+        // The task must be learnable: nearest-center achieves high accuracy.
+        let ds = ClusterDataset::new(16, 8, 2.0, 0.3, 3);
+        let (x, y) = ds.eval_batch(200);
+        let mut correct = 0;
+        for (i, &label) in y.iter().enumerate() {
+            let sample = &x[i * 16..(i + 1) * 16];
+            let mut best = 0;
+            let mut best_d = f32::MAX;
+            for (c, center) in ds.centers.iter().enumerate() {
+                let d: f32 = sample
+                    .iter()
+                    .zip(center)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            correct += (best as i32 == label) as usize;
+        }
+        assert!(correct >= 190, "cluster task not separable: {correct}/200");
+    }
+
+    #[test]
+    fn markov_batches_shaped_and_learnable() {
+        let mc = MarkovCorpus::new(64, 4, 0.8, 5);
+        let toks = mc.batch(0, 0, 4, 32);
+        assert_eq!(toks.len(), 4 * 33);
+        assert!(toks.iter().all(|&t| (0..64).contains(&t)));
+        // Dominant successor appears ~80% of the time.
+        let mut dom = 0;
+        let mut total = 0;
+        for b in 0..4 {
+            for s in 0..32 {
+                let cur = toks[b * 33 + s] as usize;
+                let nxt = toks[b * 33 + s + 1] as usize;
+                total += 1;
+                dom += (nxt == mc.succ[cur][0]) as usize;
+            }
+        }
+        let frac = dom as f64 / total as f64;
+        assert!((frac - 0.8).abs() < 0.1, "dominant fraction {frac}");
+        assert_eq!(mc.accuracy_ceiling(), 0.8);
+    }
+
+    #[test]
+    fn markov_deterministic() {
+        let mc = MarkovCorpus::new(32, 3, 0.7, 9);
+        assert_eq!(mc.batch(1, 2, 2, 8), mc.batch(1, 2, 2, 8));
+        assert_ne!(mc.batch(1, 2, 2, 8), mc.batch(1, 3, 2, 8));
+    }
+}

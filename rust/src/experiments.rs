@@ -1,0 +1,159 @@
+//! Shared experiment-harness plumbing: the standard "paper-proxy" training
+//! configuration, diff-table assembly (Tables III/IV/V layout), and the
+//! paper's model-size registry for cost experiments.
+//!
+//! Every `examples/table*`/`examples/fig*` binary builds on these helpers
+//! so the rows they print line up with the paper's tables 1:1.
+
+use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig, Trainer};
+use crate::coordinator::worker::ComputeModel;
+use crate::netsim::cost_model::LinkParams;
+use crate::netsim::schedule::NetSchedule;
+use crate::runtime::host_model::HostMlp;
+use crate::util::table::{fmt_ms, Table};
+
+/// The paper's four evaluation DNNs with their parameter counts — the `M`
+/// in every cost experiment (Tables II/VI, Figs 1/5).
+pub const PAPER_MODELS: [(&str, f64); 4] = [
+    ("ResNet18", 11.7e6),
+    ("ResNet50", 25.6e6),
+    ("AlexNet", 61.1e6),
+    ("ViT", 86.6e6),
+];
+
+/// Paper-measured compute times per step (Fig 1a, 8xV100, ms) — used to
+/// parameterize the simulated `t_compute` so step-time tables have the
+/// paper's compute:communication proportions.
+pub const PAPER_COMPUTE_MS: [(&str, f64); 4] = [
+    ("ResNet18", 30.0),
+    ("ResNet50", 65.0),
+    ("AlexNet", 25.0),
+    ("ViT", 110.0),
+];
+
+/// Accelerator-vs-host compression throughput ratio: the paper compresses
+/// on V100s; this host compresses on one CPU core. Top-k/threshold scans
+/// are memory-bandwidth-bound, and a V100's ~900 GB/s HBM vs ~25-45 GB/s
+/// single-core stream puts the ratio at 20-35x; we use the conservative
+/// low end. Applied by proxy harnesses as comp_scale = msg_scale / this.
+pub const GPU_COMPRESS_SPEEDUP: f64 = 20.0;
+
+/// Standard proxy-training config: 8 workers on a 4 ms / 20 Gbps link
+/// (the Tables III/IV/V setting).
+pub fn proxy_cfg(strategy: Strategy, cr: CrControl, steps: u64, seed: u64) -> TrainConfig {
+    TrainConfig {
+        n_workers: 8,
+        steps,
+        steps_per_epoch: steps / 10,
+        lr: 0.2,
+        momentum: 0.9,
+        weight_decay: 0.0005,
+        lr_decay: vec![(steps * 6 / 10, 0.1)],
+        strategy,
+        cr,
+        schedule: NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0)),
+        compute: ComputeModel::with_jitter(0.030, 0.05),
+        probe_noise: 0.02,
+        msg_scale: 1.0,
+        comp_scale: 1.0,
+        eval_every: (steps / 20).max(1),
+        seed,
+    }
+}
+
+/// Run one table row on the hard host-MLP proxy; returns the trainer for
+/// further inspection (gain curves, rank densities, ...).
+pub fn run_proxy(mut cfg: TrainConfig, seed: u64) -> Trainer {
+    cfg.seed = seed;
+    let src = Box::new(HostMlp::hard_preset(seed));
+    let mut t = Trainer::new(cfg, src);
+    t.run();
+    t
+}
+
+/// One row of a Tables III/IV/V-style comparison.
+#[derive(Debug, Clone)]
+pub struct DiffRow {
+    pub method: String,
+    pub t_step_ms: f64,
+    pub accuracy: f64,
+}
+
+/// Print the paper's `Method | t_step | Acc | Diff` layout, with diff
+/// computed against the first (baseline) row.
+pub fn print_diff_table(title: &str, rows: &[DiffRow]) {
+    println!("\n== {title} ==");
+    assert!(!rows.is_empty());
+    let base = rows[0].accuracy;
+    let mut t = Table::new(["Method", "t_step (ms)", "Acc.", "Diff."]);
+    for r in rows {
+        t.row([
+            r.method.clone(),
+            fmt_ms(r.t_step_ms / 1e3),
+            format!("{:.2}%", r.accuracy * 100.0),
+            format!("{:+.2}%", (r.accuracy - base) * 100.0),
+        ]);
+    }
+    t.print();
+}
+
+/// Row from a finished trainer.
+pub fn diff_row(method: impl Into<String>, t: &Trainer) -> DiffRow {
+    let s = t.metrics.summary();
+    DiffRow {
+        method: method.into(),
+        t_step_ms: s.mean_step_s * 1e3,
+        accuracy: t.metrics.best_accuracy().unwrap_or(f64::NAN),
+    }
+}
+
+/// Write a CSV file, creating parent dirs; returns the path for logging.
+pub fn write_csv(path: &str, content: &str) -> anyhow::Result<String> {
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, content)?;
+    Ok(path.to_string())
+}
+
+/// Render a labelled KDE as a terminal sparkline block (our "figure").
+pub fn print_kde(label: &str, samples: &[f64], lo: f64, hi: f64) {
+    let k = crate::util::stats::kde(samples, lo, hi, 60);
+    println!("{label:<24} {}", crate::util::stats::sparkline(&k.density));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artopk::{ArFlavor, SelectionPolicy};
+
+    #[test]
+    fn proxy_cfg_matches_paper_setting() {
+        let cfg = proxy_cfg(
+            Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+            CrControl::Static(0.01),
+            100,
+            0,
+        );
+        assert_eq!(cfg.n_workers, 8);
+        let l = cfg.schedule.at(0.0);
+        assert!((l.alpha_ms() - 4.0).abs() < 1e-9);
+        assert!((l.bw_gbps() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_registry_sane() {
+        assert_eq!(PAPER_MODELS.len(), 4);
+        assert!(PAPER_MODELS.windows(2).all(|w| w[0].1 < w[1].1));
+    }
+
+    #[test]
+    fn diff_table_renders() {
+        let rows = vec![
+            DiffRow { method: "DenseSGD".into(), t_step_ms: 98.7, accuracy: 0.908 },
+            DiffRow { method: "LWTopk 0.1".into(), t_step_ms: 62.0, accuracy: 0.9015 },
+        ];
+        // Shouldn't panic; eyeball-checked in examples.
+        print_diff_table("smoke", &rows);
+    }
+}

@@ -1,0 +1,41 @@
+//! # flexcomm
+//!
+//! Production-style reproduction of *"Flexible Communication for Optimal
+//! Distributed Learning over Unpredictable Networks"* (Tyagi & Swany, IEEE
+//! BigData 2023): AR-Topk compression (STAR/VAR worker selection), α-β
+//! cost-model driven collective selection (Allgather vs AR-Topk ring/tree),
+//! and NSGA-II multi-objective adaptation of the compression ratio.
+//!
+//! Layer map (see DESIGN.md):
+//! * L3 (this crate): coordinator, collectives, network simulator,
+//!   compressors, MOO controller.
+//! * L2/L1 (python, build-time only): jax model + Pallas kernels, AOT-lowered
+//!   to HLO text in `artifacts/`, executed here via PJRT ([`runtime`]).
+//!
+//! The offline build vendors only `xla` + `anyhow`; every other facility
+//! (PRNG, config, CLI, stats/KDE, property testing, bench harness) is
+//! first-party under [`util`].
+
+pub mod artopk;
+pub mod collectives;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod moo;
+pub mod netsim;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Commonly used items for examples/benches.
+pub mod prelude {
+    pub use crate::artopk::{ArTopk, SelectionPolicy};
+    pub use crate::collectives::CollectiveKind;
+    pub use crate::compress::{Compressor, CompressorKind, SparseGrad};
+    pub use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig, Trainer};
+    pub use crate::netsim::cost_model::{self, LinkParams};
+    pub use crate::netsim::schedule::NetSchedule;
+    pub use crate::tensor::{Layout, ParamVec};
+    pub use crate::util::rng::Rng;
+}

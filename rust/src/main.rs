@@ -1,0 +1,292 @@
+//! flexcomm CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   train      run a training configuration (flags or --config file)
+//!   cost       print α-β cost-model tables (Table I / II / VI, Fig 5)
+//!   schedule   print a network schedule (Fig 6) and probe it
+//!   info       artifacts + PJRT platform info
+//!
+//! Examples:
+//!   flexcomm train --model mlp --strategy artopk-star --cr 0.01 --steps 200
+//!   flexcomm train --model small --strategy flexible --adaptive --schedule c2
+//!   flexcomm cost --table2
+//!   flexcomm schedule --name c2 --epochs 50
+
+use anyhow::{bail, Context, Result};
+use flexcomm::artopk::{ArFlavor, SelectionPolicy};
+use flexcomm::compress::CompressorKind;
+use flexcomm::coordinator::adaptive::AdaptiveConfig;
+use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
+use flexcomm::coordinator::worker::{ComputeModel, GradSource};
+use flexcomm::netsim::cost_model::{self, LinkParams};
+use flexcomm::netsim::probe::Probe;
+use flexcomm::netsim::schedule::NetSchedule;
+use flexcomm::runtime::{find_artifacts_dir, Engine, HostMlp, ModelArtifacts, PjrtModel, SyntheticGrad};
+use flexcomm::util::cli::Args;
+use flexcomm::util::config::Config;
+use flexcomm::util::table::{fmt_ms, fmt_pct, Table};
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("cost") => cmd_cost(&args),
+        Some("schedule") => cmd_schedule(&args),
+        Some("info") => cmd_info(),
+        Some(other) => bail!("unknown subcommand `{other}` (train|cost|schedule|info)"),
+        None => {
+            print_usage();
+            Ok(())
+        }
+    }
+}
+
+fn print_usage() {
+    println!(
+        "flexcomm — AR-Topk + flexible collectives + MOO-adaptive compression\n\
+         usage: flexcomm <train|cost|schedule|info> [--flags]\n\
+         try:   flexcomm train --model host-mlp --strategy artopk-star --cr 0.01\n\
+                flexcomm cost --table1\n\
+                flexcomm schedule --name c2"
+    );
+}
+
+/// Parse a strategy name.
+fn parse_strategy(s: &str) -> Result<Strategy> {
+    Ok(match s {
+        "dense-ring" => Strategy::DenseSgd { flavor: DenseFlavor::Ring },
+        "dense-tree" => Strategy::DenseSgd { flavor: DenseFlavor::Tree },
+        "dense-ps" => Strategy::DenseSgd { flavor: DenseFlavor::Ps },
+        "dense" | "dense-auto" => Strategy::DenseSgd { flavor: DenseFlavor::Auto },
+        "ag-topk" => Strategy::AgCompress { kind: CompressorKind::TopK },
+        "ag-lwtopk" => Strategy::AgCompress { kind: CompressorKind::LwTopk },
+        "ag-mstopk" => Strategy::AgCompress { kind: CompressorKind::MsTopk },
+        "ag-randomk" => Strategy::AgCompress { kind: CompressorKind::RandomK },
+        "artopk-star" => Strategy::ArTopkFixed {
+            policy: SelectionPolicy::Star,
+            flavor: ArFlavor::Ring,
+        },
+        "artopk-star-tree" => Strategy::ArTopkFixed {
+            policy: SelectionPolicy::Star,
+            flavor: ArFlavor::Tree,
+        },
+        "artopk-var" => Strategy::ArTopkFixed {
+            policy: SelectionPolicy::Var,
+            flavor: ArFlavor::Ring,
+        },
+        "artopk-auto" => Strategy::ArTopkAuto { flavor: ArFlavor::Ring },
+        "flexible" => Strategy::Flexible { policy: SelectionPolicy::Star },
+        "flexible-var" => Strategy::Flexible { policy: SelectionPolicy::Var },
+        _ => bail!(
+            "unknown strategy `{s}` (dense[-ring|-tree|-ps|-auto], ag-topk, ag-lwtopk, \
+             ag-mstopk, ag-randomk, artopk-star[-tree], artopk-var, artopk-auto, flexible[-var])"
+        ),
+    })
+}
+
+/// Build a gradient source by model name.
+fn build_source(model: &str, seed: u64) -> Result<Box<dyn GradSource>> {
+    match model {
+        "host-mlp" => Ok(Box::new(HostMlp::default_preset(seed))),
+        m if m.starts_with("synthetic:") => {
+            let dim: usize = m["synthetic:".len()..].parse().context("synthetic:<dim>")?;
+            Ok(Box::new(SyntheticGrad::new(dim, seed)))
+        }
+        name => {
+            let dir = find_artifacts_dir()?;
+            let arts = ModelArtifacts::load(&dir, name)?;
+            let engine = Engine::cpu()?;
+            Ok(Box::new(PjrtModel::load(&engine, arts, seed)?))
+        }
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    // Optional config file; flags override.
+    let mut cfgfile = Config::default();
+    if let Some(path) = args.opt("config") {
+        cfgfile = Config::load(path)?;
+    }
+    let model = args.str_or("model", &cfgfile.str_or("train.model", "host-mlp"));
+    let seed = args.u64_or("seed", cfgfile.int_or("train.seed", 0) as u64)?;
+    let strategy = parse_strategy(&args.str_or(
+        "strategy",
+        &cfgfile.str_or("train.strategy", "flexible"),
+    ))?;
+    let steps = args.u64_or("steps", cfgfile.int_or("train.steps", 200) as u64)?;
+    let spe = args.u64_or("steps-per-epoch", cfgfile.int_or("train.steps_per_epoch", 50) as u64)?;
+    let epochs = steps as f64 / spe as f64;
+
+    let schedule = match args
+        .str_or("schedule", &cfgfile.str_or("net.schedule", "static"))
+        .as_str()
+    {
+        "static" => NetSchedule::static_link(LinkParams::from_ms_gbps(
+            args.f64_or("alpha-ms", cfgfile.float_or("net.alpha_ms", 4.0))?,
+            args.f64_or("bw-gbps", cfgfile.float_or("net.bw_gbps", 20.0))?,
+        )),
+        name => NetSchedule::preset(name, epochs)
+            .with_context(|| format!("unknown schedule `{name}` (static|c1|c2)"))?,
+    };
+
+    let cr = if args.flag("adaptive") || cfgfile.bool_or("compress.adaptive", false) {
+        CrControl::Adaptive(AdaptiveConfig {
+            c_low: args.f64_or("c-low", cfgfile.float_or("compress.c_low", 0.001))?,
+            c_high: args.f64_or("c-high", cfgfile.float_or("compress.c_high", 0.1))?,
+            probe_iters: args.u64_or("probe-iters", 10)?,
+            seed,
+            ..Default::default()
+        })
+    } else {
+        CrControl::Static(args.f64_or("cr", cfgfile.float_or("compress.cr", 0.01))?)
+    };
+
+    let cfg = TrainConfig {
+        n_workers: args.usize_or("workers", cfgfile.int_or("train.workers", 8) as usize)?,
+        steps,
+        steps_per_epoch: spe,
+        lr: args.f64_or("lr", cfgfile.float_or("train.lr", 0.1))? as f32,
+        momentum: args.f64_or("momentum", cfgfile.float_or("train.momentum", 0.9))? as f32,
+        weight_decay: args.f64_or("wd", cfgfile.float_or("train.weight_decay", 0.0))? as f32,
+        lr_decay: Vec::new(),
+        strategy,
+        cr,
+        schedule,
+        compute: ComputeModel::with_jitter(
+            args.f64_or("compute-ms", cfgfile.float_or("train.compute_ms", 20.0))? * 1e-3,
+            0.05,
+        ),
+        probe_noise: 0.02,
+        msg_scale: args.f64_or("msg-scale", 1.0)?,
+        comp_scale: args.f64_or("comp-scale", 1.0)?,
+        eval_every: args.u64_or("eval-every", spe)?,
+        seed,
+    };
+
+    println!("flexcomm train: model={model} strategy={:?} steps={steps}", cfg.strategy);
+    let source = build_source(&model, seed)?;
+    let mut t = Trainer::new(cfg, source);
+    t.run();
+
+    let s = t.metrics.summary();
+    let mut tab = Table::new(["metric", "value"]);
+    tab.row(["model", &t.source_name()]);
+    tab.row(["steps", &s.steps.to_string()]);
+    tab.row(["t_step (ms)", &fmt_ms(s.mean_step_s)]);
+    tab.row(["  t_compute (ms)", &fmt_ms(s.mean_compute_s)]);
+    tab.row(["  t_comp (ms)", &fmt_ms(s.mean_comp_s)]);
+    tab.row(["  t_sync (ms)", &fmt_ms(s.mean_sync_s)]);
+    tab.row(["mean gain", &format!("{:.4}", s.mean_gain)]);
+    tab.row(["final loss", &format!("{:.4}", s.final_loss)]);
+    if let Some(acc) = t.metrics.final_accuracy() {
+        tab.row(["final accuracy", &fmt_pct(acc)]);
+    }
+    tab.row(["virtual time (s)", &format!("{:.2}", t.clock.now())]);
+    tab.row(["explore overhead (s)", &format!("{:.2}", t.explore_overhead_s)]);
+    tab.print();
+
+    if let Some(out) = args.opt("out") {
+        t.metrics.write_csv(out)?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_cost(args: &Args) -> Result<()> {
+    let n = args.usize_or("workers", 8)?;
+    if args.flag("table1") {
+        let l = LinkParams::from_ms_gbps(args.f64_or("alpha-ms", 1.0)?, args.f64_or("bw-gbps", 10.0)?);
+        let m = args.f64_or("mbytes", 400.0)? * 1e6;
+        let mut t = Table::new(["Operation", "BW Complexity", "Cost (ms)"]);
+        t.row(["PS (Star)", "O(MN)", &fmt_ms(cost_model::ps_star(l, m, n))]);
+        t.row(["Ring-AR", "O(M)", &fmt_ms(cost_model::ring_allreduce(l, m, n))]);
+        t.row(["Tree-AR", "O(M logN)", &fmt_ms(cost_model::tree_allreduce(l, m, n))]);
+        t.row(["Broadcast", "O(M logN)", &fmt_ms(cost_model::broadcast(l, m, n))]);
+        t.row(["Allgather", "O(MN)", &fmt_ms(cost_model::allgather(l, m, n))]);
+        t.print();
+        return Ok(());
+    }
+    // Default: the flexible-selection view for one (α, β, M, N).
+    let l = LinkParams::from_ms_gbps(args.f64_or("alpha-ms", 1.0)?, args.f64_or("bw-gbps", 10.0)?);
+    let m = args.f64_or("mbytes", 100.0)? * 1e6;
+    let mut t = Table::new(["CR", "AG (ms)", "ART-Ring (ms)", "ART-Tree (ms)", "chosen"]);
+    for cr in args.f64_list_or("crs", &[0.1, 0.01, 0.001])? {
+        let ag = cost_model::ag_topk(l, m, n, cr);
+        let ring = cost_model::art_ring(l, m, n, cr);
+        let tree = cost_model::art_tree(l, m, n, cr);
+        let chosen = cost_model::optimal_collective(l, m, n, cr).name();
+        t.row([
+            format!("{cr}"),
+            fmt_ms(ag),
+            fmt_ms(ring),
+            fmt_ms(tree),
+            chosen.to_string(),
+        ]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let name = args.str_or("name", "c1");
+    let epochs = args.f64_or("epochs", 50.0)?;
+    let sched = NetSchedule::preset(&name, epochs)
+        .with_context(|| format!("unknown schedule `{name}`"))?;
+    let mut t = Table::new(["epoch", "alpha (ms)", "bandwidth (Gbps)"]);
+    for p in sched.phases() {
+        t.row([
+            format!("{:.0}+", p.from_epoch),
+            format!("{:.1}", p.link.alpha_ms()),
+            format!("{:.1}", p.link.bw_gbps()),
+        ]);
+    }
+    t.print();
+    if args.flag("probe") {
+        let mut probe = Probe::new(sched, 0.05, args.u64_or("seed", 0)?);
+        println!("\nprobed observations (5% noise):");
+        let mut t = Table::new(["epoch", "alpha (ms)", "bw (Gbps)", "changed"]);
+        let step = (epochs / 20.0).max(0.5);
+        let mut e = 0.0;
+        while e < epochs {
+            let (obs, ch) = probe.measure_and_detect(e);
+            t.row([
+                format!("{e:.1}"),
+                format!("{:.2}", obs.alpha_ms),
+                format!("{:.2}", obs.bw_gbps),
+                if ch { "*".to_string() } else { String::new() },
+            ]);
+            e += step;
+        }
+        t.print();
+    }
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    match find_artifacts_dir() {
+        Ok(dir) => {
+            println!("artifacts: {}", dir.display());
+            let mut names: Vec<String> = std::fs::read_dir(&dir)?
+                .filter_map(|e| e.ok())
+                .filter_map(|e| {
+                    e.file_name()
+                        .to_str()
+                        .and_then(|n| n.strip_suffix("_meta.txt").map(str::to_string))
+                })
+                .collect();
+            names.sort();
+            for n in names {
+                let arts = ModelArtifacts::load(&dir, &n)?;
+                println!(
+                    "  {n}: kind={} params={}",
+                    arts.kind(),
+                    arts.param_count().map(|p| p.to_string()).unwrap_or("?".into())
+                );
+            }
+        }
+        Err(e) => println!("artifacts: {e}"),
+    }
+    let engine = Engine::cpu()?;
+    println!("pjrt: platform={}", engine.platform());
+    Ok(())
+}

@@ -1,0 +1,19 @@
+//! Multi-objective optimization of the compression ratio (paper §3-E).
+//!
+//! The paper models CR selection as a 3-objective problem — minimize
+//! compression time, minimize communication time, maximize compression
+//! gain (minimize 1/gain) — solved with NSGA-II (they use pymoo; here the
+//! algorithm is first-party and property-tested).
+//!
+//! * [`nsga2`] — generic NSGA-II: fast non-dominated sort, crowding
+//!   distance, binary tournament, SBX crossover, polynomial mutation.
+//! * [`pareto`] — dominance tests, front extraction, knee-point selection.
+//! * [`problem`] — the CR problem built from measured candidate profiles.
+
+pub mod nsga2;
+pub mod pareto;
+pub mod problem;
+
+pub use nsga2::{Nsga2Config, Problem};
+pub use pareto::{dominates, knee_point, pareto_front};
+pub use problem::{CandidateProfile, CrProblem};

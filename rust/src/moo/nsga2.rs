@@ -1,0 +1,333 @@
+//! NSGA-II (Deb et al. 2002) — the solver the paper runs (via pymoo) to
+//! find `c_optimal`. Generic over [`Problem`]; decision variables live in
+//! [0, 1]^d and are mapped by the problem itself.
+
+use crate::moo::pareto::dominates;
+use crate::util::rng::Rng;
+
+/// A multi-objective problem: evaluate genes in [0,1]^n_var to a vector of
+/// minimized objectives.
+pub trait Problem {
+    fn n_var(&self) -> usize;
+    fn n_obj(&self) -> usize;
+    fn evaluate(&self, x: &[f64]) -> Vec<f64>;
+}
+
+#[derive(Debug, Clone)]
+pub struct Nsga2Config {
+    pub pop_size: usize,
+    pub generations: usize,
+    /// SBX crossover distribution index (paper-standard 15).
+    pub eta_crossover: f64,
+    /// Polynomial mutation distribution index (paper-standard 20).
+    pub eta_mutation: f64,
+    pub crossover_prob: f64,
+    pub mutation_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for Nsga2Config {
+    fn default() -> Self {
+        Nsga2Config {
+            pop_size: 40,
+            generations: 60,
+            eta_crossover: 15.0,
+            eta_mutation: 20.0,
+            crossover_prob: 0.9,
+            mutation_prob: 0.2,
+            seed: 0,
+        }
+    }
+}
+
+/// One evaluated individual.
+#[derive(Debug, Clone)]
+pub struct Individual {
+    pub genes: Vec<f64>,
+    pub objectives: Vec<f64>,
+    rank: usize,
+    crowding: f64,
+}
+
+/// Final population (rank-0 slice = approximated Pareto set).
+#[derive(Debug)]
+pub struct Nsga2Result {
+    pub population: Vec<Individual>,
+}
+
+impl Nsga2Result {
+    /// The non-dominated front of the final population.
+    pub fn front(&self) -> Vec<&Individual> {
+        self.population.iter().filter(|i| i.rank == 0).collect()
+    }
+}
+
+/// Fast non-dominated sort: assigns ranks; returns fronts as index lists.
+fn non_dominated_sort(objs: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut dom_count = vec![0usize; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                if dominates(&objs[i], &objs[j]) {
+                    dominated_by[i].push(j);
+                } else if dominates(&objs[j], &objs[i]) {
+                    dom_count[i] += 1;
+                }
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| dom_count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// Crowding distance within one front.
+fn crowding_distances(objs: &[Vec<f64>], front: &[usize]) -> Vec<f64> {
+    let mut dist = vec![0.0f64; front.len()];
+    if front.len() <= 2 {
+        return vec![f64::INFINITY; front.len()];
+    }
+    let n_obj = objs[front[0]].len();
+    for d in 0..n_obj {
+        let mut order: Vec<usize> = (0..front.len()).collect();
+        order.sort_by(|&a, &b| {
+            objs[front[a]][d].partial_cmp(&objs[front[b]][d]).unwrap()
+        });
+        let lo = objs[front[order[0]]][d];
+        let hi = objs[front[*order.last().unwrap()]][d];
+        dist[order[0]] = f64::INFINITY;
+        dist[*order.last().unwrap()] = f64::INFINITY;
+        if hi > lo {
+            for w in 1..order.len() - 1 {
+                let prev = objs[front[order[w - 1]]][d];
+                let next = objs[front[order[w + 1]]][d];
+                dist[order[w]] += (next - prev) / (hi - lo);
+            }
+        }
+    }
+    dist
+}
+
+/// SBX crossover on one gene pair.
+fn sbx(a: f64, b: f64, eta: f64, rng: &mut Rng) -> (f64, f64) {
+    let u = rng.f64();
+    let beta = if u <= 0.5 {
+        (2.0 * u).powf(1.0 / (eta + 1.0))
+    } else {
+        (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (eta + 1.0))
+    };
+    let c1 = 0.5 * ((1.0 + beta) * a + (1.0 - beta) * b);
+    let c2 = 0.5 * ((1.0 - beta) * a + (1.0 + beta) * b);
+    (c1.clamp(0.0, 1.0), c2.clamp(0.0, 1.0))
+}
+
+/// Polynomial mutation on one gene.
+fn poly_mutate(x: f64, eta: f64, rng: &mut Rng) -> f64 {
+    let u = rng.f64();
+    let delta = if u < 0.5 {
+        (2.0 * u).powf(1.0 / (eta + 1.0)) - 1.0
+    } else {
+        1.0 - (2.0 * (1.0 - u)).powf(1.0 / (eta + 1.0))
+    };
+    (x + delta).clamp(0.0, 1.0)
+}
+
+/// Binary tournament by (rank, crowding).
+fn tournament<'a>(pop: &'a [Individual], rng: &mut Rng) -> &'a Individual {
+    let a = &pop[rng.below(pop.len())];
+    let b = &pop[rng.below(pop.len())];
+    if a.rank < b.rank || (a.rank == b.rank && a.crowding > b.crowding) {
+        a
+    } else {
+        b
+    }
+}
+
+/// Run NSGA-II on `problem`.
+pub fn optimize<P: Problem>(problem: &P, cfg: &Nsga2Config) -> Nsga2Result {
+    assert!(cfg.pop_size >= 4 && cfg.pop_size % 2 == 0);
+    let mut rng = Rng::new(cfg.seed);
+    let nv = problem.n_var();
+
+    let eval = |genes: Vec<f64>, problem: &P| -> Individual {
+        let objectives = problem.evaluate(&genes);
+        debug_assert_eq!(objectives.len(), problem.n_obj());
+        Individual { genes, objectives, rank: usize::MAX, crowding: 0.0 }
+    };
+
+    // Init.
+    let mut pop: Vec<Individual> = (0..cfg.pop_size)
+        .map(|_| eval((0..nv).map(|_| rng.f64()).collect(), problem))
+        .collect();
+    assign_rank_crowding(&mut pop);
+
+    for _gen in 0..cfg.generations {
+        // Offspring.
+        let mut offspring = Vec::with_capacity(cfg.pop_size);
+        while offspring.len() < cfg.pop_size {
+            let p1 = tournament(&pop, &mut rng).genes.clone();
+            let p2 = tournament(&pop, &mut rng).genes.clone();
+            let (mut c1, mut c2) = (p1.clone(), p2.clone());
+            if rng.f64() < cfg.crossover_prob {
+                for i in 0..nv {
+                    let (a, b) = sbx(p1[i], p2[i], cfg.eta_crossover, &mut rng);
+                    c1[i] = a;
+                    c2[i] = b;
+                }
+            }
+            for c in [&mut c1, &mut c2] {
+                for gene in c.iter_mut() {
+                    if rng.f64() < cfg.mutation_prob {
+                        *gene = poly_mutate(*gene, cfg.eta_mutation, &mut rng);
+                    }
+                }
+            }
+            offspring.push(eval(c1, problem));
+            if offspring.len() < cfg.pop_size {
+                offspring.push(eval(c2, problem));
+            }
+        }
+
+        // Environmental selection on parents + offspring.
+        pop.extend(offspring);
+        let objs: Vec<Vec<f64>> = pop.iter().map(|i| i.objectives.clone()).collect();
+        let fronts = non_dominated_sort(&objs);
+        let mut next: Vec<Individual> = Vec::with_capacity(cfg.pop_size);
+        for front in fronts {
+            if next.len() == cfg.pop_size {
+                break;
+            }
+            let dists = crowding_distances(&objs, &front);
+            let mut members: Vec<(usize, f64)> =
+                front.iter().copied().zip(dists).collect();
+            if next.len() + members.len() > cfg.pop_size {
+                members.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                members.truncate(cfg.pop_size - next.len());
+            }
+            for (idx, crowd) in members {
+                let mut ind = pop[idx].clone();
+                ind.crowding = crowd;
+                next.push(ind);
+            }
+        }
+        pop = next;
+        assign_rank_crowding(&mut pop);
+    }
+
+    Nsga2Result { population: pop }
+}
+
+fn assign_rank_crowding(pop: &mut [Individual]) {
+    let objs: Vec<Vec<f64>> = pop.iter().map(|i| i.objectives.clone()).collect();
+    let fronts = non_dominated_sort(&objs);
+    for (rank, front) in fronts.iter().enumerate() {
+        let dists = crowding_distances(&objs, front);
+        for (&i, &d) in front.iter().zip(&dists) {
+            pop[i].rank = rank;
+            pop[i].crowding = d;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// ZDT1-style 1-var toy: objectives (x, (1-x)^2) — the true front is the
+    /// whole [0,1] segment; check spread + optimality.
+    struct Toy;
+
+    impl Problem for Toy {
+        fn n_var(&self) -> usize {
+            1
+        }
+        fn n_obj(&self) -> usize {
+            2
+        }
+        fn evaluate(&self, x: &[f64]) -> Vec<f64> {
+            vec![x[0], (1.0 - x[0]) * (1.0 - x[0])]
+        }
+    }
+
+    /// A problem with a known single optimum dominating everything:
+    /// f = ((x-0.3)^2, (x-0.3)^2 + 1).
+    struct SingleOpt;
+
+    impl Problem for SingleOpt {
+        fn n_var(&self) -> usize {
+            1
+        }
+        fn n_obj(&self) -> usize {
+            2
+        }
+        fn evaluate(&self, x: &[f64]) -> Vec<f64> {
+            let d = (x[0] - 0.3) * (x[0] - 0.3);
+            vec![d, d + 1.0]
+        }
+    }
+
+    #[test]
+    fn finds_single_optimum() {
+        let res = optimize(&SingleOpt, &Nsga2Config { seed: 1, ..Default::default() });
+        let front = res.front();
+        assert!(!front.is_empty());
+        for ind in front {
+            assert!((ind.genes[0] - 0.3).abs() < 0.05, "gene {}", ind.genes[0]);
+        }
+    }
+
+    #[test]
+    fn front_spreads_on_tradeoff() {
+        let res = optimize(&Toy, &Nsga2Config { seed: 2, ..Default::default() });
+        let front = res.front();
+        assert!(front.len() >= 10);
+        let xs: Vec<f64> = front.iter().map(|i| i.genes[0]).collect();
+        let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert!(hi - lo > 0.5, "front collapsed: [{lo}, {hi}]");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = optimize(&Toy, &Nsga2Config { seed: 7, generations: 10, ..Default::default() });
+        let b = optimize(&Toy, &Nsga2Config { seed: 7, generations: 10, ..Default::default() });
+        let ga: Vec<f64> = a.population.iter().map(|i| i.genes[0]).collect();
+        let gb: Vec<f64> = b.population.iter().map(|i| i.genes[0]).collect();
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn sort_ranks_are_consistent() {
+        let objs = vec![
+            vec![0.0, 0.0], // rank 0
+            vec![1.0, 1.0], // rank 1
+            vec![2.0, 2.0], // rank 2
+            vec![0.5, 0.1], // incomparable with [0,0]? 0.5>0, 0.1>0 -> dominated; rank 1
+        ];
+        let fronts = non_dominated_sort(&objs);
+        assert_eq!(fronts[0], vec![0]);
+        assert!(fronts[1].contains(&1) || fronts[1].contains(&3));
+    }
+
+    #[test]
+    fn genes_stay_in_bounds() {
+        let res = optimize(&Toy, &Nsga2Config { seed: 3, generations: 30, ..Default::default() });
+        for ind in &res.population {
+            assert!((0.0..=1.0).contains(&ind.genes[0]));
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Pareto utilities: dominance, front extraction, knee-point selection.
+
+/// `a` dominates `b` iff a <= b in every objective and < in at least one
+/// (all objectives minimized).
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Indices of the non-dominated members of `objs`.
+pub fn pareto_front(objs: &[Vec<f64>]) -> Vec<usize> {
+    (0..objs.len())
+        .filter(|&i| !objs.iter().enumerate().any(|(j, o)| j != i && dominates(o, &objs[i])))
+        .collect()
+}
+
+/// Knee point of a front: normalize every objective to [0, 1] over the
+/// front, then pick the member closest (L2) to the ideal origin. This is
+/// the "knee-point or pareto-front" compromise the paper picks its
+/// `c_optimal` from.
+pub fn knee_point(objs: &[Vec<f64>], front: &[usize]) -> usize {
+    assert!(!front.is_empty());
+    let dims = objs[front[0]].len();
+    let mut lo = vec![f64::INFINITY; dims];
+    let mut hi = vec![f64::NEG_INFINITY; dims];
+    for &i in front {
+        for d in 0..dims {
+            lo[d] = lo[d].min(objs[i][d]);
+            hi[d] = hi[d].max(objs[i][d]);
+        }
+    }
+    let mut best = front[0];
+    let mut best_dist = f64::INFINITY;
+    for &i in front {
+        let mut dist = 0.0;
+        for d in 0..dims {
+            let range = hi[d] - lo[d];
+            let z = if range > 0.0 { (objs[i][d] - lo[d]) / range } else { 0.0 };
+            dist += z * z;
+        }
+        if dist < best_dist {
+            best_dist = dist;
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0])); // trade-off
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0])); // equal
+    }
+
+    #[test]
+    fn front_extraction() {
+        let objs = vec![
+            vec![1.0, 5.0], // front
+            vec![2.0, 4.0], // front
+            vec![3.0, 3.0], // front
+            vec![3.0, 5.0], // dominated by [1,5]? no: 1<3,5=5 -> dominated
+            vec![2.5, 4.5], // dominated by [2,4]
+        ];
+        let f = pareto_front(&objs);
+        assert_eq!(f, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn knee_prefers_balanced_point() {
+        let objs = vec![
+            vec![0.0, 1.0],
+            vec![0.2, 0.2], // balanced knee
+            vec![1.0, 0.0],
+        ];
+        let f = pareto_front(&objs);
+        assert_eq!(knee_point(&objs, &f), 1);
+    }
+
+    #[test]
+    fn front_members_are_mutually_nondominated() {
+        check("pareto front mutual nondominance", 60, |g| {
+            let n = g.usize_in(1, 40);
+            let objs: Vec<Vec<f64>> = (0..n)
+                .map(|_| vec![g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0), g.f64_in(0.0, 1.0)])
+                .collect();
+            let front = pareto_front(&objs);
+            ensure(!front.is_empty(), "front empty")?;
+            for &i in &front {
+                for &j in &front {
+                    if i != j {
+                        ensure(!dominates(&objs[i], &objs[j]), "front member dominated")?;
+                    }
+                }
+            }
+            // Every non-front member is dominated by someone.
+            for i in 0..n {
+                if !front.contains(&i) {
+                    ensure(
+                        objs.iter().any(|o| dominates(o, &objs[i])),
+                        "non-front member not dominated",
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+}

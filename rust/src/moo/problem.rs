@@ -1,0 +1,207 @@
+//! The CR-selection problem (Eqn 6): minimize
+//! `(t_comp(c), t_sync(c), 1/gain(c))` over `c ∈ [c_low, c_high]`.
+//!
+//! The controller measures a handful of candidate CRs (the paper probes
+//! `[0.1, 0.033, 0.011, 0.004, 0.001]` for 10 iterations each under
+//! checkpoint/restore) and the problem interpolates the three objectives
+//! piecewise-linearly in log-CR between those measurements — NSGA-II then
+//! searches the continuous range and the knee point becomes `c_optimal`.
+
+use crate::moo::nsga2::Problem;
+use crate::moo::pareto::{knee_point, pareto_front};
+
+/// Measured profile of one candidate CR.
+#[derive(Debug, Clone, Copy)]
+pub struct CandidateProfile {
+    pub cr: f64,
+    /// Mean measured compression+decompression time (s).
+    pub t_comp: f64,
+    /// Mean (simulated) communication time at the current link (s).
+    pub t_sync: f64,
+    /// Mean compression gain in (0, 1].
+    pub gain: f64,
+}
+
+/// Candidate CR ladder used by the paper: `c_low` scaled by ~3x steps up to
+/// `c_high` => [0.001, 0.004 (? ~0.003·...), 0.011, 0.033, 0.1] for the
+/// default bounds. Returned descending (0.1 first) to match §3-E1.
+pub fn candidate_crs(c_low: f64, c_high: f64, factor: f64) -> Vec<f64> {
+    assert!(c_low > 0.0 && c_high > c_low && factor > 1.0);
+    // Descend from c_high by `factor` steps; once the next step would land
+    // within half a (geometric) step of c_low, snap to c_low. Reproduces
+    // the paper's ladder [0.1, 0.033, 0.011, 0.004, 0.001].
+    let mut out = vec![c_high];
+    let mut c = c_high;
+    loop {
+        c /= factor;
+        if c <= c_low * factor.sqrt() {
+            break;
+        }
+        out.push(c);
+    }
+    out.push(c_low);
+    out
+}
+
+/// Continuous CR problem over measured candidates.
+#[derive(Debug, Clone)]
+pub struct CrProblem {
+    /// Sorted ascending by cr.
+    profiles: Vec<CandidateProfile>,
+}
+
+impl CrProblem {
+    pub fn new(mut profiles: Vec<CandidateProfile>) -> Self {
+        assert!(profiles.len() >= 2, "need at least two candidate profiles");
+        profiles.sort_by(|a, b| a.cr.partial_cmp(&b.cr).unwrap());
+        for p in &profiles {
+            assert!(p.cr > 0.0 && p.gain > 0.0 && p.gain <= 1.0 + 1e-9);
+        }
+        CrProblem { profiles }
+    }
+
+    pub fn c_low(&self) -> f64 {
+        self.profiles[0].cr
+    }
+
+    pub fn c_high(&self) -> f64 {
+        self.profiles[self.profiles.len() - 1].cr
+    }
+
+    /// Map a gene in [0,1] to a CR (log-uniform across the bounds).
+    pub fn gene_to_cr(&self, gene: f64) -> f64 {
+        let lo = self.c_low().ln();
+        let hi = self.c_high().ln();
+        (lo + gene.clamp(0.0, 1.0) * (hi - lo)).exp()
+    }
+
+    /// Piecewise-linear interpolation (in log-cr) of the three objectives.
+    pub fn objectives_at(&self, cr: f64) -> (f64, f64, f64) {
+        let cr = cr.clamp(self.c_low(), self.c_high());
+        let x = cr.ln();
+        let ps = &self.profiles;
+        let mut i = 0;
+        while i + 2 < ps.len() && x > ps[i + 1].cr.ln() {
+            i += 1;
+        }
+        let (a, b) = (&ps[i], &ps[i + 1]);
+        let (xa, xb) = (a.cr.ln(), b.cr.ln());
+        let t = if xb > xa { ((x - xa) / (xb - xa)).clamp(0.0, 1.0) } else { 0.0 };
+        let lerp = |u: f64, v: f64| u + t * (v - u);
+        (
+            lerp(a.t_comp, b.t_comp),
+            lerp(a.t_sync, b.t_sync),
+            1.0 / lerp(a.gain, b.gain).max(1e-9),
+        )
+    }
+
+    /// Solve with NSGA-II and return the knee-point `c_optimal`.
+    pub fn solve(&self, seed: u64) -> f64 {
+        let cfg = crate::moo::nsga2::Nsga2Config { seed, ..Default::default() };
+        let res = crate::moo::nsga2::optimize(self, &cfg);
+        let front: Vec<&crate::moo::nsga2::Individual> = res.front();
+        let objs: Vec<Vec<f64>> = front.iter().map(|i| i.objectives.clone()).collect();
+        let idx: Vec<usize> = (0..objs.len()).collect();
+        let pf = pareto_front(&objs);
+        let chosen = if pf.is_empty() { idx[0] } else { knee_point(&objs, &pf) };
+        self.gene_to_cr(front[chosen].genes[0])
+    }
+}
+
+impl Problem for CrProblem {
+    fn n_var(&self) -> usize {
+        1
+    }
+    fn n_obj(&self) -> usize {
+        3
+    }
+    fn evaluate(&self, x: &[f64]) -> Vec<f64> {
+        let cr = self.gene_to_cr(x[0]);
+        let (t_comp, t_sync, inv_gain) = self.objectives_at(cr);
+        vec![t_comp, t_sync, inv_gain]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ladder() -> Vec<CandidateProfile> {
+        // Realistic shape: lower CR -> cheaper comp+sync, lower gain.
+        [0.001, 0.004, 0.011, 0.033, 0.1]
+            .iter()
+            .map(|&cr| CandidateProfile {
+                cr,
+                t_comp: 0.002 + 0.01 * cr,
+                t_sync: 0.005 + 0.4 * cr,
+                gain: (0.35 + 0.12 * (cr as f64).ln().abs().recip() * 10.0).min(0.99),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn candidate_ladder_matches_paper() {
+        let crs = candidate_crs(0.001, 0.1, 3.0);
+        assert_eq!(crs.len(), 5);
+        assert!((crs[0] - 0.1).abs() < 1e-12);
+        assert!((crs[4] - 0.001).abs() < 1e-12);
+        // ~[0.1, 0.027, 0.009, 0.003, 0.001] with exact 3x from below.
+        assert!(crs.windows(2).all(|w| w[0] > w[1]));
+    }
+
+    #[test]
+    fn gene_mapping_is_log_uniform() {
+        let p = CrProblem::new(ladder());
+        assert!((p.gene_to_cr(0.0) - 0.001).abs() < 1e-9);
+        assert!((p.gene_to_cr(1.0) - 0.1).abs() < 1e-9);
+        let mid = p.gene_to_cr(0.5);
+        assert!((mid - 0.01).abs() / 0.01 < 0.01, "log-midpoint, got {mid}");
+    }
+
+    #[test]
+    fn interpolation_hits_measured_points() {
+        let p = CrProblem::new(ladder());
+        for prof in ladder() {
+            let (tc, ts, ig) = p.objectives_at(prof.cr);
+            assert!((tc - prof.t_comp).abs() < 1e-9);
+            assert!((ts - prof.t_sync).abs() < 1e-9);
+            assert!((ig - 1.0 / prof.gain).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn solve_returns_in_bounds_and_interior() {
+        let p = CrProblem::new(ladder());
+        let c = p.solve(11);
+        assert!(c >= 0.001 - 1e-12 && c <= 0.1 + 1e-12);
+    }
+
+    #[test]
+    fn gain_dominant_profile_pushes_cr_up() {
+        // If sync is free (fast net), higher CR (higher gain) should win.
+        let fast_net: Vec<CandidateProfile> = [0.001, 0.01, 0.1]
+            .iter()
+            .map(|&cr| CandidateProfile {
+                cr,
+                t_comp: 0.001,
+                t_sync: 1e-5, // negligible
+                gain: 0.3 + 0.6 * (cr / 0.1),
+            })
+            .collect();
+        let slow_net: Vec<CandidateProfile> = [0.001, 0.01, 0.1]
+            .iter()
+            .map(|&cr| CandidateProfile {
+                cr,
+                t_comp: 0.001,
+                t_sync: 10.0 * cr, // dominant
+                gain: 0.3 + 0.6 * (cr / 0.1),
+            })
+            .collect();
+        let c_fast = CrProblem::new(fast_net).solve(5);
+        let c_slow = CrProblem::new(slow_net).solve(5);
+        assert!(
+            c_fast > c_slow,
+            "fast net should tolerate higher CR: fast {c_fast} slow {c_slow}"
+        );
+    }
+}

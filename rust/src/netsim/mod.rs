@@ -1,0 +1,54 @@
+//! α-β network simulator.
+//!
+//! The paper's testbed shapes a real 8-GPU cluster with linux `tc` (netem
+//! latency + htb bandwidth). Here the *link* is simulated: every collective
+//! really moves data between in-process worker buffers, and its wall-time is
+//! charged from the same α-β cost algebra the paper validates against
+//! hardware (Tables I/II/VI).
+//!
+//! * [`cost_model`] — closed-form collective costs (Table I, Eqn 4) and the
+//!   switching heuristics (Eqn 5).
+//! * [`schedule`] — time-varying (α, β) schedules incl. the paper's C1/C2
+//!   (Fig 6), plus jitter and congestion-episode models.
+//! * [`probe`] — the iperf/traceroute analogue: noisy observations of the
+//!   current link, with change detection.
+
+pub mod cost_model;
+pub mod probe;
+pub mod schedule;
+
+/// Virtual wall clock (seconds). The trainer advances it with compute,
+/// compression and (simulated) communication time.
+#[derive(Debug, Clone, Default)]
+pub struct VirtualClock {
+    now: f64,
+}
+
+impl VirtualClock {
+    pub fn new() -> Self {
+        VirtualClock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn advance(&mut self, seconds: f64) {
+        debug_assert!(seconds >= 0.0, "negative time advance {seconds}");
+        self.now += seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clock_advances_monotonically() {
+        let mut c = VirtualClock::new();
+        assert_eq!(c.now(), 0.0);
+        c.advance(1.5);
+        c.advance(0.5);
+        assert!((c.now() - 2.0).abs() < 1e-12);
+    }
+}

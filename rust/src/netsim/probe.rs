@@ -1,0 +1,139 @@
+//! Network probing: the iperf/traceroute analogue.
+//!
+//! The paper runs a background process that measures bandwidth with iperf
+//! and latency with traceroute, and triggers re-optimization when either
+//! drifts past a threshold. The controller here likewise never reads the
+//! schedule's ground truth — it sees only noisy [`Probe`] observations.
+
+use crate::netsim::cost_model::LinkParams;
+use crate::netsim::schedule::NetSchedule;
+use crate::util::rng::Rng;
+
+/// One observation of the link.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub epoch: f64,
+    pub alpha_ms: f64,
+    pub bw_gbps: f64,
+}
+
+impl Observation {
+    pub fn link(&self) -> LinkParams {
+        LinkParams::from_ms_gbps(self.alpha_ms, self.bw_gbps)
+    }
+}
+
+/// Periodic prober with multiplicative observation noise and
+/// relative-change detection.
+#[derive(Debug)]
+pub struct Probe {
+    schedule: NetSchedule,
+    noise_frac: f64,
+    rng: Rng,
+    last: Option<Observation>,
+    /// Relative change in α or bandwidth that counts as "network changed".
+    pub change_threshold: f64,
+}
+
+impl Probe {
+    pub fn new(schedule: NetSchedule, noise_frac: f64, seed: u64) -> Self {
+        assert!((0.0..0.5).contains(&noise_frac));
+        Probe {
+            schedule,
+            noise_frac,
+            rng: Rng::new(seed),
+            last: None,
+            change_threshold: 0.2,
+        }
+    }
+
+    /// Measure the link at `epoch` (noisy).
+    pub fn measure(&mut self, epoch: f64) -> Observation {
+        let truth = self.schedule.at(epoch);
+        let na = 1.0 + self.noise_frac * (2.0 * self.rng.f64() - 1.0);
+        let nb = 1.0 + self.noise_frac * (2.0 * self.rng.f64() - 1.0);
+        Observation {
+            epoch,
+            alpha_ms: truth.alpha_ms() * na,
+            bw_gbps: truth.bw_gbps() * nb,
+        }
+    }
+
+    /// Measure and report whether the network changed materially since the
+    /// last *accepted* observation (the paper's re-optimization trigger).
+    pub fn measure_and_detect(&mut self, epoch: f64) -> (Observation, bool) {
+        let obs = self.measure(epoch);
+        let changed = match self.last {
+            None => true,
+            Some(prev) => {
+                let da = rel_change(prev.alpha_ms, obs.alpha_ms);
+                let db = rel_change(prev.bw_gbps, obs.bw_gbps);
+                da > self.change_threshold || db > self.change_threshold
+            }
+        };
+        if changed {
+            self.last = Some(obs);
+        }
+        (obs, changed)
+    }
+
+    pub fn last(&self) -> Option<Observation> {
+        self.last
+    }
+}
+
+fn rel_change(old: f64, new: f64) -> f64 {
+    if old == 0.0 {
+        return if new == 0.0 { 0.0 } else { f64::INFINITY };
+    }
+    ((new - old) / old).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::schedule::NetSchedule;
+
+    #[test]
+    fn noise_is_bounded() {
+        let sched = NetSchedule::static_link(LinkParams::from_ms_gbps(10.0, 10.0));
+        let mut p = Probe::new(sched, 0.05, 1);
+        for i in 0..100 {
+            let o = p.measure(i as f64 * 0.1);
+            assert!((o.alpha_ms - 10.0).abs() <= 0.5 + 1e-9);
+            assert!((o.bw_gbps - 10.0).abs() <= 0.5 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn detects_c1_phase_changes_and_not_noise() {
+        let mut p = Probe::new(NetSchedule::c1(50.0), 0.02, 2);
+        // First measurement always counts as a change (establishes baseline).
+        let (_, first) = p.measure_and_detect(1.0);
+        assert!(first);
+        // Within a phase with small noise: no change events.
+        let mut changes = 0;
+        for i in 0..50 {
+            let (_, ch) = p.measure_and_detect(2.0 + i as f64 * 0.1);
+            changes += ch as u32;
+        }
+        assert_eq!(changes, 0);
+        // Crossing epoch 12 (25 Gbps -> 1 Gbps) must trigger.
+        let (_, ch) = p.measure_and_detect(13.0);
+        assert!(ch);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = NetSchedule::c2(50.0).with_jitter(0.05, 9);
+        let mut a = Probe::new(s.clone(), 0.05, 42);
+        let mut b = Probe::new(s, 0.05, 42);
+        for i in 0..20 {
+            let (oa, ca) = a.measure_and_detect(i as f64);
+            let (ob, cb) = b.measure_and_detect(i as f64);
+            assert_eq!(oa.alpha_ms, ob.alpha_ms);
+            assert_eq!(oa.bw_gbps, ob.bw_gbps);
+            assert_eq!(ca, cb);
+        }
+    }
+}

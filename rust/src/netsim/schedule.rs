@@ -1,0 +1,270 @@
+//! Time-varying network schedules — the "unpredictable network" half of the
+//! paper's title.
+//!
+//! The paper drives `tc` from a background process to emulate latency and
+//! bandwidth that change over epochs (Fig 6, configurations C1/C2) and
+//! attributes real-world variability to congestion, QoS priorities,
+//! resource sharing and scheduling (§2-C2). [`NetSchedule`] reproduces all
+//! of these as composable layers over a base piecewise schedule.
+
+use crate::netsim::cost_model::LinkParams;
+use crate::util::rng::Rng;
+
+/// Canonical (α, 1/β) levels used by the paper's C1/C2 configurations.
+pub mod levels {
+    pub const ALPHA_LOW_MS: f64 = 1.0;
+    pub const ALPHA_MOD_MS: f64 = 10.0;
+    pub const ALPHA_HIGH_MS: f64 = 50.0;
+    pub const BW_LOW_GBPS: f64 = 1.0;
+    pub const BW_MOD_GBPS: f64 = 10.0;
+    pub const BW_HIGH_GBPS: f64 = 25.0;
+}
+
+/// One piece of a piecewise-constant schedule: applies from `from_epoch`
+/// (inclusive) until the next breakpoint.
+#[derive(Debug, Clone, Copy)]
+pub struct Phase {
+    pub from_epoch: f64,
+    pub link: LinkParams,
+}
+
+/// A network schedule: maps training progress (fractional epoch) to link
+/// parameters, with optional jitter and congestion-episode overlays.
+#[derive(Debug, Clone)]
+pub struct NetSchedule {
+    pub name: String,
+    phases: Vec<Phase>,
+    /// Multiplicative observation-free jitter applied to α and 1/β
+    /// (fraction, e.g. 0.05 = ±5%). Deterministic per epoch-bucket.
+    jitter_frac: f64,
+    /// Congestion episodes: probability per epoch-bucket that effective
+    /// bandwidth collapses by `congestion_factor`.
+    congestion_prob: f64,
+    congestion_factor: f64,
+    seed: u64,
+}
+
+impl NetSchedule {
+    pub fn static_link(link: LinkParams) -> Self {
+        NetSchedule {
+            name: "static".into(),
+            phases: vec![Phase { from_epoch: 0.0, link }],
+            jitter_frac: 0.0,
+            congestion_prob: 0.0,
+            congestion_factor: 1.0,
+            seed: 0,
+        }
+    }
+
+    pub fn piecewise(name: &str, phases: Vec<Phase>) -> Self {
+        assert!(!phases.is_empty());
+        assert!(
+            phases.windows(2).all(|w| w[0].from_epoch < w[1].from_epoch),
+            "phases must be sorted by from_epoch"
+        );
+        NetSchedule {
+            name: name.into(),
+            phases,
+            jitter_frac: 0.0,
+            congestion_prob: 0.0,
+            congestion_factor: 1.0,
+            seed: 0,
+        }
+    }
+
+    /// Paper configuration C1 (Fig 6a), scaled to `total_epochs`
+    /// (50 in the paper; ResNet50 runs 100 => every phase stretches 2x).
+    ///
+    /// C1: (low-α, high-bw) epochs 1-12, (low, low) 13-24,
+    ///     (high, low) 25-36, (high, high) 37+.
+    pub fn c1(total_epochs: f64) -> Self {
+        use levels::*;
+        let s = total_epochs / 50.0;
+        NetSchedule::piecewise(
+            "c1",
+            vec![
+                Phase { from_epoch: 0.0, link: LinkParams::from_ms_gbps(ALPHA_LOW_MS, BW_HIGH_GBPS) },
+                Phase { from_epoch: 12.0 * s, link: LinkParams::from_ms_gbps(ALPHA_LOW_MS, BW_LOW_GBPS) },
+                Phase { from_epoch: 24.0 * s, link: LinkParams::from_ms_gbps(ALPHA_HIGH_MS, BW_LOW_GBPS) },
+                Phase { from_epoch: 36.0 * s, link: LinkParams::from_ms_gbps(ALPHA_HIGH_MS, BW_HIGH_GBPS) },
+            ],
+        )
+    }
+
+    /// Paper configuration C2 (Fig 6b), scaled to `total_epochs`.
+    ///
+    /// C2: (low, high) 0-11, (moderate, moderate) 12-19, (high, low) 20-27,
+    ///     (moderate, moderate) 28-35, (low, high) 36+.
+    pub fn c2(total_epochs: f64) -> Self {
+        use levels::*;
+        let s = total_epochs / 50.0;
+        NetSchedule::piecewise(
+            "c2",
+            vec![
+                Phase { from_epoch: 0.0, link: LinkParams::from_ms_gbps(ALPHA_LOW_MS, BW_HIGH_GBPS) },
+                Phase { from_epoch: 12.0 * s, link: LinkParams::from_ms_gbps(ALPHA_MOD_MS, BW_MOD_GBPS) },
+                Phase { from_epoch: 20.0 * s, link: LinkParams::from_ms_gbps(ALPHA_HIGH_MS, BW_LOW_GBPS) },
+                Phase { from_epoch: 28.0 * s, link: LinkParams::from_ms_gbps(ALPHA_MOD_MS, BW_MOD_GBPS) },
+                Phase { from_epoch: 36.0 * s, link: LinkParams::from_ms_gbps(ALPHA_LOW_MS, BW_HIGH_GBPS) },
+            ],
+        )
+    }
+
+    /// Look up a named preset ("static" requires explicit params instead).
+    pub fn preset(name: &str, total_epochs: f64) -> Option<Self> {
+        match name {
+            "c1" => Some(Self::c1(total_epochs)),
+            "c2" => Some(Self::c2(total_epochs)),
+            _ => None,
+        }
+    }
+
+    /// Overlay multiplicative jitter (±`frac`) on α and bandwidth,
+    /// deterministic per 0.1-epoch bucket.
+    pub fn with_jitter(mut self, frac: f64, seed: u64) -> Self {
+        assert!((0.0..1.0).contains(&frac));
+        self.jitter_frac = frac;
+        self.seed = seed;
+        self
+    }
+
+    /// Overlay congestion episodes: with probability `prob` per 0.1-epoch
+    /// bucket, bandwidth is divided by `factor` (>= 1).
+    pub fn with_congestion(mut self, prob: f64, factor: f64, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&prob) && factor >= 1.0);
+        self.congestion_prob = prob;
+        self.congestion_factor = factor;
+        self.seed = seed;
+        self
+    }
+
+    /// Base (overlay-free) link parameters at a fractional epoch.
+    pub fn base_at(&self, epoch: f64) -> LinkParams {
+        let mut link = self.phases[0].link;
+        for p in &self.phases {
+            if epoch >= p.from_epoch {
+                link = p.link;
+            } else {
+                break;
+            }
+        }
+        link
+    }
+
+    /// Effective link parameters at a fractional epoch, overlays applied.
+    /// Deterministic: the same (schedule, seed, epoch) always yields the
+    /// same parameters, so experiments replay exactly.
+    pub fn at(&self, epoch: f64) -> LinkParams {
+        let mut link = self.base_at(epoch);
+        if self.jitter_frac == 0.0 && self.congestion_prob == 0.0 {
+            return link;
+        }
+        // Derive a per-bucket RNG: same bucket -> same perturbation.
+        let bucket = (epoch * 10.0).floor() as u64;
+        let mut rng = Rng::new(self.seed ^ bucket.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if self.jitter_frac > 0.0 {
+            let ja = 1.0 + self.jitter_frac * (2.0 * rng.f64() - 1.0);
+            let jb = 1.0 + self.jitter_frac * (2.0 * rng.f64() - 1.0);
+            link.alpha *= ja;
+            link.beta /= jb; // jitter bandwidth, not beta, symmetrically
+        }
+        if self.congestion_prob > 0.0 && rng.f64() < self.congestion_prob {
+            link.beta *= self.congestion_factor;
+        }
+        link
+    }
+
+    /// Breakpoints (for harnesses that print the Fig 6 schedule).
+    pub fn phases(&self) -> &[Phase] {
+        &self.phases
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn c1_matches_fig6a() {
+        let s = NetSchedule::c1(50.0);
+        let at = |e: f64| {
+            let l = s.at(e);
+            (l.alpha_ms().round(), l.bw_gbps().round())
+        };
+        assert_eq!(at(0.0), (1.0, 25.0));
+        assert_eq!(at(11.9), (1.0, 25.0));
+        assert_eq!(at(12.1), (1.0, 1.0));
+        assert_eq!(at(25.0), (50.0, 1.0));
+        assert_eq!(at(40.0), (50.0, 25.0));
+    }
+
+    #[test]
+    fn c2_matches_fig6b_and_changes_more_often() {
+        let c1 = NetSchedule::c1(50.0);
+        let c2 = NetSchedule::c2(50.0);
+        assert_eq!(c2.phases().len(), 5);
+        assert!(c2.phases().len() > c1.phases().len());
+        let l = c2.at(22.0);
+        assert_eq!(l.alpha_ms().round(), 50.0);
+        assert_eq!(l.bw_gbps().round(), 1.0);
+        let l = c2.at(30.0);
+        assert_eq!(l.alpha_ms().round(), 10.0);
+    }
+
+    #[test]
+    fn resnet50_scaling_stretches_2x() {
+        let s = NetSchedule::c1(100.0);
+        // C1 for ResNet50 applies (low, high) through epoch 1-24.
+        assert_eq!(s.at(20.0).bw_gbps().round(), 25.0);
+        assert_eq!(s.at(25.0).bw_gbps().round(), 1.0);
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let s = NetSchedule::c1(50.0).with_jitter(0.1, 7);
+        let a = s.at(3.14);
+        let b = s.at(3.14);
+        assert_eq!(a, b, "same epoch must give same link");
+        let base = s.base_at(3.14);
+        assert!((a.alpha / base.alpha - 1.0).abs() <= 0.1 + 1e-9);
+        let ratio = base.beta / a.beta;
+        assert!((ratio - 1.0).abs() <= 0.1 + 1e-9);
+    }
+
+    #[test]
+    fn congestion_reduces_bandwidth_sometimes() {
+        let s = NetSchedule::static_link(LinkParams::from_ms_gbps(1.0, 10.0))
+            .with_congestion(0.5, 10.0, 3);
+        let mut congested = 0;
+        let mut free = 0;
+        for i in 0..200 {
+            let l = s.at(i as f64 * 0.1);
+            if l.bw_gbps() < 2.0 {
+                congested += 1;
+            } else {
+                free += 1;
+            }
+        }
+        assert!(congested > 30, "{congested}");
+        assert!(free > 30, "{free}");
+    }
+
+    #[test]
+    fn preset_lookup() {
+        assert!(NetSchedule::preset("c1", 50.0).is_some());
+        assert!(NetSchedule::preset("c2", 50.0).is_some());
+        assert!(NetSchedule::preset("nope", 50.0).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted")]
+    fn unsorted_phases_rejected() {
+        NetSchedule::piecewise(
+            "bad",
+            vec![
+                Phase { from_epoch: 5.0, link: LinkParams::from_ms_gbps(1.0, 1.0) },
+                Phase { from_epoch: 1.0, link: LinkParams::from_ms_gbps(1.0, 1.0) },
+            ],
+        );
+    }
+}

@@ -1,0 +1,148 @@
+//! Artifact registry: locates `artifacts/`, parses model manifests
+//! (`<name>_meta.txt`), and names the per-preset HLO files.
+
+use crate::tensor::Layout;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Locate the artifacts directory: `$FLEXCOMM_ARTIFACTS`, else walk up from
+/// the current directory looking for `artifacts/`.
+pub fn find_artifacts_dir() -> Result<PathBuf> {
+    if let Ok(dir) = std::env::var("FLEXCOMM_ARTIFACTS") {
+        let p = PathBuf::from(dir);
+        if p.is_dir() {
+            return Ok(p);
+        }
+        bail!("FLEXCOMM_ARTIFACTS={} is not a directory", p.display());
+    }
+    let mut cur = std::env::current_dir()?;
+    loop {
+        let cand = cur.join("artifacts");
+        if cand.is_dir() {
+            return Ok(cand);
+        }
+        if !cur.pop() {
+            bail!(
+                "artifacts/ not found (run `make artifacts` at the repo root, \
+                 or set FLEXCOMM_ARTIFACTS)"
+            );
+        }
+    }
+}
+
+/// Parsed `<name>_meta.txt` manifest + derived paths.
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub name: String,
+    pub dir: PathBuf,
+    pub meta: BTreeMap<String, String>,
+    pub layout: Layout,
+}
+
+impl ModelArtifacts {
+    pub fn load(dir: &Path, name: &str) -> Result<ModelArtifacts> {
+        let meta_path = dir.join(format!("{name}_meta.txt"));
+        let meta_text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("{} (run `make artifacts`?)", meta_path.display()))?;
+        let mut meta = BTreeMap::new();
+        for line in meta_text.lines() {
+            if let Some((k, v)) = line.split_once('=') {
+                meta.insert(k.trim().to_string(), v.trim().to_string());
+            }
+        }
+        let layout = Layout::load(
+            dir.join(format!("{name}_layout.txt"))
+                .to_str()
+                .context("path utf8")?,
+        )?;
+        Ok(ModelArtifacts { name: name.to_string(), dir: dir.to_path_buf(), meta, layout })
+    }
+
+    pub fn kind(&self) -> &str {
+        self.meta.get("kind").map(|s| s.as_str()).unwrap_or("unknown")
+    }
+
+    pub fn param_count(&self) -> Result<usize> {
+        let p: usize = self
+            .meta
+            .get("param_count")
+            .context("meta missing param_count")?
+            .parse()?;
+        anyhow::ensure!(p == self.layout.total(), "meta/layout param count mismatch");
+        Ok(p)
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        Ok(self
+            .meta
+            .get(key)
+            .with_context(|| format!("meta missing `{key}`"))?
+            .parse()?)
+    }
+
+    pub fn grad_path(&self) -> PathBuf {
+        self.dir.join(format!("{}_grad.hlo.txt", self.name))
+    }
+
+    pub fn eval_path(&self) -> PathBuf {
+        self.dir.join(format!("{}_eval.hlo.txt", self.name))
+    }
+
+    pub fn step_path(&self) -> PathBuf {
+        self.dir.join(format!("{}_step.hlo.txt", self.name))
+    }
+
+    pub fn init_path(&self) -> PathBuf {
+        self.dir.join(format!("{}_init.f32", self.name))
+    }
+
+    pub fn ef_topk_path(&self) -> Result<PathBuf> {
+        Ok(self.dir.join(format!("ef_topk_{}.hlo.txt", self.param_count()?)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(
+            dir.join("toy_meta.txt"),
+            "kind=mlp\nparam_count=15\nbatch=4\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("toy_layout.txt"), "a 0 10\nb 10 5\n").unwrap();
+    }
+
+    #[test]
+    fn load_meta_and_layout() {
+        let dir = std::env::temp_dir().join("flexcomm_artifact_test");
+        write_fixture(&dir);
+        let m = ModelArtifacts::load(&dir, "toy").unwrap();
+        assert_eq!(m.kind(), "mlp");
+        assert_eq!(m.param_count().unwrap(), 15);
+        assert_eq!(m.meta_usize("batch").unwrap(), 4);
+        assert!(m.grad_path().ends_with("toy_grad.hlo.txt"));
+        assert!(m.ef_topk_path().unwrap().ends_with("ef_topk_15.hlo.txt"));
+    }
+
+    #[test]
+    fn mismatched_counts_rejected() {
+        let dir = std::env::temp_dir().join("flexcomm_artifact_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("bad_meta.txt"), "kind=mlp\nparam_count=99\n").unwrap();
+        std::fs::write(dir.join("bad_layout.txt"), "a 0 10\n").unwrap();
+        let m = ModelArtifacts::load(&dir, "bad").unwrap();
+        assert!(m.param_count().is_err());
+    }
+
+    #[test]
+    fn missing_meta_is_actionable() {
+        let dir = std::env::temp_dir().join("flexcomm_artifact_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = ModelArtifacts::load(&dir, "ghost").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,94 @@
+//! PJRT execution engine: loads AOT-lowered HLO *text* artifacts
+//! (`artifacts/*.hlo.txt`, produced once by `python/compile/aot.py`) and
+//! executes them on the CPU PJRT client. Python never runs here.
+//!
+//! Interchange is HLO text, not serialized protos: jax >= 0.5 emits 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use anyhow::{Context, Result};
+
+/// Wrapper around the PJRT CPU client.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text artifact.
+    pub fn load(&self, path: &str) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path}"))?;
+        Ok(Executable { exe, name: path.to_string() })
+    }
+}
+
+/// One compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened tuple elements
+    /// (aot.py lowers with return_tuple=True).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        lit.to_tuple().context("decomposing result tuple")
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal helpers
+// ---------------------------------------------------------------------------
+
+/// 1-D f32 literal.
+pub fn lit_f32(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+/// 2-D i32 literal (row-major `rows x cols`).
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(v.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// 2-D f32 literal (row-major `rows x cols`).
+pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    anyhow::ensure!(v.len() == rows * cols, "shape mismatch");
+    Ok(xla::Literal::vec1(v).reshape(&[rows as i64, cols as i64])?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a Vec<f32> from a literal.
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(l.to_vec::<f32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn to_scalar_f32(l: &xla::Literal) -> Result<f32> {
+    Ok(l.get_first_element::<f32>()?)
+}

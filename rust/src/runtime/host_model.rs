@@ -1,0 +1,457 @@
+//! Host-side gradient sources (no PJRT required).
+//!
+//! * [`HostMlp`] — a pure-rust MLP with manual backprop on the synthetic
+//!   cluster task. Numerically the same architecture as the python `mlp`
+//!   preset; used by the accuracy-bearing table harnesses (III/IV/V) where
+//!   thousands of steps must run fast, and cross-checked against the PJRT
+//!   path in `rust/tests/`.
+//! * [`SyntheticGrad`] — paper-scale gradient *tensors* (1e8..1e9 params)
+//!   with realistic heavy-tailed statistics for cost-only experiments
+//!   (Tables II/VI, Figs 2/5); no model behind them.
+
+use crate::coordinator::worker::GradSource;
+use crate::data::synth::ClusterDataset;
+use crate::tensor::Layout;
+use crate::util::rng::Rng;
+
+/// Pure-rust MLP classifier: dims `[features, hidden.., classes]`,
+/// ReLU activations, softmax cross-entropy.
+pub struct HostMlp {
+    dims: Vec<usize>,
+    layout: Layout,
+    data: ClusterDataset,
+    batch: usize,
+    /// Class-skew across workers (0 = iid; the federated knob).
+    pub skew: f64,
+    eval_cache: Option<(Vec<f32>, Vec<i32>)>,
+    seed: u64,
+}
+
+impl HostMlp {
+    pub fn new(features: usize, hidden: &[usize], classes: usize, batch: usize, seed: u64) -> Self {
+        HostMlp::with_noise(features, hidden, classes, batch, 0.35, seed)
+    }
+
+    /// Like [`HostMlp::new`] with an explicit cluster-noise level —
+    /// `noise/sep` controls task hardness (the Bayes accuracy ceiling).
+    pub fn with_noise(
+        features: usize,
+        hidden: &[usize],
+        classes: usize,
+        batch: usize,
+        noise: f32,
+        seed: u64,
+    ) -> Self {
+        HostMlp::with_data_params(features, hidden, classes, batch, 2.0, noise, seed)
+    }
+
+    /// Full control over the cluster task (separation AND noise).
+    pub fn with_data_params(
+        features: usize,
+        hidden: &[usize],
+        classes: usize,
+        batch: usize,
+        sep: f32,
+        noise: f32,
+        seed: u64,
+    ) -> Self {
+        let mut dims = vec![features];
+        dims.extend_from_slice(hidden);
+        dims.push(classes);
+        let mut sizes: Vec<(String, usize)> = Vec::new();
+        for i in 0..dims.len() - 1 {
+            sizes.push((format!("fc{i}.w"), dims[i] * dims[i + 1]));
+            sizes.push((format!("fc{i}.b"), dims[i + 1]));
+        }
+        let layout = Layout::from_sizes(
+            &sizes.iter().map(|(n, s)| (n.as_str(), *s)).collect::<Vec<_>>(),
+        );
+        let data = ClusterDataset::new(features, classes, sep, noise, seed);
+        HostMlp { dims, layout, data, batch, skew: 0.0, eval_cache: None, seed }
+    }
+
+    /// The default config mirroring the python `mlp` preset.
+    pub fn default_preset(seed: u64) -> Self {
+        HostMlp::new(64, &[256, 128], 16, 32, seed)
+    }
+
+    /// A harder task (overlapping clusters): the Bayes ceiling is ~89%, so
+    /// accuracy stays off 100% and statistical-efficiency differences
+    /// between CRs are visible — used by the Table III/IV/V harnesses.
+    pub fn hard_preset(seed: u64) -> Self {
+        // 53,664 params so CR 0.001 still keeps k = 54 (a resolution the
+        // paper's 11M+ models always have); Bayes ceiling ~89%.
+        HostMlp::with_data_params(64, &[256, 128], 32, 32, 0.8, 1.8, seed)
+    }
+
+    fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    fn slice<'a>(&self, params: &'a [f32], layer: usize) -> (&'a [f32], &'a [f32]) {
+        let w = &self.layout.layers[2 * layer];
+        let b = &self.layout.layers[2 * layer + 1];
+        (
+            &params[w.offset..w.offset + w.size],
+            &params[b.offset..b.offset + b.size],
+        )
+    }
+
+    /// Forward returning all activations (a[0] = input .. a[L] = logits).
+    fn forward(&self, params: &[f32], x: &[f32], batch: usize) -> Vec<Vec<f32>> {
+        let mut acts = vec![x.to_vec()];
+        for l in 0..self.n_layers() {
+            let (w, b) = self.slice(params, l);
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let a = acts.last().unwrap();
+            let mut z = vec![0.0f32; batch * dout];
+            for r in 0..batch {
+                let row = &a[r * din..(r + 1) * din];
+                let out = &mut z[r * dout..(r + 1) * dout];
+                out.copy_from_slice(b);
+                for (i, &xi) in row.iter().enumerate() {
+                    if xi != 0.0 {
+                        let wrow = &w[i * dout..(i + 1) * dout];
+                        for (o, &wv) in out.iter_mut().zip(wrow) {
+                            *o += xi * wv;
+                        }
+                    }
+                }
+            }
+            if l < self.n_layers() - 1 {
+                for v in z.iter_mut() {
+                    *v = v.max(0.0);
+                }
+            }
+            acts.push(z);
+        }
+        acts
+    }
+
+    /// (loss, grads) on one (x, y) batch via manual backprop.
+    fn loss_grad(&self, params: &[f32], x: &[f32], y: &[i32], batch: usize) -> (f64, Vec<f32>) {
+        let acts = self.forward(params, x, batch);
+        let classes = *self.dims.last().unwrap();
+        let logits = acts.last().unwrap();
+
+        // Softmax CE + dlogits.
+        let mut loss = 0.0f64;
+        let mut dz = vec![0.0f32; batch * classes];
+        for r in 0..batch {
+            let row = &logits[r * classes..(r + 1) * classes];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            let exps: Vec<f32> = row.iter().map(|&v| (v - mx).exp()).collect();
+            let z: f32 = exps.iter().sum();
+            let label = y[r] as usize;
+            loss += -((exps[label] / z).ln() as f64);
+            let drow = &mut dz[r * classes..(r + 1) * classes];
+            for c in 0..classes {
+                drow[c] = (exps[c] / z - (c == label) as u8 as f32) / batch as f32;
+            }
+        }
+        loss /= batch as f64;
+
+        // Backprop.
+        let mut grads = vec![0.0f32; self.layout.total()];
+        let mut dz_cur = dz;
+        for l in (0..self.n_layers()).rev() {
+            let (w, _) = self.slice(params, l);
+            let (din, dout) = (self.dims[l], self.dims[l + 1]);
+            let a = &acts[l];
+            let wl = &self.layout.layers[2 * l];
+            let bl = &self.layout.layers[2 * l + 1];
+            {
+                let gw = &mut grads[wl.offset..wl.offset + wl.size];
+                for r in 0..batch {
+                    let arow = &a[r * din..(r + 1) * din];
+                    let drow = &dz_cur[r * dout..(r + 1) * dout];
+                    for (i, &ai) in arow.iter().enumerate() {
+                        if ai != 0.0 {
+                            let grow = &mut gw[i * dout..(i + 1) * dout];
+                            for (g, &d) in grow.iter_mut().zip(drow) {
+                                *g += ai * d;
+                            }
+                        }
+                    }
+                }
+            }
+            {
+                let gb = &mut grads[bl.offset..bl.offset + bl.size];
+                for r in 0..batch {
+                    let drow = &dz_cur[r * dout..(r + 1) * dout];
+                    for (g, &d) in gb.iter_mut().zip(drow) {
+                        *g += d;
+                    }
+                }
+            }
+            if l > 0 {
+                // da = dz W^T, then mask by relu'(a) (a itself is post-relu).
+                let mut da = vec![0.0f32; batch * din];
+                for r in 0..batch {
+                    let drow = &dz_cur[r * dout..(r + 1) * dout];
+                    let darow = &mut da[r * din..(r + 1) * din];
+                    for i in 0..din {
+                        let wrow = &w[i * dout..(i + 1) * dout];
+                        let mut acc = 0.0f32;
+                        for (d, &wv) in drow.iter().zip(wrow) {
+                            acc += d * wv;
+                        }
+                        darow[i] = acc;
+                    }
+                    let arow = &a[r * din..(r + 1) * din];
+                    for (dv, &av) in darow.iter_mut().zip(arow) {
+                        if av <= 0.0 {
+                            *dv = 0.0;
+                        }
+                    }
+                }
+                dz_cur = da;
+            }
+        }
+        (loss, grads)
+    }
+}
+
+impl GradSource for HostMlp {
+    fn dim(&self) -> usize {
+        self.layout.total()
+    }
+
+    fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        let mut rng = Rng::new(self.seed ^ 0x1217);
+        let mut p = vec![0.0f32; self.layout.total()];
+        for l in 0..self.n_layers() {
+            let wl = &self.layout.layers[2 * l];
+            let std = (2.0 / self.dims[l] as f64).sqrt() as f32;
+            rng.fill_normal(&mut p[wl.offset..wl.offset + wl.size], std.min(0.08));
+            // biases stay zero
+        }
+        p
+    }
+
+    fn grad(&mut self, params: &[f32], worker: usize, n_workers: usize, step: u64) -> (f64, Vec<f32>) {
+        let (x, y) = self.data.batch(worker, n_workers, step, self.batch, self.skew);
+        self.loss_grad(params, &x, &y, self.batch)
+    }
+
+    fn eval(&mut self, params: &[f32]) -> (f64, f64) {
+        let n = 1024;
+        if self.eval_cache.is_none() {
+            self.eval_cache = Some(self.data.eval_batch(n));
+        }
+        let (x, y) = self.eval_cache.clone().unwrap();
+        let acts = self.forward(params, &x, n);
+        let classes = *self.dims.last().unwrap();
+        let logits = acts.last().unwrap();
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for r in 0..n {
+            let row = &logits[r * classes..(r + 1) * classes];
+            let mx = row.iter().cloned().fold(f32::MIN, f32::max);
+            let z: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+            let label = y[r] as usize;
+            loss += -(((row[label] - mx).exp() / z).ln() as f64);
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            correct += (pred == label) as usize;
+        }
+        (loss / n as f64, correct as f64 / n as f64)
+    }
+
+    fn name(&self) -> String {
+        format!("host-mlp{:?}", self.dims)
+    }
+}
+
+/// Paper-scale synthetic gradients for cost-only experiments.
+///
+/// Statistics: heavy-tailed mixture (95% N(0,σ²) + 5% N(0,(8σ)²)) so Top-k
+/// selection is meaningful, with σ decaying over steps like real training
+/// (§2-B: gradients start volatile and saturate).
+pub struct SyntheticGrad {
+    layout: Layout,
+    seed: u64,
+    decay_steps: f64,
+}
+
+impl SyntheticGrad {
+    pub fn new(dim: usize, seed: u64) -> Self {
+        SyntheticGrad { layout: synthetic_model_layout(dim), seed, decay_steps: 500.0 }
+    }
+
+    pub fn with_layout(layout: Layout, seed: u64) -> Self {
+        SyntheticGrad { layout, seed, decay_steps: 500.0 }
+    }
+
+    fn sigma(&self, step: u64) -> f32 {
+        (1.0 / (1.0 + step as f64 / self.decay_steps)).sqrt() as f32
+    }
+}
+
+/// A DNN-shaped layout: sizes skewed like real models (embedding/head huge,
+/// norms tiny) so LWTopk-vs-fused experiments see realistic imbalance.
+pub fn synthetic_model_layout(total: usize) -> Layout {
+    // ~60% in 2 big tensors, rest split across 14 medium/small ones.
+    let big = total * 3 / 10;
+    let mut sizes: Vec<(String, usize)> = vec![
+        ("embed".into(), big.max(1)),
+        ("head".into(), big.max(1)),
+    ];
+    let mut rest = total - sizes.iter().map(|s| s.1).sum::<usize>();
+    let n_mid = 14;
+    for i in 0..n_mid {
+        let s = if i + 1 == n_mid { rest } else { (rest / (n_mid - i)).max(1) };
+        if s == 0 {
+            break;
+        }
+        sizes.push((format!("block{i}"), s));
+        rest -= s;
+    }
+    Layout::from_sizes(&sizes.iter().map(|(n, s)| (n.as_str(), *s)).collect::<Vec<_>>())
+}
+
+impl GradSource for SyntheticGrad {
+    fn dim(&self) -> usize {
+        self.layout.total()
+    }
+
+    fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        vec![0.0; self.layout.total()]
+    }
+
+    fn grad(&mut self, _params: &[f32], worker: usize, _n: usize, step: u64) -> (f64, Vec<f32>) {
+        let mut rng = Rng::new(
+            self.seed
+                ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ step.wrapping_mul(0xA076_1D64_78BD_642F),
+        );
+        let sigma = self.sigma(step);
+        let dim = self.dim();
+        let mut g = vec![0.0f32; dim];
+        for v in g.iter_mut() {
+            let heavy = rng.f64() < 0.05;
+            *v = rng.normal_f32(0.0, if heavy { 8.0 * sigma } else { sigma });
+        }
+        // Synthetic "loss": decays deterministically; accuracy is N/A.
+        let loss = 2.0 * self.sigma(step) as f64;
+        (loss, g)
+    }
+
+    fn eval(&mut self, _params: &[f32]) -> (f64, f64) {
+        (f64::NAN, f64::NAN)
+    }
+
+    fn name(&self) -> String {
+        format!("synthetic-{}", self.dim())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mlp_gradcheck_small() {
+        // Finite-difference check on a tiny network.
+        let mut mlp = HostMlp::new(3, &[4], 2, 4, 0);
+        let params = mlp.init_params();
+        let (x, y) = mlp.data.batch(0, 1, 0, 4, 0.0);
+        let (_, g) = mlp.loss_grad(&params, &x, &y, 4);
+        let eps = 1e-3f32;
+        let mut checked = 0;
+        for idx in [0usize, 3, 7, 12, params.len() - 1, params.len() / 2] {
+            let mut p1 = params.clone();
+            p1[idx] += eps;
+            let (l1, _) = mlp.loss_grad(&p1, &x, &y, 4);
+            let mut p2 = params.clone();
+            p2[idx] -= eps;
+            let (l2, _) = mlp.loss_grad(&p2, &x, &y, 4);
+            let fd = ((l1 - l2) / (2.0 * eps as f64)) as f32;
+            assert!(
+                (fd - g[idx]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "idx {idx}: fd {fd} vs analytic {}",
+                g[idx]
+            );
+            checked += 1;
+        }
+        assert_eq!(checked, 6);
+    }
+
+    #[test]
+    fn mlp_learns_with_plain_sgd() {
+        let mut mlp = HostMlp::default_preset(1);
+        let mut params = mlp.init_params();
+        let (l0, a0) = mlp.eval(&params);
+        for step in 0..150 {
+            let (_, g) = mlp.grad(&params, 0, 1, step);
+            for (p, gv) in params.iter_mut().zip(&g) {
+                *p -= 0.4 * gv;
+            }
+        }
+        let (l1, a1) = mlp.eval(&params);
+        assert!(l1 < l0 * 0.5, "loss {l0} -> {l1}");
+        assert!(a1 > a0 + 0.3, "acc {a0} -> {a1}");
+        assert!(a1 > 0.8, "final acc {a1}");
+    }
+
+    #[test]
+    fn mlp_deterministic() {
+        let mut a = HostMlp::default_preset(3);
+        let mut b = HostMlp::default_preset(3);
+        let pa = a.init_params();
+        let pb = b.init_params();
+        assert_eq!(pa, pb);
+        let (la, ga) = a.grad(&pa, 2, 4, 5);
+        let (lb, gb) = b.grad(&pb, 2, 4, 5);
+        assert_eq!(la, lb);
+        assert_eq!(ga, gb);
+    }
+
+    #[test]
+    fn synthetic_layout_covers_total() {
+        for total in [1000usize, 12345, 11_700_000] {
+            let l = synthetic_model_layout(total);
+            assert_eq!(l.total(), total);
+            assert!(l.num_layers() >= 3);
+        }
+    }
+
+    #[test]
+    fn synthetic_grads_decay_and_are_heavy_tailed() {
+        let mut s = SyntheticGrad::new(50_000, 0);
+        let p = s.init_params();
+        let (_, g0) = s.grad(&p, 0, 8, 0);
+        let (_, g9) = s.grad(&p, 0, 8, 5000);
+        let e0: f64 = g0.iter().map(|&v| (v as f64).powi(2)).sum();
+        let e9: f64 = g9.iter().map(|&v| (v as f64).powi(2)).sum();
+        assert!(e9 < e0 * 0.5, "energy must decay: {e0} -> {e9}");
+        // Heavy tail: top 1% carries far more than 1% of the energy.
+        let mut mags: Vec<f32> = g0.iter().map(|v| v * v).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let top1: f64 = mags[..500].iter().map(|&v| v as f64).sum();
+        assert!(top1 / e0 > 0.05, "top-1% energy share {}", top1 / e0);
+    }
+
+    #[test]
+    fn synthetic_workers_differ_but_replay() {
+        let mut s = SyntheticGrad::new(1000, 7);
+        let p = vec![0.0; 1000];
+        let (_, a) = s.grad(&p, 0, 4, 3);
+        let (_, b) = s.grad(&p, 1, 4, 3);
+        let (_, a2) = s.grad(&p, 0, 4, 3);
+        assert_ne!(a, b);
+        assert_eq!(a, a2);
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime (L3 ⇄ L2 boundary): load the AOT-lowered HLO artifacts and
+//! execute them from the training hot path, plus host-side gradient sources
+//! for simulator-only experiments.
+
+pub mod artifact;
+pub mod engine;
+pub mod host_model;
+pub mod pjrt_model;
+
+pub use artifact::{find_artifacts_dir, ModelArtifacts};
+pub use engine::Engine;
+pub use host_model::{HostMlp, SyntheticGrad};
+pub use pjrt_model::PjrtModel;

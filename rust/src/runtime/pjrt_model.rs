@@ -1,0 +1,206 @@
+//! [`PjrtModel`]: the production gradient source — executes the L2 jax
+//! model (with its L1 Pallas kernels lowered inside) via PJRT.
+//!
+//! Supports both artifact kinds exported by `aot.py`:
+//! * `transformer` — grad/eval consume `(params[P], tokens[B, T+1] i32)`;
+//!   batches come from [`MarkovCorpus`].
+//! * `mlp` — grad/eval consume `(params[P], x[B, F] f32, y[B] i32)`;
+//!   batches come from [`ClusterDataset`].
+//!
+//! Also wraps the fused `ef_topk_<P>` artifact (threshold estimation +
+//! EF-compress, L1 Pallas kernels) so the coordinator can offload
+//! compression to XLA — the integration tests pin it against the rust
+//! [`MsTopk`](crate::compress::MsTopk) implementation.
+
+use crate::coordinator::worker::GradSource;
+use crate::data::synth::{ClusterDataset, MarkovCorpus};
+use crate::runtime::artifact::ModelArtifacts;
+use crate::runtime::engine::{
+    lit_f32, lit_f32_2d, lit_i32_2d, lit_scalar, to_scalar_f32, to_vec_f32, Engine, Executable,
+};
+use crate::tensor::Layout;
+use anyhow::{bail, Context, Result};
+
+enum Task {
+    Transformer { corpus: MarkovCorpus, batch: usize, seq: usize },
+    Mlp { data: ClusterDataset, batch: usize, features: usize },
+}
+
+/// PJRT-backed model.
+pub struct PjrtModel {
+    arts: ModelArtifacts,
+    grad_exe: Executable,
+    eval_exe: Executable,
+    step_exe: Option<Executable>,
+    ef_exe: Option<Executable>,
+    task: Task,
+    dim: usize,
+    /// Class-skew for the MLP task (federated knob); ignored by the LM.
+    pub skew: f64,
+}
+
+impl PjrtModel {
+    /// Load a preset's artifacts on `engine`.
+    pub fn load(engine: &Engine, arts: ModelArtifacts, seed: u64) -> Result<PjrtModel> {
+        let dim = arts.param_count()?;
+        let grad_exe = engine.load(arts.grad_path().to_str().context("utf8")?)?;
+        let eval_exe = engine.load(arts.eval_path().to_str().context("utf8")?)?;
+        let step_exe = if arts.step_path().exists() {
+            Some(engine.load(arts.step_path().to_str().context("utf8")?)?)
+        } else {
+            None
+        };
+        let ef_path = arts.ef_topk_path()?;
+        let ef_exe = if ef_path.exists() {
+            Some(engine.load(ef_path.to_str().context("utf8")?)?)
+        } else {
+            None
+        };
+        let task = match arts.kind() {
+            "transformer" => Task::Transformer {
+                corpus: MarkovCorpus::new(arts.meta_usize("vocab")?, 4, 0.8, seed),
+                batch: arts.meta_usize("batch")?,
+                seq: arts.meta_usize("seq")?,
+            },
+            "mlp" => Task::Mlp {
+                data: ClusterDataset::new(
+                    arts.meta_usize("features")?,
+                    arts.meta_usize("classes")?,
+                    2.0,
+                    0.35,
+                    seed,
+                ),
+                batch: arts.meta_usize("batch")?,
+                features: arts.meta_usize("features")?,
+            },
+            k => bail!("unknown artifact kind `{k}`"),
+        };
+        Ok(PjrtModel { arts, grad_exe, eval_exe, step_exe, ef_exe, task, dim, skew: 0.0 })
+    }
+
+    fn batch_literals(
+        &self,
+        worker: usize,
+        n_workers: usize,
+        step: u64,
+    ) -> Result<Vec<xla::Literal>> {
+        match &self.task {
+            Task::Transformer { corpus, batch, seq } => {
+                let toks = corpus.batch(worker, step, *batch, *seq);
+                Ok(vec![lit_i32_2d(&toks, *batch, seq + 1)?])
+            }
+            Task::Mlp { data, batch, features } => {
+                let (x, y) = data.batch(worker, n_workers, step, *batch, self.skew);
+                Ok(vec![
+                    lit_f32_2d(&x, *batch, *features)?,
+                    xla::Literal::vec1(&y),
+                ])
+            }
+        }
+    }
+
+    fn run_loss_grad(&self, params: &[f32], batch: Vec<xla::Literal>) -> Result<(f64, Vec<f32>)> {
+        let mut inputs = vec![lit_f32(params)];
+        inputs.extend(batch);
+        let out = self.grad_exe.run(&inputs)?;
+        anyhow::ensure!(out.len() == 2, "grad artifact must return (loss, grads)");
+        Ok((to_scalar_f32(&out[0])? as f64, to_vec_f32(&out[1])?))
+    }
+
+    /// SGD+momentum step executed by the L2 `step` artifact.
+    pub fn sgd_step(
+        &self,
+        params: &[f32],
+        momentum: &[f32],
+        grads: &[f32],
+        lr: f32,
+        mom: f32,
+        wd: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let exe = self.step_exe.as_ref().context("no step artifact")?;
+        let out = exe.run(&[
+            lit_f32(params),
+            lit_f32(momentum),
+            lit_f32(grads),
+            lit_scalar(lr),
+            lit_scalar(mom),
+            lit_scalar(wd),
+        ])?;
+        anyhow::ensure!(out.len() == 2, "step artifact must return (params, mom)");
+        Ok((to_vec_f32(&out[0])?, to_vec_f32(&out[1])?))
+    }
+
+    /// Fused L1 EF-compress: `(g, residual, k)` ->
+    /// `(g_c, residual', ||g_c||², ||g_e||², tau)`.
+    pub fn ef_topk(
+        &self,
+        g: &[f32],
+        residual: &[f32],
+        k: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f64, f64, f32)> {
+        let exe = self.ef_exe.as_ref().context("no ef_topk artifact")?;
+        let out = exe.run(&[lit_f32(g), lit_f32(residual), lit_scalar(k)])?;
+        anyhow::ensure!(out.len() == 5, "ef_topk must return 5 values");
+        Ok((
+            to_vec_f32(&out[0])?,
+            to_vec_f32(&out[1])?,
+            to_scalar_f32(&out[2])? as f64,
+            to_scalar_f32(&out[3])? as f64,
+            to_scalar_f32(&out[4])?,
+        ))
+    }
+
+    pub fn has_ef_topk(&self) -> bool {
+        self.ef_exe.is_some()
+    }
+
+    pub fn artifacts(&self) -> &ModelArtifacts {
+        &self.arts
+    }
+}
+
+impl GradSource for PjrtModel {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn layout(&self) -> &Layout {
+        &self.arts.layout
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        // Use the exact init snapshot python wrote so L2 and L3 agree.
+        crate::tensor::load_f32_file(
+            self.arts.init_path().to_str().expect("utf8"),
+        )
+        .expect("reading init snapshot (run `make artifacts`)")
+    }
+
+    fn grad(&mut self, params: &[f32], worker: usize, n_workers: usize, step: u64) -> (f64, Vec<f32>) {
+        let batch = self
+            .batch_literals(worker, n_workers, step)
+            .expect("building batch literals");
+        self.run_loss_grad(params, batch).expect("PJRT grad execution")
+    }
+
+    fn eval(&mut self, params: &[f32]) -> (f64, f64) {
+        // Held-out shard: a worker id outside the training range.
+        let batch = self
+            .batch_literals(usize::MAX / 2, 1, u64::MAX / 2)
+            .expect("eval batch");
+        let mut inputs = vec![lit_f32(params)];
+        inputs.extend(batch);
+        let out = self.eval_exe.run(&inputs).expect("PJRT eval execution");
+        let loss = to_scalar_f32(&out[0]).expect("loss") as f64;
+        let correct = to_scalar_f32(&out[1]).expect("correct") as f64;
+        let total = match &self.task {
+            Task::Transformer { batch, seq, .. } => (*batch * *seq) as f64,
+            Task::Mlp { batch, .. } => *batch as f64,
+        };
+        (loss, correct / total)
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt-{}", self.arts.name)
+    }
+}

@@ -1,0 +1,191 @@
+//! Flat parameter/gradient tensors with a named-layer layout.
+//!
+//! The L2 artifacts expose the model as ONE flat f32 vector plus a layout
+//! manifest (`artifacts/<model>_layout.txt`: `name offset size` per tensor).
+//! The flat view is what fused AR-Topk compresses; the layout gives LWTopk
+//! its layer boundaries and the coordinator its bucketing.
+
+use anyhow::{bail, Context, Result};
+
+/// One named parameter tensor inside the flat vector.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerInfo {
+    pub name: String,
+    pub offset: usize,
+    pub size: usize,
+}
+
+/// Ordered layer table covering `[0, total)` contiguously.
+#[derive(Debug, Clone, Default)]
+pub struct Layout {
+    pub layers: Vec<LayerInfo>,
+}
+
+impl Layout {
+    /// Parse the `name offset size` rows written by `python/compile/aot.py`.
+    pub fn parse(text: &str) -> Result<Layout> {
+        let mut layers = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let (name, off, size) = (it.next(), it.next(), it.next());
+            match (name, off, size) {
+                (Some(n), Some(o), Some(s)) => layers.push(LayerInfo {
+                    name: n.to_string(),
+                    offset: o.parse().with_context(|| format!("line {}", i + 1))?,
+                    size: s.parse().with_context(|| format!("line {}", i + 1))?,
+                }),
+                _ => bail!("layout line {}: expected `name offset size`", i + 1),
+            }
+        }
+        let l = Layout { layers };
+        l.validate()?;
+        Ok(l)
+    }
+
+    pub fn load(path: &str) -> Result<Layout> {
+        Layout::parse(&std::fs::read_to_string(path).with_context(|| path.to_string())?)
+    }
+
+    /// Build a synthetic layout from (name, size) pairs.
+    pub fn from_sizes(sizes: &[(&str, usize)]) -> Layout {
+        let mut layers = Vec::new();
+        let mut off = 0;
+        for (name, size) in sizes {
+            layers.push(LayerInfo { name: name.to_string(), offset: off, size: *size });
+            off += size;
+        }
+        Layout { layers }
+    }
+
+    /// A single-layer layout (for cost-model experiments where only the
+    /// total size matters).
+    pub fn single(total: usize) -> Layout {
+        Layout::from_sizes(&[("all", total)])
+    }
+
+    fn validate(&self) -> Result<()> {
+        let mut off = 0;
+        for l in &self.layers {
+            if l.offset != off {
+                bail!("layer `{}` offset {} != expected {}", l.name, l.offset, off);
+            }
+            if l.size == 0 {
+                bail!("layer `{}` has zero size", l.name);
+            }
+            off += l.size;
+        }
+        Ok(())
+    }
+
+    pub fn total(&self) -> usize {
+        self.layers.last().map(|l| l.offset + l.size).unwrap_or(0)
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+/// Flat f32 parameter/gradient vector.
+pub type ParamVec = Vec<f32>;
+
+/// y += a * x
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+/// x *= a
+pub fn scale(x: &mut [f32], a: f32) {
+    for xi in x.iter_mut() {
+        *xi *= a;
+    }
+}
+
+/// Sum of squares (f64 accumulation — gradient norms get large).
+pub fn sq_norm(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+pub fn dot(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Elementwise add into a fresh vector.
+pub fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x + y).collect()
+}
+
+/// Load a little-endian f32 binary file (e.g. `artifacts/<m>_init.f32`).
+pub fn load_f32_file(path: &str) -> Result<Vec<f32>> {
+    let bytes = std::fs::read(path).with_context(|| path.to_string())?;
+    if bytes.len() % 4 != 0 {
+        bail!("{path}: length {} not a multiple of 4", bytes.len());
+    }
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_layout_roundtrip() {
+        let text = "tok_embed 0 1000\nblock0.qkv 1000 300\nhead 1300 64\n";
+        let l = Layout::parse(text).unwrap();
+        assert_eq!(l.num_layers(), 3);
+        assert_eq!(l.total(), 1364);
+        assert_eq!(l.layers[1].name, "block0.qkv");
+        assert_eq!(l.layers[1].offset, 1000);
+    }
+
+    #[test]
+    fn parse_rejects_gaps_and_zero() {
+        assert!(Layout::parse("a 0 10\nb 11 5\n").is_err()); // gap
+        assert!(Layout::parse("a 0 0\n").is_err()); // zero size
+        assert!(Layout::parse("a 0\n").is_err()); // short row
+    }
+
+    #[test]
+    fn from_sizes_contiguous() {
+        let l = Layout::from_sizes(&[("a", 3), ("b", 7)]);
+        assert_eq!(l.total(), 10);
+        assert_eq!(l.layers[1].offset, 3);
+        assert_eq!(Layout::single(42).total(), 42);
+    }
+
+    #[test]
+    fn vector_ops() {
+        let mut y = vec![1.0, 2.0];
+        axpy(&mut y, 2.0, &[10.0, 20.0]);
+        assert_eq!(y, vec![21.0, 42.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![10.5, 21.0]);
+        assert!((sq_norm(&[3.0, 4.0]) - 25.0).abs() < 1e-12);
+        assert!((dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-12);
+        assert_eq!(add(&[1.0], &[2.0]), vec![3.0]);
+    }
+
+    #[test]
+    fn f32_file_roundtrip() {
+        let dir = std::env::temp_dir().join("flexcomm_tensor_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("x.f32");
+        let vals = [1.5f32, -2.25, 0.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(&path, &bytes).unwrap();
+        let got = load_f32_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(got, vals);
+    }
+}

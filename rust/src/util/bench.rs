@@ -1,0 +1,117 @@
+//! First-party micro-bench harness (offline build: no `criterion`).
+//!
+//! `cargo bench` targets use `harness = false` and drive this module: each
+//! benchmark warms up, then runs timed iterations until a wall-clock budget
+//! or max-iteration cap is hit, and reports mean/p50/p95 per iteration.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl Measurement {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner with a per-target time budget.
+pub struct Bencher {
+    warmup: Duration,
+    budget: Duration,
+    max_iters: usize,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(100),
+            budget: Duration::from_millis(800),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, budget: Duration, max_iters: usize) -> Self {
+        Bencher { warmup, budget, max_iters, results: Vec::new() }
+    }
+
+    /// Quick-mode bencher honouring `FLEXCOMM_BENCH_FAST=1` (used in CI).
+    pub fn from_env() -> Self {
+        if std::env::var("FLEXCOMM_BENCH_FAST").is_ok() {
+            Bencher::new(Duration::from_millis(10), Duration::from_millis(80), 200)
+        } else {
+            Bencher::default()
+        }
+    }
+
+    /// Time `f` repeatedly; returns and records the measurement.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> Measurement {
+        // Warmup.
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed runs.
+        let mut samples: Vec<Duration> = Vec::new();
+        let t1 = Instant::now();
+        while t1.elapsed() < self.budget && samples.len() < self.max_iters {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed());
+        }
+        samples.sort();
+        let total: Duration = samples.iter().sum();
+        let p95_idx = ((samples.len() as f64 * 0.95) as usize).min(samples.len() - 1);
+        let m = Measurement {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: total / samples.len().max(1) as u32,
+            p50: samples[samples.len() / 2],
+            p95: samples[p95_idx],
+        };
+        println!(
+            "bench {:<44} {:>10.3?} mean  {:>10.3?} p50  {:>10.3?} p95  ({} iters)",
+            m.name, m.mean, m.p50, m.p95, m.iters
+        );
+        self.results.push(m.clone());
+        m
+    }
+
+    /// Prevent the optimizer from deleting a computed value.
+    #[inline]
+    pub fn black_box<T>(x: T) -> T {
+        std::hint::black_box(x)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_measurement() {
+        let mut b = Bencher::new(
+            Duration::from_millis(1),
+            Duration::from_millis(10),
+            50,
+        );
+        let m = b.bench("noop-ish", || {
+            let v: Vec<u32> = (0..100).collect();
+            Bencher::black_box(v.iter().sum::<u32>());
+        });
+        assert!(m.iters > 0);
+        assert!(m.mean > Duration::ZERO);
+        assert_eq!(b.results.len(), 1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Minimal CLI argument parser (offline build: no `clap`).
+//!
+//! Grammar: `flexcomm <subcommand> [--key value]... [--flag]... [positional]...`
+//! Flags may also be written `--key=value`.
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit token list (first token = subcommand if it
+    /// doesn't start with `-`).
+    pub fn parse_from<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                out.subcommand = Some(it.next().unwrap());
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` ends option parsing.
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some(eq) = body.find('=') {
+                    out.options
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let val = it.next().unwrap();
+                    out.options.insert(body.to_string(), val);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment (skips argv[0]).
+    pub fn from_env() -> Result<Args> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn opt(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.opt(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(v),
+                Err(_) => bail!("--{name}: expected integer, got `{s}`"),
+            },
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(v),
+                Err(_) => bail!("--{name}: expected integer, got `{s}`"),
+            },
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.opt(name) {
+            None => Ok(default),
+            Some(s) => match s.parse() {
+                Ok(v) => Ok(v),
+                Err(_) => bail!("--{name}: expected number, got `{s}`"),
+            },
+        }
+    }
+
+    /// Comma-separated f64 list option.
+    pub fn f64_list_or(&self, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.opt(name) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--{name}: bad number `{p}`"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse_from(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // NB grammar: `--opt` followed by a non-dash token consumes it as a
+        // value, so positionals go before options or after `--`.
+        let a = parse(&["train", "pos1", "--workers", "8", "--cr=0.01", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.usize_or("workers", 1).unwrap(), 8);
+        assert_eq!(a.f64_or("cr", 0.1).unwrap(), 0.01);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["cost", "--table1"]);
+        assert!(a.flag("table1"));
+        assert_eq!(a.opt("table1"), None);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.usize_or("n", 3).is_err());
+        assert_eq!(a.usize_or("m", 3).unwrap(), 3);
+        assert_eq!(a.str_or("s", "d"), "d");
+    }
+
+    #[test]
+    fn f64_list() {
+        let a = parse(&["x", "--crs", "0.1,0.01,0.001"]);
+        assert_eq!(a.f64_list_or("crs", &[]).unwrap(), vec![0.1, 0.01, 0.001]);
+        assert_eq!(a.f64_list_or("other", &[1.0]).unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn double_dash_positional() {
+        let a = parse(&["run", "--", "--not-an-option"]);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+}

@@ -1,0 +1,331 @@
+//! TOML-subset configuration parser (offline build: no `serde`/`toml`).
+//!
+//! Supported syntax — enough for real experiment configs, nothing exotic:
+//!
+//! ```toml
+//! # comment
+//! [section]            # and [nested.section]
+//! key = "string"
+//! n = 8
+//! cr = 0.01            # floats, incl. scientific notation
+//! enabled = true
+//! crs = [0.1, 0.01, 0.001]
+//! names = ["a", "b"]
+//! ```
+//!
+//! Values are stored flat under `"section.key"`. Typed getters return
+//! `anyhow::Error` with the offending key on type mismatch.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    List(Vec<Value>),
+}
+
+impl Value {
+    fn type_name(&self) -> &'static str {
+        match self {
+            Value::Str(_) => "string",
+            Value::Int(_) => "int",
+            Value::Float(_) => "float",
+            Value::Bool(_) => "bool",
+            Value::List(_) => "list",
+        }
+    }
+}
+
+/// Parsed configuration: flat `section.key -> Value` map.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    values: BTreeMap<String, Value>,
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                if section.is_empty() {
+                    bail!("line {}: empty section name", lineno + 1);
+                }
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| anyhow!("line {}: expected `key = value`", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                bail!("line {}: empty key", lineno + 1);
+            }
+            let val = parse_value(line[eq + 1..].trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            values.insert(full, val);
+        }
+        Ok(Config { values })
+    }
+
+    pub fn load(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Config::parse(&text)
+    }
+
+    /// Override/insert a value from a `key=value` CLI string.
+    pub fn set_from_str(&mut self, key: &str, raw: &str) -> Result<()> {
+        let v = parse_value(raw).or_else(|_| parse_value(&format!("\"{raw}\"")))?;
+        self.values.insert(key.to_string(), v);
+        Ok(())
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.values.contains_key(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    fn get(&self, key: &str) -> Result<&Value> {
+        self.values
+            .get(key)
+            .ok_or_else(|| anyhow!("missing config key `{key}`"))
+    }
+
+    pub fn str(&self, key: &str) -> Result<&str> {
+        match self.get(key)? {
+            Value::Str(s) => Ok(s),
+            v => bail!("`{key}`: expected string, got {}", v.type_name()),
+        }
+    }
+
+    pub fn int(&self, key: &str) -> Result<i64> {
+        match self.get(key)? {
+            Value::Int(i) => Ok(*i),
+            v => bail!("`{key}`: expected int, got {}", v.type_name()),
+        }
+    }
+
+    pub fn float(&self, key: &str) -> Result<f64> {
+        match self.get(key)? {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            v => bail!("`{key}`: expected float, got {}", v.type_name()),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Result<bool> {
+        match self.get(key)? {
+            Value::Bool(b) => Ok(*b),
+            v => bail!("`{key}`: expected bool, got {}", v.type_name()),
+        }
+    }
+
+    pub fn float_list(&self, key: &str) -> Result<Vec<f64>> {
+        match self.get(key)? {
+            Value::List(xs) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Float(f) => Ok(*f),
+                    Value::Int(i) => Ok(*i as f64),
+                    v => bail!("`{key}`: expected float element, got {}", v.type_name()),
+                })
+                .collect(),
+            v => bail!("`{key}`: expected list, got {}", v.type_name()),
+        }
+    }
+
+    pub fn str_list(&self, key: &str) -> Result<Vec<String>> {
+        match self.get(key)? {
+            Value::List(xs) => xs
+                .iter()
+                .map(|v| match v {
+                    Value::Str(s) => Ok(s.clone()),
+                    v => bail!("`{key}`: expected string element, got {}", v.type_name()),
+                })
+                .collect(),
+            v => bail!("`{key}`: expected list, got {}", v.type_name()),
+        }
+    }
+
+    // Defaulted variants.
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str(key).map(str::to_string).unwrap_or_else(|_| default.to_string())
+    }
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        if self.contains(key) { self.int(key).unwrap_or(default) } else { default }
+    }
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        if self.contains(key) { self.float(key).unwrap_or(default) } else { default }
+    }
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        if self.contains(key) { self.bool(key).unwrap_or(default) } else { default }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    let s = s.trim();
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            bail!("unterminated string: {s}");
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s.starts_with('[') {
+        if !s.ends_with(']') {
+            bail!("unterminated list: {s}");
+        }
+        let inner = &s[1..s.len() - 1];
+        let mut items = Vec::new();
+        for part in split_list(inner)? {
+            if !part.trim().is_empty() {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::List(items));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value: {s}")
+}
+
+/// Split a list body on commas, respecting quoted strings.
+fn split_list(s: &str) -> Result<Vec<&str>> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        bail!("unterminated string in list");
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# experiment config
+workers = 8
+[net]
+alpha_ms = 4.0
+bw_gbps = 20       # bandwidth
+schedule = "c1"
+[compress]
+crs = [0.1, 0.01, 0.001]
+kind = "artopk-star"
+enabled = true
+names = ["a", "b,c"]
+"#;
+
+    #[test]
+    fn parses_all_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.int("workers").unwrap(), 8);
+        assert_eq!(c.float("net.alpha_ms").unwrap(), 4.0);
+        assert_eq!(c.float("net.bw_gbps").unwrap(), 20.0); // int coerces
+        assert_eq!(c.str("net.schedule").unwrap(), "c1");
+        assert_eq!(c.float_list("compress.crs").unwrap(), vec![0.1, 0.01, 0.001]);
+        assert!(c.bool("compress.enabled").unwrap());
+        assert_eq!(
+            c.str_list("compress.names").unwrap(),
+            vec!["a".to_string(), "b,c".to_string()]
+        );
+    }
+
+    #[test]
+    fn type_errors_name_the_key() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let err = c.int("net.schedule").unwrap_err().to_string();
+        assert!(err.contains("net.schedule"), "{err}");
+        assert!(c.str("nope").is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.int_or("workers", 4), 8);
+        assert_eq!(c.int_or("missing", 4), 4);
+        assert_eq!(c.str_or("missing", "x"), "x");
+        assert!(!c.bool_or("missing", false));
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = Config::parse(SAMPLE).unwrap();
+        c.set_from_str("workers", "16").unwrap();
+        assert_eq!(c.int("workers").unwrap(), 16);
+        c.set_from_str("net.schedule", "c2").unwrap();
+        assert_eq!(c.str("net.schedule").unwrap(), "c2");
+    }
+
+    #[test]
+    fn bad_syntax_is_reported_with_line() {
+        let err = Config::parse("x ==").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("k = [1, 2").is_err());
+    }
+
+    #[test]
+    fn scientific_notation_floats() {
+        let c = Config::parse("x = 1e-3\ny = 2.5e2").unwrap();
+        assert_eq!(c.float("x").unwrap(), 1e-3);
+        assert_eq!(c.float("y").unwrap(), 250.0);
+    }
+}

@@ -1,0 +1,14 @@
+//! Zero-dependency substrates: PRNG, stats/KDE, config, CLI, property-test
+//! harness, table printer, micro-bench timer.
+//!
+//! The offline build vendors only `xla` + `anyhow`, so the facilities that a
+//! networked project would pull from `rand`/`serde`/`clap`/`proptest`/
+//! `criterion` are implemented here, first-party and tested.
+
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,160 @@
+//! Mini property-testing harness (offline build: no `proptest` crate).
+//!
+//! Usage:
+//! ```ignore
+//! check("ring allreduce averages", 200, |g| {
+//!     let n = g.usize_in(2, 16);
+//!     let xs = g.vec_f32(n, -1.0, 1.0);
+//!     ...
+//!     ensure(cond, "message")
+//! });
+//! ```
+//!
+//! Each case runs with a seed derived from a base seed (overridable with
+//! `FLEXCOMM_PROP_SEED` for reproduction); failures panic with the exact
+//! per-case seed so a single case replays via `FLEXCOMM_PROP_SEED=<seed>
+//! FLEXCOMM_PROP_ONLY=1`.
+
+use crate::util::rng::Rng;
+
+/// Per-case input generator: a seeded RNG with convenience draws.
+pub struct Gen {
+    pub rng: Rng,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        self.rng.range_usize(lo, hi_inclusive + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range_f64(lo as f64, hi as f64) as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize, std: f32) -> Vec<f32> {
+        let mut v = vec![0.0; len];
+        self.rng.fill_normal(&mut v, std);
+        v
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Property result: `Ok(())` passes, `Err(msg)` fails the case.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for properties.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two floats are within `tol` (absolute + relative).
+pub fn close(a: f64, b: f64, tol: f64) -> PropResult {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    if (a - b).abs() <= tol * scale {
+        Ok(())
+    } else {
+        Err(format!("expected {a} ≈ {b} (tol {tol})"))
+    }
+}
+
+/// Assert two f32 slices are elementwise close.
+pub fn all_close(a: &[f32], b: &[f32], tol: f32) -> PropResult {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let scale = 1.0_f32.max(x.abs()).max(y.abs());
+        if (x - y).abs() > tol * scale {
+            return Err(format!("index {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+/// Run `cases` random cases of `prop`. Panics (failing the enclosing test)
+/// with the reproducing seed on first failure.
+pub fn check<F>(name: &str, cases: u64, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> PropResult,
+{
+    let base: u64 = std::env::var("FLEXCOMM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x5EED_F00D);
+    let only_one = std::env::var("FLEXCOMM_PROP_ONLY").is_ok();
+    let total = if only_one { 1 } else { cases };
+    for case in 0..total {
+        let seed = base
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case)
+            .wrapping_add(fxhash(name));
+        let mut g = Gen { rng: Rng::new(seed) };
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property `{name}` failed on case {case}/{cases}: {msg}\n\
+                 reproduce with FLEXCOMM_PROP_SEED={seed} FLEXCOMM_PROP_ONLY=1"
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |g| {
+            count += 1;
+            let n = g.usize_in(1, 10);
+            ensure((1..=10).contains(&n), "range")
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |g| {
+            let x = g.f64_in(0.0, 1.0);
+            ensure(x < 0.0, format!("x={x} not negative"))
+        });
+    }
+
+    #[test]
+    fn close_and_all_close() {
+        assert!(close(1.0, 1.0 + 1e-9, 1e-6).is_ok());
+        assert!(close(1.0, 2.0, 1e-6).is_err());
+        assert!(all_close(&[1.0, 2.0], &[1.0, 2.0 + 1e-7], 1e-5).is_ok());
+        assert!(all_close(&[1.0], &[1.0, 2.0], 1e-5).is_err());
+    }
+}

@@ -1,0 +1,209 @@
+//! Descriptive statistics + Gaussian kernel density estimation.
+//!
+//! The KDE backs the paper's Figs 4/7/8 (iteration-density plots of
+//! broadcasting ranks / chosen CRs / chosen collectives).
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population variance; 0.0 for len < 2.
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Linear-interpolated percentile, p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!((0.0..=100.0).contains(&p));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Exponentially-weighted moving average tracker.
+#[derive(Debug, Clone)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    pub fn new(alpha: f64) -> Self {
+        assert!((0.0..=1.0).contains(&alpha));
+        Ewma { alpha, value: None }
+    }
+
+    pub fn update(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(v) => self.alpha * x + (1.0 - self.alpha) * v,
+        };
+        self.value = Some(v);
+        v
+    }
+
+    pub fn get(&self) -> Option<f64> {
+        self.value
+    }
+
+    pub fn reset(&mut self) {
+        self.value = None;
+    }
+}
+
+/// Gaussian KDE evaluated on a uniform grid.
+///
+/// Bandwidth defaults to Scott's rule `n^(-1/5) * std`, floored to a small
+/// epsilon so degenerate (constant) samples still render as a spike.
+pub struct Kde {
+    pub grid: Vec<f64>,
+    pub density: Vec<f64>,
+}
+
+pub fn kde(samples: &[f64], lo: f64, hi: f64, points: usize) -> Kde {
+    assert!(points >= 2 && hi > lo);
+    let grid: Vec<f64> = (0..points)
+        .map(|i| lo + (hi - lo) * i as f64 / (points - 1) as f64)
+        .collect();
+    if samples.is_empty() {
+        return Kde { density: vec![0.0; points], grid };
+    }
+    let n = samples.len() as f64;
+    let bw = (std_dev(samples) * n.powf(-0.2)).max((hi - lo) * 1e-3);
+    let norm = 1.0 / (n * bw * (2.0 * std::f64::consts::PI).sqrt());
+    let density = grid
+        .iter()
+        .map(|&x| {
+            samples
+                .iter()
+                .map(|&s| {
+                    let z = (x - s) / bw;
+                    (-0.5 * z * z).exp()
+                })
+                .sum::<f64>()
+                * norm
+        })
+        .collect();
+    Kde { grid, density }
+}
+
+/// Histogram over equal-width bins; returns per-bin counts.
+pub fn histogram(samples: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    assert!(bins > 0 && hi > lo);
+    let mut counts = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &s in samples {
+        if s < lo || s > hi {
+            continue;
+        }
+        let b = (((s - lo) / w) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    counts
+}
+
+/// Render a one-line unicode sparkline of a density/series (for terminal
+/// "figures": the experiment harnesses print these next to the CSV dumps).
+pub fn sparkline(values: &[f64]) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let (lo, hi) = (min(values), max(values));
+    if values.is_empty() || !(hi > lo) {
+        return values.iter().map(|_| BARS[0]).collect();
+    }
+    values
+        .iter()
+        .map(|&v| {
+            let t = ((v - lo) / (hi - lo) * 7.0).round() as usize;
+            BARS[t.min(7)]
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert_eq!(median(&xs), 2.5);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+    }
+
+    #[test]
+    fn ewma_converges() {
+        let mut e = Ewma::new(0.5);
+        for _ in 0..50 {
+            e.update(10.0);
+        }
+        assert!((e.get().unwrap() - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn kde_integrates_to_one() {
+        let mut r = Rng::new(0);
+        let samples: Vec<f64> = (0..2000).map(|_| r.normal()).collect();
+        let k = kde(&samples, -5.0, 5.0, 401);
+        let dx = 10.0 / 400.0;
+        let integral: f64 = k.density.iter().sum::<f64>() * dx;
+        assert!((integral - 1.0).abs() < 0.02, "integral {integral}");
+        // Peak near zero for standard normal samples.
+        let peak = k
+            .density
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert!((k.grid[peak]).abs() < 0.3);
+    }
+
+    #[test]
+    fn histogram_counts() {
+        let h = histogram(&[0.1, 0.2, 0.9, 0.95], 0.0, 1.0, 2);
+        assert_eq!(h, vec![2, 2]);
+    }
+
+    #[test]
+    fn sparkline_len() {
+        assert_eq!(sparkline(&[0.0, 1.0, 0.5]).chars().count(), 3);
+    }
+}

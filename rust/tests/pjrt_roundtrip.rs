@@ -1,0 +1,168 @@
+//! Integration: the AOT-lowered L2/L1 artifacts execute correctly via PJRT
+//! from rust — the full python-compile -> rust-runtime loop.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use flexcomm::compress::{k_for, MsTopk};
+use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
+use flexcomm::coordinator::worker::{ComputeModel, GradSource};
+use flexcomm::runtime::{find_artifacts_dir, Engine, ModelArtifacts, PjrtModel};
+use flexcomm::util::rng::Rng;
+
+fn engine() -> Engine {
+    Engine::cpu().expect("PJRT CPU client")
+}
+
+fn load_model(name: &str) -> PjrtModel {
+    let dir = find_artifacts_dir().expect("artifacts dir (run `make artifacts`)");
+    let arts = ModelArtifacts::load(&dir, name).expect("artifact manifest");
+    PjrtModel::load(&engine(), arts, 42).expect("compiling artifacts")
+}
+
+#[test]
+fn mlp_grad_artifact_runs_and_matches_init_loss() {
+    let mut m = load_model("mlp");
+    let params = m.init_params();
+    assert_eq!(params.len(), m.dim());
+    let (loss, grads) = m.grad(&params, 0, 4, 0);
+    // Random init over 16 classes: loss ~ ln(16) = 2.77.
+    assert!((loss - (16.0f64).ln()).abs() < 0.7, "init loss {loss}");
+    assert_eq!(grads.len(), m.dim());
+    let nonzero = grads.iter().filter(|&&g| g != 0.0).count();
+    assert!(nonzero > grads.len() / 2, "grads mostly zero: {nonzero}");
+}
+
+#[test]
+fn transformer_tiny_grad_artifact_runs() {
+    let mut m = load_model("tiny");
+    let params = m.init_params();
+    let (loss, grads) = m.grad(&params, 0, 4, 0);
+    // Vocab 256 -> ln(256) = 5.55 at random init.
+    assert!((loss - (256.0f64).ln()).abs() < 1.5, "init loss {loss}");
+    assert_eq!(grads.len(), m.dim());
+    // The Pallas-matmul MLP blocks must receive gradient.
+    let layout = m.layout().clone();
+    let fc = layout
+        .layers
+        .iter()
+        .find(|l| l.name == "block0.mlp.fc")
+        .expect("mlp.fc layer in layout");
+    let seg = &grads[fc.offset..fc.offset + fc.size];
+    assert!(seg.iter().any(|&g| g != 0.0), "no grad through Pallas matmul");
+}
+
+#[test]
+fn sgd_step_artifact_matches_rust_formula() {
+    let m = load_model("mlp");
+    let dim = m.dim();
+    let mut rng = Rng::new(1);
+    let mut params = vec![0.0f32; dim];
+    let mut mom = vec![0.0f32; dim];
+    let mut grads = vec![0.0f32; dim];
+    rng.fill_normal(&mut params, 1.0);
+    rng.fill_normal(&mut mom, 0.5);
+    rng.fill_normal(&mut grads, 0.1);
+    let (lr, mu, wd) = (0.1f32, 0.9f32, 0.0005f32);
+    let (p2, m2) = m.sgd_step(&params, &mom, &grads, lr, mu, wd).unwrap();
+    for i in (0..dim).step_by(977) {
+        let g = grads[i] + wd * params[i];
+        let want_m = mu * mom[i] + g;
+        let want_p = params[i] - lr * want_m;
+        assert!((m2[i] - want_m).abs() < 1e-5, "mom[{i}]");
+        assert!((p2[i] - want_p).abs() < 1e-5, "param[{i}]");
+    }
+}
+
+#[test]
+fn ef_topk_artifact_matches_rust_mstopk() {
+    // The L1 Pallas kernels (threshold bisection + fused EF-compress) and
+    // the rust MsTopk implement the same algorithm; pin them together.
+    let m = load_model("mlp");
+    let dim = m.dim();
+    assert!(m.has_ef_topk());
+    let mut rng = Rng::new(3);
+    let mut g = vec![0.0f32; dim];
+    let mut r = vec![0.0f32; dim];
+    rng.fill_normal(&mut g, 1.0);
+    rng.fill_normal(&mut r, 0.3);
+    let cr = 0.01;
+    let k = k_for(cr, dim);
+
+    let (gc, res, nc, ne, tau) = m.ef_topk(&g, &r, k as f32).unwrap();
+
+    // Rust-side reference.
+    let g_e: Vec<f32> = g.iter().zip(&r).map(|(a, b)| a + b).collect();
+    let rust_tau = MsTopk::new(25).estimate_threshold(&g_e, k);
+    assert!(
+        (tau - rust_tau).abs() <= 2e-3 * (1.0 + rust_tau.abs()),
+        "tau {tau} vs rust {rust_tau}"
+    );
+
+    // Kept count ~ k; support = |g_e| >= tau; g_c + res == g_e.
+    let kept = gc.iter().filter(|&&v| v != 0.0).count();
+    assert!(
+        (kept as i64 - k as i64).abs() <= (k as i64 / 20).max(2),
+        "kept {kept} vs k {k}"
+    );
+    for i in (0..dim).step_by(499) {
+        assert!((gc[i] + res[i] - g_e[i]).abs() < 1e-5, "mass at {i}");
+    }
+    // Gain terms.
+    let e_sq: f64 = g_e.iter().map(|&v| (v as f64).powi(2)).sum();
+    assert!((ne - e_sq).abs() / e_sq < 1e-3, "||g_e||² {ne} vs {e_sq}");
+    let c_sq: f64 = gc.iter().map(|&v| (v as f64).powi(2)).sum();
+    assert!((nc - c_sq).abs() / c_sq.max(1e-9) < 1e-3);
+    assert!(nc <= ne * (1.0 + 1e-6));
+}
+
+#[test]
+fn pjrt_mlp_trains_end_to_end_dense() {
+    let model = load_model("mlp");
+    let cfg = TrainConfig {
+        n_workers: 4,
+        steps: 60,
+        steps_per_epoch: 20,
+        lr: 0.3,
+        momentum: 0.6,
+        weight_decay: 0.0,
+        strategy: Strategy::DenseSgd { flavor: DenseFlavor::Ring },
+        cr: CrControl::Static(1.0),
+        compute: ComputeModel::fixed(0.01),
+        eval_every: 0,
+        seed: 9,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, Box::new(model));
+    t.run();
+    let first = t.metrics.steps.first().unwrap().loss;
+    let last = t.metrics.steps.last().unwrap().loss;
+    assert!(last < first * 0.6, "PJRT dense training: {first} -> {last}");
+    let acc = t.metrics.final_accuracy().unwrap();
+    assert!(acc > 0.5, "accuracy {acc}");
+}
+
+#[test]
+fn pjrt_mlp_trains_with_artopk() {
+    use flexcomm::artopk::{ArFlavor, SelectionPolicy};
+    let model = load_model("mlp");
+    let cfg = TrainConfig {
+        n_workers: 4,
+        steps: 80,
+        steps_per_epoch: 20,
+        lr: 0.3,
+        momentum: 0.6,
+        strategy: Strategy::ArTopkFixed {
+            policy: SelectionPolicy::Star,
+            flavor: ArFlavor::Ring,
+        },
+        cr: CrControl::Static(0.05),
+        compute: ComputeModel::fixed(0.01),
+        seed: 10,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, Box::new(model));
+    t.run();
+    let first = t.metrics.steps.first().unwrap().loss;
+    let last = t.metrics.steps.last().unwrap().loss;
+    assert!(last < first * 0.7, "PJRT AR-Topk training: {first} -> {last}");
+}

@@ -1,0 +1,238 @@
+//! Simulator-level integration tests: whole training runs across
+//! strategies, schedules and policies with cross-cutting invariants —
+//! no PJRT needed (host model), so these also guard refactors fast.
+
+use flexcomm::artopk::{ArFlavor, SelectionPolicy};
+use flexcomm::compress::CompressorKind;
+use flexcomm::coordinator::adaptive::AdaptiveConfig;
+use flexcomm::coordinator::trainer::{
+    CrControl, DenseFlavor, Strategy, TrainConfig, Trainer,
+};
+use flexcomm::coordinator::worker::ComputeModel;
+use flexcomm::netsim::cost_model::LinkParams;
+use flexcomm::netsim::schedule::NetSchedule;
+use flexcomm::runtime::HostMlp;
+
+fn base_cfg(strategy: Strategy, cr: CrControl, steps: u64) -> TrainConfig {
+    TrainConfig {
+        n_workers: 4,
+        steps,
+        steps_per_epoch: 25,
+        lr: 0.3,
+        momentum: 0.6,
+        weight_decay: 0.0,
+        strategy,
+        cr,
+        schedule: NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0)),
+        compute: ComputeModel::fixed(0.005),
+        eval_every: 25,
+        seed: 21,
+        ..Default::default()
+    }
+}
+
+fn run(cfg: TrainConfig) -> Trainer {
+    let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(21)));
+    t.run();
+    t
+}
+
+/// Every strategy must actually learn the task.
+#[test]
+fn all_strategies_learn() {
+    let strategies = [
+        ("dense-ring", Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0),
+        ("dense-tree", Strategy::DenseSgd { flavor: DenseFlavor::Tree }, 1.0),
+        ("dense-ps", Strategy::DenseSgd { flavor: DenseFlavor::Ps }, 1.0),
+        ("ag-topk", Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05),
+        ("ag-lwtopk", Strategy::AgCompress { kind: CompressorKind::LwTopk }, 0.05),
+        ("ag-mstopk", Strategy::AgCompress { kind: CompressorKind::MsTopk }, 0.05),
+        (
+            "artopk-star",
+            Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+            0.05,
+        ),
+        (
+            "artopk-var-tree",
+            Strategy::ArTopkFixed { policy: SelectionPolicy::Var, flavor: ArFlavor::Tree },
+            0.05,
+        ),
+        ("flexible", Strategy::Flexible { policy: SelectionPolicy::Star }, 0.05),
+    ];
+    for (name, s, cr) in strategies {
+        let t = run(base_cfg(s, CrControl::Static(cr), 200));
+        let acc = t.metrics.best_accuracy().unwrap();
+        assert!(acc > 0.70, "{name}: accuracy {acc}");
+        let first = t.metrics.steps.first().unwrap().loss;
+        let last = t.metrics.steps.last().unwrap().loss;
+        assert!(last < first, "{name}: loss {first} -> {last}");
+    }
+}
+
+/// Error-feedback compression at moderate CR must track DenseSGD closely
+/// (the paper's statistical-efficiency claim), and random-k must be worse
+/// than top-k at equal CR (why AR-Topk exists at all). Uses the hard task
+/// so the ceiling doesn't mask differences.
+#[test]
+fn statistical_efficiency_ordering() {
+    let run_hard = |strategy, cr: f64| {
+        let cfg = base_cfg(strategy, CrControl::Static(cr), 250);
+        let mut t = Trainer::new(cfg, Box::new(HostMlp::hard_preset(21)));
+        t.run();
+        t
+    };
+    let dense = run_hard(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0);
+    let topk = run_hard(Strategy::AgCompress { kind: CompressorKind::TopK }, 0.01);
+    let randk = run_hard(Strategy::AgCompress { kind: CompressorKind::RandomK }, 0.01);
+    let a_dense = dense.metrics.best_accuracy().unwrap();
+    let a_topk = topk.metrics.best_accuracy().unwrap();
+    let a_rand = randk.metrics.best_accuracy().unwrap();
+    // Dense >= topk (small tolerance) and topk's retained-energy (gain)
+    // dwarfs randomk's — the structural reason its convergence is worse.
+    assert!(a_dense >= a_topk - 0.03, "dense {a_dense} vs topk {a_topk}");
+    assert!(a_topk >= a_rand - 0.01, "topk {a_topk} vs randomk {a_rand}");
+    let g_topk = topk.metrics.summary().mean_gain;
+    let g_rand = randk.metrics.summary().mean_gain;
+    assert!(g_topk > 2.0 * g_rand, "gain topk {g_topk} vs randomk {g_rand}");
+}
+
+/// Lower CR must lower the mean gain (paper Fig 3's premise).
+#[test]
+fn gain_monotone_in_cr() {
+    let mut gains = Vec::new();
+    for cr in [0.2, 0.02, 0.002] {
+        let t = run(base_cfg(
+            Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+            CrControl::Static(cr),
+            60,
+        ));
+        gains.push(t.metrics.summary().mean_gain);
+    }
+    assert!(gains[0] > gains[1] && gains[1] > gains[2], "{gains:?}");
+}
+
+/// Identical seeds => bit-identical metrics (full-system determinism).
+#[test]
+fn whole_run_determinism() {
+    let mk = || {
+        run(base_cfg(
+            Strategy::Flexible { policy: SelectionPolicy::Star },
+            CrControl::Static(0.02),
+            80,
+        ))
+    };
+    let a = mk();
+    let b = mk();
+    // t_comp is MEASURED wall time (legitimately noisy); everything else
+    // must be bit-identical.
+    assert_eq!(a.params, b.params);
+    for (x, y) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+        assert_eq!(x.loss, y.loss);
+        assert_eq!(x.t_sync, y.t_sync);
+        assert_eq!(x.t_compute, y.t_compute);
+        assert_eq!(x.collective, y.collective);
+        assert_eq!(x.cr, y.cr);
+        assert_eq!(x.gain, y.gain);
+    }
+}
+
+/// VAR-Topk under non-iid shards: selection density must be skewed (the
+/// Fig 4b phenomenon) while STAR stays uniform.
+#[test]
+fn var_density_skews_under_noniid() {
+    let mk = |policy| {
+        let cfg = base_cfg(
+            Strategy::ArTopkFixed { policy, flavor: ArFlavor::Ring },
+            CrControl::Static(0.02),
+            240,
+        );
+        let mut src = HostMlp::default_preset(5);
+        src.skew = 1.0; // fully non-iid class shards
+        let mut t = Trainer::new(cfg, Box::new(src));
+        t.run();
+        let ranks = t.metrics.selected_ranks();
+        let mut counts = [0usize; 4];
+        for r in ranks {
+            counts[r as usize] += 1;
+        }
+        counts
+    };
+    let star = mk(SelectionPolicy::Star);
+    let var = mk(SelectionPolicy::Var);
+    let spread = |c: &[usize; 4]| {
+        let max = *c.iter().max().unwrap() as f64;
+        let min = *c.iter().min().unwrap() as f64;
+        max / min.max(1.0)
+    };
+    assert!(spread(&star) < 1.1, "STAR must be uniform: {star:?}");
+    assert!(spread(&var) > spread(&star), "VAR must skew: {var:?} vs {star:?}");
+}
+
+/// The adaptive controller must keep CR in bounds and stay numerically
+/// sound across a network schedule WITH jitter + congestion (failure-ish
+/// injection: the probe sees noisy, congested links).
+#[test]
+fn adaptive_survives_hostile_network() {
+    let mut cfg = base_cfg(
+        Strategy::Flexible { policy: SelectionPolicy::Star },
+        CrControl::Adaptive(AdaptiveConfig { probe_iters: 3, ..Default::default() }),
+        150,
+    );
+    cfg.schedule = NetSchedule::c2(6.0)
+        .with_jitter(0.15, 13)
+        .with_congestion(0.2, 8.0, 13);
+    cfg.probe_noise = 0.10;
+    let t = run(cfg);
+    for m in &t.metrics.steps {
+        assert!(m.cr >= 0.001 - 1e-12 && m.cr <= 0.1 + 1e-12, "cr {}", m.cr);
+        assert!(m.loss.is_finite());
+        assert!(m.t_sync >= 0.0 && m.t_sync.is_finite());
+    }
+    assert!(t.metrics.best_accuracy().unwrap() > 0.6);
+}
+
+/// The §5 future-work extension: auto STAR/VAR switching must trial both
+/// policies, commit to one, and still learn.
+#[test]
+fn artopk_auto_switches_and_learns() {
+    let t = run(base_cfg(
+        Strategy::ArTopkAuto { flavor: ArFlavor::Ring },
+        CrControl::Static(0.05),
+        200,
+    ));
+    let sw = t.policy_switcher.as_ref().unwrap();
+    assert!(sw.cycles >= 1, "must complete at least one trial cycle");
+    assert!(t.metrics.best_accuracy().unwrap() > 0.7);
+    // Both policies appear during trials: rank sequence has round-robin
+    // stretches (STAR) — committed stretches may be either.
+    let ranks = t.metrics.selected_ranks();
+    assert_eq!(ranks.len(), 200);
+}
+
+/// Sanity: a 1-worker cluster degenerates to plain SGD with zero comm.
+#[test]
+fn single_worker_no_communication() {
+    let mut cfg = base_cfg(
+        Strategy::DenseSgd { flavor: DenseFlavor::Ring },
+        CrControl::Static(1.0),
+        50,
+    );
+    cfg.n_workers = 1;
+    let t = run(cfg);
+    assert!(t.metrics.steps.iter().all(|m| m.t_sync == 0.0));
+    assert!(t.metrics.best_accuracy().unwrap() > 0.7);
+}
+
+/// Eqn 3 bookkeeping: recorded step time decomposes exactly.
+#[test]
+fn step_time_decomposition() {
+    let t = run(base_cfg(
+        Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+        CrControl::Static(0.05),
+        40,
+    ));
+    for m in &t.metrics.steps {
+        assert!((m.t_step() - (m.t_compute + m.t_comp + m.t_sync)).abs() < 1e-15);
+        assert!(m.t_compute > 0.0);
+    }
+}
