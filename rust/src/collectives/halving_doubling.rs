@@ -1,0 +1,241 @@
+//! Recursive halving-doubling allreduce (Rabenseifner): reduce-scatter by
+//! recursive vector halving with distance doubling, then allgather by
+//! recursive vector doubling with distance halving.
+//!
+//! Round structure for power-of-two N: `2·log2(N)` rounds; halving round
+//! `d` sends `M/2^(d+1)` bytes and the doubling phase mirrors it — total
+//! `2·log2(N)·α + 2·((N-1)/N)·Mβ`, matching
+//! [`cost_model::halving_doubling_allreduce`](crate::netsim::cost_model::halving_doubling_allreduce):
+//! the ring's bandwidth-optimal β-term at only log-many latency rounds.
+//!
+//! Non-power-of-two N first folds the `r = N - 2^⌊log2 N⌋` extra ranks
+//! into partners (rank `2i+1` merges into `2i`, one full-vector round),
+//! runs the power-of-two core over the survivors, and unfolds at the end —
+//! `2α + 2Mβ` extra, accounted identically by the closed form.
+
+use crate::collectives::CommReport;
+use crate::netsim::cost_model::{prev_pow2, LinkParams};
+
+/// In-place SUM halving-doubling allreduce over per-worker buffers (all the
+/// same length). After the call every buffer holds the elementwise sum.
+pub fn halving_doubling_allreduce(bufs: &mut [Vec<f32>], link: LinkParams) -> CommReport {
+    let n = bufs.len();
+    assert!(n >= 1);
+    let m = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == m), "buffer length mismatch");
+    let mut report = CommReport::default();
+    if n == 1 || m == 0 {
+        return report;
+    }
+
+    // Fold: ranks 2i+1 (i < r) merge their vector into rank 2i.
+    let np = prev_pow2(n);
+    let r = n - np;
+    if r > 0 {
+        for i in 0..r {
+            let (lo, hi) = bufs.split_at_mut(2 * i + 1);
+            for (dv, sv) in lo[2 * i].iter_mut().zip(&hi[0]) {
+                *dv += *sv;
+            }
+        }
+        report.add_round(link, 4.0 * m as f64);
+    }
+    // Participant ranks (power-of-two count np): the fold survivors.
+    let parts: Vec<usize> = (0..r).map(|i| 2 * i).chain(2 * r..n).collect();
+    debug_assert_eq!(parts.len(), np);
+    let lgn = np.trailing_zeros();
+
+    // Phase 1: recursive halving reduce-scatter. Each participant tracks
+    // its owned segment [lo, hi); at round d partners at participant-index
+    // distance np/2^(d+1) split the segment, exchange the half they drop,
+    // and reduce the half they keep (lower index keeps the lower half).
+    let mut seg: Vec<(usize, usize)> = vec![(0, m); np];
+    for d in 0..lgn {
+        let dist = np >> (d + 1);
+        let mut max_sent = 0usize;
+        for pi in 0..np {
+            let pj = pi ^ dist;
+            if pi > pj {
+                continue; // each pair once
+            }
+            let (lo, hi) = seg[pi];
+            debug_assert_eq!(seg[pj], (lo, hi), "partners must own the same segment");
+            let mid = lo + (hi - lo) / 2;
+            let (ra, rb) = (parts[pi], parts[pj]);
+            // pi keeps [lo, mid) and receives rb's copy of it...
+            let from_b: Vec<f32> = bufs[rb][lo..mid].to_vec();
+            for (dv, sv) in bufs[ra][lo..mid].iter_mut().zip(&from_b) {
+                *dv += *sv;
+            }
+            // ...pj keeps [mid, hi) and receives ra's copy of it.
+            let from_a: Vec<f32> = bufs[ra][mid..hi].to_vec();
+            for (dv, sv) in bufs[rb][mid..hi].iter_mut().zip(&from_a) {
+                *dv += *sv;
+            }
+            max_sent = max_sent.max(hi - mid).max(mid - lo);
+            seg[pi] = (lo, mid);
+            seg[pj] = (mid, hi);
+        }
+        report.add_round(link, 4.0 * max_sent as f64);
+    }
+
+    // Phase 2: recursive doubling allgather — the exact mirror. Partners
+    // hold the two halves of their round-d segment; exchanging them leaves
+    // both with the union, and after the last round everyone has [0, m).
+    for d in (0..lgn).rev() {
+        let dist = np >> (d + 1);
+        let mut max_sent = 0usize;
+        for pi in 0..np {
+            let pj = pi ^ dist;
+            if pi > pj {
+                continue;
+            }
+            let (la, ha) = seg[pi];
+            let (lb, hb) = seg[pj];
+            debug_assert_eq!(ha, lb, "owned halves must be adjacent");
+            let (ra, rb) = (parts[pi], parts[pj]);
+            let from_b: Vec<f32> = bufs[rb][lb..hb].to_vec();
+            bufs[ra][lb..hb].copy_from_slice(&from_b);
+            let from_a: Vec<f32> = bufs[ra][la..ha].to_vec();
+            bufs[rb][la..ha].copy_from_slice(&from_a);
+            max_sent = max_sent.max(ha - la).max(hb - lb);
+            seg[pi] = (la, hb);
+            seg[pj] = (la, hb);
+        }
+        report.add_round(link, 4.0 * max_sent as f64);
+    }
+
+    // Unfold: folded ranks receive the finished vector from their partner.
+    if r > 0 {
+        for i in 0..r {
+            let (lo, hi) = bufs.split_at_mut(2 * i + 1);
+            hi[0].copy_from_slice(&lo[2 * i]);
+        }
+        report.add_round(link, 4.0 * m as f64);
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model;
+    use crate::util::proptest::{all_close, check, ensure};
+    use crate::util::rng::Rng;
+
+    fn link() -> LinkParams {
+        LinkParams::from_ms_gbps(2.0, 10.0)
+    }
+
+    #[test]
+    fn sums_exactly_pow2() {
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|w| vec![w as f32 + 1.0; 6]).collect();
+        halving_doubling_allreduce(&mut bufs, link());
+        for b in &bufs {
+            assert_eq!(b, &vec![10.0; 6]);
+        }
+    }
+
+    #[test]
+    fn time_matches_closed_form_pow2() {
+        // Exact match when N | M (halves split evenly all the way down).
+        for n in [2usize, 4, 8, 16] {
+            let m = n * 512;
+            let mut bufs = vec![vec![1.0f32; m]; n];
+            let r = halving_doubling_allreduce(&mut bufs, link());
+            let want = cost_model::halving_doubling_allreduce(link(), 4.0 * m as f64, n);
+            assert!(
+                (r.seconds - want).abs() / want < 1e-9,
+                "n={n}: sim {} vs model {}",
+                r.seconds,
+                want
+            );
+            assert_eq!(r.rounds, 2 * n.trailing_zeros());
+        }
+    }
+
+    #[test]
+    fn time_matches_closed_form_non_pow2() {
+        // N = 6 folds to 4 participants; exact when 4 | M.
+        let n = 6;
+        let m = 4 * 1000;
+        let mut bufs = vec![vec![1.0f32; m]; n];
+        let r = halving_doubling_allreduce(&mut bufs, link());
+        let want = cost_model::halving_doubling_allreduce(link(), 4.0 * m as f64, n);
+        assert!(
+            (r.seconds - want).abs() / want < 1e-9,
+            "sim {} vs model {}",
+            r.seconds,
+            want
+        );
+        // 2 fold rounds + 2·log2(4) core rounds.
+        assert_eq!(r.rounds, 2 + 4);
+        for b in &bufs {
+            assert_eq!(b, &vec![6.0; m]);
+        }
+    }
+
+    #[test]
+    fn property_sum_any_n_m() {
+        check("halving-doubling sums for any n,m", 60, |g| {
+            let n = g.usize_in(1, 12);
+            let m = g.usize_in(1, 200);
+            let bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(m, 1.0)).collect();
+            let mut want = vec![0.0f32; m];
+            for b in &bufs {
+                for (w, v) in want.iter_mut().zip(b) {
+                    *w += v;
+                }
+            }
+            let mut got = bufs;
+            halving_doubling_allreduce(&mut got, link());
+            for (w, b) in got.iter().enumerate() {
+                all_close(b, &want, 1e-4).map_err(|e| format!("worker {w}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fewer_latency_rounds_than_ring() {
+        let m = 8 * 100;
+        let mut a = vec![vec![1.0f32; m]; 8];
+        let mut b = vec![vec![1.0f32; m]; 8];
+        let hd = halving_doubling_allreduce(&mut a, link());
+        let ring = crate::collectives::ring_allreduce(&mut b, link());
+        assert!(hd.rounds < ring.rounds, "hd {} vs ring {}", hd.rounds, ring.rounds);
+        // Same β volume: per-worker egress is identical when N | M.
+        assert!((hd.bytes_per_worker - ring.bytes_per_worker).abs() < 1e-6);
+        assert!(hd.seconds < ring.seconds);
+    }
+
+    #[test]
+    fn single_worker_is_noop() {
+        let mut bufs = vec![vec![1.0, 2.0]];
+        let r = halving_doubling_allreduce(&mut bufs, link());
+        assert_eq!(r.seconds, 0.0);
+        assert_eq!(r.rounds, 0);
+        assert_eq!(bufs[0], vec![1.0, 2.0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        check("halving-doubling deterministic", 20, |g| {
+            let n = g.usize_in(2, 9);
+            let m = g.usize_in(1, 64);
+            let bufs: Vec<Vec<f32>> = (0..n)
+                .map(|i| {
+                    let mut r = Rng::new(i as u64);
+                    let mut v = vec![0.0; m];
+                    r.fill_normal(&mut v, 1.0);
+                    v
+                })
+                .collect();
+            let mut a = bufs.clone();
+            let mut b = bufs;
+            let ra = halving_doubling_allreduce(&mut a, link());
+            let rb = halving_doubling_allreduce(&mut b, link());
+            ensure(a == b && ra == rb, "nondeterministic")
+        });
+    }
+}

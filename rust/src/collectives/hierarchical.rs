@@ -1,0 +1,241 @@
+//! Two-level hierarchical allreduce over a [`Topology`]: binomial reduce to
+//! each node's leader on the fast intra-node link, ring allreduce among the
+//! leaders on the slow inter-node link, binomial broadcast back intra-node.
+//!
+//! Round structure for `w` ranks/node and `L = N/w` nodes: `⌈log2 w⌉`
+//! full-vector rounds on the intra link each way, plus the leaders'
+//! `2(L-1)`-round ring on the inter link — total
+//! `2·⌈log2 w⌉(α_i + Mβ_i) + 2(L-1)α_e + 2((L-1)/L)Mβ_e`, matching
+//! [`cost_model::hierarchical_allreduce`](crate::netsim::cost_model::hierarchical_allreduce)
+//! exactly for any `w` (the ring term is exact when `L` divides `M`).
+//!
+//! The slow link is paid only `L`-wide — the reason this op flips the
+//! dense-collective crossover on fast-intra/slow-inter clusters (Agarwal et
+//! al.), where flat ring/tree/HD all price the full N on the bottleneck.
+
+use crate::collectives::{ceil_log2, ring_allreduce, CommReport};
+use crate::netsim::cost_model::Topology;
+
+/// In-place SUM hierarchical allreduce. Workers are grouped by consecutive
+/// rank: node `g` owns ranks `[g·w, (g+1)·w)` with `g·w` as its leader.
+/// `bufs.len()` must be a multiple of `topo.workers_per_node`. After the
+/// call every buffer holds the elementwise sum.
+pub fn hierarchical_allreduce(bufs: &mut [Vec<f32>], topo: Topology) -> CommReport {
+    let n = bufs.len();
+    assert!(n >= 1);
+    let w = topo.workers_per_node.max(1);
+    assert!(n % w == 0, "cluster size {n} not divisible by workers_per_node {w}");
+    let m = bufs[0].len();
+    assert!(bufs.iter().all(|b| b.len() == m), "buffer length mismatch");
+    let mut report = CommReport::default();
+    if n == 1 || m == 0 {
+        return report;
+    }
+    if w == 1 {
+        // Flat degenerate case: plain ring over the inter link.
+        return ring_allreduce(bufs, topo.inter);
+    }
+    let nodes = n / w;
+    let bytes = 4.0 * m as f64;
+    let rounds = ceil_log2(w);
+
+    // Phase 1: intra-node binomial reduce to each node's leader. All nodes
+    // run the same round in parallel, so each round is charged once.
+    for d in 0..rounds {
+        let step = 1usize << d;
+        let mut any = false;
+        for g in 0..nodes {
+            let base = g * w;
+            for local in (0..w).rev() {
+                if local & step != 0 && local & (step - 1) == 0 {
+                    let src = base + local;
+                    let dst = src - step;
+                    let (lo, hi) = bufs.split_at_mut(src);
+                    for (dv, sv) in lo[dst].iter_mut().zip(&hi[0]) {
+                        *dv += *sv;
+                    }
+                    any = true;
+                }
+            }
+        }
+        if any {
+            report.add_round(topo.intra, bytes);
+        }
+    }
+
+    // Phase 2: ring allreduce among the node leaders on the inter link.
+    let mut leaders: Vec<Vec<f32>> = (0..nodes).map(|g| std::mem::take(&mut bufs[g * w])).collect();
+    report.merge(ring_allreduce(&mut leaders, topo.inter));
+    for (g, buf) in leaders.into_iter().enumerate() {
+        bufs[g * w] = buf;
+    }
+
+    // Phase 3: intra-node binomial broadcast from the leaders (mirror).
+    for d in (0..rounds).rev() {
+        let step = 1usize << d;
+        let mut any = false;
+        for g in 0..nodes {
+            let base = g * w;
+            for local in 0..w {
+                if local & step != 0 && local & (step - 1) == 0 {
+                    let dst = base + local;
+                    let src = dst - step;
+                    let (lo, hi) = bufs.split_at_mut(dst);
+                    hi[0].copy_from_slice(&lo[src]);
+                    any = true;
+                }
+            }
+        }
+        if any {
+            report.add_round(topo.intra, bytes);
+        }
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model::{self, LinkParams};
+    use crate::util::proptest::{all_close, check, ensure};
+
+    fn asym() -> Topology {
+        Topology::two_level(
+            LinkParams::from_ms_gbps(0.01, 100.0),
+            LinkParams::from_ms_gbps(10.0, 1.0),
+            4,
+        )
+    }
+
+    #[test]
+    fn sums_exactly_2x4() {
+        let mut bufs: Vec<Vec<f32>> = (0..8).map(|r| vec![r as f32; 4]).collect();
+        hierarchical_allreduce(&mut bufs, asym());
+        for b in &bufs {
+            assert_eq!(b, &vec![28.0; 4]);
+        }
+    }
+
+    #[test]
+    fn time_matches_closed_form() {
+        // Exact for any w (⌈log⌉ intra rounds) when nodes | m (ring
+        // chunking); (3, 6) pins the non-power-of-two-w case.
+        for (w, n) in [(2usize, 8usize), (4, 8), (2, 4), (8, 8), (3, 6)] {
+            let topo = Topology::two_level(
+                LinkParams::from_ms_gbps(0.05, 50.0),
+                LinkParams::from_ms_gbps(5.0, 2.0),
+                w,
+            );
+            let m = 8 * 300;
+            let mut bufs = vec![vec![1.0f32; m]; n];
+            let r = hierarchical_allreduce(&mut bufs, topo);
+            let want = cost_model::hierarchical_allreduce(topo, 4.0 * m as f64, n);
+            assert!(
+                (r.seconds - want).abs() / want < 1e-9,
+                "w={w} n={n}: sim {} vs model {}",
+                r.seconds,
+                want
+            );
+            let nodes = (n / w) as u32;
+            assert_eq!(r.rounds, 2 * ceil_log2(w) + 2 * (nodes - 1));
+        }
+    }
+
+    #[test]
+    fn beats_flat_ring_on_asymmetric_topology() {
+        let topo = asym();
+        let m = 100_000;
+        let mut a = vec![vec![1.0f32; m]; 8];
+        let mut b = vec![vec![1.0f32; m]; 8];
+        let hier = hierarchical_allreduce(&mut a, topo);
+        let flat = crate::collectives::ring_allreduce(&mut b, topo.inter);
+        assert!(
+            hier.seconds < flat.seconds,
+            "hier {} vs flat ring {}",
+            hier.seconds,
+            flat.seconds
+        );
+        assert_eq!(a, b, "both must produce the same sums");
+    }
+
+    #[test]
+    fn w1_degenerates_to_flat_ring() {
+        let topo = Topology::two_level(
+            LinkParams::from_ms_gbps(0.01, 100.0),
+            LinkParams::from_ms_gbps(5.0, 2.0),
+            1,
+        );
+        let m = 4 * 100;
+        let mut a = vec![vec![1.0f32; m]; 4];
+        let mut b = vec![vec![1.0f32; m]; 4];
+        let hier = hierarchical_allreduce(&mut a, topo);
+        let ring = crate::collectives::ring_allreduce(&mut b, topo.inter);
+        assert_eq!(hier, ring);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn property_sum_any_grouping() {
+        check("hierarchical sums for any (w, nodes, m)", 50, |g| {
+            let w = g.usize_in(1, 5);
+            let nodes = g.usize_in(1, 4);
+            let n = w * nodes;
+            let m = g.usize_in(1, 120);
+            let topo = Topology::two_level(
+                LinkParams::from_ms_gbps(0.01, 100.0),
+                LinkParams::from_ms_gbps(2.0, 5.0),
+                w,
+            );
+            let bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(m, 1.0)).collect();
+            let mut want = vec![0.0f32; m];
+            for b in &bufs {
+                for (wv, v) in want.iter_mut().zip(b) {
+                    *wv += v;
+                }
+            }
+            let mut got = bufs;
+            hierarchical_allreduce(&mut got, topo);
+            for (i, b) in got.iter().enumerate() {
+                all_close(b, &want, 1e-4).map_err(|e| format!("worker {i}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn ragged_cluster_rejected() {
+        let mut bufs = vec![vec![1.0f32; 4]; 6];
+        hierarchical_allreduce(&mut bufs, asym());
+    }
+
+    #[test]
+    fn single_worker_is_noop() {
+        let topo = Topology::two_level(
+            LinkParams::from_ms_gbps(0.01, 100.0),
+            LinkParams::from_ms_gbps(2.0, 5.0),
+            1,
+        );
+        let mut bufs = vec![vec![3.0f32, 4.0]];
+        let r = hierarchical_allreduce(&mut bufs, topo);
+        assert_eq!(r, CommReport::default());
+        assert_eq!(bufs[0], vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn deterministic() {
+        check("hierarchical deterministic", 20, |g| {
+            let w = *g.choose(&[2usize, 4]);
+            let n = w * 2;
+            let m = g.usize_in(1, 64);
+            let bufs: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(m, 1.0)).collect();
+            let topo = asym();
+            let topo = Topology { workers_per_node: w, ..topo };
+            let mut a = bufs.clone();
+            let mut b = bufs;
+            let ra = hierarchical_allreduce(&mut a, topo);
+            let rb = hierarchical_allreduce(&mut b, topo);
+            ensure(a == b && ra == rb, "nondeterministic")
+        });
+    }
+}

@@ -108,6 +108,20 @@ impl MetricsLog {
         self.steps.iter().map(|m| m.collective).collect()
     }
 
+    /// Per-collective usage counts, ordered by first appearance — the raw
+    /// data behind the Fig 8 densities and the per-topology crossover
+    /// tables (which collective the selector settled on, and for how long).
+    pub fn collective_counts(&self) -> Vec<(CollectiveKind, usize)> {
+        let mut out: Vec<(CollectiveKind, usize)> = Vec::new();
+        for m in &self.steps {
+            match out.iter_mut().find(|e| e.0 == m.collective) {
+                Some(e) => e.1 += 1,
+                None => out.push((m.collective, 1)),
+            }
+        }
+        out
+    }
+
     pub fn to_csv(&self) -> String {
         let mut out = String::from(
             "step,epoch,loss,t_compute,t_comp,t_sync,t_step,collective,cr,selected_rank,gain,alpha_ms,bw_gbps\n",
@@ -207,5 +221,26 @@ mod tests {
         assert_eq!(log.selected_ranks().len(), 8);
         assert_eq!(log.crs_used()[0], 0.01);
         assert_eq!(log.collectives_used()[0], CollectiveKind::ArTopkRing);
+    }
+
+    #[test]
+    fn collective_counts_order_and_totals() {
+        let mut log = MetricsLog::default();
+        for i in 0..6 {
+            let mut s = m(i, 0.1);
+            s.collective = if i % 3 == 0 {
+                CollectiveKind::HierarchicalAllreduce
+            } else {
+                CollectiveKind::HalvingDoublingAllreduce
+            };
+            log.record(s);
+        }
+        assert_eq!(
+            log.collective_counts(),
+            vec![
+                (CollectiveKind::HierarchicalAllreduce, 2),
+                (CollectiveKind::HalvingDoublingAllreduce, 4),
+            ]
+        );
     }
 }

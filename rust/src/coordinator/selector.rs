@@ -11,7 +11,7 @@ use crate::artopk::ArFlavor;
 use crate::collectives::CollectiveKind;
 use crate::netsim::cost_model::{
     self, prefer_ring_over_ag, prefer_ring_over_tree, prefer_tree_over_ag,
-    CompressedCollective, LinkParams,
+    CompressedCollective, LinkParams, Topology,
 };
 
 /// Decision record (also logged so Fig 8 can be regenerated).
@@ -49,7 +49,8 @@ pub fn choose_eqn5(link: LinkParams, m_bytes: f64, n: usize, cr: f64) -> Collect
     }
 }
 
-/// Dense path: ring vs tree allreduce for DenseSGD.
+/// Dense path: ring vs tree allreduce for DenseSGD (the paper's original
+/// two-way choice; see [`choose_dense_topo`] for the full candidate set).
 pub fn choose_dense(link: LinkParams, m_bytes: f64, n: usize) -> CollectiveKind {
     if cost_model::ring_allreduce(link, m_bytes, n)
         <= cost_model::tree_allreduce(link, m_bytes, n)
@@ -58,6 +59,36 @@ pub fn choose_dense(link: LinkParams, m_bytes: f64, n: usize) -> CollectiveKind 
     } else {
         CollectiveKind::TreeAllreduce
     }
+}
+
+/// Topology-aware dense path: cheapest of {Ring-AR, Tree-AR, HD-AR} priced
+/// on the bottleneck (inter) link, plus Hier-AR when the topology is
+/// two-level. In the pure α-β model HD-AR dominates both ring and tree for
+/// power-of-two N, and Hier-AR overtakes it once the intra/inter asymmetry
+/// outweighs the extra full-vector intra rounds.
+pub fn choose_dense_topo(topo: Topology, m_bytes: f64, n: usize) -> Choice {
+    let l = topo.inter;
+    let mut cand = vec![
+        (CollectiveKind::RingAllreduce, cost_model::ring_allreduce(l, m_bytes, n)),
+        (CollectiveKind::TreeAllreduce, cost_model::tree_allreduce(l, m_bytes, n)),
+        (
+            CollectiveKind::HalvingDoublingAllreduce,
+            cost_model::halving_doubling_allreduce(l, m_bytes, n),
+        ),
+    ];
+    if !topo.is_flat() {
+        cand.push((
+            CollectiveKind::HierarchicalAllreduce,
+            cost_model::hierarchical_allreduce(topo, m_bytes, n),
+        ));
+    }
+    let mut best = cand[0];
+    for &c in &cand[1..] {
+        if c.1 < best.1 {
+            best = c;
+        }
+    }
+    Choice { kind: best.0, predicted_s: best.1 }
 }
 
 /// Map the chosen collective to the AR flavour AR-Topk should run with
@@ -116,6 +147,57 @@ mod tests {
         ] {
             assert!(c.predicted_s <= k.cost(l(4.0, 20.0), 4e8, 8, 0.01) + 1e-15);
         }
+    }
+
+    /// Acceptance anchor: on a fast-intra/slow-inter (asymmetric) topology
+    /// the selector must pick Hier-AR over the flat ring — the slow link is
+    /// paid nodes-wide instead of N-wide.
+    #[test]
+    fn picks_hierarchical_over_flat_ring_on_asymmetric_topology() {
+        let topo = Topology::two_level(l(0.01, 100.0), l(10.0, 1.0), 4);
+        let m = 4e8; // 1e8 params
+        let c = choose_dense_topo(topo, m, 8);
+        assert_eq!(c.kind, CollectiveKind::HierarchicalAllreduce);
+        assert!(c.predicted_s < cost_model::ring_allreduce(topo.inter, m, 8));
+    }
+
+    /// Flat topology: Hier-AR is excluded and HD-AR (ring β at tree α)
+    /// dominates the α-β model for power-of-two N.
+    #[test]
+    fn flat_topology_prefers_halving_doubling() {
+        let topo = Topology::flat(l(10.0, 1.0));
+        let c = choose_dense_topo(topo, 4e8, 8);
+        assert_eq!(c.kind, CollectiveKind::HalvingDoublingAllreduce);
+    }
+
+    #[test]
+    fn choose_dense_topo_is_argmin() {
+        check("dense topo selector minimizes", 200, |g| {
+            let w = *g.choose(&[1usize, 2, 4]);
+            let n = w * *g.choose(&[1usize, 2, 4]);
+            if n < 2 {
+                return Ok(());
+            }
+            let topo = Topology::two_level(
+                l(g.f64_in(0.001, 1.0), g.f64_in(10.0, 200.0)),
+                l(g.f64_in(0.1, 100.0), g.f64_in(0.3, 50.0)),
+                w,
+            );
+            let m = g.f64_in(1e6, 4e9);
+            let best = choose_dense_topo(topo, m, n);
+            let mut costs = vec![
+                cost_model::ring_allreduce(topo.inter, m, n),
+                cost_model::tree_allreduce(topo.inter, m, n),
+                cost_model::halving_doubling_allreduce(topo.inter, m, n),
+            ];
+            if !topo.is_flat() {
+                costs.push(cost_model::hierarchical_allreduce(topo, m, n));
+            }
+            for c in costs {
+                ensure(best.predicted_s <= c + 1e-15, format!("{:?} not minimal", best.kind))?;
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -9,7 +9,8 @@
 
 use crate::artopk::{ArFlavor, ArTopk, SelectionPolicy};
 use crate::collectives::{
-    allgather_sparse, ps_exchange, ring_allreduce, tree_allreduce, CollectiveKind, CommReport,
+    allgather_sparse, halving_doubling_allreduce, hierarchical_allreduce, ps_exchange,
+    ring_allreduce, tree_allreduce, CollectiveKind, CommReport,
 };
 use crate::compress::{gain::gain, Compressor, CompressorKind, EfState, GainTracker};
 use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveState};
@@ -17,6 +18,7 @@ use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::{MetricsLog, StepMetrics};
 use crate::coordinator::selector;
 use crate::coordinator::worker::{ComputeModel, GradSource};
+use crate::netsim::cost_model::Topology;
 use crate::netsim::probe::Probe;
 use crate::netsim::schedule::NetSchedule;
 use crate::netsim::VirtualClock;
@@ -28,10 +30,20 @@ use std::time::Instant;
 pub enum DenseFlavor {
     Ring,
     Tree,
+    /// Recursive halving-doubling (Rabenseifner): ring's β at tree's α.
+    HalvingDoubling,
+    /// Two-level intra-reduce / inter-ring / intra-broadcast over the
+    /// schedule's [`Topology`] (falls back to ring on flat clusters).
+    Hierarchical,
     /// Parameter-server star (scale-out strawman).
     Ps,
-    /// Pick ring/tree per step from the probed link.
+    /// Pick ring/tree per step from the probed link (the paper's original
+    /// two-way dense choice).
     Auto,
+    /// Pick the cheapest of {ring, tree, HD, hierarchical} per step from
+    /// the probed link and the schedule's topology
+    /// ([`selector::choose_dense_topo`]).
+    TopoAuto,
 }
 
 /// Compression-communication strategy.
@@ -154,6 +166,11 @@ impl Trainer {
         let dim = source.dim();
         assert_eq!(params.len(), dim);
         let n = cfg.n_workers;
+        assert!(
+            n % cfg.schedule.workers_per_node() == 0,
+            "n_workers {n} not divisible by the schedule's workers_per_node {}",
+            cfg.schedule.workers_per_node()
+        );
         let (cur_cr, adaptive, gain_threshold) = match &cfg.cr {
             CrControl::Static(c) => (*c, None, 0.1),
             CrControl::Adaptive(a) => {
@@ -217,10 +234,11 @@ impl Trainer {
         4.0 * self.source.dim() as f64 * self.cfg.msg_scale
     }
 
-    /// Scale a link so β-terms charge `msg_scale`-times the actual bytes
-    /// (equivalent to a msg_scale-times bigger message; α unchanged).
-    fn scaled(&self, l: crate::netsim::cost_model::LinkParams) -> crate::netsim::cost_model::LinkParams {
-        crate::netsim::cost_model::LinkParams { alpha: l.alpha, beta: l.beta * self.cfg.msg_scale }
+    /// Scale the topology's links so β-terms charge `msg_scale`-times the
+    /// actual bytes (equivalent to a msg_scale-times bigger message; α
+    /// unchanged) — see [`Topology::scale_beta`].
+    fn scaled_topo(&self, t: Topology) -> Topology {
+        t.scale_beta(self.cfg.msg_scale)
     }
 
     /// Run the configured number of steps (with eval + adaptation hooks).
@@ -258,7 +276,12 @@ impl Trainer {
     ) -> StepMetrics {
         let n = self.cfg.n_workers;
         let epoch = self.epoch();
-        let true_link = self.scaled(self.cfg.schedule.at(epoch));
+        // True data-movement topology (β scaled by msg_scale) and the
+        // selector's view of it: the probe observes the inter link, the
+        // intra link is known in-machine hardware.
+        let base_topo = self.cfg.schedule.topology_at(epoch);
+        let true_topo = self.scaled_topo(base_topo);
+        let probed_topo = Topology { inter: probed, ..base_topo };
         let t_compute = self.cfg.compute.step_time(n, &mut self.rng);
 
         // Per-worker gradients (real computation — PJRT or host backprop).
@@ -274,7 +297,7 @@ impl Trainer {
         // Exchange. Measured compression time is rescaled by comp_scale
         // (see TrainConfig::comp_scale); honest at comp_scale = 1.
         let (update, comm, t_comp, collective, selected, step_gain) =
-            self.exchange(&grads, true_link, probed);
+            self.exchange(&grads, true_topo, probed_topo);
         let t_comp = t_comp * self.cfg.comp_scale;
 
         // Momentum-SGD update (identical params on every worker).
@@ -313,16 +336,21 @@ impl Trainer {
         m
     }
 
-    /// Compress + communicate per the strategy. Returns
-    /// (mean update, comm report, measured t_comp, collective, selected rank, gain).
+    /// Compress + communicate per the strategy. `true_topo` carries the
+    /// msg_scale-adjusted links the data actually moves over (its inter
+    /// side is the old `true_link`); `probed_topo` is the selector's noisy
+    /// view. Returns (mean update, comm report, measured t_comp,
+    /// collective, selected rank, gain).
     fn exchange(
         &mut self,
         grads: &[Vec<f32>],
-        true_link: crate::netsim::cost_model::LinkParams,
-        probed: crate::netsim::cost_model::LinkParams,
+        true_topo: Topology,
+        probed_topo: Topology,
     ) -> (Vec<f32>, CommReport, f64, CollectiveKind, Option<usize>, f64) {
         let n = self.cfg.n_workers;
-        
+        let true_link = true_topo.inter;
+        let probed = probed_topo.inter;
+
         match self.cfg.strategy {
             Strategy::DenseSgd { flavor } => {
                 let mut bufs = grads.to_vec();
@@ -333,6 +361,14 @@ impl Trainer {
                     DenseFlavor::Tree => {
                         (tree_allreduce(&mut bufs, true_link), CollectiveKind::TreeAllreduce)
                     }
+                    DenseFlavor::HalvingDoubling => (
+                        halving_doubling_allreduce(&mut bufs, true_link),
+                        CollectiveKind::HalvingDoublingAllreduce,
+                    ),
+                    DenseFlavor::Hierarchical => (
+                        hierarchical_allreduce(&mut bufs, true_topo),
+                        CollectiveKind::HierarchicalAllreduce,
+                    ),
                     DenseFlavor::Ps => {
                         (ps_exchange(&mut bufs, 0, true_link), CollectiveKind::PsStar)
                     }
@@ -345,6 +381,28 @@ impl Trainer {
                             _ => (
                                 tree_allreduce(&mut bufs, true_link),
                                 CollectiveKind::TreeAllreduce,
+                            ),
+                        }
+                    }
+                    DenseFlavor::TopoAuto => {
+                        let choice =
+                            selector::choose_dense_topo(probed_topo, self.model_bytes(), n);
+                        match choice.kind {
+                            CollectiveKind::RingAllreduce => (
+                                ring_allreduce(&mut bufs, true_link),
+                                CollectiveKind::RingAllreduce,
+                            ),
+                            CollectiveKind::TreeAllreduce => (
+                                tree_allreduce(&mut bufs, true_link),
+                                CollectiveKind::TreeAllreduce,
+                            ),
+                            CollectiveKind::HalvingDoublingAllreduce => (
+                                halving_doubling_allreduce(&mut bufs, true_link),
+                                CollectiveKind::HalvingDoublingAllreduce,
+                            ),
+                            _ => (
+                                hierarchical_allreduce(&mut bufs, true_topo),
+                                CollectiveKind::HierarchicalAllreduce,
                             ),
                         }
                     }
@@ -604,6 +662,68 @@ mod tests {
         let used: Vec<&str> = t.metrics.collectives_used().iter().map(|c| c.name()).collect();
         assert!(used[..30].iter().all(|&c| c == "ART-Ring"), "phase A: {:?}", &used[..5]);
         assert!(used[50..].iter().all(|&c| c == "AG"), "phase B: {:?}", &used[75..]);
+    }
+
+    #[test]
+    fn halving_doubling_dense_learns_like_ring() {
+        let ring = train(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, 120);
+        let hd = train(Strategy::DenseSgd { flavor: DenseFlavor::HalvingDoubling }, 1.0, 120);
+        // Identical numerics (both are exact sums), cheaper sync.
+        let a_ring = ring.metrics.final_accuracy().unwrap();
+        let a_hd = hd.metrics.final_accuracy().unwrap();
+        assert!(a_hd > 0.8, "HD accuracy {a_hd} (ring {a_ring})");
+        assert!(
+            hd.metrics.summary().mean_sync_s < ring.metrics.summary().mean_sync_s,
+            "HD must beat ring on the default latency-bearing link"
+        );
+        assert!(hd
+            .metrics
+            .collectives_used()
+            .iter()
+            .all(|c| *c == CollectiveKind::HalvingDoublingAllreduce));
+    }
+
+    #[test]
+    fn topo_auto_picks_hierarchical_on_asymmetric_cluster() {
+        use crate::netsim::cost_model::LinkParams;
+        // 2 nodes x 2 ranks: NVLink-class intra, congested 10ms/1Gbps inter.
+        let sched = NetSchedule::static_link(LinkParams::from_ms_gbps(10.0, 1.0))
+            .with_topology(LinkParams::from_ms_gbps(0.01, 100.0), 2);
+        let mut cfg = quick_cfg(Strategy::DenseSgd { flavor: DenseFlavor::TopoAuto }, 1.0, 30);
+        cfg.schedule = sched;
+        let src = Box::new(crate::runtime::host_model::SyntheticGrad::new(2_000_000, 5));
+        let mut t = Trainer::new(cfg, src);
+        t.run();
+        let used = t.metrics.collectives_used();
+        assert!(
+            used.iter().all(|c| *c == CollectiveKind::HierarchicalAllreduce),
+            "expected Hier-AR everywhere, got {:?}",
+            used.first()
+        );
+    }
+
+    #[test]
+    fn hierarchical_flavor_falls_back_to_ring_on_flat_cluster() {
+        let t = train(Strategy::DenseSgd { flavor: DenseFlavor::Hierarchical }, 1.0, 20);
+        // Flat schedule (workers_per_node = 1): the op degenerates to ring
+        // but is still reported as the hierarchical flavour.
+        assert!(t
+            .metrics
+            .collectives_used()
+            .iter()
+            .all(|c| *c == CollectiveKind::HierarchicalAllreduce));
+        assert!(t.metrics.summary().mean_sync_s > 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn mismatched_topology_rejected() {
+        use crate::netsim::cost_model::LinkParams;
+        let mut cfg = quick_cfg(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, 1);
+        cfg.n_workers = 6;
+        cfg.schedule = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0))
+            .with_topology(LinkParams::from_ms_gbps(0.01, 100.0), 4);
+        Trainer::new(cfg, Box::new(HostMlp::default_preset(1)));
     }
 
     #[test]

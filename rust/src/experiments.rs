@@ -5,9 +5,10 @@
 //! Every `examples/table*`/`examples/fig*` binary builds on these helpers
 //! so the rows they print line up with the paper's tables 1:1.
 
+use crate::coordinator::selector;
 use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig, Trainer};
 use crate::coordinator::worker::ComputeModel;
-use crate::netsim::cost_model::LinkParams;
+use crate::netsim::cost_model::{self, LinkParams, Topology};
 use crate::netsim::schedule::NetSchedule;
 use crate::runtime::host_model::HostMlp;
 use crate::util::table::{fmt_ms, Table};
@@ -37,6 +38,88 @@ pub const PAPER_COMPUTE_MS: [(&str, f64); 4] = [
 /// single-core stream puts the ratio at 20-35x; we use the conservative
 /// low end. Applied by proxy harnesses as comp_scale = msg_scale / this.
 pub const GPU_COMPRESS_SPEEDUP: f64 = 20.0;
+
+/// Intra-node link of the two-level topology presets: NVLink/PCIe-class
+/// (10 µs, 100 Gbps) — effectively free next to any WAN/TCP inter link.
+pub fn intra_nvlink() -> LinkParams {
+    LinkParams::from_ms_gbps(0.01, 100.0)
+}
+
+/// Named cluster topologies for the per-topology crossover tables: the flat
+/// single-link cluster every original experiment assumed, plus two-level
+/// layouts (2 nodes × 4 ranks, 4 nodes × 2 ranks) sharing the same
+/// bottleneck `inter` link. All presets keep 8 total ranks so rows are
+/// directly comparable with the paper's N=8 tables.
+pub fn topology_presets(inter: LinkParams) -> Vec<(&'static str, Topology)> {
+    vec![
+        ("flat 1x8", Topology::flat(inter)),
+        ("2 nodes x4", Topology::two_level(intra_nvlink(), inter, 4)),
+        ("4 nodes x2", Topology::two_level(intra_nvlink(), inter, 2)),
+    ]
+}
+
+/// One row of the dense-collective crossover table: closed-form costs (ms)
+/// of every dense allreduce on one topology, and the selector's pick.
+#[derive(Debug, Clone)]
+pub struct DenseCrossoverRow {
+    pub topology: String,
+    pub ring_ms: f64,
+    pub tree_ms: f64,
+    pub hd_ms: f64,
+    /// None on flat topologies (the op degenerates to ring).
+    pub hier_ms: Option<f64>,
+    pub chosen: &'static str,
+}
+
+/// Dense AR crossover per topology for an `m_bytes` tensor on `n` ranks —
+/// the data behind the "optimal collective flips with topology" claim
+/// (Agarwal et al.; ISSUE 1 tentpole).
+pub fn dense_crossover_rows(
+    presets: &[(&str, Topology)],
+    m_bytes: f64,
+    n: usize,
+) -> Vec<DenseCrossoverRow> {
+    presets
+        .iter()
+        .map(|(name, topo)| {
+            let l = topo.inter;
+            let hier = if topo.is_flat() {
+                None
+            } else {
+                Some(cost_model::hierarchical_allreduce(*topo, m_bytes, n) * 1e3)
+            };
+            DenseCrossoverRow {
+                topology: name.to_string(),
+                ring_ms: cost_model::ring_allreduce(l, m_bytes, n) * 1e3,
+                tree_ms: cost_model::tree_allreduce(l, m_bytes, n) * 1e3,
+                hd_ms: cost_model::halving_doubling_allreduce(l, m_bytes, n) * 1e3,
+                hier_ms: hier,
+                chosen: selector::choose_dense_topo(*topo, m_bytes, n).kind.name(),
+            }
+        })
+        .collect()
+}
+
+/// The Eqn 5 AG-vs-AR decision across bottleneck-link qualities: compressed
+/// collectives run rank-flat over the topology's inter link (the intra side
+/// never carries the compressed exchange), so their crossover is a function
+/// of that single link — sweep it to see the pick move. Returns
+/// `(link label, cr, chosen collective)` per link × CR.
+pub fn compressed_crossover(
+    inter_links: &[(&str, LinkParams)],
+    m_bytes: f64,
+    n: usize,
+    crs: &[f64],
+) -> Vec<(String, f64, &'static str)> {
+    let mut out = Vec::new();
+    for (name, link) in inter_links {
+        for &cr in crs {
+            let chosen = cost_model::optimal_collective(*link, m_bytes, n, cr).name();
+            out.push((name.to_string(), cr, chosen));
+        }
+    }
+    out
+}
 
 /// Standard proxy-training config: 8 workers on a 4 ms / 20 Gbps link
 /// (the Tables III/IV/V setting).
@@ -145,6 +228,57 @@ mod tests {
     fn paper_registry_sane() {
         assert_eq!(PAPER_MODELS.len(), 4);
         assert!(PAPER_MODELS.windows(2).all(|w| w[0].1 < w[1].1));
+    }
+
+    #[test]
+    fn topology_presets_share_the_bottleneck() {
+        let inter = LinkParams::from_ms_gbps(10.0, 1.0);
+        let presets = topology_presets(inter);
+        assert_eq!(presets.len(), 3);
+        assert!(presets[0].1.is_flat());
+        for (_, t) in &presets {
+            assert_eq!(t.inter, inter);
+            assert_eq!(8 % t.workers_per_node, 0, "presets must tile N=8");
+        }
+    }
+
+    /// The tentpole claim in table form: on a flat cluster HD-AR wins the
+    /// dense crossover; make the inter link asymmetric-slow and the same
+    /// model/N flips to Hier-AR.
+    #[test]
+    fn dense_crossover_flips_with_topology() {
+        let presets = topology_presets(LinkParams::from_ms_gbps(10.0, 1.0));
+        let rows = dense_crossover_rows(&presets, 4.0 * 25.6e6, 8);
+        assert_eq!(rows[0].chosen, "HD-AR");
+        assert_eq!(rows[0].hier_ms, None);
+        for row in &rows[1..] {
+            assert_eq!(row.chosen, "Hier-AR", "{}", row.topology);
+            let hier = row.hier_ms.expect("two-level row has a Hier-AR cost");
+            assert!(hier < row.ring_ms && hier < row.hd_ms);
+        }
+    }
+
+    #[test]
+    fn compressed_crossover_moves_with_link_quality() {
+        let links = [
+            ("lan", LinkParams::from_ms_gbps(1.0, 10.0)),
+            ("wan", LinkParams::from_ms_gbps(50.0, 1.0)),
+        ];
+        let rows = compressed_crossover(&links, 4.0 * 25.6e6, 8, &[0.1, 0.001]);
+        assert_eq!(rows.len(), 4);
+        let pick = |name: &str, cr: f64| {
+            rows.iter()
+                .find(|(l, c, _)| l == name && *c == cr)
+                .map(|(_, _, chosen)| *chosen)
+                .unwrap()
+        };
+        // At CR 0.1 the AR flavour flips with the link (Eqn 5a): ring on
+        // the low-latency LAN, tree on the high-latency WAN. Tiny CRs stay
+        // with AG on both.
+        assert_eq!(pick("lan", 0.1), "ART-Ring");
+        assert_eq!(pick("wan", 0.1), "ART-Tree");
+        assert_eq!(pick("lan", 0.001), "AG");
+        assert_eq!(pick("wan", 0.001), "AG");
     }
 
     #[test]

@@ -6,13 +6,16 @@
 //! cost-model driven collective selection (Allgather vs AR-Topk ring/tree),
 //! and NSGA-II multi-objective adaptation of the compression ratio.
 //!
-//! Layer map (see DESIGN.md):
-//! * L3 (this crate): coordinator, collectives, network simulator,
-//!   compressors, MOO controller.
+//! Layer map (see DESIGN.md for the full architecture, README.md for the
+//! quickstart):
+//! * L3 (this crate): coordinator, collectives (flat + topology-aware),
+//!   network simulator, compressors, MOO controller.
 //! * L2/L1 (python, build-time only): jax model + Pallas kernels, AOT-lowered
-//!   to HLO text in `artifacts/`, executed here via PJRT ([`runtime`]).
+//!   to HLO text in `artifacts/`, executed here via PJRT ([`runtime`],
+//!   behind the `pjrt` cargo feature).
 //!
-//! The offline build vendors only `xla` + `anyhow`; every other facility
+//! The offline build vendors only `xla` (optional, `pjrt` feature) +
+//! `anyhow` (first-party shim under `rust/vendor/`); every other facility
 //! (PRNG, config, CLI, stats/KDE, property testing, bench harness) is
 //! first-party under [`util`].
 
@@ -33,8 +36,8 @@ pub mod prelude {
     pub use crate::artopk::{ArTopk, SelectionPolicy};
     pub use crate::collectives::CollectiveKind;
     pub use crate::compress::{Compressor, CompressorKind, SparseGrad};
-    pub use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig, Trainer};
-    pub use crate::netsim::cost_model::{self, LinkParams};
+    pub use crate::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
+    pub use crate::netsim::cost_model::{self, LinkParams, Topology};
     pub use crate::netsim::schedule::NetSchedule;
     pub use crate::tensor::{Layout, ParamVec};
     pub use crate::util::rng::Rng;

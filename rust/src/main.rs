@@ -56,8 +56,11 @@ fn parse_strategy(s: &str) -> Result<Strategy> {
     Ok(match s {
         "dense-ring" => Strategy::DenseSgd { flavor: DenseFlavor::Ring },
         "dense-tree" => Strategy::DenseSgd { flavor: DenseFlavor::Tree },
+        "dense-hd" => Strategy::DenseSgd { flavor: DenseFlavor::HalvingDoubling },
+        "dense-hier" => Strategy::DenseSgd { flavor: DenseFlavor::Hierarchical },
         "dense-ps" => Strategy::DenseSgd { flavor: DenseFlavor::Ps },
         "dense" | "dense-auto" => Strategy::DenseSgd { flavor: DenseFlavor::Auto },
+        "dense-topo" => Strategy::DenseSgd { flavor: DenseFlavor::TopoAuto },
         "ag-topk" => Strategy::AgCompress { kind: CompressorKind::TopK },
         "ag-lwtopk" => Strategy::AgCompress { kind: CompressorKind::LwTopk },
         "ag-mstopk" => Strategy::AgCompress { kind: CompressorKind::MsTopk },
@@ -78,8 +81,9 @@ fn parse_strategy(s: &str) -> Result<Strategy> {
         "flexible" => Strategy::Flexible { policy: SelectionPolicy::Star },
         "flexible-var" => Strategy::Flexible { policy: SelectionPolicy::Var },
         _ => bail!(
-            "unknown strategy `{s}` (dense[-ring|-tree|-ps|-auto], ag-topk, ag-lwtopk, \
-             ag-mstopk, ag-randomk, artopk-star[-tree], artopk-var, artopk-auto, flexible[-var])"
+            "unknown strategy `{s}` (dense[-ring|-tree|-hd|-hier|-ps|-auto|-topo], ag-topk, \
+             ag-lwtopk, ag-mstopk, ag-randomk, artopk-star[-tree], artopk-var, artopk-auto, \
+             flexible[-var])"
         ),
     })
 }
@@ -127,6 +131,24 @@ fn cmd_train(args: &Args) -> Result<()> {
         )),
         name => NetSchedule::preset(name, epochs)
             .with_context(|| format!("unknown schedule `{name}` (static|c1|c2)"))?,
+    };
+
+    // Optional two-level topology overlay: a fast fixed intra-node link
+    // under the scheduled inter-node link (--workers-per-node > 1).
+    let wpn = args.usize_or(
+        "workers-per-node",
+        cfgfile.int_or("net.workers_per_node", 1) as usize,
+    )?;
+    let schedule = if wpn > 1 {
+        schedule.with_topology(
+            LinkParams::from_ms_gbps(
+                args.f64_or("intra-ms", cfgfile.float_or("net.intra_alpha_ms", 0.01))?,
+                args.f64_or("intra-gbps", cfgfile.float_or("net.intra_bw_gbps", 100.0))?,
+            ),
+            wpn,
+        )
+    } else {
+        schedule
     };
 
     let cr = if args.flag("adaptive") || cfgfile.bool_or("compress.adaptive", false) {
@@ -286,7 +308,10 @@ fn cmd_info() -> Result<()> {
         }
         Err(e) => println!("artifacts: {e}"),
     }
-    let engine = Engine::cpu()?;
-    println!("pjrt: platform={}", engine.platform());
+    // PJRT may be compiled out (no `pjrt` feature) — report, don't fail.
+    match Engine::cpu() {
+        Ok(engine) => println!("pjrt: platform={}", engine.platform()),
+        Err(e) => println!("pjrt: {e}"),
+    }
     Ok(())
 }

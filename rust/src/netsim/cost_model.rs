@@ -18,6 +18,15 @@ pub struct LinkParams {
 
 impl LinkParams {
     /// From the units the paper quotes: latency in ms, bandwidth in Gbps.
+    ///
+    /// ```
+    /// use flexcomm::netsim::cost_model::LinkParams;
+    /// let l = LinkParams::from_ms_gbps(4.0, 20.0);
+    /// assert!((l.alpha - 4e-3).abs() < 1e-15);       // 4 ms in seconds
+    /// assert!((l.beta - 4e-10).abs() < 1e-22);       // 8 bits / 20e9 bps
+    /// assert!((l.alpha_ms() - 4.0).abs() < 1e-12);   // round-trips
+    /// assert!((l.bw_gbps() - 20.0).abs() < 1e-9);
+    /// ```
     pub fn from_ms_gbps(alpha_ms: f64, bw_gbps: f64) -> Self {
         assert!(alpha_ms >= 0.0 && bw_gbps > 0.0);
         LinkParams {
@@ -40,6 +49,100 @@ fn log2f(n: usize) -> f64 {
     (n as f64).log2()
 }
 
+/// `⌈log2 n⌉` as f64 — the binomial round count for arbitrary `n` (matches
+/// the simulated ops, which can't run fractional rounds).
+#[inline]
+fn ceil_log2f(n: usize) -> f64 {
+    debug_assert!(n >= 1);
+    (usize::BITS - (n - 1).leading_zeros()) as f64
+}
+
+/// Largest power of two `<= n` (the participant count after Rabenseifner's
+/// non-power-of-two fold). `prev_pow2(1) == 1`.
+pub fn prev_pow2(n: usize) -> usize {
+    assert!(n >= 1);
+    if n.is_power_of_two() {
+        n
+    } else {
+        n.next_power_of_two() >> 1
+    }
+}
+
+/// Two-level cluster topology: `workers_per_node` ranks share a fast
+/// intra-node link (NVLink/PCIe class); nodes talk over a slower inter-node
+/// link (the paper's `tc`-shaped TCP link). `workers_per_node == 1` is the
+/// flat single-link cluster every pre-topology experiment assumed.
+///
+/// The α-β crossover between collectives depends on this structure (Agarwal
+/// et al., *On the Utility of Gradient Compression*): a hierarchical
+/// allreduce pays the slow link only `N/workers_per_node`-wide, which flips
+/// the optimal dense collective on asymmetric clusters — see
+/// [`hierarchical_allreduce`] and the selector's
+/// [`choose_dense_topo`](crate::coordinator::selector::choose_dense_topo).
+///
+/// ```
+/// use flexcomm::netsim::cost_model::{LinkParams, Topology};
+/// let t = Topology::two_level(
+///     LinkParams::from_ms_gbps(0.01, 100.0), // intra: NVLink-class
+///     LinkParams::from_ms_gbps(4.0, 20.0),   // inter: shaped TCP
+///     4,                                     // ranks per node
+/// );
+/// assert_eq!(t.nodes(8), 2);
+/// assert!(!t.is_flat());
+/// assert!(Topology::flat(LinkParams::from_ms_gbps(4.0, 20.0)).is_flat());
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Topology {
+    /// Link between ranks on the same node.
+    pub intra: LinkParams,
+    /// Link between nodes — the bottleneck every flat collective rides.
+    pub inter: LinkParams,
+    /// Ranks per node; 1 = flat cluster (intra link unused).
+    pub workers_per_node: usize,
+}
+
+impl Topology {
+    /// Flat single-link cluster (the pre-topology default): every pair of
+    /// ranks talks over the same `link`.
+    pub fn flat(link: LinkParams) -> Self {
+        Topology { intra: link, inter: link, workers_per_node: 1 }
+    }
+
+    /// Two-level cluster: `workers_per_node` ranks per node on `intra`,
+    /// nodes connected by `inter`.
+    pub fn two_level(intra: LinkParams, inter: LinkParams, workers_per_node: usize) -> Self {
+        assert!(workers_per_node >= 1, "workers_per_node must be >= 1");
+        Topology { intra, inter, workers_per_node }
+    }
+
+    /// True when the cluster degenerates to a single link.
+    pub fn is_flat(&self) -> bool {
+        self.workers_per_node <= 1
+    }
+
+    /// Node count for an `n`-rank cluster (`workers_per_node` must divide
+    /// `n` evenly — ragged nodes are not modelled).
+    pub fn nodes(&self, n: usize) -> usize {
+        assert!(
+            n % self.workers_per_node == 0,
+            "cluster size {n} not divisible by workers_per_node {}",
+            self.workers_per_node
+        );
+        n / self.workers_per_node
+    }
+
+    /// Scale β on both links by `s` — the `msg_scale` proxy trick
+    /// (DESIGN.md §3): charging `s`× the bytes on the same link is
+    /// equivalent to `β·s` with α unchanged.
+    pub fn scale_beta(&self, s: f64) -> Topology {
+        Topology {
+            intra: LinkParams { alpha: self.intra.alpha, beta: self.intra.beta * s },
+            inter: LinkParams { alpha: self.inter.alpha, beta: self.inter.beta * s },
+            workers_per_node: self.workers_per_node,
+        }
+    }
+}
+
 /// Parameter-server (star): `2α + 2(N-1)Mβ`  — O(MN) bandwidth.
 pub fn ps_star(l: LinkParams, m: f64, n: usize) -> f64 {
     2.0 * l.alpha + 2.0 * (n as f64 - 1.0) * m * l.beta
@@ -54,6 +157,42 @@ pub fn ring_allreduce(l: LinkParams, m: f64, n: usize) -> f64 {
 /// Tree allreduce: `2α·log(N) + 2·log(N)·Mβ`.
 pub fn tree_allreduce(l: LinkParams, m: f64, n: usize) -> f64 {
     2.0 * l.alpha * log2f(n) + 2.0 * log2f(n) * m * l.beta
+}
+
+/// Recursive halving-doubling allreduce (Rabenseifner):
+/// `2α·log(N) + 2((N-1)/N)Mβ` for power-of-two N — the ring's bandwidth
+/// optimality at tree-like latency (log(N) α-rounds vs the ring's 2(N-1)).
+///
+/// Non-power-of-two N folds the `r = N - 2^⌊log2 N⌋` extra ranks into
+/// partners before/after the power-of-two core, adding `2α + 2Mβ`; the
+/// simulated op in [`crate::collectives::halving_doubling`] reproduces the
+/// same round structure exactly.
+pub fn halving_doubling_allreduce(l: LinkParams, m: f64, n: usize) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let np = prev_pow2(n) as f64;
+    let mut cost = 2.0 * np.log2() * l.alpha + 2.0 * ((np - 1.0) / np) * m * l.beta;
+    if np as usize != n {
+        cost += 2.0 * (l.alpha + m * l.beta);
+    }
+    cost
+}
+
+/// Two-level hierarchical allreduce on a [`Topology`]: binomial reduce to
+/// each node's leader over the intra link, ring allreduce among the
+/// `L = N/w` leaders over the inter link, binomial broadcast back:
+/// `2·⌈log(w)⌉(α_i + Mβ_i) + 2(L-1)α_e + 2((L-1)/L)Mβ_e`.
+///
+/// The intra term uses ⌈log⌉ (binomial trees run whole rounds), so this is
+/// exact against the simulated op for *any* `w`. The point of the op is
+/// that the slow inter link is paid only `L`-wide, so it wins on
+/// fast-intra/slow-inter clusters where every flat collective is priced on
+/// the bottleneck link.
+pub fn hierarchical_allreduce(t: Topology, m: f64, n: usize) -> f64 {
+    let w = t.workers_per_node.max(1);
+    let nodes = t.nodes(n);
+    2.0 * ceil_log2f(w) * (t.intra.alpha + m * t.intra.beta) + ring_allreduce(t.inter, m, nodes)
 }
 
 /// Binomial broadcast: `α·log(N) + log(N)·Mβ`.
@@ -314,7 +453,12 @@ mod tests {
             let m1 = g.f64_in(1e5, 1e8);
             let m2 = m1 * g.f64_in(1.01, 10.0);
             for f in [
-                ps_star, ring_allreduce, tree_allreduce, broadcast, allgather,
+                ps_star,
+                ring_allreduce,
+                tree_allreduce,
+                broadcast,
+                allgather,
+                halving_doubling_allreduce,
             ] {
                 ensure(f(p, m2, n) >= f(p, m1, n), "dense op not monotone")?;
             }
@@ -323,5 +467,87 @@ mod tests {
             ensure(art_ring(p, m2, n, c) >= art_ring(p, m1, n, c), "ring")?;
             ensure(art_tree(p, m2, n, c) >= art_tree(p, m1, n, c), "tree")
         });
+    }
+
+    #[test]
+    fn prev_pow2_values() {
+        assert_eq!(prev_pow2(1), 1);
+        assert_eq!(prev_pow2(2), 2);
+        assert_eq!(prev_pow2(3), 2);
+        assert_eq!(prev_pow2(6), 4);
+        assert_eq!(prev_pow2(8), 8);
+        assert_eq!(prev_pow2(9), 8);
+    }
+
+    /// HD-AR combines the ring's β-term with the tree's α-term, so for
+    /// power-of-two N it can never lose to either in the α-β model.
+    #[test]
+    fn halving_doubling_dominates_ring_and_tree_pow2() {
+        check("HD <= min(ring, tree) for pow2 N", 300, |g| {
+            let n = *g.choose(&[2usize, 4, 8, 16, 32]);
+            let p = l(g.f64_in(0.05, 200.0), g.f64_in(0.2, 100.0));
+            let m = g.f64_in(1e5, 5e9);
+            let hd = halving_doubling_allreduce(p, m, n);
+            ensure(hd <= ring_allreduce(p, m, n) + 1e-12, "HD lost to ring")?;
+            ensure(hd <= tree_allreduce(p, m, n) + 1e-12, "HD lost to tree")
+        });
+    }
+
+    /// Non-power-of-two N pays the fold: two extra rounds moving M each.
+    #[test]
+    fn halving_doubling_non_pow2_penalty() {
+        let p = l(5.0, 10.0);
+        let m = 4e8;
+        let pow2 = halving_doubling_allreduce(p, m, 4);
+        let folded = halving_doubling_allreduce(p, m, 6);
+        assert!(
+            (folded - pow2 - 2.0 * (p.alpha + m * p.beta)).abs() < 1e-12,
+            "fold penalty mismatch: {folded} vs {pow2}"
+        );
+        assert_eq!(halving_doubling_allreduce(p, m, 1), 0.0);
+    }
+
+    /// Hierarchical pays the slow inter link only nodes-wide: on a
+    /// fast-intra/slow-inter topology it beats every flat dense collective.
+    #[test]
+    fn hierarchical_wins_on_asymmetric_topology() {
+        let t = Topology::two_level(l(0.01, 100.0), l(10.0, 1.0), 4);
+        let m = 4e8;
+        let n = 8;
+        let hier = hierarchical_allreduce(t, m, n);
+        assert!(hier < ring_allreduce(t.inter, m, n), "vs flat ring");
+        assert!(hier < tree_allreduce(t.inter, m, n), "vs flat tree");
+        assert!(hier < halving_doubling_allreduce(t.inter, m, n), "vs flat HD");
+    }
+
+    /// Degenerate hierarchies collapse to known closed forms.
+    #[test]
+    fn hierarchical_degenerate_cases() {
+        let fast = l(0.01, 100.0);
+        let slow = l(10.0, 1.0);
+        let m = 4e7;
+        // w = 1: no intra phases — exactly the flat ring on the inter link.
+        let flat = Topology::two_level(fast, slow, 1);
+        assert!((hierarchical_allreduce(flat, m, 8) - ring_allreduce(slow, m, 8)).abs() < 1e-12);
+        // Single node: no inter phase — exactly the intra tree allreduce.
+        let one_node = Topology::two_level(fast, slow, 8);
+        assert!(
+            (hierarchical_allreduce(one_node, m, 8) - tree_allreduce(fast, m, 8)).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn topology_rejects_ragged_nodes() {
+        Topology::two_level(l(0.01, 100.0), l(10.0, 1.0), 3).nodes(8);
+    }
+
+    #[test]
+    fn topology_scale_beta_scales_both_links() {
+        let t = Topology::two_level(l(0.01, 100.0), l(4.0, 20.0), 4).scale_beta(10.0);
+        assert!((t.intra.beta - 10.0 * 8.0 / 100e9).abs() < 1e-21);
+        assert!((t.inter.beta - 10.0 * 4e-10).abs() < 1e-21);
+        assert!((t.intra.alpha - 1e-5).abs() < 1e-15, "alpha unchanged");
+        assert_eq!(t.workers_per_node, 4);
     }
 }

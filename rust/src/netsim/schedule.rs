@@ -7,7 +7,7 @@
 //! resource sharing and scheduling (§2-C2). [`NetSchedule`] reproduces all
 //! of these as composable layers over a base piecewise schedule.
 
-use crate::netsim::cost_model::LinkParams;
+use crate::netsim::cost_model::{LinkParams, Topology};
 use crate::util::rng::Rng;
 
 /// Canonical (α, 1/β) levels used by the paper's C1/C2 configurations.
@@ -29,7 +29,11 @@ pub struct Phase {
 }
 
 /// A network schedule: maps training progress (fractional epoch) to link
-/// parameters, with optional jitter and congestion-episode overlays.
+/// parameters, with optional jitter and congestion-episode overlays, and an
+/// optional two-level topology overlay (`with_topology`). The schedule (and
+/// its jitter/congestion) drives the *inter-node* link — the WAN/TCP side
+/// the paper shapes with `tc`; the intra-node link is in-machine hardware
+/// and stays fixed.
 #[derive(Debug, Clone)]
 pub struct NetSchedule {
     pub name: String,
@@ -42,6 +46,10 @@ pub struct NetSchedule {
     congestion_prob: f64,
     congestion_factor: f64,
     seed: u64,
+    /// Fixed intra-node link of the two-level topology overlay (None =
+    /// flat cluster; see [`NetSchedule::with_topology`]).
+    intra: Option<LinkParams>,
+    workers_per_node: usize,
 }
 
 impl NetSchedule {
@@ -53,6 +61,8 @@ impl NetSchedule {
             congestion_prob: 0.0,
             congestion_factor: 1.0,
             seed: 0,
+            intra: None,
+            workers_per_node: 1,
         }
     }
 
@@ -69,6 +79,8 @@ impl NetSchedule {
             congestion_prob: 0.0,
             congestion_factor: 1.0,
             seed: 0,
+            intra: None,
+            workers_per_node: 1,
         }
     }
 
@@ -77,6 +89,14 @@ impl NetSchedule {
     ///
     /// C1: (low-α, high-bw) epochs 1-12, (low, low) 13-24,
     ///     (high, low) 25-36, (high, high) 37+.
+    ///
+    /// ```
+    /// use flexcomm::netsim::schedule::NetSchedule;
+    /// let c1 = NetSchedule::c1(50.0);
+    /// assert_eq!(c1.at(0.0).bw_gbps().round(), 25.0);   // (low α, high bw)
+    /// assert_eq!(c1.at(30.0).alpha_ms().round(), 50.0); // (high α, low bw)
+    /// assert_eq!(c1.phases().len(), 4);
+    /// ```
     pub fn c1(total_epochs: f64) -> Self {
         use levels::*;
         let s = total_epochs / 50.0;
@@ -95,6 +115,14 @@ impl NetSchedule {
     ///
     /// C2: (low, high) 0-11, (moderate, moderate) 12-19, (high, low) 20-27,
     ///     (moderate, moderate) 28-35, (low, high) 36+.
+    ///
+    /// ```
+    /// use flexcomm::netsim::schedule::NetSchedule;
+    /// let c2 = NetSchedule::c2(50.0);
+    /// assert_eq!(c2.at(22.0).bw_gbps().round(), 1.0);   // (high α, low bw)
+    /// assert_eq!(c2.at(45.0).alpha_ms().round(), 1.0);  // recovers by the end
+    /// assert!(c2.phases().len() > NetSchedule::c1(50.0).phases().len());
+    /// ```
     pub fn c2(total_epochs: f64) -> Self {
         use levels::*;
         let s = total_epochs / 50.0;
@@ -136,6 +164,45 @@ impl NetSchedule {
         self.congestion_factor = factor;
         self.seed = seed;
         self
+    }
+
+    /// Overlay a two-level topology: `workers_per_node` ranks share the
+    /// fixed `intra` link, and the scheduled (possibly jittered/congested)
+    /// link becomes the *inter-node* link. See
+    /// [`Topology`](crate::netsim::cost_model::Topology).
+    ///
+    /// ```
+    /// use flexcomm::netsim::cost_model::LinkParams;
+    /// use flexcomm::netsim::schedule::NetSchedule;
+    /// let s = NetSchedule::c2(50.0)
+    ///     .with_topology(LinkParams::from_ms_gbps(0.01, 100.0), 4);
+    /// let t = s.topology_at(0.0);
+    /// assert_eq!(t.workers_per_node, 4);
+    /// assert_eq!(t.inter, s.at(0.0)); // schedule drives the inter link
+    /// assert_eq!(t.nodes(8), 2);
+    /// ```
+    pub fn with_topology(mut self, intra: LinkParams, workers_per_node: usize) -> Self {
+        assert!(workers_per_node >= 1, "workers_per_node must be >= 1");
+        self.intra = Some(intra);
+        self.workers_per_node = workers_per_node;
+        self
+    }
+
+    /// Ranks per node of the topology overlay (1 = flat).
+    pub fn workers_per_node(&self) -> usize {
+        self.workers_per_node
+    }
+
+    /// Full topology at a fractional epoch: the (overlaid) scheduled link
+    /// as the inter-node side, the fixed intra link if configured.
+    pub fn topology_at(&self, epoch: f64) -> Topology {
+        let inter = self.at(epoch);
+        match self.intra {
+            Some(intra) if self.workers_per_node > 1 => {
+                Topology::two_level(intra, inter, self.workers_per_node)
+            }
+            _ => Topology::flat(inter),
+        }
     }
 
     /// Base (overlay-free) link parameters at a fractional epoch.
@@ -254,6 +321,29 @@ mod tests {
         assert!(NetSchedule::preset("c1", 50.0).is_some());
         assert!(NetSchedule::preset("c2", 50.0).is_some());
         assert!(NetSchedule::preset("nope", 50.0).is_none());
+    }
+
+    #[test]
+    fn topology_defaults_to_flat() {
+        let s = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0));
+        let t = s.topology_at(1.0);
+        assert!(t.is_flat());
+        assert_eq!(t.inter, s.at(1.0));
+        assert_eq!(s.workers_per_node(), 1);
+    }
+
+    #[test]
+    fn topology_overlay_tracks_schedule_on_inter_only() {
+        let intra = LinkParams::from_ms_gbps(0.01, 100.0);
+        let s = NetSchedule::c1(50.0).with_topology(intra, 4).with_jitter(0.1, 9);
+        for epoch in [0.0, 13.0, 26.0, 40.0] {
+            let t = s.topology_at(epoch);
+            assert_eq!(t.workers_per_node, 4);
+            // The inter side follows the (jittered) schedule...
+            assert_eq!(t.inter, s.at(epoch));
+            // ...while the intra link stays the fixed in-machine hardware.
+            assert_eq!(t.intra, intra);
+        }
     }
 
     #[test]

@@ -1,0 +1,36 @@
+//! Stub [`Engine`] for builds without the `pjrt` feature: the API of
+//! `engine.rs` minus the `xla` dependency. Construction fails at runtime
+//! with an actionable message, so simulator-only binaries link and run
+//! while anything that actually needs PJRT reports why it can't.
+
+use anyhow::{bail, Result};
+
+const NO_PJRT: &str =
+    "flexcomm was built without the `pjrt` feature; rebuild with `--features pjrt` \
+     (requires the vendored `xla` crate and its xla_extension libraries)";
+
+/// Stand-in for the PJRT CPU client wrapper.
+pub struct Engine {
+    _private: (),
+}
+
+impl Engine {
+    /// Always fails in non-`pjrt` builds.
+    pub fn cpu() -> Result<Engine> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable (pjrt feature disabled)".to_string()
+    }
+
+    /// Always fails in non-`pjrt` builds.
+    pub fn load(&self, _path: &str) -> Result<Executable> {
+        bail!("{NO_PJRT}")
+    }
+}
+
+/// Stand-in for a compiled computation (never constructible here).
+pub struct Executable {
+    pub name: String,
+}

@@ -1,10 +1,26 @@
 //! PJRT runtime (L3 ⇄ L2 boundary): load the AOT-lowered HLO artifacts and
 //! execute them from the training hot path, plus host-side gradient sources
 //! for simulator-only experiments.
+//!
+//! The PJRT path needs the vendored `xla` bindings (and their native
+//! `xla_extension` libraries), so it sits behind the `pjrt` cargo feature.
+//! Default builds swap in API-identical stubs that fail at *runtime* with a
+//! clear message — every simulator-only workload (host models, cost tables,
+//! schedules) works without the feature.
 
 pub mod artifact;
-pub mod engine;
 pub mod host_model;
+
+#[cfg(feature = "pjrt")]
+pub mod engine;
+#[cfg(feature = "pjrt")]
+pub mod pjrt_model;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "engine_stub.rs"]
+pub mod engine;
+#[cfg(not(feature = "pjrt"))]
+#[path = "pjrt_model_stub.rs"]
 pub mod pjrt_model;
 
 pub use artifact::{find_artifacts_dir, ModelArtifacts};

@@ -1,0 +1,86 @@
+//! Stub [`PjrtModel`] for builds without the `pjrt` feature. Mirrors the
+//! public API of `pjrt_model.rs`; [`PjrtModel::load`] always fails, so the
+//! [`GradSource`] methods are unreachable by construction.
+
+use crate::coordinator::worker::GradSource;
+use crate::runtime::artifact::ModelArtifacts;
+use crate::runtime::engine::Engine;
+use crate::tensor::Layout;
+use anyhow::{bail, Result};
+
+const NO_PJRT: &str =
+    "flexcomm was built without the `pjrt` feature; rebuild with `--features pjrt` \
+     to execute AOT-lowered artifacts";
+
+/// Stand-in for the PJRT-backed model (never constructible here).
+pub struct PjrtModel {
+    arts: ModelArtifacts,
+}
+
+impl PjrtModel {
+    /// Always fails in non-`pjrt` builds.
+    pub fn load(_engine: &Engine, _arts: ModelArtifacts, _seed: u64) -> Result<PjrtModel> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn sgd_step(
+        &self,
+        _params: &[f32],
+        _momentum: &[f32],
+        _grads: &[f32],
+        _lr: f32,
+        _mom: f32,
+        _wd: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn ef_topk(
+        &self,
+        _g: &[f32],
+        _residual: &[f32],
+        _k: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, f64, f64, f32)> {
+        bail!("{NO_PJRT}")
+    }
+
+    pub fn has_ef_topk(&self) -> bool {
+        false
+    }
+
+    pub fn artifacts(&self) -> &ModelArtifacts {
+        &self.arts
+    }
+}
+
+impl GradSource for PjrtModel {
+    fn dim(&self) -> usize {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+
+    fn layout(&self) -> &Layout {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+
+    fn grad(
+        &mut self,
+        _params: &[f32],
+        _worker: usize,
+        _n_workers: usize,
+        _step: u64,
+    ) -> (f64, Vec<f32>) {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+
+    fn eval(&mut self, _params: &[f32]) -> (f64, f64) {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+
+    fn name(&self) -> String {
+        unreachable!("stub PjrtModel cannot be constructed")
+    }
+}

@@ -209,6 +209,43 @@ fn artopk_auto_switches_and_learns() {
     assert_eq!(ranks.len(), 200);
 }
 
+/// Topology tentpole, end to end: the same training run on a flat vs a
+/// two-level (fast-intra/slow-inter) cluster. TopoAuto must settle on
+/// Hier-AR under the two-level overlay, cut sync time vs the flat ring,
+/// and converge identically well (dense exchanges are exact sums).
+#[test]
+fn topo_auto_learns_and_cuts_sync_on_two_level_cluster() {
+    let slow_inter = LinkParams::from_ms_gbps(10.0, 1.0);
+    let flat = {
+        let mut cfg = base_cfg(
+            Strategy::DenseSgd { flavor: DenseFlavor::Ring },
+            CrControl::Static(1.0),
+            200,
+        );
+        cfg.schedule = NetSchedule::static_link(slow_inter);
+        run(cfg)
+    };
+    let topo = {
+        let mut cfg = base_cfg(
+            Strategy::DenseSgd { flavor: DenseFlavor::TopoAuto },
+            CrControl::Static(1.0),
+            200,
+        );
+        cfg.schedule = NetSchedule::static_link(slow_inter)
+            .with_topology(LinkParams::from_ms_gbps(0.01, 100.0), 2);
+        run(cfg)
+    };
+    assert!(topo
+        .metrics
+        .collectives_used()
+        .iter()
+        .all(|c| c.name() == "Hier-AR"));
+    let s_flat = flat.metrics.summary().mean_sync_s;
+    let s_topo = topo.metrics.summary().mean_sync_s;
+    assert!(s_topo < s_flat, "two-level sync {s_topo} vs flat ring {s_flat}");
+    assert!(topo.metrics.best_accuracy().unwrap() > 0.7);
+}
+
 /// Sanity: a 1-worker cluster degenerates to plain SGD with zero comm.
 #[test]
 fn single_worker_no_communication() {

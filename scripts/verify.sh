@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# flexcomm verify gate (DESIGN.md §6):
+#   1. tier-1: release build + full test suite (unit, integration, doctests)
+#   2. rustfmt drift check
+#   3. rustdoc with warnings denied — broken intra-doc links (the old
+#      "DESIGN.md referenced but missing" class of rot) fail fast here
+#
+# Usage: scripts/verify.sh            (from the repo root)
+#        FLEXCOMM_BENCH_FAST=1 is respected by the benches, not needed here.
+set -uo pipefail
+cd "$(dirname "$0")/.."
+
+status=0
+step() {
+    echo
+    echo "==> $*"
+    if ! "$@"; then
+        echo "FAILED: $*"
+        status=1
+    fi
+}
+
+step cargo build --release
+step cargo test -q
+step cargo fmt --check
+step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+if [ "$status" -ne 0 ]; then
+    echo
+    echo "verify: FAILED (see steps above)"
+else
+    echo
+    echo "verify: OK"
+fi
+exit "$status"
