@@ -65,6 +65,7 @@ fn main() -> Result<()> {
         comp_scale: 1.0,
         eval_every: spe,
         seed,
+        threads: args.usize_or("threads", 0)?,
     };
 
     let wall = std::time::Instant::now();

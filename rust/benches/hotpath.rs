@@ -1,9 +1,13 @@
 //! Perf-pass micro-benches for the L3 hot paths (EXPERIMENTS.md §Perf):
 //! Top-k selection (heap vs quickselect), MSTopk threshold rounds, ring
-//! allreduce arithmetic, sparse allgather scatter, EF bookkeeping, and a
-//! full trainer step on the proxy model.
+//! allreduce arithmetic, sparse allgather scatter, EF bookkeeping, and the
+//! threaded worker engine (grad+compress stage, threads=1 vs N — the
+//! ISSUE 2 acceptance bench; also run in smoke mode by scripts/verify.sh,
+//! which hard-fails if the parallel stage is not bitwise-identical to the
+//! serial one).
 //!
 //!     cargo bench --bench hotpath
+//!     FLEXCOMM_BENCH_FAST=1 cargo bench --bench hotpath   (CI smoke mode)
 
 use flexcomm::artopk::{ArFlavor, ArTopk, SelectionPolicy};
 use flexcomm::collectives::ring_allreduce;
@@ -12,6 +16,7 @@ use flexcomm::compress::{Compressor, EfState, MsTopk};
 use flexcomm::netsim::cost_model::LinkParams;
 use flexcomm::tensor::Layout;
 use flexcomm::util::bench::Bencher;
+use flexcomm::util::pool::ThreadPool;
 use flexcomm::util::rng::Rng;
 
 fn main() {
@@ -78,6 +83,65 @@ fn main() {
     b.bench(&format!("error-feedback update G={dim}"), || {
         let ge = ef.error_fed(&g);
         ef.update(Bencher::black_box(ge), &sparse);
+    });
+
+    // ------------------------------------------------------------------
+    // Threaded worker engine: the grad+compress stage of a 4-worker step
+    // (per worker: O(G) gradient transform + error-feed + top-k select),
+    // threads=1 vs all cores. ISSUE 2 acceptance: >=1.5x on a >=4-core
+    // host. The outputs must be bitwise identical — that part is a hard
+    // check, valid on any core count.
+    // ------------------------------------------------------------------
+    let nw = 4;
+    let wdim = dim / 4;
+    let wk = wdim / 100;
+    let base: Vec<Vec<f32>> = (0..nw)
+        .map(|i| {
+            let mut v = vec![0.0; wdim];
+            Rng::new(1000 + i as u64).fill_normal(&mut v, 1.0);
+            v
+        })
+        .collect();
+    let residual = vec![0.01f32; wdim];
+    let stage = |pool: &ThreadPool| -> Vec<Vec<u32>> {
+        pool.map(nw, |w| {
+            // "grad": a deterministic O(G) per-worker transform standing in
+            // for backprop, then the AG-path compress (EF + selection).
+            let g_w: Vec<f32> = base[w].iter().map(|&v| v * 1.000123 + 0.1).collect();
+            let g_e: Vec<f32> = g_w.iter().zip(&residual).map(|(a, r)| a + r).collect();
+            topk_indices_select(&g_e, wk)
+        })
+    };
+    let serial = ThreadPool::serial();
+    let threaded = ThreadPool::auto(0);
+    assert_eq!(
+        stage(&serial),
+        stage(&threaded),
+        "threaded grad+compress stage must be bitwise-identical to serial"
+    );
+    let m1 = b.bench(&format!("grad+compress stage n={nw} threads=1"), || {
+        Bencher::black_box(stage(&serial));
+    });
+    let mn = b.bench(
+        &format!("grad+compress stage n={nw} threads={}", threaded.threads()),
+        || {
+            Bencher::black_box(stage(&threaded));
+        },
+    );
+    let speedup = m1.mean_secs() / mn.mean_secs();
+    println!(
+        "grad+compress stage speedup: {speedup:.2}x with {} threads on {} cores \
+         (target >=1.5x on >=4 cores)",
+        threaded.threads(),
+        ThreadPool::available()
+    );
+
+    // Pooled AR-Topk (VAR computes every worker's top-k, so it parallelizes).
+    let mut art_var =
+        ArTopk::new(SelectionPolicy::Var, ArFlavor::Ring).with_pool(threaded);
+    b.bench(&format!("artopk VAR exchange n={nw} threads={}", threaded.threads()), || {
+        let mut ef: Vec<EfState> = (0..nw).map(|_| EfState::new(wdim)).collect();
+        Bencher::black_box(art_var.exchange(&base, &mut ef, 0.01, 0, link));
     });
 
     println!("\n{} measurements recorded (see EXPERIMENTS.md §Perf).", b.results.len());

@@ -19,6 +19,8 @@ use crate::collectives::{broadcast, ring_allreduce, tree_allreduce, CommReport};
 use crate::compress::{k_for, EfState, SparseGrad};
 use crate::compress::topk::TopK;
 use crate::netsim::cost_model::LinkParams;
+use crate::tensor::nan_min_cmp;
+use crate::util::pool::ThreadPool;
 
 /// Worker-selection policy (§3-B).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -57,10 +59,14 @@ pub struct ArTopkResult {
     pub comm: CommReport,
     /// Gain statistics per worker: (‖g_c‖² at broadcast indices, ‖g_e‖²).
     pub gain_terms: Vec<(f64, f64)>,
-    /// Wall-clock compression cost on the CRITICAL PATH: workers compress
-    /// concurrently in a real cluster, so this is the max of the
-    /// per-worker selection/gather times, not their sum (perf pass,
-    /// EXPERIMENTS.md §Perf).
+    /// Wall-clock compression cost on the CRITICAL PATH: per phase
+    /// (error-feed, selection, gather, residual update) the MAX of
+    /// per-worker durations
+    /// measured inside the concurrently-running [`ThreadPool`] tasks —
+    /// the worker a synchronous cluster step waits for. Charging measured
+    /// per-worker maxima (rather than the region's wall time) keeps the
+    /// simulated cost independent of how many host cores the pool got,
+    /// provided the pool is not oversubscribed (DESIGN.md §7).
     pub comp_wall_s: f64,
 }
 
@@ -71,16 +77,27 @@ pub struct ArTopk {
     pub policy: SelectionPolicy,
     pub flavor: ArFlavor,
     topk: TopK,
+    /// Runs the per-worker phases (error-feed, VAR top-k, gather, residual
+    /// update); defaults to serial so standalone uses stay single-threaded.
+    pool: ThreadPool,
 }
 
 impl ArTopk {
     pub fn new(policy: SelectionPolicy, flavor: ArFlavor) -> Self {
-        ArTopk { policy, flavor, topk: TopK::with_quickselect() }
+        ArTopk { policy, flavor, topk: TopK::with_quickselect(), pool: ThreadPool::serial() }
     }
 
     /// Use the paper's max-heap Top-k instead of quickselect.
     pub fn with_heap_topk(mut self) -> Self {
         self.topk = TopK::new();
+        self
+    }
+
+    /// Run the per-worker phases on `pool` (the trainer passes its
+    /// `TrainConfig::threads` pool). Results are bitwise identical for any
+    /// thread count; only `comp_wall_s` (measured time) changes.
+    pub fn with_pool(mut self, pool: ThreadPool) -> Self {
+        self.pool = pool;
         self
     }
 
@@ -104,16 +121,20 @@ impl ArTopk {
         let k = k_for(cr, dim);
         let mut comm = CommReport::default();
 
-        // Line 5: error-fed gradients (per worker, concurrent in reality).
-        let mut comp_wall_s: f64 = 0.0;
-        let g_e: Vec<Vec<f32>> = (0..n)
-            .map(|r| {
-                let t0 = std::time::Instant::now();
-                let v = ef[r].error_fed(&grads[r]);
-                comp_wall_s = comp_wall_s.max(t0.elapsed().as_secs_f64());
-                v
-            })
-            .collect();
+        // Line 5: error-fed gradients — per worker, genuinely concurrent
+        // across the pool's threads. Each worker's duration is measured
+        // INSIDE its task and the charge is the max (critical path): the
+        // simulated cluster cost stays independent of how many host cores
+        // the pool actually got, as long as it isn't oversubscribed
+        // (DESIGN.md §7).
+        let ef_ro: &[EfState] = ef;
+        let timed: Vec<(Vec<f32>, f64)> = self.pool.map(n, |r| {
+            let t0 = std::time::Instant::now();
+            let v = ef_ro[r].error_fed(&grads[r]);
+            (v, t0.elapsed().as_secs_f64())
+        });
+        let mut comp_wall_s = timed.iter().map(|(_, dt)| *dt).fold(0.0f64, f64::max);
+        let g_e: Vec<Vec<f32>> = timed.into_iter().map(|(v, _)| v).collect();
 
         // Lines 6-13: local top-k + worker selection.
         //
@@ -121,8 +142,7 @@ impl ArTopk {
         // front (i % N), and only the selected worker's indices are ever
         // used — so ONLY that worker runs Top-k. VAR needs every worker's
         // ||g_c||² and therefore every worker's local top-k; those run
-        // concurrently on a real cluster, so the wall charge is the MAX
-        // per-worker time, not the sum.
+        // concurrently on the pool.
         let (selected, sel_idx) = match self.policy {
             SelectionPolicy::Star => {
                 let selected = (step % n as u64) as usize;
@@ -132,30 +152,34 @@ impl ArTopk {
                 (selected, idx)
             }
             SelectionPolicy::Var => {
-                let mut per_worker_max = 0.0f64;
-                let mut local_idx: Vec<Vec<u32>> = Vec::with_capacity(n);
-                let mut vars: Vec<f64> = Vec::with_capacity(n);
-                for r in 0..n {
+                let topk = &self.topk;
+                let per_worker: Vec<(Vec<u32>, f64, f64)> = self.pool.map(n, |r| {
                     let t0 = std::time::Instant::now();
-                    let idx = self.topk.select(&g_e[r], k);
+                    let idx = topk.select(&g_e[r], k);
                     let var: f64 = idx
                         .iter()
                         .map(|&i| (g_e[r][i as usize] as f64).powi(2))
                         .sum();
-                    per_worker_max = per_worker_max.max(t0.elapsed().as_secs_f64());
-                    vars.push(var);
-                    local_idx.push(idx);
-                }
-                comp_wall_s += per_worker_max;
+                    (idx, var, t0.elapsed().as_secs_f64())
+                });
+                comp_wall_s += per_worker.iter().map(|p| p.2).fold(0.0f64, f64::max);
+                let (mut local_idx, vars): (Vec<Vec<u32>>, Vec<f64>) =
+                    per_worker.into_iter().map(|(idx, var, _)| (idx, var)).unzip();
                 // Sync variances via AG of one f32 per worker (4N bytes,
                 // negligible but still charged).
                 let parts: Vec<Vec<f32>> = vars.iter().map(|&v| vec![v as f32]).collect();
                 let (_, rep) = crate::collectives::allgather_concat(&parts, link);
                 comm.merge(rep);
+                // NaN-smallest total order ([`nan_min_cmp`]): a worker
+                // whose gradient exploded to NaN can never win VAR
+                // selection, so one bad worker degrades selection instead
+                // of panicking mid-run (the old `partial_cmp().unwrap()`).
+                // All-NaN steps stay deterministic: last rank wins the
+                // all-Equal tie, matching `max_by`.
                 let selected = vars
                     .iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .max_by(|a, b| nan_min_cmp(*a.1, *b.1))
                     .map(|(i, _)| i)
                     .unwrap_or(0);
                 (selected, local_idx.swap_remove(selected))
@@ -167,26 +191,39 @@ impl ArTopk {
         comm.merge(rep);
 
         // Lines 15-16: every worker gathers its own values at those indices
-        // and updates its residual against exactly what it sent
-        // (concurrent per worker -> max wall charge).
+        // (concurrent across the pool -> max per-worker measured charge).
+        let bcast_ref = &bcast_idx;
+        let gathered: Vec<(Vec<f32>, f64, f64, f64)> = self.pool.map(n, |r| {
+            let t0 = std::time::Instant::now();
+            let vals: Vec<f32> = bcast_ref.iter().map(|&i| g_e[r][i as usize]).collect();
+            let dt = t0.elapsed().as_secs_f64();
+            // Gain bookkeeping is metrics-only — its O(G) norm pass stays
+            // OFF the billed path (same policy as the AG path; the real
+            // gather is O(k)).
+            let sent_sq = crate::tensor::sq_norm(&vals);
+            let total_sq = crate::tensor::sq_norm(&g_e[r]);
+            (vals, sent_sq, total_sq, dt)
+        });
+        comp_wall_s += gathered.iter().map(|g| g.3).fold(0.0f64, f64::max);
         let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
         let mut gain_terms = Vec::with_capacity(n);
-        let mut gather_max = 0.0f64;
-        for r in 0..n {
-            let t0 = std::time::Instant::now();
-            let vals: Vec<f32> =
-                bcast_idx.iter().map(|&i| g_e[r][i as usize]).collect();
-            let sent_sq: f64 = vals.iter().map(|&v| (v as f64).powi(2)).sum();
-            let total_sq: f64 = g_e[r].iter().map(|&v| (v as f64).powi(2)).sum();
-            gather_max = gather_max.max(t0.elapsed().as_secs_f64());
-            gain_terms.push((sent_sq, total_sq));
+        for (vals, sent_sq, total_sq, _) in gathered {
             bufs.push(vals);
+            gain_terms.push((sent_sq, total_sq));
         }
-        comp_wall_s += gather_max;
-        for (r, g) in g_e.into_iter().enumerate() {
-            // Consume g_e into the residual update (no copy).
-            ef[r].update_at_indices(g, &bcast_idx);
-        }
+        // ...and updates its residual against exactly what it sent,
+        // consuming g_e in place (per-worker state, disjoint mutation).
+        // Billed like the AG path's residual update: max per-worker
+        // measured duration.
+        let mut lanes: Vec<(&mut EfState, Vec<f32>)> = ef.iter_mut().zip(g_e).collect();
+        let residual_dts = self.pool.map_mut(&mut lanes, |_r, lane| {
+            let (e, g) = lane;
+            let t0 = std::time::Instant::now();
+            e.update_at_indices(std::mem::take(g), bcast_ref);
+            t0.elapsed().as_secs_f64()
+        });
+        comp_wall_s += residual_dts.iter().copied().fold(0.0f64, f64::max);
+        drop(lanes);
 
         // Line 17: allreduce the values at the broadcast indices.
         let rep = match self.flavor {
@@ -303,6 +340,54 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// One NaN-poisoned worker (exploding loss) must not panic VAR
+    /// selection; the NaN worker can never win, so training continues and
+    /// the damage is diagnosable, not fatal.
+    #[test]
+    fn var_selection_survives_nan_gradients() {
+        let dim = 60;
+        let (mut grads, mut ef) = setup(4, dim, 11);
+        grads[1] = vec![f32::NAN; dim]; // worker 1 exploded
+        grads[2] = vec![5.0; dim]; // worker 2 has the real mass
+        let mut art = ArTopk::new(SelectionPolicy::Var, ArFlavor::Ring);
+        let r = art.exchange(&grads, &mut ef, 0.1, 0, link());
+        assert_eq!(r.selected, 2, "NaN variance must lose to finite mass");
+        // Every worker went through residual update, including the NaN one.
+        assert!(ef[1].residual.iter().any(|v| v.is_nan()));
+        // All-NaN step: still no panic, deterministic last-rank tie-break.
+        let all_nan = vec![vec![f32::NAN; dim]; 4];
+        let (_, mut ef2) = setup(4, dim, 12);
+        let r = art.exchange(&all_nan, &mut ef2, 0.1, 0, link());
+        assert_eq!(r.selected, 3);
+    }
+
+    /// The pooled operator is the sequential operator: bitwise-identical
+    /// update, selection, gain terms and CommReport for any thread count.
+    #[test]
+    fn pooled_exchange_matches_serial_bitwise() {
+        for policy in [SelectionPolicy::Star, SelectionPolicy::Var] {
+            for n in [3usize, 4] {
+                let (grads, ef0) = setup(n, 400, 21);
+                let run = |pool: crate::util::pool::ThreadPool| {
+                    let mut ef = ef0.clone();
+                    let mut art = ArTopk::new(policy, ArFlavor::Ring).with_pool(pool);
+                    let r = art.exchange(&grads, &mut ef, 0.05, 1, link());
+                    (r, ef)
+                };
+                let (a, ef_a) = run(crate::util::pool::ThreadPool::serial());
+                let (b, ef_b) = run(crate::util::pool::ThreadPool::new(4));
+                assert_eq!(a.update.indices, b.update.indices, "{policy:?} n={n}");
+                assert_eq!(a.update.values, b.update.values, "{policy:?} n={n}");
+                assert_eq!(a.selected, b.selected);
+                assert_eq!(a.comm, b.comm);
+                assert_eq!(a.gain_terms, b.gain_terms);
+                for (x, y) in ef_a.iter().zip(&ef_b) {
+                    assert_eq!(x.residual, y.residual);
+                }
+            }
+        }
     }
 
     #[test]

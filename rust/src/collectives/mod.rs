@@ -10,6 +10,12 @@
 //! [`crate::netsim::cost_model`] — that equivalence is what the unit tests
 //! pin down (the paper validates the same algebra on hardware in Tables
 //! II/VI). Round structures per op are documented in DESIGN.md §4.
+//!
+//! The ops are also exposed uniformly through the [`Collective`] /
+//! [`DenseCollective`] traits and their [`registry`]: the trainer's dense
+//! path and the topology-aware selector dispatch through the table instead
+//! of per-flavor matches, so a new collective plugs in at one seam (a
+//! `CollectiveKind`, an impl, a registry row).
 
 pub mod allgather;
 pub mod broadcast;
@@ -27,7 +33,7 @@ pub use ps::ps_exchange;
 pub use ring_allreduce::ring_allreduce;
 pub use tree_allreduce::tree_allreduce;
 
-use crate::netsim::cost_model::LinkParams;
+use crate::netsim::cost_model::{self, LinkParams, Topology};
 
 /// Simulated time + traffic accounting for one collective call.
 ///
@@ -100,6 +106,226 @@ pub(crate) fn ceil_log2(n: usize) -> u32 {
     usize::BITS - (n - 1).leading_zeros()
 }
 
+// ---------------------------------------------------------------------------
+// The Collective trait + registry (ISSUE 2 tentpole): one seam unifying the
+// eight collectives behind trait objects, so selector choices, metrics
+// `CollectiveKind`s and future collectives plug in at a single table instead
+// of nested matches in the trainer.
+// ---------------------------------------------------------------------------
+
+/// A collective viewed uniformly: its metrics identity ([`CollectiveKind`])
+/// and its closed-form α-β cost prediction. All eight [`CollectiveKind`]s
+/// implement this (see [`registry`]); the five dense allreduces additionally
+/// implement [`DenseCollective`] with a real data-moving execution.
+pub trait Collective: Send + Sync {
+    /// Metrics/selector identity of this op.
+    fn kind(&self) -> CollectiveKind;
+
+    /// Short display name (the [`CollectiveKind::name`]).
+    fn name(&self) -> &'static str {
+        self.kind().name()
+    }
+
+    /// Predicted seconds for one full-model exchange of `m_bytes` over
+    /// `topo` with `n` ranks at compression ratio `cr` (dense ops ignore
+    /// `cr`; flat ops price the bottleneck `topo.inter` link). The
+    /// hierarchical op requires `topo.workers_per_node` to divide `n`, the
+    /// same precondition as its execution.
+    fn predict(&self, topo: Topology, m_bytes: f64, n: usize, cr: f64) -> f64;
+
+    /// Whether the dense auto-selectors may pick this op for an `n`-rank
+    /// cluster on `topo`: the PS star is a scale-out strawman (never
+    /// auto-picked) and the hierarchical op needs a two-level topology
+    /// whose `workers_per_node` divides `n` (its `predict`/`run`
+    /// precondition — gating here keeps direct selector callers from
+    /// tripping the divisibility assert).
+    fn auto_candidate(&self, topo: Topology, n: usize) -> bool {
+        let _ = (topo, n);
+        true
+    }
+}
+
+/// A dense in-place SUM allreduce: really moves/reduces the per-worker
+/// buffers and reports the simulated time (same contract as the free
+/// functions it wraps — the registry tests pin the equivalence).
+pub trait DenseCollective: Collective {
+    fn run(&self, bufs: &mut [Vec<f32>], topo: Topology) -> CommReport;
+}
+
+/// [`ring_allreduce`] over the bottleneck (inter) link.
+pub struct RingAllreduceOp;
+/// [`tree_allreduce`] over the bottleneck (inter) link.
+pub struct TreeAllreduceOp;
+/// [`halving_doubling_allreduce`] over the bottleneck (inter) link.
+pub struct HalvingDoublingOp;
+/// [`hierarchical_allreduce`] over the full two-level topology.
+pub struct HierarchicalOp;
+/// [`ps_exchange`] with rank 0 as the star center.
+pub struct PsStarOp;
+/// Cost surface of the sparse [`allgather_sparse`] AG-Topk path (its data
+/// path is bespoke — `Trainer::ag_exchange` — so it is cost-only here).
+pub struct AllgatherTopkOp;
+/// Cost surface of AR-Topk with ring reduction (Eqn 4a; executed by
+/// [`crate::artopk::ArTopk`]).
+pub struct ArTopkRingOp;
+/// Cost surface of AR-Topk with tree reduction (Eqn 4b; executed by
+/// [`crate::artopk::ArTopk`]).
+pub struct ArTopkTreeOp;
+
+impl Collective for RingAllreduceOp {
+    fn kind(&self) -> CollectiveKind {
+        CollectiveKind::RingAllreduce
+    }
+    fn predict(&self, topo: Topology, m_bytes: f64, n: usize, _cr: f64) -> f64 {
+        cost_model::ring_allreduce(topo.inter, m_bytes, n)
+    }
+}
+
+impl DenseCollective for RingAllreduceOp {
+    fn run(&self, bufs: &mut [Vec<f32>], topo: Topology) -> CommReport {
+        ring_allreduce(bufs, topo.inter)
+    }
+}
+
+impl Collective for TreeAllreduceOp {
+    fn kind(&self) -> CollectiveKind {
+        CollectiveKind::TreeAllreduce
+    }
+    fn predict(&self, topo: Topology, m_bytes: f64, n: usize, _cr: f64) -> f64 {
+        cost_model::tree_allreduce(topo.inter, m_bytes, n)
+    }
+}
+
+impl DenseCollective for TreeAllreduceOp {
+    fn run(&self, bufs: &mut [Vec<f32>], topo: Topology) -> CommReport {
+        tree_allreduce(bufs, topo.inter)
+    }
+}
+
+impl Collective for HalvingDoublingOp {
+    fn kind(&self) -> CollectiveKind {
+        CollectiveKind::HalvingDoublingAllreduce
+    }
+    fn predict(&self, topo: Topology, m_bytes: f64, n: usize, _cr: f64) -> f64 {
+        cost_model::halving_doubling_allreduce(topo.inter, m_bytes, n)
+    }
+}
+
+impl DenseCollective for HalvingDoublingOp {
+    fn run(&self, bufs: &mut [Vec<f32>], topo: Topology) -> CommReport {
+        halving_doubling_allreduce(bufs, topo.inter)
+    }
+}
+
+impl Collective for HierarchicalOp {
+    fn kind(&self) -> CollectiveKind {
+        CollectiveKind::HierarchicalAllreduce
+    }
+    fn predict(&self, topo: Topology, m_bytes: f64, n: usize, _cr: f64) -> f64 {
+        cost_model::hierarchical_allreduce(topo, m_bytes, n)
+    }
+    fn auto_candidate(&self, topo: Topology, n: usize) -> bool {
+        !topo.is_flat() && n % topo.workers_per_node.max(1) == 0
+    }
+}
+
+impl DenseCollective for HierarchicalOp {
+    fn run(&self, bufs: &mut [Vec<f32>], topo: Topology) -> CommReport {
+        hierarchical_allreduce(bufs, topo)
+    }
+}
+
+impl Collective for PsStarOp {
+    fn kind(&self) -> CollectiveKind {
+        CollectiveKind::PsStar
+    }
+    fn predict(&self, topo: Topology, m_bytes: f64, n: usize, _cr: f64) -> f64 {
+        cost_model::ps_star(topo.inter, m_bytes, n)
+    }
+    fn auto_candidate(&self, _topo: Topology, _n: usize) -> bool {
+        false // O(MN) strawman: selectable explicitly, never auto-picked
+    }
+}
+
+impl DenseCollective for PsStarOp {
+    fn run(&self, bufs: &mut [Vec<f32>], topo: Topology) -> CommReport {
+        ps_exchange(bufs, 0, topo.inter)
+    }
+}
+
+impl Collective for AllgatherTopkOp {
+    fn kind(&self) -> CollectiveKind {
+        CollectiveKind::AllgatherTopk
+    }
+    fn predict(&self, topo: Topology, m_bytes: f64, n: usize, cr: f64) -> f64 {
+        cost_model::ag_topk(topo.inter, m_bytes, n, cr)
+    }
+}
+
+impl Collective for ArTopkRingOp {
+    fn kind(&self) -> CollectiveKind {
+        CollectiveKind::ArTopkRing
+    }
+    fn predict(&self, topo: Topology, m_bytes: f64, n: usize, cr: f64) -> f64 {
+        cost_model::art_ring(topo.inter, m_bytes, n, cr)
+    }
+}
+
+impl Collective for ArTopkTreeOp {
+    fn kind(&self) -> CollectiveKind {
+        CollectiveKind::ArTopkTree
+    }
+    fn predict(&self, topo: Topology, m_bytes: f64, n: usize, cr: f64) -> f64 {
+        cost_model::art_tree(topo.inter, m_bytes, n, cr)
+    }
+}
+
+static DENSE_OPS: [&(dyn DenseCollective); 5] = [
+    // Registry order is the selector's tie-break order (strict argmin
+    // keeps the earliest candidate).
+    &RingAllreduceOp,
+    &TreeAllreduceOp,
+    &HalvingDoublingOp,
+    &HierarchicalOp,
+    &PsStarOp,
+];
+
+static ALL_OPS: [&(dyn Collective); 8] = [
+    &RingAllreduceOp,
+    &TreeAllreduceOp,
+    &HalvingDoublingOp,
+    &HierarchicalOp,
+    &PsStarOp,
+    &AllgatherTopkOp,
+    &ArTopkRingOp,
+    &ArTopkTreeOp,
+];
+
+/// The five executable dense allreduces, in selector tie-break order.
+pub fn dense_registry() -> &'static [&'static dyn DenseCollective] {
+    &DENSE_OPS
+}
+
+/// Every collective's cost/identity surface (all eight [`CollectiveKind`]s).
+pub fn registry() -> &'static [&'static dyn Collective] {
+    &ALL_OPS
+}
+
+/// Executable dense op for `kind` (None for the compressed kinds, whose
+/// data paths live in `Trainer::ag_exchange` / [`crate::artopk::ArTopk`]).
+pub fn dense_op(kind: CollectiveKind) -> Option<&'static dyn DenseCollective> {
+    dense_registry().iter().copied().find(|op| op.kind() == kind)
+}
+
+/// Cost/identity surface for `kind` (total over [`CollectiveKind`]).
+pub fn collective(kind: CollectiveKind) -> &'static dyn Collective {
+    registry()
+        .iter()
+        .copied()
+        .find(|op| op.kind() == kind)
+        .expect("every CollectiveKind is registered")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,6 +387,141 @@ mod tests {
             let fold = if np as usize == n { 0 } else { 2 };
             assert_eq!(hd.rounds, 2 * np.trailing_zeros() + fold, "hd n={n}");
         }
+    }
+
+    /// The registry is total over `CollectiveKind` and the dense subset is
+    /// exactly the five executable allreduces.
+    #[test]
+    fn registry_is_total_over_collective_kinds() {
+        let kinds = [
+            CollectiveKind::RingAllreduce,
+            CollectiveKind::TreeAllreduce,
+            CollectiveKind::HalvingDoublingAllreduce,
+            CollectiveKind::HierarchicalAllreduce,
+            CollectiveKind::PsStar,
+            CollectiveKind::AllgatherTopk,
+            CollectiveKind::ArTopkRing,
+            CollectiveKind::ArTopkTree,
+        ];
+        assert_eq!(registry().len(), kinds.len());
+        for kind in kinds {
+            let op = collective(kind);
+            assert_eq!(op.kind(), kind);
+            assert_eq!(op.name(), kind.name());
+        }
+        assert_eq!(dense_registry().len(), 5);
+        assert!(dense_op(CollectiveKind::RingAllreduce).is_some());
+        assert!(dense_op(CollectiveKind::PsStar).is_some());
+        assert!(dense_op(CollectiveKind::AllgatherTopk).is_none());
+        assert!(dense_op(CollectiveKind::ArTopkRing).is_none());
+    }
+
+    /// Trait-object execution is the same op as the free functions: same
+    /// reduced data, same CommReport.
+    #[test]
+    fn registry_ops_match_free_functions() {
+        let topo = Topology::two_level(
+            LinkParams::from_ms_gbps(0.01, 100.0),
+            LinkParams::from_ms_gbps(5.0, 2.0),
+            2,
+        );
+        let mk = || -> Vec<Vec<f32>> { (0..4).map(|w| vec![w as f32 + 1.0; 24]).collect() };
+        for op in dense_registry() {
+            let mut via_trait = mk();
+            let r1 = op.run(&mut via_trait, topo);
+            let mut direct = mk();
+            let r2 = match op.kind() {
+                CollectiveKind::RingAllreduce => ring_allreduce(&mut direct, topo.inter),
+                CollectiveKind::TreeAllreduce => tree_allreduce(&mut direct, topo.inter),
+                CollectiveKind::HalvingDoublingAllreduce => {
+                    halving_doubling_allreduce(&mut direct, topo.inter)
+                }
+                CollectiveKind::HierarchicalAllreduce => {
+                    hierarchical_allreduce(&mut direct, topo)
+                }
+                CollectiveKind::PsStar => ps_exchange(&mut direct, 0, topo.inter),
+                k => unreachable!("not a dense op: {k:?}"),
+            };
+            assert_eq!(via_trait, direct, "{} data", op.name());
+            assert_eq!(r1, r2, "{} report", op.name());
+        }
+    }
+
+    /// `predict` is exactly the closed-form cost of the matching op.
+    #[test]
+    fn registry_predict_matches_closed_forms() {
+        let topo = Topology::two_level(
+            LinkParams::from_ms_gbps(0.01, 100.0),
+            LinkParams::from_ms_gbps(4.0, 20.0),
+            4,
+        );
+        let (m, n, cr) = (4e8, 8usize, 0.01);
+        let want = [
+            (CollectiveKind::RingAllreduce, cost_model::ring_allreduce(topo.inter, m, n)),
+            (CollectiveKind::TreeAllreduce, cost_model::tree_allreduce(topo.inter, m, n)),
+            (
+                CollectiveKind::HalvingDoublingAllreduce,
+                cost_model::halving_doubling_allreduce(topo.inter, m, n),
+            ),
+            (
+                CollectiveKind::HierarchicalAllreduce,
+                cost_model::hierarchical_allreduce(topo, m, n),
+            ),
+            (CollectiveKind::PsStar, cost_model::ps_star(topo.inter, m, n)),
+            (CollectiveKind::AllgatherTopk, cost_model::ag_topk(topo.inter, m, n, cr)),
+            (CollectiveKind::ArTopkRing, cost_model::art_ring(topo.inter, m, n, cr)),
+            (CollectiveKind::ArTopkTree, cost_model::art_tree(topo.inter, m, n, cr)),
+        ];
+        for (kind, cost) in want {
+            let got = collective(kind).predict(topo, m, n, cr);
+            assert!(
+                (got - cost).abs() <= 1e-15 * cost.abs().max(1.0),
+                "{kind:?}: predict {got} vs closed form {cost}"
+            );
+        }
+    }
+
+    /// Auto-candidate flags: PS never; hierarchical only on two-level
+    /// topologies whose ranks-per-node divide the cluster; all else always.
+    #[test]
+    fn auto_candidate_flags() {
+        let flat = Topology::flat(LinkParams::from_ms_gbps(4.0, 20.0));
+        let two = Topology::two_level(
+            LinkParams::from_ms_gbps(0.01, 100.0),
+            LinkParams::from_ms_gbps(4.0, 20.0),
+            4,
+        );
+        for op in dense_registry() {
+            match op.kind() {
+                CollectiveKind::PsStar => {
+                    assert!(!op.auto_candidate(flat, 8) && !op.auto_candidate(two, 8));
+                }
+                CollectiveKind::HierarchicalAllreduce => {
+                    assert!(!op.auto_candidate(flat, 8));
+                    assert!(op.auto_candidate(two, 8));
+                    // Ragged cluster: predict would assert, so the gate
+                    // must exclude it (direct selector callers).
+                    assert!(!op.auto_candidate(two, 6));
+                }
+                _ => {
+                    assert!(op.auto_candidate(flat, 8) && op.auto_candidate(two, 6));
+                }
+            }
+        }
+    }
+
+    /// Direct selector use with a ragged (non-dividing) topology must fall
+    /// back to the flat candidates instead of panicking in Hier predict.
+    #[test]
+    fn choose_dense_topo_skips_ragged_hierarchical() {
+        let two = Topology::two_level(
+            LinkParams::from_ms_gbps(0.01, 100.0),
+            LinkParams::from_ms_gbps(10.0, 1.0),
+            3,
+        );
+        let c = crate::coordinator::selector::choose_dense_topo(two, 4e8, 8);
+        assert_ne!(c.kind, CollectiveKind::HierarchicalAllreduce);
+        assert!(c.predicted_s.is_finite());
     }
 
     #[test]

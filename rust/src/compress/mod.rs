@@ -56,7 +56,11 @@ impl SparseGrad {
 }
 
 /// Common interface: compress an (error-fed) gradient at ratio `cr`.
-pub trait Compressor {
+///
+/// `Send` so per-worker compressor instances can run on the trainer's
+/// worker threads (each thread gets exclusive `&mut` access to its own
+/// instance — see `Trainer::ag_exchange` and DESIGN.md §7).
+pub trait Compressor: Send {
     fn name(&self) -> &'static str;
     /// `layout` supplies layer boundaries (used by LWTopk; others ignore it).
     fn compress(&mut self, g: &[f32], cr: f64, layout: &Layout) -> SparseGrad;

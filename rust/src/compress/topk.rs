@@ -12,9 +12,31 @@ use crate::tensor::Layout;
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
-/// (|value|, index) heap entry with total order on magnitude then index.
-#[derive(PartialEq)]
+/// Total order on (|value|, index) pairs: DESCENDING magnitude with NaN as
+/// the smallest magnitude (the crate-wide policy,
+/// [`crate::tensor::nan_min_cmp_f32`], flipped for descending order), ties
+/// broken by ASCENDING index.
+///
+/// Treating NaN as unordered-`Equal` (the old `unwrap_or(Equal)`) is NOT a
+/// total order: `select_nth_unstable_by` may panic ("comparison function
+/// does not correctly implement a total order") and `BinaryHeap` silently
+/// misorders once a single gradient entry goes NaN (exploding loss). With
+/// NaN-smallest, a NaN entry never displaces a finite one from the top-k
+/// and selection stays deterministic, so a NaN step trains through and
+/// surfaces as a NaN loss instead of a panic.
+fn mag_desc_idx_asc(a: &(f32, u32), b: &(f32, u32)) -> Ordering {
+    crate::tensor::nan_min_cmp_f32(b.0, a.0).then_with(|| a.1.cmp(&b.1))
+}
+
+/// (|value|, index) heap entry; Ord follows [`mag_desc_idx_asc`] so the
+/// max-heap pops largest magnitude first, ties by lower index, NaN last.
 struct Entry(f32, u32);
+
+impl PartialEq for Entry {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
 
 impl Eq for Entry {}
 
@@ -26,12 +48,8 @@ impl PartialOrd for Entry {
 
 impl Ord for Entry {
     fn cmp(&self, other: &Self) -> Ordering {
-        // Magnitudes are finite in practice; ties broken by lower index so
-        // results are deterministic across runs and machines.
-        self.0
-            .partial_cmp(&other.0)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| other.1.cmp(&self.1))
+        // "Greater" = pops first: reverse the descending sort order.
+        mag_desc_idx_asc(&(self.0, self.1), &(other.0, other.1)).reverse()
     }
 }
 
@@ -64,12 +82,10 @@ pub fn topk_indices_select(g: &[f32], k: usize) -> Vec<u32> {
     }
     let mut pairs: Vec<(f32, u32)> =
         g.iter().enumerate().map(|(i, &v)| (v.abs(), i as u32)).collect();
-    // Order DESC by magnitude, ties ASC by index; take the first k.
-    pairs.select_nth_unstable_by(k - 1, |a, b| {
-        b.0.partial_cmp(&a.0)
-            .unwrap_or(Ordering::Equal)
-            .then_with(|| a.1.cmp(&b.1))
-    });
+    // Order DESC by magnitude (NaN smallest), ties ASC by index; take the
+    // first k. The comparator is a total order, which
+    // `select_nth_unstable_by` requires even on NaN-poisoned gradients.
+    pairs.select_nth_unstable_by(k - 1, mag_desc_idx_asc);
     let mut out: Vec<u32> = pairs[..k].iter().map(|&(_, i)| i).collect();
     out.sort_unstable();
     out
@@ -175,6 +191,40 @@ mod tests {
                 }
             }
             Ok(())
+        });
+    }
+
+    /// NaN-poisoned gradients (exploding loss) must not panic either
+    /// selector, must never beat finite entries into the top-k, and both
+    /// selectors must stay in agreement.
+    #[test]
+    fn nan_entries_sort_last_and_never_panic() {
+        let g = [1.0f32, f32::NAN, 3.0, 2.0, f32::NAN, 0.5];
+        assert_eq!(topk_indices(&g, 3), vec![0, 2, 3]);
+        assert_eq!(topk_indices_select(&g, 3), vec![0, 2, 3]);
+        // k spanning into the NaN tail: NaNs fill by ascending index.
+        assert_eq!(topk_indices(&g, 5), vec![0, 1, 2, 3, 5]);
+        assert_eq!(topk_indices_select(&g, 5), vec![0, 1, 2, 3, 5]);
+        // Fully-NaN gradient: deterministic, index-ordered, no panic.
+        let all_nan = [f32::NAN; 4];
+        assert_eq!(topk_indices(&all_nan, 2), vec![0, 1]);
+        assert_eq!(topk_indices_select(&all_nan, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn heap_and_quickselect_agree_with_nans() {
+        check("heap == quickselect with NaNs", 80, |g| {
+            let n = g.usize_in(1, 200);
+            let mut v = g.vec_normal(n, 1.0);
+            for _ in 0..g.usize_in(0, n / 4 + 1) {
+                let at = g.usize_in(0, n - 1);
+                v[at] = f32::NAN;
+            }
+            let k = g.usize_in(0, n);
+            ensure(
+                topk_indices(&v, k) == topk_indices_select(&v, k),
+                format!("mismatch n={n} k={k}"),
+            )
         });
     }
 

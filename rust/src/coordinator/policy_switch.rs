@@ -100,7 +100,12 @@ impl PolicySwitcher {
 
     fn window_improvement(&self) -> f64 {
         let first = self.first_loss.unwrap_or(self.last_loss);
-        (first - self.last_loss) / self.steps_in_phase.max(1) as f64
+        // `first_loss` is recorded AFTER the window's first step, so W
+        // observations bracket only W-1 per-step deltas: divide by the
+        // delta count, not the observation count (which biased every
+        // trial score low by (W-1)/W).
+        let deltas = self.steps_in_phase.saturating_sub(1).max(1);
+        (first - self.last_loss) / deltas as f64
     }
 
     fn enter(&mut self, phase: Phase) {
@@ -158,6 +163,32 @@ mod tests {
         for _ in 0..3 {
             s.observe(1.0);
         }
+        assert_eq!(s.committed(), Some(SelectionPolicy::Star));
+    }
+
+    /// A W-observation trial brackets W-1 per-step deltas; the score must
+    /// be delta-sum / (W-1), not / W (the old off-by-one biased every
+    /// trial low). Known data: 1.0, 0.9, 0.8, 0.7 ⇒ exactly 0.1/step.
+    #[test]
+    fn window_improvement_divides_by_delta_count() {
+        let mut s = PolicySwitcher::new(4, 8);
+        for i in 0..4 {
+            s.observe(1.0 - 0.1 * i as f64);
+        }
+        assert!(
+            (s.star_score - 0.1).abs() < 1e-12,
+            "STAR trial score {} != 0.1/step",
+            s.star_score
+        );
+        // VAR trial with 0.02/step decline scores exactly 0.02.
+        for i in 0..4 {
+            s.observe(0.7 - 0.02 * i as f64);
+        }
+        assert!(
+            (s.var_score - 0.02).abs() < 1e-12,
+            "VAR trial score {} != 0.02/step",
+            s.var_score
+        );
         assert_eq!(s.committed(), Some(SelectionPolicy::Star));
     }
 

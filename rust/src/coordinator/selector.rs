@@ -61,34 +61,26 @@ pub fn choose_dense(link: LinkParams, m_bytes: f64, n: usize) -> CollectiveKind 
     }
 }
 
-/// Topology-aware dense path: cheapest of {Ring-AR, Tree-AR, HD-AR} priced
-/// on the bottleneck (inter) link, plus Hier-AR when the topology is
-/// two-level. In the pure α-β model HD-AR dominates both ring and tree for
+/// Topology-aware dense path: argmin over the [`Collective` registry's
+/// auto-candidates](crate::collectives::dense_registry) priced on `topo` —
+/// {Ring-AR, Tree-AR, HD-AR} on the bottleneck (inter) link, plus Hier-AR
+/// when the topology is two-level (PS is flagged out as the scale-out
+/// strawman). In the pure α-β model HD-AR dominates both ring and tree for
 /// power-of-two N, and Hier-AR overtakes it once the intra/inter asymmetry
-/// outweighs the extra full-vector intra rounds.
+/// outweighs the extra full-vector intra rounds. A new dense collective
+/// becomes selectable by registering itself — no selector change needed.
 pub fn choose_dense_topo(topo: Topology, m_bytes: f64, n: usize) -> Choice {
-    let l = topo.inter;
-    let mut cand = vec![
-        (CollectiveKind::RingAllreduce, cost_model::ring_allreduce(l, m_bytes, n)),
-        (CollectiveKind::TreeAllreduce, cost_model::tree_allreduce(l, m_bytes, n)),
-        (
-            CollectiveKind::HalvingDoublingAllreduce,
-            cost_model::halving_doubling_allreduce(l, m_bytes, n),
-        ),
-    ];
-    if !topo.is_flat() {
-        cand.push((
-            CollectiveKind::HierarchicalAllreduce,
-            cost_model::hierarchical_allreduce(topo, m_bytes, n),
-        ));
-    }
-    let mut best = cand[0];
-    for &c in &cand[1..] {
-        if c.1 < best.1 {
-            best = c;
+    let mut best: Option<Choice> = None;
+    for op in crate::collectives::dense_registry() {
+        if !op.auto_candidate(topo, n) {
+            continue;
+        }
+        let cost = op.predict(topo, m_bytes, n, 1.0);
+        if best.map_or(true, |b| cost < b.predicted_s) {
+            best = Some(Choice { kind: op.kind(), predicted_s: cost });
         }
     }
-    Choice { kind: best.0, predicted_s: best.1 }
+    best.expect("registry always has auto-candidates")
 }
 
 /// Map the chosen collective to the AR flavour AR-Topk should run with

@@ -8,10 +8,7 @@
 //! (MOO/NSGA-II) and the collective (Eqn 5) as the probed network drifts.
 
 use crate::artopk::{ArFlavor, ArTopk, SelectionPolicy};
-use crate::collectives::{
-    allgather_sparse, halving_doubling_allreduce, hierarchical_allreduce, ps_exchange,
-    ring_allreduce, tree_allreduce, CollectiveKind, CommReport,
-};
+use crate::collectives::{allgather_sparse, dense_op, CollectiveKind, CommReport};
 use crate::compress::{gain::gain, Compressor, CompressorKind, EfState, GainTracker};
 use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveState};
 use crate::coordinator::checkpoint::Checkpoint;
@@ -22,6 +19,7 @@ use crate::netsim::cost_model::Topology;
 use crate::netsim::probe::Probe;
 use crate::netsim::schedule::NetSchedule;
 use crate::netsim::VirtualClock;
+use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
 use std::time::Instant;
 
@@ -108,6 +106,14 @@ pub struct TrainConfig {
     /// Evaluate every N steps (0 = only at the end).
     pub eval_every: u64,
     pub seed: u64,
+    /// Worker threads for per-worker gradient computation and compression
+    /// (CLI `--threads`): 0 = available hardware parallelism, 1 = fully
+    /// sequential. With static CR control, numerics are bitwise identical
+    /// for every value — only measured wall time changes (DESIGN.md §7).
+    /// MOO-adaptive runs ([`CrControl::Adaptive`]) feed MEASURED
+    /// compression time into CR selection and so were never run-to-run
+    /// bitwise reproducible, with or without threads.
+    pub threads: usize,
 }
 
 impl Default for TrainConfig {
@@ -131,6 +137,7 @@ impl Default for TrainConfig {
             comp_scale: 1.0,
             eval_every: 0,
             seed: 0,
+            threads: 0,
         }
     }
 }
@@ -142,8 +149,14 @@ pub struct Trainer {
     pub params: Vec<f32>,
     momentum_buf: Vec<f32>,
     ef: Vec<EfState>,
-    compressor: Box<dyn Compressor>,
+    /// One compressor per worker (same seed — Random-k then draws the
+    /// SAME indices on every worker each step, the AR-compatible shared
+    /// sequence its module docs describe), so the AG path compresses all
+    /// workers concurrently without sharing mutable state.
+    compressors: Vec<Box<dyn Compressor>>,
     artopk_op: ArTopk,
+    /// Execution engine for the per-worker hot path (DESIGN.md §7).
+    pool: ThreadPool,
     probe: Probe,
     pub clock: VirtualClock,
     pub metrics: MetricsLog,
@@ -177,10 +190,13 @@ impl Trainer {
                 (a.c_high, Some(AdaptiveState::new(a.clone())), a.gain_threshold)
             }
         };
-        let compressor = match cfg.strategy {
-            Strategy::AgCompress { kind } => kind.build(cfg.seed),
-            _ => CompressorKind::TopK.build(cfg.seed),
-        };
+        let compressors: Vec<Box<dyn Compressor>> = (0..n)
+            .map(|_| match cfg.strategy {
+                Strategy::AgCompress { kind } => kind.build(cfg.seed),
+                _ => CompressorKind::TopK.build(cfg.seed),
+            })
+            .collect();
+        let pool = ThreadPool::auto(cfg.threads);
         let (policy, flavor) = match cfg.strategy {
             Strategy::ArTopkFixed { policy, flavor } => (policy, flavor),
             Strategy::Flexible { policy } => (policy, ArFlavor::Ring),
@@ -198,8 +214,9 @@ impl Trainer {
             policy_switcher,
             momentum_buf: vec![0.0; dim],
             ef: (0..n).map(|_| EfState::new(dim)).collect(),
-            compressor,
-            artopk_op: ArTopk::new(policy, flavor),
+            compressors,
+            artopk_op: ArTopk::new(policy, flavor).with_pool(pool),
+            pool,
             probe,
             clock: VirtualClock::new(),
             metrics: MetricsLog::default(),
@@ -284,11 +301,19 @@ impl Trainer {
         let probed_topo = Topology { inter: probed, ..base_topo };
         let t_compute = self.cfg.compute.step_time(n, &mut self.rng);
 
-        // Per-worker gradients (real computation — PJRT or host backprop).
+        // Per-worker gradients (real computation — PJRT or host backprop),
+        // concurrent across TrainConfig::threads. Each worker's shard is an
+        // independent pure function of (params, worker, step), so results
+        // are bitwise identical for any thread count.
+        let per_worker = {
+            let src: &dyn GradSource = &*self.source;
+            let params = &self.params;
+            let step = self.step;
+            self.pool.map(n, |w| src.grad(params, w, n, step))
+        };
         let mut losses = Vec::with_capacity(n);
         let mut grads = Vec::with_capacity(n);
-        for w in 0..n {
-            let (loss, g) = self.source.grad(&self.params, w, n, self.step);
+        for (loss, g) in per_worker {
             losses.push(loss);
             grads.push(g);
         }
@@ -353,60 +378,14 @@ impl Trainer {
 
         match self.cfg.strategy {
             Strategy::DenseSgd { flavor } => {
+                // Table dispatch through the Collective registry: resolve
+                // the flavor (fixed or selector-chosen) to a kind, run the
+                // registered op. Selector choices, metrics kinds and future
+                // collectives all plug in at this one seam.
+                let kind = self.dense_kind(flavor, probed_topo);
+                let op = dense_op(kind).expect("dense kind registered");
                 let mut bufs = grads.to_vec();
-                let (report, kind) = match flavor {
-                    DenseFlavor::Ring => {
-                        (ring_allreduce(&mut bufs, true_link), CollectiveKind::RingAllreduce)
-                    }
-                    DenseFlavor::Tree => {
-                        (tree_allreduce(&mut bufs, true_link), CollectiveKind::TreeAllreduce)
-                    }
-                    DenseFlavor::HalvingDoubling => (
-                        halving_doubling_allreduce(&mut bufs, true_link),
-                        CollectiveKind::HalvingDoublingAllreduce,
-                    ),
-                    DenseFlavor::Hierarchical => (
-                        hierarchical_allreduce(&mut bufs, true_topo),
-                        CollectiveKind::HierarchicalAllreduce,
-                    ),
-                    DenseFlavor::Ps => {
-                        (ps_exchange(&mut bufs, 0, true_link), CollectiveKind::PsStar)
-                    }
-                    DenseFlavor::Auto => {
-                        match selector::choose_dense(probed, self.model_bytes(), n) {
-                            CollectiveKind::RingAllreduce => (
-                                ring_allreduce(&mut bufs, true_link),
-                                CollectiveKind::RingAllreduce,
-                            ),
-                            _ => (
-                                tree_allreduce(&mut bufs, true_link),
-                                CollectiveKind::TreeAllreduce,
-                            ),
-                        }
-                    }
-                    DenseFlavor::TopoAuto => {
-                        let choice =
-                            selector::choose_dense_topo(probed_topo, self.model_bytes(), n);
-                        match choice.kind {
-                            CollectiveKind::RingAllreduce => (
-                                ring_allreduce(&mut bufs, true_link),
-                                CollectiveKind::RingAllreduce,
-                            ),
-                            CollectiveKind::TreeAllreduce => (
-                                tree_allreduce(&mut bufs, true_link),
-                                CollectiveKind::TreeAllreduce,
-                            ),
-                            CollectiveKind::HalvingDoublingAllreduce => (
-                                halving_doubling_allreduce(&mut bufs, true_link),
-                                CollectiveKind::HalvingDoublingAllreduce,
-                            ),
-                            _ => (
-                                hierarchical_allreduce(&mut bufs, true_topo),
-                                CollectiveKind::HierarchicalAllreduce,
-                            ),
-                        }
-                    }
-                };
+                let report = op.run(&mut bufs, true_topo);
                 let mut update = bufs.into_iter().next().unwrap();
                 crate::tensor::scale(&mut update, 1.0 / n as f32);
                 (update, report, 0.0, kind, None, 1.0)
@@ -445,7 +424,32 @@ impl Trainer {
         }
     }
 
-    /// AG path: compress each worker's error-fed gradient, allgather.
+    /// Resolve a dense flavor (fixed or selector-driven) to the collective
+    /// kind the registry will execute.
+    fn dense_kind(&self, flavor: DenseFlavor, probed_topo: Topology) -> CollectiveKind {
+        let n = self.cfg.n_workers;
+        match flavor {
+            DenseFlavor::Ring => CollectiveKind::RingAllreduce,
+            DenseFlavor::Tree => CollectiveKind::TreeAllreduce,
+            DenseFlavor::HalvingDoubling => CollectiveKind::HalvingDoublingAllreduce,
+            DenseFlavor::Hierarchical => CollectiveKind::HierarchicalAllreduce,
+            DenseFlavor::Ps => CollectiveKind::PsStar,
+            DenseFlavor::Auto => {
+                selector::choose_dense(probed_topo.inter, self.model_bytes(), n)
+            }
+            DenseFlavor::TopoAuto => {
+                selector::choose_dense_topo(probed_topo, self.model_bytes(), n).kind
+            }
+        }
+    }
+
+    /// AG path: error-feed + compress every worker's gradient concurrently
+    /// across the pool (each worker owns its EfState and compressor — no
+    /// shared mutable state), then allgather. `t_comp` is the max of the
+    /// per-worker durations MEASURED INSIDE the concurrently-running tasks
+    /// — the critical-path worker a synchronous cluster step waits for,
+    /// independent of this host's core count while the pool is not
+    /// oversubscribed (DESIGN.md §7).
     fn ag_exchange(
         &mut self,
         grads: &[Vec<f32>],
@@ -455,22 +459,36 @@ impl Trainer {
         let n = self.cfg.n_workers;
         let dim = self.source.dim();
         let layout = self.source.layout().clone();
-        let mut parts = Vec::with_capacity(n);
-        let mut t_comp_max = 0.0f64;
-        let mut gain_acc = 0.0f64;
-        for w in 0..n {
-            let g_e = self.ef[w].error_fed(&grads[w]);
+        let cr = self.cur_cr;
+        let mut lanes: Vec<(&mut EfState, &mut Box<dyn Compressor>)> =
+            self.ef.iter_mut().zip(self.compressors.iter_mut()).collect();
+        let results = self.pool.map_mut(&mut lanes, |w, lane| {
+            let (ef, comp) = lane;
             let t0 = Instant::now();
-            let sparse = self.compressor.compress(&g_e, self.cur_cr, &layout);
-            t_comp_max = t_comp_max.max(t0.elapsed().as_secs_f64());
+            let g_e = ef.error_fed(&grads[w]);
+            let sparse = comp.compress(&g_e, cr, &layout);
+            let mut dt = t0.elapsed().as_secs_f64();
+            // Gain bookkeeping is metrics-only — keep its O(G) pass OFF
+            // the billed compression path (a cluster wouldn't run it).
             let e_sq = crate::tensor::sq_norm(&g_e);
-            gain_acc += gain(sparse.sq_norm(), e_sq);
-            self.ef[w].update(g_e, &sparse);
+            let g = gain(sparse.sq_norm(), e_sq);
+            let t1 = Instant::now();
+            ef.update(g_e, &sparse);
+            dt += t1.elapsed().as_secs_f64();
+            (sparse, g, dt)
+        });
+        drop(lanes);
+        let mut parts = Vec::with_capacity(n);
+        let mut gain_acc = 0.0f64;
+        let mut t_comp = 0.0f64;
+        for (sparse, g, dt) in results {
+            gain_acc += g;
+            t_comp = t_comp.max(dt);
             parts.push(sparse);
         }
         let (mut dense, report) = allgather_sparse(&parts, dim, true_link);
         crate::tensor::scale(&mut dense, 1.0 / n as f32);
-        (dense, report, t_comp_max, kind, None, gain_acc / n as f64)
+        (dense, report, t_comp, kind, None, gain_acc / n as f64)
     }
 
     /// AR-Topk path (Alg 1).
@@ -764,5 +782,90 @@ mod tests {
         let t = train(Strategy::DenseSgd { flavor: DenseFlavor::Tree }, 1.0, 10);
         let total: f64 = t.metrics.steps.iter().map(|m| m.t_step()).sum();
         assert!((t.clock.now() - total).abs() < 1e-9);
+    }
+
+    /// Wraps a real model but poisons one worker's gradient with NaN at a
+    /// chosen step — the exploding-loss regression fixture.
+    struct NanAt {
+        inner: HostMlp,
+        at_step: u64,
+        at_worker: usize,
+    }
+
+    impl crate::coordinator::worker::GradSource for NanAt {
+        fn dim(&self) -> usize {
+            self.inner.dim()
+        }
+        fn layout(&self) -> &crate::tensor::Layout {
+            self.inner.layout()
+        }
+        fn init_params(&mut self) -> Vec<f32> {
+            self.inner.init_params()
+        }
+        fn grad(
+            &self,
+            params: &[f32],
+            worker: usize,
+            n_workers: usize,
+            step: u64,
+        ) -> (f64, Vec<f32>) {
+            let (loss, mut g) = self.inner.grad(params, worker, n_workers, step);
+            if step == self.at_step && worker == self.at_worker {
+                g.iter_mut().for_each(|v| *v = f32::NAN);
+                return (f64::NAN, g);
+            }
+            (loss, g)
+        }
+        fn eval(&mut self, params: &[f32]) -> (f64, f64) {
+            self.inner.eval(params)
+        }
+        fn name(&self) -> String {
+            format!("nan-at-{}@{}", self.at_worker, self.at_step)
+        }
+    }
+
+    /// A NaN gradient mid-run (exploding loss) must not panic the trainer:
+    /// the poisoned step surfaces as a NaN loss in the metrics (the
+    /// diagnosable state), VAR selection avoids the poisoned worker, and
+    /// subsequent steps still execute. Regression for the
+    /// `partial_cmp(..).unwrap()` panic at the old artopk.rs:158.
+    #[test]
+    fn trains_through_a_nan_step_without_panicking() {
+        let cfg = quick_cfg(
+            Strategy::ArTopkFixed { policy: SelectionPolicy::Var, flavor: ArFlavor::Ring },
+            0.05,
+            0,
+        );
+        let src = NanAt { inner: HostMlp::default_preset(7), at_step: 2, at_worker: 1 };
+        let mut t = Trainer::new(cfg, Box::new(src));
+        let link = LinkParams::from_ms_gbps(4.0, 20.0);
+        let mut steps = Vec::new();
+        for _ in 0..5 {
+            steps.push(t.step_once(false, link));
+        }
+        assert!(steps[0].loss.is_finite() && steps[1].loss.is_finite());
+        assert!(steps[2].loss.is_nan(), "the poisoned step must be visible");
+        assert_ne!(
+            steps[2].selected_rank,
+            Some(1),
+            "VAR must not broadcast the NaN worker's indices"
+        );
+        // The run keeps stepping (no panic) even though params now carry
+        // NaNs at the exchanged coordinates.
+        assert_eq!(t.step_count(), 5);
+    }
+
+    /// `threads` plumbing: any explicit value yields a working trainer and
+    /// 0 resolves to the host parallelism (determinism across thread
+    /// counts is pinned end-to-end in rust/tests/determinism.rs).
+    #[test]
+    fn explicit_thread_counts_train() {
+        for threads in [1usize, 2, 7] {
+            let mut cfg = quick_cfg(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, 5);
+            cfg.threads = threads;
+            let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(7)));
+            t.run();
+            assert_eq!(t.metrics.steps.len(), 5, "threads={threads}");
+        }
     }
 }

@@ -11,7 +11,13 @@ use crate::util::rng::Rng;
 /// [`crate::runtime::host_model::SyntheticGrad`] (cost-only experiments at
 /// paper-scale tensor sizes), and [`crate::runtime::pjrt_model::PjrtModel`]
 /// (the real L2 artifact executed via PJRT — the production path).
-pub trait GradSource {
+///
+/// `Send + Sync` and a `&self` [`GradSource::grad`] so the trainer's
+/// execution engine can compute the N per-worker gradients concurrently
+/// (DESIGN.md §7). `grad` must be a pure function of
+/// `(params, worker, n_workers, step)` — that purity is also what makes
+/// whole runs replay bit-identically from a seed.
+pub trait GradSource: Send + Sync {
     /// Flat parameter dimension.
     fn dim(&self) -> usize;
 
@@ -21,9 +27,10 @@ pub trait GradSource {
     /// Initial parameter vector.
     fn init_params(&mut self) -> Vec<f32>;
 
-    /// Compute (loss, gradient) for `worker`'s shard at `step`.
+    /// Compute (loss, gradient) for `worker`'s shard at `step`. Called
+    /// concurrently from worker threads — `&self`, deterministic.
     fn grad(
-        &mut self,
+        &self,
         params: &[f32],
         worker: usize,
         n_workers: usize,

@@ -141,6 +141,7 @@ pub fn proxy_cfg(strategy: Strategy, cr: CrControl, steps: u64, seed: u64) -> Tr
         comp_scale: 1.0,
         eval_every: (steps / 20).max(1),
         seed,
+        threads: 0, // all cores; bitwise-identical to threads = 1 (static CR)
     }
 }
 

@@ -40,5 +40,6 @@ pub mod prelude {
     pub use crate::netsim::cost_model::{self, LinkParams, Topology};
     pub use crate::netsim::schedule::NetSchedule;
     pub use crate::tensor::{Layout, ParamVec};
+    pub use crate::util::pool::ThreadPool;
     pub use crate::util::rng::Rng;
 }

@@ -183,6 +183,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         comp_scale: args.f64_or("comp-scale", 1.0)?,
         eval_every: args.u64_or("eval-every", spe)?,
         seed,
+        // Worker execution engine: 0 = all available cores (default);
+        // numerics are identical for every value (DESIGN.md §7).
+        threads: args.usize_or("threads", cfgfile.int_or("train.threads", 0) as usize)?,
     };
 
     println!("flexcomm train: model={model} strategy={:?} steps={steps}", cfg.strategy);

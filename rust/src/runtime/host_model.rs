@@ -233,7 +233,7 @@ impl GradSource for HostMlp {
         p
     }
 
-    fn grad(&mut self, params: &[f32], worker: usize, n_workers: usize, step: u64) -> (f64, Vec<f32>) {
+    fn grad(&self, params: &[f32], worker: usize, n_workers: usize, step: u64) -> (f64, Vec<f32>) {
         let (x, y) = self.data.batch(worker, n_workers, step, self.batch, self.skew);
         self.loss_grad(params, &x, &y, self.batch)
     }
@@ -255,12 +255,15 @@ impl GradSource for HostMlp {
             let z: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
             let label = y[r] as usize;
             loss += -(((row[label] - mx).exp() / z).ln() as f64);
+            // NaN-tolerant argmax (crate NaN policy: NaN never wins): an
+            // eval after a NaN-poisoned step reports garbage accuracy
+            // instead of panicking the run.
             let pred = row
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                .unwrap()
-                .0;
+                .max_by(|a, b| crate::tensor::nan_min_cmp_f32(*a.1, *b.1))
+                .map(|(c, _)| c)
+                .unwrap_or(0);
             correct += (pred == label) as usize;
         }
         (loss / n as f64, correct as f64 / n as f64)
@@ -331,7 +334,7 @@ impl GradSource for SyntheticGrad {
         vec![0.0; self.layout.total()]
     }
 
-    fn grad(&mut self, _params: &[f32], worker: usize, _n: usize, step: u64) -> (f64, Vec<f32>) {
+    fn grad(&self, _params: &[f32], worker: usize, _n: usize, step: u64) -> (f64, Vec<f32>) {
         let mut rng = Rng::new(
             self.seed
                 ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
@@ -446,7 +449,7 @@ mod tests {
 
     #[test]
     fn synthetic_workers_differ_but_replay() {
-        let mut s = SyntheticGrad::new(1000, 7);
+        let s = SyntheticGrad::new(1000, 7);
         let p = vec![0.0; 1000];
         let (_, a) = s.grad(&p, 0, 4, 3);
         let (_, b) = s.grad(&p, 1, 4, 3);

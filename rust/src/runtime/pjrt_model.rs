@@ -176,7 +176,12 @@ impl GradSource for PjrtModel {
         .expect("reading init snapshot (run `make artifacts`)")
     }
 
-    fn grad(&mut self, params: &[f32], worker: usize, n_workers: usize, step: u64) -> (f64, Vec<f32>) {
+    // NB: `GradSource` now requires `Send + Sync` and a `&self` grad so the
+    // trainer can fan workers out across threads. The PJRT CPU client is
+    // documented thread-safe, but if the vendored `xla` wrapper types lack
+    // the auto-traits this impl will surface it at compile time — wrap the
+    // executables accordingly when re-enabling the `pjrt` feature.
+    fn grad(&self, params: &[f32], worker: usize, n_workers: usize, step: u64) -> (f64, Vec<f32>) {
         let batch = self
             .batch_literals(worker, n_workers, step)
             .expect("building batch literals");

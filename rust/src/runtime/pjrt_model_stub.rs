@@ -67,7 +67,7 @@ impl GradSource for PjrtModel {
     }
 
     fn grad(
-        &mut self,
+        &self,
         _params: &[f32],
         _worker: usize,
         _n_workers: usize,

@@ -113,6 +113,26 @@ pub fn sq_norm(x: &[f32]) -> f64 {
     x.iter().map(|&v| (v as f64) * (v as f64)).sum()
 }
 
+/// The crate-wide NaN ordering policy: a total order on `f64` treating NaN
+/// as the SMALLEST value, so a NaN (exploding-loss) quantity can never win
+/// a max-selection and sorts never panic. Used by VAR worker selection,
+/// the Top-k comparators and eval argmax — one policy, one place.
+pub fn nan_min_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (a.is_nan(), b.is_nan()) {
+        (false, false) => a.partial_cmp(&b).expect("non-NaN values compare"),
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Less,
+        (false, true) => Ordering::Greater,
+    }
+}
+
+/// [`nan_min_cmp`] for `f32` (f32→f64 is lossless and order/NaN
+/// preserving, so this is the same policy, not a second copy).
+pub fn nan_min_cmp_f32(a: f32, b: f32) -> std::cmp::Ordering {
+    nan_min_cmp(a as f64, b as f64)
+}
+
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
@@ -175,6 +195,24 @@ mod tests {
         assert!((sq_norm(&[3.0, 4.0]) - 25.0).abs() < 1e-12);
         assert!((dot(&[1.0, 2.0], &[3.0, 4.0]) - 11.0).abs() < 1e-12);
         assert_eq!(add(&[1.0], &[2.0]), vec![3.0]);
+    }
+
+    #[test]
+    fn nan_min_cmp_is_a_total_order_with_nan_smallest() {
+        use std::cmp::Ordering::*;
+        assert_eq!(nan_min_cmp(1.0, 2.0), Less);
+        assert_eq!(nan_min_cmp(2.0, 1.0), Greater);
+        assert_eq!(nan_min_cmp(1.0, 1.0), Equal);
+        assert_eq!(nan_min_cmp(f64::NAN, -1e300), Less);
+        assert_eq!(nan_min_cmp(-1e300, f64::NAN), Greater);
+        assert_eq!(nan_min_cmp(f64::NAN, f64::NAN), Equal);
+        assert_eq!(nan_min_cmp_f32(f32::NAN, f32::NEG_INFINITY), Less);
+        assert_eq!(nan_min_cmp_f32(0.0, f32::NAN), Greater);
+        // Sorting a NaN-poisoned slice must not panic and puts NaN first.
+        let mut v = vec![2.0f64, f64::NAN, 1.0];
+        v.sort_by(|a, b| nan_min_cmp(*a, *b));
+        assert!(v[0].is_nan());
+        assert_eq!(&v[1..], &[1.0, 2.0]);
     }
 
     #[test]

@@ -1,0 +1,236 @@
+//! First-party scoped thread pool (offline build: no `rayon`) — the
+//! execution engine behind the trainer's per-worker parallelism
+//! (DESIGN.md §7).
+//!
+//! Built on [`std::thread::scope`], so borrowed data (parameters,
+//! gradients, error-feedback state) crosses into worker threads without
+//! `Arc`/cloning, and every region joins before it returns — no detached
+//! threads, no channels, zero dependencies.
+//!
+//! Determinism contract: results are returned **by item index**, work is
+//! split into contiguous index chunks, and items never share mutable
+//! state (no atomics on floats, no reduction across threads), so the
+//! output of [`ThreadPool::map`]/[`ThreadPool::map_mut`] is bitwise
+//! identical for every thread count — only the wall-clock time changes.
+//! The trainer's parallel-vs-sequential property tests
+//! (`rust/tests/determinism.rs`) pin this end to end.
+
+/// A scoped fork-join pool: `threads` is the maximum worker-thread count
+/// per parallel region (1 = run inline on the caller's thread).
+///
+/// The pool is a cost-free handle (no spawned threads are kept alive
+/// between regions), so it is `Copy` and can be embedded in operators
+/// like [`crate::artopk::ArTopk`]. The flip side: every region pays a
+/// spawn/join, so for workloads whose per-item cost is smaller than a
+/// thread spawn (tens of µs), prefer `threads = 1` — results are
+/// identical by contract (DESIGN.md §7 records the trade-off).
+///
+/// ```
+/// use flexcomm::util::pool::ThreadPool;
+/// let pool = ThreadPool::new(4);
+/// let squares = pool.map(8, |i| i * i);
+/// assert_eq!(squares, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ThreadPool {
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Pool with an explicit thread cap (clamped to >= 1).
+    pub fn new(threads: usize) -> Self {
+        ThreadPool { threads: threads.max(1) }
+    }
+
+    /// `threads == 0` means "use the available hardware parallelism"
+    /// (the `TrainConfig::threads` / `--threads` convention).
+    pub fn auto(threads: usize) -> Self {
+        if threads == 0 {
+            ThreadPool::new(Self::available())
+        } else {
+            ThreadPool::new(threads)
+        }
+    }
+
+    /// Single-threaded pool: every region runs inline.
+    pub fn serial() -> Self {
+        ThreadPool::new(1)
+    }
+
+    /// Hardware parallelism of this host (>= 1).
+    pub fn available() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Compute `f(0), f(1), .., f(n-1)` across up to `threads` scoped
+    /// worker threads; returns the results in index order.
+    ///
+    /// `f` runs at most once per index. Panics in `f` propagate to the
+    /// caller after the scope joins.
+    pub fn map<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let chunk = (n + workers - 1) / workers;
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let f = &f;
+        std::thread::scope(|s| {
+            for (ci, slots) in out.chunks_mut(chunk).enumerate() {
+                s.spawn(move || {
+                    for (j, slot) in slots.iter_mut().enumerate() {
+                        *slot = Some(f(ci * chunk + j));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|r| r.expect("every slot filled")).collect()
+    }
+
+    /// Like [`ThreadPool::map`] over disjoint mutable items: each worker
+    /// thread owns a contiguous sub-slice of `items`, so per-item state
+    /// (error-feedback residuals, per-worker compressors) mutates without
+    /// locks. Results come back in item order.
+    ///
+    /// ```
+    /// use flexcomm::util::pool::ThreadPool;
+    /// let pool = ThreadPool::new(2);
+    /// let mut xs = vec![1, 2, 3];
+    /// let idx = pool.map_mut(&mut xs, |i, x| {
+    ///     *x *= 2;
+    ///     i
+    /// });
+    /// assert_eq!(xs, vec![2, 4, 6]);
+    /// assert_eq!(idx, vec![0, 1, 2]);
+    /// ```
+    pub fn map_mut<T, R, F>(&self, items: &mut [T], f: F) -> Vec<R>
+    where
+        T: Send,
+        R: Send,
+        F: Fn(usize, &mut T) -> R + Sync,
+    {
+        let n = items.len();
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
+        }
+        let chunk = (n + workers - 1) / workers;
+        let mut out: Vec<Option<R>> = Vec::with_capacity(n);
+        out.resize_with(n, || None);
+        let f = &f;
+        std::thread::scope(|s| {
+            for ((ci, slots), part) in
+                out.chunks_mut(chunk).enumerate().zip(items.chunks_mut(chunk))
+            {
+                s.spawn(move || {
+                    for (j, (slot, item)) in slots.iter_mut().zip(part.iter_mut()).enumerate() {
+                        *slot = Some(f(ci * chunk + j, item));
+                    }
+                });
+            }
+        });
+        out.into_iter().map(|r| r.expect("every slot filled")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure};
+
+    #[test]
+    fn map_returns_results_in_index_order() {
+        for threads in [1, 2, 3, 8] {
+            let pool = ThreadPool::new(threads);
+            let got = pool.map(10, |i| i * 3);
+            assert_eq!(got, (0..10).map(|i| i * 3).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_handles_edge_sizes() {
+        let pool = ThreadPool::new(4);
+        assert_eq!(pool.map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map(1, |i| i + 7), vec![7]);
+        // More threads than items.
+        assert_eq!(pool.map(2, |i| i), vec![0, 1]);
+    }
+
+    #[test]
+    fn map_mut_mutates_every_item_once() {
+        for threads in [1, 2, 5] {
+            let pool = ThreadPool::new(threads);
+            let mut xs = vec![0u64; 13];
+            let idx = pool.map_mut(&mut xs, |i, x| {
+                *x += 1 + i as u64;
+                i
+            });
+            assert_eq!(idx, (0..13).collect::<Vec<_>>(), "threads={threads}");
+            for (i, x) in xs.iter().enumerate() {
+                assert_eq!(*x, 1 + i as u64, "threads={threads} item {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn borrows_shared_state_without_cloning() {
+        let data: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let pool = ThreadPool::new(4);
+        let sums = pool.map(4, |w| {
+            data[w * 250..(w + 1) * 250].iter().map(|&v| v as f64).sum::<f64>()
+        });
+        let total: f64 = sums.iter().sum();
+        assert!((total - 999.0 * 1000.0 / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn results_bitwise_identical_across_thread_counts() {
+        check("pool map deterministic across thread counts", 30, |g| {
+            let n = g.usize_in(1, 17);
+            let len = g.usize_in(1, 64);
+            let base: Vec<Vec<f32>> = (0..n).map(|_| g.vec_normal(len, 1.0)).collect();
+            let work = |pool: &ThreadPool| -> Vec<f64> {
+                pool.map(n, |w| base[w].iter().map(|&v| (v as f64).powi(2)).sum())
+            };
+            let serial = work(&ThreadPool::serial());
+            for t in [2usize, 3, 8] {
+                let par = work(&ThreadPool::new(t));
+                ensure(
+                    serial.iter().zip(&par).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    format!("threads={t} diverged"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn auto_and_available() {
+        assert!(ThreadPool::available() >= 1);
+        assert_eq!(ThreadPool::auto(0).threads(), ThreadPool::available());
+        assert_eq!(ThreadPool::auto(3).threads(), 3);
+        assert_eq!(ThreadPool::new(0).threads(), 1);
+        assert_eq!(ThreadPool::serial().threads(), 1);
+    }
+
+    #[test]
+    #[should_panic] // scope re-raises after joining (payload may be rewrapped)
+    fn worker_panics_propagate() {
+        let pool = ThreadPool::new(2);
+        pool.map(4, |i| {
+            if i == 3 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+}

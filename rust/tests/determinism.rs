@@ -1,0 +1,141 @@
+//! Parallel-vs-sequential bitwise determinism — the execution-engine
+//! contract (DESIGN.md §7): same seed, `threads = 1` vs `threads = 4` ⇒
+//! identical parameters and identical deterministic metrics (loss,
+//! simulated compute/sync seconds, collective kind, CR, selected rank,
+//! gain) across DenseSGD, AG-Topk and AR-Topk strategies, including
+//! non-power-of-two worker counts.
+//!
+//! Measured compression wall time (`t_comp`) is real elapsed time and
+//! therefore legitimately timing-dependent; it is excluded by design —
+//! the simulated α-β cost reports (`t_sync`) are what must not move.
+
+use flexcomm::artopk::{ArFlavor, ArTopk, SelectionPolicy};
+use flexcomm::compress::{CompressorKind, EfState};
+use flexcomm::coordinator::trainer::{
+    CrControl, DenseFlavor, Strategy, TrainConfig, Trainer,
+};
+use flexcomm::coordinator::worker::ComputeModel;
+use flexcomm::netsim::cost_model::LinkParams;
+use flexcomm::netsim::schedule::NetSchedule;
+use flexcomm::runtime::HostMlp;
+use flexcomm::util::pool::ThreadPool;
+use flexcomm::util::rng::Rng;
+
+fn run(strategy: Strategy, cr: f64, n_workers: usize, threads: usize) -> Trainer {
+    let cfg = TrainConfig {
+        n_workers,
+        threads,
+        steps: 40,
+        steps_per_epoch: 20,
+        lr: 0.3,
+        momentum: 0.6,
+        strategy,
+        cr: CrControl::Static(cr),
+        schedule: NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0)),
+        compute: ComputeModel::fixed(0.005),
+        eval_every: 0,
+        seed: 33,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(33)));
+    t.run();
+    t
+}
+
+fn assert_bitwise_equal(a: &Trainer, b: &Trainer, label: &str) {
+    assert_eq!(a.params.len(), b.params.len(), "{label}: param dim");
+    for (i, (x, y)) in a.params.iter().zip(&b.params).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}: param {i}: {x} vs {y}");
+    }
+    assert_eq!(a.metrics.steps.len(), b.metrics.steps.len(), "{label}: step count");
+    for (x, y) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+        let s = x.step;
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{label} step {s}: loss");
+        assert_eq!(
+            x.t_compute.to_bits(),
+            y.t_compute.to_bits(),
+            "{label} step {s}: t_compute"
+        );
+        assert_eq!(x.t_sync.to_bits(), y.t_sync.to_bits(), "{label} step {s}: t_sync");
+        assert_eq!(x.collective, y.collective, "{label} step {s}: collective");
+        assert_eq!(x.cr.to_bits(), y.cr.to_bits(), "{label} step {s}: cr");
+        assert_eq!(x.selected_rank, y.selected_rank, "{label} step {s}: rank");
+        assert_eq!(x.gain.to_bits(), y.gain.to_bits(), "{label} step {s}: gain");
+    }
+}
+
+/// The headline property: every strategy family, power-of-two AND
+/// non-power-of-two cluster sizes, threads=1 vs threads=4.
+#[test]
+fn threads_1_and_4_are_bitwise_identical() {
+    let cases: [(&str, Strategy, f64); 6] = [
+        ("dense-ring", Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0),
+        ("dense-hd", Strategy::DenseSgd { flavor: DenseFlavor::HalvingDoubling }, 1.0),
+        ("ag-topk", Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05),
+        (
+            "artopk-star",
+            Strategy::ArTopkFixed {
+                policy: SelectionPolicy::Star,
+                flavor: ArFlavor::Ring,
+            },
+            0.05,
+        ),
+        (
+            "artopk-var",
+            Strategy::ArTopkFixed {
+                policy: SelectionPolicy::Var,
+                flavor: ArFlavor::Tree,
+            },
+            0.05,
+        ),
+        ("flexible", Strategy::Flexible { policy: SelectionPolicy::Star }, 0.05),
+    ];
+    for (label, strategy, cr) in cases {
+        for n_workers in [4usize, 3] {
+            let a = run(strategy, cr, n_workers, 1);
+            let b = run(strategy, cr, n_workers, 4);
+            assert_bitwise_equal(&a, &b, &format!("{label}/n={n_workers}"));
+        }
+    }
+}
+
+/// Oversubscription and odd thread counts change nothing either.
+#[test]
+fn oversubscribed_threads_are_bitwise_identical() {
+    let strategy = Strategy::AgCompress { kind: CompressorKind::TopK };
+    let a = run(strategy, 0.02, 5, 1);
+    for threads in [3usize, 16] {
+        let b = run(strategy, 0.02, 5, threads);
+        assert_bitwise_equal(&a, &b, &format!("ag-topk/threads={threads}"));
+    }
+}
+
+/// The simulated-cost report of a raw AR-Topk exchange (the paper's Eqn 4
+/// object) is identical for any pool, including the traffic accounting.
+#[test]
+fn artopk_comm_report_identical_across_pools() {
+    for n in [3usize, 8] {
+        let dim = 4096;
+        let mut rng = Rng::new(7);
+        let grads: Vec<Vec<f32>> = (0..n)
+            .map(|_| {
+                let mut v = vec![0.0; dim];
+                rng.fill_normal(&mut v, 1.0);
+                v
+            })
+            .collect();
+        let link = LinkParams::from_ms_gbps(1.0, 10.0);
+        let exchange = |pool: ThreadPool| {
+            let mut ef: Vec<EfState> = (0..n).map(|_| EfState::new(dim)).collect();
+            let mut art =
+                ArTopk::new(SelectionPolicy::Var, ArFlavor::Ring).with_pool(pool);
+            art.exchange(&grads, &mut ef, 0.03, 2, link)
+        };
+        let a = exchange(ThreadPool::serial());
+        let b = exchange(ThreadPool::new(4));
+        assert_eq!(a.comm, b.comm, "n={n}: CommReport must not depend on threads");
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.update.indices, b.update.indices);
+        assert_eq!(a.update.values, b.update.values);
+    }
+}

@@ -1,14 +1,31 @@
 #!/usr/bin/env bash
 # flexcomm verify gate (DESIGN.md §6):
 #   1. tier-1: release build + full test suite (unit, integration, doctests)
-#   2. rustfmt drift check
-#   3. rustdoc with warnings denied — broken intra-doc links (the old
+#   2. smoke-mode hotpath bench: runs the threaded worker engine with
+#      threads=1 and threads=N and hard-fails (assert inside the bench) if
+#      the parallel grad+compress stage is not bitwise-identical to serial;
+#      also prints the measured speedup (ISSUE 2 acceptance: >=1.5x on a
+#      >=4-core host — informational here, CI hosts may have fewer cores)
+#   3. rustfmt drift check
+#   4. rustdoc with warnings denied — broken intra-doc links (the old
 #      "DESIGN.md referenced but missing" class of rot) fail fast here
 #
 # Usage: scripts/verify.sh            (from the repo root)
 #        FLEXCOMM_BENCH_FAST=1 is respected by the benches, not needed here.
 set -uo pipefail
 cd "$(dirname "$0")/.."
+
+# Fail LOUDLY and EARLY when there is no toolchain: PR 1 shipped from a
+# container without cargo and was therefore never compiled or tested
+# ("desk-checked only"). Nothing below can stand in for a real run.
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "verify: FATAL: \`cargo\` not found on PATH." >&2
+    echo "  The tier-1 gate is 'cargo build --release && cargo test -q';" >&2
+    echo "  without a Rust toolchain NOTHING in this repo has been compiled" >&2
+    echo "  or tested — do not treat a desk-check as verification." >&2
+    echo "  Install a toolchain (https://rustup.rs) and re-run." >&2
+    exit 2
+fi
 
 status=0
 step() {
@@ -22,6 +39,10 @@ step() {
 
 step cargo build --release
 step cargo test -q
+# Benches are test = false (cargo test must not RUN them), so compile them
+# explicitly — otherwise table2/table6/fig2/fig5 could bit-rot silently.
+step cargo bench --no-run
+step env FLEXCOMM_BENCH_FAST=1 cargo bench --bench hotpath
 step cargo fmt --check
 step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
