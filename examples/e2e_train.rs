@@ -8,15 +8,16 @@
 //!     cargo run --release --example e2e_train -- --preset small --steps 300
 //!
 //! `--preset base` / `--preset large` (~27M / ~88M params) require
-//! `make artifacts-large` first. Results land in results/e2e_<preset>.csv
-//! and are recorded in EXPERIMENTS.md.
+//! `make artifacts-large` first. Results stream to results/e2e_<preset>.csv
+//! (CsvSink observer — a killed run still leaves a trace) and are recorded
+//! in EXPERIMENTS.md. `--progress` prints live step/eval/switch lines.
 
 use anyhow::{Context, Result};
-use flexcomm::artopk::SelectionPolicy;
 use flexcomm::coordinator::adaptive::AdaptiveConfig;
-use flexcomm::coordinator::trainer::{CrControl, Strategy, TrainConfig, Trainer};
+use flexcomm::coordinator::observer::{CsvSink, ProgressPrinter};
+use flexcomm::coordinator::session::Session;
+use flexcomm::coordinator::trainer::{CrControl, Strategy};
 use flexcomm::coordinator::worker::ComputeModel;
-use flexcomm::experiments::write_csv;
 use flexcomm::netsim::schedule::NetSchedule;
 use flexcomm::runtime::{find_artifacts_dir, Engine, ModelArtifacts, PjrtModel};
 use flexcomm::util::cli::Args;
@@ -43,47 +44,49 @@ fn main() -> Result<()> {
     println!("artifacts compiled in {:.1?}s", t_load.elapsed().as_secs_f64());
 
     let spe = (steps / 10).max(1);
-    let cfg = TrainConfig {
-        n_workers: workers,
-        steps,
-        steps_per_epoch: spe,
-        lr: args.f64_or("lr", 0.05)? as f32,
-        momentum: 0.9,
-        weight_decay: 0.0001,
-        lr_decay: vec![(steps * 7 / 10, 0.2)],
-        strategy: Strategy::Flexible { policy: SelectionPolicy::Star },
-        cr: if adaptive {
+    let csv_path = format!("results/e2e_{preset}.csv");
+    let mut builder = Session::builder()
+        .workers(workers)
+        .steps(steps)
+        .steps_per_epoch(spe)
+        .lr(args.f64_or("lr", 0.05)? as f32)
+        .momentum(0.9)
+        .weight_decay(0.0001)
+        .lr_decay(vec![(steps * 7 / 10, 0.2)])
+        .strategy(Strategy::parse("flexible")?)
+        .cr(if adaptive {
             CrControl::Adaptive(AdaptiveConfig { probe_iters: 5, seed, ..Default::default() })
         } else {
             CrControl::Static(args.f64_or("cr", 0.01)?)
-        },
-        schedule: NetSchedule::c2(10.0), // 10 virtual epochs across the run
+        })
+        .schedule(NetSchedule::c2(10.0)) // 10 virtual epochs across the run
         // t_compute proxied at ViT-scale per Fig 1a.
-        compute: ComputeModel::with_jitter(0.110, 0.05),
-        probe_noise: 0.02,
-        msg_scale: 1.0,
-        comp_scale: 1.0,
-        eval_every: spe,
-        seed,
-        threads: args.usize_or("threads", 0)?,
-    };
+        .compute(ComputeModel::with_jitter(0.110, 0.05))
+        .eval_every(spe)
+        .seed(seed)
+        .threads(args.usize_or("threads", 0)?)
+        .source(Box::new(model));
+    if args.flag("progress") {
+        builder = builder.observer(Box::new(ProgressPrinter::every(spe)));
+    }
+    // Validate before CsvSink::create truncates any previous results file.
+    let session = builder.build()?.observer(Box::new(CsvSink::create(&csv_path)?));
 
     let wall = std::time::Instant::now();
-    let mut trainer = Trainer::new(cfg, Box::new(model));
-    trainer.run();
+    let report = session.run();
     let wall_s = wall.elapsed().as_secs_f64();
 
     // Loss curve.
     println!("\nloss curve (per {spe} steps):");
     let mut curve = Table::new(["step", "epoch", "train loss", "eval loss", "eval acc"]);
-    let mut eval_iter = trainer.metrics.evals.iter();
-    for chunk_start in (0..trainer.metrics.steps.len()).step_by(spe as usize) {
-        let end = (chunk_start + spe as usize).min(trainer.metrics.steps.len());
-        let s = trainer.metrics.summary_range(chunk_start, end);
+    let mut eval_iter = report.metrics.evals.iter();
+    for chunk_start in (0..report.metrics.steps.len()).step_by(spe as usize) {
+        let end = (chunk_start + spe as usize).min(report.metrics.steps.len());
+        let s = report.metrics.summary_range(chunk_start, end);
         let ev = eval_iter.next();
         curve.row([
             format!("{}", end),
-            format!("{:.1}", trainer.metrics.steps[end - 1].epoch),
+            format!("{:.1}", report.metrics.steps[end - 1].epoch),
             format!("{:.4}", s.final_loss),
             ev.map(|e| format!("{:.4}", e.1)).unwrap_or_default(),
             ev.map(|e| format!("{:.2}%", e.2 * 100.0)).unwrap_or_default(),
@@ -91,37 +94,35 @@ fn main() -> Result<()> {
     }
     curve.print();
 
-    let s = trainer.metrics.summary();
-    let first_loss = trainer.metrics.steps.first().map(|m| m.loss).unwrap_or(f64::NAN);
+    let s = report.summary();
+    let first_loss = report.metrics.steps.first().map(|m| m.loss).unwrap_or(f64::NAN);
     println!("\nsummary:");
     let mut t = Table::new(["metric", "value"]);
     t.row(["train loss", &format!("{first_loss:.4} -> {:.4}", s.final_loss)]);
-    t.row(["final eval acc", &format!("{:.2}%", trainer.metrics.final_accuracy().unwrap_or(f64::NAN) * 100.0)]);
+    let final_acc = report.final_accuracy().unwrap_or(f64::NAN) * 100.0;
+    t.row(["final eval acc", &format!("{final_acc:.2}%")]);
     t.row(["mean t_step (ms)", &format!("{:.2}", s.mean_step_s * 1e3)]);
     t.row(["  compute/comp/sync (ms)", &format!(
         "{:.2} / {:.2} / {:.2}",
         s.mean_compute_s * 1e3, s.mean_comp_s * 1e3, s.mean_sync_s * 1e3
     )]);
     t.row(["mean gain", &format!("{:.3}", s.mean_gain)]);
-    t.row(["virtual cluster time (s)", &format!("{:.1}", trainer.clock.now())]);
-    t.row(["MOO explore overhead (s)", &format!("{:.1}", trainer.explore_overhead_s)]);
+    t.row(["virtual cluster time (s)", &format!("{:.1}", report.virtual_time_s)]);
+    t.row(["MOO explore overhead (s)", &format!("{:.1}", report.explore_overhead_s)]);
     t.row(["real wall time (s)", &format!("{wall_s:.1}")]);
     t.print();
 
     // Collective + CR usage (Figs 7/8 view of this run).
-    let used = trainer.metrics.collectives_used();
     let mut counts = std::collections::BTreeMap::new();
-    for c in &used {
-        *counts.entry(c.name()).or_insert(0usize) += 1;
+    for (kind, n) in report.metrics.collective_counts() {
+        counts.insert(kind.name(), n);
     }
     println!("\ncollectives used: {counts:?}");
-    let crs = trainer.metrics.crs_used();
+    let crs = report.metrics.crs_used();
     let distinct: std::collections::BTreeSet<String> =
         crs.iter().map(|c| format!("{c:.4}")).collect();
     println!("CRs used: {distinct:?}");
 
-    let path = format!("results/e2e_{preset}.csv");
-    let out = write_csv(&path, &trainer.metrics.to_csv())?;
-    println!("\nwrote {out}");
+    println!("\nstreamed {csv_path}");
     Ok(())
 }

@@ -15,7 +15,8 @@ use anyhow::Result;
 use flexcomm::artopk::{ArFlavor, SelectionPolicy};
 use flexcomm::collectives::CollectiveKind;
 use flexcomm::coordinator::adaptive::AdaptiveConfig;
-use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, Trainer};
+use flexcomm::coordinator::session::TrainReport;
+use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy};
 use flexcomm::experiments::{
     print_kde, proxy_cfg, run_proxy, write_csv, GPU_COMPRESS_SPEEDUP, PAPER_COMPUTE_MS,
     PAPER_MODELS,
@@ -58,7 +59,7 @@ fn main() -> Result<()> {
     let mut csv = String::from("config,step,cr,collective,alpha_ms,bw_gbps\n");
 
     for cname in ["c1", "c2"] {
-        let schedule = NetSchedule::preset(cname, 50.0).unwrap();
+        let schedule = NetSchedule::preset(cname, 50.0)?;
         println!("\n=== Configuration {} (Fig 6) ===", cname.to_uppercase());
         let mut t = Table::new(["from epoch", "alpha (ms)", "bw (Gbps)"]);
         for p in schedule.phases() {
@@ -125,8 +126,8 @@ fn main() -> Result<()> {
             ));
         }
 
-        let acc = |t: &Trainer| t.metrics.best_accuracy().unwrap_or(f64::NAN) * 100.0;
-        let ms = |t: &Trainer| t.metrics.summary().mean_step_s * 1e3;
+        let acc = |r: &TrainReport| r.best_accuracy().unwrap_or(f64::NAN) * 100.0;
+        let ms = |r: &TrainReport| r.summary().mean_step_s * 1e3;
         summary.row([
             cname.to_uppercase(),
             "MOO-adaptive".into(),

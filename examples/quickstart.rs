@@ -3,53 +3,51 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! Uses the pure-rust host model so it runs in seconds with no artifacts.
+//! Uses the pure-rust host model so it runs in seconds with no artifacts,
+//! and the Session builder API (DESIGN.md §8) — misconfigurations are
+//! typed errors at `build()`, not panics mid-run.
 
-use flexcomm::artopk::{ArFlavor, SelectionPolicy};
-use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
+use anyhow::Result;
+use flexcomm::coordinator::session::Session;
+use flexcomm::coordinator::trainer::Strategy;
 use flexcomm::coordinator::worker::ComputeModel;
 use flexcomm::netsim::cost_model::LinkParams;
 use flexcomm::netsim::schedule::NetSchedule;
 use flexcomm::runtime::HostMlp;
 use flexcomm::util::table::Table;
 
-fn run(strategy: Strategy, cr: f64, label: &str) -> (String, f64, f64, f64) {
-    let cfg = TrainConfig {
-        n_workers: 8,
-        steps: 300,
-        steps_per_epoch: 30,
-        lr: 0.2,
-        momentum: 0.9,
-        strategy,
-        cr: CrControl::Static(cr),
+fn run(strategy: Strategy, cr: f64, label: &str) -> Result<(String, f64, f64, f64)> {
+    let report = Session::builder()
+        .workers(8)
+        .steps(300)
+        .steps_per_epoch(30)
+        .lr(0.2)
+        .momentum(0.9)
+        .strategy(strategy)
+        .static_cr(cr)
         // A constrained inter-node link: 4 ms latency, 2 Gbps.
-        schedule: NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 2.0)),
-        compute: ComputeModel::with_jitter(0.020, 0.05),
-        eval_every: 30,
-        seed: 7,
-        ..Default::default()
-    };
-    let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(7)));
-    t.run();
-    let s = t.metrics.summary();
-    (
+        .schedule(NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 2.0)))
+        .compute(ComputeModel::with_jitter(0.020, 0.05))
+        .eval_every(30)
+        .seed(7)
+        .source(Box::new(HostMlp::default_preset(7)))
+        .build()?
+        .run();
+    let s = report.summary();
+    Ok((
         label.to_string(),
         s.mean_step_s * 1e3,
-        t.metrics.best_accuracy().unwrap_or(f64::NAN) * 100.0,
-        t.clock.now(),
-    )
+        report.best_accuracy().unwrap_or(f64::NAN) * 100.0,
+        report.virtual_time_s,
+    ))
 }
 
-fn main() {
+fn main() -> Result<()> {
     println!("flexcomm quickstart — DenseSGD vs AR-Topk on a 4ms/2Gbps link\n");
     let rows = vec![
-        run(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, "DenseSGD (Ring-AR)"),
-        run(
-            Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
-            0.01,
-            "STAR-Topk CR 0.01 (ART-Ring)",
-        ),
-        run(Strategy::Flexible { policy: SelectionPolicy::Star }, 0.01, "Flexible CR 0.01"),
+        run(Strategy::parse("dense-ring")?, 1.0, "DenseSGD (Ring-AR)")?,
+        run(Strategy::parse("artopk-star")?, 0.01, "STAR-Topk CR 0.01 (ART-Ring)")?,
+        run(Strategy::parse("flexible")?, 0.01, "Flexible CR 0.01")?,
     ];
     let mut t = Table::new(["method", "t_step (ms)", "best acc (%)", "total time (s)"]);
     for (label, ms, acc, total) in &rows {
@@ -68,4 +66,5 @@ fn main() {
         rows[0].3 / rows[2].3,
         rows[1].3 / rows[2].3
     );
+    Ok(())
 }

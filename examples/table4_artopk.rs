@@ -11,7 +11,8 @@
 
 use anyhow::Result;
 use flexcomm::artopk::{ArFlavor, SelectionPolicy};
-use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
+use flexcomm::coordinator::session::{Session, TrainReport};
+use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig};
 use flexcomm::experiments::{
     diff_row, print_diff_table, print_kde, proxy_cfg, write_csv, GPU_COMPRESS_SPEEDUP,
     PAPER_COMPUTE_MS, PAPER_MODELS,
@@ -21,12 +22,14 @@ use flexcomm::util::cli::Args;
 
 const PROXY_PARAMS: f64 = 53_664.0;
 
-fn run(cfg: TrainConfig, seed: u64, skew: f64) -> Trainer {
+fn run(cfg: TrainConfig, seed: u64, skew: f64) -> TrainReport {
     let mut src = HostMlp::hard_preset(seed);
     src.skew = skew;
-    let mut t = Trainer::new(cfg, Box::new(src));
-    t.run();
-    t
+    Session::from_config(cfg)
+        .source(Box::new(src))
+        .build()
+        .expect("table4 config valid")
+        .run()
 }
 
 fn main() -> Result<()> {

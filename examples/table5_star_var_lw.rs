@@ -52,11 +52,11 @@ fn main() -> Result<()> {
                 flavor: ArFlavor::Ring,
             });
             let lw = mk(Strategy::AgCompress { kind: CompressorKind::LwTopk });
-            let ms = |t: &flexcomm::coordinator::trainer::Trainer| {
-                format!("{:.2}", t.metrics.summary().mean_step_s * 1e3)
+            let ms = |r: &flexcomm::coordinator::session::TrainReport| {
+                format!("{:.2}", r.summary().mean_step_s * 1e3)
             };
-            let acc = |t: &flexcomm::coordinator::trainer::Trainer| {
-                format!("{:.2}", t.metrics.best_accuracy().unwrap_or(f64::NAN) * 100.0)
+            let acc = |r: &flexcomm::coordinator::session::TrainReport| {
+                format!("{:.2}", r.best_accuracy().unwrap_or(f64::NAN) * 100.0)
             };
             tab.row([
                 model.to_string(),

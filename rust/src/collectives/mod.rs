@@ -84,6 +84,11 @@ pub enum CollectiveKind {
     ArTopkRing,
     ArTopkTree,
     PsStar,
+    /// A strategy outside the built-in registry (plugged in through
+    /// `SessionBuilder::comm_strategy`): the label is the metrics identity
+    /// it reports under. Custom kinds have no registry row — [`dense_op`]
+    /// returns `None` and the auto-selectors never consider them.
+    Custom(&'static str),
 }
 
 impl CollectiveKind {
@@ -97,6 +102,7 @@ impl CollectiveKind {
             CollectiveKind::ArTopkRing => "ART-Ring",
             CollectiveKind::ArTopkTree => "ART-Tree",
             CollectiveKind::PsStar => "PS",
+            CollectiveKind::Custom(label) => label,
         }
     }
 }
@@ -163,7 +169,7 @@ pub struct HierarchicalOp;
 /// [`ps_exchange`] with rank 0 as the star center.
 pub struct PsStarOp;
 /// Cost surface of the sparse [`allgather_sparse`] AG-Topk path (its data
-/// path is bespoke — `Trainer::ag_exchange` — so it is cost-only here).
+/// path is bespoke — the AG-compress strategy’s `ag_exchange` — so it is cost-only here).
 pub struct AllgatherTopkOp;
 /// Cost surface of AR-Topk with ring reduction (Eqn 4a; executed by
 /// [`crate::artopk::ArTopk`]).
@@ -312,18 +318,20 @@ pub fn registry() -> &'static [&'static dyn Collective] {
 }
 
 /// Executable dense op for `kind` (None for the compressed kinds, whose
-/// data paths live in `Trainer::ag_exchange` / [`crate::artopk::ArTopk`]).
+/// data paths live in the AG-compress strategy’s `ag_exchange` / [`crate::artopk::ArTopk`]).
 pub fn dense_op(kind: CollectiveKind) -> Option<&'static dyn DenseCollective> {
     dense_registry().iter().copied().find(|op| op.kind() == kind)
 }
 
-/// Cost/identity surface for `kind` (total over [`CollectiveKind`]).
+/// Cost/identity surface for `kind` — total over the BUILT-IN kinds.
+/// Panics on [`CollectiveKind::Custom`], which by definition has no
+/// registry row (callers gate on it; see `CommPlan::priced`).
 pub fn collective(kind: CollectiveKind) -> &'static dyn Collective {
     registry()
         .iter()
         .copied()
         .find(|op| op.kind() == kind)
-        .expect("every CollectiveKind is registered")
+        .expect("every built-in CollectiveKind is registered")
 }
 
 #[cfg(test)]

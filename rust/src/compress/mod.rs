@@ -59,7 +59,7 @@ impl SparseGrad {
 ///
 /// `Send` so per-worker compressor instances can run on the trainer's
 /// worker threads (each thread gets exclusive `&mut` access to its own
-/// instance — see `Trainer::ag_exchange` and DESIGN.md §7).
+/// instance — see the AG-compress strategy’s `ag_exchange` and DESIGN.md §7).
 pub trait Compressor: Send {
     fn name(&self) -> &'static str;
     /// `layout` supplies layer boundaries (used by LWTopk; others ignore it).

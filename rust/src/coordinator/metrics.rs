@@ -28,9 +28,34 @@ pub struct StepMetrics {
 }
 
 impl StepMetrics {
+    /// CSV column header shared by [`MetricsLog::to_csv`] and the
+    /// streaming `CsvSink` observer (no trailing newline).
+    pub const CSV_HEADER: &'static str =
+        "step,epoch,loss,t_compute,t_comp,t_sync,t_step,collective,cr,selected_rank,gain,alpha_ms,bw_gbps";
+
     /// Total step time (Eqn 3, `t_IO` folded into compute).
     pub fn t_step(&self) -> f64 {
         self.t_compute + self.t_comp + self.t_sync
+    }
+
+    /// One CSV row matching [`StepMetrics::CSV_HEADER`] (no newline).
+    pub fn csv_row(&self) -> String {
+        format!(
+            "{},{:.4},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.6},{},{:.4},{:.3},{:.3}",
+            self.step,
+            self.epoch,
+            self.loss,
+            self.t_compute,
+            self.t_comp,
+            self.t_sync,
+            self.t_step(),
+            self.collective.name(),
+            self.cr,
+            self.selected_rank.map(|r| r.to_string()).unwrap_or_default(),
+            self.gain,
+            self.alpha_ms,
+            self.bw_gbps,
+        )
     }
 }
 
@@ -123,26 +148,11 @@ impl MetricsLog {
     }
 
     pub fn to_csv(&self) -> String {
-        let mut out = String::from(
-            "step,epoch,loss,t_compute,t_comp,t_sync,t_step,collective,cr,selected_rank,gain,alpha_ms,bw_gbps\n",
-        );
+        let mut out = String::from(StepMetrics::CSV_HEADER);
+        out.push('\n');
         for m in &self.steps {
-            out.push_str(&format!(
-                "{},{:.4},{:.6},{:.6},{:.6},{:.6},{:.6},{},{:.6},{},{:.4},{:.3},{:.3}\n",
-                m.step,
-                m.epoch,
-                m.loss,
-                m.t_compute,
-                m.t_comp,
-                m.t_sync,
-                m.t_step(),
-                m.collective.name(),
-                m.cr,
-                m.selected_rank.map(|r| r.to_string()).unwrap_or_default(),
-                m.gain,
-                m.alpha_ms,
-                m.bw_gbps,
-            ));
+            out.push_str(&m.csv_row());
+            out.push('\n');
         }
         out
     }

@@ -1,15 +1,26 @@
-//! L3 coordinator: the synchronous data-parallel training loop, collective
-//! selection (Eqn 5), and the MOO-adaptive compression controller (§3-E).
+//! L3 coordinator: the synchronous data-parallel training loop, the
+//! Session API (builder-validated configs, pluggable communication
+//! strategies, typed observer stream — DESIGN.md §8), collective selection
+//! (Eqn 5), and the MOO-adaptive compression controller (§3-E).
 
 pub mod adaptive;
 pub mod checkpoint;
 pub mod metrics;
+pub mod observer;
 pub mod policy_switch;
 pub mod selector;
+pub mod session;
+pub mod strategy;
 pub mod trainer;
 pub mod worker;
 
 pub use adaptive::AdaptiveConfig;
 pub use metrics::{MetricsLog, StepMetrics};
+pub use observer::{
+    CrChange, CsvSink, EvalRecord, ProgressPrinter, StrategySwitch, SwitchDimension,
+    TrainObserver,
+};
+pub use session::{ConfigError, Session, SessionBuilder, TrainReport};
+pub use strategy::{CommPlan, CommStrategy, ExchangeCtx, ExchangeOutcome, StepCtx};
 pub use trainer::{Strategy, TrainConfig, Trainer};
 pub use worker::{ComputeModel, GradSource};

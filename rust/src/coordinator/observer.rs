@@ -1,0 +1,283 @@
+//! Typed training-event stream — the observer seam of the Session API
+//! (DESIGN.md §8).
+//!
+//! Consumers used to reach into the trainer's public fields
+//! (`trainer.metrics`, `trainer.cur_cr`, `trainer.policy_switcher`) to see
+//! what a run did; every new kind of instrumentation meant another public
+//! field. [`TrainObserver`] replaces those reaches with a push stream of
+//! typed events: per-step metrics, held-out evaluations, strategy switches
+//! (collective OR selection-policy) and adaptive-CR changes. Observers are
+//! registered on the [`SessionBuilder`](crate::coordinator::session::SessionBuilder)
+//! and owned by the trainer for the life of the run; the canonical
+//! [`MetricsLog`] recording always happens and comes back in the
+//! [`TrainReport`](crate::coordinator::session::TrainReport).
+//!
+//! Shipped observers: [`MetricsLog`] (recorder — any observer-shaped
+//! plumbing can embed one), [`CsvSink`] (streams rows to disk as they
+//! happen, so a killed run still leaves a trace) and [`ProgressPrinter`]
+//! (human-readable terminal lines).
+
+use crate::coordinator::metrics::{MetricsLog, StepMetrics};
+use anyhow::{Context, Result};
+use std::io::Write;
+
+/// One held-out evaluation record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EvalRecord {
+    pub epoch: f64,
+    pub loss: f64,
+    /// Top-1 accuracy in [0, 1].
+    pub accuracy: f64,
+}
+
+/// Which axis of the strategy switched (see [`StrategySwitch`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SwitchDimension {
+    /// The collective used for the exchange changed between recorded steps
+    /// (the paper's Eqn 5 flexible switching, or a dense auto-selector
+    /// crossing a crossover boundary).
+    Collective,
+    /// An AR-Topk auto strategy committed a STAR/VAR selection policy at
+    /// the end of a trial cycle (§5 future work).
+    SelectionPolicy,
+}
+
+impl SwitchDimension {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SwitchDimension::Collective => "collective",
+            SwitchDimension::SelectionPolicy => "selection-policy",
+        }
+    }
+}
+
+/// A strategy-level decision change. `from == to` is possible for
+/// [`SwitchDimension::SelectionPolicy`]: a trial cycle that re-commits the
+/// incumbent policy is still an observable decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StrategySwitch {
+    /// Recorded step at which the decision takes observable effect on the
+    /// stream. Decisions born on checkpointed exploration steps (their
+    /// timeline is rolled back) are delivered — and stamped — at the next
+    /// recorded step, or at end of run.
+    pub step: u64,
+    pub dimension: SwitchDimension,
+    pub from: &'static str,
+    pub to: &'static str,
+}
+
+/// An adaptive-CR controller decision (§3-E re-solve that moved the CR).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CrChange {
+    /// Step count AFTER the step that triggered the re-solve.
+    pub step: u64,
+    pub from: f64,
+    pub to: f64,
+}
+
+/// Typed event stream over a training run.
+///
+/// All methods default to no-ops so observers implement only what they
+/// need. Events fire for RECORDED steps only (the MOO controller's
+/// checkpointed exploration steps are internal) — except strategy-level
+/// switch DECISIONS, which persist even when made on an exploration step
+/// and are therefore queued and delivered at the next recorded step.
+/// `on_eval` fires for every held-out evaluation including the final one.
+pub trait TrainObserver: Send {
+    /// A training step completed and was recorded.
+    fn on_step(&mut self, _m: &StepMetrics) {}
+
+    /// A held-out evaluation ran.
+    fn on_eval(&mut self, _e: &EvalRecord) {}
+
+    /// The strategy switched collective or committed a selection policy.
+    fn on_strategy_switch(&mut self, _s: &StrategySwitch) {}
+
+    /// The adaptive controller moved the compression ratio.
+    fn on_cr_change(&mut self, _c: &CrChange) {}
+}
+
+/// The recorder: a [`MetricsLog`] is itself an observer, so custom
+/// instrumentation can embed one and get the full summary/CSV machinery.
+/// (The trainer always keeps its own canonical log — returned in the
+/// [`TrainReport`](crate::coordinator::session::TrainReport) — so
+/// registering a second recorder is only needed for bespoke plumbing.)
+impl TrainObserver for MetricsLog {
+    fn on_step(&mut self, m: &StepMetrics) {
+        self.record(m.clone());
+    }
+
+    fn on_eval(&mut self, e: &EvalRecord) {
+        self.record_eval(e.epoch, e.loss, e.accuracy);
+    }
+}
+
+/// Streams step rows to a CSV file as they are recorded (same schema as
+/// [`MetricsLog::to_csv`]), so an interrupted run still leaves data on
+/// disk. Creation fails fast (missing directory is created, an unwritable
+/// path errors at build time); later write failures disable the sink with
+/// one stderr warning instead of poisoning the run.
+pub struct CsvSink {
+    path: String,
+    out: std::io::BufWriter<std::fs::File>,
+    failed: bool,
+}
+
+impl CsvSink {
+    /// Open `path` (creating parent directories) and write the header.
+    pub fn create(path: &str) -> Result<CsvSink> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)
+                    .with_context(|| format!("creating directory for {path}"))?;
+            }
+        }
+        let file = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
+        let mut out = std::io::BufWriter::new(file);
+        writeln!(out, "{}", StepMetrics::CSV_HEADER)
+            .with_context(|| format!("writing header to {path}"))?;
+        Ok(CsvSink { path: path.to_string(), out, failed: false })
+    }
+
+    pub fn path(&self) -> &str {
+        &self.path
+    }
+
+    fn write_line(&mut self, line: &str) {
+        if self.failed {
+            return;
+        }
+        // Flush per row: the sink's whole point is that a killed run
+        // (SIGKILL, Ctrl-C — no unwinding, Drop never runs) still leaves
+        // its rows on disk. Steps are ms-scale; a row flush is noise.
+        let res = writeln!(self.out, "{line}").and_then(|()| self.out.flush());
+        if let Err(e) = res {
+            eprintln!("CsvSink: writing {} failed ({e}); sink disabled", self.path);
+            self.failed = true;
+        }
+    }
+}
+
+impl TrainObserver for CsvSink {
+    fn on_step(&mut self, m: &StepMetrics) {
+        self.write_line(&m.csv_row());
+    }
+}
+
+impl Drop for CsvSink {
+    fn drop(&mut self) {
+        let _ = self.out.flush();
+    }
+}
+
+/// Terminal progress lines: a step summary every `every` steps, plus every
+/// eval, strategy switch and CR change as they happen.
+pub struct ProgressPrinter {
+    every: u64,
+}
+
+impl ProgressPrinter {
+    /// Print a step line every `every` steps (clamped to >= 1).
+    pub fn every(every: u64) -> Self {
+        ProgressPrinter { every: every.max(1) }
+    }
+}
+
+impl TrainObserver for ProgressPrinter {
+    fn on_step(&mut self, m: &StepMetrics) {
+        if m.step % self.every == 0 {
+            println!(
+                "step {:>6}  epoch {:>6.2}  loss {:>9.4}  t_step {:>8.2} ms  [{} cr {}]",
+                m.step,
+                m.epoch,
+                m.loss,
+                m.t_step() * 1e3,
+                m.collective.name(),
+                m.cr,
+            );
+        }
+    }
+
+    fn on_eval(&mut self, e: &EvalRecord) {
+        println!(
+            "eval   epoch {:>6.2}  loss {:>9.4}  acc {:.2}%",
+            e.epoch,
+            e.loss,
+            e.accuracy * 100.0
+        );
+    }
+
+    fn on_strategy_switch(&mut self, s: &StrategySwitch) {
+        println!("switch step {:>6}  {}: {} -> {}", s.step, s.dimension.name(), s.from, s.to);
+    }
+
+    fn on_cr_change(&mut self, c: &CrChange) {
+        println!("cr     step {:>6}  {:.5} -> {:.5}", c.step, c.from, c.to);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CollectiveKind;
+
+    fn m(step: u64) -> StepMetrics {
+        StepMetrics {
+            step,
+            epoch: step as f64 / 10.0,
+            loss: 0.5,
+            t_compute: 0.01,
+            t_comp: 0.001,
+            t_sync: 0.02,
+            collective: CollectiveKind::ArTopkRing,
+            cr: 0.01,
+            selected_rank: Some(1),
+            gain: 0.9,
+            alpha_ms: 4.0,
+            bw_gbps: 20.0,
+        }
+    }
+
+    #[test]
+    fn metrics_log_records_as_observer() {
+        let mut log = MetricsLog::default();
+        let obs: &mut dyn TrainObserver = &mut log;
+        obs.on_step(&m(0));
+        obs.on_step(&m(1));
+        obs.on_eval(&EvalRecord { epoch: 0.2, loss: 0.4, accuracy: 0.8 });
+        assert_eq!(log.steps.len(), 2);
+        assert_eq!(log.final_accuracy(), Some(0.8));
+    }
+
+    #[test]
+    fn csv_sink_streams_rows() {
+        let path = std::env::temp_dir().join("flexcomm_csv_sink_test.csv");
+        let path = path.to_str().unwrap().to_string();
+        {
+            let mut sink = CsvSink::create(&path).unwrap();
+            sink.on_step(&m(0));
+            sink.on_step(&m(1));
+        } // drop flushes
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with(StepMetrics::CSV_HEADER));
+        assert_eq!(text.lines().count(), 3, "{text}");
+        assert!(text.contains("ART-Ring"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn csv_sink_errors_on_unwritable_path() {
+        // Parent "directory" is a regular file -> creation must error.
+        let blocker = std::env::temp_dir().join("flexcomm_csv_sink_blocker");
+        std::fs::write(&blocker, b"not a directory").unwrap();
+        let bad = blocker.join("x.csv");
+        assert!(CsvSink::create(bad.to_str().unwrap()).is_err());
+        let _ = std::fs::remove_file(&blocker);
+    }
+
+    #[test]
+    fn switch_dimension_names() {
+        assert_eq!(SwitchDimension::Collective.name(), "collective");
+        assert_eq!(SwitchDimension::SelectionPolicy.name(), "selection-policy");
+    }
+}

@@ -1,0 +1,559 @@
+//! The Session API: builder-validated construction of training runs
+//! (DESIGN.md §8).
+//!
+//! [`Session::builder`] is THE construction path for a runnable trainer:
+//! it validates the configuration into typed [`ConfigError`]s (what used
+//! to be scattered `assert!`s and silent misconfigurations), instantiates
+//! the configured [`CommStrategy`] from the strategy registry (or accepts
+//! a custom one), attaches
+//! [`TrainObserver`](crate::coordinator::observer::TrainObserver)s, and
+//! hands back a [`Session`] whose `run()` returns a [`TrainReport`].
+//! [`TrainConfig`] remains the serialized form —
+//! [`Session::from_config`] seeds a builder from one.
+//!
+//! ```
+//! use flexcomm::coordinator::session::Session;
+//! use flexcomm::coordinator::trainer::Strategy;
+//! use flexcomm::runtime::HostMlp;
+//!
+//! let report = Session::builder()
+//!     .workers(4)
+//!     .steps(5)
+//!     .strategy(Strategy::parse("artopk-star").unwrap())
+//!     .static_cr(0.05)
+//!     .seed(7)
+//!     .source(Box::new(HostMlp::default_preset(7)))
+//!     .build()
+//!     .unwrap()
+//!     .run();
+//! assert_eq!(report.metrics.steps.len(), 5);
+//! ```
+
+use crate::coordinator::adaptive::AdaptiveConfig;
+use crate::coordinator::metrics::{MetricsLog, Summary};
+use crate::coordinator::observer::TrainObserver;
+use crate::coordinator::strategy::{instantiate, CommStrategy};
+use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig, Trainer};
+use crate::coordinator::worker::{ComputeModel, GradSource};
+use crate::netsim::schedule::NetSchedule;
+use crate::util::pool::ThreadPool;
+use std::fmt;
+
+/// A configuration the builder refused — every variant is a misconfig
+/// that used to panic mid-construction or silently misbehave. Implements
+/// [`std::error::Error`], so `?` converts it into `anyhow::Result`
+/// contexts transparently.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigError {
+    /// `workers(0)`: a cluster needs at least one worker.
+    ZeroWorkers,
+    /// `steps_per_epoch(0)`: epochs would be undefined (division by zero
+    /// drives the network schedule).
+    ZeroStepsPerEpoch,
+    /// Static CR outside (0, 1].
+    CrOutOfRange(f64),
+    /// Adaptive CR ladder violating 0 < c_low <= c_high <= 1.
+    AdaptiveCrBounds { c_low: f64, c_high: f64 },
+    /// Two-level topology whose ranks-per-node does not divide the
+    /// cluster size (was an `assert!` in the old `Trainer::new`).
+    RaggedTopology { n_workers: usize, workers_per_node: usize },
+    /// Adaptive CR control with an uncompressed strategy: there is no
+    /// compression ratio to adapt.
+    AdaptiveNeedsCompression { strategy: String },
+    /// `build()` without a gradient source.
+    MissingSource,
+    /// The gradient source's `init_params()` length disagrees with its
+    /// `dim()` — a broken [`GradSource`] impl (was a debug-only assert;
+    /// in release it would index out of bounds or silently truncate
+    /// updates mid-run).
+    SourceDimMismatch { params_len: usize, dim: usize },
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::ZeroWorkers => write!(f, "n_workers must be >= 1"),
+            ConfigError::ZeroStepsPerEpoch => write!(f, "steps_per_epoch must be >= 1"),
+            ConfigError::CrOutOfRange(c) => {
+                write!(f, "compression ratio {c} outside (0, 1]")
+            }
+            ConfigError::AdaptiveCrBounds { c_low, c_high } => write!(
+                f,
+                "adaptive CR bounds must satisfy 0 < c_low <= c_high <= 1 (got [{c_low}, {c_high}])"
+            ),
+            ConfigError::RaggedTopology { n_workers, workers_per_node } => write!(
+                f,
+                "n_workers {n_workers} not divisible by the schedule's \
+                 workers_per_node {workers_per_node}"
+            ),
+            ConfigError::AdaptiveNeedsCompression { strategy } => write!(
+                f,
+                "adaptive CR control requires a compressed strategy ({strategy} is uncompressed)"
+            ),
+            ConfigError::MissingSource => {
+                write!(f, "no gradient source: call .source(..) before .build()")
+            }
+            ConfigError::SourceDimMismatch { params_len, dim } => write!(
+                f,
+                "gradient source is inconsistent: init_params() produced {params_len} \
+                 parameters but dim() reports {dim}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+/// Fluent, validating constructor for a [`Session`]. Defaults mirror
+/// `TrainConfig::default()`; every setter overrides one field, and
+/// [`SessionBuilder::build`] validates the whole configuration at once.
+#[derive(Default)]
+pub struct SessionBuilder {
+    cfg: TrainConfig,
+    source: Option<Box<dyn GradSource>>,
+    custom: Option<Box<dyn CommStrategy>>,
+    observers: Vec<Box<dyn TrainObserver>>,
+}
+
+impl SessionBuilder {
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.n_workers = n;
+        self
+    }
+
+    pub fn steps(mut self, steps: u64) -> Self {
+        self.cfg.steps = steps;
+        self
+    }
+
+    pub fn steps_per_epoch(mut self, spe: u64) -> Self {
+        self.cfg.steps_per_epoch = spe;
+        self
+    }
+
+    pub fn lr(mut self, lr: f32) -> Self {
+        self.cfg.lr = lr;
+        self
+    }
+
+    pub fn momentum(mut self, mu: f32) -> Self {
+        self.cfg.momentum = mu;
+        self
+    }
+
+    pub fn weight_decay(mut self, wd: f32) -> Self {
+        self.cfg.weight_decay = wd;
+        self
+    }
+
+    /// `(step, factor)` learning-rate decay events.
+    pub fn lr_decay(mut self, decay: Vec<(u64, f32)>) -> Self {
+        self.cfg.lr_decay = decay;
+        self
+    }
+
+    /// Pick a built-in strategy (the config surface; see
+    /// [`Strategy::parse`] for names). For a strategy of your own, use
+    /// [`SessionBuilder::comm_strategy`].
+    pub fn strategy(mut self, strategy: Strategy) -> Self {
+        self.cfg.strategy = strategy;
+        self
+    }
+
+    /// Plug in a custom [`CommStrategy`] object, bypassing the built-in
+    /// registry — the seam that makes a new strategy a new file instead
+    /// of trainer surgery. Takes precedence over
+    /// [`SessionBuilder::strategy`].
+    pub fn comm_strategy(mut self, strategy: Box<dyn CommStrategy>) -> Self {
+        self.custom = Some(strategy);
+        self
+    }
+
+    pub fn cr(mut self, cr: CrControl) -> Self {
+        self.cfg.cr = cr;
+        self
+    }
+
+    /// Fixed compression ratio in (0, 1].
+    pub fn static_cr(self, cr: f64) -> Self {
+        self.cr(CrControl::Static(cr))
+    }
+
+    /// MOO-adaptive compression ratio (§3-E).
+    pub fn adaptive_cr(self, cfg: AdaptiveConfig) -> Self {
+        self.cr(CrControl::Adaptive(cfg))
+    }
+
+    pub fn schedule(mut self, schedule: NetSchedule) -> Self {
+        self.cfg.schedule = schedule;
+        self
+    }
+
+    pub fn compute(mut self, compute: ComputeModel) -> Self {
+        self.cfg.compute = compute;
+        self
+    }
+
+    pub fn probe_noise(mut self, frac: f64) -> Self {
+        self.cfg.probe_noise = frac;
+        self
+    }
+
+    /// See [`TrainConfig::msg_scale`].
+    pub fn msg_scale(mut self, scale: f64) -> Self {
+        self.cfg.msg_scale = scale;
+        self
+    }
+
+    /// See [`TrainConfig::comp_scale`].
+    pub fn comp_scale(mut self, scale: f64) -> Self {
+        self.cfg.comp_scale = scale;
+        self
+    }
+
+    /// Evaluate every N steps (0 = only at the end).
+    pub fn eval_every(mut self, every: u64) -> Self {
+        self.cfg.eval_every = every;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Worker threads (0 = all cores; DESIGN.md §7).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    /// Register a typed-event observer (repeatable; events fire in
+    /// registration order).
+    pub fn observer(mut self, observer: Box<dyn TrainObserver>) -> Self {
+        self.observers.push(observer);
+        self
+    }
+
+    /// The model backend producing per-worker gradients (required).
+    pub fn source(mut self, source: Box<dyn GradSource>) -> Self {
+        self.source = Some(source);
+        self
+    }
+
+    /// Validate the full configuration and assemble the [`Session`].
+    /// Every rejection is a typed [`ConfigError`] (auto-converts into
+    /// `anyhow::Result` contexts via `?`).
+    pub fn build(self) -> Result<Session, ConfigError> {
+        let SessionBuilder { cfg, source, custom, observers } = self;
+        if cfg.n_workers == 0 {
+            return Err(ConfigError::ZeroWorkers);
+        }
+        if cfg.steps_per_epoch == 0 {
+            return Err(ConfigError::ZeroStepsPerEpoch);
+        }
+        match &cfg.cr {
+            CrControl::Static(c) => {
+                if !(*c > 0.0 && *c <= 1.0) {
+                    return Err(ConfigError::CrOutOfRange(*c));
+                }
+            }
+            CrControl::Adaptive(a) => {
+                if !(a.c_low > 0.0 && a.c_low <= a.c_high && a.c_high <= 1.0) {
+                    return Err(ConfigError::AdaptiveCrBounds {
+                        c_low: a.c_low,
+                        c_high: a.c_high,
+                    });
+                }
+            }
+        }
+        let wpn = cfg.schedule.workers_per_node();
+        if wpn > 0 && cfg.n_workers % wpn != 0 {
+            return Err(ConfigError::RaggedTopology {
+                n_workers: cfg.n_workers,
+                workers_per_node: wpn,
+            });
+        }
+        let pool = ThreadPool::auto(cfg.threads);
+        let strategy = match custom {
+            Some(s) => s,
+            None => instantiate(cfg.strategy, cfg.n_workers, cfg.seed, pool),
+        };
+        if matches!(cfg.cr, CrControl::Adaptive(_)) && !strategy.is_compressed() {
+            return Err(ConfigError::AdaptiveNeedsCompression {
+                strategy: strategy.name().to_string(),
+            });
+        }
+        let source = source.ok_or(ConfigError::MissingSource)?;
+        let trainer = Trainer::with_parts(cfg, source, strategy, observers, pool);
+        // init_params ran exactly once inside with_parts; check its output
+        // against the declared dimension here, where a broken GradSource
+        // impl becomes a typed error instead of a mid-run panic.
+        if trainer.params.len() != trainer.source.dim() {
+            return Err(ConfigError::SourceDimMismatch {
+                params_len: trainer.params.len(),
+                dim: trainer.source.dim(),
+            });
+        }
+        Ok(Session { trainer })
+    }
+}
+
+/// A validated, runnable training session.
+pub struct Session {
+    trainer: Trainer,
+}
+
+impl Session {
+    /// Start a fresh builder (defaults = `TrainConfig::default()`).
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Seed a builder from a serialized [`TrainConfig`] (config files,
+    /// experiment presets) — the same validation runs at `build()`.
+    pub fn from_config(cfg: TrainConfig) -> SessionBuilder {
+        SessionBuilder { cfg, ..SessionBuilder::default() }
+    }
+
+    /// Attach an observer AFTER validation — for observers with side
+    /// effects on creation (e.g. [`CsvSink`](crate::coordinator::observer::CsvSink)
+    /// truncates its target file), so a rejected config cannot clobber
+    /// anything. Events fire after all builder-registered observers.
+    pub fn observer(
+        mut self,
+        observer: Box<dyn TrainObserver>,
+    ) -> Self {
+        self.trainer.observers.push(observer);
+        self
+    }
+
+    /// Run the configured number of steps and return the report.
+    pub fn run(mut self) -> TrainReport {
+        self.trainer.run();
+        let Trainer {
+            cfg,
+            source,
+            params,
+            clock,
+            metrics,
+            explore_overhead_s,
+            cur_cr,
+            strategy,
+            ..
+        } = self.trainer;
+        TrainReport {
+            model: source.name(),
+            strategy: strategy.name().to_string(),
+            final_cr: if strategy.is_compressed() { cur_cr } else { 1.0 },
+            virtual_time_s: clock.now(),
+            explore_overhead_s,
+            metrics,
+            params,
+            steps: cfg.steps,
+        }
+    }
+}
+
+/// Everything a finished run produced — what consumers used to scrape off
+/// the trainer's public fields.
+pub struct TrainReport {
+    /// Per-step metrics + eval records of the whole run.
+    pub metrics: MetricsLog,
+    /// Final model parameters (identical on every simulated worker).
+    pub params: Vec<f32>,
+    /// Accumulated simulated cluster seconds (the virtual clock).
+    pub virtual_time_s: f64,
+    /// Simulated seconds spent in MOO candidate exploration (reported
+    /// separately from the clock).
+    pub explore_overhead_s: f64,
+    /// CR in effect at the end (1.0 for uncompressed strategies).
+    pub final_cr: f64,
+    /// Gradient-source descriptor.
+    pub model: String,
+    /// Strategy display name.
+    pub strategy: String,
+    /// Configured step count.
+    pub steps: u64,
+}
+
+impl TrainReport {
+    /// Aggregate timing/loss view over the whole run.
+    pub fn summary(&self) -> Summary {
+        self.metrics.summary()
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.metrics.final_accuracy()
+    }
+
+    pub fn best_accuracy(&self) -> Option<f64> {
+        self.metrics.best_accuracy()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model::LinkParams;
+    use crate::runtime::host_model::HostMlp;
+
+    fn base() -> SessionBuilder {
+        Session::builder()
+            .workers(4)
+            .steps(3)
+            .steps_per_epoch(10)
+            .seed(1)
+            .compute(ComputeModel::fixed(0.01))
+            .source(Box::new(HostMlp::default_preset(1)))
+    }
+
+    #[test]
+    fn valid_config_builds_and_runs() {
+        let report = base().static_cr(0.05).build().unwrap().run();
+        assert_eq!(report.metrics.steps.len(), 3);
+        assert_eq!(report.steps, 3);
+        assert!(report.virtual_time_s > 0.0);
+        // Final eval always recorded.
+        assert!(report.final_accuracy().is_some());
+    }
+
+    #[test]
+    fn zero_workers_is_a_typed_error() {
+        assert_eq!(base().workers(0).build().err(), Some(ConfigError::ZeroWorkers));
+    }
+
+    #[test]
+    fn zero_steps_per_epoch_is_a_typed_error() {
+        assert_eq!(
+            base().steps_per_epoch(0).build().err(),
+            Some(ConfigError::ZeroStepsPerEpoch)
+        );
+    }
+
+    #[test]
+    fn cr_outside_unit_interval_is_a_typed_error() {
+        for bad in [0.0, -0.1, 1.5, f64::NAN] {
+            match base().static_cr(bad).build().err() {
+                Some(ConfigError::CrOutOfRange(_)) => {}
+                other => panic!("cr {bad}: expected CrOutOfRange, got {other:?}"),
+            }
+        }
+        // Boundary: exactly 1.0 (dense nominal) is valid.
+        assert!(base().static_cr(1.0).build().is_ok());
+    }
+
+    #[test]
+    fn adaptive_bounds_validated() {
+        let bad = AdaptiveConfig { c_low: 0.2, c_high: 0.1, ..Default::default() };
+        assert_eq!(
+            base()
+                .strategy(Strategy::parse("flexible").unwrap())
+                .adaptive_cr(bad)
+                .build()
+                .err(),
+            Some(ConfigError::AdaptiveCrBounds { c_low: 0.2, c_high: 0.1 })
+        );
+    }
+
+    #[test]
+    fn ragged_topology_is_a_typed_error_not_a_panic() {
+        let sched = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0))
+            .with_topology(LinkParams::from_ms_gbps(0.01, 100.0), 4);
+        assert_eq!(
+            base().workers(6).schedule(sched).build().err(),
+            Some(ConfigError::RaggedTopology { n_workers: 6, workers_per_node: 4 })
+        );
+    }
+
+    #[test]
+    fn adaptive_with_dense_is_a_typed_error() {
+        let err = base()
+            .strategy(Strategy::parse("dense-ring").unwrap())
+            .adaptive_cr(AdaptiveConfig::default())
+            .build()
+            .err();
+        assert!(
+            matches!(err, Some(ConfigError::AdaptiveNeedsCompression { .. })),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn missing_source_is_a_typed_error() {
+        let err = Session::builder().workers(2).build().err();
+        assert_eq!(err, Some(ConfigError::MissingSource));
+    }
+
+    /// A GradSource whose init_params() disagrees with dim() — formerly a
+    /// debug-only assert that in release builds became an out-of-bounds
+    /// index (or silent truncation) mid-run.
+    struct BadDimSource {
+        layout: crate::tensor::Layout,
+    }
+
+    impl crate::coordinator::worker::GradSource for BadDimSource {
+        fn dim(&self) -> usize {
+            10
+        }
+        fn layout(&self) -> &crate::tensor::Layout {
+            &self.layout
+        }
+        fn init_params(&mut self) -> Vec<f32> {
+            vec![0.0; 7] // wrong: dim() says 10
+        }
+        fn grad(&self, _p: &[f32], _w: usize, _n: usize, _s: u64) -> (f64, Vec<f32>) {
+            (0.0, vec![0.0; 10])
+        }
+        fn eval(&mut self, _p: &[f32]) -> (f64, f64) {
+            (0.0, 0.0)
+        }
+        fn name(&self) -> String {
+            "bad-dim".into()
+        }
+    }
+
+    #[test]
+    fn inconsistent_source_is_a_typed_error() {
+        let err = Session::builder()
+            .workers(2)
+            .source(Box::new(BadDimSource { layout: crate::tensor::Layout::single(10) }))
+            .build()
+            .err();
+        assert_eq!(err, Some(ConfigError::SourceDimMismatch { params_len: 7, dim: 10 }));
+    }
+
+    #[test]
+    fn errors_display_actionably() {
+        let e = ConfigError::RaggedTopology { n_workers: 6, workers_per_node: 4 };
+        let msg = e.to_string();
+        assert!(msg.contains('6') && msg.contains('4'), "{msg}");
+        // And convert into the anyhow world via `?`.
+        fn through_anyhow() -> anyhow::Result<()> {
+            Err(ConfigError::ZeroWorkers)?;
+            Ok(())
+        }
+        assert!(through_anyhow().unwrap_err().to_string().contains("n_workers"));
+    }
+
+    #[test]
+    fn from_config_roundtrips_the_serialized_form() {
+        let cfg = TrainConfig {
+            n_workers: 4,
+            steps: 2,
+            compute: ComputeModel::fixed(0.01),
+            cr: CrControl::Static(0.05),
+            strategy: Strategy::parse("ag-topk").unwrap(),
+            seed: 3,
+            ..Default::default()
+        };
+        let report = Session::from_config(cfg)
+            .source(Box::new(HostMlp::default_preset(3)))
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.metrics.steps.len(), 2);
+        assert_eq!(report.strategy, "AG-compress");
+        assert!((report.final_cr - 0.05).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,631 @@
+//! Pluggable communication strategies — the strategy seam of the Session
+//! API (DESIGN.md §8).
+//!
+//! The paper's core claim is that the *best* communication method changes
+//! with network conditions, which means the trainer must treat strategies
+//! as interchangeable plug-ins. [`CommStrategy`] is that plug-in surface:
+//! `plan` decides (from the probed network view) which collective the step
+//! will use, `exchange` executes the compress-and-communicate phase over
+//! the true topology, and `observe` lets adaptive strategies react to the
+//! recorded step. The trainer drives exactly those three calls — it has no
+//! per-strategy `match` arms — so a new strategy (an AR-compatible
+//! compressor, a GraVAC-style controller, local SGD, ...) is a new impl
+//! handed to
+//! [`SessionBuilder::comm_strategy`](crate::coordinator::session::SessionBuilder::comm_strategy),
+//! not trainer surgery.
+//!
+//! The classic [`Strategy`] enum remains as the pure config/CLI surface:
+//! [`STRATEGY_TABLE`] maps names to enum values (the one table CLI help
+//! and parsing share) and [`instantiate`] maps enum values to the trait
+//! objects implemented here.
+
+use crate::artopk::{ArFlavor, ArTopk, SelectionPolicy};
+use crate::collectives::{
+    allgather_sparse, collective, dense_op, CollectiveKind, CommReport,
+};
+use crate::compress::{gain::gain, Compressor, CompressorKind, EfState};
+use crate::coordinator::metrics::StepMetrics;
+use crate::coordinator::observer::{StrategySwitch, SwitchDimension};
+use crate::coordinator::policy_switch::PolicySwitcher;
+use crate::coordinator::selector;
+use crate::coordinator::trainer::{DenseFlavor, Strategy};
+use crate::netsim::cost_model::Topology;
+use crate::tensor::Layout;
+use crate::util::pool::ThreadPool;
+use anyhow::{bail, Result};
+use std::time::Instant;
+
+/// What a strategy sees when planning a step: the probed (noisy) network
+/// view plus the scalars the Eqn 5 deciders need.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCtx {
+    pub step: u64,
+    pub n_workers: usize,
+    /// Effective message bytes (`4 · dim · msg_scale`).
+    pub model_bytes: f64,
+    /// Current compression ratio (1.0 nominal for dense strategies).
+    pub cr: f64,
+    /// The selector's view of the cluster: probed inter link, known intra.
+    pub probed_topo: Topology,
+}
+
+/// A planned step: which collective will run, and (when a cost model
+/// priced the decision) the predicted communication seconds at the probed
+/// link — logged so Fig 8-style decisions can be audited.
+#[derive(Debug, Clone, Copy)]
+pub struct CommPlan {
+    pub kind: CollectiveKind,
+    pub predicted_s: Option<f64>,
+}
+
+impl CommPlan {
+    /// Plan `kind` priced by the registry's closed-form cost at the probed
+    /// topology (custom kinds have no registry entry and stay unpriced).
+    pub fn priced(kind: CollectiveKind, ctx: &StepCtx) -> CommPlan {
+        let predicted_s = match kind {
+            CollectiveKind::Custom(_) => None,
+            k => {
+                let op = collective(k);
+                Some(op.predict(ctx.probed_topo, ctx.model_bytes, ctx.n_workers, ctx.cr))
+            }
+        };
+        CommPlan { kind, predicted_s }
+    }
+
+    /// Plan with no cost prediction attached.
+    pub fn unpriced(kind: CollectiveKind) -> CommPlan {
+        CommPlan { kind, predicted_s: None }
+    }
+}
+
+/// What a strategy gets to execute an exchange: this step's plan, every
+/// worker's raw gradient, the per-worker error-feedback state (owned by
+/// the engine so checkpoint/restore covers it), and the true
+/// (msg_scale-adjusted) topology the data actually moves over.
+pub struct ExchangeCtx<'a> {
+    pub plan: CommPlan,
+    pub grads: &'a [Vec<f32>],
+    pub ef: &'a mut [EfState],
+    /// Layer layout of the model (LWTopk and bucketing compressors).
+    pub layout: &'a Layout,
+    pub true_topo: Topology,
+    pub cr: f64,
+    pub step: u64,
+    /// The engine's worker pool; strategies run per-worker phases on it so
+    /// `--threads` applies uniformly (DESIGN.md §7).
+    pub pool: ThreadPool,
+}
+
+impl ExchangeCtx<'_> {
+    pub fn n_workers(&self) -> usize {
+        self.grads.len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.grads.first().map_or(0, Vec::len)
+    }
+}
+
+/// One executed exchange. `update` is the AVERAGED model update (identical
+/// on every worker of the simulated cluster); `t_comp` is the measured
+/// critical-path compression seconds (before `comp_scale`), and
+/// `collective` is the metrics identity of what ran (custom strategies use
+/// [`CollectiveKind::Custom`]).
+pub struct ExchangeOutcome {
+    pub update: Vec<f32>,
+    pub comm: CommReport,
+    pub t_comp: f64,
+    pub collective: CollectiveKind,
+    /// Rank that broadcast its indices (AR-Topk family only).
+    pub selected_rank: Option<usize>,
+    /// Compression gain (1.0 for exact dense exchanges).
+    pub gain: f64,
+}
+
+/// A compression-communication strategy as a trainer plug-in.
+///
+/// Contract: `plan` is called once per step with the probed network view;
+/// `exchange` executes that plan (the same `CommPlan` arrives in the
+/// [`ExchangeCtx`]); `observe` sees every completed step's metrics and may
+/// report an internal mode change for the observer stream. Determinism:
+/// with a static CR, `plan`/`exchange` must be pure functions of their
+/// inputs and the strategy's own state so runs replay bit-identically for
+/// any thread count (DESIGN.md §7).
+pub trait CommStrategy: Send {
+    /// Display name (reports, logs).
+    fn name(&self) -> &'static str;
+
+    /// Whether exchanges compress (CR semantics apply; adaptive-CR control
+    /// requires this).
+    fn is_compressed(&self) -> bool;
+
+    /// Decide the collective for this step from the probed network view.
+    fn plan(&self, ctx: &StepCtx) -> CommPlan;
+
+    /// Execute the planned exchange over the true topology.
+    fn exchange(&mut self, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome;
+
+    /// Post-step feedback: the recorded metrics of the step that just ran.
+    /// Return a [`StrategySwitch`] to surface an internal mode change
+    /// (e.g. a STAR/VAR commit) on the observer stream.
+    fn observe(&mut self, _m: &StepMetrics) -> Option<StrategySwitch> {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The built-in strategies (the paper's five families).
+// ---------------------------------------------------------------------------
+
+/// DenseSGD baseline: exact dense allreduce via the collective registry;
+/// auto flavors re-decide per step from the probed link/topology.
+pub struct DenseStrategy {
+    pub flavor: DenseFlavor,
+}
+
+impl CommStrategy for DenseStrategy {
+    fn name(&self) -> &'static str {
+        "DenseSGD"
+    }
+
+    fn is_compressed(&self) -> bool {
+        false
+    }
+
+    fn plan(&self, ctx: &StepCtx) -> CommPlan {
+        let kind = match self.flavor {
+            DenseFlavor::Ring => CollectiveKind::RingAllreduce,
+            DenseFlavor::Tree => CollectiveKind::TreeAllreduce,
+            DenseFlavor::HalvingDoubling => CollectiveKind::HalvingDoublingAllreduce,
+            DenseFlavor::Hierarchical => CollectiveKind::HierarchicalAllreduce,
+            DenseFlavor::Ps => CollectiveKind::PsStar,
+            DenseFlavor::Auto => {
+                selector::choose_dense(ctx.probed_topo.inter, ctx.model_bytes, ctx.n_workers)
+            }
+            DenseFlavor::TopoAuto => {
+                // The argmin already priced its pick — keep it instead of
+                // re-running predict through the registry.
+                let c =
+                    selector::choose_dense_topo(ctx.probed_topo, ctx.model_bytes, ctx.n_workers);
+                return CommPlan { kind: c.kind, predicted_s: Some(c.predicted_s) };
+            }
+        };
+        CommPlan::priced(kind, ctx)
+    }
+
+    fn exchange(&mut self, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome {
+        let kind = ctx.plan.kind;
+        let op = dense_op(kind).expect("dense kind registered");
+        let mut bufs = ctx.grads.to_vec();
+        let comm = op.run(&mut bufs, ctx.true_topo);
+        let mut update = bufs.into_iter().next().unwrap();
+        crate::tensor::scale(&mut update, 1.0 / ctx.n_workers() as f32);
+        ExchangeOutcome {
+            update,
+            comm,
+            t_comp: 0.0,
+            collective: kind,
+            selected_rank: None,
+            gain: 1.0,
+        }
+    }
+}
+
+/// Compress-then-Allgather (LW/MS-Topk path): per-worker error-feed +
+/// compress concurrently on the pool, then a sparse allgather.
+pub struct AgCompressStrategy {
+    compressors: Vec<Box<dyn Compressor>>,
+}
+
+impl AgCompressStrategy {
+    /// One compressor instance per worker, all from the same seed —
+    /// Random-k then draws the SAME shared index sequence on every worker
+    /// (the AR-compatible behaviour its module docs describe).
+    pub fn new(kind: CompressorKind, n_workers: usize, seed: u64) -> Self {
+        AgCompressStrategy {
+            compressors: (0..n_workers).map(|_| kind.build(seed)).collect(),
+        }
+    }
+}
+
+impl CommStrategy for AgCompressStrategy {
+    fn name(&self) -> &'static str {
+        "AG-compress"
+    }
+
+    fn is_compressed(&self) -> bool {
+        true
+    }
+
+    fn plan(&self, ctx: &StepCtx) -> CommPlan {
+        CommPlan::priced(CollectiveKind::AllgatherTopk, ctx)
+    }
+
+    fn exchange(&mut self, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome {
+        ag_exchange(&mut self.compressors, ctx)
+    }
+}
+
+/// AR-Topk with a fixed selection policy and AR flavour (§3-A/B).
+pub struct ArTopkStrategy {
+    op: ArTopk,
+}
+
+impl ArTopkStrategy {
+    pub fn new(policy: SelectionPolicy, flavor: ArFlavor, pool: ThreadPool) -> Self {
+        ArTopkStrategy { op: ArTopk::new(policy, flavor).with_pool(pool) }
+    }
+}
+
+impl CommStrategy for ArTopkStrategy {
+    fn name(&self) -> &'static str {
+        "AR-Topk"
+    }
+
+    fn is_compressed(&self) -> bool {
+        true
+    }
+
+    fn plan(&self, ctx: &StepCtx) -> CommPlan {
+        CommPlan::priced(ar_kind(self.op.flavor), ctx)
+    }
+
+    fn exchange(&mut self, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome {
+        art_exchange(&mut self.op, ctx)
+    }
+}
+
+/// The full flexible strategy (§3-D): Eqn 5 picks AG vs ART-Ring vs
+/// ART-Tree per step on the probed link; both data paths are owned here.
+pub struct FlexibleStrategy {
+    op: ArTopk,
+    compressors: Vec<Box<dyn Compressor>>,
+}
+
+impl FlexibleStrategy {
+    pub fn new(policy: SelectionPolicy, n_workers: usize, seed: u64, pool: ThreadPool) -> Self {
+        FlexibleStrategy {
+            op: ArTopk::new(policy, ArFlavor::Ring).with_pool(pool),
+            compressors: (0..n_workers).map(|_| CompressorKind::TopK.build(seed)).collect(),
+        }
+    }
+}
+
+impl CommStrategy for FlexibleStrategy {
+    fn name(&self) -> &'static str {
+        "Flexible"
+    }
+
+    fn is_compressed(&self) -> bool {
+        true
+    }
+
+    fn plan(&self, ctx: &StepCtx) -> CommPlan {
+        let c = selector::choose(ctx.probed_topo.inter, ctx.model_bytes, ctx.n_workers, ctx.cr);
+        CommPlan { kind: c.kind, predicted_s: Some(c.predicted_s) }
+    }
+
+    fn exchange(&mut self, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome {
+        match selector::ar_flavor(ctx.plan.kind) {
+            Some(f) => {
+                self.op.flavor = f;
+                art_exchange(&mut self.op, ctx)
+            }
+            None => ag_exchange(&mut self.compressors, ctx),
+        }
+    }
+}
+
+/// AR-Topk that auto-commits STAR/VAR from observed loss improvement (the
+/// paper's §5 future work) via the trial/commit [`PolicySwitcher`].
+pub struct ArTopkAutoStrategy {
+    op: ArTopk,
+    switcher: PolicySwitcher,
+}
+
+impl ArTopkAutoStrategy {
+    pub fn new(flavor: ArFlavor, pool: ThreadPool) -> Self {
+        ArTopkAutoStrategy {
+            op: ArTopk::new(SelectionPolicy::Star, flavor).with_pool(pool),
+            switcher: PolicySwitcher::new(10, 50),
+        }
+    }
+}
+
+impl CommStrategy for ArTopkAutoStrategy {
+    fn name(&self) -> &'static str {
+        "AR-Topk-auto"
+    }
+
+    fn is_compressed(&self) -> bool {
+        true
+    }
+
+    fn plan(&self, ctx: &StepCtx) -> CommPlan {
+        CommPlan::priced(ar_kind(self.op.flavor), ctx)
+    }
+
+    fn exchange(&mut self, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome {
+        self.op.policy = self.switcher.current();
+        art_exchange(&mut self.op, ctx)
+    }
+
+    fn observe(&mut self, m: &StepMetrics) -> Option<StrategySwitch> {
+        let cycles_before = self.switcher.cycles;
+        let prev = self.switcher.current();
+        self.switcher.observe(m.loss);
+        if self.switcher.cycles > cycles_before {
+            Some(StrategySwitch {
+                step: m.step,
+                dimension: SwitchDimension::SelectionPolicy,
+                from: prev.name(),
+                to: self.switcher.current().name(),
+            })
+        } else {
+            None
+        }
+    }
+}
+
+fn ar_kind(flavor: ArFlavor) -> CollectiveKind {
+    match flavor {
+        ArFlavor::Ring => CollectiveKind::ArTopkRing,
+        ArFlavor::Tree => CollectiveKind::ArTopkTree,
+    }
+}
+
+/// AG path shared by [`AgCompressStrategy`] and [`FlexibleStrategy`]:
+/// error-feed + compress every worker's gradient concurrently across the
+/// pool (each worker owns its `EfState` and compressor — no shared mutable
+/// state), then allgather. `t_comp` is the max of per-worker durations
+/// MEASURED INSIDE the concurrently-running tasks — the critical-path
+/// worker a synchronous cluster step waits for, independent of this host's
+/// core count while the pool is not oversubscribed (DESIGN.md §7).
+fn ag_exchange(
+    compressors: &mut [Box<dyn Compressor>],
+    ctx: &mut ExchangeCtx<'_>,
+) -> ExchangeOutcome {
+    let n = ctx.n_workers();
+    let dim = ctx.dim();
+    let cr = ctx.cr;
+    let grads = ctx.grads;
+    let layout = ctx.layout;
+    let pool = ctx.pool;
+    let mut lanes: Vec<(&mut EfState, &mut Box<dyn Compressor>)> =
+        ctx.ef.iter_mut().zip(compressors.iter_mut()).collect();
+    let results = pool.map_mut(&mut lanes, |w, lane| {
+        let (ef, comp) = lane;
+        let t0 = Instant::now();
+        let g_e = ef.error_fed(&grads[w]);
+        let sparse = comp.compress(&g_e, cr, layout);
+        let mut dt = t0.elapsed().as_secs_f64();
+        // Gain bookkeeping is metrics-only — keep its O(G) pass OFF the
+        // billed compression path (a cluster wouldn't run it).
+        let e_sq = crate::tensor::sq_norm(&g_e);
+        let g = gain(sparse.sq_norm(), e_sq);
+        let t1 = Instant::now();
+        ef.update(g_e, &sparse);
+        dt += t1.elapsed().as_secs_f64();
+        (sparse, g, dt)
+    });
+    drop(lanes);
+    let mut parts = Vec::with_capacity(n);
+    let mut gain_acc = 0.0f64;
+    let mut t_comp = 0.0f64;
+    for (sparse, g, dt) in results {
+        gain_acc += g;
+        t_comp = t_comp.max(dt);
+        parts.push(sparse);
+    }
+    let (mut update, comm) = allgather_sparse(&parts, dim, ctx.true_topo.inter);
+    crate::tensor::scale(&mut update, 1.0 / n as f32);
+    ExchangeOutcome {
+        update,
+        comm,
+        t_comp,
+        collective: CollectiveKind::AllgatherTopk,
+        selected_rank: None,
+        gain: gain_acc / n as f64,
+    }
+}
+
+/// AR-Topk path (Alg 1) shared by the fixed, flexible and auto strategies.
+fn art_exchange(op: &mut ArTopk, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome {
+    let n = ctx.n_workers();
+    let kind = ar_kind(op.flavor);
+    let (grads, cr, step, link) = (ctx.grads, ctx.cr, ctx.step, ctx.true_topo.inter);
+    let res = op.exchange(grads, ctx.ef, cr, step, link);
+    // Critical-path compression time (parallel workers): see DESIGN.md §7.
+    let t_comp = res.comp_wall_s;
+    let mut update = res.update.to_dense();
+    crate::tensor::scale(&mut update, 1.0 / n as f32);
+    let g = res.gain_terms.iter().map(|&(c, e)| gain(c, e)).sum::<f64>() / n as f64;
+    ExchangeOutcome {
+        update,
+        comm: res.comm,
+        t_comp,
+        collective: kind,
+        selected_rank: Some(res.selected),
+        gain: g,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The name table + registry mapping (the config/CLI surface).
+// ---------------------------------------------------------------------------
+
+/// The one strategy-name table: CLI parsing, config files and `--help`
+/// text all read from here, so a new built-in strategy is one new row.
+pub const STRATEGY_TABLE: &[(&str, Strategy)] = &[
+    ("dense-ring", Strategy::DenseSgd { flavor: DenseFlavor::Ring }),
+    ("dense-tree", Strategy::DenseSgd { flavor: DenseFlavor::Tree }),
+    ("dense-hd", Strategy::DenseSgd { flavor: DenseFlavor::HalvingDoubling }),
+    ("dense-hier", Strategy::DenseSgd { flavor: DenseFlavor::Hierarchical }),
+    ("dense-ps", Strategy::DenseSgd { flavor: DenseFlavor::Ps }),
+    ("dense", Strategy::DenseSgd { flavor: DenseFlavor::Auto }),
+    ("dense-auto", Strategy::DenseSgd { flavor: DenseFlavor::Auto }),
+    ("dense-topo", Strategy::DenseSgd { flavor: DenseFlavor::TopoAuto }),
+    ("ag-topk", Strategy::AgCompress { kind: CompressorKind::TopK }),
+    ("ag-lwtopk", Strategy::AgCompress { kind: CompressorKind::LwTopk }),
+    ("ag-mstopk", Strategy::AgCompress { kind: CompressorKind::MsTopk }),
+    ("ag-randomk", Strategy::AgCompress { kind: CompressorKind::RandomK }),
+    (
+        "artopk-star",
+        Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+    ),
+    (
+        "artopk-star-tree",
+        Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Tree },
+    ),
+    (
+        "artopk-var",
+        Strategy::ArTopkFixed { policy: SelectionPolicy::Var, flavor: ArFlavor::Ring },
+    ),
+    ("artopk-auto", Strategy::ArTopkAuto { flavor: ArFlavor::Ring }),
+    ("flexible", Strategy::Flexible { policy: SelectionPolicy::Star }),
+    ("flexible-var", Strategy::Flexible { policy: SelectionPolicy::Var }),
+];
+
+impl Strategy {
+    /// Parse a strategy name from [`STRATEGY_TABLE`]; the error lists
+    /// every valid name.
+    pub fn parse(s: &str) -> Result<Strategy> {
+        match STRATEGY_TABLE.iter().find(|(name, _)| *name == s) {
+            Some(&(_, strategy)) => Ok(strategy),
+            None => bail!(
+                "unknown strategy `{s}` (valid: {})",
+                Strategy::names().collect::<Vec<_>>().join(", ")
+            ),
+        }
+    }
+
+    /// Every valid strategy name, in table order (CLI help text).
+    pub fn names() -> impl Iterator<Item = &'static str> {
+        STRATEGY_TABLE.iter().map(|(name, _)| *name)
+    }
+}
+
+/// Map a config-surface [`Strategy`] to its executable [`CommStrategy`]
+/// object (the strategy registry's constructor column). Custom strategies
+/// skip this entirely via
+/// [`SessionBuilder::comm_strategy`](crate::coordinator::session::SessionBuilder::comm_strategy).
+pub fn instantiate(
+    strategy: Strategy,
+    n_workers: usize,
+    seed: u64,
+    pool: ThreadPool,
+) -> Box<dyn CommStrategy> {
+    match strategy {
+        Strategy::DenseSgd { flavor } => Box::new(DenseStrategy { flavor }),
+        Strategy::AgCompress { kind } => Box::new(AgCompressStrategy::new(kind, n_workers, seed)),
+        Strategy::ArTopkFixed { policy, flavor } => {
+            Box::new(ArTopkStrategy::new(policy, flavor, pool))
+        }
+        Strategy::Flexible { policy } => {
+            Box::new(FlexibleStrategy::new(policy, n_workers, seed, pool))
+        }
+        Strategy::ArTopkAuto { flavor } => Box::new(ArTopkAutoStrategy::new(flavor, pool)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::cost_model::LinkParams;
+
+    fn ctx(cr: f64) -> StepCtx {
+        StepCtx {
+            step: 0,
+            n_workers: 8,
+            model_bytes: 4e8,
+            cr,
+            probed_topo: Topology::flat(LinkParams::from_ms_gbps(4.0, 20.0)),
+        }
+    }
+
+    #[test]
+    fn table_parses_every_name_and_rejects_unknown() {
+        for (name, strategy) in STRATEGY_TABLE {
+            assert_eq!(Strategy::parse(name).unwrap(), *strategy, "{name}");
+        }
+        let err = Strategy::parse("nope").unwrap_err().to_string();
+        assert!(err.contains("dense-ring") && err.contains("flexible-var"), "{err}");
+        // The aliases stay equivalent.
+        assert_eq!(Strategy::parse("dense").unwrap(), Strategy::parse("dense-auto").unwrap());
+    }
+
+    #[test]
+    fn instantiate_covers_the_table() {
+        let pool = ThreadPool::serial();
+        for (name, strategy) in STRATEGY_TABLE {
+            let obj = instantiate(*strategy, 4, 0, pool);
+            assert_eq!(
+                obj.is_compressed(),
+                strategy.is_compressed(),
+                "{name}: trait/enum compression flag must agree"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_plans_resolve_flavors_and_price() {
+        let s = DenseStrategy { flavor: DenseFlavor::Ring };
+        let p = s.plan(&ctx(1.0));
+        assert_eq!(p.kind, CollectiveKind::RingAllreduce);
+        assert!(p.predicted_s.unwrap() > 0.0);
+        // Auto on a flat latency-bearing link still picks a dense kind.
+        let s = DenseStrategy { flavor: DenseFlavor::TopoAuto };
+        let p = s.plan(&ctx(1.0));
+        assert!(dense_op(p.kind).is_some(), "{:?}", p.kind);
+    }
+
+    #[test]
+    fn flexible_plan_matches_selector() {
+        let s = FlexibleStrategy::new(SelectionPolicy::Star, 8, 0, ThreadPool::serial());
+        for cr in [0.1, 0.001] {
+            let c = ctx(cr);
+            let p = s.plan(&c);
+            let want = selector::choose(c.probed_topo.inter, c.model_bytes, c.n_workers, cr);
+            assert_eq!(p.kind, want.kind);
+            assert_eq!(p.predicted_s, Some(want.predicted_s));
+        }
+    }
+
+    #[test]
+    fn auto_strategy_reports_policy_commits() {
+        let mut s = ArTopkAutoStrategy::new(ArFlavor::Ring, ThreadPool::serial());
+        let mut m = StepMetrics {
+            step: 0,
+            epoch: 0.0,
+            loss: 1.0,
+            t_compute: 0.0,
+            t_comp: 0.0,
+            t_sync: 0.0,
+            collective: CollectiveKind::ArTopkRing,
+            cr: 0.05,
+            selected_rank: None,
+            gain: 0.9,
+            alpha_ms: 4.0,
+            bw_gbps: 20.0,
+        };
+        let mut events = Vec::new();
+        // Two 10-step trials -> one commit event at step 19.
+        for step in 0..20u64 {
+            m.step = step;
+            m.loss = 1.0 - 0.01 * step as f64;
+            if let Some(ev) = s.observe(&m) {
+                events.push(ev);
+            }
+        }
+        assert_eq!(events.len(), 1, "{events:?}");
+        assert_eq!(events[0].dimension, SwitchDimension::SelectionPolicy);
+        assert_eq!(events[0].step, 19);
+    }
+
+    #[test]
+    fn custom_plan_is_unpriced() {
+        let p = CommPlan::priced(CollectiveKind::Custom("my-op"), &ctx(0.5));
+        assert!(p.predicted_s.is_none());
+        assert_eq!(p.kind.name(), "my-op");
+    }
+}

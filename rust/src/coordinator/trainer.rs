@@ -2,26 +2,35 @@
 //! compression-communication (the paper's full system).
 //!
 //! Per step: every worker computes a gradient (PJRT artifact or host
-//! model), the chosen strategy compresses + exchanges it (real data
-//! movement, simulated α-β time), and the shared parameters take a
-//! momentum-SGD step. The [`super::adaptive`] controller may retune the CR
-//! (MOO/NSGA-II) and the collective (Eqn 5) as the probed network drifts.
+//! model), the configured [`CommStrategy`] plans and executes the exchange
+//! (real data movement, simulated α-β time), and the shared parameters
+//! take a momentum-SGD step. The [`super::adaptive`] controller may retune
+//! the CR (MOO/NSGA-II) as the probed network drifts; every recorded step
+//! streams through the registered
+//! [`TrainObserver`](crate::coordinator::observer::TrainObserver)s.
+//!
+//! Construction goes through
+//! [`Session::builder`](crate::coordinator::session::Session::builder) —
+//! the builder validates the configuration (typed errors, not panics) and
+//! assembles the trainer; [`TrainConfig`] remains the serialized form.
 
-use crate::artopk::{ArFlavor, ArTopk, SelectionPolicy};
-use crate::collectives::{allgather_sparse, dense_op, CollectiveKind, CommReport};
-use crate::compress::{gain::gain, Compressor, CompressorKind, EfState, GainTracker};
+use crate::artopk::{ArFlavor, SelectionPolicy};
+use crate::collectives::CollectiveKind;
+use crate::compress::{CompressorKind, EfState, GainTracker};
 use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveState};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::{MetricsLog, StepMetrics};
-use crate::coordinator::selector;
+use crate::coordinator::observer::{
+    CrChange, EvalRecord, StrategySwitch, SwitchDimension, TrainObserver,
+};
+use crate::coordinator::strategy::{CommStrategy, ExchangeCtx, StepCtx};
 use crate::coordinator::worker::{ComputeModel, GradSource};
-use crate::netsim::cost_model::Topology;
+use crate::netsim::cost_model::{LinkParams, Topology};
 use crate::netsim::probe::Probe;
 use crate::netsim::schedule::NetSchedule;
 use crate::netsim::VirtualClock;
 use crate::util::pool::ThreadPool;
 use crate::util::rng::Rng;
-use std::time::Instant;
 
 /// Dense allreduce flavour for the DenseSGD baseline.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,11 +49,17 @@ pub enum DenseFlavor {
     Auto,
     /// Pick the cheapest of {ring, tree, HD, hierarchical} per step from
     /// the probed link and the schedule's topology
-    /// ([`selector::choose_dense_topo`]).
+    /// ([`selector::choose_dense_topo`](crate::coordinator::selector::choose_dense_topo)).
     TopoAuto,
 }
 
-/// Compression-communication strategy.
+/// Compression-communication strategy — the pure config/CLI surface.
+///
+/// Parse names via [`Strategy::parse`] (one shared table,
+/// [`STRATEGY_TABLE`](crate::coordinator::strategy::STRATEGY_TABLE));
+/// behaviour lives behind the [`CommStrategy`] objects that
+/// [`instantiate`](crate::coordinator::strategy::instantiate) builds from
+/// these values.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Strategy {
     /// No compression; dense allreduce (the paper's DenseSGD baseline).
@@ -75,7 +90,11 @@ pub enum CrControl {
     Adaptive(AdaptiveConfig),
 }
 
-/// Full training configuration.
+/// Full training configuration — the SERIALIZED form (config files,
+/// experiment presets). All construction of a runnable trainer goes
+/// through [`Session::builder`](crate::coordinator::session::Session::builder)
+/// / [`Session::from_config`](crate::coordinator::session::Session::from_config),
+/// which validate these fields into typed errors instead of panics.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
     pub n_workers: usize,
@@ -142,84 +161,80 @@ impl Default for TrainConfig {
     }
 }
 
-/// The coordinator-side trainer.
+/// The coordinator-side trainer (engine). State that checkpoints must
+/// cover (params, momentum, error-feedback residuals) lives here; the
+/// strategy object owns only its own operator state. Fields are
+/// crate-internal — external consumers read results through the
+/// [`TrainReport`](crate::coordinator::session::TrainReport) and the
+/// observer stream, or through the read accessors below.
 pub struct Trainer {
-    pub cfg: TrainConfig,
-    source: Box<dyn GradSource>,
-    pub params: Vec<f32>,
-    momentum_buf: Vec<f32>,
-    ef: Vec<EfState>,
-    /// One compressor per worker (same seed — Random-k then draws the
-    /// SAME indices on every worker each step, the AR-compatible shared
-    /// sequence its module docs describe), so the AG path compresses all
-    /// workers concurrently without sharing mutable state.
-    compressors: Vec<Box<dyn Compressor>>,
-    artopk_op: ArTopk,
+    pub(crate) cfg: TrainConfig,
+    pub(crate) source: Box<dyn GradSource>,
+    pub(crate) params: Vec<f32>,
+    pub(crate) momentum_buf: Vec<f32>,
+    /// Per-worker error-feedback residuals (Eqn 2) — engine-owned so
+    /// checkpoint/restore covers them for every strategy.
+    pub(crate) ef: Vec<EfState>,
+    /// The pluggable communication strategy (DESIGN.md §8).
+    pub(crate) strategy: Box<dyn CommStrategy>,
     /// Execution engine for the per-worker hot path (DESIGN.md §7).
-    pool: ThreadPool,
-    probe: Probe,
-    pub clock: VirtualClock,
-    pub metrics: MetricsLog,
-    rng: Rng,
-    step: u64,
-    pub cur_cr: f64,
-    pub gain_tracker: GainTracker,
-    adaptive: Option<AdaptiveState>,
-    lr_cur: f32,
+    pub(crate) pool: ThreadPool,
+    pub(crate) probe: Probe,
+    pub(crate) clock: VirtualClock,
+    pub(crate) metrics: MetricsLog,
+    pub(crate) observers: Vec<Box<dyn TrainObserver>>,
+    pub(crate) rng: Rng,
+    pub(crate) step: u64,
+    pub(crate) cur_cr: f64,
+    pub(crate) gain_tracker: GainTracker,
+    pub(crate) adaptive: Option<AdaptiveState>,
+    pub(crate) lr_cur: f32,
     /// Simulated seconds spent in candidate exploration (kept out of the
     /// restored clock, reported separately).
-    pub explore_overhead_s: f64,
-    /// STAR/VAR auto-switcher (ArTopkAuto strategy only).
-    pub policy_switcher: Option<crate::coordinator::policy_switch::PolicySwitcher>,
+    pub(crate) explore_overhead_s: f64,
+    /// Collective used by the previous RECORDED step (switch detection
+    /// for the observer stream).
+    last_collective: Option<CollectiveKind>,
+    /// Strategy-level switch decisions not yet delivered to observers.
+    /// A commit can land on an UNRECORDED exploration step (ArTopkAuto +
+    /// adaptive CR: the switcher advances there too, and the decision
+    /// persists past the restore) — it is queued and delivered at the
+    /// next recorded step instead of being dropped.
+    pending_switches: Vec<StrategySwitch>,
 }
 
 impl Trainer {
-    pub fn new(cfg: TrainConfig, mut source: Box<dyn GradSource>) -> Self {
+    /// Assemble a trainer from pre-validated parts (the builder's job —
+    /// `SessionBuilder::build` is the only construction path that
+    /// validates; this constructor trusts its inputs).
+    pub(crate) fn with_parts(
+        cfg: TrainConfig,
+        mut source: Box<dyn GradSource>,
+        strategy: Box<dyn CommStrategy>,
+        observers: Vec<Box<dyn TrainObserver>>,
+        pool: ThreadPool,
+    ) -> Self {
         let params = source.init_params();
+        // params.len() == dim is enforced by SessionBuilder::build (a
+        // typed SourceDimMismatch error) right after this runs.
         let dim = source.dim();
-        assert_eq!(params.len(), dim);
         let n = cfg.n_workers;
-        assert!(
-            n % cfg.schedule.workers_per_node() == 0,
-            "n_workers {n} not divisible by the schedule's workers_per_node {}",
-            cfg.schedule.workers_per_node()
-        );
         let (cur_cr, adaptive, gain_threshold) = match &cfg.cr {
             CrControl::Static(c) => (*c, None, 0.1),
             CrControl::Adaptive(a) => {
                 (a.c_high, Some(AdaptiveState::new(a.clone())), a.gain_threshold)
             }
         };
-        let compressors: Vec<Box<dyn Compressor>> = (0..n)
-            .map(|_| match cfg.strategy {
-                Strategy::AgCompress { kind } => kind.build(cfg.seed),
-                _ => CompressorKind::TopK.build(cfg.seed),
-            })
-            .collect();
-        let pool = ThreadPool::auto(cfg.threads);
-        let (policy, flavor) = match cfg.strategy {
-            Strategy::ArTopkFixed { policy, flavor } => (policy, flavor),
-            Strategy::Flexible { policy } => (policy, ArFlavor::Ring),
-            Strategy::ArTopkAuto { flavor } => (SelectionPolicy::Star, flavor),
-            _ => (SelectionPolicy::Star, ArFlavor::Ring),
-        };
         let probe = Probe::new(cfg.schedule.clone(), cfg.probe_noise, cfg.seed ^ 0xBEEF);
-        let policy_switcher = match cfg.strategy {
-            Strategy::ArTopkAuto { .. } => Some(
-                crate::coordinator::policy_switch::PolicySwitcher::new(10, 50),
-            ),
-            _ => None,
-        };
         Trainer {
-            policy_switcher,
             momentum_buf: vec![0.0; dim],
             ef: (0..n).map(|_| EfState::new(dim)).collect(),
-            compressors,
-            artopk_op: ArTopk::new(policy, flavor).with_pool(pool),
+            strategy,
             pool,
             probe,
             clock: VirtualClock::new(),
             metrics: MetricsLog::default(),
+            observers,
             rng: Rng::new(cfg.seed ^ 0x7EA1),
             step: 0,
             cur_cr,
@@ -227,10 +242,50 @@ impl Trainer {
             adaptive,
             lr_cur: cfg.lr,
             explore_overhead_s: 0.0,
+            last_collective: None,
+            pending_switches: Vec::new(),
             params,
             cfg,
             source,
         }
+    }
+
+    /// Test-only convenience: registry strategy, no observers. All real
+    /// construction goes through the validating
+    /// [`Session::builder`](crate::coordinator::session::Session::builder).
+    #[cfg(test)]
+    pub(crate) fn new(cfg: TrainConfig, source: Box<dyn GradSource>) -> Self {
+        let pool = ThreadPool::auto(cfg.threads);
+        let strategy =
+            crate::coordinator::strategy::instantiate(cfg.strategy, cfg.n_workers, cfg.seed, pool);
+        Trainer::with_parts(cfg, source, strategy, Vec::new(), pool)
+    }
+
+    // -- read accessors (the demoted public fields) -------------------------
+
+    pub fn cfg(&self) -> &TrainConfig {
+        &self.cfg
+    }
+
+    pub fn metrics(&self) -> &MetricsLog {
+        &self.metrics
+    }
+
+    pub fn params(&self) -> &[f32] {
+        &self.params
+    }
+
+    pub fn cur_cr(&self) -> f64 {
+        self.cur_cr
+    }
+
+    /// Accumulated simulated cluster seconds.
+    pub fn virtual_time_s(&self) -> f64 {
+        self.clock.now()
+    }
+
+    pub fn explore_overhead_s(&self) -> f64 {
+        self.explore_overhead_s
     }
 
     pub fn step_count(&self) -> u64 {
@@ -263,9 +318,18 @@ impl Trainer {
         while self.step < self.cfg.steps {
             self.run_one_scheduled_step();
         }
-        // Final eval.
-        let (loss, acc) = self.source.eval(&self.params);
-        self.metrics.record_eval(self.epoch(), loss, acc);
+        // Strategy decisions still queued from trailing exploration steps
+        // must reach the stream before the run ends.
+        self.flush_pending_switches(self.step);
+        // Final eval — unless the last step was already a periodic one
+        // (steps divisible by eval_every), which would evaluate the same
+        // parameters twice and double every on_eval event.
+        let last_step_evaluated = self.cfg.eval_every > 0
+            && self.cfg.steps > 0
+            && self.cfg.steps % self.cfg.eval_every == 0;
+        if !last_step_evaluated {
+            self.eval_and_record();
+        }
     }
 
     /// One public step incl. probe-driven adaptation + periodic eval.
@@ -274,22 +338,39 @@ impl Trainer {
         let (obs, net_changed) = self.probe.measure_and_detect(epoch);
         let m = self.step_once(true, obs.link());
         let gain_fired = self.gain_tracker.record(m.gain);
-        if self.adaptive.is_some() && self.cfg.strategy.is_compressed() {
+        if self.adaptive.is_some() && self.strategy.is_compressed() {
+            let before = self.cur_cr;
             self.maybe_adapt(net_changed, gain_fired, obs.link());
+            if self.cur_cr != before {
+                let ev = CrChange { step: self.step, from: before, to: self.cur_cr };
+                for o in self.observers.iter_mut() {
+                    o.on_cr_change(&ev);
+                }
+            }
         }
         if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0 {
-            let (loss, acc) = self.source.eval(&self.params);
-            self.metrics.record_eval(self.epoch(), loss, acc);
+            self.eval_and_record();
+        }
+    }
+
+    fn eval_and_record(&mut self) {
+        let (loss, acc) = self.source.eval(&self.params);
+        let epoch = self.epoch();
+        self.metrics.record_eval(epoch, loss, acc);
+        let ev = EvalRecord { epoch, loss, accuracy: acc };
+        for o in self.observers.iter_mut() {
+            o.on_eval(&ev);
         }
     }
 
     /// Execute exactly one training step at the current CR/strategy.
-    /// `record` controls whether it lands in the main metrics log.
+    /// `record` controls whether it lands in the main metrics log and the
+    /// observer stream (the MOO controller's exploration steps do not).
     /// Returns the step's metrics either way.
-    pub fn step_once(
+    pub(crate) fn step_once(
         &mut self,
         record: bool,
-        probed: crate::netsim::cost_model::LinkParams,
+        probed: LinkParams,
     ) -> StepMetrics {
         let n = self.cfg.n_workers;
         let epoch = self.epoch();
@@ -319,11 +400,26 @@ impl Trainer {
         }
         let loss = losses.iter().sum::<f64>() / n as f64;
 
-        // Exchange. Measured compression time is rescaled by comp_scale
-        // (see TrainConfig::comp_scale); honest at comp_scale = 1.
-        let (update, comm, t_comp, collective, selected, step_gain) =
-            self.exchange(&grads, true_topo, probed_topo);
-        let t_comp = t_comp * self.cfg.comp_scale;
+        // Plan + exchange: the strategy seam. Measured compression time is
+        // rescaled by comp_scale (see TrainConfig::comp_scale).
+        let plan = self.strategy.plan(&StepCtx {
+            step: self.step,
+            n_workers: n,
+            model_bytes: self.model_bytes(),
+            cr: self.cur_cr,
+            probed_topo,
+        });
+        let outcome = self.strategy.exchange(&mut ExchangeCtx {
+            plan,
+            grads: &grads,
+            ef: &mut self.ef,
+            layout: self.source.layout(),
+            true_topo,
+            cr: self.cur_cr,
+            step: self.step,
+            pool: self.pool,
+        });
+        let t_comp = outcome.t_comp * self.cfg.comp_scale;
 
         // Momentum-SGD update (identical params on every worker).
         self.apply_lr_decay();
@@ -331,7 +427,7 @@ impl Trainer {
         let mu = self.cfg.momentum;
         let wd = self.cfg.weight_decay;
         for i in 0..self.params.len() {
-            let g = update[i] + wd * self.params[i];
+            let g = outcome.update[i] + wd * self.params[i];
             self.momentum_buf[i] = mu * self.momentum_buf[i] + g;
             self.params[i] -= lr * self.momentum_buf[i];
         }
@@ -342,180 +438,57 @@ impl Trainer {
             loss,
             t_compute,
             t_comp,
-            t_sync: comm.seconds,
-            collective,
-            cr: if self.cfg.strategy.is_compressed() { self.cur_cr } else { 1.0 },
-            selected_rank: selected,
-            gain: step_gain,
+            t_sync: outcome.comm.seconds,
+            collective: outcome.collective,
+            cr: if self.strategy.is_compressed() { self.cur_cr } else { 1.0 },
+            selected_rank: outcome.selected_rank,
+            gain: outcome.gain,
             alpha_ms: probed.alpha_ms(),
             bw_gbps: probed.bw_gbps(),
         };
         self.clock.advance(m.t_step());
-        if let Some(sw) = &mut self.policy_switcher {
-            sw.observe(m.loss);
+        // The strategy sees every step (its internal controllers track the
+        // loss trajectory); switch decisions made on unrecorded steps are
+        // queued so the observer stream never loses one.
+        if let Some(ev) = self.strategy.observe(&m) {
+            self.pending_switches.push(ev);
         }
         if record {
+            if let Some(prev) = self.last_collective {
+                if prev != m.collective {
+                    let ev = StrategySwitch {
+                        step: m.step,
+                        dimension: SwitchDimension::Collective,
+                        from: prev.name(),
+                        to: m.collective.name(),
+                    };
+                    for o in self.observers.iter_mut() {
+                        o.on_strategy_switch(&ev);
+                    }
+                }
+            }
+            self.last_collective = Some(m.collective);
+            self.flush_pending_switches(m.step);
             self.metrics.record(m.clone());
+            for o in self.observers.iter_mut() {
+                o.on_step(&m);
+            }
         }
         self.step += 1;
         m
     }
 
-    /// Compress + communicate per the strategy. `true_topo` carries the
-    /// msg_scale-adjusted links the data actually moves over (its inter
-    /// side is the old `true_link`); `probed_topo` is the selector's noisy
-    /// view. Returns (mean update, comm report, measured t_comp,
-    /// collective, selected rank, gain).
-    fn exchange(
-        &mut self,
-        grads: &[Vec<f32>],
-        true_topo: Topology,
-        probed_topo: Topology,
-    ) -> (Vec<f32>, CommReport, f64, CollectiveKind, Option<usize>, f64) {
-        let n = self.cfg.n_workers;
-        let true_link = true_topo.inter;
-        let probed = probed_topo.inter;
-
-        match self.cfg.strategy {
-            Strategy::DenseSgd { flavor } => {
-                // Table dispatch through the Collective registry: resolve
-                // the flavor (fixed or selector-chosen) to a kind, run the
-                // registered op. Selector choices, metrics kinds and future
-                // collectives all plug in at this one seam.
-                let kind = self.dense_kind(flavor, probed_topo);
-                let op = dense_op(kind).expect("dense kind registered");
-                let mut bufs = grads.to_vec();
-                let report = op.run(&mut bufs, true_topo);
-                let mut update = bufs.into_iter().next().unwrap();
-                crate::tensor::scale(&mut update, 1.0 / n as f32);
-                (update, report, 0.0, kind, None, 1.0)
-            }
-
-            Strategy::AgCompress { .. } => {
-                self.ag_exchange(grads, true_link, CollectiveKind::AllgatherTopk)
-            }
-
-            Strategy::ArTopkFixed { flavor, .. } => {
-                self.artopk_op.flavor = flavor;
-                self.art_exchange(grads, true_link)
-            }
-
-            Strategy::Flexible { .. } => {
-                let choice = selector::choose(probed, self.model_bytes(), n, self.cur_cr);
-                match selector::ar_flavor(choice.kind) {
-                    Some(f) => {
-                        self.artopk_op.flavor = f;
-                        self.art_exchange(grads, true_link)
-                    }
-                    None => self.ag_exchange(grads, true_link, CollectiveKind::AllgatherTopk),
-                }
-            }
-
-            Strategy::ArTopkAuto { flavor } => {
-                let policy = self
-                    .policy_switcher
-                    .as_ref()
-                    .expect("switcher set for ArTopkAuto")
-                    .current();
-                self.artopk_op.policy = policy;
-                self.artopk_op.flavor = flavor;
-                self.art_exchange(grads, true_link)
+    /// Deliver queued strategy-switch decisions, re-stamped to `at_step`:
+    /// a decision born on a checkpointed exploration step carries a step
+    /// index from a rolled-back timeline, so the stream reports the
+    /// recorded step (or end of run) at which it takes observable effect.
+    fn flush_pending_switches(&mut self, at_step: u64) {
+        for mut ev in std::mem::take(&mut self.pending_switches) {
+            ev.step = at_step;
+            for o in self.observers.iter_mut() {
+                o.on_strategy_switch(&ev);
             }
         }
-    }
-
-    /// Resolve a dense flavor (fixed or selector-driven) to the collective
-    /// kind the registry will execute.
-    fn dense_kind(&self, flavor: DenseFlavor, probed_topo: Topology) -> CollectiveKind {
-        let n = self.cfg.n_workers;
-        match flavor {
-            DenseFlavor::Ring => CollectiveKind::RingAllreduce,
-            DenseFlavor::Tree => CollectiveKind::TreeAllreduce,
-            DenseFlavor::HalvingDoubling => CollectiveKind::HalvingDoublingAllreduce,
-            DenseFlavor::Hierarchical => CollectiveKind::HierarchicalAllreduce,
-            DenseFlavor::Ps => CollectiveKind::PsStar,
-            DenseFlavor::Auto => {
-                selector::choose_dense(probed_topo.inter, self.model_bytes(), n)
-            }
-            DenseFlavor::TopoAuto => {
-                selector::choose_dense_topo(probed_topo, self.model_bytes(), n).kind
-            }
-        }
-    }
-
-    /// AG path: error-feed + compress every worker's gradient concurrently
-    /// across the pool (each worker owns its EfState and compressor — no
-    /// shared mutable state), then allgather. `t_comp` is the max of the
-    /// per-worker durations MEASURED INSIDE the concurrently-running tasks
-    /// — the critical-path worker a synchronous cluster step waits for,
-    /// independent of this host's core count while the pool is not
-    /// oversubscribed (DESIGN.md §7).
-    fn ag_exchange(
-        &mut self,
-        grads: &[Vec<f32>],
-        true_link: crate::netsim::cost_model::LinkParams,
-        kind: CollectiveKind,
-    ) -> (Vec<f32>, CommReport, f64, CollectiveKind, Option<usize>, f64) {
-        let n = self.cfg.n_workers;
-        let dim = self.source.dim();
-        let layout = self.source.layout().clone();
-        let cr = self.cur_cr;
-        let mut lanes: Vec<(&mut EfState, &mut Box<dyn Compressor>)> =
-            self.ef.iter_mut().zip(self.compressors.iter_mut()).collect();
-        let results = self.pool.map_mut(&mut lanes, |w, lane| {
-            let (ef, comp) = lane;
-            let t0 = Instant::now();
-            let g_e = ef.error_fed(&grads[w]);
-            let sparse = comp.compress(&g_e, cr, &layout);
-            let mut dt = t0.elapsed().as_secs_f64();
-            // Gain bookkeeping is metrics-only — keep its O(G) pass OFF
-            // the billed compression path (a cluster wouldn't run it).
-            let e_sq = crate::tensor::sq_norm(&g_e);
-            let g = gain(sparse.sq_norm(), e_sq);
-            let t1 = Instant::now();
-            ef.update(g_e, &sparse);
-            dt += t1.elapsed().as_secs_f64();
-            (sparse, g, dt)
-        });
-        drop(lanes);
-        let mut parts = Vec::with_capacity(n);
-        let mut gain_acc = 0.0f64;
-        let mut t_comp = 0.0f64;
-        for (sparse, g, dt) in results {
-            gain_acc += g;
-            t_comp = t_comp.max(dt);
-            parts.push(sparse);
-        }
-        let (mut dense, report) = allgather_sparse(&parts, dim, true_link);
-        crate::tensor::scale(&mut dense, 1.0 / n as f32);
-        (dense, report, t_comp, kind, None, gain_acc / n as f64)
-    }
-
-    /// AR-Topk path (Alg 1).
-    fn art_exchange(
-        &mut self,
-        grads: &[Vec<f32>],
-        true_link: crate::netsim::cost_model::LinkParams,
-    ) -> (Vec<f32>, CommReport, f64, CollectiveKind, Option<usize>, f64) {
-        let n = self.cfg.n_workers;
-        let kind = match self.artopk_op.flavor {
-            ArFlavor::Ring => CollectiveKind::ArTopkRing,
-            ArFlavor::Tree => CollectiveKind::ArTopkTree,
-        };
-        let res = self
-            .artopk_op
-            .exchange(grads, &mut self.ef, self.cur_cr, self.step, true_link);
-        // Critical-path compression time (parallel workers): see §Perf.
-        let t_comp = res.comp_wall_s;
-        let mut update = res.update.to_dense();
-        crate::tensor::scale(&mut update, 1.0 / n as f32);
-        let g = res
-            .gain_terms
-            .iter()
-            .map(|&(c, e)| gain(c, e))
-            .sum::<f64>()
-            / n as f64;
-        (update, res.comm, t_comp, kind, Some(res.selected), g)
     }
 
     fn apply_lr_decay(&mut self) {
@@ -557,7 +530,7 @@ impl Trainer {
         &mut self,
         net_changed: bool,
         gain_fired: bool,
-        probed: crate::netsim::cost_model::LinkParams,
+        probed: LinkParams,
     ) {
         let mut state = self.adaptive.take().expect("adaptive state");
         state.maybe_adapt(self, net_changed, gain_fired, probed);
@@ -613,7 +586,11 @@ mod tests {
 
     #[test]
     fn ag_topk_learns_with_error_feedback() {
-        let t = train(Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05, 250);
+        let t = train(
+            Strategy::AgCompress { kind: CompressorKind::TopK },
+            0.05,
+            250,
+        );
         let acc = t.metrics.final_accuracy().unwrap();
         assert!(acc > 0.75, "AG topk accuracy {acc}");
         assert!(t.metrics.summary().mean_gain < 1.0);
@@ -731,17 +708,6 @@ mod tests {
             .iter()
             .all(|c| *c == CollectiveKind::HierarchicalAllreduce));
         assert!(t.metrics.summary().mean_sync_s > 0.0);
-    }
-
-    #[test]
-    #[should_panic(expected = "not divisible")]
-    fn mismatched_topology_rejected() {
-        use crate::netsim::cost_model::LinkParams;
-        let mut cfg = quick_cfg(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, 1);
-        cfg.n_workers = 6;
-        cfg.schedule = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0))
-            .with_topology(LinkParams::from_ms_gbps(0.01, 100.0), 4);
-        Trainer::new(cfg, Box::new(HostMlp::default_preset(1)));
     }
 
     #[test]

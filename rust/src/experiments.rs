@@ -6,7 +6,8 @@
 //! so the rows they print line up with the paper's tables 1:1.
 
 use crate::coordinator::selector;
-use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig, Trainer};
+use crate::coordinator::session::{Session, TrainReport};
+use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig};
 use crate::coordinator::worker::ComputeModel;
 use crate::netsim::cost_model::{self, LinkParams, Topology};
 use crate::netsim::schedule::NetSchedule;
@@ -145,14 +146,16 @@ pub fn proxy_cfg(strategy: Strategy, cr: CrControl, steps: u64, seed: u64) -> Tr
     }
 }
 
-/// Run one table row on the hard host-MLP proxy; returns the trainer for
+/// Run one table row on the hard host-MLP proxy; returns the report for
 /// further inspection (gain curves, rank densities, ...).
-pub fn run_proxy(mut cfg: TrainConfig, seed: u64) -> Trainer {
+pub fn run_proxy(mut cfg: TrainConfig, seed: u64) -> TrainReport {
     cfg.seed = seed;
     let src = Box::new(HostMlp::hard_preset(seed));
-    let mut t = Trainer::new(cfg, src);
-    t.run();
-    t
+    Session::from_config(cfg)
+        .source(src)
+        .build()
+        .expect("proxy config valid")
+        .run()
 }
 
 /// One row of a Tables III/IV/V-style comparison.
@@ -181,13 +184,13 @@ pub fn print_diff_table(title: &str, rows: &[DiffRow]) {
     t.print();
 }
 
-/// Row from a finished trainer.
-pub fn diff_row(method: impl Into<String>, t: &Trainer) -> DiffRow {
-    let s = t.metrics.summary();
+/// Row from a finished run.
+pub fn diff_row(method: impl Into<String>, r: &TrainReport) -> DiffRow {
+    let s = r.summary();
     DiffRow {
         method: method.into(),
         t_step_ms: s.mean_step_s * 1e3,
-        accuracy: t.metrics.best_accuracy().unwrap_or(f64::NAN),
+        accuracy: r.best_accuracy().unwrap_or(f64::NAN),
     }
 }
 

@@ -36,6 +36,16 @@ pub mod prelude {
     pub use crate::artopk::{ArTopk, SelectionPolicy};
     pub use crate::collectives::CollectiveKind;
     pub use crate::compress::{Compressor, CompressorKind, SparseGrad};
+    pub use crate::coordinator::observer::{
+        CrChange, CsvSink, EvalRecord, ProgressPrinter, StrategySwitch, SwitchDimension,
+        TrainObserver,
+    };
+    pub use crate::coordinator::session::{
+        ConfigError, Session, SessionBuilder, TrainReport,
+    };
+    pub use crate::coordinator::strategy::{
+        CommPlan, CommStrategy, ExchangeCtx, ExchangeOutcome, StepCtx,
+    };
     pub use crate::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
     pub use crate::netsim::cost_model::{self, LinkParams, Topology};
     pub use crate::netsim::schedule::NetSchedule;

@@ -9,14 +9,15 @@
 //! Examples:
 //!   flexcomm train --model mlp --strategy artopk-star --cr 0.01 --steps 200
 //!   flexcomm train --model small --strategy flexible --adaptive --schedule c2
+//!   flexcomm train --strategy flexible --progress --out run.csv
 //!   flexcomm cost --table2
 //!   flexcomm schedule --name c2 --epochs 50
 
 use anyhow::{bail, Context, Result};
-use flexcomm::artopk::{ArFlavor, SelectionPolicy};
-use flexcomm::compress::CompressorKind;
 use flexcomm::coordinator::adaptive::AdaptiveConfig;
-use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
+use flexcomm::coordinator::observer::{CsvSink, ProgressPrinter};
+use flexcomm::coordinator::session::Session;
+use flexcomm::coordinator::trainer::{CrControl, Strategy};
 use flexcomm::coordinator::worker::{ComputeModel, GradSource};
 use flexcomm::netsim::cost_model::{self, LinkParams};
 use flexcomm::netsim::probe::Probe;
@@ -42,50 +43,19 @@ fn main() -> Result<()> {
 }
 
 fn print_usage() {
+    // Strategy and schedule names print from the SAME tables the parsers
+    // use (Strategy::parse / NetSchedule::preset), so help cannot drift.
     println!(
         "flexcomm — AR-Topk + flexible collectives + MOO-adaptive compression\n\
          usage: flexcomm <train|cost|schedule|info> [--flags]\n\
+         strategies: {}\n\
+         schedules:  static, {}\n\
          try:   flexcomm train --model host-mlp --strategy artopk-star --cr 0.01\n\
                 flexcomm cost --table1\n\
-                flexcomm schedule --name c2"
+                flexcomm schedule --name c2",
+        Strategy::names().collect::<Vec<_>>().join("|"),
+        NetSchedule::PRESETS.join(", "),
     );
-}
-
-/// Parse a strategy name.
-fn parse_strategy(s: &str) -> Result<Strategy> {
-    Ok(match s {
-        "dense-ring" => Strategy::DenseSgd { flavor: DenseFlavor::Ring },
-        "dense-tree" => Strategy::DenseSgd { flavor: DenseFlavor::Tree },
-        "dense-hd" => Strategy::DenseSgd { flavor: DenseFlavor::HalvingDoubling },
-        "dense-hier" => Strategy::DenseSgd { flavor: DenseFlavor::Hierarchical },
-        "dense-ps" => Strategy::DenseSgd { flavor: DenseFlavor::Ps },
-        "dense" | "dense-auto" => Strategy::DenseSgd { flavor: DenseFlavor::Auto },
-        "dense-topo" => Strategy::DenseSgd { flavor: DenseFlavor::TopoAuto },
-        "ag-topk" => Strategy::AgCompress { kind: CompressorKind::TopK },
-        "ag-lwtopk" => Strategy::AgCompress { kind: CompressorKind::LwTopk },
-        "ag-mstopk" => Strategy::AgCompress { kind: CompressorKind::MsTopk },
-        "ag-randomk" => Strategy::AgCompress { kind: CompressorKind::RandomK },
-        "artopk-star" => Strategy::ArTopkFixed {
-            policy: SelectionPolicy::Star,
-            flavor: ArFlavor::Ring,
-        },
-        "artopk-star-tree" => Strategy::ArTopkFixed {
-            policy: SelectionPolicy::Star,
-            flavor: ArFlavor::Tree,
-        },
-        "artopk-var" => Strategy::ArTopkFixed {
-            policy: SelectionPolicy::Var,
-            flavor: ArFlavor::Ring,
-        },
-        "artopk-auto" => Strategy::ArTopkAuto { flavor: ArFlavor::Ring },
-        "flexible" => Strategy::Flexible { policy: SelectionPolicy::Star },
-        "flexible-var" => Strategy::Flexible { policy: SelectionPolicy::Var },
-        _ => bail!(
-            "unknown strategy `{s}` (dense[-ring|-tree|-hd|-hier|-ps|-auto|-topo], ag-topk, \
-             ag-lwtopk, ag-mstopk, ag-randomk, artopk-star[-tree], artopk-var, artopk-auto, \
-             flexible[-var])"
-        ),
-    })
 }
 
 /// Build a gradient source by model name.
@@ -113,13 +83,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
     let model = args.str_or("model", &cfgfile.str_or("train.model", "host-mlp"));
     let seed = args.u64_or("seed", cfgfile.int_or("train.seed", 0) as u64)?;
-    let strategy = parse_strategy(&args.str_or(
+    let strategy = Strategy::parse(&args.str_or(
         "strategy",
         &cfgfile.str_or("train.strategy", "flexible"),
     ))?;
     let steps = args.u64_or("steps", cfgfile.int_or("train.steps", 200) as u64)?;
     let spe = args.u64_or("steps-per-epoch", cfgfile.int_or("train.steps_per_epoch", 50) as u64)?;
-    let epochs = steps as f64 / spe as f64;
+    let epochs = steps as f64 / spe.max(1) as f64;
 
     let schedule = match args
         .str_or("schedule", &cfgfile.str_or("net.schedule", "static"))
@@ -129,8 +99,7 @@ fn cmd_train(args: &Args) -> Result<()> {
             args.f64_or("alpha-ms", cfgfile.float_or("net.alpha_ms", 4.0))?,
             args.f64_or("bw-gbps", cfgfile.float_or("net.bw_gbps", 20.0))?,
         )),
-        name => NetSchedule::preset(name, epochs)
-            .with_context(|| format!("unknown schedule `{name}` (static|c1|c2)"))?,
+        name => NetSchedule::preset(name, epochs)?,
     };
 
     // Optional two-level topology overlay: a fast fixed intra-node link
@@ -163,39 +132,48 @@ fn cmd_train(args: &Args) -> Result<()> {
         CrControl::Static(args.f64_or("cr", cfgfile.float_or("compress.cr", 0.01))?)
     };
 
-    let cfg = TrainConfig {
-        n_workers: args.usize_or("workers", cfgfile.int_or("train.workers", 8) as usize)?,
-        steps,
-        steps_per_epoch: spe,
-        lr: args.f64_or("lr", cfgfile.float_or("train.lr", 0.1))? as f32,
-        momentum: args.f64_or("momentum", cfgfile.float_or("train.momentum", 0.9))? as f32,
-        weight_decay: args.f64_or("wd", cfgfile.float_or("train.weight_decay", 0.0))? as f32,
-        lr_decay: Vec::new(),
-        strategy,
-        cr,
-        schedule,
-        compute: ComputeModel::with_jitter(
+    println!("flexcomm train: model={model} strategy={strategy:?} steps={steps}");
+    // The validating builder (DESIGN.md §8): misconfigurations surface
+    // here as typed errors, not panics mid-run.
+    let mut builder = Session::builder()
+        .workers(args.usize_or("workers", cfgfile.int_or("train.workers", 8) as usize)?)
+        .steps(steps)
+        .steps_per_epoch(spe)
+        .lr(args.f64_or("lr", cfgfile.float_or("train.lr", 0.1))? as f32)
+        .momentum(args.f64_or("momentum", cfgfile.float_or("train.momentum", 0.9))? as f32)
+        .weight_decay(args.f64_or("wd", cfgfile.float_or("train.weight_decay", 0.0))? as f32)
+        .strategy(strategy)
+        .cr(cr)
+        .schedule(schedule)
+        .compute(ComputeModel::with_jitter(
             args.f64_or("compute-ms", cfgfile.float_or("train.compute_ms", 20.0))? * 1e-3,
             0.05,
-        ),
-        probe_noise: 0.02,
-        msg_scale: args.f64_or("msg-scale", 1.0)?,
-        comp_scale: args.f64_or("comp-scale", 1.0)?,
-        eval_every: args.u64_or("eval-every", spe)?,
-        seed,
+        ))
+        .msg_scale(args.f64_or("msg-scale", 1.0)?)
+        .comp_scale(args.f64_or("comp-scale", 1.0)?)
+        .eval_every(args.u64_or("eval-every", spe)?)
+        .seed(seed)
         // Worker execution engine: 0 = all available cores (default);
         // numerics are identical for every value (DESIGN.md §7).
-        threads: args.usize_or("threads", cfgfile.int_or("train.threads", 0) as usize)?,
-    };
+        .threads(args.usize_or("threads", cfgfile.int_or("train.threads", 0) as usize)?)
+        .source(build_source(&model, seed)?);
+    if args.flag("progress") {
+        builder = builder.observer(Box::new(ProgressPrinter::every(spe)));
+    }
+    // Validate BEFORE opening the sink: CsvSink truncates its target on
+    // creation, and a rejected config must not clobber previous results.
+    let mut session = builder.build()?;
+    let out = args.opt("out");
+    if let Some(path) = out {
+        // Stream rows as they happen: a killed run still leaves a CSV.
+        session = session.observer(Box::new(CsvSink::create(path)?));
+    }
+    let report = session.run();
 
-    println!("flexcomm train: model={model} strategy={:?} steps={steps}", cfg.strategy);
-    let source = build_source(&model, seed)?;
-    let mut t = Trainer::new(cfg, source);
-    t.run();
-
-    let s = t.metrics.summary();
+    let s = report.summary();
     let mut tab = Table::new(["metric", "value"]);
-    tab.row(["model", &t.source_name()]);
+    tab.row(["model", &report.model]);
+    tab.row(["strategy", &report.strategy]);
     tab.row(["steps", &s.steps.to_string()]);
     tab.row(["t_step (ms)", &fmt_ms(s.mean_step_s)]);
     tab.row(["  t_compute (ms)", &fmt_ms(s.mean_compute_s)]);
@@ -203,16 +181,15 @@ fn cmd_train(args: &Args) -> Result<()> {
     tab.row(["  t_sync (ms)", &fmt_ms(s.mean_sync_s)]);
     tab.row(["mean gain", &format!("{:.4}", s.mean_gain)]);
     tab.row(["final loss", &format!("{:.4}", s.final_loss)]);
-    if let Some(acc) = t.metrics.final_accuracy() {
+    if let Some(acc) = report.final_accuracy() {
         tab.row(["final accuracy", &fmt_pct(acc)]);
     }
-    tab.row(["virtual time (s)", &format!("{:.2}", t.clock.now())]);
-    tab.row(["explore overhead (s)", &format!("{:.2}", t.explore_overhead_s)]);
+    tab.row(["virtual time (s)", &format!("{:.2}", report.virtual_time_s)]);
+    tab.row(["explore overhead (s)", &format!("{:.2}", report.explore_overhead_s)]);
     tab.print();
 
-    if let Some(out) = args.opt("out") {
-        t.metrics.write_csv(out)?;
-        println!("wrote {out}");
+    if let Some(path) = out {
+        println!("wrote {path}");
     }
     Ok(())
 }
@@ -255,8 +232,7 @@ fn cmd_cost(args: &Args) -> Result<()> {
 fn cmd_schedule(args: &Args) -> Result<()> {
     let name = args.str_or("name", "c1");
     let epochs = args.f64_or("epochs", 50.0)?;
-    let sched = NetSchedule::preset(&name, epochs)
-        .with_context(|| format!("unknown schedule `{name}`"))?;
+    let sched = NetSchedule::preset(&name, epochs)?;
     let mut t = Table::new(["epoch", "alpha (ms)", "bandwidth (Gbps)"]);
     for p in sched.phases() {
         t.row([

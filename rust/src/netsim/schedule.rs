@@ -9,6 +9,7 @@
 
 use crate::netsim::cost_model::{LinkParams, Topology};
 use crate::util::rng::Rng;
+use anyhow::{bail, Result};
 
 /// Canonical (α, 1/β) levels used by the paper's C1/C2 configurations.
 pub mod levels {
@@ -138,12 +139,20 @@ impl NetSchedule {
         )
     }
 
-    /// Look up a named preset ("static" requires explicit params instead).
-    pub fn preset(name: &str, total_epochs: f64) -> Option<Self> {
+    /// Valid [`NetSchedule::preset`] names, in lookup order ("static" is
+    /// not a preset — it takes explicit link parameters).
+    pub const PRESETS: &'static [&'static str] = &["c1", "c2"];
+
+    /// Look up a named preset; the error lists every valid name.
+    pub fn preset(name: &str, total_epochs: f64) -> Result<Self> {
         match name {
-            "c1" => Some(Self::c1(total_epochs)),
-            "c2" => Some(Self::c2(total_epochs)),
-            _ => None,
+            "c1" => Ok(Self::c1(total_epochs)),
+            "c2" => Ok(Self::c2(total_epochs)),
+            _ => bail!(
+                "unknown schedule preset `{name}` (valid: {}; or `static` with explicit \
+                 link parameters)",
+                Self::PRESETS.join(", ")
+            ),
         }
     }
 
@@ -318,9 +327,11 @@ mod tests {
 
     #[test]
     fn preset_lookup() {
-        assert!(NetSchedule::preset("c1", 50.0).is_some());
-        assert!(NetSchedule::preset("c2", 50.0).is_some());
-        assert!(NetSchedule::preset("nope", 50.0).is_none());
+        for name in NetSchedule::PRESETS {
+            assert!(NetSchedule::preset(name, 50.0).is_ok(), "{name}");
+        }
+        let err = NetSchedule::preset("nope", 50.0).unwrap_err().to_string();
+        assert!(err.contains("c1") && err.contains("c2"), "{err}");
     }
 
     #[test]

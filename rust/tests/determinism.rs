@@ -1,9 +1,11 @@
 //! Parallel-vs-sequential bitwise determinism — the execution-engine
-//! contract (DESIGN.md §7): same seed, `threads = 1` vs `threads = 4` ⇒
-//! identical parameters and identical deterministic metrics (loss,
-//! simulated compute/sync seconds, collective kind, CR, selected rank,
-//! gain) across DenseSGD, AG-Topk and AR-Topk strategies, including
-//! non-power-of-two worker counts.
+//! contract (DESIGN.md §7), driven through the public Session API: same
+//! seed, `threads = 1` vs `threads = 4` ⇒ identical parameters and
+//! identical deterministic metrics (loss, simulated compute/sync seconds,
+//! collective kind, CR, selected rank, gain) across DenseSGD, AG-Topk and
+//! AR-Topk strategies, including non-power-of-two worker counts. The same
+//! harness also guards the observer seam: attaching observers must not
+//! perturb a single bit of the numerics.
 //!
 //! Measured compression wall time (`t_comp`) is real elapsed time and
 //! therefore legitimately timing-dependent; it is excluded by design —
@@ -11,8 +13,10 @@
 
 use flexcomm::artopk::{ArFlavor, ArTopk, SelectionPolicy};
 use flexcomm::compress::{CompressorKind, EfState};
+use flexcomm::coordinator::observer::{ProgressPrinter, TrainObserver};
+use flexcomm::coordinator::session::{Session, TrainReport};
 use flexcomm::coordinator::trainer::{
-    CrControl, DenseFlavor, Strategy, TrainConfig, Trainer,
+    CrControl, DenseFlavor, Strategy, TrainConfig,
 };
 use flexcomm::coordinator::worker::ComputeModel;
 use flexcomm::netsim::cost_model::LinkParams;
@@ -21,8 +25,8 @@ use flexcomm::runtime::HostMlp;
 use flexcomm::util::pool::ThreadPool;
 use flexcomm::util::rng::Rng;
 
-fn run(strategy: Strategy, cr: f64, n_workers: usize, threads: usize) -> Trainer {
-    let cfg = TrainConfig {
+fn cfg(strategy: Strategy, cr: f64, n_workers: usize, threads: usize) -> TrainConfig {
+    TrainConfig {
         n_workers,
         threads,
         steps: 40,
@@ -36,13 +40,32 @@ fn run(strategy: Strategy, cr: f64, n_workers: usize, threads: usize) -> Trainer
         eval_every: 0,
         seed: 33,
         ..Default::default()
-    };
-    let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(33)));
-    t.run();
-    t
+    }
 }
 
-fn assert_bitwise_equal(a: &Trainer, b: &Trainer, label: &str) {
+fn run_with(
+    strategy: Strategy,
+    cr: f64,
+    n_workers: usize,
+    threads: usize,
+    observers: Vec<Box<dyn TrainObserver>>,
+) -> TrainReport {
+    let mut builder = Session::from_config(cfg(strategy, cr, n_workers, threads));
+    for o in observers {
+        builder = builder.observer(o);
+    }
+    builder
+        .source(Box::new(HostMlp::default_preset(33)))
+        .build()
+        .expect("valid config")
+        .run()
+}
+
+fn run(strategy: Strategy, cr: f64, n_workers: usize, threads: usize) -> TrainReport {
+    run_with(strategy, cr, n_workers, threads, Vec::new())
+}
+
+fn assert_bitwise_equal(a: &TrainReport, b: &TrainReport, label: &str) {
     assert_eq!(a.params.len(), b.params.len(), "{label}: param dim");
     for (i, (x, y)) in a.params.iter().zip(&b.params).enumerate() {
         assert_eq!(x.to_bits(), y.to_bits(), "{label}: param {i}: {x} vs {y}");
@@ -107,6 +130,52 @@ fn oversubscribed_threads_are_bitwise_identical() {
     for threads in [3usize, 16] {
         let b = run(strategy, 0.02, 5, threads);
         assert_bitwise_equal(&a, &b, &format!("ag-topk/threads={threads}"));
+    }
+}
+
+/// The observer refactor must not perturb numerics: a run with observers
+/// attached (a second recorder, a progress printer, a switch listener) is
+/// bitwise identical to a bare run — observers read the stream, they
+/// never feed back into it.
+#[test]
+fn observers_do_not_perturb_numerics() {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+    struct CountEverything {
+        steps: Arc<AtomicU64>,
+        evals: Arc<AtomicU64>,
+    }
+    impl TrainObserver for CountEverything {
+        fn on_step(&mut self, _m: &flexcomm::coordinator::metrics::StepMetrics) {
+            self.steps.fetch_add(1, Ordering::Relaxed);
+        }
+        fn on_eval(&mut self, _e: &flexcomm::coordinator::observer::EvalRecord) {
+            self.evals.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    for (label, strategy, cr) in [
+        ("flexible", Strategy::Flexible { policy: SelectionPolicy::Star }, 0.05),
+        ("ag-topk", Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05),
+    ] {
+        let steps = Arc::new(AtomicU64::new(0));
+        let evals = Arc::new(AtomicU64::new(0));
+        let bare = run(strategy, cr, 4, 1);
+        let observed = run_with(
+            strategy,
+            cr,
+            4,
+            4,
+            vec![
+                Box::new(flexcomm::coordinator::metrics::MetricsLog::default()),
+                Box::new(ProgressPrinter::every(1000)),
+                Box::new(CountEverything { steps: steps.clone(), evals: evals.clone() }),
+            ],
+        );
+        assert_bitwise_equal(&bare, &observed, &format!("{label}/observers"));
+        // The observers really fired — a silently dropped observers Vec
+        // would make the bitwise check above pass vacuously.
+        assert_eq!(steps.load(Ordering::Relaxed), 40, "{label}: on_step count");
+        assert_eq!(evals.load(Ordering::Relaxed), 1, "{label}: final eval only");
     }
 }
 

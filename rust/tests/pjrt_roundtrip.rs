@@ -4,7 +4,8 @@
 //! Requires `make artifacts` (the Makefile test target guarantees it).
 
 use flexcomm::compress::{k_for, MsTopk};
-use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
+use flexcomm::coordinator::session::Session;
+use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig};
 use flexcomm::coordinator::worker::{ComputeModel, GradSource};
 use flexcomm::runtime::{find_artifacts_dir, Engine, ModelArtifacts, PjrtModel};
 use flexcomm::util::rng::Rng;
@@ -132,12 +133,15 @@ fn pjrt_mlp_trains_end_to_end_dense() {
         seed: 9,
         ..Default::default()
     };
-    let mut t = Trainer::new(cfg, Box::new(model));
-    t.run();
-    let first = t.metrics.steps.first().unwrap().loss;
-    let last = t.metrics.steps.last().unwrap().loss;
+    let r = Session::from_config(cfg)
+        .source(Box::new(model))
+        .build()
+        .expect("valid config")
+        .run();
+    let first = r.metrics.steps.first().unwrap().loss;
+    let last = r.metrics.steps.last().unwrap().loss;
     assert!(last < first * 0.6, "PJRT dense training: {first} -> {last}");
-    let acc = t.metrics.final_accuracy().unwrap();
+    let acc = r.final_accuracy().unwrap();
     assert!(acc > 0.5, "accuracy {acc}");
 }
 
@@ -160,9 +164,12 @@ fn pjrt_mlp_trains_with_artopk() {
         seed: 10,
         ..Default::default()
     };
-    let mut t = Trainer::new(cfg, Box::new(model));
-    t.run();
-    let first = t.metrics.steps.first().unwrap().loss;
-    let last = t.metrics.steps.last().unwrap().loss;
+    let r = Session::from_config(cfg)
+        .source(Box::new(model))
+        .build()
+        .expect("valid config")
+        .run();
+    let first = r.metrics.steps.first().unwrap().loss;
+    let last = r.metrics.steps.last().unwrap().loss;
     assert!(last < first * 0.7, "PJRT AR-Topk training: {first} -> {last}");
 }

@@ -1,17 +1,23 @@
 //! Simulator-level integration tests: whole training runs across
 //! strategies, schedules and policies with cross-cutting invariants —
 //! no PJRT needed (host model), so these also guard refactors fast.
+//! Everything drives the public Session API (builder + report + observer
+//! stream; DESIGN.md §8).
 
 use flexcomm::artopk::{ArFlavor, SelectionPolicy};
 use flexcomm::compress::CompressorKind;
 use flexcomm::coordinator::adaptive::AdaptiveConfig;
+use flexcomm::coordinator::observer::{StrategySwitch, SwitchDimension, TrainObserver};
+use flexcomm::coordinator::session::{Session, TrainReport};
 use flexcomm::coordinator::trainer::{
-    CrControl, DenseFlavor, Strategy, TrainConfig, Trainer,
+    CrControl, DenseFlavor, Strategy, TrainConfig,
 };
 use flexcomm::coordinator::worker::ComputeModel;
 use flexcomm::netsim::cost_model::LinkParams;
 use flexcomm::netsim::schedule::NetSchedule;
 use flexcomm::runtime::HostMlp;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 fn base_cfg(strategy: Strategy, cr: CrControl, steps: u64) -> TrainConfig {
     TrainConfig {
@@ -31,10 +37,12 @@ fn base_cfg(strategy: Strategy, cr: CrControl, steps: u64) -> TrainConfig {
     }
 }
 
-fn run(cfg: TrainConfig) -> Trainer {
-    let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(21)));
-    t.run();
-    t
+fn run(cfg: TrainConfig) -> TrainReport {
+    Session::from_config(cfg)
+        .source(Box::new(HostMlp::default_preset(21)))
+        .build()
+        .expect("valid config")
+        .run()
 }
 
 /// Every strategy must actually learn the task.
@@ -60,11 +68,11 @@ fn all_strategies_learn() {
         ("flexible", Strategy::Flexible { policy: SelectionPolicy::Star }, 0.05),
     ];
     for (name, s, cr) in strategies {
-        let t = run(base_cfg(s, CrControl::Static(cr), 200));
-        let acc = t.metrics.best_accuracy().unwrap();
+        let r = run(base_cfg(s, CrControl::Static(cr), 200));
+        let acc = r.best_accuracy().unwrap();
         assert!(acc > 0.70, "{name}: accuracy {acc}");
-        let first = t.metrics.steps.first().unwrap().loss;
-        let last = t.metrics.steps.last().unwrap().loss;
+        let first = r.metrics.steps.first().unwrap().loss;
+        let last = r.metrics.steps.last().unwrap().loss;
         assert!(last < first, "{name}: loss {first} -> {last}");
     }
 }
@@ -77,22 +85,24 @@ fn all_strategies_learn() {
 fn statistical_efficiency_ordering() {
     let run_hard = |strategy, cr: f64| {
         let cfg = base_cfg(strategy, CrControl::Static(cr), 250);
-        let mut t = Trainer::new(cfg, Box::new(HostMlp::hard_preset(21)));
-        t.run();
-        t
+        Session::from_config(cfg)
+            .source(Box::new(HostMlp::hard_preset(21)))
+            .build()
+            .expect("valid config")
+            .run()
     };
     let dense = run_hard(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0);
     let topk = run_hard(Strategy::AgCompress { kind: CompressorKind::TopK }, 0.01);
     let randk = run_hard(Strategy::AgCompress { kind: CompressorKind::RandomK }, 0.01);
-    let a_dense = dense.metrics.best_accuracy().unwrap();
-    let a_topk = topk.metrics.best_accuracy().unwrap();
-    let a_rand = randk.metrics.best_accuracy().unwrap();
+    let a_dense = dense.best_accuracy().unwrap();
+    let a_topk = topk.best_accuracy().unwrap();
+    let a_rand = randk.best_accuracy().unwrap();
     // Dense >= topk (small tolerance) and topk's retained-energy (gain)
     // dwarfs randomk's — the structural reason its convergence is worse.
     assert!(a_dense >= a_topk - 0.03, "dense {a_dense} vs topk {a_topk}");
     assert!(a_topk >= a_rand - 0.01, "topk {a_topk} vs randomk {a_rand}");
-    let g_topk = topk.metrics.summary().mean_gain;
-    let g_rand = randk.metrics.summary().mean_gain;
+    let g_topk = topk.summary().mean_gain;
+    let g_rand = randk.summary().mean_gain;
     assert!(g_topk > 2.0 * g_rand, "gain topk {g_topk} vs randomk {g_rand}");
 }
 
@@ -101,12 +111,12 @@ fn statistical_efficiency_ordering() {
 fn gain_monotone_in_cr() {
     let mut gains = Vec::new();
     for cr in [0.2, 0.02, 0.002] {
-        let t = run(base_cfg(
+        let r = run(base_cfg(
             Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
             CrControl::Static(cr),
             60,
         ));
-        gains.push(t.metrics.summary().mean_gain);
+        gains.push(r.summary().mean_gain);
     }
     assert!(gains[0] > gains[1] && gains[1] > gains[2], "{gains:?}");
 }
@@ -148,12 +158,15 @@ fn var_density_skews_under_noniid() {
         );
         let mut src = HostMlp::default_preset(5);
         src.skew = 1.0; // fully non-iid class shards
-        let mut t = Trainer::new(cfg, Box::new(src));
-        t.run();
-        let ranks = t.metrics.selected_ranks();
+        let r = Session::from_config(cfg)
+            .source(Box::new(src))
+            .build()
+            .expect("valid config")
+            .run();
+        let ranks = r.metrics.selected_ranks();
         let mut counts = [0usize; 4];
-        for r in ranks {
-            counts[r as usize] += 1;
+        for rank in ranks {
+            counts[rank as usize] += 1;
         }
         counts
     };
@@ -182,30 +195,64 @@ fn adaptive_survives_hostile_network() {
         .with_jitter(0.15, 13)
         .with_congestion(0.2, 8.0, 13);
     cfg.probe_noise = 0.10;
-    let t = run(cfg);
-    for m in &t.metrics.steps {
+    let r = run(cfg);
+    for m in &r.metrics.steps {
         assert!(m.cr >= 0.001 - 1e-12 && m.cr <= 0.1 + 1e-12, "cr {}", m.cr);
         assert!(m.loss.is_finite());
         assert!(m.t_sync >= 0.0 && m.t_sync.is_finite());
     }
-    assert!(t.metrics.best_accuracy().unwrap() > 0.6);
+    assert!(r.best_accuracy().unwrap() > 0.6);
+}
+
+/// Counts strategy-switch events off the typed observer stream (what used
+/// to require reaching into `trainer.policy_switcher`).
+struct SwitchCounter {
+    policy_commits: Arc<AtomicU64>,
+    collective_switches: Arc<AtomicU64>,
+}
+
+impl TrainObserver for SwitchCounter {
+    fn on_strategy_switch(&mut self, s: &StrategySwitch) {
+        match s.dimension {
+            SwitchDimension::SelectionPolicy => {
+                self.policy_commits.fetch_add(1, Ordering::Relaxed);
+            }
+            SwitchDimension::Collective => {
+                self.collective_switches.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
 }
 
 /// The §5 future-work extension: auto STAR/VAR switching must trial both
-/// policies, commit to one, and still learn.
+/// policies, commit to one (visible as a typed observer event), and still
+/// learn.
 #[test]
 fn artopk_auto_switches_and_learns() {
-    let t = run(base_cfg(
+    let commits = Arc::new(AtomicU64::new(0));
+    let switches = Arc::new(AtomicU64::new(0));
+    let cfg = base_cfg(
         Strategy::ArTopkAuto { flavor: ArFlavor::Ring },
         CrControl::Static(0.05),
         200,
-    ));
-    let sw = t.policy_switcher.as_ref().unwrap();
-    assert!(sw.cycles >= 1, "must complete at least one trial cycle");
-    assert!(t.metrics.best_accuracy().unwrap() > 0.7);
+    );
+    let r = Session::from_config(cfg)
+        .observer(Box::new(SwitchCounter {
+            policy_commits: commits.clone(),
+            collective_switches: switches.clone(),
+        }))
+        .source(Box::new(HostMlp::default_preset(21)))
+        .build()
+        .expect("valid config")
+        .run();
+    assert!(
+        commits.load(Ordering::Relaxed) >= 1,
+        "must complete at least one trial->commit cycle"
+    );
+    assert!(r.best_accuracy().unwrap() > 0.7);
     // Both policies appear during trials: rank sequence has round-robin
     // stretches (STAR) — committed stretches may be either.
-    let ranks = t.metrics.selected_ranks();
+    let ranks = r.metrics.selected_ranks();
     assert_eq!(ranks.len(), 200);
 }
 
@@ -240,10 +287,10 @@ fn topo_auto_learns_and_cuts_sync_on_two_level_cluster() {
         .collectives_used()
         .iter()
         .all(|c| c.name() == "Hier-AR"));
-    let s_flat = flat.metrics.summary().mean_sync_s;
-    let s_topo = topo.metrics.summary().mean_sync_s;
+    let s_flat = flat.summary().mean_sync_s;
+    let s_topo = topo.summary().mean_sync_s;
     assert!(s_topo < s_flat, "two-level sync {s_topo} vs flat ring {s_flat}");
-    assert!(topo.metrics.best_accuracy().unwrap() > 0.7);
+    assert!(topo.best_accuracy().unwrap() > 0.7);
 }
 
 /// Sanity: a 1-worker cluster degenerates to plain SGD with zero comm.
@@ -255,20 +302,20 @@ fn single_worker_no_communication() {
         50,
     );
     cfg.n_workers = 1;
-    let t = run(cfg);
-    assert!(t.metrics.steps.iter().all(|m| m.t_sync == 0.0));
-    assert!(t.metrics.best_accuracy().unwrap() > 0.7);
+    let r = run(cfg);
+    assert!(r.metrics.steps.iter().all(|m| m.t_sync == 0.0));
+    assert!(r.best_accuracy().unwrap() > 0.7);
 }
 
 /// Eqn 3 bookkeeping: recorded step time decomposes exactly.
 #[test]
 fn step_time_decomposition() {
-    let t = run(base_cfg(
+    let r = run(base_cfg(
         Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
         CrControl::Static(0.05),
         40,
     ));
-    for m in &t.metrics.steps {
+    for m in &r.metrics.steps {
         assert!((m.t_step() - (m.t_compute + m.t_comp + m.t_sync)).abs() < 1e-15);
         assert!(m.t_compute > 0.0);
     }

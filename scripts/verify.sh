@@ -44,6 +44,16 @@ step cargo test -q
 step cargo bench --no-run
 step env FLEXCOMM_BENCH_FAST=1 cargo bench --bench hotpath
 step cargo fmt --check
+# Lint gate over every target (lib, bin, tests, benches, examples). Some
+# minimal toolchains ship without the clippy component — that is a loud
+# failure, not a skip, for the same reason as the missing-cargo check
+# above: a gate that silently vanishes is worse than none.
+if cargo clippy --version >/dev/null 2>&1; then
+    step cargo clippy --all-targets -- -D warnings
+else
+    echo "verify: FATAL: cargo-clippy not installed (rustup component add clippy)" >&2
+    status=1
+fi
 step env RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
 
 if [ "$status" -ne 0 ]; then
