@@ -46,7 +46,7 @@ fn main() -> Result<()> {
 
     let mk = |strategy, cr: CrControl, schedule: NetSchedule, seed| {
         let mut cfg = proxy_cfg(strategy, cr, steps, seed);
-        cfg.schedule = schedule;
+        cfg.net = Box::new(schedule);
         cfg.steps_per_epoch = spe.max(1);
         cfg.msg_scale = msg_scale;
         cfg.comp_scale = msg_scale / GPU_COMPRESS_SPEEDUP;

@@ -1,0 +1,100 @@
+//! Trace-driven network environments, end to end (DESIGN.md §9):
+//!
+//! 1. round-trip smoke check: write a 3-phase trace, load it back, assert
+//!    `link_at` replays the written samples exactly (run by
+//!    scripts/verify.sh),
+//! 2. replay the shipped measured trace (`examples/traces/c2_measured.csv`)
+//!    and print the sampled conditions,
+//! 3. train a short flexible run on it via
+//!    `Session::builder().network(TraceModel::load(..)?)`,
+//! 4. print the scenario-registry sweep (`experiments::scenario_rows`).
+//!
+//!     cargo run --release --example trace_replay -- [--trace <path>]
+
+use anyhow::Result;
+use flexcomm::coordinator::session::Session;
+use flexcomm::coordinator::trainer::Strategy;
+use flexcomm::coordinator::worker::ComputeModel;
+use flexcomm::experiments::print_scenario_sweep;
+use flexcomm::netsim::model::NetworkModel;
+use flexcomm::netsim::trace::{TraceModel, TracePoint};
+use flexcomm::runtime::HostMlp;
+use flexcomm::util::cli::Args;
+use flexcomm::util::table::Table;
+
+fn round_trip_smoke() -> Result<()> {
+    let original = TraceModel::from_points(
+        "smoke",
+        vec![
+            TracePoint { epoch: 0.0, alpha_ms: 1.25, bw_gbps: 23.7 },
+            TracePoint { epoch: 7.5, alpha_ms: 41.0, bw_gbps: 1.3 },
+            TracePoint { epoch: 19.0, alpha_ms: 9.9, bw_gbps: 11.2 },
+        ],
+    )?;
+    let path = std::env::temp_dir().join("flexcomm_trace_replay_smoke.csv");
+    let path = path.to_str().expect("utf-8 temp path");
+    original.save_csv(path)?;
+    let loaded = TraceModel::load(path)?;
+    assert_eq!(
+        loaded.points(),
+        original.points(),
+        "write -> load must replay the exact samples"
+    );
+    for epoch in [0.0, 5.0, 7.5, 12.0, 19.0, 100.0] {
+        assert_eq!(
+            loaded.link_at(epoch),
+            original.link_at(epoch),
+            "link_at({epoch}) must match after the round trip"
+        );
+    }
+    let _ = std::fs::remove_file(path);
+    println!("trace round-trip: OK (3 phases, write -> load -> link_at identical)");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    round_trip_smoke()?;
+
+    let path = args.str_or("trace", "examples/traces/c2_measured.csv");
+    let trace = TraceModel::load(&path)?;
+    println!("\nloaded {} -> {}", path, trace.describe());
+    let mut t = Table::new(["epoch", "alpha (ms)", "bandwidth (Gbps)"]);
+    for p in trace.points() {
+        t.row([
+            format!("{:.0}+", p.epoch),
+            format!("{:.1}", p.alpha_ms),
+            format!("{:.1}", p.bw_gbps),
+        ]);
+    }
+    t.print();
+
+    // A short flexible run driven by the measured trace: the Eqn 5
+    // selector now reacts to the recording instead of a synthetic preset.
+    let steps = args.u64_or("steps", 150)?;
+    let report = Session::builder()
+        .workers(4)
+        .steps(steps)
+        .steps_per_epoch((steps / 50).max(1))
+        .strategy(Strategy::parse("flexible")?)
+        .static_cr(0.05)
+        .network(trace)
+        .compute(ComputeModel::fixed(0.005))
+        .seed(7)
+        .source(Box::new(HostMlp::default_preset(7)))
+        .build()?
+        .run();
+    let collectives: std::collections::BTreeSet<&str> =
+        report.metrics.collectives_used().iter().map(|c| c.name()).collect();
+    println!(
+        "\ntrained {} steps on `{}`: best acc {:.1}%, collectives used: {:?}",
+        report.steps,
+        report.network,
+        report.best_accuracy().unwrap_or(f64::NAN) * 100.0,
+        collectives
+    );
+
+    println!("\nscenario registry sweep (ResNet50 bytes, N=8, CR 0.01):");
+    print_scenario_sweep(50.0, 4.0 * 25.6e6, 8, 0.01);
+    Ok(())
+}

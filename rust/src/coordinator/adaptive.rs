@@ -146,7 +146,7 @@ mod tests {
                 probe_iters: 3,
                 ..Default::default()
             }),
-            schedule,
+            net: Box::new(schedule),
             compute: ComputeModel::fixed(0.005),
             eval_every: 0,
             seed: 5,

@@ -17,8 +17,8 @@ pub mod worker;
 pub use adaptive::AdaptiveConfig;
 pub use metrics::{MetricsLog, StepMetrics};
 pub use observer::{
-    CrChange, CsvSink, EvalRecord, ProgressPrinter, StrategySwitch, SwitchDimension,
-    TrainObserver,
+    CrChange, CsvSink, EvalRecord, NetChange, ProgressPrinter, StrategySwitch,
+    SwitchDimension, TrainObserver,
 };
 pub use session::{ConfigError, Session, SessionBuilder, TrainReport};
 pub use strategy::{CommPlan, CommStrategy, ExchangeCtx, ExchangeOutcome, StepCtx};

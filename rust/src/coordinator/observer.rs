@@ -6,7 +6,8 @@
 //! what a run did; every new kind of instrumentation meant another public
 //! field. [`TrainObserver`] replaces those reaches with a push stream of
 //! typed events: per-step metrics, held-out evaluations, strategy switches
-//! (collective OR selection-policy) and adaptive-CR changes. Observers are
+//! (collective OR selection-policy), adaptive-CR changes and ground-truth
+//! network changes ([`NetChange`]). Observers are
 //! registered on the [`SessionBuilder`](crate::coordinator::session::SessionBuilder)
 //! and owned by the trainer for the life of the run; the canonical
 //! [`MetricsLog`] recording always happens and comes back in the
@@ -18,6 +19,7 @@
 //! (human-readable terminal lines).
 
 use crate::coordinator::metrics::{MetricsLog, StepMetrics};
+use crate::netsim::cost_model::LinkParams;
 use anyhow::{Context, Result};
 use std::io::Write;
 
@@ -75,6 +77,21 @@ pub struct CrChange {
     pub to: f64,
 }
 
+/// The simulated network's TRUE inter-node link changed between recorded
+/// steps: a schedule/trace phase boundary was crossed, or a stochastic
+/// modifier (congestion episode, flap window, jitter bucket) fired. This
+/// is ground truth — what the environment did, not what the noisy probe
+/// saw — so CSV consumers can correlate strategy switches and CR changes
+/// with the network events that caused them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetChange {
+    /// Recorded step at which the new conditions first applied.
+    pub step: u64,
+    pub epoch: f64,
+    pub from: LinkParams,
+    pub to: LinkParams,
+}
+
 /// Typed event stream over a training run.
 ///
 /// All methods default to no-ops so observers implement only what they
@@ -95,6 +112,10 @@ pub trait TrainObserver: Send {
 
     /// The adaptive controller moved the compression ratio.
     fn on_cr_change(&mut self, _c: &CrChange) {}
+
+    /// The TRUE network conditions changed since the previous recorded
+    /// step (fires before that step's `on_step`).
+    fn on_net_change(&mut self, _n: &NetChange) {}
 }
 
 /// The recorder: a [`MetricsLog`] is itself an observer, so custom
@@ -126,6 +147,18 @@ pub struct CsvSink {
 impl CsvSink {
     /// Open `path` (creating parent directories) and write the header.
     pub fn create(path: &str) -> Result<CsvSink> {
+        Self::open(path, None)
+    }
+
+    /// Like [`CsvSink::create`], but first writes a `# net=<scenario>`
+    /// comment line naming the network scenario
+    /// ([`NetworkModel::describe`](crate::netsim::model::NetworkModel::describe)),
+    /// so the file self-identifies which environment produced it.
+    pub fn create_with_scenario(path: &str, scenario: &str) -> Result<CsvSink> {
+        Self::open(path, Some(scenario))
+    }
+
+    fn open(path: &str, scenario: Option<&str>) -> Result<CsvSink> {
         if let Some(parent) = std::path::Path::new(path).parent() {
             if !parent.as_os_str().is_empty() {
                 std::fs::create_dir_all(parent)
@@ -134,6 +167,9 @@ impl CsvSink {
         }
         let file = std::fs::File::create(path).with_context(|| format!("creating {path}"))?;
         let mut out = std::io::BufWriter::new(file);
+        if let Some(s) = scenario {
+            writeln!(out, "# net={s}").with_context(|| format!("writing header to {path}"))?;
+        }
         writeln!(out, "{}", StepMetrics::CSV_HEADER)
             .with_context(|| format!("writing header to {path}"))?;
         Ok(CsvSink { path: path.to_string(), out, failed: false })
@@ -161,6 +197,20 @@ impl CsvSink {
 impl TrainObserver for CsvSink {
     fn on_step(&mut self, m: &StepMetrics) {
         self.write_line(&m.csv_row());
+    }
+
+    fn on_net_change(&mut self, n: &NetChange) {
+        // Comment row between data rows: correlates the surrounding steps
+        // with the ground-truth network event without breaking the schema.
+        self.write_line(&format!(
+            "# net_change step={} epoch={:.4} alpha_ms={:.3}->{:.3} bw_gbps={:.3}->{:.3}",
+            n.step,
+            n.epoch,
+            n.from.alpha_ms(),
+            n.to.alpha_ms(),
+            n.from.bw_gbps(),
+            n.to.bw_gbps()
+        ));
     }
 }
 
@@ -214,6 +264,17 @@ impl TrainObserver for ProgressPrinter {
     fn on_cr_change(&mut self, c: &CrChange) {
         println!("cr     step {:>6}  {:.5} -> {:.5}", c.step, c.from, c.to);
     }
+
+    fn on_net_change(&mut self, n: &NetChange) {
+        println!(
+            "net    step {:>6}  alpha {:.2} -> {:.2} ms, bw {:.2} -> {:.2} Gbps",
+            n.step,
+            n.from.alpha_ms(),
+            n.to.alpha_ms(),
+            n.from.bw_gbps(),
+            n.to.bw_gbps()
+        );
+    }
 }
 
 #[cfg(test)]
@@ -262,6 +323,29 @@ mod tests {
         assert!(text.starts_with(StepMetrics::CSV_HEADER));
         assert_eq!(text.lines().count(), 3, "{text}");
         assert!(text.contains("ART-Ring"));
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn csv_sink_tags_scenario_and_net_changes() {
+        let path = std::env::temp_dir().join("flexcomm_csv_sink_scenario.csv");
+        let path = path.to_str().unwrap().to_string();
+        {
+            let mut sink = CsvSink::create_with_scenario(&path, "c2+jitter(0.15)").unwrap();
+            sink.on_step(&m(0));
+            sink.on_net_change(&NetChange {
+                step: 1,
+                epoch: 0.1,
+                from: LinkParams::from_ms_gbps(1.0, 25.0),
+                to: LinkParams::from_ms_gbps(50.0, 1.0),
+            });
+            sink.on_step(&m(1));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("# net=c2+jitter(0.15)\n"), "{text}");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[1], StepMetrics::CSV_HEADER);
+        assert!(lines[3].starts_with("# net_change step=1"), "{text}");
         let _ = std::fs::remove_file(&path);
     }
 

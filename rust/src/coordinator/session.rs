@@ -35,6 +35,7 @@ use crate::coordinator::observer::TrainObserver;
 use crate::coordinator::strategy::{instantiate, CommStrategy};
 use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig, Trainer};
 use crate::coordinator::worker::{ComputeModel, GradSource};
+use crate::netsim::model::{parse_spec, NetModelError, NetworkModel};
 use crate::netsim::schedule::NetSchedule;
 use crate::util::pool::ThreadPool;
 use std::fmt;
@@ -67,6 +68,16 @@ pub enum ConfigError {
     /// in release it would index out of bounds or silently truncate
     /// updates mid-run).
     SourceDimMismatch { params_len: usize, dim: usize },
+    /// The network environment was rejected: an unloadable/malformed
+    /// trace, a bad modifier composition, or an unknown scenario spec
+    /// (from [`SessionBuilder::network_spec`]).
+    Network(NetModelError),
+}
+
+impl From<NetModelError> for ConfigError {
+    fn from(e: NetModelError) -> Self {
+        ConfigError::Network(e)
+    }
 }
 
 impl fmt::Display for ConfigError {
@@ -98,6 +109,7 @@ impl fmt::Display for ConfigError {
                 "gradient source is inconsistent: init_params() produced {params_len} \
                  parameters but dim() reports {dim}"
             ),
+            ConfigError::Network(e) => write!(f, "network environment rejected: {e}"),
         }
     }
 }
@@ -113,6 +125,9 @@ pub struct SessionBuilder {
     source: Option<Box<dyn GradSource>>,
     custom: Option<Box<dyn CommStrategy>>,
     observers: Vec<Box<dyn TrainObserver>>,
+    /// Deferred `--net` spec: resolved at `build()` (it needs the run's
+    /// total epoch count), overriding `cfg.net` when present.
+    net_spec: Option<String>,
 }
 
 impl SessionBuilder {
@@ -184,9 +199,36 @@ impl SessionBuilder {
         self.cr(CrControl::Adaptive(cfg))
     }
 
-    pub fn schedule(mut self, schedule: NetSchedule) -> Self {
-        self.cfg.schedule = schedule;
+    /// Plug in the network environment — any [`NetworkModel`]: a
+    /// [`NetSchedule`], a loaded
+    /// [`TraceModel`](crate::netsim::trace::TraceModel)
+    /// (`.network(TraceModel::load(path)?)`), or a
+    /// [`modifiers`](crate::netsim::modifiers) composition.
+    pub fn network(mut self, net: impl NetworkModel + 'static) -> Self {
+        self.cfg.net = Box::new(net);
         self
+    }
+
+    /// Boxed-object form of [`SessionBuilder::network`] (registry output,
+    /// [`parse_spec`] results).
+    pub fn network_boxed(mut self, net: Box<dyn NetworkModel>) -> Self {
+        self.cfg.net = net;
+        self
+    }
+
+    /// Defer a `--net`-style spec (`<scenario name>` or `trace:<path>`)
+    /// to `build()`, which resolves it against the scenario registry at
+    /// the run's epoch count — a bad spec surfaces as the typed
+    /// [`ConfigError::Network`] instead of a panic or a stringly error.
+    pub fn network_spec(mut self, spec: &str) -> Self {
+        self.net_spec = Some(spec.to_string());
+        self
+    }
+
+    /// Convenience for the common piecewise-schedule case (delegates to
+    /// [`SessionBuilder::network`]).
+    pub fn schedule(self, schedule: NetSchedule) -> Self {
+        self.network(schedule)
     }
 
     pub fn compute(mut self, compute: ComputeModel) -> Self {
@@ -245,12 +287,16 @@ impl SessionBuilder {
     /// Every rejection is a typed [`ConfigError`] (auto-converts into
     /// `anyhow::Result` contexts via `?`).
     pub fn build(self) -> Result<Session, ConfigError> {
-        let SessionBuilder { cfg, source, custom, observers } = self;
+        let SessionBuilder { mut cfg, source, custom, observers, net_spec } = self;
         if cfg.n_workers == 0 {
             return Err(ConfigError::ZeroWorkers);
         }
         if cfg.steps_per_epoch == 0 {
             return Err(ConfigError::ZeroStepsPerEpoch);
+        }
+        if let Some(spec) = net_spec {
+            let epochs = cfg.steps as f64 / cfg.steps_per_epoch as f64;
+            cfg.net = parse_spec(&spec, epochs.max(1.0))?;
         }
         match &cfg.cr {
             CrControl::Static(c) => {
@@ -267,7 +313,7 @@ impl SessionBuilder {
                 }
             }
         }
-        let wpn = cfg.schedule.workers_per_node();
+        let wpn = cfg.net.topology_at(0.0).workers_per_node;
         if wpn > 0 && cfg.n_workers % wpn != 0 {
             return Err(ConfigError::RaggedTopology {
                 n_workers: cfg.n_workers,
@@ -328,6 +374,13 @@ impl Session {
         self
     }
 
+    /// The configured network environment's full identity
+    /// ([`NetworkModel::describe`]) — what the report and tagged CSV
+    /// output carry.
+    pub fn network_describe(&self) -> String {
+        self.trainer.cfg.net.describe()
+    }
+
     /// Run the configured number of steps and return the report.
     pub fn run(mut self) -> TrainReport {
         self.trainer.run();
@@ -345,6 +398,7 @@ impl Session {
         TrainReport {
             model: source.name(),
             strategy: strategy.name().to_string(),
+            network: cfg.net.describe(),
             final_cr: if strategy.is_compressed() { cur_cr } else { 1.0 },
             virtual_time_s: clock.now(),
             explore_overhead_s,
@@ -373,6 +427,10 @@ pub struct TrainReport {
     pub model: String,
     /// Strategy display name.
     pub strategy: String,
+    /// Network-scenario identity
+    /// ([`NetworkModel::describe`]) — names the environment (base
+    /// scenario + modifier chain, or `trace:<name>`) this run saw.
+    pub network: String,
     /// Configured step count.
     pub steps: u64,
 }
@@ -534,6 +592,44 @@ mod tests {
             Ok(())
         }
         assert!(through_anyhow().unwrap_err().to_string().contains("n_workers"));
+    }
+
+    #[test]
+    fn network_spec_resolves_the_scenario_registry_at_build_time() {
+        let report = base().static_cr(0.05).network_spec("c2-hostile").build().unwrap().run();
+        assert_eq!(report.network, "c2+jitter(0.15)+congestion(0.2,8)");
+        // And a plain model plugged in directly names itself too.
+        let report = base()
+            .static_cr(0.05)
+            .network(NetSchedule::c1(10.0))
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.network, "c1");
+    }
+
+    #[test]
+    fn bad_network_specs_are_typed_errors() {
+        use crate::netsim::model::NetModelError;
+        match base().network_spec("nope").build().err() {
+            Some(ConfigError::Network(NetModelError::UnknownScenario { spec })) => {
+                assert_eq!(spec, "nope")
+            }
+            other => panic!("expected UnknownScenario, got {other:?}"),
+        }
+        assert!(matches!(
+            base().network_spec("trace:/nonexistent/trace.csv").build().err(),
+            Some(ConfigError::Network(NetModelError::TraceIo { .. }))
+        ));
+        // NetModelError lifts into ConfigError via `?` (the builder path
+        // custom compositions take).
+        fn compose() -> Result<crate::netsim::modifiers::Jitter, ConfigError> {
+            Ok(crate::netsim::modifiers::Jitter::wrap(NetSchedule::c1(10.0), 2.0, 0)?)
+        }
+        assert!(matches!(
+            compose().err(),
+            Some(ConfigError::Network(NetModelError::BadModifier { .. }))
+        ));
     }
 
     #[test]

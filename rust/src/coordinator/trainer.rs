@@ -21,11 +21,12 @@ use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveState};
 use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::metrics::{MetricsLog, StepMetrics};
 use crate::coordinator::observer::{
-    CrChange, EvalRecord, StrategySwitch, SwitchDimension, TrainObserver,
+    CrChange, EvalRecord, NetChange, StrategySwitch, SwitchDimension, TrainObserver,
 };
 use crate::coordinator::strategy::{CommStrategy, ExchangeCtx, StepCtx};
 use crate::coordinator::worker::{ComputeModel, GradSource};
 use crate::netsim::cost_model::{LinkParams, Topology};
+use crate::netsim::model::NetworkModel;
 use crate::netsim::probe::Probe;
 use crate::netsim::schedule::NetSchedule;
 use crate::netsim::VirtualClock;
@@ -107,7 +108,13 @@ pub struct TrainConfig {
     pub lr_decay: Vec<(u64, f32)>,
     pub strategy: Strategy,
     pub cr: CrControl,
-    pub schedule: NetSchedule,
+    /// The network environment — any [`NetworkModel`]: a
+    /// [`NetSchedule`], a replayed
+    /// [`TraceModel`](crate::netsim::trace::TraceModel), or a
+    /// [`modifiers`](crate::netsim::modifiers) composition. The trainer,
+    /// probe and selector read conditions ONLY through this trait object
+    /// (DESIGN.md §9).
+    pub net: Box<dyn NetworkModel>,
     pub compute: ComputeModel,
     /// Probe observation noise fraction.
     pub probe_noise: f64,
@@ -147,9 +154,9 @@ impl Default for TrainConfig {
             lr_decay: Vec::new(),
             strategy: Strategy::DenseSgd { flavor: DenseFlavor::Ring },
             cr: CrControl::Static(0.01),
-            schedule: NetSchedule::static_link(
+            net: Box::new(NetSchedule::static_link(
                 crate::netsim::cost_model::LinkParams::from_ms_gbps(4.0, 20.0),
-            ),
+            )),
             compute: ComputeModel::fixed(0.02),
             probe_noise: 0.02,
             msg_scale: 1.0,
@@ -195,6 +202,10 @@ pub struct Trainer {
     /// Collective used by the previous RECORDED step (switch detection
     /// for the observer stream).
     last_collective: Option<CollectiveKind>,
+    /// TRUE (unscaled) inter link of the previous recorded step — fires
+    /// [`NetChange`] when the environment crosses a phase/episode
+    /// boundary between recorded steps.
+    last_net_link: Option<LinkParams>,
     /// Strategy-level switch decisions not yet delivered to observers.
     /// A commit can land on an UNRECORDED exploration step (ArTopkAuto +
     /// adaptive CR: the switcher advances there too, and the decision
@@ -225,7 +236,7 @@ impl Trainer {
                 (a.c_high, Some(AdaptiveState::new(a.clone())), a.gain_threshold)
             }
         };
-        let probe = Probe::new(cfg.schedule.clone(), cfg.probe_noise, cfg.seed ^ 0xBEEF);
+        let probe = Probe::new(cfg.net.clone(), cfg.probe_noise, cfg.seed ^ 0xBEEF);
         Trainer {
             momentum_buf: vec![0.0; dim],
             ef: (0..n).map(|_| EfState::new(dim)).collect(),
@@ -243,6 +254,7 @@ impl Trainer {
             lr_cur: cfg.lr,
             explore_overhead_s: 0.0,
             last_collective: None,
+            last_net_link: None,
             pending_switches: Vec::new(),
             params,
             cfg,
@@ -377,7 +389,7 @@ impl Trainer {
         // True data-movement topology (β scaled by msg_scale) and the
         // selector's view of it: the probe observes the inter link, the
         // intra link is known in-machine hardware.
-        let base_topo = self.cfg.schedule.topology_at(epoch);
+        let base_topo = self.cfg.net.topology_at(epoch);
         let true_topo = self.scaled_topo(base_topo);
         let probed_topo = Topology { inter: probed, ..base_topo };
         let t_compute = self.cfg.compute.step_time(n, &mut self.rng);
@@ -454,6 +466,19 @@ impl Trainer {
             self.pending_switches.push(ev);
         }
         if record {
+            // Ground-truth network event: the environment's (unscaled)
+            // inter link changed since the previous recorded step. Fires
+            // before on_step so sinks interleave it ahead of the step row.
+            let cur_link = base_topo.inter;
+            if let Some(prev) = self.last_net_link {
+                if prev != cur_link {
+                    let ev = NetChange { step: m.step, epoch, from: prev, to: cur_link };
+                    for o in self.observers.iter_mut() {
+                        o.on_net_change(&ev);
+                    }
+                }
+            }
+            self.last_net_link = Some(cur_link);
             if let Some(prev) = self.last_collective {
                 if prev != m.collective {
                     let ev = StrategySwitch {
@@ -622,7 +647,7 @@ mod tests {
         let slow = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 0.05));
         let mk = |s: Strategy, cr| {
             let mut cfg = quick_cfg(s, cr, 20);
-            cfg.schedule = slow.clone();
+            cfg.net = Box::new(slow.clone());
             let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(1)));
             t.run();
             t.metrics.summary().mean_step_s
@@ -649,7 +674,7 @@ mod tests {
             ],
         );
         let mut cfg = quick_cfg(Strategy::Flexible { policy: SelectionPolicy::Star }, 0.1, 80);
-        cfg.schedule = sched;
+        cfg.net = Box::new(sched);
         cfg.steps_per_epoch = 20;
         let src = Box::new(crate::runtime::host_model::SyntheticGrad::new(2_000_000, 3));
         let mut t = Trainer::new(cfg, src);
@@ -685,7 +710,7 @@ mod tests {
         let sched = NetSchedule::static_link(LinkParams::from_ms_gbps(10.0, 1.0))
             .with_topology(LinkParams::from_ms_gbps(0.01, 100.0), 2);
         let mut cfg = quick_cfg(Strategy::DenseSgd { flavor: DenseFlavor::TopoAuto }, 1.0, 30);
-        cfg.schedule = sched;
+        cfg.net = Box::new(sched);
         let src = Box::new(crate::runtime::host_model::SyntheticGrad::new(2_000_000, 5));
         let mut t = Trainer::new(cfg, src);
         t.run();

@@ -10,6 +10,7 @@ use crate::coordinator::session::{Session, TrainReport};
 use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig};
 use crate::coordinator::worker::ComputeModel;
 use crate::netsim::cost_model::{self, LinkParams, Topology};
+use crate::netsim::model::{NetworkModel, NET_TABLE};
 use crate::netsim::schedule::NetSchedule;
 use crate::runtime::host_model::HostMlp;
 use crate::util::table::{fmt_ms, Table};
@@ -122,6 +123,73 @@ pub fn compressed_crossover(
     out
 }
 
+/// One row of the scenario-registry sweep: how a network environment
+/// ranges over a run, and which compressed collectives the Eqn 5 decider
+/// picks across it — the "scenario diversity drives strategy diversity"
+/// view (GraVAC-style evaluations sweep exactly this axis).
+#[derive(Debug, Clone)]
+pub struct ScenarioRow {
+    /// Registry name.
+    pub name: &'static str,
+    /// Full identity ([`NetworkModel::describe`](crate::netsim::model::NetworkModel::describe)).
+    pub describe: String,
+    pub alpha_ms_range: (f64, f64),
+    pub bw_gbps_range: (f64, f64),
+    /// Distinct collectives chosen over the sampled epochs, in first-seen
+    /// order.
+    pub collectives: Vec<&'static str>,
+}
+
+/// Sweep every [`NET_TABLE`] scenario: sample each environment across
+/// `total_epochs` and record the link range plus the Eqn 5 pick per
+/// sample ([`cost_model::optimal_collective`]) for an `m_bytes` tensor on
+/// `n` ranks at compression ratio `cr`.
+pub fn scenario_rows(total_epochs: f64, m_bytes: f64, n: usize, cr: f64) -> Vec<ScenarioRow> {
+    const SAMPLES: usize = 60;
+    NET_TABLE
+        .iter()
+        .map(|s| {
+            let model = (s.build)(total_epochs);
+            let (mut a_lo, mut a_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            let (mut b_lo, mut b_hi) = (f64::INFINITY, f64::NEG_INFINITY);
+            let mut collectives: Vec<&'static str> = Vec::new();
+            for i in 0..SAMPLES {
+                let epoch = total_epochs * i as f64 / SAMPLES as f64;
+                let l = model.link_at(epoch);
+                a_lo = a_lo.min(l.alpha_ms());
+                a_hi = a_hi.max(l.alpha_ms());
+                b_lo = b_lo.min(l.bw_gbps());
+                b_hi = b_hi.max(l.bw_gbps());
+                let pick = cost_model::optimal_collective(l, m_bytes, n, cr).name();
+                if !collectives.contains(&pick) {
+                    collectives.push(pick);
+                }
+            }
+            ScenarioRow {
+                name: s.name,
+                describe: model.describe(),
+                alpha_ms_range: (a_lo, a_hi),
+                bw_gbps_range: (b_lo, b_hi),
+                collectives,
+            }
+        })
+        .collect()
+}
+
+/// Print the [`scenario_rows`] sweep in table form.
+pub fn print_scenario_sweep(total_epochs: f64, m_bytes: f64, n: usize, cr: f64) {
+    let mut t = Table::new(["scenario", "alpha (ms)", "bw (Gbps)", "Eqn 5 picks"]);
+    for r in scenario_rows(total_epochs, m_bytes, n, cr) {
+        t.row([
+            r.describe,
+            format!("{:.1}-{:.1}", r.alpha_ms_range.0, r.alpha_ms_range.1),
+            format!("{:.1}-{:.1}", r.bw_gbps_range.0, r.bw_gbps_range.1),
+            r.collectives.join(", "),
+        ]);
+    }
+    t.print();
+}
+
 /// Standard proxy-training config: 8 workers on a 4 ms / 20 Gbps link
 /// (the Tables III/IV/V setting).
 pub fn proxy_cfg(strategy: Strategy, cr: CrControl, steps: u64, seed: u64) -> TrainConfig {
@@ -135,7 +203,7 @@ pub fn proxy_cfg(strategy: Strategy, cr: CrControl, steps: u64, seed: u64) -> Tr
         lr_decay: vec![(steps * 6 / 10, 0.1)],
         strategy,
         cr,
-        schedule: NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0)),
+        net: Box::new(NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0))),
         compute: ComputeModel::with_jitter(0.030, 0.05),
         probe_noise: 0.02,
         msg_scale: 1.0,
@@ -223,9 +291,33 @@ mod tests {
             0,
         );
         assert_eq!(cfg.n_workers, 8);
-        let l = cfg.schedule.at(0.0);
+        let l = cfg.net.link_at(0.0);
         assert!((l.alpha_ms() - 4.0).abs() < 1e-9);
         assert!((l.bw_gbps() - 20.0).abs() < 1e-9);
+    }
+
+    /// The registry sweep: every scenario yields sane link ranges, and the
+    /// unpredictable ones move the Eqn 5 decision — the paper's premise
+    /// (one fixed collective cannot be optimal across environments) in
+    /// table form.
+    #[test]
+    fn scenario_sweep_covers_the_registry_and_moves_the_decision() {
+        let rows = scenario_rows(50.0, 4.0 * 25.6e6, 8, 0.01);
+        assert_eq!(rows.len(), NET_TABLE.len());
+        let mut multi_pick = 0;
+        for r in &rows {
+            assert!(r.alpha_ms_range.0 > 0.0 && r.alpha_ms_range.1.is_finite(), "{r:?}");
+            assert!(r.bw_gbps_range.0 > 0.0 && r.bw_gbps_range.1.is_finite(), "{r:?}");
+            assert!(!r.collectives.is_empty(), "{r:?}");
+            if r.collectives.len() >= 2 {
+                multi_pick += 1;
+            }
+        }
+        // C1/C2 swing between regimes, so the chosen collective must flip
+        // within at least some scenarios.
+        assert!(multi_pick >= 2, "{rows:?}");
+        // Doesn't panic; eyeball-checked in examples.
+        print_scenario_sweep(50.0, 4.0 * 25.6e6, 8, 0.01);
     }
 
     #[test]

@@ -37,8 +37,8 @@ pub mod prelude {
     pub use crate::collectives::CollectiveKind;
     pub use crate::compress::{Compressor, CompressorKind, SparseGrad};
     pub use crate::coordinator::observer::{
-        CrChange, CsvSink, EvalRecord, ProgressPrinter, StrategySwitch, SwitchDimension,
-        TrainObserver,
+        CrChange, CsvSink, EvalRecord, NetChange, ProgressPrinter, StrategySwitch,
+        SwitchDimension, TrainObserver,
     };
     pub use crate::coordinator::session::{
         ConfigError, Session, SessionBuilder, TrainReport,
@@ -48,7 +48,12 @@ pub mod prelude {
     };
     pub use crate::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
     pub use crate::netsim::cost_model::{self, LinkParams, Topology};
+    pub use crate::netsim::model::{parse_spec, NetModelError, NetworkModel, NET_TABLE};
+    pub use crate::netsim::modifiers::{
+        AsymmetricDegrade, CongestionEpisodes, Diurnal, Flapping, Jitter, TwoLevel,
+    };
     pub use crate::netsim::schedule::NetSchedule;
+    pub use crate::netsim::trace::{TraceModel, TracePoint};
     pub use crate::tensor::{Layout, ParamVec};
     pub use crate::util::pool::ThreadPool;
     pub use crate::util::rng::Rng;

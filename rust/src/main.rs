@@ -8,8 +8,10 @@
 //!
 //! Examples:
 //!   flexcomm train --model mlp --strategy artopk-star --cr 0.01 --steps 200
-//!   flexcomm train --model small --strategy flexible --adaptive --schedule c2
-//!   flexcomm train --strategy flexible --progress --out run.csv
+//!   flexcomm train --model small --strategy flexible --adaptive --net c2
+//!   flexcomm train --strategy flexible --net c2-hostile --progress --out run.csv
+//!   flexcomm train --net trace:examples/traces/c2_measured.csv
+//!   flexcomm train --net c1 --jitter 0.05 --congestion 0.1,8
 //!   flexcomm cost --table2
 //!   flexcomm schedule --name c2 --epochs 50
 
@@ -20,6 +22,10 @@ use flexcomm::coordinator::session::Session;
 use flexcomm::coordinator::trainer::{CrControl, Strategy};
 use flexcomm::coordinator::worker::{ComputeModel, GradSource};
 use flexcomm::netsim::cost_model::{self, LinkParams};
+use flexcomm::netsim::model::{parse_spec, scenario_names, NetworkModel};
+use flexcomm::netsim::modifiers::{
+    AsymmetricDegrade, CongestionEpisodes, Diurnal, Flapping, Jitter, TwoLevel,
+};
 use flexcomm::netsim::probe::Probe;
 use flexcomm::netsim::schedule::NetSchedule;
 use flexcomm::runtime::{find_artifacts_dir, Engine, HostMlp, ModelArtifacts, PjrtModel, SyntheticGrad};
@@ -43,18 +49,22 @@ fn main() -> Result<()> {
 }
 
 fn print_usage() {
-    // Strategy and schedule names print from the SAME tables the parsers
-    // use (Strategy::parse / NetSchedule::preset), so help cannot drift.
+    // Strategy and network names print from the SAME tables the parsers
+    // use (Strategy::parse / netsim::model::NET_TABLE), so help cannot
+    // drift.
     println!(
         "flexcomm — AR-Topk + flexible collectives + MOO-adaptive compression\n\
          usage: flexcomm <train|cost|schedule|info> [--flags]\n\
          strategies: {}\n\
-         schedules:  static, {}\n\
+         networks:   --net static|{}|trace:<path>\n\
+         modifiers:  --jitter F  --congestion P,FACTOR  --diurnal AMP,PERIOD\n\
+                     --flap PERIOD,DOWN,FACTOR  --asym AMULT,BWDIV  --net-seed N\n\
          try:   flexcomm train --model host-mlp --strategy artopk-star --cr 0.01\n\
+                flexcomm train --strategy flexible --net c2-hostile --progress\n\
                 flexcomm cost --table1\n\
-                flexcomm schedule --name c2",
+                flexcomm schedule --name c2-congested",
         Strategy::names().collect::<Vec<_>>().join("|"),
-        NetSchedule::PRESETS.join(", "),
+        scenario_names().collect::<Vec<_>>().join("|"),
     );
 }
 
@@ -91,34 +101,86 @@ fn cmd_train(args: &Args) -> Result<()> {
     let spe = args.u64_or("steps-per-epoch", cfgfile.int_or("train.steps_per_epoch", 50) as u64)?;
     let epochs = steps as f64 / spe.max(1) as f64;
 
-    let schedule = match args
-        .str_or("schedule", &cfgfile.str_or("net.schedule", "static"))
-        .as_str()
-    {
-        "static" => NetSchedule::static_link(LinkParams::from_ms_gbps(
-            args.f64_or("alpha-ms", cfgfile.float_or("net.alpha_ms", 4.0))?,
-            args.f64_or("bw-gbps", cfgfile.float_or("net.bw_gbps", 20.0))?,
-        )),
-        name => NetSchedule::preset(name, epochs)?,
+    // Network environment (DESIGN.md §9): `--net <scenario|trace:path>`
+    // resolves through the NET_TABLE registry; the legacy `--schedule`
+    // flag (static|c1|c2) still works, and `--net static` honours the
+    // explicit --alpha-ms/--bw-gbps link. Modifier flags then compose
+    // wrappers over the base model in a fixed, documented order.
+    let net_spec = match args.opt("net") {
+        Some(s) => Some(s.to_string()),
+        None => {
+            let from_file = cfgfile.str_or("net.model", "");
+            if from_file.is_empty() {
+                None
+            } else {
+                Some(from_file)
+            }
+        }
+    };
+    let static_link = LinkParams::from_ms_gbps(
+        args.f64_or("alpha-ms", cfgfile.float_or("net.alpha_ms", 4.0))?,
+        args.f64_or("bw-gbps", cfgfile.float_or("net.bw_gbps", 20.0))?,
+    );
+    let mut net: Box<dyn NetworkModel> = match net_spec.as_deref() {
+        Some("static") => Box::new(NetSchedule::static_link(static_link)),
+        Some(spec) => parse_spec(spec, epochs)?,
+        None => match args
+            .str_or("schedule", &cfgfile.str_or("net.schedule", "static"))
+            .as_str()
+        {
+            "static" => Box::new(NetSchedule::static_link(static_link)),
+            name => Box::new(NetSchedule::preset(name, epochs)?),
+        },
     };
 
+    // Modifier wrappers, applied inside-out in this order: jitter ->
+    // congestion -> diurnal -> flap -> asym (DESIGN.md §9 determinism
+    // contract; stochastic wrappers get distinct seeds derived from
+    // --net-seed).
+    let net_seed = args.u64_or("net-seed", seed)?;
+    if let Some(frac) = args.opt("jitter") {
+        let frac: f64 = frac.parse().context("--jitter <frac>")?;
+        net = Box::new(Jitter::wrap(net, frac, net_seed)?);
+    }
+    if args.opt("congestion").is_some() {
+        let v = args.f64_list_or("congestion", &[])?;
+        let &[prob, factor] = v.as_slice() else { bail!("--congestion <prob,factor>") };
+        net = Box::new(CongestionEpisodes::wrap(net, prob, factor, net_seed ^ 0xC0)?);
+    }
+    if args.opt("diurnal").is_some() {
+        let v = args.f64_list_or("diurnal", &[])?;
+        let &[amp, period] = v.as_slice() else { bail!("--diurnal <amplitude,period_epochs>") };
+        net = Box::new(Diurnal::wrap(net, amp, period)?);
+    }
+    if args.opt("flap").is_some() {
+        let v = args.f64_list_or("flap", &[])?;
+        let &[period, down, factor] = v.as_slice() else {
+            bail!("--flap <period_epochs,down_frac,factor>")
+        };
+        net = Box::new(Flapping::wrap(net, period, down, factor)?);
+    }
+    if args.opt("asym").is_some() {
+        let v = args.f64_list_or("asym", &[])?;
+        let &[amult, bwdiv] = v.as_slice() else { bail!("--asym <alpha_mult,bw_div>") };
+        net = Box::new(AsymmetricDegrade::wrap(net, amult, bwdiv)?);
+    }
+
     // Optional two-level topology overlay: a fast fixed intra-node link
-    // under the scheduled inter-node link (--workers-per-node > 1).
+    // under the (modified) inter-node model (--workers-per-node > 1).
     let wpn = args.usize_or(
         "workers-per-node",
         cfgfile.int_or("net.workers_per_node", 1) as usize,
     )?;
-    let schedule = if wpn > 1 {
-        schedule.with_topology(
+    if wpn > 1 {
+        net = Box::new(TwoLevel::wrap(
+            net,
             LinkParams::from_ms_gbps(
                 args.f64_or("intra-ms", cfgfile.float_or("net.intra_alpha_ms", 0.01))?,
                 args.f64_or("intra-gbps", cfgfile.float_or("net.intra_bw_gbps", 100.0))?,
             ),
             wpn,
-        )
-    } else {
-        schedule
-    };
+        )?);
+    }
 
     let cr = if args.flag("adaptive") || cfgfile.bool_or("compress.adaptive", false) {
         CrControl::Adaptive(AdaptiveConfig {
@@ -144,7 +206,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .weight_decay(args.f64_or("wd", cfgfile.float_or("train.weight_decay", 0.0))? as f32)
         .strategy(strategy)
         .cr(cr)
-        .schedule(schedule)
+        .network_boxed(net)
         .compute(ComputeModel::with_jitter(
             args.f64_or("compute-ms", cfgfile.float_or("train.compute_ms", 20.0))? * 1e-3,
             0.05,
@@ -165,8 +227,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut session = builder.build()?;
     let out = args.opt("out");
     if let Some(path) = out {
-        // Stream rows as they happen: a killed run still leaves a CSV.
-        session = session.observer(Box::new(CsvSink::create(path)?));
+        // Stream rows as they happen: a killed run still leaves a CSV,
+        // tagged with the scenario identity it ran under.
+        let scenario = session.network_describe();
+        session = session.observer(Box::new(CsvSink::create_with_scenario(path, &scenario)?));
     }
     let report = session.run();
 
@@ -174,6 +238,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut tab = Table::new(["metric", "value"]);
     tab.row(["model", &report.model]);
     tab.row(["strategy", &report.strategy]);
+    tab.row(["network", &report.network]);
     tab.row(["steps", &s.steps.to_string()]);
     tab.row(["t_step (ms)", &fmt_ms(s.mean_step_s)]);
     tab.row(["  t_compute (ms)", &fmt_ms(s.mean_compute_s)]);
@@ -232,18 +297,41 @@ fn cmd_cost(args: &Args) -> Result<()> {
 fn cmd_schedule(args: &Args) -> Result<()> {
     let name = args.str_or("name", "c1");
     let epochs = args.f64_or("epochs", 50.0)?;
-    let sched = NetSchedule::preset(&name, epochs)?;
-    let mut t = Table::new(["epoch", "alpha (ms)", "bandwidth (Gbps)"]);
-    for p in sched.phases() {
-        t.row([
-            format!("{:.0}+", p.from_epoch),
-            format!("{:.1}", p.link.alpha_ms()),
-            format!("{:.1}", p.link.bw_gbps()),
-        ]);
+    // Any registry scenario or trace:<path> works here; bare NetSchedule
+    // presets additionally print their exact Fig 6 breakpoints.
+    let model = parse_spec(&name, epochs)?;
+    println!("scenario: {}", model.describe());
+    match NetSchedule::preset(&name, epochs) {
+        Ok(sched) => {
+            let mut t = Table::new(["epoch", "alpha (ms)", "bandwidth (Gbps)"]);
+            for p in sched.phases() {
+                t.row([
+                    format!("{:.0}+", p.from_epoch),
+                    format!("{:.1}", p.link.alpha_ms()),
+                    format!("{:.1}", p.link.bw_gbps()),
+                ]);
+            }
+            t.print();
+        }
+        Err(_) => {
+            // Composite/trace model: sample the ground truth instead.
+            let mut t = Table::new(["epoch", "alpha (ms)", "bandwidth (Gbps)"]);
+            let step = (epochs / 20.0).max(0.5);
+            let mut e = 0.0;
+            while e < epochs {
+                let l = model.link_at(e);
+                t.row([
+                    format!("{e:.1}"),
+                    format!("{:.2}", l.alpha_ms()),
+                    format!("{:.2}", l.bw_gbps()),
+                ]);
+                e += step;
+            }
+            t.print();
+        }
     }
-    t.print();
     if args.flag("probe") {
-        let mut probe = Probe::new(sched, 0.05, args.u64_or("seed", 0)?);
+        let mut probe = Probe::new(model, 0.05, args.u64_or("seed", 0)?);
         println!("\nprobed observations (5% noise):");
         let mut t = Table::new(["epoch", "alpha (ms)", "bw (Gbps)", "changed"]);
         let step = (epochs / 20.0).max(0.5);

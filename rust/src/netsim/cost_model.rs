@@ -550,4 +550,44 @@ mod tests {
         assert!((t.intra.alpha - 1e-5).abs() < 1e-15, "alpha unchanged");
         assert_eq!(t.workers_per_node, 4);
     }
+
+    /// Every dense collective's closed-form cost is monotone
+    /// (non-decreasing) in the message bytes under ANY link parameters —
+    /// the sanity floor every α-β formula must clear: more bytes can never
+    /// communicate faster. Also covers the hierarchical form under random
+    /// two-level topologies.
+    #[test]
+    fn dense_costs_are_monotone_in_message_bytes() {
+        type DenseCost = (&'static str, fn(LinkParams, f64, usize) -> f64);
+        const FORMS: &[DenseCost] = &[
+            ("ps_star", ps_star),
+            ("ring_allreduce", ring_allreduce),
+            ("tree_allreduce", tree_allreduce),
+            ("halving_doubling_allreduce", halving_doubling_allreduce),
+            ("broadcast", broadcast),
+            ("allgather", allgather),
+        ];
+        check("dense cost monotone in bytes", 400, |g| {
+            let link = l(g.f64_in(0.0, 100.0), g.f64_in(0.01, 100.0));
+            let n = g.usize_in(2, 64);
+            let m1 = g.f64_in(0.0, 1e9);
+            let m2 = m1 + g.f64_in(0.0, 1e9);
+            for (name, f) in FORMS {
+                let (c1, c2) = (f(link, m1, n), f(link, m2, n));
+                ensure(
+                    c1.is_finite() && c2.is_finite() && c1 <= c2 + 1e-12 * c2.abs(),
+                    format!("{name}: cost({m1}) = {c1} > cost({m2}) = {c2} at n={n}, {link:?}"),
+                )?;
+            }
+            // Hierarchical: random two-level topology tiling n evenly.
+            let wpn = *g.choose(&[1usize, 2, 4, 8]);
+            let n = wpn * g.usize_in(1, 8).max(if wpn == 1 { 2 } else { 1 });
+            let t = Topology::two_level(l(g.f64_in(0.0, 1.0), g.f64_in(1.0, 200.0)), link, wpn);
+            let (h1, h2) = (hierarchical_allreduce(t, m1, n), hierarchical_allreduce(t, m2, n));
+            ensure(
+                h1.is_finite() && h2.is_finite() && h1 <= h2 + 1e-12 * h2.abs(),
+                format!("hierarchical: cost({m1}) = {h1} > cost({m2}) = {h2} at n={n}, wpn={wpn}"),
+            )
+        });
+    }
 }

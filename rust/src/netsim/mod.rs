@@ -6,16 +6,26 @@
 //! charged from the same α-β cost algebra the paper validates against
 //! hardware (Tables I/II/VI).
 //!
+//! * [`model`] — the [`NetworkModel`](model::NetworkModel) trait every
+//!   environment implements, plus the [`NET_TABLE`](model::NET_TABLE)
+//!   scenario registry (DESIGN.md §9).
 //! * [`cost_model`] — closed-form collective costs (Table I, Eqn 4) and the
 //!   switching heuristics (Eqn 5).
-//! * [`schedule`] — time-varying (α, β) schedules incl. the paper's C1/C2
-//!   (Fig 6), plus jitter and congestion-episode models.
+//! * [`schedule`] — piecewise (α, β) schedules incl. the paper's C1/C2
+//!   (Fig 6).
+//! * [`modifiers`] — composable environment wrappers: jitter, congestion
+//!   episodes, diurnal load, link flapping, asymmetric degradation,
+//!   two-level topology.
+//! * [`trace`] — replay of measured (epoch, α, β) trace files (CSV/JSON).
 //! * [`probe`] — the iperf/traceroute analogue: noisy observations of the
 //!   current link, with change detection.
 
 pub mod cost_model;
+pub mod model;
+pub mod modifiers;
 pub mod probe;
 pub mod schedule;
+pub mod trace;
 
 /// Virtual wall clock (seconds). The trainer advances it with compute,
 /// compression and (simulated) communication time.
@@ -33,9 +43,14 @@ impl VirtualClock {
         self.now
     }
 
+    /// Advance by `seconds`. Negative or NaN advances are a cost-model
+    /// bug: debug builds panic (loud during development and `cargo test`),
+    /// release builds clamp the advance to zero — the old behaviour
+    /// silently ran the clock BACKWARDS in release, corrupting every
+    /// virtual-time comparison downstream.
     pub fn advance(&mut self, seconds: f64) {
-        debug_assert!(seconds >= 0.0, "negative time advance {seconds}");
-        self.now += seconds;
+        debug_assert!(seconds >= 0.0, "negative/NaN time advance {seconds}");
+        self.now += seconds.max(0.0); // NaN.max(0.0) == 0.0: NaN also clamps
     }
 }
 
@@ -50,5 +65,29 @@ mod tests {
         c.advance(1.5);
         c.advance(0.5);
         assert!((c.now() - 2.0).abs() < 1e-12);
+    }
+
+    /// Regression (release profile): negative and NaN advances must not
+    /// move the clock backwards (or poison it) — they clamp to zero.
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn clock_never_runs_backwards() {
+        let mut c = VirtualClock::new();
+        c.advance(2.0);
+        c.advance(-1.0);
+        assert_eq!(c.now(), 2.0, "negative advance must clamp to zero");
+        c.advance(f64::NAN);
+        assert_eq!(c.now(), 2.0, "NaN advance must clamp to zero");
+        c.advance(0.5);
+        assert!((c.now() - 2.5).abs() < 1e-12, "clock keeps working after a clamp");
+    }
+
+    /// Regression (debug profile): a buggy cost model feeding a negative
+    /// advance stays LOUD where developers and `cargo test` run.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "time advance")]
+    fn clock_rejects_negative_advance_loudly_in_debug() {
+        VirtualClock::new().advance(-1.0);
     }
 }

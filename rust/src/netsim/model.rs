@@ -1,0 +1,318 @@
+//! The [`NetworkModel`] trait: pluggable network environments.
+//!
+//! The paper's premise is that the *best* communication strategy shifts
+//! with network conditions — which means the network side must be as
+//! pluggable as the strategy side. [`NetworkModel`] is the environment
+//! counterpart of `CommStrategy`: the trainer, probe and selector read
+//! link conditions ONLY through this trait, so a new environment (a
+//! measured trace, a synthetic failure pattern, a diurnal WAN) is a new
+//! impl — not `netsim/schedule.rs` surgery.
+//!
+//! Implementations shipped here:
+//! * [`NetSchedule`](crate::netsim::schedule::NetSchedule) — piecewise
+//!   schedules incl. the paper's C1/C2 (Fig 6).
+//! * [`TraceModel`](crate::netsim::trace::TraceModel) — replays measured
+//!   (epoch, α, β) traces from CSV/JSON files.
+//! * The [`modifiers`](crate::netsim::modifiers) wrappers — jitter,
+//!   congestion episodes, diurnal load, link flapping, asymmetric
+//!   degradation, two-level topology — compose over any model.
+//!
+//! [`NET_TABLE`] is the scenario registry: one name table feeding CLI
+//! parsing, `--help` text and error listings, exactly like the strategy
+//! side's `STRATEGY_TABLE`.
+
+use crate::netsim::cost_model::{LinkParams, Topology};
+use crate::netsim::modifiers::{
+    AsymmetricDegrade, CongestionEpisodes, Diurnal, Flapping, Jitter,
+};
+use crate::netsim::schedule::NetSchedule;
+use crate::netsim::trace::TraceModel;
+use std::fmt;
+
+/// A (possibly time-varying) network environment: everything the trainer,
+/// probe and cost model ever ask about the cluster's links.
+///
+/// Determinism contract: `link_at` and `topology_at` must be pure
+/// functions of `(self, epoch)` — the same model at the same fractional
+/// epoch always reports the same parameters, so experiments replay
+/// exactly and threads=1 vs threads=N runs stay bitwise identical under
+/// static CR control (DESIGN.md §7/§9).
+pub trait NetworkModel: fmt::Debug + Send + Sync {
+    /// Effective inter-node link parameters at a fractional epoch.
+    fn link_at(&self, epoch: f64) -> LinkParams;
+
+    /// Full cluster topology at a fractional epoch. Defaults to a flat
+    /// single-link cluster riding [`NetworkModel::link_at`].
+    fn topology_at(&self, epoch: f64) -> Topology {
+        Topology::flat(self.link_at(epoch))
+    }
+
+    /// Short base name (registry/CLI identity of the underlying scenario).
+    fn name(&self) -> &str;
+
+    /// Full self-describing identity — base name plus every modifier in
+    /// composition order (e.g. `c2+jitter(0.15)+congestion(0.2,8)`).
+    /// This is the string metrics/CSV output carries, so two runs are
+    /// comparable iff their `describe()` strings match.
+    fn describe(&self) -> String {
+        self.name().to_string()
+    }
+
+    /// Clone into a boxed trait object (`TrainConfig` must stay `Clone`).
+    fn clone_model(&self) -> Box<dyn NetworkModel>;
+}
+
+impl Clone for Box<dyn NetworkModel> {
+    fn clone(&self) -> Self {
+        self.clone_model()
+    }
+}
+
+/// A boxed model is itself a model, so registry/spec output composes
+/// directly into the [`modifiers`](crate::netsim::modifiers) wrappers
+/// (e.g. `Jitter::wrap(parse_spec("c2", 50.0)?, 0.05, seed)`).
+impl NetworkModel for Box<dyn NetworkModel> {
+    fn link_at(&self, epoch: f64) -> LinkParams {
+        (**self).link_at(epoch)
+    }
+
+    fn topology_at(&self, epoch: f64) -> Topology {
+        (**self).topology_at(epoch)
+    }
+
+    fn name(&self) -> &str {
+        (**self).name()
+    }
+
+    fn describe(&self) -> String {
+        (**self).describe()
+    }
+
+    fn clone_model(&self) -> Box<dyn NetworkModel> {
+        (**self).clone_model()
+    }
+}
+
+/// A network environment the loader/composer refused. Every variant is a
+/// misconfiguration that used to be an `assert!` (or a silent
+/// mid-experiment panic); carried by
+/// [`ConfigError::Network`](crate::coordinator::session::ConfigError) into
+/// the Session builder's typed-error surface.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetModelError {
+    /// Trace file could not be read.
+    TraceIo { path: String, reason: String },
+    /// Trace file line that did not parse.
+    TraceParse { path: String, line: usize, reason: String },
+    /// Trace file with no usable points.
+    EmptyTrace { path: String },
+    /// Trace points not strictly increasing in epoch.
+    UnsortedTrace { path: String, line: usize },
+    /// A modifier wrapper given out-of-range parameters.
+    BadModifier { modifier: &'static str, reason: String },
+    /// `--net` spec naming no registry scenario (lists the valid names).
+    UnknownScenario { spec: String },
+}
+
+impl fmt::Display for NetModelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NetModelError::TraceIo { path, reason } => {
+                write!(f, "trace `{path}`: {reason}")
+            }
+            NetModelError::TraceParse { path, line, reason } => {
+                write!(f, "trace `{path}` line {line}: {reason}")
+            }
+            NetModelError::EmptyTrace { path } => {
+                write!(f, "trace `{path}`: no trace points")
+            }
+            NetModelError::UnsortedTrace { path, line } => write!(
+                f,
+                "trace `{path}` line {line}: epochs must be strictly increasing"
+            ),
+            NetModelError::BadModifier { modifier, reason } => {
+                write!(f, "network modifier `{modifier}`: {reason}")
+            }
+            NetModelError::UnknownScenario { spec } => write!(
+                f,
+                "unknown network scenario `{spec}` (valid: {}; or `trace:<path>` \
+                 to replay a measured CSV/JSON trace)",
+                scenario_names().collect::<Vec<_>>().join(", ")
+            ),
+        }
+    }
+}
+
+impl std::error::Error for NetModelError {}
+
+/// One scenario registry row: a name, a one-line summary (printed by
+/// `--help`-style listings), and a constructor scaled to the run's total
+/// epoch count (the paper's schedules are defined over 50 epochs and
+/// stretch to the run length, Fig 6).
+pub struct NetScenario {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub build: fn(total_epochs: f64) -> Box<dyn NetworkModel>,
+}
+
+/// The one scenario-name table: CLI parsing ([`parse_spec`]), usage text
+/// and preset error listings all read from here, so a new environment is
+/// one new row (mirror of the strategy side's `STRATEGY_TABLE`).
+pub const NET_TABLE: &[NetScenario] = &[
+    NetScenario {
+        name: "c1",
+        summary: "paper Fig 6a: 4 phases, one big latency+bandwidth swing",
+        build: |e| Box::new(NetSchedule::c1(e)),
+    },
+    NetScenario {
+        name: "c2",
+        summary: "paper Fig 6b: 5 phases, degrades then recovers",
+        build: |e| Box::new(NetSchedule::c2(e)),
+    },
+    NetScenario {
+        name: "c1-jitter",
+        summary: "C1 with ±5% multiplicative link jitter",
+        build: |e| {
+            Box::new(
+                Jitter::wrap(NetSchedule::c1(e), 0.05, 11).expect("registry params valid"),
+            )
+        },
+    },
+    NetScenario {
+        name: "c2-congested",
+        summary: "C2 with 15%-probability 8x bandwidth-collapse episodes",
+        build: |e| {
+            Box::new(
+                CongestionEpisodes::wrap(NetSchedule::c2(e), 0.15, 8.0, 12)
+                    .expect("registry params valid"),
+            )
+        },
+    },
+    NetScenario {
+        name: "c2-hostile",
+        summary: "C2 + 15% jitter + 20%-probability 8x congestion episodes",
+        build: |e| {
+            let jittered =
+                Jitter::wrap(NetSchedule::c2(e), 0.15, 13).expect("registry params valid");
+            Box::new(
+                CongestionEpisodes::wrap(jittered, 0.2, 8.0, 14)
+                    .expect("registry params valid"),
+            )
+        },
+    },
+    NetScenario {
+        name: "diurnal",
+        summary: "shared WAN day/night cycle: bandwidth swings ±50% sinusoidally",
+        build: |e| {
+            let base = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0));
+            Box::new(
+                Diurnal::wrap(base, 0.5, (e / 5.0).max(0.2)).expect("registry params valid"),
+            )
+        },
+    },
+    NetScenario {
+        name: "flaky",
+        summary: "link flaps: 30% of every cycle on a 16x-degraded backup path",
+        build: |e| {
+            let base = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0));
+            Box::new(
+                Flapping::wrap(base, (e / 10.0).max(0.1), 0.3, 16.0)
+                    .expect("registry params valid"),
+            )
+        },
+    },
+    NetScenario {
+        name: "asym",
+        summary: "asymmetric degradation: 50x latency at full bandwidth (AG corner)",
+        build: |_| {
+            let base = NetSchedule::static_link(LinkParams::from_ms_gbps(1.0, 25.0));
+            Box::new(AsymmetricDegrade::wrap(base, 50.0, 1.0).expect("registry params valid"))
+        },
+    },
+];
+
+/// Every registered scenario name, in table order (usage/help text).
+pub fn scenario_names() -> impl Iterator<Item = &'static str> {
+    NET_TABLE.iter().map(|s| s.name)
+}
+
+/// Build a registry scenario by name, scaled to `total_epochs`.
+pub fn build_scenario(
+    name: &str,
+    total_epochs: f64,
+) -> Result<Box<dyn NetworkModel>, NetModelError> {
+    match NET_TABLE.iter().find(|s| s.name == name) {
+        Some(s) => Ok((s.build)(total_epochs)),
+        None => Err(NetModelError::UnknownScenario { spec: name.to_string() }),
+    }
+}
+
+/// Parse a `--net` spec: a registry scenario name, or `trace:<path>` to
+/// replay a measured trace file. The error lists every valid name.
+pub fn parse_spec(
+    spec: &str,
+    total_epochs: f64,
+) -> Result<Box<dyn NetworkModel>, NetModelError> {
+    match spec.strip_prefix("trace:") {
+        Some(path) => Ok(Box::new(TraceModel::load(path)?)),
+        None => build_scenario(spec, total_epochs),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_names_are_unique_and_build() {
+        let mut seen = std::collections::BTreeSet::new();
+        for s in NET_TABLE {
+            assert!(seen.insert(s.name), "duplicate scenario name {}", s.name);
+            let m = (s.build)(50.0);
+            assert!(!m.describe().is_empty());
+            for e in [0.0, 7.3, 25.0, 49.9, 80.0] {
+                let l = m.link_at(e);
+                assert!(l.alpha >= 0.0 && l.alpha.is_finite(), "{} α at {e}", s.name);
+                assert!(l.beta > 0.0 && l.beta.is_finite(), "{} β at {e}", s.name);
+                let t = m.topology_at(e);
+                assert_eq!(t.inter, l, "{}: topology must ride link_at", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn parse_spec_resolves_names_and_lists_them_on_error() {
+        for s in NET_TABLE {
+            assert!(parse_spec(s.name, 50.0).is_ok(), "{}", s.name);
+        }
+        let err = parse_spec("nope", 50.0).unwrap_err().to_string();
+        assert!(err.contains("c1") && err.contains("flaky") && err.contains("trace:"), "{err}");
+    }
+
+    #[test]
+    fn parse_spec_trace_prefix_reports_io_errors_typed() {
+        let err = parse_spec("trace:/nonexistent/file.csv", 50.0).unwrap_err();
+        assert!(matches!(err, NetModelError::TraceIo { .. }), "{err:?}");
+    }
+
+    #[test]
+    fn boxed_models_clone_and_describe() {
+        let m = build_scenario("c2-hostile", 50.0).unwrap();
+        let c = m.clone();
+        assert_eq!(m.describe(), c.describe());
+        assert_eq!(m.name(), "c2");
+        assert!(m.describe().contains("jitter") && m.describe().contains("congestion"));
+        assert_eq!(m.link_at(17.7), c.link_at(17.7));
+    }
+
+    #[test]
+    fn scenarios_are_deterministic_per_epoch() {
+        for s in NET_TABLE {
+            let (a, b) = ((s.build)(50.0), (s.build)(50.0));
+            for e in [0.0, 3.14, 42.0] {
+                let (la, lb) = (a.link_at(e), b.link_at(e));
+                assert_eq!(la, lb, "{} at {e}", s.name);
+            }
+        }
+    }
+}

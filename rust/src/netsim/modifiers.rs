@@ -1,0 +1,552 @@
+//! Composable network-environment modifiers.
+//!
+//! Each wrapper takes any [`NetworkModel`] and perturbs what it reports,
+//! replacing the overlay *fields* that used to be baked into
+//! `NetSchedule` (`with_jitter`/`with_congestion`) with free-standing
+//! compositions: `Congestion(Jitter(c2))`, `Diurnal(trace)`, ...
+//!
+//! Determinism contract (DESIGN.md §9): every wrapper's perturbation is a
+//! pure function of `(its own parameters, epoch)` — stochastic wrappers
+//! derive a fresh RNG per 0.1-epoch bucket from their seed, exactly like
+//! the old in-schedule overlays, so the same composition replays
+//! bit-identically. Composition applies inside-out (the outermost wrapper
+//! perturbs last). Stochastic wrappers composed with the SAME seed draw
+//! correlated streams — give each overlay its own seed.
+//!
+//! All wrappers perturb the **inter**-node link only: `topology_at` keeps
+//! the inner model's intra link and node shape, mirroring the paper's
+//! setup where `tc` shapes the TCP side while in-machine hardware stays
+//! fixed.
+
+use crate::netsim::cost_model::{LinkParams, Topology};
+use crate::netsim::model::{NetModelError, NetworkModel};
+use crate::util::rng::Rng;
+
+/// Per-0.1-epoch-bucket RNG — the same derivation the old in-schedule
+/// overlays used, so migrated call sites replay identically.
+fn bucket_rng(seed: u64, epoch: f64) -> Rng {
+    let bucket = (epoch * 10.0).floor() as u64;
+    Rng::new(seed ^ bucket.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+fn bad(modifier: &'static str, reason: String) -> NetModelError {
+    NetModelError::BadModifier { modifier, reason }
+}
+
+macro_rules! impl_inter_modifier {
+    ($ty:ident) => {
+        impl NetworkModel for $ty {
+            fn link_at(&self, epoch: f64) -> LinkParams {
+                self.perturb(self.inner.link_at(epoch), epoch)
+            }
+
+            fn topology_at(&self, epoch: f64) -> Topology {
+                let mut t = self.inner.topology_at(epoch);
+                t.inter = self.perturb(t.inter, epoch);
+                t
+            }
+
+            fn name(&self) -> &str {
+                self.inner.name()
+            }
+
+            fn describe(&self) -> String {
+                format!("{}+{}", self.inner.describe(), self.suffix())
+            }
+
+            fn clone_model(&self) -> Box<dyn NetworkModel> {
+                Box::new(self.clone())
+            }
+        }
+    };
+}
+
+/// Multiplicative observation-free jitter: α and bandwidth each move by a
+/// uniform ±`frac` factor, re-drawn deterministically per 0.1-epoch
+/// bucket (identical to the old `NetSchedule::with_jitter` overlay).
+#[derive(Debug, Clone)]
+pub struct Jitter {
+    inner: Box<dyn NetworkModel>,
+    frac: f64,
+    seed: u64,
+}
+
+impl Jitter {
+    /// `frac` must be in `[0, 1)` (a full-unit jitter could zero the link).
+    pub fn wrap(
+        inner: impl NetworkModel + 'static,
+        frac: f64,
+        seed: u64,
+    ) -> Result<Jitter, NetModelError> {
+        if !(0.0..1.0).contains(&frac) {
+            return Err(bad("jitter", format!("frac {frac} outside [0, 1)")));
+        }
+        Ok(Jitter { inner: Box::new(inner), frac, seed })
+    }
+
+    fn perturb(&self, mut link: LinkParams, epoch: f64) -> LinkParams {
+        if self.frac == 0.0 {
+            return link;
+        }
+        let mut rng = bucket_rng(self.seed, epoch);
+        let ja = 1.0 + self.frac * (2.0 * rng.f64() - 1.0);
+        let jb = 1.0 + self.frac * (2.0 * rng.f64() - 1.0);
+        link.alpha *= ja;
+        link.beta /= jb; // jitter bandwidth, not beta, symmetrically
+        link
+    }
+
+    fn suffix(&self) -> String {
+        format!("jitter({})", self.frac)
+    }
+}
+
+impl_inter_modifier!(Jitter);
+
+/// Congestion episodes: with probability `prob` per 0.1-epoch bucket the
+/// effective bandwidth collapses by `factor` (identical to the old
+/// `NetSchedule::with_congestion` overlay).
+#[derive(Debug, Clone)]
+pub struct CongestionEpisodes {
+    inner: Box<dyn NetworkModel>,
+    prob: f64,
+    factor: f64,
+    seed: u64,
+}
+
+impl CongestionEpisodes {
+    /// `prob` in `[0, 1]`, `factor >= 1`.
+    pub fn wrap(
+        inner: impl NetworkModel + 'static,
+        prob: f64,
+        factor: f64,
+        seed: u64,
+    ) -> Result<CongestionEpisodes, NetModelError> {
+        if !(0.0..=1.0).contains(&prob) {
+            return Err(bad("congestion", format!("prob {prob} outside [0, 1]")));
+        }
+        if factor.is_nan() || factor < 1.0 {
+            return Err(bad("congestion", format!("factor {factor} must be >= 1")));
+        }
+        Ok(CongestionEpisodes { inner: Box::new(inner), prob, factor, seed })
+    }
+
+    fn perturb(&self, mut link: LinkParams, epoch: f64) -> LinkParams {
+        if self.prob == 0.0 {
+            return link;
+        }
+        let mut rng = bucket_rng(self.seed, epoch);
+        if rng.f64() < self.prob {
+            link.beta *= self.factor;
+        }
+        link
+    }
+
+    fn suffix(&self) -> String {
+        format!("congestion({},{})", self.prob, self.factor)
+    }
+}
+
+impl_inter_modifier!(CongestionEpisodes);
+
+/// Diurnal load: effective bandwidth swings sinusoidally by ±`amplitude`
+/// over a `period_epochs` cycle (a shared WAN's day/night utilization —
+/// the §2-C2 "resource sharing" variability source). Deterministic, no
+/// RNG; latency is untouched (queueing on a shared path shows up as
+/// throughput first).
+#[derive(Debug, Clone)]
+pub struct Diurnal {
+    inner: Box<dyn NetworkModel>,
+    amplitude: f64,
+    period_epochs: f64,
+}
+
+impl Diurnal {
+    /// `amplitude` in `[0, 1)` (1 would zero the bandwidth at the trough),
+    /// `period_epochs > 0`.
+    pub fn wrap(
+        inner: impl NetworkModel + 'static,
+        amplitude: f64,
+        period_epochs: f64,
+    ) -> Result<Diurnal, NetModelError> {
+        if !(0.0..1.0).contains(&amplitude) {
+            return Err(bad("diurnal", format!("amplitude {amplitude} outside [0, 1)")));
+        }
+        if period_epochs.is_nan() || period_epochs <= 0.0 {
+            return Err(bad("diurnal", format!("period {period_epochs} must be > 0")));
+        }
+        Ok(Diurnal { inner: Box::new(inner), amplitude, period_epochs })
+    }
+
+    fn perturb(&self, mut link: LinkParams, epoch: f64) -> LinkParams {
+        let phase = 2.0 * std::f64::consts::PI * epoch / self.period_epochs;
+        let mult = 1.0 + self.amplitude * phase.sin();
+        link.beta /= mult; // bandwidth × mult  ⇔  β ÷ mult
+        link
+    }
+
+    fn suffix(&self) -> String {
+        format!("diurnal({},{})", self.amplitude, self.period_epochs)
+    }
+}
+
+impl_inter_modifier!(Diurnal);
+
+/// Link flapping: every `period_epochs` cycle, the last `down_frac` of the
+/// cycle reroutes over a `factor`-times-worse backup path (α and β both
+/// degrade — a failover crosses extra hops AND loses capacity).
+/// Deterministic square wave, no RNG.
+#[derive(Debug, Clone)]
+pub struct Flapping {
+    inner: Box<dyn NetworkModel>,
+    period_epochs: f64,
+    down_frac: f64,
+    factor: f64,
+}
+
+impl Flapping {
+    /// `period_epochs > 0`, `down_frac` in `(0, 1)`, `factor >= 1`.
+    pub fn wrap(
+        inner: impl NetworkModel + 'static,
+        period_epochs: f64,
+        down_frac: f64,
+        factor: f64,
+    ) -> Result<Flapping, NetModelError> {
+        if period_epochs.is_nan() || period_epochs <= 0.0 {
+            return Err(bad("flap", format!("period {period_epochs} must be > 0")));
+        }
+        if down_frac.is_nan() || down_frac <= 0.0 || down_frac >= 1.0 {
+            return Err(bad("flap", format!("down_frac {down_frac} outside (0, 1)")));
+        }
+        if factor.is_nan() || factor < 1.0 {
+            return Err(bad("flap", format!("factor {factor} must be >= 1")));
+        }
+        Ok(Flapping { inner: Box::new(inner), period_epochs, down_frac, factor })
+    }
+
+    /// True when `epoch` falls in the degraded tail of its cycle.
+    pub fn is_down(&self, epoch: f64) -> bool {
+        let pos = (epoch / self.period_epochs).rem_euclid(1.0);
+        pos >= 1.0 - self.down_frac
+    }
+
+    fn perturb(&self, mut link: LinkParams, epoch: f64) -> LinkParams {
+        if self.is_down(epoch) {
+            link.alpha *= self.factor;
+            link.beta *= self.factor;
+        }
+        link
+    }
+
+    fn suffix(&self) -> String {
+        format!("flap({},{},{})", self.period_epochs, self.down_frac, self.factor)
+    }
+}
+
+impl_inter_modifier!(Flapping);
+
+/// Asymmetric degradation: a constant multiplier on α and a constant
+/// divisor on bandwidth, independently. Models the paper's observation
+/// that latency and bandwidth drift independently (Tables I/II/VI corners:
+/// `asym(50, 1)` is the high-α/high-bw regime where Allgather wins).
+#[derive(Debug, Clone)]
+pub struct AsymmetricDegrade {
+    inner: Box<dyn NetworkModel>,
+    alpha_mult: f64,
+    bw_div: f64,
+}
+
+impl AsymmetricDegrade {
+    /// Both factors `>= 1` (this wrapper only degrades; at least one may
+    /// be exactly 1 for a single-axis perturbation).
+    pub fn wrap(
+        inner: impl NetworkModel + 'static,
+        alpha_mult: f64,
+        bw_div: f64,
+    ) -> Result<AsymmetricDegrade, NetModelError> {
+        if alpha_mult.is_nan() || bw_div.is_nan() || alpha_mult < 1.0 || bw_div < 1.0 {
+            return Err(bad(
+                "asym",
+                format!("factors must be >= 1 (got alpha x{alpha_mult}, bw /{bw_div})"),
+            ));
+        }
+        Ok(AsymmetricDegrade { inner: Box::new(inner), alpha_mult, bw_div })
+    }
+
+    fn perturb(&self, mut link: LinkParams, _epoch: f64) -> LinkParams {
+        link.alpha *= self.alpha_mult;
+        link.beta *= self.bw_div; // bandwidth ÷ d  ⇔  β × d
+        link
+    }
+
+    fn suffix(&self) -> String {
+        format!("asym({},{})", self.alpha_mult, self.bw_div)
+    }
+}
+
+impl_inter_modifier!(AsymmetricDegrade);
+
+/// Two-level topology overlay: `workers_per_node` ranks share a fixed
+/// `intra` link; the wrapped model drives the inter-node side. The generic
+/// counterpart of `NetSchedule::with_topology` — it composes over traces
+/// and other modifiers too.
+#[derive(Debug, Clone)]
+pub struct TwoLevel {
+    inner: Box<dyn NetworkModel>,
+    intra: LinkParams,
+    workers_per_node: usize,
+}
+
+impl TwoLevel {
+    /// `workers_per_node >= 1` (1 degenerates to the flat inner model).
+    pub fn wrap(
+        inner: impl NetworkModel + 'static,
+        intra: LinkParams,
+        workers_per_node: usize,
+    ) -> Result<TwoLevel, NetModelError> {
+        if workers_per_node == 0 {
+            return Err(bad("2level", "workers_per_node must be >= 1".into()));
+        }
+        Ok(TwoLevel { inner: Box::new(inner), intra, workers_per_node })
+    }
+}
+
+impl NetworkModel for TwoLevel {
+    fn link_at(&self, epoch: f64) -> LinkParams {
+        self.inner.link_at(epoch)
+    }
+
+    fn topology_at(&self, epoch: f64) -> Topology {
+        if self.workers_per_node > 1 {
+            Topology::two_level(self.intra, self.inner.link_at(epoch), self.workers_per_node)
+        } else {
+            self.inner.topology_at(epoch)
+        }
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn describe(&self) -> String {
+        format!("{}+2level(x{})", self.inner.describe(), self.workers_per_node)
+    }
+
+    fn clone_model(&self) -> Box<dyn NetworkModel> {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::schedule::NetSchedule;
+    use crate::util::proptest::{check, ensure};
+
+    fn base() -> NetSchedule {
+        NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0))
+    }
+
+    /// The DELETED `NetSchedule::at` overlay logic, verbatim — the
+    /// "before" reference that pins the migration as a no-behavior-change
+    /// refactor: a lone jitter (or congestion) wrapper must reproduce the
+    /// old in-schedule overlay bit-for-bit.
+    fn legacy_overlay(
+        mut link: LinkParams,
+        epoch: f64,
+        jitter_frac: f64,
+        congestion_prob: f64,
+        congestion_factor: f64,
+        seed: u64,
+    ) -> LinkParams {
+        if jitter_frac == 0.0 && congestion_prob == 0.0 {
+            return link;
+        }
+        let bucket = (epoch * 10.0).floor() as u64;
+        let mut rng = Rng::new(seed ^ bucket.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        if jitter_frac > 0.0 {
+            let ja = 1.0 + jitter_frac * (2.0 * rng.f64() - 1.0);
+            let jb = 1.0 + jitter_frac * (2.0 * rng.f64() - 1.0);
+            link.alpha *= ja;
+            link.beta /= jb;
+        }
+        if congestion_prob > 0.0 && rng.f64() < congestion_prob {
+            link.beta *= congestion_factor;
+        }
+        link
+    }
+
+    #[test]
+    fn jitter_wrapper_is_bitwise_equal_to_the_old_overlay() {
+        check("jitter == legacy with_jitter", 300, |g| {
+            let frac = g.f64_in(0.0, 0.5);
+            let seed = g.rng.next_u64();
+            let epoch = g.f64_in(0.0, 60.0);
+            let j = Jitter::wrap(base(), frac, seed).unwrap();
+            let got = j.link_at(epoch);
+            let want = legacy_overlay(base().at(epoch), epoch, frac, 0.0, 1.0, seed);
+            ensure(
+                got.alpha.to_bits() == want.alpha.to_bits()
+                    && got.beta.to_bits() == want.beta.to_bits(),
+                format!("epoch {epoch} frac {frac} seed {seed}: {got:?} vs {want:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn congestion_wrapper_is_bitwise_equal_to_the_old_overlay() {
+        check("congestion == legacy with_congestion", 300, |g| {
+            let prob = g.f64_in(0.0, 1.0);
+            let factor = g.f64_in(1.0, 20.0);
+            let seed = g.rng.next_u64();
+            let epoch = g.f64_in(0.0, 60.0);
+            let c = CongestionEpisodes::wrap(base(), prob, factor, seed).unwrap();
+            let got = c.link_at(epoch);
+            let want = legacy_overlay(base().at(epoch), epoch, 0.0, prob, factor, seed);
+            ensure(
+                got.alpha.to_bits() == want.alpha.to_bits()
+                    && got.beta.to_bits() == want.beta.to_bits(),
+                format!("epoch {epoch} prob {prob} seed {seed}: {got:?} vs {want:?}"),
+            )
+        });
+    }
+
+    #[test]
+    fn jitter_is_bounded_and_deterministic() {
+        let s = Jitter::wrap(NetSchedule::c1(50.0), 0.1, 7).unwrap();
+        let a = s.link_at(3.14);
+        let b = s.link_at(3.14);
+        assert_eq!(a, b, "same epoch must give same link");
+        let base = NetSchedule::c1(50.0).at(3.14);
+        assert!((a.alpha / base.alpha - 1.0).abs() <= 0.1 + 1e-9);
+        let ratio = base.beta / a.beta;
+        assert!((ratio - 1.0).abs() <= 0.1 + 1e-9);
+    }
+
+    #[test]
+    fn congestion_reduces_bandwidth_sometimes() {
+        let s = CongestionEpisodes::wrap(
+            NetSchedule::static_link(LinkParams::from_ms_gbps(1.0, 10.0)),
+            0.5,
+            10.0,
+            3,
+        )
+        .unwrap();
+        let (mut congested, mut free) = (0, 0);
+        for i in 0..200 {
+            let l = s.link_at(i as f64 * 0.1);
+            if l.bw_gbps() < 2.0 {
+                congested += 1;
+            } else {
+                free += 1;
+            }
+        }
+        assert!(congested > 30, "{congested}");
+        assert!(free > 30, "{free}");
+    }
+
+    #[test]
+    fn diurnal_cycles_bandwidth_and_keeps_it_positive() {
+        let d = Diurnal::wrap(base(), 0.5, 10.0).unwrap();
+        let bw = |e: f64| d.link_at(e).bw_gbps();
+        // Quarter-cycle peak, three-quarter trough, node at cycle ends.
+        assert!((bw(2.5) - 30.0).abs() < 1e-6, "{}", bw(2.5));
+        assert!((bw(7.5) - 10.0).abs() < 1e-6, "{}", bw(7.5));
+        assert!((bw(0.0) - 20.0).abs() < 1e-6);
+        assert!((bw(10.0) - 20.0).abs() < 1e-6);
+        for i in 0..100 {
+            let l = d.link_at(i as f64 * 0.37);
+            assert!(l.beta > 0.0 && l.beta.is_finite());
+            assert_eq!(l.alpha, 4e-3, "diurnal must not touch latency");
+        }
+    }
+
+    #[test]
+    fn flapping_degrades_exactly_the_down_window() {
+        let f = Flapping::wrap(base(), 10.0, 0.3, 16.0).unwrap();
+        let up = f.link_at(2.0);
+        let down = f.link_at(8.0); // pos 0.8 >= 0.7
+        assert!(!f.is_down(2.0) && f.is_down(8.0));
+        assert!((down.alpha / up.alpha - 16.0).abs() < 1e-9);
+        assert!((down.beta / up.beta - 16.0).abs() < 1e-9);
+        // Periodic: the next cycle flaps the same way.
+        assert_eq!(f.link_at(18.0), down);
+        assert_eq!(f.link_at(12.0), up);
+    }
+
+    #[test]
+    fn asymmetric_degrade_moves_one_axis_at_a_time() {
+        let lat = AsymmetricDegrade::wrap(base(), 50.0, 1.0).unwrap();
+        let l = lat.link_at(0.0);
+        assert!((l.alpha_ms() - 200.0).abs() < 1e-9);
+        assert!((l.bw_gbps() - 20.0).abs() < 1e-9);
+        let bw = AsymmetricDegrade::wrap(base(), 1.0, 4.0).unwrap();
+        let l = bw.link_at(0.0);
+        assert!((l.alpha_ms() - 4.0).abs() < 1e-9);
+        assert!((l.bw_gbps() - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn two_level_overlay_drives_inter_only() {
+        let intra = LinkParams::from_ms_gbps(0.01, 100.0);
+        let m = TwoLevel::wrap(
+            Jitter::wrap(NetSchedule::c1(50.0), 0.1, 9).unwrap(),
+            intra,
+            4,
+        )
+        .unwrap();
+        for epoch in [0.0, 13.0, 26.0, 40.0] {
+            let t = m.topology_at(epoch);
+            assert_eq!(t.workers_per_node, 4);
+            // The inter side follows the (jittered) schedule...
+            assert_eq!(t.inter, m.link_at(epoch));
+            // ...while the intra link stays the fixed in-machine hardware.
+            assert_eq!(t.intra, intra);
+        }
+    }
+
+    #[test]
+    fn modifiers_perturb_only_the_inter_link_of_two_level_inner_models() {
+        let intra = LinkParams::from_ms_gbps(0.01, 100.0);
+        let sched = NetSchedule::c1(50.0).with_topology(intra, 2);
+        let j = Jitter::wrap(sched, 0.2, 5).unwrap();
+        let t = j.topology_at(3.0);
+        assert_eq!(t.intra, intra);
+        assert_eq!(t.workers_per_node, 2);
+        assert_eq!(t.inter, j.link_at(3.0));
+    }
+
+    #[test]
+    fn describe_records_the_composition_in_order() {
+        let m = CongestionEpisodes::wrap(
+            Jitter::wrap(NetSchedule::c2(50.0), 0.15, 13).unwrap(),
+            0.2,
+            8.0,
+            14,
+        )
+        .unwrap();
+        assert_eq!(m.describe(), "c2+jitter(0.15)+congestion(0.2,8)");
+        assert_eq!(m.name(), "c2", "base name survives wrapping");
+    }
+
+    #[test]
+    fn bad_compositions_are_typed_errors() {
+        assert!(matches!(
+            Jitter::wrap(base(), 1.5, 0),
+            Err(NetModelError::BadModifier { modifier: "jitter", .. })
+        ));
+        assert!(matches!(
+            Jitter::wrap(base(), f64::NAN, 0),
+            Err(NetModelError::BadModifier { .. })
+        ));
+        assert!(CongestionEpisodes::wrap(base(), 1.1, 2.0, 0).is_err());
+        assert!(CongestionEpisodes::wrap(base(), 0.5, 0.5, 0).is_err());
+        assert!(Diurnal::wrap(base(), 1.0, 10.0).is_err());
+        assert!(Diurnal::wrap(base(), 0.5, 0.0).is_err());
+        assert!(Flapping::wrap(base(), 0.0, 0.3, 2.0).is_err());
+        assert!(Flapping::wrap(base(), 1.0, 1.0, 2.0).is_err());
+        assert!(Flapping::wrap(base(), 1.0, 0.3, 0.9).is_err());
+        assert!(AsymmetricDegrade::wrap(base(), 0.5, 1.0).is_err());
+        assert!(TwoLevel::wrap(base(), LinkParams::from_ms_gbps(0.01, 100.0), 0).is_err());
+    }
+}

@@ -3,10 +3,11 @@
 //! The paper runs a background process that measures bandwidth with iperf
 //! and latency with traceroute, and triggers re-optimization when either
 //! drifts past a threshold. The controller here likewise never reads the
-//! schedule's ground truth — it sees only noisy [`Probe`] observations.
+//! environment's ground truth — it sees only noisy [`Probe`] observations
+//! of whatever [`NetworkModel`] the run is configured with.
 
 use crate::netsim::cost_model::LinkParams;
-use crate::netsim::schedule::NetSchedule;
+use crate::netsim::model::NetworkModel;
 use crate::util::rng::Rng;
 
 /// One observation of the link.
@@ -24,10 +25,12 @@ impl Observation {
 }
 
 /// Periodic prober with multiplicative observation noise and
-/// relative-change detection.
+/// relative-change detection. Reads conditions only through the
+/// [`NetworkModel`] trait object, so it probes schedules, traces and
+/// modifier compositions identically.
 #[derive(Debug)]
 pub struct Probe {
-    schedule: NetSchedule,
+    net: Box<dyn NetworkModel>,
     noise_frac: f64,
     rng: Rng,
     last: Option<Observation>,
@@ -36,10 +39,10 @@ pub struct Probe {
 }
 
 impl Probe {
-    pub fn new(schedule: NetSchedule, noise_frac: f64, seed: u64) -> Self {
+    pub fn new(net: Box<dyn NetworkModel>, noise_frac: f64, seed: u64) -> Self {
         assert!((0.0..0.5).contains(&noise_frac));
         Probe {
-            schedule,
+            net,
             noise_frac,
             rng: Rng::new(seed),
             last: None,
@@ -49,7 +52,7 @@ impl Probe {
 
     /// Measure the link at `epoch` (noisy).
     pub fn measure(&mut self, epoch: f64) -> Observation {
-        let truth = self.schedule.at(epoch);
+        let truth = self.net.link_at(epoch);
         let na = 1.0 + self.noise_frac * (2.0 * self.rng.f64() - 1.0);
         let nb = 1.0 + self.noise_frac * (2.0 * self.rng.f64() - 1.0);
         Observation {
@@ -92,12 +95,13 @@ fn rel_change(old: f64, new: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::netsim::modifiers::Jitter;
     use crate::netsim::schedule::NetSchedule;
 
     #[test]
     fn noise_is_bounded() {
         let sched = NetSchedule::static_link(LinkParams::from_ms_gbps(10.0, 10.0));
-        let mut p = Probe::new(sched, 0.05, 1);
+        let mut p = Probe::new(Box::new(sched), 0.05, 1);
         for i in 0..100 {
             let o = p.measure(i as f64 * 0.1);
             assert!((o.alpha_ms - 10.0).abs() <= 0.5 + 1e-9);
@@ -107,7 +111,7 @@ mod tests {
 
     #[test]
     fn detects_c1_phase_changes_and_not_noise() {
-        let mut p = Probe::new(NetSchedule::c1(50.0), 0.02, 2);
+        let mut p = Probe::new(Box::new(NetSchedule::c1(50.0)), 0.02, 2);
         // First measurement always counts as a change (establishes baseline).
         let (_, first) = p.measure_and_detect(1.0);
         assert!(first);
@@ -125,9 +129,9 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let s = NetSchedule::c2(50.0).with_jitter(0.05, 9);
-        let mut a = Probe::new(s.clone(), 0.05, 42);
-        let mut b = Probe::new(s, 0.05, 42);
+        let s = Jitter::wrap(NetSchedule::c2(50.0), 0.05, 9).unwrap();
+        let mut a = Probe::new(Box::new(s.clone()), 0.05, 42);
+        let mut b = Probe::new(Box::new(s), 0.05, 42);
         for i in 0..20 {
             let (oa, ca) = a.measure_and_detect(i as f64);
             let (ob, cb) = b.measure_and_detect(i as f64);

@@ -1,14 +1,16 @@
-//! Time-varying network schedules — the "unpredictable network" half of the
-//! paper's title.
+//! Piecewise network schedules — the paper's C1/C2 configurations.
 //!
 //! The paper drives `tc` from a background process to emulate latency and
-//! bandwidth that change over epochs (Fig 6, configurations C1/C2) and
-//! attributes real-world variability to congestion, QoS priorities,
-//! resource sharing and scheduling (§2-C2). [`NetSchedule`] reproduces all
-//! of these as composable layers over a base piecewise schedule.
+//! bandwidth that change over epochs (Fig 6, configurations C1/C2).
+//! [`NetSchedule`] reproduces those as a piecewise-constant
+//! [`NetworkModel`]; the §2-C2 variability sources (congestion, QoS
+//! priorities, resource sharing, scheduling) are composable wrappers in
+//! [`modifiers`](crate::netsim::modifiers) — e.g.
+//! `Jitter::wrap(NetSchedule::c2(50.0), 0.05, seed)` — and measured
+//! traces replay via [`TraceModel`](crate::netsim::trace::TraceModel).
 
 use crate::netsim::cost_model::{LinkParams, Topology};
-use crate::util::rng::Rng;
+use crate::netsim::model::NetworkModel;
 use anyhow::{bail, Result};
 
 /// Canonical (α, 1/β) levels used by the paper's C1/C2 configurations.
@@ -29,24 +31,16 @@ pub struct Phase {
     pub link: LinkParams,
 }
 
-/// A network schedule: maps training progress (fractional epoch) to link
-/// parameters, with optional jitter and congestion-episode overlays, and an
-/// optional two-level topology overlay (`with_topology`). The schedule (and
-/// its jitter/congestion) drives the *inter-node* link — the WAN/TCP side
-/// the paper shapes with `tc`; the intra-node link is in-machine hardware
-/// and stays fixed.
+/// A piecewise-constant network schedule with an optional two-level
+/// topology overlay (`with_topology`). The schedule drives the
+/// *inter-node* link — the WAN/TCP side the paper shapes with `tc`; the
+/// intra-node link is in-machine hardware and stays fixed. Stochastic
+/// overlays (jitter, congestion, ...) are separate
+/// [`modifiers`](crate::netsim::modifiers) wrappers.
 #[derive(Debug, Clone)]
 pub struct NetSchedule {
-    pub name: String,
+    name: String,
     phases: Vec<Phase>,
-    /// Multiplicative observation-free jitter applied to α and 1/β
-    /// (fraction, e.g. 0.05 = ±5%). Deterministic per epoch-bucket.
-    jitter_frac: f64,
-    /// Congestion episodes: probability per epoch-bucket that effective
-    /// bandwidth collapses by `congestion_factor`.
-    congestion_prob: f64,
-    congestion_factor: f64,
-    seed: u64,
     /// Fixed intra-node link of the two-level topology overlay (None =
     /// flat cluster; see [`NetSchedule::with_topology`]).
     intra: Option<LinkParams>,
@@ -58,31 +52,18 @@ impl NetSchedule {
         NetSchedule {
             name: "static".into(),
             phases: vec![Phase { from_epoch: 0.0, link }],
-            jitter_frac: 0.0,
-            congestion_prob: 0.0,
-            congestion_factor: 1.0,
-            seed: 0,
             intra: None,
             workers_per_node: 1,
         }
     }
 
     pub fn piecewise(name: &str, phases: Vec<Phase>) -> Self {
-        assert!(!phases.is_empty());
+        assert!(!phases.is_empty(), "a schedule needs at least one phase");
         assert!(
             phases.windows(2).all(|w| w[0].from_epoch < w[1].from_epoch),
             "phases must be sorted by from_epoch"
         );
-        NetSchedule {
-            name: name.into(),
-            phases,
-            jitter_frac: 0.0,
-            congestion_prob: 0.0,
-            congestion_factor: 1.0,
-            seed: 0,
-            intra: None,
-            workers_per_node: 1,
-        }
+        NetSchedule { name: name.into(), phases, intra: None, workers_per_node: 1 }
     }
 
     /// Paper configuration C1 (Fig 6a), scaled to `total_epochs`
@@ -143,42 +124,30 @@ impl NetSchedule {
     /// not a preset — it takes explicit link parameters).
     pub const PRESETS: &'static [&'static str] = &["c1", "c2"];
 
-    /// Look up a named preset; the error lists every valid name.
+    /// Look up a named bare-schedule preset. The error lists every valid
+    /// name — including the full scenario registry
+    /// ([`NET_TABLE`](crate::netsim::model::NET_TABLE)), whose composite
+    /// entries (jittered/congested/diurnal/... variants) are built via
+    /// [`parse_spec`](crate::netsim::model::parse_spec) because they are
+    /// not plain `NetSchedule`s.
     pub fn preset(name: &str, total_epochs: f64) -> Result<Self> {
         match name {
             "c1" => Ok(Self::c1(total_epochs)),
             "c2" => Ok(Self::c2(total_epochs)),
             _ => bail!(
-                "unknown schedule preset `{name}` (valid: {}; or `static` with explicit \
-                 link parameters)",
-                Self::PRESETS.join(", ")
+                "unknown schedule preset `{name}` (bare presets: {}; or `static` with \
+                 explicit link parameters; full scenario registry incl. composites: {})",
+                Self::PRESETS.join(", "),
+                crate::netsim::model::scenario_names().collect::<Vec<_>>().join(", ")
             ),
         }
     }
 
-    /// Overlay multiplicative jitter (±`frac`) on α and bandwidth,
-    /// deterministic per 0.1-epoch bucket.
-    pub fn with_jitter(mut self, frac: f64, seed: u64) -> Self {
-        assert!((0.0..1.0).contains(&frac));
-        self.jitter_frac = frac;
-        self.seed = seed;
-        self
-    }
-
-    /// Overlay congestion episodes: with probability `prob` per 0.1-epoch
-    /// bucket, bandwidth is divided by `factor` (>= 1).
-    pub fn with_congestion(mut self, prob: f64, factor: f64, seed: u64) -> Self {
-        assert!((0.0..=1.0).contains(&prob) && factor >= 1.0);
-        self.congestion_prob = prob;
-        self.congestion_factor = factor;
-        self.seed = seed;
-        self
-    }
-
     /// Overlay a two-level topology: `workers_per_node` ranks share the
-    /// fixed `intra` link, and the scheduled (possibly jittered/congested)
-    /// link becomes the *inter-node* link. See
-    /// [`Topology`](crate::netsim::cost_model::Topology).
+    /// fixed `intra` link, and the scheduled link becomes the *inter-node*
+    /// link. See [`Topology`](crate::netsim::cost_model::Topology); for
+    /// non-schedule models use
+    /// [`TwoLevel`](crate::netsim::modifiers::TwoLevel).
     ///
     /// ```
     /// use flexcomm::netsim::cost_model::LinkParams;
@@ -202,8 +171,8 @@ impl NetSchedule {
         self.workers_per_node
     }
 
-    /// Full topology at a fractional epoch: the (overlaid) scheduled link
-    /// as the inter-node side, the fixed intra link if configured.
+    /// Full topology at a fractional epoch: the scheduled link as the
+    /// inter-node side, the fixed intra link if configured.
     pub fn topology_at(&self, epoch: f64) -> Topology {
         let inter = self.at(epoch);
         match self.intra {
@@ -214,8 +183,10 @@ impl NetSchedule {
         }
     }
 
-    /// Base (overlay-free) link parameters at a fractional epoch.
-    pub fn base_at(&self, epoch: f64) -> LinkParams {
+    /// Link parameters at a fractional epoch: the phase whose breakpoint
+    /// was most recently passed. Epochs before the first breakpoint
+    /// report the first phase; epochs beyond the last hold the last.
+    pub fn at(&self, epoch: f64) -> LinkParams {
         let mut link = self.phases[0].link;
         for p in &self.phases {
             if epoch >= p.from_epoch {
@@ -227,32 +198,48 @@ impl NetSchedule {
         link
     }
 
-    /// Effective link parameters at a fractional epoch, overlays applied.
-    /// Deterministic: the same (schedule, seed, epoch) always yields the
-    /// same parameters, so experiments replay exactly.
-    pub fn at(&self, epoch: f64) -> LinkParams {
-        let mut link = self.base_at(epoch);
-        if self.jitter_frac == 0.0 && self.congestion_prob == 0.0 {
-            return link;
-        }
-        // Derive a per-bucket RNG: same bucket -> same perturbation.
-        let bucket = (epoch * 10.0).floor() as u64;
-        let mut rng = Rng::new(self.seed ^ bucket.wrapping_mul(0x9E37_79B9_7F4A_7C15));
-        if self.jitter_frac > 0.0 {
-            let ja = 1.0 + self.jitter_frac * (2.0 * rng.f64() - 1.0);
-            let jb = 1.0 + self.jitter_frac * (2.0 * rng.f64() - 1.0);
-            link.alpha *= ja;
-            link.beta /= jb; // jitter bandwidth, not beta, symmetrically
-        }
-        if self.congestion_prob > 0.0 && rng.f64() < self.congestion_prob {
-            link.beta *= self.congestion_factor;
-        }
-        link
+    /// Alias of [`NetSchedule::at`], kept from the era when `at` also
+    /// applied jitter/congestion overlays (those are now
+    /// [`modifiers`](crate::netsim::modifiers) wrappers, so the "base"
+    /// and effective links of a bare schedule coincide).
+    pub fn base_at(&self, epoch: f64) -> LinkParams {
+        self.at(epoch)
+    }
+
+    /// Schedule name (also the [`NetworkModel::name`] identity).
+    pub fn name(&self) -> &str {
+        &self.name
     }
 
     /// Breakpoints (for harnesses that print the Fig 6 schedule).
     pub fn phases(&self) -> &[Phase] {
         &self.phases
+    }
+}
+
+impl NetworkModel for NetSchedule {
+    fn link_at(&self, epoch: f64) -> LinkParams {
+        self.at(epoch)
+    }
+
+    fn topology_at(&self, epoch: f64) -> Topology {
+        NetSchedule::topology_at(self, epoch)
+    }
+
+    fn name(&self) -> &str {
+        NetSchedule::name(self)
+    }
+
+    fn describe(&self) -> String {
+        if self.workers_per_node > 1 {
+            format!("{}+2level(x{})", self.name, self.workers_per_node)
+        } else {
+            self.name.clone()
+        }
+    }
+
+    fn clone_model(&self) -> Box<dyn NetworkModel> {
+        Box::new(self.clone())
     }
 }
 
@@ -295,34 +282,20 @@ mod tests {
         assert_eq!(s.at(25.0).bw_gbps().round(), 1.0);
     }
 
+    /// Edge cases of the phase lookup: before the first breakpoint, on a
+    /// breakpoint, far beyond the last breakpoint — `at` and `base_at`
+    /// agree everywhere (overlays moved to the modifier wrappers).
     #[test]
-    fn jitter_is_bounded_and_deterministic() {
-        let s = NetSchedule::c1(50.0).with_jitter(0.1, 7);
-        let a = s.at(3.14);
-        let b = s.at(3.14);
-        assert_eq!(a, b, "same epoch must give same link");
-        let base = s.base_at(3.14);
-        assert!((a.alpha / base.alpha - 1.0).abs() <= 0.1 + 1e-9);
-        let ratio = base.beta / a.beta;
-        assert!((ratio - 1.0).abs() <= 0.1 + 1e-9);
-    }
-
-    #[test]
-    fn congestion_reduces_bandwidth_sometimes() {
-        let s = NetSchedule::static_link(LinkParams::from_ms_gbps(1.0, 10.0))
-            .with_congestion(0.5, 10.0, 3);
-        let mut congested = 0;
-        let mut free = 0;
-        for i in 0..200 {
-            let l = s.at(i as f64 * 0.1);
-            if l.bw_gbps() < 2.0 {
-                congested += 1;
-            } else {
-                free += 1;
-            }
+    fn at_holds_first_and_last_phase_outside_the_breakpoints() {
+        let s = NetSchedule::c1(50.0);
+        for e in [-5.0, 0.0, 12.0, 36.0, 50.0, 1e5, f64::INFINITY] {
+            assert_eq!(s.at(e), s.base_at(e), "at/base_at must agree at {e}");
         }
-        assert!(congested > 30, "{congested}");
-        assert!(free > 30, "{free}");
+        assert_eq!(s.at(-5.0), s.at(0.0), "pre-history holds the first phase");
+        assert_eq!(s.at(1e5), s.at(36.0), "post-history holds the last phase");
+        assert_eq!(s.at(f64::INFINITY), s.at(36.0));
+        // On an exact breakpoint the NEW phase applies (from_epoch incl.).
+        assert_eq!(s.at(12.0).bw_gbps().round(), 1.0);
     }
 
     #[test]
@@ -332,6 +305,9 @@ mod tests {
         }
         let err = NetSchedule::preset("nope", 50.0).unwrap_err().to_string();
         assert!(err.contains("c1") && err.contains("c2"), "{err}");
+        // The error lists the FULL scenario registry, not just the bare
+        // presets (single name table, mirroring STRATEGY_TABLE).
+        assert!(err.contains("c2-hostile") && err.contains("diurnal"), "{err}");
     }
 
     #[test]
@@ -344,17 +320,17 @@ mod tests {
     }
 
     #[test]
-    fn topology_overlay_tracks_schedule_on_inter_only() {
-        let intra = LinkParams::from_ms_gbps(0.01, 100.0);
-        let s = NetSchedule::c1(50.0).with_topology(intra, 4).with_jitter(0.1, 9);
-        for epoch in [0.0, 13.0, 26.0, 40.0] {
-            let t = s.topology_at(epoch);
-            assert_eq!(t.workers_per_node, 4);
-            // The inter side follows the (jittered) schedule...
-            assert_eq!(t.inter, s.at(epoch));
-            // ...while the intra link stays the fixed in-machine hardware.
-            assert_eq!(t.intra, intra);
+    fn network_model_impl_matches_the_inherent_api() {
+        let s = NetSchedule::c2(50.0).with_topology(LinkParams::from_ms_gbps(0.01, 100.0), 4);
+        let m: &dyn NetworkModel = &s;
+        for e in [0.0, 13.0, 22.0, 45.0] {
+            assert_eq!(m.link_at(e), s.at(e));
+            assert_eq!(m.topology_at(e), s.topology_at(e));
         }
+        assert_eq!(m.name(), "c2");
+        assert_eq!(m.describe(), "c2+2level(x4)");
+        let cloned = m.clone_model();
+        assert_eq!(cloned.link_at(22.0), s.at(22.0));
     }
 
     #[test]
@@ -367,5 +343,11 @@ mod tests {
                 Phase { from_epoch: 1.0, link: LinkParams::from_ms_gbps(1.0, 1.0) },
             ],
         );
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one phase")]
+    fn empty_phase_list_rejected() {
+        NetSchedule::piecewise("empty", Vec::new());
     }
 }

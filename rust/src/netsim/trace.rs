@@ -1,0 +1,573 @@
+//! Trace-driven network environments: replay measured (epoch, α, β)
+//! samples as a [`NetworkModel`].
+//!
+//! The paper's variability argument (§2-C2) is grounded in *measured*
+//! cloud/cluster behaviour; [`TraceModel`] closes that loop by replaying a
+//! measurement file — iperf/traceroute logs reduced to
+//! `(epoch, alpha_ms, bw_gbps)` rows — as the simulation's ground truth,
+//! so any real network recording becomes a reproducible scenario.
+//!
+//! Two file formats (picked by extension, `.json` vs anything else):
+//!
+//! **CSV** — optional header, `#` comments, one sample per line:
+//! ```text
+//! # my WAN, 2026-07-14
+//! epoch,alpha_ms,bw_gbps
+//! 0.0,1.0,25.0
+//! 12.0,10.0,10.0
+//! 24.0,50.0,1.0
+//! ```
+//!
+//! **JSON** — an object with an optional `"name"` and a `"points"` array:
+//! ```text
+//! {"name": "wan", "points": [
+//!   {"epoch": 0.0, "alpha_ms": 1.0, "bw_gbps": 25.0},
+//!   {"epoch": 12.0, "alpha_ms": 10.0, "bw_gbps": 10.0}
+//! ]}
+//! ```
+//!
+//! Samples are replayed piecewise-constant (each row holds until the
+//! next), matching `NetSchedule` phase semantics; epochs before the first
+//! sample report the first sample.
+
+use crate::netsim::cost_model::LinkParams;
+use crate::netsim::model::{NetModelError, NetworkModel};
+
+/// One measured sample; holds from `epoch` until the next sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TracePoint {
+    pub epoch: f64,
+    pub alpha_ms: f64,
+    pub bw_gbps: f64,
+}
+
+impl TracePoint {
+    pub fn link(&self) -> LinkParams {
+        LinkParams::from_ms_gbps(self.alpha_ms, self.bw_gbps)
+    }
+}
+
+/// A measured-trace network environment (see the module docs for the file
+/// formats).
+///
+/// ```
+/// use flexcomm::netsim::model::NetworkModel;
+/// use flexcomm::netsim::trace::TraceModel;
+///
+/// let path = std::env::temp_dir().join("flexcomm_doctest_trace.csv");
+/// std::fs::write(&path, "epoch,alpha_ms,bw_gbps\n0,1,25\n10,50,1\n").unwrap();
+/// let t = TraceModel::load(path.to_str().unwrap()).unwrap();
+/// assert_eq!(t.points().len(), 2);
+/// assert_eq!(t.link_at(3.0).bw_gbps().round(), 25.0);  // holds first sample
+/// assert_eq!(t.link_at(99.0).alpha_ms().round(), 50.0); // holds last sample
+/// assert!(t.describe().starts_with("trace:"));
+/// std::fs::remove_file(&path).unwrap();
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceModel {
+    name: String,
+    points: Vec<TracePoint>,
+}
+
+impl TraceModel {
+    /// Build from in-memory samples. `points` must be non-empty, strictly
+    /// increasing in epoch, with finite `alpha_ms >= 0` and `bw_gbps > 0`.
+    pub fn from_points(
+        name: impl Into<String>,
+        points: Vec<TracePoint>,
+    ) -> Result<TraceModel, NetModelError> {
+        let name = name.into();
+        if points.is_empty() {
+            return Err(NetModelError::EmptyTrace { path: name });
+        }
+        for (i, p) in points.iter().enumerate() {
+            if !p.epoch.is_finite() || !p.alpha_ms.is_finite() || p.alpha_ms < 0.0 {
+                return Err(NetModelError::TraceParse {
+                    path: name,
+                    line: i + 1,
+                    reason: format!("bad sample (epoch {}, alpha_ms {})", p.epoch, p.alpha_ms),
+                });
+            }
+            if !p.bw_gbps.is_finite() || p.bw_gbps <= 0.0 {
+                return Err(NetModelError::TraceParse {
+                    path: name,
+                    line: i + 1,
+                    reason: format!("bandwidth must be finite and > 0 (got {})", p.bw_gbps),
+                });
+            }
+            if i > 0 && points[i - 1].epoch >= p.epoch {
+                return Err(NetModelError::UnsortedTrace { path: name, line: i + 1 });
+            }
+        }
+        Ok(TraceModel { name, points })
+    }
+
+    /// Load a trace file; `.json` parses the JSON form, everything else
+    /// the CSV form. The model's name defaults to the file stem (JSON may
+    /// override it with a `"name"` field).
+    pub fn load(path: &str) -> Result<TraceModel, NetModelError> {
+        let text = std::fs::read_to_string(path).map_err(|e| NetModelError::TraceIo {
+            path: path.to_string(),
+            reason: e.to_string(),
+        })?;
+        let stem = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("trace")
+            .to_string();
+        if path.to_ascii_lowercase().ends_with(".json") {
+            Self::parse_json(&text, path, stem)
+        } else {
+            Self::parse_csv(&text, path, stem)
+        }
+    }
+
+    fn parse_csv(text: &str, path: &str, name: String) -> Result<TraceModel, NetModelError> {
+        let mut points = Vec::new();
+        let mut line_nos = Vec::new(); // real file line per point (diagnostics)
+        let mut header_allowed = true; // at most ONE leading header line
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+            // The FIRST content line may be the all-text header; anything
+            // with even one numeric field is a data row (a typo'd value in
+            // row 1 of a headerless file must error, not vanish as a
+            // pseudo-header), and later non-numeric lines always error.
+            if header_allowed {
+                header_allowed = false;
+                if fields.iter().all(|f| f.parse::<f64>().is_err()) {
+                    continue;
+                }
+            }
+            if fields.len() != 3 {
+                return Err(NetModelError::TraceParse {
+                    path: path.to_string(),
+                    line: line_no,
+                    reason: format!("expected `epoch,alpha_ms,bw_gbps`, got {} fields", fields.len()),
+                });
+            }
+            let num = |s: &str, what: &str| -> Result<f64, NetModelError> {
+                s.parse().map_err(|_| NetModelError::TraceParse {
+                    path: path.to_string(),
+                    line: line_no,
+                    reason: format!("bad {what} `{s}`"),
+                })
+            };
+            points.push(TracePoint {
+                epoch: num(fields[0], "epoch")?,
+                alpha_ms: num(fields[1], "alpha_ms")?,
+                bw_gbps: num(fields[2], "bw_gbps")?,
+            });
+            line_nos.push(line_no);
+        }
+        if points.is_empty() {
+            return Err(NetModelError::EmptyTrace { path: path.to_string() });
+        }
+        Self::from_points(name, points).map_err(|e| e.with_location(path, &line_nos))
+    }
+
+    fn parse_json(text: &str, path: &str, stem: String) -> Result<TraceModel, NetModelError> {
+        let mut p = JsonCursor { text, pos: 0, path };
+        p.skip_ws();
+        p.expect('{')?;
+        let mut name = stem;
+        let mut points: Option<Vec<TracePoint>> = None;
+        loop {
+            p.skip_ws();
+            if p.eat('}') {
+                break;
+            }
+            let key = p.parse_string()?;
+            p.skip_ws();
+            p.expect(':')?;
+            p.skip_ws();
+            match key.as_str() {
+                "name" => name = p.parse_string()?,
+                "points" => points = Some(p.parse_points()?),
+                other => {
+                    return Err(p.err(format!("unknown key `{other}` (expected name|points)")))
+                }
+            }
+            p.skip_ws();
+            if !p.eat(',') {
+                p.skip_ws();
+                p.expect('}')?;
+                break;
+            }
+        }
+        // Strict by design: anything after the root object (e.g. a botched
+        // concatenation of two trace files) is an error, never silently
+        // ignored data.
+        p.skip_ws();
+        if p.peek().is_some() {
+            return Err(p.err("trailing content after the trace object".into()));
+        }
+        let points = points.ok_or_else(|| NetModelError::EmptyTrace { path: path.to_string() })?;
+        if points.is_empty() {
+            return Err(NetModelError::EmptyTrace { path: path.to_string() });
+        }
+        Self::from_points(name, points).map_err(|e| e.with_location(path, &[]))
+    }
+
+    /// The samples, in epoch order.
+    pub fn points(&self) -> &[TracePoint] {
+        &self.points
+    }
+
+    /// Serialize back to the CSV form ([`TraceModel::load`] round-trips
+    /// it: every written value re-parses to the identical f64).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("epoch,alpha_ms,bw_gbps\n");
+        for p in &self.points {
+            out.push_str(&format!("{},{},{}\n", p.epoch, p.alpha_ms, p.bw_gbps));
+        }
+        out
+    }
+
+    /// Write the CSV form to `path` (creating parent directories).
+    pub fn save_csv(&self, path: &str) -> Result<(), NetModelError> {
+        let io = |e: std::io::Error| NetModelError::TraceIo {
+            path: path.to_string(),
+            reason: e.to_string(),
+        };
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(io)?;
+            }
+        }
+        std::fs::write(path, self.to_csv()).map_err(io)
+    }
+}
+
+impl NetModelError {
+    /// Re-point an in-memory validation error at the file it came from:
+    /// `from_points` reports the POINT INDEX as `line`; `line_map` (one
+    /// file line per point, from the CSV reader) translates it to the real
+    /// file line, so comment/header lines don't skew diagnostics. An empty
+    /// map keeps the index (JSON, where points have no own line).
+    fn with_location(self, path: &str, line_map: &[usize]) -> NetModelError {
+        let p = path.to_string();
+        let fix = |line: usize| line_map.get(line - 1).copied().unwrap_or(line);
+        match self {
+            NetModelError::EmptyTrace { .. } => NetModelError::EmptyTrace { path: p },
+            NetModelError::TraceParse { line, reason, .. } => {
+                NetModelError::TraceParse { path: p, line: fix(line), reason }
+            }
+            NetModelError::UnsortedTrace { line, .. } => {
+                NetModelError::UnsortedTrace { path: p, line: fix(line) }
+            }
+            other => other,
+        }
+    }
+}
+
+impl NetworkModel for TraceModel {
+    fn link_at(&self, epoch: f64) -> LinkParams {
+        let mut cur = &self.points[0];
+        for p in &self.points {
+            if epoch >= p.epoch {
+                cur = p;
+            } else {
+                break;
+            }
+        }
+        cur.link()
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn describe(&self) -> String {
+        format!("trace:{}[{} pts]", self.name, self.points.len())
+    }
+
+    fn clone_model(&self) -> Box<dyn NetworkModel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Minimal cursor over the constrained trace-JSON grammar (offline build:
+/// no serde). Strict by design — unknown keys and malformed values are
+/// typed errors, not silent defaults.
+struct JsonCursor<'a> {
+    text: &'a str,
+    pos: usize,
+    path: &'a str,
+}
+
+impl JsonCursor<'_> {
+    fn err(&self, reason: String) -> NetModelError {
+        let line = self.text[..self.pos.min(self.text.len())]
+            .bytes()
+            .filter(|&b| b == b'\n')
+            .count()
+            + 1;
+        NetModelError::TraceParse { path: self.path.to_string(), line, reason }
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(' ' | '\t' | '\n' | '\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<char> {
+        self.text[self.pos..].chars().next()
+    }
+
+    fn eat(&mut self, c: char) -> bool {
+        if self.peek() == Some(c) {
+            self.pos += c.len_utf8();
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, c: char) -> Result<(), NetModelError> {
+        if self.eat(c) {
+            Ok(())
+        } else {
+            Err(self.err(format!("expected `{c}`, found {:?}", self.peek())))
+        }
+    }
+
+    fn parse_string(&mut self) -> Result<String, NetModelError> {
+        self.skip_ws();
+        self.expect('"')?;
+        let start = self.pos;
+        // Trace names/keys never contain escapes; reject them explicitly.
+        while let Some(c) = self.peek() {
+            match c {
+                '"' => {
+                    let s = self.text[start..self.pos].to_string();
+                    self.pos += 1;
+                    return Ok(s);
+                }
+                '\\' => return Err(self.err("escape sequences not supported".into())),
+                _ => self.pos += c.len_utf8(),
+            }
+        }
+        Err(self.err("unterminated string".into()))
+    }
+
+    fn parse_number(&mut self) -> Result<f64, NetModelError> {
+        self.skip_ws();
+        let start = self.pos;
+        while self
+            .peek()
+            .is_some_and(|c| c.is_ascii_digit() || matches!(c, '-' | '+' | '.' | 'e' | 'E'))
+        {
+            self.pos += 1;
+        }
+        let tok = &self.text[start..self.pos];
+        tok.parse().map_err(|_| self.err(format!("bad number `{tok}`")))
+    }
+
+    fn parse_points(&mut self) -> Result<Vec<TracePoint>, NetModelError> {
+        self.expect('[')?;
+        let mut out = Vec::new();
+        loop {
+            self.skip_ws();
+            if self.eat(']') {
+                break;
+            }
+            out.push(self.parse_point()?);
+            self.skip_ws();
+            if !self.eat(',') {
+                self.skip_ws();
+                self.expect(']')?;
+                break;
+            }
+        }
+        Ok(out)
+    }
+
+    fn parse_point(&mut self) -> Result<TracePoint, NetModelError> {
+        self.expect('{')?;
+        let (mut epoch, mut alpha_ms, mut bw_gbps) = (None, None, None);
+        loop {
+            self.skip_ws();
+            if self.eat('}') {
+                break;
+            }
+            let key = self.parse_string()?;
+            self.skip_ws();
+            self.expect(':')?;
+            let v = self.parse_number()?;
+            match key.as_str() {
+                "epoch" => epoch = Some(v),
+                "alpha_ms" => alpha_ms = Some(v),
+                "bw_gbps" => bw_gbps = Some(v),
+                other => {
+                    return Err(
+                        self.err(format!("unknown key `{other}` (epoch|alpha_ms|bw_gbps)"))
+                    )
+                }
+            }
+            self.skip_ws();
+            if !self.eat(',') {
+                self.skip_ws();
+                self.expect('}')?;
+                break;
+            }
+        }
+        match (epoch, alpha_ms, bw_gbps) {
+            (Some(epoch), Some(alpha_ms), Some(bw_gbps)) => {
+                Ok(TracePoint { epoch, alpha_ms, bw_gbps })
+            }
+            _ => Err(self.err("point needs epoch, alpha_ms and bw_gbps".into())),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pts() -> Vec<TracePoint> {
+        vec![
+            TracePoint { epoch: 0.0, alpha_ms: 1.0, bw_gbps: 25.0 },
+            TracePoint { epoch: 12.0, alpha_ms: 10.0, bw_gbps: 10.0 },
+            TracePoint { epoch: 24.0, alpha_ms: 50.0, bw_gbps: 1.0 },
+        ]
+    }
+
+    fn tmp(name: &str, content: &str) -> String {
+        let p = std::env::temp_dir().join(name);
+        std::fs::write(&p, content).unwrap();
+        p.to_str().unwrap().to_string()
+    }
+
+    #[test]
+    fn replays_piecewise_constant_with_hold_semantics() {
+        let t = TraceModel::from_points("m", pts()).unwrap();
+        assert_eq!(t.link_at(0.0).bw_gbps().round(), 25.0);
+        assert_eq!(t.link_at(11.9).bw_gbps().round(), 25.0);
+        assert_eq!(t.link_at(12.0).bw_gbps().round(), 10.0);
+        // Before the first sample and beyond the last: hold.
+        assert_eq!(t.link_at(-1.0).alpha_ms().round(), 1.0);
+        assert_eq!(t.link_at(1e6).alpha_ms().round(), 50.0);
+    }
+
+    #[test]
+    fn csv_loads_with_header_comments_and_blank_lines() {
+        let p = tmp(
+            "flexcomm_trace_csv.csv",
+            "# measured on the lab WAN\nepoch,alpha_ms,bw_gbps\n\n0,1,25\n12,10,10\n24,50,1\n",
+        );
+        let t = TraceModel::load(&p).unwrap();
+        assert_eq!(t.points(), &pts()[..]);
+        assert_eq!(t.name(), "flexcomm_trace_csv");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn csv_round_trips_exactly() {
+        let orig = TraceModel::from_points("rt", pts()).unwrap();
+        let p = tmp("flexcomm_trace_rt.csv", &orig.to_csv());
+        let back = TraceModel::load(&p).unwrap();
+        assert_eq!(back.points(), orig.points(), "to_csv -> load must be lossless");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn json_loads_with_embedded_name() {
+        let p = tmp(
+            "flexcomm_trace.json",
+            r#"{ "name": "wan-week",
+                 "points": [ {"epoch": 0, "alpha_ms": 1.0, "bw_gbps": 25},
+                             {"epoch": 12, "alpha_ms": 10, "bw_gbps": 10} ] }"#,
+        );
+        let t = TraceModel::load(&p).unwrap();
+        assert_eq!(t.name(), "wan-week");
+        assert_eq!(t.points().len(), 2);
+        assert_eq!(t.link_at(13.0).alpha_ms().round(), 10.0);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn malformed_inputs_are_typed_errors_with_line_numbers() {
+        let p = tmp("flexcomm_trace_bad1.csv", "epoch,alpha_ms,bw_gbps\n0,1\n");
+        assert!(matches!(
+            TraceModel::load(&p).unwrap_err(),
+            NetModelError::TraceParse { line: 2, .. }
+        ));
+        let p2 = tmp("flexcomm_trace_bad2.csv", "0,1,25\n0,2,10\n");
+        assert!(matches!(
+            TraceModel::load(&p2).unwrap_err(),
+            NetModelError::UnsortedTrace { line: 2, .. }
+        ));
+        let p3 = tmp("flexcomm_trace_bad3.csv", "# only comments\n");
+        assert!(matches!(TraceModel::load(&p3).unwrap_err(), NetModelError::EmptyTrace { .. }));
+        let p4 = tmp("flexcomm_trace_bad4.json", r#"{"points": [{"epoch": 0}]}"#);
+        assert!(matches!(TraceModel::load(&p4).unwrap_err(), NetModelError::TraceParse { .. }));
+        let p5 = tmp("flexcomm_trace_bad5.csv", "0,1,0\n");
+        assert!(matches!(TraceModel::load(&p5).unwrap_err(), NetModelError::TraceParse { .. }));
+        for p in [p, p2, p3, p4, p5] {
+            let _ = std::fs::remove_file(&p);
+        }
+        assert!(matches!(
+            TraceModel::load("/definitely/not/here.csv").unwrap_err(),
+            NetModelError::TraceIo { .. }
+        ));
+    }
+
+    /// Only ONE leading header line may be non-numeric: a corrupted data
+    /// row (typo'd epoch) must be a typed error, not silently dropped as
+    /// "another header" — dropping it would replay a trace whose early
+    /// conditions are wrong with no diagnostic.
+    #[test]
+    fn corrupted_data_rows_are_not_silently_dropped() {
+        let p = tmp(
+            "flexcomm_trace_bad6.csv",
+            "epoch,alpha_ms,bw_gbps\nO.0,1.0,25.0\n12,10,10\n",
+        );
+        assert!(matches!(
+            TraceModel::load(&p).unwrap_err(),
+            NetModelError::TraceParse { line: 2, .. }
+        ));
+        // Headerless file with a typo in the FIRST row: partially-numeric
+        // lines are data rows, never a pseudo-header.
+        let p2 = tmp("flexcomm_trace_bad6b.csv", "O.0,1.0,25.0\n12,10,10\n");
+        assert!(matches!(
+            TraceModel::load(&p2).unwrap_err(),
+            NetModelError::TraceParse { line: 1, .. }
+        ));
+        for p in [p, p2] {
+            let _ = std::fs::remove_file(&p);
+        }
+    }
+
+    /// Range/order diagnostics point at the REAL file line even when
+    /// comment and header lines precede the data.
+    #[test]
+    fn validation_errors_report_real_file_lines_past_headers() {
+        let p = tmp(
+            "flexcomm_trace_bad7.csv",
+            "# note\nepoch,alpha_ms,bw_gbps\n0,1,25\n0,2,10\n",
+        );
+        assert!(matches!(
+            TraceModel::load(&p).unwrap_err(),
+            NetModelError::UnsortedTrace { line: 4, .. }
+        ));
+        let _ = std::fs::remove_file(&p);
+    }
+
+    /// Strictness: trailing content after the root JSON object (e.g. two
+    /// concatenated trace files) is an error, never silently-ignored data.
+    #[test]
+    fn json_rejects_trailing_content() {
+        let p = tmp(
+            "flexcomm_trace_bad8.json",
+            r#"{"points": [{"epoch": 0, "alpha_ms": 1, "bw_gbps": 25}]}{"points": []}"#,
+        );
+        assert!(matches!(TraceModel::load(&p).unwrap_err(), NetModelError::TraceParse { .. }));
+        let _ = std::fs::remove_file(&p);
+    }
+}

@@ -35,7 +35,7 @@ fn cfg(strategy: Strategy, cr: f64, n_workers: usize, threads: usize) -> TrainCo
         momentum: 0.6,
         strategy,
         cr: CrControl::Static(cr),
-        schedule: NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0)),
+        net: Box::new(NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0))),
         compute: ComputeModel::fixed(0.005),
         eval_every: 0,
         seed: 33,
@@ -176,6 +176,47 @@ fn observers_do_not_perturb_numerics() {
         // would make the bitwise check above pass vacuously.
         assert_eq!(steps.load(Ordering::Relaxed), 40, "{label}: on_step count");
         assert_eq!(evals.load(Ordering::Relaxed), 1, "{label}: final eval only");
+    }
+}
+
+/// Determinism holds with a `NetworkModel` TRAIT OBJECT driving
+/// conditions: a replayed trace wrapped in stochastic modifier layers
+/// (jitter + congestion episodes) stays bitwise identical across thread
+/// counts under static CR — the modifiers re-derive their perturbation
+/// per epoch-bucket, never from shared mutable state (DESIGN.md §9).
+#[test]
+fn trace_driven_network_models_are_bitwise_identical_across_threads() {
+    use flexcomm::netsim::modifiers::{CongestionEpisodes, Jitter};
+    use flexcomm::netsim::trace::{TraceModel, TracePoint};
+    let net = || {
+        let trace = TraceModel::from_points(
+            "det",
+            vec![
+                TracePoint { epoch: 0.0, alpha_ms: 1.0, bw_gbps: 25.0 },
+                TracePoint { epoch: 1.0, alpha_ms: 50.0, bw_gbps: 1.0 },
+                TracePoint { epoch: 1.5, alpha_ms: 10.0, bw_gbps: 10.0 },
+            ],
+        )
+        .unwrap();
+        CongestionEpisodes::wrap(Jitter::wrap(trace, 0.1, 5).unwrap(), 0.3, 6.0, 9).unwrap()
+    };
+    for (label, strategy, cr) in [
+        ("flexible", Strategy::Flexible { policy: SelectionPolicy::Star }, 0.05),
+        ("ag-topk", Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05),
+    ] {
+        let mk = |threads: usize| {
+            let mut c = cfg(strategy, cr, 4, threads);
+            c.net = Box::new(net());
+            Session::from_config(c)
+                .source(Box::new(HostMlp::default_preset(33)))
+                .build()
+                .expect("valid config")
+                .run()
+        };
+        let a = mk(1);
+        let b = mk(4);
+        assert_bitwise_equal(&a, &b, &format!("{label}/trace-net"));
+        assert_eq!(a.network, "trace:det[3 pts]+jitter(0.1)+congestion(0.3,6)");
     }
 }
 

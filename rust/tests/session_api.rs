@@ -5,7 +5,7 @@
 
 use flexcomm::collectives::{CollectiveKind, CommReport};
 use flexcomm::coordinator::adaptive::AdaptiveConfig;
-use flexcomm::coordinator::observer::{CrChange, EvalRecord, TrainObserver};
+use flexcomm::coordinator::observer::{CrChange, CsvSink, EvalRecord, NetChange, TrainObserver};
 use flexcomm::coordinator::session::{ConfigError, Session};
 use flexcomm::coordinator::strategy::{
     CommPlan, CommStrategy, ExchangeCtx, ExchangeOutcome, StepCtx,
@@ -13,7 +13,9 @@ use flexcomm::coordinator::strategy::{
 use flexcomm::coordinator::trainer::Strategy;
 use flexcomm::coordinator::worker::ComputeModel;
 use flexcomm::netsim::cost_model::LinkParams;
+use flexcomm::netsim::model::NetModelError;
 use flexcomm::netsim::schedule::NetSchedule;
+use flexcomm::netsim::trace::TraceModel;
 use flexcomm::runtime::HostMlp;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -120,6 +122,16 @@ fn builder_rejects_misconfigurations_with_typed_errors() {
             .err(),
         Some(ConfigError::AdaptiveNeedsCompression { .. })
     ));
+    // Network environments reject with typed errors too: unknown scenario
+    // specs and unloadable traces (ISSUE 4 tentpole).
+    assert!(matches!(
+        base().network_spec("not-a-scenario").build().err(),
+        Some(ConfigError::Network(NetModelError::UnknownScenario { .. }))
+    ));
+    assert!(matches!(
+        base().network_spec("trace:/no/such/file.csv").build().err(),
+        Some(ConfigError::Network(NetModelError::TraceIo { .. }))
+    ));
 }
 
 #[derive(Default)]
@@ -185,4 +197,92 @@ fn observer_stream_carries_the_whole_run() {
         report.metrics.crs_used().iter().map(|c| (c * 1e9) as u64).collect();
     assert!(distinct.len() >= 2, "adaptive CR never moved: {distinct:?}");
     assert!(counts.cr_changes.load(Ordering::Relaxed) >= 1);
+}
+
+struct NetChangeLog(Arc<std::sync::Mutex<Vec<NetChange>>>);
+
+impl TrainObserver for NetChangeLog {
+    fn on_net_change(&mut self, n: &NetChange) {
+        self.0.lock().unwrap().push(*n);
+    }
+}
+
+/// `on_net_change` fires exactly at the environment's ground-truth
+/// boundaries: C1 over 3 virtual epochs has 3 phase changes after epoch 0,
+/// each visible from the typed observer stream so CSV consumers can
+/// correlate strategy switches with the network events that caused them.
+#[test]
+fn net_change_events_track_phase_boundaries() {
+    let changes = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let report = Session::builder()
+        .workers(4)
+        .steps(60)
+        .steps_per_epoch(20) // 3 virtual epochs: C1 breaks at 0.72/1.44/2.16
+        .strategy(Strategy::parse("flexible").unwrap())
+        .static_cr(0.05)
+        .network(NetSchedule::c1(3.0))
+        .compute(ComputeModel::fixed(0.005))
+        .seed(3)
+        .observer(Box::new(NetChangeLog(changes.clone())))
+        .source(Box::new(HostMlp::default_preset(3)))
+        .build()
+        .expect("valid config")
+        .run();
+    assert_eq!(report.network, "c1");
+    let changes = changes.lock().unwrap();
+    assert_eq!(changes.len(), 3, "one event per crossed phase boundary: {changes:?}");
+    for c in changes.iter() {
+        assert_ne!(c.from, c.to, "events only on real changes: {c:?}");
+        assert!(c.step > 0 && c.step < 60);
+    }
+    // Sanity: the first C1 break is 25 Gbps -> 1 Gbps at epoch 0.72.
+    assert_eq!(changes[0].to.bw_gbps().round(), 1.0);
+    assert!((changes[0].epoch - 0.75).abs() < 0.05, "{:?}", changes[0]);
+}
+
+/// ISSUE 4 acceptance: a trace-file-driven run works end-to-end via
+/// `Session::builder().network(TraceModel::load(path)?)`, and the CSV
+/// output names the scenario.
+#[test]
+fn trace_file_drives_a_run_end_to_end() {
+    let dir = std::env::temp_dir();
+    let trace_path = dir.join("flexcomm_session_api_trace.csv");
+    let csv_path = dir.join("flexcomm_session_api_trace_out.csv");
+    std::fs::write(&trace_path, "epoch,alpha_ms,bw_gbps\n0,1,25\n1,50,1\n2,4,20\n").unwrap();
+
+    let run = || -> Result<(), ConfigError> {
+        let session = Session::builder()
+            .workers(4)
+            .steps(50)
+            .steps_per_epoch(20)
+            .strategy(Strategy::parse("flexible").unwrap())
+            .static_cr(0.05)
+            .network(TraceModel::load(trace_path.to_str().unwrap())?)
+            .compute(ComputeModel::fixed(0.005))
+            .seed(9)
+            .source(Box::new(HostMlp::default_preset(9)))
+            .build()?;
+        let scenario = session.network_describe();
+        let session = session.observer(Box::new(
+            CsvSink::create_with_scenario(csv_path.to_str().unwrap(), &scenario).unwrap(),
+        ));
+        let report = session.run();
+        assert_eq!(report.network, "trace:flexcomm_session_api_trace[3 pts]");
+        assert_eq!(report.metrics.steps.len(), 50);
+        // The trace's slow middle phase (50 ms / 1 Gbps) must be visible
+        // in the recorded conditions.
+        assert!(report.metrics.steps.iter().any(|m| m.alpha_ms > 30.0));
+        Ok(())
+    };
+    run().expect("trace-driven run");
+
+    let text = std::fs::read_to_string(&csv_path).unwrap();
+    assert!(
+        text.starts_with("# net=trace:flexcomm_session_api_trace[3 pts]\n"),
+        "CSV must name the scenario: {}",
+        text.lines().next().unwrap_or("")
+    );
+    assert!(text.lines().any(|l| l.starts_with("# net_change")), "{text}");
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(&csv_path);
 }

@@ -14,6 +14,7 @@ use flexcomm::coordinator::trainer::{
 };
 use flexcomm::coordinator::worker::ComputeModel;
 use flexcomm::netsim::cost_model::LinkParams;
+use flexcomm::netsim::modifiers::{CongestionEpisodes, Jitter};
 use flexcomm::netsim::schedule::NetSchedule;
 use flexcomm::runtime::HostMlp;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -29,7 +30,7 @@ fn base_cfg(strategy: Strategy, cr: CrControl, steps: u64) -> TrainConfig {
         weight_decay: 0.0,
         strategy,
         cr,
-        schedule: NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0)),
+        net: Box::new(NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0))),
         compute: ComputeModel::fixed(0.005),
         eval_every: 25,
         seed: 21,
@@ -182,8 +183,10 @@ fn var_density_skews_under_noniid() {
 }
 
 /// The adaptive controller must keep CR in bounds and stay numerically
-/// sound across a network schedule WITH jitter + congestion (failure-ish
-/// injection: the probe sees noisy, congested links).
+/// sound across a network schedule WITH jitter + congestion modifier
+/// wrappers (failure-ish injection: the probe sees noisy, congested
+/// links). Migrated from the old in-schedule `with_jitter`/`with_congestion`
+/// overlays to the composable wrappers (distinct seeds per overlay).
 #[test]
 fn adaptive_survives_hostile_network() {
     let mut cfg = base_cfg(
@@ -191,9 +194,15 @@ fn adaptive_survives_hostile_network() {
         CrControl::Adaptive(AdaptiveConfig { probe_iters: 3, ..Default::default() }),
         150,
     );
-    cfg.schedule = NetSchedule::c2(6.0)
-        .with_jitter(0.15, 13)
-        .with_congestion(0.2, 8.0, 13);
+    cfg.net = Box::new(
+        CongestionEpisodes::wrap(
+            Jitter::wrap(NetSchedule::c2(6.0), 0.15, 13).unwrap(),
+            0.2,
+            8.0,
+            14,
+        )
+        .unwrap(),
+    );
     cfg.probe_noise = 0.10;
     let r = run(cfg);
     for m in &r.metrics.steps {
@@ -269,7 +278,7 @@ fn topo_auto_learns_and_cuts_sync_on_two_level_cluster() {
             CrControl::Static(1.0),
             200,
         );
-        cfg.schedule = NetSchedule::static_link(slow_inter);
+        cfg.net = Box::new(NetSchedule::static_link(slow_inter));
         run(cfg)
     };
     let topo = {
@@ -278,8 +287,10 @@ fn topo_auto_learns_and_cuts_sync_on_two_level_cluster() {
             CrControl::Static(1.0),
             200,
         );
-        cfg.schedule = NetSchedule::static_link(slow_inter)
-            .with_topology(LinkParams::from_ms_gbps(0.01, 100.0), 2);
+        cfg.net = Box::new(
+            NetSchedule::static_link(slow_inter)
+                .with_topology(LinkParams::from_ms_gbps(0.01, 100.0), 2),
+        );
         run(cfg)
     };
     assert!(topo

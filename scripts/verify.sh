@@ -39,6 +39,12 @@ step() {
 
 step cargo build --release
 step cargo test -q
+# Trace round-trip smoke (DESIGN.md §9): the example writes a 3-phase
+# trace, loads it back and asserts `link_at` replays the written samples
+# exactly, then replays the shipped measured trace
+# (examples/traces/c2_measured.csv) and prints the scenario-registry
+# sweep. Asserts inside the binary make failures exit nonzero.
+step cargo run --release --example trace_replay
 # Benches are test = false (cargo test must not RUN them), so compile them
 # explicitly — otherwise table2/table6/fig2/fig5 could bit-rot silently.
 step cargo bench --no-run
