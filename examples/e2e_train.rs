@@ -13,7 +13,7 @@
 //! in EXPERIMENTS.md. `--progress` prints live step/eval/switch lines.
 
 use anyhow::{Context, Result};
-use flexcomm::coordinator::adaptive::AdaptiveConfig;
+use flexcomm::coordinator::controller::AdaptiveConfig;
 use flexcomm::coordinator::observer::{CsvSink, ProgressPrinter};
 use flexcomm::coordinator::session::Session;
 use flexcomm::coordinator::trainer::{CrControl, Strategy};

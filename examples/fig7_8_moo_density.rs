@@ -14,7 +14,7 @@
 use anyhow::Result;
 use flexcomm::artopk::{ArFlavor, SelectionPolicy};
 use flexcomm::collectives::CollectiveKind;
-use flexcomm::coordinator::adaptive::AdaptiveConfig;
+use flexcomm::coordinator::controller::AdaptiveConfig;
 use flexcomm::coordinator::session::TrainReport;
 use flexcomm::coordinator::trainer::{CrControl, DenseFlavor, Strategy};
 use flexcomm::experiments::{

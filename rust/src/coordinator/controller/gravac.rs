@@ -1,0 +1,251 @@
+//! GraVAC-style threshold-ladder CR controller (Tyagi & Swany, *GraVAC:
+//! Adaptive Compression for Communication-Efficient Distributed DL
+//! Training*, 2023).
+//!
+//! Where the paper's `moo` controller re-profiles the whole candidate
+//! ladder under checkpoint/restore and re-solves an NSGA-II problem on
+//! every trigger, GraVAC's insight is that the compression *gain* signal
+//! alone is enough to steer the ratio: keep compressing harder while the
+//! smoothed gain holds up, back off one rung the moment a descent
+//! collapses it. No exploration, no checkpoints, no MOO solves — and
+//! because the gain is a pure function of the simulated exchange, a
+//! gravac run stays **bitwise thread-invariant** (DESIGN.md §7), which no
+//! measured-time controller can promise.
+//!
+//! Walk rules (all judged on the EWMA-smoothed gain, once per
+//! `patience`-step settle window):
+//! * **descend** (`"ladder-descend"`): the current rung has settled and
+//!   the rung below is not blocked → step the CR down one geometric rung.
+//! * **collapse** (`"gain-collapse"`): the settled gain fell more than
+//!   `gain_drop` below the rung above's settled gain → climb back up and
+//!   block deeper rungs.
+//! * **network change**: unblocks the ladder (the compute/communication
+//!   trade moved, deeper rungs deserve a retrial). The CR itself is not
+//!   touched — the next judgements re-walk the ladder.
+
+use super::{ControlAction, ControlCtx, ControlDecision, Controller};
+use crate::moo::problem::candidate_crs;
+use crate::util::stats::Ewma;
+
+/// GraVAC ladder configuration. The ladder itself is the same geometric
+/// `candidate_crs(c_low, c_high, factor)` the MOO controller probes —
+/// rung 0 is `c_high`, the last rung is `c_low`.
+#[derive(Debug, Clone)]
+pub struct GravacConfig {
+    pub c_low: f64,
+    pub c_high: f64,
+    /// Geometric step between rungs.
+    pub factor: f64,
+    /// Relative smoothed-gain drop (vs the rung above) that aborts a
+    /// descent (0.25 = a quarter of the signal lost).
+    pub gain_drop: f64,
+    /// Recorded steps to settle at a rung before judging it.
+    pub patience: u64,
+}
+
+impl Default for GravacConfig {
+    fn default() -> Self {
+        GravacConfig { c_low: 0.001, c_high: 0.1, factor: 3.0, gain_drop: 0.25, patience: 8 }
+    }
+}
+
+/// The threshold-ladder controller.
+#[derive(Debug)]
+pub struct GravacController {
+    cfg: GravacConfig,
+    /// Descending CRs, rung 0 = `c_high`.
+    ladder: Vec<f64>,
+    rung: usize,
+    /// Settled (judged) smoothed gain per rung, refreshed at every
+    /// judgement of that rung.
+    judged: Vec<Option<f64>>,
+    /// Rungs at and below this index are blocked after a collapse, until
+    /// a network change unblocks them.
+    blocked_from: Option<usize>,
+    steps_at_rung: u64,
+    ewma: Ewma,
+    /// Ladder moves taken (observability/tests).
+    pub moves: u64,
+}
+
+impl GravacController {
+    pub fn new(cfg: GravacConfig) -> Self {
+        let ladder = candidate_crs(cfg.c_low, cfg.c_high, cfg.factor);
+        let judged = vec![None; ladder.len()];
+        GravacController {
+            cfg,
+            ladder,
+            rung: 0,
+            judged,
+            blocked_from: None,
+            steps_at_rung: 0,
+            ewma: Ewma::new(0.2),
+            moves: 0,
+        }
+    }
+
+    /// Current rung's CR (tests/observability).
+    pub fn current_cr(&self) -> f64 {
+        self.ladder[self.rung]
+    }
+
+    fn decide(&mut self, rung: usize, reason: &'static str) -> ControlDecision {
+        self.rung = rung;
+        self.steps_at_rung = 0;
+        // Fresh smoothing window per rung: without the reset, ~alpha-
+        // complement^patience of every judgement would still be the
+        // PREVIOUS rung's gain, biasing collapse detection low near the
+        // threshold and compounding down the ladder.
+        self.ewma.reset();
+        self.moves += 1;
+        ControlDecision {
+            by: "gravac",
+            reason,
+            action: ControlAction::SetCr(self.ladder[rung]),
+        }
+    }
+}
+
+impl Controller for GravacController {
+    fn name(&self) -> &'static str {
+        "gravac"
+    }
+
+    fn adapts_cr(&self) -> bool {
+        true
+    }
+
+    /// Like the paper's controller, start at the ladder top (`c_high`).
+    fn initial_cr(&self) -> Option<f64> {
+        Some(self.cfg.c_high)
+    }
+
+    fn observe(&mut self, ctx: &ControlCtx<'_>) -> Vec<ControlDecision> {
+        if !ctx.compressed {
+            return Vec::new();
+        }
+        let smoothed = self.ewma.update(ctx.metrics.gain);
+        self.steps_at_rung += 1;
+        if ctx.net_changed {
+            // The trade moved: deeper rungs deserve a retrial.
+            self.blocked_from = None;
+        }
+        if self.steps_at_rung < self.cfg.patience {
+            return Vec::new();
+        }
+        // Judgement point: at most one ladder move, then re-settle.
+        self.steps_at_rung = 0;
+        self.judged[self.rung] = Some(smoothed);
+        let collapsed = self.rung > 0
+            && self.judged[self.rung - 1]
+                .is_some_and(|above| smoothed < above * (1.0 - self.cfg.gain_drop));
+        if collapsed {
+            // This rung costs too much signal: climb back, block
+            // everything at and below it until the network moves.
+            self.blocked_from = Some(self.rung);
+            let up = self.rung - 1;
+            return vec![self.decide(up, "gain-collapse")];
+        }
+        let next = self.rung + 1;
+        let blocked = self.blocked_from.is_some_and(|b| next >= b);
+        if next < self.ladder.len() && !blocked {
+            return vec![self.decide(next, "ladder-descend")];
+        }
+        Vec::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CollectiveKind;
+    use crate::coordinator::metrics::StepMetrics;
+    use crate::netsim::cost_model::LinkParams;
+
+    fn ctx(m: &StepMetrics, net_changed: bool) -> ControlCtx<'_> {
+        ControlCtx {
+            metrics: m,
+            net_changed,
+            probed: LinkParams::from_ms_gbps(4.0, 20.0),
+            cur_cr: 0.1,
+            model_bytes: 4e6,
+            n_workers: 4,
+            compressed: true,
+        }
+    }
+
+    fn metrics_with_gain(step: u64, gain: f64) -> StepMetrics {
+        StepMetrics {
+            step,
+            epoch: step as f64 / 10.0,
+            loss: 0.5,
+            t_compute: 0.01,
+            t_comp: 0.0,
+            t_sync: 0.02,
+            collective: CollectiveKind::ArTopkRing,
+            cr: 0.1,
+            selected_rank: Some(0),
+            gain,
+            alpha_ms: 4.0,
+            bw_gbps: 20.0,
+        }
+    }
+
+    fn drive(c: &mut GravacController, steps: u64, gain: f64) -> Vec<ControlDecision> {
+        let mut out = Vec::new();
+        for s in 0..steps {
+            let m = metrics_with_gain(s, gain);
+            out.extend(c.observe(&ctx(&m, false)));
+        }
+        out
+    }
+
+    #[test]
+    fn descends_the_ladder_while_gain_holds() {
+        let mut c = GravacController::new(GravacConfig::default());
+        assert_eq!(c.initial_cr(), Some(0.1));
+        // Stable high gain: one descend per patience window until c_low.
+        let rungs = c.ladder.len();
+        let ds = drive(&mut c, 8 * rungs as u64, 0.9);
+        assert_eq!(ds.len(), rungs - 1, "{ds:?}");
+        assert!(ds.iter().all(|d| d.reason == "ladder-descend"));
+        assert!((c.current_cr() - 0.001).abs() < 1e-12, "bottom rung reached");
+        // At the bottom with stable gain: no further decisions.
+        assert!(drive(&mut c, 20, 0.9).is_empty());
+    }
+
+    #[test]
+    fn collapse_climbs_back_and_blocks_until_net_change() {
+        let mut c = GravacController::new(GravacConfig::default());
+        // Settle rung 0 at high gain, descend once.
+        let ds = drive(&mut c, 8, 0.9);
+        assert_eq!(ds.len(), 1);
+        let rung1_cr = c.current_cr();
+        // Rung 1 collapses the gain (< 0.9 * 0.75): climb back to rung 0.
+        let ds = drive(&mut c, 8, 0.3);
+        assert_eq!(ds.len(), 1, "{ds:?}");
+        assert_eq!(ds[0].reason, "gain-collapse");
+        assert_eq!(ds[0].action, ControlAction::SetCr(0.1));
+        // Blocked: stable gain at rung 0 no longer descends...
+        assert!(drive(&mut c, 24, 0.9).is_empty());
+        // ...until the network changes, which unblocks the ladder.
+        let m = metrics_with_gain(0, 0.9);
+        let _ = c.observe(&ctx(&m, true));
+        let ds = drive(&mut c, 8, 0.9);
+        assert_eq!(ds.len(), 1, "net change must re-enable descents: {ds:?}");
+        assert_eq!(ds[0].reason, "ladder-descend");
+        assert_eq!(c.current_cr(), rung1_cr);
+    }
+
+    #[test]
+    fn uncompressed_context_is_ignored() {
+        let mut c = GravacController::new(GravacConfig::default());
+        let m = metrics_with_gain(0, 0.9);
+        for _ in 0..30 {
+            let mut cx = ctx(&m, false);
+            cx.compressed = false;
+            assert!(c.observe(&cx).is_empty());
+        }
+        assert_eq!(c.moves, 0);
+    }
+}

@@ -1,0 +1,106 @@
+//! The engine-owned exploration harness: checkpointed candidate probing
+//! as a service (DESIGN.md §10).
+//!
+//! The paper's §3-E controller measures each candidate CR for a few
+//! iterations under checkpoint/restore so exploration never damages the
+//! model. That loop used to live inside the MOO controller; it is now a
+//! harness ANY [`Controller`](super::Controller) can invoke (via
+//! [`ControlAction::RequestExploration`](super::ControlAction)), so the
+//! three concerns it bundles stay in one place:
+//!
+//! * **checkpointing** — snapshot before the first candidate, restore
+//!   after every candidate, so each starts from the same state and the
+//!   committed timeline resumes exactly where it left off;
+//! * **overhead accounting** — every explored step's simulated time is
+//!   charged to `Trainer::explore_overhead_s` (reported separately, never
+//!   on the restored virtual clock);
+//! * **delivery semantics** — exploration steps are UNRECORDED: no
+//!   metrics rows, no observer events, and `CommStrategy::observe` is not
+//!   called, so a strategy's internal controllers never learn from a
+//!   rolled-back timeline. Decisions *about* the exploration (the
+//!   controller's follow-ups from
+//!   [`Controller::on_exploration`](super::Controller::on_exploration))
+//!   are applied right after the restore and stamped with the committed
+//!   step counter — observers see them on the real timeline.
+
+use crate::coordinator::trainer::Trainer;
+use crate::moo::problem::CandidateProfile;
+use crate::netsim::cost_model::LinkParams;
+
+/// A controller's request for checkpointed candidate probing: run each
+/// candidate CR for `iters` steps and measure (t_comp, t_sync, gain).
+/// Candidates are probed in the given order (the paper walks the ladder
+/// descending from `c_high`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExplorationRequest {
+    pub candidates: Vec<f64>,
+    pub iters: u64,
+}
+
+/// What comes back: the measured per-candidate profiles, plus the `by` /
+/// `reason` tags of the requesting decision (echoed verbatim so a
+/// [`CompositeController`](super::CompositeController) can route the
+/// result to the sub-controller that asked).
+#[derive(Debug, Clone)]
+pub struct ExplorationOutcome {
+    pub by: &'static str,
+    pub reason: &'static str,
+    /// The probed inter link the candidates were costed at.
+    pub probed: LinkParams,
+    pub profiles: Vec<CandidateProfile>,
+}
+
+/// Engine-side exploration driver over a borrowed trainer. Created by the
+/// engine's control phase; controllers never touch the trainer directly.
+pub struct ExplorationHarness<'a> {
+    trainer: &'a mut Trainer,
+}
+
+impl<'a> ExplorationHarness<'a> {
+    pub(crate) fn new(trainer: &'a mut Trainer) -> Self {
+        ExplorationHarness { trainer }
+    }
+
+    /// Probe every candidate CR for `req.iters` unrecorded steps under
+    /// checkpoint/restore at the probed link; returns measured profiles
+    /// (mean t_comp / t_sync / gain per candidate, gain clamped into
+    /// `(0, 1]` for the MOO objectives). Restores the pre-exploration
+    /// state and CR before returning; all explored step time lands in
+    /// `explore_overhead_s`.
+    pub(crate) fn probe_candidates(
+        &mut self,
+        req: &ExplorationRequest,
+        probed: LinkParams,
+    ) -> Vec<CandidateProfile> {
+        let t = &mut *self.trainer;
+        if req.candidates.is_empty() || req.iters == 0 {
+            return Vec::new();
+        }
+        let ck = t.snapshot();
+        let saved_cr = t.cur_cr;
+        let mut out = Vec::new();
+        let mut overhead = 0.0;
+        for &cr in &req.candidates {
+            t.cur_cr = cr;
+            let (mut tc, mut ts, mut ga) = (0.0, 0.0, 0.0);
+            for _ in 0..req.iters {
+                let m = t.step_once(false, probed);
+                tc += m.t_comp;
+                ts += m.t_sync;
+                ga += m.gain;
+                overhead += m.t_step();
+            }
+            let k = req.iters as f64;
+            out.push(CandidateProfile {
+                cr,
+                t_comp: tc / k,
+                t_sync: ts / k,
+                gain: (ga / k).clamp(1e-6, 1.0),
+            });
+            t.restore(&ck);
+        }
+        t.cur_cr = saved_cr;
+        t.explore_overhead_s += overhead;
+        out
+    }
+}

@@ -1,0 +1,577 @@
+//! The control plane: pluggable adaptation controllers (DESIGN.md §10).
+//!
+//! The paper's headline contribution is a controller that retunes the
+//! compression ratio and switches collectives as the network drifts — and
+//! GraVAC (Tyagi & Swany, 2023) and Agarwal et al. (2021) both show that
+//! *which* adaptation policy wins is workload- and network-dependent. That
+//! makes the control plane a seam, exactly like strategies (`CommStrategy`,
+//! DESIGN.md §8) and environments (`NetworkModel`, §9): a [`Controller`] is
+//! a plug-in object the engine consults after every recorded step, not
+//! logic spliced into the trainer.
+//!
+//! The protocol is decision-based: [`Controller::observe`] sees a
+//! [`ControlCtx`] (the recorded step's metrics plus the probed network
+//! view) and returns typed [`ControlDecision`]s — set the CR, switch the
+//! collective, switch the AR-Topk selection policy, or request a
+//! checkpointed candidate exploration. Exploration itself is engine-owned:
+//! the [`ExplorationHarness`] runs the checkpoint → probe-candidates →
+//! restore loop (with overhead accounting and the delivery semantics for
+//! decisions born on rolled-back steps) in ONE place, and feeds the
+//! measured [`CandidateProfile`](crate::moo::problem::CandidateProfile)s
+//! back through [`Controller::on_exploration`].
+//!
+//! Built-ins, registered in [`CONTROLLER_TABLE`] (the one name table that
+//! feeds `--controller` parsing and usage text, mirroring `STRATEGY_TABLE`
+//! and `NET_TABLE`):
+//! * `static` — [`StaticController`]: no decisions, the CR stays wherever
+//!   the config put it.
+//! * `moo` — [`MooController`]: the paper's §3-E NSGA-II knee-point
+//!   controller (checkpointed CR-ladder exploration on gain drift,
+//!   cost-model re-solve on network change), behavior-pinned bitwise
+//!   against the pre-refactor implementation.
+//! * `gravac` — [`GravacController`]: a GraVAC-style threshold ladder that
+//!   walks the CR ladder on observed compression gain alone — no MOO
+//!   re-solves, no exploration, and therefore bitwise thread-invariant.
+//!
+//! The STAR/VAR trial/commit logic ([`PolicySwitchController`]) is a
+//! controller too — composed alongside the CR controller (via
+//! [`CompositeController`]) when the `artopk-auto` strategy is configured,
+//! instead of living inside the strategy object.
+
+pub mod gravac;
+pub mod harness;
+pub mod moo;
+
+pub use gravac::{GravacConfig, GravacController};
+pub use harness::{ExplorationHarness, ExplorationOutcome, ExplorationRequest};
+pub use moo::{AdaptiveConfig, MooController};
+
+use crate::artopk::SelectionPolicy;
+use crate::collectives::CollectiveKind;
+use crate::coordinator::metrics::StepMetrics;
+use crate::coordinator::policy_switch::PolicySwitcher;
+use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig};
+use crate::netsim::cost_model::LinkParams;
+use std::fmt;
+
+/// What a controller sees after every RECORDED step. Exploration steps are
+/// internal to the harness — controllers observe the committed timeline
+/// only, so their state never reflects a rolled-back step.
+#[derive(Debug, Clone, Copy)]
+pub struct ControlCtx<'a> {
+    /// The step that just ran and was recorded.
+    pub metrics: &'a StepMetrics,
+    /// The probe detected an α/bandwidth drift at this step (§3-C).
+    pub net_changed: bool,
+    /// The probed (noisy) inter link this step planned against.
+    pub probed: LinkParams,
+    /// CR currently in effect.
+    pub cur_cr: f64,
+    /// Effective message bytes (`4 · dim · msg_scale`).
+    pub model_bytes: f64,
+    pub n_workers: usize,
+    /// Whether the active strategy compresses (CR semantics apply).
+    pub compressed: bool,
+}
+
+/// One typed control action (see [`ControlDecision`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControlAction {
+    /// Set the compression ratio for subsequent steps.
+    SetCr(f64),
+    /// Pin the strategy's collective (delivered via
+    /// [`CommStrategy::set_collective`](crate::coordinator::strategy::CommStrategy::set_collective);
+    /// strategies that re-plan per step may decline). The observable
+    /// collective change surfaces through the regular per-step switch
+    /// detection, so no separate event is fired for this action.
+    SwitchCollective(CollectiveKind),
+    /// Switch the AR-Topk worker-selection policy (delivered via
+    /// [`CommStrategy::set_selection_policy`](crate::coordinator::strategy::CommStrategy::set_selection_policy)).
+    SwitchSelectionPolicy(SelectionPolicy),
+    /// Ask the engine to run a checkpointed candidate exploration; the
+    /// measured profiles come back through [`Controller::on_exploration`].
+    RequestExploration(ExplorationRequest),
+}
+
+/// A decision record: who decided ([`Controller::name`]), why (a short
+/// static trigger tag like `"gain-drift"` or `"net-change"`), and what.
+/// `by`/`reason` are carried into the observer events
+/// ([`CrChange`](crate::coordinator::observer::CrChange),
+/// [`StrategySwitch`](crate::coordinator::observer::StrategySwitch)) so
+/// logs can attribute every adaptation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControlDecision {
+    pub by: &'static str,
+    pub reason: &'static str,
+    pub action: ControlAction,
+}
+
+/// A pluggable adaptation controller.
+///
+/// Lifecycle per recorded step: the engine calls `observe` once, then
+/// applies the returned decisions in order. A
+/// [`ControlAction::RequestExploration`] decision makes the engine run the
+/// [`ExplorationHarness`] (checkpoint → probe each candidate CR → restore)
+/// and hand the measured profiles to `on_exploration`, whose decisions are
+/// applied the same way (one level of follow-up exploration is allowed;
+/// deeper recursion is dropped as a runaway guard).
+///
+/// Determinism: a controller whose decisions are pure functions of the
+/// observed (simulated) metrics — like [`GravacController`] — preserves
+/// the §7 bitwise thread-invariance. [`MooController`] reads MEASURED
+/// compression time and is therefore only reproducible when that input is
+/// deterministic (e.g. `comp_scale = 0`, see `rust/tests/determinism.rs`).
+pub trait Controller: Send {
+    /// Registry/display name (decision attribution, reports).
+    fn name(&self) -> &'static str;
+
+    /// One recorded step completed; return any control decisions.
+    fn observe(&mut self, ctx: &ControlCtx<'_>) -> Vec<ControlDecision>;
+
+    /// Measured candidate profiles from an exploration this controller
+    /// requested. Default: ignore (for controllers that never explore).
+    fn on_exploration(&mut self, _res: &ExplorationOutcome) -> Vec<ControlDecision> {
+        Vec::new()
+    }
+
+    /// Whether this controller adapts the CR (requires a compressed
+    /// strategy; the builder rejects the combination otherwise).
+    fn adapts_cr(&self) -> bool {
+        false
+    }
+
+    /// CR to start the run at (`None` = whatever [`CrControl`] says).
+    fn initial_cr(&self) -> Option<f64> {
+        None
+    }
+}
+
+/// The no-op controller: the CR stays wherever [`CrControl`] put it and
+/// the strategy adapts nothing — the baseline every adaptive controller
+/// is compared against.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StaticController;
+
+impl Controller for StaticController {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn observe(&mut self, _ctx: &ControlCtx<'_>) -> Vec<ControlDecision> {
+        Vec::new()
+    }
+}
+
+/// Runs several controllers side by side (e.g. a CR controller composed
+/// with the STAR/VAR [`PolicySwitchController`] for `artopk-auto`).
+/// `observe` concatenates each sub-controller's decisions in registration
+/// order; exploration results are routed back to the sub-controller whose
+/// [`Controller::name`] matches the requesting decision's `by` tag (names
+/// within one composite must therefore be unique).
+pub struct CompositeController {
+    subs: Vec<Box<dyn Controller>>,
+}
+
+impl CompositeController {
+    pub fn new(subs: Vec<Box<dyn Controller>>) -> Self {
+        CompositeController { subs }
+    }
+
+    pub fn pair(a: Box<dyn Controller>, b: Box<dyn Controller>) -> Self {
+        CompositeController { subs: vec![a, b] }
+    }
+}
+
+impl Controller for CompositeController {
+    fn name(&self) -> &'static str {
+        "composite"
+    }
+
+    fn observe(&mut self, ctx: &ControlCtx<'_>) -> Vec<ControlDecision> {
+        self.subs.iter_mut().flat_map(|s| s.observe(ctx)).collect()
+    }
+
+    fn on_exploration(&mut self, res: &ExplorationOutcome) -> Vec<ControlDecision> {
+        match self.subs.iter_mut().find(|s| s.name() == res.by) {
+            Some(s) => s.on_exploration(res),
+            None => Vec::new(),
+        }
+    }
+
+    fn adapts_cr(&self) -> bool {
+        self.subs.iter().any(|s| s.adapts_cr())
+    }
+
+    fn initial_cr(&self) -> Option<f64> {
+        self.subs.iter().find_map(|s| s.initial_cr())
+    }
+}
+
+/// STAR/VAR trial/commit selection-policy switching as a controller (the
+/// paper's §5 future work, formerly embedded in the `artopk-auto`
+/// strategy): run a trial window under each policy, score by per-step loss
+/// improvement, commit to the winner for a longer period, re-trial.
+/// Emits [`ControlAction::SwitchSelectionPolicy`] whenever the active
+/// policy changes (`"trial"`) and at every commit (`"trial-commit"` — a
+/// re-commit of the incumbent is still an observable decision).
+pub struct PolicySwitchController {
+    switcher: PolicySwitcher,
+}
+
+impl PolicySwitchController {
+    /// Windows are validated ([`ControllerError::BadPolicyWindows`]) —
+    /// construction never panics (the PR 3 contract).
+    pub fn new(trial_window: u64, commit_period: u64) -> Result<Self, ControllerError> {
+        Ok(PolicySwitchController { switcher: PolicySwitcher::new(trial_window, commit_period)? })
+    }
+
+    /// Completed trial→commit cycles (observability/tests).
+    pub fn cycles(&self) -> u64 {
+        self.switcher.cycles
+    }
+}
+
+impl Controller for PolicySwitchController {
+    fn name(&self) -> &'static str {
+        "policy-switch"
+    }
+
+    fn observe(&mut self, ctx: &ControlCtx<'_>) -> Vec<ControlDecision> {
+        let prev = self.switcher.current();
+        let cycles_before = self.switcher.cycles;
+        self.switcher.observe(ctx.metrics.loss);
+        let cur = self.switcher.current();
+        let committed = self.switcher.cycles > cycles_before;
+        if cur != prev || committed {
+            vec![ControlDecision {
+                by: "policy-switch",
+                reason: if committed { "trial-commit" } else { "trial" },
+                action: ControlAction::SwitchSelectionPolicy(cur),
+            }]
+        } else {
+            Vec::new()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Typed errors + the registry table (the config/CLI surface).
+// ---------------------------------------------------------------------------
+
+/// A controller configuration the builder refused — lifted into the
+/// Session builder's typed-error surface as
+/// [`ConfigError::Controller`](crate::coordinator::session::ConfigError).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ControllerError {
+    /// `--controller` spec naming no registry entry (lists valid names).
+    UnknownController { spec: String },
+    /// STAR/VAR trial/commit windows violating
+    /// `trial_window >= 2 && commit_period >= trial_window` (was an
+    /// `assert!` in `PolicySwitcher::new`).
+    BadPolicyWindows { trial_window: u64, commit_period: u64 },
+    /// A CR-adapting controller with an uncompressed strategy: there is
+    /// no compression ratio to adapt.
+    NeedsCompression { controller: &'static str, strategy: String },
+}
+
+impl fmt::Display for ControllerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ControllerError::UnknownController { spec } => write!(
+                f,
+                "unknown controller `{spec}` (valid: {})",
+                controller_names().collect::<Vec<_>>().join(", ")
+            ),
+            ControllerError::BadPolicyWindows { trial_window, commit_period } => write!(
+                f,
+                "policy windows must satisfy trial_window >= 2 and commit_period >= \
+                 trial_window (got trial_window={trial_window}, commit_period={commit_period})"
+            ),
+            ControllerError::NeedsCompression { controller, strategy } => write!(
+                f,
+                "controller `{controller}` adapts the compression ratio, which requires a \
+                 compressed strategy ({strategy} is uncompressed)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for ControllerError {}
+
+/// One controller registry row: a name, a one-line summary (usage/help
+/// text) and a constructor reading the relevant knobs off the serialized
+/// [`TrainConfig`] (MOO bounds come from [`CrControl::Adaptive`] when
+/// present, defaults + the run seed otherwise).
+pub struct ControllerEntry {
+    pub name: &'static str,
+    pub summary: &'static str,
+    pub build: fn(&TrainConfig) -> Box<dyn Controller>,
+}
+
+/// The one controller-name table: `--controller` parsing, usage text and
+/// the unknown-name error listing all read from here, so a new adaptation
+/// policy is one new row (mirror of `STRATEGY_TABLE` / `NET_TABLE`).
+pub const CONTROLLER_TABLE: &[ControllerEntry] = &[
+    ControllerEntry {
+        name: "static",
+        summary: "no adaptation: CR and strategy stay as configured",
+        build: |_| Box::new(StaticController),
+    },
+    ControllerEntry {
+        name: "moo",
+        summary: "paper §3-E: checkpointed CR-ladder exploration + NSGA-II knee point",
+        build: |cfg| Box::new(MooController::new(adaptive_cfg_of(cfg))),
+    },
+    ControllerEntry {
+        name: "gravac",
+        summary: "GraVAC-style threshold ladder: walk the CR ladder on gain alone",
+        build: |cfg| {
+            let a = adaptive_cfg_of(cfg);
+            Box::new(GravacController::new(GravacConfig {
+                c_low: a.c_low,
+                c_high: a.c_high,
+                factor: a.factor,
+                ..Default::default()
+            }))
+        },
+    },
+];
+
+/// The MOO/ladder knobs for a registry build: the configured
+/// [`CrControl::Adaptive`] bounds when present, defaults (+ run seed)
+/// otherwise.
+fn adaptive_cfg_of(cfg: &TrainConfig) -> AdaptiveConfig {
+    match &cfg.cr {
+        CrControl::Adaptive(a) => a.clone(),
+        CrControl::Static(_) => AdaptiveConfig { seed: cfg.seed, ..Default::default() },
+    }
+}
+
+/// Every registered controller name, in table order (usage/help text).
+pub fn controller_names() -> impl Iterator<Item = &'static str> {
+    CONTROLLER_TABLE.iter().map(|e| e.name)
+}
+
+/// Whether the named registry controller adapts the CR — what decides if
+/// adaptive-ladder flags (`--c-low`/`--c-high`/`--probe-iters`) apply to
+/// a `--controller` spec. Derived from the built controller itself (no
+/// second name list to drift); unknown names answer `false` and are
+/// rejected with the full listing at `build()`.
+pub fn spec_adapts_cr(spec: &str) -> bool {
+    CONTROLLER_TABLE
+        .iter()
+        .find(|e| e.name == spec)
+        .is_some_and(|e| (e.build)(&TrainConfig::default()).adapts_cr())
+}
+
+/// Build a registry controller by name; the error lists every valid name.
+pub fn build_controller(
+    spec: &str,
+    cfg: &TrainConfig,
+) -> Result<Box<dyn Controller>, ControllerError> {
+    match CONTROLLER_TABLE.iter().find(|e| e.name == spec) {
+        Some(e) => Ok((e.build)(cfg)),
+        None => Err(ControllerError::UnknownController { spec: spec.to_string() }),
+    }
+}
+
+/// The controller implied by the serialized [`CrControl`] form (the
+/// pre-refactor behavior): `Static` → no-op, `Adaptive` → MOO.
+pub fn from_cr_control(cfg: &TrainConfig) -> Box<dyn Controller> {
+    match &cfg.cr {
+        CrControl::Static(_) => Box::new(StaticController),
+        CrControl::Adaptive(a) => Box::new(MooController::new(a.clone())),
+    }
+}
+
+/// Default STAR/VAR trial/commit windows for the `artopk-auto`
+/// composition (the values the old embedded switcher used).
+pub const DEFAULT_POLICY_WINDOWS: (u64, u64) = (10, 50);
+
+/// Compose `primary` with whatever extra controllers the configured
+/// strategy calls for — today: the STAR/VAR [`PolicySwitchController`]
+/// (at the given trial/commit windows) when the strategy is
+/// `artopk-auto`. THE one place the stack shape is decided;
+/// `SessionBuilder::build` and [`default_stack`] both call it.
+pub fn compose_for_strategy(
+    primary: Box<dyn Controller>,
+    cfg: &TrainConfig,
+    windows: (u64, u64),
+) -> Result<Box<dyn Controller>, ControllerError> {
+    if matches!(cfg.strategy, Strategy::ArTopkAuto { .. }) {
+        let policy = PolicySwitchController::new(windows.0, windows.1)?;
+        Ok(Box::new(CompositeController::pair(primary, Box::new(policy))))
+    } else {
+        Ok(primary)
+    }
+}
+
+/// The full default controller stack for a config: the CR controller
+/// implied by [`CrControl`], composed via [`compose_for_strategy`] at
+/// [`DEFAULT_POLICY_WINDOWS`] — what `SessionBuilder::build` uses when no
+/// explicit controller/spec/windows override it.
+pub fn default_stack(cfg: &TrainConfig) -> Box<dyn Controller> {
+    compose_for_strategy(from_cr_control(cfg), cfg, DEFAULT_POLICY_WINDOWS)
+        .expect("default windows valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::CollectiveKind;
+
+    fn ctx(m: &StepMetrics) -> ControlCtx<'_> {
+        ControlCtx {
+            metrics: m,
+            net_changed: false,
+            probed: LinkParams::from_ms_gbps(4.0, 20.0),
+            cur_cr: 0.05,
+            model_bytes: 4e6,
+            n_workers: 4,
+            compressed: true,
+        }
+    }
+
+    fn metrics(step: u64, loss: f64) -> StepMetrics {
+        StepMetrics {
+            step,
+            epoch: step as f64 / 10.0,
+            loss,
+            t_compute: 0.01,
+            t_comp: 0.001,
+            t_sync: 0.02,
+            collective: CollectiveKind::ArTopkRing,
+            cr: 0.05,
+            selected_rank: Some(0),
+            gain: 0.9,
+            alpha_ms: 4.0,
+            bw_gbps: 20.0,
+        }
+    }
+
+    #[test]
+    fn table_names_unique_and_build() {
+        let cfg = TrainConfig::default();
+        let mut seen = std::collections::BTreeSet::new();
+        for e in CONTROLLER_TABLE {
+            assert!(seen.insert(e.name), "duplicate controller name {}", e.name);
+            let c = (e.build)(&cfg);
+            assert_eq!(c.name(), e.name, "table name must match Controller::name");
+            assert!(!e.summary.is_empty());
+        }
+        assert!(build_controller("static", &cfg).is_ok());
+        let err = build_controller("nope", &cfg).unwrap_err();
+        assert!(matches!(err, ControllerError::UnknownController { .. }));
+        let msg = err.to_string();
+        assert!(msg.contains("static") && msg.contains("moo") && msg.contains("gravac"), "{msg}");
+    }
+
+    /// The CLI's "do adaptive-ladder flags apply?" question is answered
+    /// by the built controllers themselves — no second name list.
+    #[test]
+    fn spec_adapts_cr_follows_the_built_controllers() {
+        assert!(!spec_adapts_cr("static"));
+        assert!(spec_adapts_cr("moo"));
+        assert!(spec_adapts_cr("gravac"));
+        assert!(!spec_adapts_cr("nope"), "unknown names answer false, rejected at build()");
+    }
+
+    #[test]
+    fn static_controller_never_decides() {
+        let mut c = StaticController;
+        let m = metrics(0, 1.0);
+        assert!(c.observe(&ctx(&m)).is_empty());
+        assert!(!c.adapts_cr());
+        assert!(c.initial_cr().is_none());
+    }
+
+    /// The ported trial/commit behavior: policy flips to VAR after the
+    /// STAR trial window, and the end of the VAR trial commits a winner —
+    /// each an observable decision with the right reason tag.
+    #[test]
+    fn policy_switch_controller_trials_then_commits() {
+        let mut c = PolicySwitchController::new(5, 20).unwrap();
+        let mut decisions = Vec::new();
+        for step in 0..10u64 {
+            // STAR improves fast, VAR is flat -> STAR must win the commit.
+            let loss = if step < 5 { 1.0 - 0.1 * step as f64 } else { 0.6 };
+            let m = metrics(step, loss);
+            decisions.extend(c.observe(&ctx(&m)));
+        }
+        assert_eq!(decisions.len(), 2, "{decisions:?}");
+        assert_eq!(decisions[0].reason, "trial");
+        assert_eq!(
+            decisions[0].action,
+            ControlAction::SwitchSelectionPolicy(SelectionPolicy::Var)
+        );
+        assert_eq!(decisions[1].reason, "trial-commit");
+        assert_eq!(
+            decisions[1].action,
+            ControlAction::SwitchSelectionPolicy(SelectionPolicy::Star)
+        );
+        assert_eq!(c.cycles(), 1);
+    }
+
+    #[test]
+    fn policy_windows_validated_not_panicking() {
+        assert!(PolicySwitchController::new(2, 2).is_ok(), "boundary is valid");
+        assert_eq!(
+            PolicySwitchController::new(1, 10).err(),
+            Some(ControllerError::BadPolicyWindows { trial_window: 1, commit_period: 10 })
+        );
+        assert_eq!(
+            PolicySwitchController::new(5, 4).err(),
+            Some(ControllerError::BadPolicyWindows { trial_window: 5, commit_period: 4 })
+        );
+    }
+
+    /// Composite: decisions concatenate in order; exploration results
+    /// route back by the requesting decision's `by` tag.
+    #[test]
+    fn composite_routes_exploration_results() {
+        struct Wants;
+        impl Controller for Wants {
+            fn name(&self) -> &'static str {
+                "wants"
+            }
+            fn observe(&mut self, _ctx: &ControlCtx<'_>) -> Vec<ControlDecision> {
+                vec![ControlDecision {
+                    by: "wants",
+                    reason: "test",
+                    action: ControlAction::RequestExploration(ExplorationRequest {
+                        candidates: vec![0.1, 0.01],
+                        iters: 1,
+                    }),
+                }]
+            }
+            fn on_exploration(&mut self, res: &ExplorationOutcome) -> Vec<ControlDecision> {
+                vec![ControlDecision {
+                    by: "wants",
+                    reason: "test",
+                    action: ControlAction::SetCr(res.profiles.first().map_or(0.5, |p| p.cr)),
+                }]
+            }
+        }
+        let mut c = CompositeController::pair(Box::new(StaticController), Box::new(Wants));
+        let m = metrics(0, 1.0);
+        let ds = c.observe(&ctx(&m));
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].by, "wants");
+        let out = ExplorationOutcome {
+            by: "wants",
+            reason: "test",
+            probed: LinkParams::from_ms_gbps(1.0, 10.0),
+            profiles: vec![crate::moo::problem::CandidateProfile {
+                cr: 0.07,
+                t_comp: 0.0,
+                t_sync: 0.01,
+                gain: 0.8,
+            }],
+        };
+        let follow = c.on_exploration(&out);
+        assert_eq!(follow.len(), 1);
+        assert_eq!(follow[0].action, ControlAction::SetCr(0.07));
+        // A result tagged for nobody is dropped, not misrouted.
+        assert!(c.on_exploration(&ExplorationOutcome { by: "ghost", ..out }).is_empty());
+    }
+}

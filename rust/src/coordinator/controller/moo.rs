@@ -1,0 +1,404 @@
+//! The MOO-adaptive compression controller (§3-E), ported onto the
+//! [`Controller`] seam (formerly `coordinator/adaptive.rs`'s
+//! `AdaptiveState`, spliced into the trainer).
+//!
+//! Triggers, exactly as the paper specifies:
+//! * **gain drift** ≥ `gain_threshold` (10%) — re-profile the candidate CR
+//!   ladder: a [`RequestExploration`](super::ControlAction) decision makes
+//!   the engine checkpoint, run each candidate for `probe_iters` steps
+//!   recording (t_comp, t_sync, gain), restore; the profiles come back via
+//!   [`Controller::on_exploration`], the MOO problem is rebuilt and solved
+//!   (NSGA-II) for the knee-point `c_optimal`;
+//! * **network change** (probe detects α or bandwidth drift) — keep the
+//!   measured gain/comp profiles but re-predict each candidate's `t_sync`
+//!   from the α-β cost model at the new link, re-solve.
+//!
+//! Behavior is pinned BITWISE against the pre-refactor implementation by
+//! `moo_controller_reproduces_the_legacy_adaptive_run_bitwise` (below),
+//! which drives a verbatim copy of the old `AdaptiveState` algorithm
+//! against the engine directly and compares the full trajectory.
+
+use super::{
+    ControlAction, ControlCtx, ControlDecision, Controller, ExplorationOutcome,
+    ExplorationRequest,
+};
+use crate::compress::GainTracker;
+use crate::coordinator::selector;
+use crate::moo::problem::{candidate_crs, CandidateProfile, CrProblem};
+
+/// Adaptive-CR configuration (defaults = the paper's §3-E1 values). Also
+/// the ladder-bounds source for the [`GravacController`](super::gravac)
+/// registry build.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    pub c_low: f64,
+    pub c_high: f64,
+    /// Geometric step between candidate CRs.
+    pub factor: f64,
+    /// Iterations each candidate runs during exploration.
+    pub probe_iters: u64,
+    /// Relative gain-drift trigger (0.1 = 10%).
+    pub gain_threshold: f64,
+    /// NSGA-II seed.
+    pub seed: u64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            c_low: 0.001,
+            c_high: 0.1,
+            factor: 3.0,
+            probe_iters: 10,
+            gain_threshold: 0.1,
+            seed: 0,
+        }
+    }
+}
+
+/// The §3-E NSGA-II knee-point controller.
+#[derive(Debug)]
+pub struct MooController {
+    pub cfg: AdaptiveConfig,
+    /// Smoothed-gain drift trigger (GraVAC's gain heuristic, Fig 3).
+    tracker: GainTracker,
+    /// Last measured candidate profiles (refreshed on gain triggers).
+    profiles: Option<Vec<CandidateProfile>>,
+    /// Trigger tag of the exploration in flight.
+    pending_reason: &'static str,
+    /// How many explorations ran (observability/tests).
+    pub explorations: u64,
+    /// How many re-solves ran (gain + network triggers).
+    pub resolves: u64,
+}
+
+impl MooController {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        let tracker = GainTracker::new(cfg.gain_threshold);
+        MooController {
+            cfg,
+            tracker,
+            profiles: None,
+            pending_reason: "warmup",
+            explorations: 0,
+            resolves: 0,
+        }
+    }
+
+    /// Solve the MOO problem over the current profiles; the knee point
+    /// (clamped to the ladder bounds) becomes the next CR.
+    fn solve(&mut self, reason: &'static str) -> ControlDecision {
+        let profiles = self.profiles.as_ref().expect("profiles measured");
+        let c_opt = CrProblem::new(profiles.clone()).solve(self.cfg.seed);
+        self.resolves += 1;
+        ControlDecision {
+            by: "moo",
+            reason,
+            action: ControlAction::SetCr(c_opt.clamp(self.cfg.c_low, self.cfg.c_high)),
+        }
+    }
+}
+
+impl Controller for MooController {
+    fn name(&self) -> &'static str {
+        "moo"
+    }
+
+    fn adapts_cr(&self) -> bool {
+        true
+    }
+
+    /// The paper starts every adaptive run at the ladder's top (`c_high`).
+    fn initial_cr(&self) -> Option<f64> {
+        Some(self.cfg.c_high)
+    }
+
+    fn observe(&mut self, ctx: &ControlCtx<'_>) -> Vec<ControlDecision> {
+        let gain_fired = self.tracker.record(ctx.metrics.gain);
+        if !ctx.compressed {
+            return Vec::new();
+        }
+        let need_explore = self.profiles.is_none() || gain_fired;
+        if !need_explore && !ctx.net_changed {
+            return Vec::new();
+        }
+        if need_explore {
+            let reason = if self.profiles.is_none() { "warmup" } else { "gain-drift" };
+            self.pending_reason = reason;
+            return vec![ControlDecision {
+                by: "moo",
+                reason,
+                action: ControlAction::RequestExploration(ExplorationRequest {
+                    candidates: candidate_crs(self.cfg.c_low, self.cfg.c_high, self.cfg.factor),
+                    iters: self.cfg.probe_iters,
+                }),
+            }];
+        }
+        // Network changed: re-predict t_sync at the new link only.
+        if let Some(profiles) = &mut self.profiles {
+            for p in profiles.iter_mut() {
+                p.t_sync = selector::choose(ctx.probed, ctx.model_bytes, ctx.n_workers, p.cr)
+                    .predicted_s;
+            }
+        }
+        vec![self.solve("net-change")]
+    }
+
+    fn on_exploration(&mut self, res: &ExplorationOutcome) -> Vec<ControlDecision> {
+        // A CR problem needs >= 2 measured candidates; a degenerate
+        // harness result (empty/single — e.g. a foreign request echoed to
+        // us by a composite) must not poison the stored profiles or panic
+        // in CrProblem::new. Keep the previous profiles and decide
+        // nothing.
+        if res.profiles.len() < 2 {
+            return Vec::new();
+        }
+        self.profiles = Some(res.profiles.clone());
+        self.explorations += 1;
+        // Accept the current gain level as the new drift anchor.
+        self.tracker.rearm();
+        vec![self.solve(self.pending_reason)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::artopk::SelectionPolicy;
+    use crate::compress::GainTracker;
+    use crate::coordinator::controller::StaticController;
+    use crate::coordinator::strategy::instantiate;
+    use crate::coordinator::trainer::{CrControl, Strategy, Trainer, TrainConfig};
+    use crate::coordinator::worker::ComputeModel;
+    use crate::netsim::cost_model::LinkParams;
+    use crate::netsim::schedule::NetSchedule;
+    use crate::runtime::host_model::HostMlp;
+    use crate::util::pool::ThreadPool;
+
+    fn adaptive_cfg(schedule: NetSchedule, steps: u64) -> TrainConfig {
+        TrainConfig {
+            n_workers: 4,
+            steps,
+            steps_per_epoch: 25,
+            lr: 0.3,
+            momentum: 0.6,
+            strategy: Strategy::Flexible { policy: SelectionPolicy::Star },
+            cr: CrControl::Adaptive(AdaptiveConfig { probe_iters: 3, ..Default::default() }),
+            net: Box::new(schedule),
+            compute: ComputeModel::fixed(0.005),
+            eval_every: 0,
+            seed: 5,
+            // Zero out MEASURED compression time so the MOO inputs — and
+            // therefore the whole run — are deterministic (DESIGN.md §10).
+            comp_scale: 0.0,
+            ..Default::default()
+        }
+    }
+
+    fn adaptive_trainer(schedule: NetSchedule, steps: u64) -> Trainer {
+        Trainer::new(adaptive_cfg(schedule, steps), Box::new(HostMlp::default_preset(11)))
+    }
+
+    #[test]
+    fn first_step_triggers_exploration_and_sets_cr() {
+        let mut t = adaptive_trainer(NetSchedule::c2(4.0), 5);
+        t.run();
+        assert!(t.cur_cr() >= 0.001 && t.cur_cr() <= 0.1);
+        assert!(t.explore_overhead_s() > 0.0, "exploration must cost time");
+        // Main log only contains the recorded steps.
+        assert_eq!(t.metrics().steps.len(), 5);
+    }
+
+    #[test]
+    fn exploration_does_not_corrupt_training() {
+        // With restore, adaptive training must still learn.
+        let mut t = adaptive_trainer(NetSchedule::c2(8.0), 200);
+        t.run();
+        let acc = t.metrics().final_accuracy().unwrap();
+        assert!(acc > 0.7, "adaptive accuracy {acc}");
+    }
+
+    #[test]
+    fn network_change_triggers_resolve_without_new_exploration() {
+        // C2 at short epochs -> several network phase changes within run.
+        let mut t = adaptive_trainer(NetSchedule::c2(4.0), 100);
+        t.run();
+        let crs = t.metrics().crs_used();
+        let distinct: std::collections::BTreeSet<u64> =
+            crs.iter().map(|c| (c * 1e6) as u64).collect();
+        assert!(distinct.len() >= 2, "adaptive CR never moved: {distinct:?}");
+    }
+
+    #[test]
+    fn fixed_strategy_with_static_cr_never_adapts() {
+        let cfg = TrainConfig {
+            n_workers: 4,
+            steps: 30,
+            strategy: Strategy::ArTopkFixed {
+                policy: SelectionPolicy::Star,
+                flavor: crate::artopk::ArFlavor::Ring,
+            },
+            cr: CrControl::Static(0.02),
+            compute: ComputeModel::fixed(0.005),
+            seed: 2,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(1)));
+        t.run();
+        assert!(t.metrics().crs_used().iter().all(|&c| (c - 0.02).abs() < 1e-12));
+        assert_eq!(t.explore_overhead_s(), 0.0);
+    }
+
+    // -----------------------------------------------------------------------
+    // The behavior pin (ISSUE 5 satellite): a VERBATIM copy of the
+    // pre-refactor `AdaptiveState` (adaptive.rs as of PR 4) driven against
+    // the engine directly, compared bitwise against the ported `moo`
+    // controller on the C2 adaptive scenario. `comp_scale = 0` removes the
+    // one timing-nondeterministic input (measured compression seconds), so
+    // any trajectory difference is an algorithmic divergence, not noise.
+    // -----------------------------------------------------------------------
+
+    /// Pre-refactor controller state, copied verbatim (field-for-field,
+    /// branch-for-branch) from the deleted `coordinator/adaptive.rs`.
+    struct LegacyAdaptiveState {
+        cfg: AdaptiveConfig,
+        profiles: Option<Vec<CandidateProfile>>,
+        explorations: u64,
+    }
+
+    impl LegacyAdaptiveState {
+        fn new(cfg: AdaptiveConfig) -> Self {
+            LegacyAdaptiveState { cfg, profiles: None, explorations: 0 }
+        }
+
+        /// Verbatim `AdaptiveState::maybe_adapt` (the old trainer-owned
+        /// gain tracker is passed in, as the old trainer did implicitly).
+        /// Kept character-for-character — lints are silenced rather than
+        /// "fixing" the copy, which would defeat the pin.
+        #[allow(clippy::nonminimal_bool)]
+        fn maybe_adapt(
+            &mut self,
+            t: &mut Trainer,
+            tracker: &mut GainTracker,
+            net_changed: bool,
+            gain_fired: bool,
+            probed: LinkParams,
+        ) {
+            let need_explore = self.profiles.is_none() || gain_fired;
+            if !(need_explore || net_changed) {
+                return;
+            }
+            if need_explore {
+                self.profiles = Some(self.explore(t, probed));
+                self.explorations += 1;
+                tracker.rearm();
+            } else if let Some(profiles) = &mut self.profiles {
+                for p in profiles.iter_mut() {
+                    p.t_sync =
+                        selector::choose(probed, t.model_bytes(), t.cfg().n_workers, p.cr)
+                            .predicted_s;
+                }
+            }
+            let profiles = self.profiles.as_ref().expect("profiles set");
+            let c_opt = CrProblem::new(profiles.clone()).solve(self.cfg.seed);
+            t.cur_cr = c_opt.clamp(self.cfg.c_low, self.cfg.c_high);
+        }
+
+        /// Verbatim `AdaptiveState::explore`.
+        fn explore(&self, t: &mut Trainer, probed: LinkParams) -> Vec<CandidateProfile> {
+            let ck = t.snapshot();
+            let saved_cr = t.cur_cr;
+            let mut out = Vec::new();
+            let mut overhead = 0.0;
+            for cr in candidate_crs(self.cfg.c_low, self.cfg.c_high, self.cfg.factor) {
+                t.cur_cr = cr;
+                let (mut tc, mut ts, mut ga) = (0.0, 0.0, 0.0);
+                for _ in 0..self.cfg.probe_iters {
+                    let m = t.step_once(false, probed);
+                    tc += m.t_comp;
+                    ts += m.t_sync;
+                    ga += m.gain;
+                    overhead += m.t_step();
+                }
+                let k = self.cfg.probe_iters as f64;
+                out.push(CandidateProfile {
+                    cr,
+                    t_comp: tc / k,
+                    t_sync: ts / k,
+                    gain: (ga / k).clamp(1e-6, 1.0),
+                });
+                t.restore(&ck);
+            }
+            t.cur_cr = saved_cr;
+            t.explore_overhead_s += overhead;
+            out
+        }
+    }
+
+    /// Drive the legacy algorithm exactly as the old
+    /// `run_one_scheduled_step`/`run` did: probe → recorded step → gain
+    /// tracking → maybe_adapt, against a trainer whose own controller is a
+    /// no-op (so only the legacy copy steers it).
+    fn legacy_run(cfg: TrainConfig, steps: u64) -> Trainer {
+        let a = match &cfg.cr {
+            CrControl::Adaptive(a) => a.clone(),
+            _ => panic!("legacy pin needs an adaptive config"),
+        };
+        let pool = ThreadPool::auto(cfg.threads);
+        let strategy = instantiate(cfg.strategy, cfg.n_workers, cfg.seed, pool);
+        let mut t = Trainer::with_parts(
+            cfg,
+            Box::new(HostMlp::default_preset(11)),
+            strategy,
+            Vec::new(),
+            pool,
+            Box::new(StaticController),
+        );
+        // The old trainer owned the gain tracker (threshold from the
+        // adaptive config) and started at c_high.
+        let mut tracker = GainTracker::new(a.gain_threshold);
+        t.cur_cr = a.c_high;
+        let mut legacy = LegacyAdaptiveState::new(a);
+        for _ in 0..steps {
+            let epoch = t.epoch();
+            let (obs, net_changed) = t.probe.measure_and_detect(epoch);
+            let m = t.step_once(true, obs.link());
+            let gain_fired = tracker.record(m.gain);
+            legacy.maybe_adapt(&mut t, &mut tracker, net_changed, gain_fired, obs.link());
+        }
+        assert!(legacy.explorations >= 1, "the pin scenario must explore");
+        t
+    }
+
+    /// THE PIN: on the C2 adaptive scenario the ported `moo` controller
+    /// reproduces the pre-refactor run bitwise — parameters, per-step
+    /// loss/CR trajectory, simulated times and exploration overhead.
+    #[test]
+    fn moo_controller_reproduces_the_legacy_adaptive_run_bitwise() {
+        let steps = 60;
+        let legacy = legacy_run(adaptive_cfg(NetSchedule::c2(4.0), steps), steps);
+        let mut ported = adaptive_trainer(NetSchedule::c2(4.0), steps);
+        ported.run();
+
+        assert_eq!(legacy.params().len(), ported.params().len());
+        for (i, (a, b)) in legacy.params().iter().zip(ported.params()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "param {i}: {a} vs {b}");
+        }
+        assert_eq!(legacy.metrics().steps.len(), ported.metrics().steps.len());
+        for (a, b) in legacy.metrics().steps.iter().zip(&ported.metrics().steps) {
+            let s = a.step;
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {s}: loss");
+            assert_eq!(a.cr.to_bits(), b.cr.to_bits(), "step {s}: cr");
+            assert_eq!(a.t_sync.to_bits(), b.t_sync.to_bits(), "step {s}: t_sync");
+            assert_eq!(a.t_compute.to_bits(), b.t_compute.to_bits(), "step {s}: t_compute");
+            assert_eq!(a.gain.to_bits(), b.gain.to_bits(), "step {s}: gain");
+            assert_eq!(a.collective, b.collective, "step {s}: collective");
+        }
+        assert_eq!(legacy.cur_cr().to_bits(), ported.cur_cr().to_bits(), "final cr");
+        assert_eq!(
+            legacy.explore_overhead_s().to_bits(),
+            ported.explore_overhead_s().to_bits(),
+            "exploration overhead accounting"
+        );
+    }
+}

@@ -1,10 +1,11 @@
 //! L3 coordinator: the synchronous data-parallel training loop, the
 //! Session API (builder-validated configs, pluggable communication
 //! strategies, typed observer stream — DESIGN.md §8), collective selection
-//! (Eqn 5), and the MOO-adaptive compression controller (§3-E).
+//! (Eqn 5), and the pluggable control plane (CR/collective/policy
+//! controllers incl. the §3-E MOO controller — DESIGN.md §10).
 
-pub mod adaptive;
 pub mod checkpoint;
+pub mod controller;
 pub mod metrics;
 pub mod observer;
 pub mod policy_switch;
@@ -14,7 +15,10 @@ pub mod strategy;
 pub mod trainer;
 pub mod worker;
 
-pub use adaptive::AdaptiveConfig;
+pub use controller::{
+    AdaptiveConfig, ControlAction, ControlCtx, ControlDecision, Controller,
+    ControllerError, GravacConfig, CONTROLLER_TABLE,
+};
 pub use metrics::{MetricsLog, StepMetrics};
 pub use observer::{
     CrChange, CsvSink, EvalRecord, NetChange, ProgressPrinter, StrategySwitch,

@@ -59,22 +59,36 @@ impl SwitchDimension {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct StrategySwitch {
     /// Recorded step at which the decision takes observable effect on the
-    /// stream. Decisions born on checkpointed exploration steps (their
-    /// timeline is rolled back) are delivered — and stamped — at the next
-    /// recorded step, or at end of run.
+    /// stream. Control decisions are made in the post-step control phase
+    /// (DESIGN.md §10) and stamped with the committed step counter — a
+    /// decision surrounding a checkpointed exploration is reported on the
+    /// real timeline, never a rolled-back one.
     pub step: u64,
     pub dimension: SwitchDimension,
     pub from: &'static str,
     pub to: &'static str,
+    /// Who decided: the [`Controller`](crate::coordinator::controller::Controller)
+    /// name for control-plane decisions, the strategy name for per-step
+    /// plan changes.
+    pub by: &'static str,
+    /// Short trigger tag (`"plan"`, `"trial"`, `"trial-commit"`, ...).
+    pub reason: &'static str,
 }
 
-/// An adaptive-CR controller decision (§3-E re-solve that moved the CR).
+/// A controller decision that moved the compression ratio (e.g. the §3-E
+/// MOO re-solve, or a GraVAC ladder step).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CrChange {
-    /// Step count AFTER the step that triggered the re-solve.
+    /// Step count AFTER the step that triggered the decision.
     pub step: u64,
     pub from: f64,
     pub to: f64,
+    /// The deciding controller's name
+    /// ([`Controller::name`](crate::coordinator::controller::Controller::name)).
+    pub by: &'static str,
+    /// Short trigger tag (`"warmup"`, `"gain-drift"`, `"net-change"`,
+    /// `"ladder-descend"`, `"gain-collapse"`, ...).
+    pub reason: &'static str,
 }
 
 /// The simulated network's TRUE inter-node link changed between recorded
@@ -95,11 +109,13 @@ pub struct NetChange {
 /// Typed event stream over a training run.
 ///
 /// All methods default to no-ops so observers implement only what they
-/// need. Events fire for RECORDED steps only (the MOO controller's
-/// checkpointed exploration steps are internal) — except strategy-level
-/// switch DECISIONS, which persist even when made on an exploration step
-/// and are therefore queued and delivered at the next recorded step.
-/// `on_eval` fires for every held-out evaluation including the final one.
+/// need. Events fire for RECORDED steps only — the exploration harness's
+/// checkpointed steps (DESIGN.md §10) are internal and rolled back, and
+/// control decisions made around them are stamped with the committed step
+/// counter. `on_strategy_switch` and `on_cr_change` events carry the
+/// deciding controller's name and a trigger-reason tag, so sinks can
+/// attribute every adaptation. `on_eval` fires for every held-out
+/// evaluation including the final one.
 pub trait TrainObserver: Send {
     /// A training step completed and was recorded.
     fn on_step(&mut self, _m: &StepMetrics) {}
@@ -107,10 +123,11 @@ pub trait TrainObserver: Send {
     /// A held-out evaluation ran.
     fn on_eval(&mut self, _e: &EvalRecord) {}
 
-    /// The strategy switched collective or committed a selection policy.
+    /// The strategy switched collective, or a controller switched the
+    /// selection policy (the `by`/`reason` fields name the decider).
     fn on_strategy_switch(&mut self, _s: &StrategySwitch) {}
 
-    /// The adaptive controller moved the compression ratio.
+    /// A controller moved the compression ratio.
     fn on_cr_change(&mut self, _c: &CrChange) {}
 
     /// The TRUE network conditions changed since the previous recorded
@@ -258,11 +275,22 @@ impl TrainObserver for ProgressPrinter {
     }
 
     fn on_strategy_switch(&mut self, s: &StrategySwitch) {
-        println!("switch step {:>6}  {}: {} -> {}", s.step, s.dimension.name(), s.from, s.to);
+        println!(
+            "switch step {:>6}  {}: {} -> {}  [{} {}]",
+            s.step,
+            s.dimension.name(),
+            s.from,
+            s.to,
+            s.by,
+            s.reason
+        );
     }
 
     fn on_cr_change(&mut self, c: &CrChange) {
-        println!("cr     step {:>6}  {:.5} -> {:.5}", c.step, c.from, c.to);
+        println!(
+            "cr     step {:>6}  {:.5} -> {:.5}  [{} {}]",
+            c.step, c.from, c.to, c.by, c.reason
+        );
     }
 
     fn on_net_change(&mut self, n: &NetChange) {

@@ -9,6 +9,7 @@
 //! data-driven (loss deltas), no oracle access.
 
 use crate::artopk::SelectionPolicy;
+use crate::coordinator::controller::ControllerError;
 
 #[derive(Debug, Clone, Copy, PartialEq)]
 enum Phase {
@@ -35,9 +36,23 @@ pub struct PolicySwitcher {
 }
 
 impl PolicySwitcher {
-    pub fn new(trial_window: u64, commit_period: u64) -> Self {
-        assert!(trial_window >= 2 && commit_period >= trial_window);
-        PolicySwitcher {
+    /// Validate trial/commit windows: a trial needs >= 2 observations to
+    /// bracket at least one loss delta, and the commit period must cover
+    /// the trial it follows. Surfaced as a typed error (was an `assert!`
+    /// that panicked at construction — the builder now rejects bad
+    /// windows as
+    /// [`ConfigError::Controller`](crate::coordinator::session::ConfigError)).
+    pub fn validate(trial_window: u64, commit_period: u64) -> Result<(), ControllerError> {
+        if trial_window >= 2 && commit_period >= trial_window {
+            Ok(())
+        } else {
+            Err(ControllerError::BadPolicyWindows { trial_window, commit_period })
+        }
+    }
+
+    pub fn new(trial_window: u64, commit_period: u64) -> Result<Self, ControllerError> {
+        Self::validate(trial_window, commit_period)?;
+        Ok(PolicySwitcher {
             phase: Phase::TrialStar,
             trial_window,
             commit_period,
@@ -47,7 +62,7 @@ impl PolicySwitcher {
             star_score: 0.0,
             var_score: 0.0,
             cycles: 0,
-        }
+        })
     }
 
     /// The policy to use for the upcoming step.
@@ -121,7 +136,7 @@ mod tests {
 
     #[test]
     fn trial_then_commit_cycle() {
-        let mut s = PolicySwitcher::new(5, 20);
+        let mut s = PolicySwitcher::new(5, 20).unwrap();
         assert_eq!(s.current(), SelectionPolicy::Star);
         // STAR trial: loss falls fast (improvement 0.1/step).
         for i in 0..5 {
@@ -144,7 +159,7 @@ mod tests {
 
     #[test]
     fn var_wins_when_it_improves_more() {
-        let mut s = PolicySwitcher::new(4, 8);
+        let mut s = PolicySwitcher::new(4, 8).unwrap();
         for _ in 0..4 {
             s.observe(1.0); // STAR: flat
         }
@@ -156,7 +171,7 @@ mod tests {
 
     #[test]
     fn ties_prefer_star() {
-        let mut s = PolicySwitcher::new(3, 6);
+        let mut s = PolicySwitcher::new(3, 6).unwrap();
         for _ in 0..3 {
             s.observe(1.0);
         }
@@ -171,7 +186,7 @@ mod tests {
     /// trial low). Known data: 1.0, 0.9, 0.8, 0.7 ⇒ exactly 0.1/step.
     #[test]
     fn window_improvement_divides_by_delta_count() {
-        let mut s = PolicySwitcher::new(4, 8);
+        let mut s = PolicySwitcher::new(4, 8).unwrap();
         for i in 0..4 {
             s.observe(1.0 - 0.1 * i as f64);
         }
@@ -192,9 +207,20 @@ mod tests {
         assert_eq!(s.committed(), Some(SelectionPolicy::Star));
     }
 
+    /// Window validation is a typed error, not a construction panic (the
+    /// PR 3 no-panic contract): boundary (2, 2) is the smallest valid
+    /// configuration, and each violated bound names itself.
     #[test]
-    #[should_panic]
-    fn bad_windows_rejected() {
-        PolicySwitcher::new(1, 0);
+    fn bad_windows_are_typed_errors() {
+        assert!(PolicySwitcher::new(2, 2).is_ok());
+        assert_eq!(
+            PolicySwitcher::new(1, 0).err(),
+            Some(ControllerError::BadPolicyWindows { trial_window: 1, commit_period: 0 })
+        );
+        assert_eq!(
+            PolicySwitcher::new(10, 9).err(),
+            Some(ControllerError::BadPolicyWindows { trial_window: 10, commit_period: 9 })
+        );
+        assert!(PolicySwitcher::validate(2, 1_000_000).is_ok());
     }
 }

@@ -5,7 +5,9 @@
 //! it validates the configuration into typed [`ConfigError`]s (what used
 //! to be scattered `assert!`s and silent misconfigurations), instantiates
 //! the configured [`CommStrategy`] from the strategy registry (or accepts
-//! a custom one), attaches
+//! a custom one), resolves the control plane (a [`Controller`] object,
+//! a `--controller` registry spec, or the [`CrControl`]-implied default —
+//! DESIGN.md §10), attaches
 //! [`TrainObserver`](crate::coordinator::observer::TrainObserver)s, and
 //! hands back a [`Session`] whose `run()` returns a [`TrainReport`].
 //! [`TrainConfig`] remains the serialized form —
@@ -29,9 +31,12 @@
 //! assert_eq!(report.metrics.steps.len(), 5);
 //! ```
 
-use crate::coordinator::adaptive::AdaptiveConfig;
+use crate::coordinator::controller::{
+    self, AdaptiveConfig, Controller, ControllerError, DEFAULT_POLICY_WINDOWS,
+};
 use crate::coordinator::metrics::{MetricsLog, Summary};
 use crate::coordinator::observer::TrainObserver;
+use crate::coordinator::policy_switch::PolicySwitcher;
 use crate::coordinator::strategy::{instantiate, CommStrategy};
 use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig, Trainer};
 use crate::coordinator::worker::{ComputeModel, GradSource};
@@ -53,8 +58,14 @@ pub enum ConfigError {
     ZeroStepsPerEpoch,
     /// Static CR outside (0, 1].
     CrOutOfRange(f64),
-    /// Adaptive CR ladder violating 0 < c_low <= c_high <= 1.
+    /// Adaptive CR ladder violating 0 < c_low < c_high <= 1 (strict:
+    /// `candidate_crs` needs a non-degenerate range).
     AdaptiveCrBounds { c_low: f64, c_high: f64 },
+    /// Adaptive ladder parameters the candidate generator/explorer cannot
+    /// work with: the geometric step must exceed 1 and every candidate
+    /// needs at least one probe iteration (both used to be `assert!`s
+    /// that fired inside `build()` or mid-run at the first exploration).
+    AdaptiveLadderParams { factor: f64, probe_iters: u64 },
     /// Two-level topology whose ranks-per-node does not divide the
     /// cluster size (was an `assert!` in the old `Trainer::new`).
     RaggedTopology { n_workers: usize, workers_per_node: usize },
@@ -72,11 +83,21 @@ pub enum ConfigError {
     /// trace, a bad modifier composition, or an unknown scenario spec
     /// (from [`SessionBuilder::network_spec`]).
     Network(NetModelError),
+    /// The control plane was rejected: an unknown `--controller` spec,
+    /// invalid STAR/VAR trial/commit windows, or a CR-adapting controller
+    /// paired with an uncompressed strategy (DESIGN.md §10).
+    Controller(ControllerError),
 }
 
 impl From<NetModelError> for ConfigError {
     fn from(e: NetModelError) -> Self {
         ConfigError::Network(e)
+    }
+}
+
+impl From<ControllerError> for ConfigError {
+    fn from(e: ControllerError) -> Self {
+        ConfigError::Controller(e)
     }
 }
 
@@ -90,7 +111,12 @@ impl fmt::Display for ConfigError {
             }
             ConfigError::AdaptiveCrBounds { c_low, c_high } => write!(
                 f,
-                "adaptive CR bounds must satisfy 0 < c_low <= c_high <= 1 (got [{c_low}, {c_high}])"
+                "adaptive CR bounds must satisfy 0 < c_low < c_high <= 1 (got [{c_low}, {c_high}])"
+            ),
+            ConfigError::AdaptiveLadderParams { factor, probe_iters } => write!(
+                f,
+                "adaptive CR ladder needs factor > 1 and probe_iters >= 1 \
+                 (got factor={factor}, probe_iters={probe_iters})"
             ),
             ConfigError::RaggedTopology { n_workers, workers_per_node } => write!(
                 f,
@@ -110,6 +136,7 @@ impl fmt::Display for ConfigError {
                  parameters but dim() reports {dim}"
             ),
             ConfigError::Network(e) => write!(f, "network environment rejected: {e}"),
+            ConfigError::Controller(e) => write!(f, "controller rejected: {e}"),
         }
     }
 }
@@ -128,6 +155,14 @@ pub struct SessionBuilder {
     /// Deferred `--net` spec: resolved at `build()` (it needs the run's
     /// total epoch count), overriding `cfg.net` when present.
     net_spec: Option<String>,
+    /// Custom controller object (takes precedence over the spec).
+    custom_controller: Option<Box<dyn Controller>>,
+    /// Deferred `--controller` spec: resolved against
+    /// [`CONTROLLER_TABLE`](crate::coordinator::controller::CONTROLLER_TABLE)
+    /// at `build()`, overriding the [`CrControl`]-implied controller.
+    controller_spec: Option<String>,
+    /// STAR/VAR trial/commit windows for the `artopk-auto` composition.
+    policy_windows: Option<(u64, u64)>,
 }
 
 impl SessionBuilder {
@@ -194,9 +229,42 @@ impl SessionBuilder {
         self.cr(CrControl::Static(cr))
     }
 
-    /// MOO-adaptive compression ratio (§3-E).
+    /// MOO-adaptive compression ratio (§3-E) — shorthand for
+    /// `cr(CrControl::Adaptive(..))`, which implies the `moo` controller
+    /// unless [`SessionBuilder::controller`] /
+    /// [`SessionBuilder::controller_spec`] override it.
     pub fn adaptive_cr(self, cfg: AdaptiveConfig) -> Self {
         self.cr(CrControl::Adaptive(cfg))
+    }
+
+    /// Plug in a custom [`Controller`] object (DESIGN.md §10), bypassing
+    /// the [`CONTROLLER_TABLE`](crate::coordinator::controller::CONTROLLER_TABLE)
+    /// registry — the seam that makes a new adaptation policy a drop-in
+    /// object instead of trainer surgery. Takes precedence over
+    /// [`SessionBuilder::controller_spec`] and the [`CrControl`]-implied
+    /// default.
+    pub fn controller(mut self, controller: Box<dyn Controller>) -> Self {
+        self.custom_controller = Some(controller);
+        self
+    }
+
+    /// Defer a `--controller`-style registry name (`static`, `moo`,
+    /// `gravac`, ...) to `build()` — an unknown name surfaces as the
+    /// typed [`ConfigError::Controller`] listing every registered
+    /// controller.
+    pub fn controller_spec(mut self, spec: &str) -> Self {
+        self.controller_spec = Some(spec.to_string());
+        self
+    }
+
+    /// STAR/VAR trial/commit windows for the policy-switch controller the
+    /// builder composes with the `artopk-auto` strategy (defaults
+    /// [`DEFAULT_POLICY_WINDOWS`]). Validated at `build()` — invalid
+    /// windows are the typed
+    /// [`ControllerError::BadPolicyWindows`], never a panic.
+    pub fn policy_windows(mut self, trial_window: u64, commit_period: u64) -> Self {
+        self.policy_windows = Some((trial_window, commit_period));
+        self
     }
 
     /// Plug in the network environment — any [`NetworkModel`]: a
@@ -287,7 +355,16 @@ impl SessionBuilder {
     /// Every rejection is a typed [`ConfigError`] (auto-converts into
     /// `anyhow::Result` contexts via `?`).
     pub fn build(self) -> Result<Session, ConfigError> {
-        let SessionBuilder { mut cfg, source, custom, observers, net_spec } = self;
+        let SessionBuilder {
+            mut cfg,
+            source,
+            custom,
+            observers,
+            net_spec,
+            custom_controller,
+            controller_spec,
+            policy_windows,
+        } = self;
         if cfg.n_workers == 0 {
             return Err(ConfigError::ZeroWorkers);
         }
@@ -305,10 +382,18 @@ impl SessionBuilder {
                 }
             }
             CrControl::Adaptive(a) => {
-                if !(a.c_low > 0.0 && a.c_low <= a.c_high && a.c_high <= 1.0) {
+                // Strict c_low < c_high: candidate_crs / the ladder
+                // controllers assert a non-degenerate geometric range.
+                if !(a.c_low > 0.0 && a.c_low < a.c_high && a.c_high <= 1.0) {
                     return Err(ConfigError::AdaptiveCrBounds {
                         c_low: a.c_low,
                         c_high: a.c_high,
+                    });
+                }
+                if !(a.factor > 1.0) || a.probe_iters == 0 {
+                    return Err(ConfigError::AdaptiveLadderParams {
+                        factor: a.factor,
+                        probe_iters: a.probe_iters,
                     });
                 }
             }
@@ -321,6 +406,7 @@ impl SessionBuilder {
             });
         }
         let pool = ThreadPool::auto(cfg.threads);
+        let from_registry = custom.is_none();
         let strategy = match custom {
             Some(s) => s,
             None => instantiate(cfg.strategy, cfg.n_workers, cfg.seed, pool),
@@ -330,8 +416,40 @@ impl SessionBuilder {
                 strategy: strategy.name().to_string(),
             });
         }
+        // The control plane (DESIGN.md §10): explicit object > registry
+        // spec > the CrControl-implied default (Static -> no-op,
+        // Adaptive -> moo). Windows are validated whenever set, so a bad
+        // configuration is rejected even if the strategy never uses them.
+        if let Some((t, c)) = policy_windows {
+            PolicySwitcher::validate(t, c)?;
+        }
+        let primary: Box<dyn Controller> = match (custom_controller, controller_spec) {
+            (Some(c), _) => c,
+            (None, Some(spec)) => controller::build_controller(&spec, &cfg)?,
+            (None, None) => controller::from_cr_control(&cfg),
+        };
+        if primary.adapts_cr() && !strategy.is_compressed() {
+            return Err(ConfigError::Controller(ControllerError::NeedsCompression {
+                controller: primary.name(),
+                strategy: strategy.name().to_string(),
+            }));
+        }
+        // `artopk-auto` = plain AR-Topk + the STAR/VAR trial/commit
+        // controller composed alongside the CR controller (the stack
+        // shape lives in controller::compose_for_strategy, shared with
+        // the default path). Custom strategies compose their own control
+        // stack explicitly.
+        let controller: Box<dyn Controller> = if from_registry {
+            controller::compose_for_strategy(
+                primary,
+                &cfg,
+                policy_windows.unwrap_or(DEFAULT_POLICY_WINDOWS),
+            )?
+        } else {
+            primary
+        };
         let source = source.ok_or(ConfigError::MissingSource)?;
-        let trainer = Trainer::with_parts(cfg, source, strategy, observers, pool);
+        let trainer = Trainer::with_parts(cfg, source, strategy, observers, pool, controller);
         // init_params ran exactly once inside with_parts; check its output
         // against the declared dimension here, where a broken GradSource
         // impl becomes a typed error instead of a mid-run panic.
@@ -393,12 +511,14 @@ impl Session {
             explore_overhead_s,
             cur_cr,
             strategy,
+            controller,
             ..
         } = self.trainer;
         TrainReport {
             model: source.name(),
             strategy: strategy.name().to_string(),
             network: cfg.net.describe(),
+            controller: controller.name().to_string(),
             final_cr: if strategy.is_compressed() { cur_cr } else { 1.0 },
             virtual_time_s: clock.now(),
             explore_overhead_s,
@@ -431,6 +551,10 @@ pub struct TrainReport {
     /// ([`NetworkModel::describe`]) — names the environment (base
     /// scenario + modifier chain, or `trace:<name>`) this run saw.
     pub network: String,
+    /// Controller identity
+    /// ([`Controller::name`](crate::coordinator::controller::Controller::name);
+    /// `"composite"` for composed stacks like `artopk-auto`'s).
+    pub controller: String,
     /// Configured step count.
     pub steps: u64,
 }
@@ -503,15 +627,38 @@ mod tests {
 
     #[test]
     fn adaptive_bounds_validated() {
+        let flex = || base().strategy(Strategy::parse("flexible").unwrap());
         let bad = AdaptiveConfig { c_low: 0.2, c_high: 0.1, ..Default::default() };
         assert_eq!(
-            base()
-                .strategy(Strategy::parse("flexible").unwrap())
-                .adaptive_cr(bad)
-                .build()
-                .err(),
+            flex().adaptive_cr(bad).build().err(),
             Some(ConfigError::AdaptiveCrBounds { c_low: 0.2, c_high: 0.1 })
         );
+        // Degenerate range: candidate_crs needs c_low < c_high STRICTLY —
+        // accepting equality used to panic inside the ladder generator
+        // (in build() for gravac, mid-run for moo) instead of erroring.
+        let degenerate = AdaptiveConfig { c_low: 0.05, c_high: 0.05, ..Default::default() };
+        assert!(matches!(
+            flex().adaptive_cr(degenerate).build().err(),
+            Some(ConfigError::AdaptiveCrBounds { .. })
+        ));
+        // Ladder parameters the explorer cannot work with: geometric
+        // factor <= 1 (incl. NaN) and zero probe iterations both used to
+        // be asserts that fired after validation had "passed".
+        for cfg in [
+            AdaptiveConfig { factor: 1.0, ..Default::default() },
+            AdaptiveConfig { factor: f64::NAN, ..Default::default() },
+            AdaptiveConfig { probe_iters: 0, ..Default::default() },
+        ] {
+            assert!(
+                matches!(
+                    flex().adaptive_cr(cfg.clone()).build().err(),
+                    Some(ConfigError::AdaptiveLadderParams { .. })
+                ),
+                "{cfg:?}"
+            );
+        }
+        // Boundary: the default ladder (and a just-valid factor) build.
+        assert!(flex().adaptive_cr(AdaptiveConfig::default()).build().is_ok());
     }
 
     #[test]
@@ -630,6 +777,127 @@ mod tests {
             compose().err(),
             Some(ConfigError::Network(NetModelError::BadModifier { .. }))
         ));
+    }
+
+    #[test]
+    fn controller_specs_resolve_the_registry_at_build_time() {
+        // Every registered controller is constructible via the builder
+        // with a compressed strategy (the ISSUE 5 acceptance surface).
+        for name in controller::controller_names() {
+            let report = base()
+                .strategy(Strategy::parse("flexible").unwrap())
+                .static_cr(0.05)
+                .controller_spec(name)
+                .build()
+                .unwrap_or_else(|e| panic!("{name}: {e}"))
+                .run();
+            assert!(
+                report.controller == name || report.controller == "composite",
+                "{name} -> {}",
+                report.controller
+            );
+        }
+        match base().controller_spec("nope").build().err() {
+            Some(ConfigError::Controller(ControllerError::UnknownController { spec })) => {
+                assert_eq!(spec, "nope")
+            }
+            other => panic!("expected UnknownController, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cr_adapting_controller_with_dense_strategy_is_a_typed_error() {
+        for name in ["moo", "gravac"] {
+            match base()
+                .strategy(Strategy::parse("dense-ring").unwrap())
+                .static_cr(1.0)
+                .controller_spec(name)
+                .build()
+                .err()
+            {
+                Some(ConfigError::Controller(ControllerError::NeedsCompression {
+                    controller,
+                    ..
+                })) => assert_eq!(controller, name),
+                other => panic!("{name}: expected NeedsCompression, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn policy_windows_validated_at_build() {
+        // Boundary: (2, 2) is the smallest valid configuration.
+        assert!(base()
+            .strategy(Strategy::ArTopkAuto { flavor: crate::artopk::ArFlavor::Ring })
+            .static_cr(0.05)
+            .policy_windows(2, 2)
+            .build()
+            .is_ok());
+        // Violations are typed errors even when no auto strategy uses
+        // them — a bad window never panics (the old PolicySwitcher
+        // assert) and never passes silently.
+        for (t, c) in [(1u64, 10u64), (0, 0), (5, 4)] {
+            assert_eq!(
+                base().policy_windows(t, c).build().err(),
+                Some(ConfigError::Controller(ControllerError::BadPolicyWindows {
+                    trial_window: t,
+                    commit_period: c
+                })),
+                "windows ({t}, {c})"
+            );
+        }
+    }
+
+    #[test]
+    fn artopk_auto_composes_the_policy_controller() {
+        let report = base()
+            .strategy(Strategy::ArTopkAuto { flavor: crate::artopk::ArFlavor::Ring })
+            .static_cr(0.05)
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.strategy, "AR-Topk-auto");
+        assert_eq!(report.controller, "composite");
+    }
+
+    /// A custom controller object drives the run through the same seam
+    /// the built-ins use: here, a fixed CR schedule.
+    #[test]
+    fn custom_controller_object_steers_the_cr() {
+        use crate::coordinator::controller::{ControlAction, ControlCtx, ControlDecision};
+        struct HalveAt(u64);
+        impl Controller for HalveAt {
+            fn name(&self) -> &'static str {
+                "halve-at"
+            }
+            fn adapts_cr(&self) -> bool {
+                true
+            }
+            fn observe(&mut self, ctx: &ControlCtx<'_>) -> Vec<ControlDecision> {
+                if ctx.metrics.step + 1 == self.0 {
+                    vec![ControlDecision {
+                        by: "halve-at",
+                        reason: "schedule",
+                        action: ControlAction::SetCr(ctx.cur_cr / 2.0),
+                    }]
+                } else {
+                    Vec::new()
+                }
+            }
+        }
+        let report = base()
+            .steps(6)
+            .strategy(Strategy::parse("artopk-star").unwrap())
+            .static_cr(0.08)
+            .controller(Box::new(HalveAt(3)))
+            .build()
+            .unwrap()
+            .run();
+        assert_eq!(report.controller, "halve-at");
+        let crs = report.metrics.crs_used();
+        assert!(crs[..3].iter().all(|&c| (c - 0.08).abs() < 1e-12), "{crs:?}");
+        assert!(crs[3..].iter().all(|&c| (c - 0.04).abs() < 1e-12), "{crs:?}");
+        assert!((report.final_cr - 0.04).abs() < 1e-12);
     }
 
     #[test]

@@ -25,8 +25,7 @@ use crate::collectives::{
 };
 use crate::compress::{gain::gain, Compressor, CompressorKind, EfState};
 use crate::coordinator::metrics::StepMetrics;
-use crate::coordinator::observer::{StrategySwitch, SwitchDimension};
-use crate::coordinator::policy_switch::PolicySwitcher;
+use crate::coordinator::observer::StrategySwitch;
 use crate::coordinator::selector;
 use crate::coordinator::trainer::{DenseFlavor, Strategy};
 use crate::netsim::cost_model::Topology;
@@ -145,11 +144,32 @@ pub trait CommStrategy: Send {
     /// Execute the planned exchange over the true topology.
     fn exchange(&mut self, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome;
 
-    /// Post-step feedback: the recorded metrics of the step that just ran.
-    /// Return a [`StrategySwitch`] to surface an internal mode change
-    /// (e.g. a STAR/VAR commit) on the observer stream.
+    /// Post-step feedback: the metrics of the step that just ran. Called
+    /// for RECORDED steps only — the exploration harness's checkpointed
+    /// steps are rolled back, so strategy state never learns from a
+    /// timeline that did not happen (DESIGN.md §10). Return a
+    /// [`StrategySwitch`] to surface an internal mode change on the
+    /// observer stream (delivered immediately, stamped with this step).
     fn observe(&mut self, _m: &StepMetrics) -> Option<StrategySwitch> {
         None
+    }
+
+    /// Controller-directed selection-policy switch
+    /// ([`ControlAction::SwitchSelectionPolicy`](crate::coordinator::controller::ControlAction)).
+    /// Return the PREVIOUS policy when applied (the engine fires the
+    /// observer event from it), `None` when this strategy has no notion
+    /// of a selection policy.
+    fn set_selection_policy(&mut self, _p: SelectionPolicy) -> Option<SelectionPolicy> {
+        None
+    }
+
+    /// Controller-directed collective pinning
+    /// ([`ControlAction::SwitchCollective`](crate::coordinator::controller::ControlAction)).
+    /// Return `true` when applied; strategies that re-decide per step
+    /// (flexible/auto flavors) may decline. The observable collective
+    /// change surfaces through the per-step switch detection.
+    fn set_collective(&mut self, _k: CollectiveKind) -> bool {
+        false
     }
 }
 
@@ -209,6 +229,21 @@ impl CommStrategy for DenseStrategy {
             gain: 1.0,
         }
     }
+
+    /// A controller can pin any fixed dense flavour; the auto flavors are
+    /// re-decided per step and cannot be pinned from outside.
+    fn set_collective(&mut self, k: CollectiveKind) -> bool {
+        let flavor = match k {
+            CollectiveKind::RingAllreduce => DenseFlavor::Ring,
+            CollectiveKind::TreeAllreduce => DenseFlavor::Tree,
+            CollectiveKind::HalvingDoublingAllreduce => DenseFlavor::HalvingDoubling,
+            CollectiveKind::HierarchicalAllreduce => DenseFlavor::Hierarchical,
+            CollectiveKind::PsStar => DenseFlavor::Ps,
+            _ => return false,
+        };
+        self.flavor = flavor;
+        true
+    }
 }
 
 /// Compress-then-Allgather (LW/MS-Topk path): per-worker error-feed +
@@ -246,20 +281,36 @@ impl CommStrategy for AgCompressStrategy {
     }
 }
 
-/// AR-Topk with a fixed selection policy and AR flavour (§3-A/B).
+/// AR-Topk with a fixed selection policy and AR flavour (§3-A/B). The
+/// policy and flavour are controller-switchable
+/// ([`CommStrategy::set_selection_policy`] / [`CommStrategy::set_collective`]) —
+/// `artopk-auto` is exactly this strategy composed with the
+/// [`PolicySwitchController`](crate::coordinator::controller::PolicySwitchController).
 pub struct ArTopkStrategy {
     op: ArTopk,
+    name: &'static str,
 }
 
 impl ArTopkStrategy {
     pub fn new(policy: SelectionPolicy, flavor: ArFlavor, pool: ThreadPool) -> Self {
-        ArTopkStrategy { op: ArTopk::new(policy, flavor).with_pool(pool) }
+        ArTopkStrategy { op: ArTopk::new(policy, flavor).with_pool(pool), name: "AR-Topk" }
+    }
+
+    /// Same operator under a distinct display name (the `artopk-auto`
+    /// registry row, so reports distinguish auto-switched runs).
+    pub fn named(
+        name: &'static str,
+        policy: SelectionPolicy,
+        flavor: ArFlavor,
+        pool: ThreadPool,
+    ) -> Self {
+        ArTopkStrategy { op: ArTopk::new(policy, flavor).with_pool(pool), name }
     }
 }
 
 impl CommStrategy for ArTopkStrategy {
     fn name(&self) -> &'static str {
-        "AR-Topk"
+        self.name
     }
 
     fn is_compressed(&self) -> bool {
@@ -272,6 +323,22 @@ impl CommStrategy for ArTopkStrategy {
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome {
         art_exchange(&mut self.op, ctx)
+    }
+
+    fn set_selection_policy(&mut self, p: SelectionPolicy) -> Option<SelectionPolicy> {
+        let prev = self.op.policy;
+        self.op.policy = p;
+        Some(prev)
+    }
+
+    fn set_collective(&mut self, k: CollectiveKind) -> bool {
+        match selector::ar_flavor(k) {
+            Some(f) => {
+                self.op.flavor = f;
+                true
+            }
+            None => false,
+        }
     }
 }
 
@@ -314,56 +381,11 @@ impl CommStrategy for FlexibleStrategy {
             None => ag_exchange(&mut self.compressors, ctx),
         }
     }
-}
 
-/// AR-Topk that auto-commits STAR/VAR from observed loss improvement (the
-/// paper's §5 future work) via the trial/commit [`PolicySwitcher`].
-pub struct ArTopkAutoStrategy {
-    op: ArTopk,
-    switcher: PolicySwitcher,
-}
-
-impl ArTopkAutoStrategy {
-    pub fn new(flavor: ArFlavor, pool: ThreadPool) -> Self {
-        ArTopkAutoStrategy {
-            op: ArTopk::new(SelectionPolicy::Star, flavor).with_pool(pool),
-            switcher: PolicySwitcher::new(10, 50),
-        }
-    }
-}
-
-impl CommStrategy for ArTopkAutoStrategy {
-    fn name(&self) -> &'static str {
-        "AR-Topk-auto"
-    }
-
-    fn is_compressed(&self) -> bool {
-        true
-    }
-
-    fn plan(&self, ctx: &StepCtx) -> CommPlan {
-        CommPlan::priced(ar_kind(self.op.flavor), ctx)
-    }
-
-    fn exchange(&mut self, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome {
-        self.op.policy = self.switcher.current();
-        art_exchange(&mut self.op, ctx)
-    }
-
-    fn observe(&mut self, m: &StepMetrics) -> Option<StrategySwitch> {
-        let cycles_before = self.switcher.cycles;
-        let prev = self.switcher.current();
-        self.switcher.observe(m.loss);
-        if self.switcher.cycles > cycles_before {
-            Some(StrategySwitch {
-                step: m.step,
-                dimension: SwitchDimension::SelectionPolicy,
-                from: prev.name(),
-                to: self.switcher.current().name(),
-            })
-        } else {
-            None
-        }
+    fn set_selection_policy(&mut self, p: SelectionPolicy) -> Option<SelectionPolicy> {
+        let prev = self.op.policy;
+        self.op.policy = p;
+        Some(prev)
     }
 }
 
@@ -524,7 +546,16 @@ pub fn instantiate(
         Strategy::Flexible { policy } => {
             Box::new(FlexibleStrategy::new(policy, n_workers, seed, pool))
         }
-        Strategy::ArTopkAuto { flavor } => Box::new(ArTopkAutoStrategy::new(flavor, pool)),
+        // The auto-switching behavior lives in the control plane: the
+        // builder composes a PolicySwitchController alongside the CR
+        // controller for this strategy (DESIGN.md §10). The operator
+        // itself is a plain AR-Topk starting at STAR.
+        Strategy::ArTopkAuto { flavor } => Box::new(ArTopkStrategy::named(
+            "AR-Topk-auto",
+            SelectionPolicy::Star,
+            flavor,
+            pool,
+        )),
     }
 }
 
@@ -591,35 +622,45 @@ mod tests {
         }
     }
 
+    /// The control-plane hooks: AR-Topk strategies accept policy and
+    /// flavour switches (returning the previous policy for the event
+    /// stream), dense strategies accept fixed-flavour pins, and
+    /// strategies without the concept decline.
     #[test]
-    fn auto_strategy_reports_policy_commits() {
-        let mut s = ArTopkAutoStrategy::new(ArFlavor::Ring, ThreadPool::serial());
-        let mut m = StepMetrics {
-            step: 0,
-            epoch: 0.0,
-            loss: 1.0,
-            t_compute: 0.0,
-            t_comp: 0.0,
-            t_sync: 0.0,
-            collective: CollectiveKind::ArTopkRing,
-            cr: 0.05,
-            selected_rank: None,
-            gain: 0.9,
-            alpha_ms: 4.0,
-            bw_gbps: 20.0,
-        };
-        let mut events = Vec::new();
-        // Two 10-step trials -> one commit event at step 19.
-        for step in 0..20u64 {
-            m.step = step;
-            m.loss = 1.0 - 0.01 * step as f64;
-            if let Some(ev) = s.observe(&m) {
-                events.push(ev);
-            }
-        }
-        assert_eq!(events.len(), 1, "{events:?}");
-        assert_eq!(events[0].dimension, SwitchDimension::SelectionPolicy);
-        assert_eq!(events[0].step, 19);
+    fn control_hooks_apply_where_meaningful() {
+        let pool = ThreadPool::serial();
+        let mut art = ArTopkStrategy::new(SelectionPolicy::Star, ArFlavor::Ring, pool);
+        assert_eq!(art.set_selection_policy(SelectionPolicy::Var), Some(SelectionPolicy::Star));
+        assert_eq!(art.set_selection_policy(SelectionPolicy::Star), Some(SelectionPolicy::Var));
+        assert!(art.set_collective(CollectiveKind::ArTopkTree));
+        assert_eq!(art.plan(&ctx(0.05)).kind, CollectiveKind::ArTopkTree);
+        assert!(!art.set_collective(CollectiveKind::RingAllreduce), "not an AR kind");
+
+        let mut dense = DenseStrategy { flavor: DenseFlavor::Ring };
+        assert!(dense.set_collective(CollectiveKind::TreeAllreduce));
+        assert_eq!(dense.plan(&ctx(1.0)).kind, CollectiveKind::TreeAllreduce);
+        assert!(!dense.set_collective(CollectiveKind::ArTopkRing), "not a dense kind");
+        assert!(dense.set_selection_policy(SelectionPolicy::Var).is_none());
+
+        let mut ag = AgCompressStrategy::new(CompressorKind::TopK, 4, 0);
+        assert!(ag.set_selection_policy(SelectionPolicy::Var).is_none());
+        assert!(!ag.set_collective(CollectiveKind::TreeAllreduce));
+    }
+
+    /// The `artopk-auto` registry row instantiates the plain AR-Topk
+    /// operator under its own display name — the trial/commit behavior is
+    /// composed as a controller, not embedded here.
+    #[test]
+    fn artopk_auto_is_a_named_artopk() {
+        let s = instantiate(
+            Strategy::ArTopkAuto { flavor: ArFlavor::Ring },
+            4,
+            0,
+            ThreadPool::serial(),
+        );
+        assert_eq!(s.name(), "AR-Topk-auto");
+        assert!(s.is_compressed());
+        assert_eq!(s.plan(&ctx(0.05)).kind, CollectiveKind::ArTopkRing);
     }
 
     #[test]

@@ -4,10 +4,13 @@
 //! Per step: every worker computes a gradient (PJRT artifact or host
 //! model), the configured [`CommStrategy`] plans and executes the exchange
 //! (real data movement, simulated α-β time), and the shared parameters
-//! take a momentum-SGD step. The [`super::adaptive`] controller may retune
-//! the CR (MOO/NSGA-II) as the probed network drifts; every recorded step
-//! streams through the registered
-//! [`TrainObserver`](crate::coordinator::observer::TrainObserver)s.
+//! take a momentum-SGD step. After every recorded step the configured
+//! [`Controller`] observes the step and may retune the CR, switch the
+//! selection policy, or request a checkpointed exploration (the control
+//! plane, DESIGN.md §10); every recorded step streams through the
+//! registered [`TrainObserver`](crate::coordinator::observer::TrainObserver)s.
+//! The loop itself is mechanism-free: plan → exchange → control → observe,
+//! with no per-strategy or per-controller branches.
 //!
 //! Construction goes through
 //! [`Session::builder`](crate::coordinator::session::Session::builder) —
@@ -16,9 +19,12 @@
 
 use crate::artopk::{ArFlavor, SelectionPolicy};
 use crate::collectives::CollectiveKind;
-use crate::compress::{CompressorKind, EfState, GainTracker};
-use crate::coordinator::adaptive::{AdaptiveConfig, AdaptiveState};
+use crate::compress::{CompressorKind, EfState};
 use crate::coordinator::checkpoint::Checkpoint;
+use crate::coordinator::controller::{
+    AdaptiveConfig, ControlAction, ControlCtx, ControlDecision, Controller,
+    ExplorationHarness, StaticController,
+};
 use crate::coordinator::metrics::{MetricsLog, StepMetrics};
 use crate::coordinator::observer::{
     CrChange, EvalRecord, NetChange, StrategySwitch, SwitchDimension, TrainObserver,
@@ -83,7 +89,11 @@ impl Strategy {
     }
 }
 
-/// Compression-ratio control.
+/// Compression-ratio control — the serialized config surface. `Static`
+/// implies the no-op `static` controller, `Adaptive` the `moo` controller
+/// (§3-E); both can be overridden per run with
+/// [`SessionBuilder::controller_spec`](crate::coordinator::session::SessionBuilder::controller_spec)
+/// or a custom [`Controller`] object (DESIGN.md §10).
 #[derive(Debug, Clone)]
 pub enum CrControl {
     Static(f64),
@@ -136,9 +146,12 @@ pub struct TrainConfig {
     /// (CLI `--threads`): 0 = available hardware parallelism, 1 = fully
     /// sequential. With static CR control, numerics are bitwise identical
     /// for every value — only measured wall time changes (DESIGN.md §7).
-    /// MOO-adaptive runs ([`CrControl::Adaptive`]) feed MEASURED
-    /// compression time into CR selection and so were never run-to-run
-    /// bitwise reproducible, with or without threads.
+    /// The `moo` controller ([`CrControl::Adaptive`]) feeds MEASURED
+    /// compression time into CR selection and so is not run-to-run
+    /// bitwise reproducible, with or without threads — unless that input
+    /// is removed (`comp_scale = 0`, how the §10 determinism tests pin
+    /// every controller); `gravac` decides on simulated gain alone and
+    /// stays bitwise thread-invariant.
     pub threads: usize,
 }
 
@@ -193,11 +206,15 @@ pub struct Trainer {
     pub(crate) rng: Rng,
     pub(crate) step: u64,
     pub(crate) cur_cr: f64,
-    pub(crate) gain_tracker: GainTracker,
-    pub(crate) adaptive: Option<AdaptiveState>,
+    /// The control plane (DESIGN.md §10): consulted once per recorded
+    /// step; its decisions (CR moves, policy switches, explorations) are
+    /// applied by `control_phase` — the engine has no per-mechanism
+    /// control branches of its own.
+    pub(crate) controller: Box<dyn Controller>,
     pub(crate) lr_cur: f32,
     /// Simulated seconds spent in candidate exploration (kept out of the
-    /// restored clock, reported separately).
+    /// restored clock, reported separately; charged by the
+    /// [`ExplorationHarness`]).
     pub(crate) explore_overhead_s: f64,
     /// Collective used by the previous RECORDED step (switch detection
     /// for the observer stream).
@@ -206,12 +223,6 @@ pub struct Trainer {
     /// [`NetChange`] when the environment crosses a phase/episode
     /// boundary between recorded steps.
     last_net_link: Option<LinkParams>,
-    /// Strategy-level switch decisions not yet delivered to observers.
-    /// A commit can land on an UNRECORDED exploration step (ArTopkAuto +
-    /// adaptive CR: the switcher advances there too, and the decision
-    /// persists past the restore) — it is queued and delivered at the
-    /// next recorded step instead of being dropped.
-    pending_switches: Vec<StrategySwitch>,
 }
 
 impl Trainer {
@@ -224,18 +235,21 @@ impl Trainer {
         strategy: Box<dyn CommStrategy>,
         observers: Vec<Box<dyn TrainObserver>>,
         pool: ThreadPool,
+        controller: Box<dyn Controller>,
     ) -> Self {
         let params = source.init_params();
         // params.len() == dim is enforced by SessionBuilder::build (a
         // typed SourceDimMismatch error) right after this runs.
         let dim = source.dim();
         let n = cfg.n_workers;
-        let (cur_cr, adaptive, gain_threshold) = match &cfg.cr {
-            CrControl::Static(c) => (*c, None, 0.1),
-            CrControl::Adaptive(a) => {
-                (a.c_high, Some(AdaptiveState::new(a.clone())), a.gain_threshold)
-            }
+        // The configured CR, unless the controller wants a different
+        // starting rung (the adaptive controllers start at their ladder's
+        // c_high, as the paper does).
+        let cfg_cr = match &cfg.cr {
+            CrControl::Static(c) => *c,
+            CrControl::Adaptive(a) => a.c_high,
         };
+        let cur_cr = controller.initial_cr().unwrap_or(cfg_cr);
         let probe = Probe::new(cfg.net.clone(), cfg.probe_noise, cfg.seed ^ 0xBEEF);
         Trainer {
             momentum_buf: vec![0.0; dim],
@@ -249,28 +263,28 @@ impl Trainer {
             rng: Rng::new(cfg.seed ^ 0x7EA1),
             step: 0,
             cur_cr,
-            gain_tracker: GainTracker::new(gain_threshold),
-            adaptive,
+            controller,
             lr_cur: cfg.lr,
             explore_overhead_s: 0.0,
             last_collective: None,
             last_net_link: None,
-            pending_switches: Vec::new(),
             params,
             cfg,
             source,
         }
     }
 
-    /// Test-only convenience: registry strategy, no observers. All real
-    /// construction goes through the validating
+    /// Test-only convenience: registry strategy + default controller
+    /// stack, no observers. All real construction goes through the
+    /// validating
     /// [`Session::builder`](crate::coordinator::session::Session::builder).
     #[cfg(test)]
     pub(crate) fn new(cfg: TrainConfig, source: Box<dyn GradSource>) -> Self {
         let pool = ThreadPool::auto(cfg.threads);
         let strategy =
             crate::coordinator::strategy::instantiate(cfg.strategy, cfg.n_workers, cfg.seed, pool);
-        Trainer::with_parts(cfg, source, strategy, Vec::new(), pool)
+        let controller = crate::coordinator::controller::default_stack(&cfg);
+        Trainer::with_parts(cfg, source, strategy, Vec::new(), pool, controller)
     }
 
     // -- read accessors (the demoted public fields) -------------------------
@@ -325,14 +339,11 @@ impl Trainer {
         t.scale_beta(self.cfg.msg_scale)
     }
 
-    /// Run the configured number of steps (with eval + adaptation hooks).
+    /// Run the configured number of steps (with eval + control hooks).
     pub fn run(&mut self) {
         while self.step < self.cfg.steps {
             self.run_one_scheduled_step();
         }
-        // Strategy decisions still queued from trailing exploration steps
-        // must reach the stream before the run ends.
-        self.flush_pending_switches(self.step);
         // Final eval — unless the last step was already a periodic one
         // (steps divisible by eval_every), which would evaluate the same
         // parameters twice and double every on_eval event.
@@ -344,24 +355,108 @@ impl Trainer {
         }
     }
 
-    /// One public step incl. probe-driven adaptation + periodic eval.
+    /// One public step incl. the control phase + periodic eval: probe →
+    /// recorded step → controller decisions → eval. Mechanism-free — every
+    /// adaptation behavior lives behind the [`Controller`] object.
     pub fn run_one_scheduled_step(&mut self) {
         let epoch = self.epoch();
         let (obs, net_changed) = self.probe.measure_and_detect(epoch);
         let m = self.step_once(true, obs.link());
-        let gain_fired = self.gain_tracker.record(m.gain);
-        if self.adaptive.is_some() && self.strategy.is_compressed() {
-            let before = self.cur_cr;
-            self.maybe_adapt(net_changed, gain_fired, obs.link());
-            if self.cur_cr != before {
-                let ev = CrChange { step: self.step, from: before, to: self.cur_cr };
-                for o in self.observers.iter_mut() {
-                    o.on_cr_change(&ev);
-                }
-            }
-        }
+        self.control_phase(&m, net_changed, obs.link());
         if self.cfg.eval_every > 0 && self.step % self.cfg.eval_every == 0 {
             self.eval_and_record();
+        }
+    }
+
+    /// Consult the controller about the recorded step `m` and apply its
+    /// decisions. The controller is swapped out for the duration so
+    /// exploration can re-enter [`Trainer::step_once`] without aliasing —
+    /// the ONE place in the engine that dance exists.
+    fn control_phase(&mut self, m: &StepMetrics, net_changed: bool, probed: LinkParams) {
+        let mut controller: Box<dyn Controller> =
+            std::mem::replace(&mut self.controller, Box::new(StaticController));
+        let decisions = controller.observe(&ControlCtx {
+            metrics: m,
+            net_changed,
+            probed,
+            cur_cr: self.cur_cr,
+            model_bytes: self.model_bytes(),
+            n_workers: self.cfg.n_workers,
+            compressed: self.strategy.is_compressed(),
+        });
+        self.apply_decisions(decisions, controller.as_mut(), probed, 0);
+        self.controller = controller;
+    }
+
+    /// Apply control decisions in order, firing the corresponding observer
+    /// events (stamped with the committed step counter — a decision born
+    /// around a checkpointed exploration is reported on the real
+    /// timeline). `RequestExploration` runs the [`ExplorationHarness`] and
+    /// recurses into the controller's follow-up decisions (one level; a
+    /// deeper exploration-from-exploration is dropped as a runaway guard).
+    fn apply_decisions(
+        &mut self,
+        decisions: Vec<ControlDecision>,
+        controller: &mut dyn Controller,
+        probed: LinkParams,
+        depth: u32,
+    ) {
+        for d in decisions {
+            match d.action {
+                ControlAction::SetCr(cr) => {
+                    if cr != self.cur_cr {
+                        let ev = CrChange {
+                            step: self.step,
+                            from: self.cur_cr,
+                            to: cr,
+                            by: d.by,
+                            reason: d.reason,
+                        };
+                        self.cur_cr = cr;
+                        for o in self.observers.iter_mut() {
+                            o.on_cr_change(&ev);
+                        }
+                    }
+                }
+                ControlAction::SwitchSelectionPolicy(p) => {
+                    if let Some(prev) = self.strategy.set_selection_policy(p) {
+                        let ev = StrategySwitch {
+                            step: self.step,
+                            dimension: SwitchDimension::SelectionPolicy,
+                            from: prev.name(),
+                            to: p.name(),
+                            by: d.by,
+                            reason: d.reason,
+                        };
+                        for o in self.observers.iter_mut() {
+                            o.on_strategy_switch(&ev);
+                        }
+                    }
+                }
+                ControlAction::SwitchCollective(k) => {
+                    // Applied silently when the strategy supports pinning;
+                    // the observable collective change surfaces through
+                    // the per-step switch detection in step_once.
+                    let _ = self.strategy.set_collective(k);
+                }
+                ControlAction::RequestExploration(req) => {
+                    if depth >= 1 {
+                        // Runaway guard: a follow-up may not request
+                        // another exploration (dropped, not recursed).
+                        continue;
+                    }
+                    let profiles =
+                        ExplorationHarness::new(self).probe_candidates(&req, probed);
+                    let outcome = crate::coordinator::controller::ExplorationOutcome {
+                        by: d.by,
+                        reason: d.reason,
+                        probed,
+                        profiles,
+                    };
+                    let more = controller.on_exploration(&outcome);
+                    self.apply_decisions(more, controller, probed, depth + 1);
+                }
+            }
         }
     }
 
@@ -376,9 +471,10 @@ impl Trainer {
     }
 
     /// Execute exactly one training step at the current CR/strategy.
-    /// `record` controls whether it lands in the main metrics log and the
-    /// observer stream (the MOO controller's exploration steps do not).
-    /// Returns the step's metrics either way.
+    /// `record` controls whether it lands in the main metrics log, the
+    /// observer stream and the strategy's `observe` feedback (the
+    /// [`ExplorationHarness`]'s checkpointed steps do not). Returns the
+    /// step's metrics either way.
     pub(crate) fn step_once(
         &mut self,
         record: bool,
@@ -459,12 +555,6 @@ impl Trainer {
             bw_gbps: probed.bw_gbps(),
         };
         self.clock.advance(m.t_step());
-        // The strategy sees every step (its internal controllers track the
-        // loss trajectory); switch decisions made on unrecorded steps are
-        // queued so the observer stream never loses one.
-        if let Some(ev) = self.strategy.observe(&m) {
-            self.pending_switches.push(ev);
-        }
         if record {
             // Ground-truth network event: the environment's (unscaled)
             // inter link changed since the previous recorded step. Fires
@@ -486,6 +576,8 @@ impl Trainer {
                         dimension: SwitchDimension::Collective,
                         from: prev.name(),
                         to: m.collective.name(),
+                        by: self.strategy.name(),
+                        reason: "plan",
                     };
                     for o in self.observers.iter_mut() {
                         o.on_strategy_switch(&ev);
@@ -493,7 +585,16 @@ impl Trainer {
                 }
             }
             self.last_collective = Some(m.collective);
-            self.flush_pending_switches(m.step);
+            // The strategy's post-step feedback runs for RECORDED steps
+            // only: exploration steps are rolled back, so strategy state
+            // never learns from a timeline that did not happen
+            // (DESIGN.md §10); any reported mode change is delivered
+            // immediately.
+            if let Some(ev) = self.strategy.observe(&m) {
+                for o in self.observers.iter_mut() {
+                    o.on_strategy_switch(&ev);
+                }
+            }
             self.metrics.record(m.clone());
             for o in self.observers.iter_mut() {
                 o.on_step(&m);
@@ -501,19 +602,6 @@ impl Trainer {
         }
         self.step += 1;
         m
-    }
-
-    /// Deliver queued strategy-switch decisions, re-stamped to `at_step`:
-    /// a decision born on a checkpointed exploration step carries a step
-    /// index from a rolled-back timeline, so the stream reports the
-    /// recorded step (or end of run) at which it takes observable effect.
-    fn flush_pending_switches(&mut self, at_step: u64) {
-        for mut ev in std::mem::take(&mut self.pending_switches) {
-            ev.step = at_step;
-            for o in self.observers.iter_mut() {
-                o.on_strategy_switch(&ev);
-            }
-        }
     }
 
     fn apply_lr_decay(&mut self) {
@@ -526,7 +614,7 @@ impl Trainer {
         self.lr_cur = lr;
     }
 
-    // -- checkpoint/restore (used by the MOO exploration) ------------------
+    // -- checkpoint/restore (used by the ExplorationHarness) ---------------
 
     pub fn snapshot(&self) -> Checkpoint {
         Checkpoint {
@@ -547,19 +635,6 @@ impl Trainer {
         self.step = ck.step;
         self.clock = VirtualClock::new();
         self.clock.advance(ck.clock);
-    }
-
-    /// Delegate to the adaptive controller (split out to keep borrows
-    /// simple — the controller re-enters `step_once` during exploration).
-    fn maybe_adapt(
-        &mut self,
-        net_changed: bool,
-        gain_fired: bool,
-        probed: LinkParams,
-    ) {
-        let mut state = self.adaptive.take().expect("adaptive state");
-        state.maybe_adapt(self, net_changed, gain_fired, probed);
-        self.adaptive = Some(state);
     }
 
     pub fn eval_now(&mut self) -> (f64, f64) {

@@ -36,6 +36,10 @@ pub mod prelude {
     pub use crate::artopk::{ArTopk, SelectionPolicy};
     pub use crate::collectives::CollectiveKind;
     pub use crate::compress::{Compressor, CompressorKind, SparseGrad};
+    pub use crate::coordinator::controller::{
+        AdaptiveConfig, ControlAction, ControlCtx, ControlDecision, Controller,
+        ControllerError, GravacConfig, CONTROLLER_TABLE,
+    };
     pub use crate::coordinator::observer::{
         CrChange, CsvSink, EvalRecord, NetChange, ProgressPrinter, StrategySwitch,
         SwitchDimension, TrainObserver,

@@ -16,7 +16,7 @@
 //!   flexcomm schedule --name c2 --epochs 50
 
 use anyhow::{bail, Context, Result};
-use flexcomm::coordinator::adaptive::AdaptiveConfig;
+use flexcomm::coordinator::controller::{controller_names, spec_adapts_cr, AdaptiveConfig};
 use flexcomm::coordinator::observer::{CsvSink, ProgressPrinter};
 use flexcomm::coordinator::session::Session;
 use flexcomm::coordinator::trainer::{CrControl, Strategy};
@@ -53,18 +53,21 @@ fn print_usage() {
     // use (Strategy::parse / netsim::model::NET_TABLE), so help cannot
     // drift.
     println!(
-        "flexcomm — AR-Topk + flexible collectives + MOO-adaptive compression\n\
+        "flexcomm — AR-Topk + flexible collectives + pluggable adaptation controllers\n\
          usage: flexcomm <train|cost|schedule|info> [--flags]\n\
-         strategies: {}\n\
-         networks:   --net static|{}|trace:<path>\n\
-         modifiers:  --jitter F  --congestion P,FACTOR  --diurnal AMP,PERIOD\n\
-                     --flap PERIOD,DOWN,FACTOR  --asym AMULT,BWDIV  --net-seed N\n\
+         strategies:  {}\n\
+         networks:    --net static|{}|trace:<path>\n\
+         modifiers:   --jitter F  --congestion P,FACTOR  --diurnal AMP,PERIOD\n\
+                      --flap PERIOD,DOWN,FACTOR  --asym AMULT,BWDIV  --net-seed N\n\
+         controllers: --controller {} (--adaptive = --controller moo)\n\
          try:   flexcomm train --model host-mlp --strategy artopk-star --cr 0.01\n\
                 flexcomm train --strategy flexible --net c2-hostile --progress\n\
+                flexcomm train --strategy flexible --net c2 --controller gravac\n\
                 flexcomm cost --table1\n\
                 flexcomm schedule --name c2-congested",
         Strategy::names().collect::<Vec<_>>().join("|"),
         scenario_names().collect::<Vec<_>>().join("|"),
+        controller_names().collect::<Vec<_>>().join("|"),
     );
 }
 
@@ -182,7 +185,27 @@ fn cmd_train(args: &Args) -> Result<()> {
         )?);
     }
 
-    let cr = if args.flag("adaptive") || cfgfile.bool_or("compress.adaptive", false) {
+    // Control plane (DESIGN.md §10): `--controller <name>` picks from the
+    // CONTROLLER_TABLE registry; `--adaptive` remains the shorthand that
+    // implies the `moo` controller via CrControl::Adaptive. For any
+    // CR-adapting controller spec (asked of the registry itself, so a new
+    // table row automatically participates), the adaptive bounds flags
+    // (--c-low/--c-high/--probe-iters) are honoured too.
+    let controller_spec = match args.opt("controller") {
+        Some(s) => Some(s.to_string()),
+        None => {
+            let from_file = cfgfile.str_or("control.controller", "");
+            if from_file.is_empty() {
+                None
+            } else {
+                Some(from_file)
+            }
+        }
+    };
+    let wants_adaptive_bounds = args.flag("adaptive")
+        || cfgfile.bool_or("compress.adaptive", false)
+        || controller_spec.as_deref().is_some_and(spec_adapts_cr);
+    let cr = if wants_adaptive_bounds {
         CrControl::Adaptive(AdaptiveConfig {
             c_low: args.f64_or("c-low", cfgfile.float_or("compress.c_low", 0.001))?,
             c_high: args.f64_or("c-high", cfgfile.float_or("compress.c_high", 0.1))?,
@@ -219,6 +242,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         // numerics are identical for every value (DESIGN.md §7).
         .threads(args.usize_or("threads", cfgfile.int_or("train.threads", 0) as usize)?)
         .source(build_source(&model, seed)?);
+    if let Some(spec) = &controller_spec {
+        builder = builder.controller_spec(spec);
+    }
     if args.flag("progress") {
         builder = builder.observer(Box::new(ProgressPrinter::every(spe)));
     }
@@ -239,6 +265,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     tab.row(["model", &report.model]);
     tab.row(["strategy", &report.strategy]);
     tab.row(["network", &report.network]);
+    tab.row(["controller", &report.controller]);
     tab.row(["steps", &s.steps.to_string()]);
     tab.row(["t_step (ms)", &fmt_ms(s.mean_step_s)]);
     tab.row(["  t_compute (ms)", &fmt_ms(s.mean_compute_s)]);

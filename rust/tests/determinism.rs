@@ -4,8 +4,11 @@
 //! identical deterministic metrics (loss, simulated compute/sync seconds,
 //! collective kind, CR, selected rank, gain) across DenseSGD, AG-Topk and
 //! AR-Topk strategies, including non-power-of-two worker counts. The same
-//! harness also guards the observer seam: attaching observers must not
-//! perturb a single bit of the numerics.
+//! harness also guards the observer seam (attaching observers must not
+//! perturb a single bit of the numerics) and the control plane (every
+//! registered controller replays bitwise across thread counts when its
+//! inputs are the simulated, thread-invariant ones — see
+//! `every_registered_controller_is_bitwise_identical_across_threads`).
 //!
 //! Measured compression wall time (`t_comp`) is real elapsed time and
 //! therefore legitimately timing-dependent; it is excluded by design —
@@ -48,9 +51,13 @@ fn run_with(
     cr: f64,
     n_workers: usize,
     threads: usize,
+    controller: Option<&str>,
     observers: Vec<Box<dyn TrainObserver>>,
 ) -> TrainReport {
     let mut builder = Session::from_config(cfg(strategy, cr, n_workers, threads));
+    if let Some(spec) = controller {
+        builder = builder.controller_spec(spec);
+    }
     for o in observers {
         builder = builder.observer(o);
     }
@@ -62,7 +69,7 @@ fn run_with(
 }
 
 fn run(strategy: Strategy, cr: f64, n_workers: usize, threads: usize) -> TrainReport {
-    run_with(strategy, cr, n_workers, threads, Vec::new())
+    run_with(strategy, cr, n_workers, threads, None, Vec::new())
 }
 
 fn assert_bitwise_equal(a: &TrainReport, b: &TrainReport, label: &str) {
@@ -133,10 +140,56 @@ fn oversubscribed_threads_are_bitwise_identical() {
     }
 }
 
+/// Control-plane determinism (DESIGN.md §10): EVERY registered controller
+/// is threads=1-vs-4 bitwise identical when its inputs are the static
+/// (simulated, thread-invariant) ones. `comp_scale = 0` zeroes the one
+/// measured input (compression wall time) so even the MOO controller's
+/// NSGA-II profiles are pure functions of the simulated run — with that,
+/// the full trajectory (params, per-step CR decisions, collectives,
+/// simulated times) must not move with the thread count. The C2 scenario
+/// exercises the triggers: network phase changes and gain drift both fire
+/// within 40 steps.
+#[test]
+fn every_registered_controller_is_bitwise_identical_across_threads() {
+    use flexcomm::coordinator::controller::CONTROLLER_TABLE;
+    use flexcomm::coordinator::AdaptiveConfig;
+    for entry in CONTROLLER_TABLE {
+        let mk = |threads: usize| {
+            let mut c = cfg(
+                Strategy::Flexible { policy: SelectionPolicy::Star },
+                0.05,
+                4,
+                threads,
+            );
+            c.net = Box::new(NetSchedule::c2(2.0));
+            c.comp_scale = 0.0; // kill the measured-time input
+            // Short probe windows keep the moo exploration cheap; static
+            // and gravac ignore these bounds' probe settings.
+            c.cr = CrControl::Adaptive(AdaptiveConfig {
+                probe_iters: 3,
+                seed: 33,
+                ..Default::default()
+            });
+            Session::from_config(c)
+                .controller_spec(entry.name)
+                .source(Box::new(HostMlp::default_preset(33)))
+                .build()
+                .expect("valid config")
+                .run()
+        };
+        let a = mk(1);
+        let b = mk(4);
+        assert_bitwise_equal(&a, &b, &format!("controller={}", entry.name));
+        assert_eq!(a.controller, entry.name, "report names the controller");
+    }
+}
+
 /// The observer refactor must not perturb numerics: a run with observers
 /// attached (a second recorder, a progress printer, a switch listener) is
 /// bitwise identical to a bare run — observers read the stream, they
-/// never feed back into it.
+/// never feed back into it. One case runs with a CR-adapting controller
+/// attached (gravac: decisions are pure functions of the simulated gain),
+/// so the control plane is covered by the same guarantee.
 #[test]
 fn observers_do_not_perturb_numerics() {
     use std::sync::atomic::{AtomicU64, Ordering};
@@ -153,18 +206,25 @@ fn observers_do_not_perturb_numerics() {
             self.evals.fetch_add(1, Ordering::Relaxed);
         }
     }
-    for (label, strategy, cr) in [
-        ("flexible", Strategy::Flexible { policy: SelectionPolicy::Star }, 0.05),
-        ("ag-topk", Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05),
+    for (label, strategy, cr, controller) in [
+        ("flexible", Strategy::Flexible { policy: SelectionPolicy::Star }, 0.05, None),
+        ("ag-topk", Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05, None),
+        (
+            "flexible+gravac",
+            Strategy::Flexible { policy: SelectionPolicy::Star },
+            0.05,
+            Some("gravac"),
+        ),
     ] {
         let steps = Arc::new(AtomicU64::new(0));
         let evals = Arc::new(AtomicU64::new(0));
-        let bare = run(strategy, cr, 4, 1);
+        let bare = run_with(strategy, cr, 4, 1, controller, Vec::new());
         let observed = run_with(
             strategy,
             cr,
             4,
             4,
+            controller,
             vec![
                 Box::new(flexcomm::coordinator::metrics::MetricsLog::default()),
                 Box::new(ProgressPrinter::every(1000)),

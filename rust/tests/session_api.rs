@@ -4,7 +4,7 @@
 //! errors, and the observer stream carries the whole run.
 
 use flexcomm::collectives::{CollectiveKind, CommReport};
-use flexcomm::coordinator::adaptive::AdaptiveConfig;
+use flexcomm::coordinator::controller::AdaptiveConfig;
 use flexcomm::coordinator::observer::{CrChange, CsvSink, EvalRecord, NetChange, TrainObserver};
 use flexcomm::coordinator::session::{ConfigError, Session};
 use flexcomm::coordinator::strategy::{
@@ -197,6 +197,55 @@ fn observer_stream_carries_the_whole_run() {
         report.metrics.crs_used().iter().map(|c| (c * 1e9) as u64).collect();
     assert!(distinct.len() >= 2, "adaptive CR never moved: {distinct:?}");
     assert!(counts.cr_changes.load(Ordering::Relaxed) >= 1);
+}
+
+/// ISSUE 5 acceptance, from outside the crate: the `gravac` controller is
+/// a drop-in via `.controller_spec(..)`, steers the CR ladder during a
+/// real run, attributes its decisions on the observer stream, and the
+/// report names it.
+#[test]
+fn gravac_controller_walks_the_ladder_end_to_end() {
+    struct CrLog(Arc<std::sync::Mutex<Vec<CrChange>>>);
+    impl TrainObserver for CrLog {
+        fn on_cr_change(&mut self, c: &CrChange) {
+            self.0.lock().unwrap().push(*c);
+        }
+    }
+    let changes = Arc::new(std::sync::Mutex::new(Vec::new()));
+    let report = Session::builder()
+        .workers(4)
+        .steps(120)
+        .steps_per_epoch(25)
+        .lr(0.3)
+        .momentum(0.6)
+        .strategy(Strategy::parse("flexible").unwrap())
+        .static_cr(0.05)
+        .controller_spec("gravac")
+        .schedule(NetSchedule::c2(4.0))
+        .compute(ComputeModel::fixed(0.005))
+        .seed(5)
+        .observer(Box::new(CrLog(changes.clone())))
+        .source(Box::new(HostMlp::default_preset(11)))
+        .build()
+        .expect("gravac config valid")
+        .run();
+    assert_eq!(report.controller, "gravac");
+    // No checkpointed exploration ever runs: the ladder walk is free.
+    assert_eq!(report.explore_overhead_s, 0.0);
+    let changes = changes.lock().unwrap();
+    assert!(!changes.is_empty(), "gravac never moved the CR");
+    for c in changes.iter() {
+        assert_eq!(c.by, "gravac");
+        assert!(
+            c.reason == "ladder-descend" || c.reason == "gain-collapse",
+            "unexpected reason {c:?}"
+        );
+        assert!(c.to > 0.0 && c.to <= 0.1 + 1e-12, "{c:?}");
+    }
+    // The first move is always a descent from the ladder top.
+    assert_eq!(changes[0].reason, "ladder-descend");
+    assert!((changes[0].from - 0.1).abs() < 1e-12, "{:?}", changes[0]);
+    assert!(report.best_accuracy().unwrap() > 0.6);
 }
 
 struct NetChangeLog(Arc<std::sync::Mutex<Vec<NetChange>>>);

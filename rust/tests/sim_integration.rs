@@ -6,7 +6,7 @@
 
 use flexcomm::artopk::{ArFlavor, SelectionPolicy};
 use flexcomm::compress::CompressorKind;
-use flexcomm::coordinator::adaptive::AdaptiveConfig;
+use flexcomm::coordinator::controller::AdaptiveConfig;
 use flexcomm::coordinator::observer::{StrategySwitch, SwitchDimension, TrainObserver};
 use flexcomm::coordinator::session::{Session, TrainReport};
 use flexcomm::coordinator::trainer::{
@@ -235,7 +235,9 @@ impl TrainObserver for SwitchCounter {
 
 /// The §5 future-work extension: auto STAR/VAR switching must trial both
 /// policies, commit to one (visible as a typed observer event), and still
-/// learn.
+/// learn. Post ISSUE 5 the trial/commit logic is a `PolicySwitchController`
+/// composed alongside the CR controller — the strategy itself is a plain
+/// AR-Topk — so the same behavior now arrives via the control plane.
 #[test]
 fn artopk_auto_switches_and_learns() {
     let commits = Arc::new(AtomicU64::new(0));
@@ -254,6 +256,8 @@ fn artopk_auto_switches_and_learns() {
         .build()
         .expect("valid config")
         .run();
+    assert_eq!(r.strategy, "AR-Topk-auto");
+    assert_eq!(r.controller, "composite", "policy switching is a composed controller");
     assert!(
         commits.load(Ordering::Relaxed) >= 1,
         "must complete at least one trial->commit cycle"

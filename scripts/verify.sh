@@ -45,6 +45,12 @@ step cargo test -q
 # (examples/traces/c2_measured.csv) and prints the scenario-registry
 # sweep. Asserts inside the binary make failures exit nonzero.
 step cargo run --release --example trace_replay
+# Controller-sweep smoke (DESIGN.md §10): the comparison experiment at
+# tiny step counts across ALL CONTROLLER_TABLE entries (static low/high,
+# gravac, moo, any future registration). The example asserts row coverage
+# and non-degenerate accuracy, so an unregistered or panicking controller
+# fails this gate loudly.
+step cargo run --release --example controller_compare -- --steps 24 --target 0.99
 # Benches are test = false (cargo test must not RUN them), so compile them
 # explicitly — otherwise table2/table6/fig2/fig5 could bit-rot silently.
 step cargo bench --no-run
