@@ -16,8 +16,8 @@
 //! ring/tree/AG per Eqn 5 ([`crate::coordinator::selector`]).
 
 use crate::collectives::{broadcast, ring_allreduce, tree_allreduce, CommReport};
+use crate::compress::topk::{select_into, SelectBackend, SelectScratch};
 use crate::compress::{k_for, EfState, SparseGrad};
-use crate::compress::topk::TopK;
 use crate::netsim::cost_model::LinkParams;
 use crate::tensor::nan_min_cmp;
 use crate::util::pool::ThreadPool;
@@ -70,26 +70,63 @@ pub struct ArTopkResult {
     pub comp_wall_s: f64,
 }
 
-/// AR-Topk operator. Holds the Top-k selector; residuals stay in the
-/// caller's [`EfState`]s (one per worker) so compressors are swappable.
+/// Per-worker step arena (DESIGN.md §7): every step-local buffer worker
+/// `r` needs, owned by the operator and reused across steps. A lane is
+/// only ever touched by the one pool slot that owns index `r` inside a
+/// region, so lanes need no synchronization.
+#[derive(Debug, Clone, Default)]
+struct WorkerLane {
+    /// Staged error-fed gradient; swapped with the residual at the update
+    /// phase, so the outgoing residual Vec becomes next step's staging.
+    g_e: Vec<f32>,
+    /// This worker's own values at the broadcast indices (allreduce input).
+    vals: Vec<f32>,
+    /// Local top-k indices (fresh for VAR on all lanes; for STAR only on
+    /// the selected lane — stale elsewhere and never read).
+    idx: Vec<u32>,
+    /// Selection scratch for [`select_into`].
+    scratch: SelectScratch,
+}
+
+/// AR-Topk operator. Holds the selection backend and per-worker arenas;
+/// residuals stay in the caller's [`EfState`]s (one per worker) so
+/// compressors are swappable.
 #[derive(Debug, Clone)]
 pub struct ArTopk {
     pub policy: SelectionPolicy,
     pub flavor: ArFlavor,
-    topk: TopK,
+    backend: SelectBackend,
     /// Runs the per-worker phases (error-feed, VAR top-k, gather, residual
     /// update); defaults to serial so standalone uses stay single-threaded.
     pool: ThreadPool,
+    lanes: Vec<WorkerLane>,
+    /// Value buffers cycled with `lanes[r].vals` for the allreduce.
+    gather: Vec<Vec<f32>>,
 }
 
 impl ArTopk {
     pub fn new(policy: SelectionPolicy, flavor: ArFlavor) -> Self {
-        ArTopk { policy, flavor, topk: TopK::with_quickselect(), pool: ThreadPool::serial() }
+        ArTopk {
+            policy,
+            flavor,
+            backend: SelectBackend::Quickselect,
+            pool: ThreadPool::serial(),
+            lanes: Vec::new(),
+            gather: Vec::new(),
+        }
     }
 
     /// Use the paper's max-heap Top-k instead of quickselect.
     pub fn with_heap_topk(mut self) -> Self {
-        self.topk = TopK::new();
+        self.backend = SelectBackend::Heap;
+        self
+    }
+
+    /// Use sampled-threshold selection with exact-k repair
+    /// ([`crate::compress::sampledk`]): bitwise-identical indices and
+    /// values, cheaper selection pass.
+    pub fn with_sampled_topk(mut self) -> Self {
+        self.backend = SelectBackend::Sampled;
         self
     }
 
@@ -99,6 +136,15 @@ impl ArTopk {
     pub fn with_pool(mut self, pool: ThreadPool) -> Self {
         self.pool = pool;
         self
+    }
+
+    fn ensure_lanes(&mut self, n: usize) {
+        if self.lanes.len() < n {
+            self.lanes.resize_with(n, WorkerLane::default);
+        }
+        if self.gather.len() < n {
+            self.gather.resize_with(n, Vec::new);
+        }
     }
 
     /// Execute one AR-Topk round (Alg 1 lines 5-17).
@@ -120,21 +166,23 @@ impl ArTopk {
         let dim = grads[0].len();
         let k = k_for(cr, dim);
         let mut comm = CommReport::default();
+        self.ensure_lanes(n);
+        let backend = self.backend;
+        let pool = self.pool.clone();
 
         // Line 5: error-fed gradients — per worker, genuinely concurrent
-        // across the pool's threads. Each worker's duration is measured
-        // INSIDE its task and the charge is the max (critical path): the
-        // simulated cluster cost stays independent of how many host cores
-        // the pool actually got, as long as it isn't oversubscribed
-        // (DESIGN.md §7).
+        // across the pool's threads, staged into each lane's reused g_e
+        // arena. Each worker's duration is measured INSIDE its task and
+        // the charge is the max (critical path): the simulated cluster
+        // cost stays independent of how many host cores the pool actually
+        // got, as long as it isn't oversubscribed (DESIGN.md §7).
         let ef_ro: &[EfState] = ef;
-        let timed: Vec<(Vec<f32>, f64)> = self.pool.map(n, |r| {
+        let ef_dts = pool.map_mut(&mut self.lanes[..n], |r, lane| {
             let t0 = std::time::Instant::now();
-            let v = ef_ro[r].error_fed(&grads[r]);
-            (v, t0.elapsed().as_secs_f64())
+            ef_ro[r].error_fed_into(&grads[r], &mut lane.g_e);
+            t0.elapsed().as_secs_f64()
         });
-        let mut comp_wall_s = timed.iter().map(|(_, dt)| *dt).fold(0.0f64, f64::max);
-        let g_e: Vec<Vec<f32>> = timed.into_iter().map(|(v, _)| v).collect();
+        let mut comp_wall_s = ef_dts.iter().copied().fold(0.0f64, f64::max);
 
         // Lines 6-13: local top-k + worker selection.
         //
@@ -143,28 +191,26 @@ impl ArTopk {
         // used — so ONLY that worker runs Top-k. VAR needs every worker's
         // ||g_c||² and therefore every worker's local top-k; those run
         // concurrently on the pool.
-        let (selected, sel_idx) = match self.policy {
+        let selected = match self.policy {
             SelectionPolicy::Star => {
                 let selected = (step % n as u64) as usize;
+                let WorkerLane { g_e, idx, scratch, .. } = &mut self.lanes[selected];
                 let t0 = std::time::Instant::now();
-                let idx = self.topk.select(&g_e[selected], k);
+                select_into(backend, g_e, k, scratch, idx);
                 comp_wall_s += t0.elapsed().as_secs_f64();
-                (selected, idx)
+                selected
             }
             SelectionPolicy::Var => {
-                let topk = &self.topk;
-                let per_worker: Vec<(Vec<u32>, f64, f64)> = self.pool.map(n, |r| {
+                let per_worker: Vec<(f64, f64)> = pool.map_mut(&mut self.lanes[..n], |_r, lane| {
+                    let WorkerLane { g_e, idx, scratch, .. } = lane;
                     let t0 = std::time::Instant::now();
-                    let idx = topk.select(&g_e[r], k);
-                    let var: f64 = idx
-                        .iter()
-                        .map(|&i| (g_e[r][i as usize] as f64).powi(2))
-                        .sum();
-                    (idx, var, t0.elapsed().as_secs_f64())
+                    select_into(backend, g_e, k, scratch, idx);
+                    let var: f64 =
+                        idx.iter().map(|&i| (g_e[i as usize] as f64).powi(2)).sum();
+                    (var, t0.elapsed().as_secs_f64())
                 });
-                comp_wall_s += per_worker.iter().map(|p| p.2).fold(0.0f64, f64::max);
-                let (mut local_idx, vars): (Vec<Vec<u32>>, Vec<f64>) =
-                    per_worker.into_iter().map(|(idx, var, _)| (idx, var)).unzip();
+                comp_wall_s += per_worker.iter().map(|p| p.1).fold(0.0f64, f64::max);
+                let vars: Vec<f64> = per_worker.into_iter().map(|(var, _)| var).collect();
                 // Sync variances via AG of one f32 per worker (4N bytes,
                 // negligible but still charged).
                 let parts: Vec<Vec<f32>> = vars.iter().map(|&v| vec![v as f32]).collect();
@@ -176,66 +222,69 @@ impl ArTopk {
                 // of panicking mid-run (the old `partial_cmp().unwrap()`).
                 // All-NaN steps stay deterministic: last rank wins the
                 // all-Equal tie, matching `max_by`.
-                let selected = vars
-                    .iter()
+                vars.iter()
                     .enumerate()
                     .max_by(|a, b| nan_min_cmp(*a.1, *b.1))
                     .map(|(i, _)| i)
-                    .unwrap_or(0);
-                (selected, local_idx.swap_remove(selected))
+                    .unwrap_or(0)
             }
         };
 
         // Line 14: broadcast the selected worker's indices.
-        let (bcast_idx, rep) = broadcast(&sel_idx, selected, n, link);
+        let (bcast_idx, rep) = broadcast(&self.lanes[selected].idx, selected, n, link);
         comm.merge(rep);
 
         // Lines 15-16: every worker gathers its own values at those indices
-        // (concurrent across the pool -> max per-worker measured charge).
+        // into its lane's vals arena (concurrent across the pool -> max
+        // per-worker measured charge)...
         let bcast_ref = &bcast_idx;
-        let gathered: Vec<(Vec<f32>, f64, f64, f64)> = self.pool.map(n, |r| {
+        let gain_dts: Vec<(f64, f64, f64)> = pool.map_mut(&mut self.lanes[..n], |_r, lane| {
+            let WorkerLane { g_e, vals, .. } = lane;
             let t0 = std::time::Instant::now();
-            let vals: Vec<f32> = bcast_ref.iter().map(|&i| g_e[r][i as usize]).collect();
+            vals.clear();
+            vals.extend(bcast_ref.iter().map(|&i| g_e[i as usize]));
             let dt = t0.elapsed().as_secs_f64();
             // Gain bookkeeping is metrics-only — its O(G) norm pass stays
             // OFF the billed path (same policy as the AG path; the real
             // gather is O(k)).
-            let sent_sq = crate::tensor::sq_norm(&vals);
-            let total_sq = crate::tensor::sq_norm(&g_e[r]);
-            (vals, sent_sq, total_sq, dt)
+            let sent_sq = crate::tensor::sq_norm(vals);
+            let total_sq = crate::tensor::sq_norm(g_e);
+            (sent_sq, total_sq, dt)
         });
-        comp_wall_s += gathered.iter().map(|g| g.3).fold(0.0f64, f64::max);
-        let mut bufs: Vec<Vec<f32>> = Vec::with_capacity(n);
-        let mut gain_terms = Vec::with_capacity(n);
-        for (vals, sent_sq, total_sq, _) in gathered {
-            bufs.push(vals);
-            gain_terms.push((sent_sq, total_sq));
-        }
-        // ...and updates its residual against exactly what it sent,
-        // consuming g_e in place (per-worker state, disjoint mutation).
-        // Billed like the AG path's residual update: max per-worker
-        // measured duration.
-        let mut lanes: Vec<(&mut EfState, Vec<f32>)> = ef.iter_mut().zip(g_e).collect();
-        let residual_dts = self.pool.map_mut(&mut lanes, |_r, lane| {
-            let (e, g) = lane;
+        comp_wall_s += gain_dts.iter().map(|g| g.2).fold(0.0f64, f64::max);
+        let gain_terms: Vec<(f64, f64)> =
+            gain_dts.into_iter().map(|(c, e, _)| (c, e)).collect();
+        // ...and updates its residual against exactly what it sent: zero
+        // the sent coordinates in the staged g_e and SWAP it with the
+        // residual (per-worker state, disjoint mutation; the outgoing
+        // residual Vec becomes next step's staging arena). Billed like the
+        // AG path's residual update: max per-worker measured duration.
+        let mut pairs: Vec<(&mut EfState, &mut WorkerLane)> =
+            ef.iter_mut().zip(self.lanes.iter_mut()).collect();
+        let residual_dts = pool.map_mut(&mut pairs, |_r, (e, lane)| {
             let t0 = std::time::Instant::now();
-            e.update_at_indices(std::mem::take(g), bcast_ref);
+            e.update_at_indices_swap(&mut lane.g_e, bcast_ref);
             t0.elapsed().as_secs_f64()
         });
         comp_wall_s += residual_dts.iter().copied().fold(0.0f64, f64::max);
-        drop(lanes);
+        drop(pairs);
 
-        // Line 17: allreduce the values at the broadcast indices.
+        // Line 17: allreduce the values at the broadcast indices. The
+        // owned buffers cycle between `gather` and the lanes' vals arenas
+        // step over step — no steady-state allocation.
+        for (g, lane) in self.gather[..n].iter_mut().zip(&mut self.lanes[..n]) {
+            std::mem::swap(g, &mut lane.vals);
+        }
         let rep = match self.flavor {
-            ArFlavor::Ring => ring_allreduce(&mut bufs, link),
-            ArFlavor::Tree => tree_allreduce(&mut bufs, link),
+            ArFlavor::Ring => ring_allreduce(&mut self.gather[..n], link),
+            ArFlavor::Tree => tree_allreduce(&mut self.gather[..n], link),
         };
         comm.merge(rep);
 
         ArTopkResult {
             update: SparseGrad {
                 indices: bcast_idx,
-                values: bufs.into_iter().next().unwrap_or_default(),
+                values: self.gather.first().cloned().unwrap_or_default(),
                 dense_len: dim,
             },
             selected,
@@ -385,6 +434,59 @@ mod tests {
                 assert_eq!(a.gain_terms, b.gain_terms);
                 for (x, y) in ef_a.iter().zip(&ef_b) {
                     assert_eq!(x.residual, y.residual);
+                }
+            }
+        }
+    }
+
+    /// Selection backends are interchangeable bitwise: heap, quickselect
+    /// and sampled-threshold drive identical exchanges (update, selection,
+    /// residuals) across multiple steps.
+    #[test]
+    fn selection_backends_exchange_identically() {
+        for policy in [SelectionPolicy::Star, SelectionPolicy::Var] {
+            let (grads, ef0) = setup(4, 600, 31);
+            let run = |art: &mut ArTopk| {
+                let mut ef = ef0.clone();
+                let mut trace = Vec::new();
+                for step in 0..4u64 {
+                    let r = art.exchange(&grads, &mut ef, 0.04, step, link());
+                    trace.push((r.update.indices, r.update.values, r.selected));
+                }
+                (trace, ef)
+            };
+            let (quick, ef_q) = run(&mut ArTopk::new(policy, ArFlavor::Ring));
+            let (heap, ef_h) = run(&mut ArTopk::new(policy, ArFlavor::Ring).with_heap_topk());
+            let (samp, ef_s) = run(&mut ArTopk::new(policy, ArFlavor::Ring).with_sampled_topk());
+            assert_eq!(quick, heap, "{policy:?}: heap diverged");
+            assert_eq!(quick, samp, "{policy:?}: sampled diverged");
+            for ((a, b), c) in ef_q.iter().zip(&ef_h).zip(&ef_s) {
+                assert_eq!(a.residual, b.residual);
+                assert_eq!(a.residual, c.residual);
+            }
+        }
+    }
+
+    /// Lane arenas must be invisible: one operator reused over many steps
+    /// produces the same trajectory as a fresh operator per step (the EF
+    /// state carries all the algorithmic state; lanes are pure scratch).
+    #[test]
+    fn lane_arena_reuse_matches_fresh_operator() {
+        for policy in [SelectionPolicy::Star, SelectionPolicy::Var] {
+            let (grads, ef0) = setup(3, 300, 41);
+            let mut ef_reused = ef0.clone();
+            let mut ef_fresh = ef0.clone();
+            let mut reused = ArTopk::new(policy, ArFlavor::Tree);
+            for step in 0..5u64 {
+                let a = reused.exchange(&grads, &mut ef_reused, 0.07, step, link());
+                let mut fresh = ArTopk::new(policy, ArFlavor::Tree);
+                let b = fresh.exchange(&grads, &mut ef_fresh, 0.07, step, link());
+                assert_eq!(a.update.indices, b.update.indices, "{policy:?} step {step}");
+                assert_eq!(a.update.values, b.update.values, "{policy:?} step {step}");
+                assert_eq!(a.selected, b.selected);
+                assert_eq!(a.gain_terms, b.gain_terms);
+                for (x, y) in ef_reused.iter().zip(&ef_fresh) {
+                    assert_eq!(x.residual, y.residual, "{policy:?} step {step}");
                 }
             }
         }

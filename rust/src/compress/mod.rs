@@ -10,19 +10,25 @@ pub mod gain;
 pub mod lwtopk;
 pub mod mstopk;
 pub mod randomk;
+pub mod sampledk;
 pub mod topk;
 
 pub use gain::GainTracker;
 pub use lwtopk::LwTopk;
 pub use mstopk::MsTopk;
 pub use randomk::RandomK;
-pub use topk::{topk_indices, TopK};
+pub use sampledk::SampledK;
+pub use topk::{select_into, topk_indices, SelectBackend, SelectScratch, TopK};
 
 use crate::tensor::Layout;
 use anyhow::{bail, Result};
 
 /// A compressed gradient: `k` (index, value) pairs over a dense vector.
-#[derive(Debug, Clone, PartialEq)]
+///
+/// `Default` (the empty gradient) exists so arena-holding call sites can
+/// `std::mem::take` a worker's part for an owned hand-off (e.g. into a
+/// collective) and put it back afterwards without reallocating.
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct SparseGrad {
     pub indices: Vec<u32>,
     pub values: Vec<f32>,
@@ -64,6 +70,15 @@ pub trait Compressor: Send {
     fn name(&self) -> &'static str;
     /// `layout` supplies layer boundaries (used by LWTopk; others ignore it).
     fn compress(&mut self, g: &[f32], cr: f64, layout: &Layout) -> SparseGrad;
+
+    /// Compress into a caller-owned [`SparseGrad`] arena, reusing its
+    /// `indices`/`values` allocations across steps. MUST be bitwise
+    /// equivalent to `*out = self.compress(g, cr, layout)` (the default —
+    /// property tests in `sampledk.rs` pin the overriding impls); only the
+    /// allocation behaviour may differ.
+    fn compress_into(&mut self, g: &[f32], cr: f64, layout: &Layout, out: &mut SparseGrad) {
+        *out = self.compress(g, cr, layout);
+    }
 }
 
 /// Compressor selection by name (config/CLI).
@@ -73,6 +88,10 @@ pub enum CompressorKind {
     LwTopk,
     MsTopk,
     RandomK,
+    /// Sampled-threshold top-k with exact-k repair: bitwise-identical
+    /// output to [`CompressorKind::TopK`], cheaper selection (see
+    /// `compress/sampledk.rs` for the repair contract).
+    SampledK,
 }
 
 impl CompressorKind {
@@ -82,7 +101,8 @@ impl CompressorKind {
             "lwtopk" => CompressorKind::LwTopk,
             "mstopk" => CompressorKind::MsTopk,
             "randomk" => CompressorKind::RandomK,
-            _ => bail!("unknown compressor `{s}` (topk|lwtopk|mstopk|randomk)"),
+            "sampledk" => CompressorKind::SampledK,
+            _ => bail!("unknown compressor `{s}` (topk|lwtopk|mstopk|randomk|sampledk)"),
         })
     }
 
@@ -92,6 +112,7 @@ impl CompressorKind {
             CompressorKind::LwTopk => Box::new(LwTopk::new()),
             CompressorKind::MsTopk => Box::new(MsTopk::new(25)),
             CompressorKind::RandomK => Box::new(RandomK::new(seed)),
+            CompressorKind::SampledK => Box::new(SampledK::new()),
         }
     }
 }
@@ -110,27 +131,55 @@ impl EfState {
 
     /// `g_e = g + residual` (Eqn 2a).
     pub fn error_fed(&self, g: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.error_fed_into(g, &mut out);
+        out
+    }
+
+    /// [`EfState::error_fed`] into a caller-owned staging buffer (fully
+    /// overwritten, so no state leaks across steps) — paired with
+    /// [`EfState::update_swap`] this makes the whole Eqn-2 cycle
+    /// allocation-free in steady state.
+    pub fn error_fed_into(&self, g: &[f32], out: &mut Vec<f32>) {
         debug_assert_eq!(g.len(), self.residual.len());
-        g.iter().zip(&self.residual).map(|(a, b)| a + b).collect()
+        out.clear();
+        out.extend(g.iter().zip(&self.residual).map(|(a, b)| a + b));
     }
 
     /// Update residual after compressing `g_e` into `sparse`
     /// (Eqn 2b: residual = g_e - g_c). Consumes `g_e` to avoid a copy.
     pub fn update(&mut self, mut g_e: Vec<f32>, sparse: &SparseGrad) {
-        for (&i, _) in sparse.indices.iter().zip(&sparse.values) {
+        self.update_swap(&mut g_e, sparse);
+    }
+
+    /// [`EfState::update`] for arena call sites: zero the sent coordinates
+    /// in the staged `g_e` buffer, then swap it with the residual — the
+    /// outgoing residual Vec becomes the caller's staging buffer for the
+    /// NEXT step. Bitwise identical to `update(g_e.clone(), sparse)`; zero
+    /// allocations.
+    pub fn update_swap(&mut self, g_e: &mut Vec<f32>, sparse: &SparseGrad) {
+        debug_assert_eq!(g_e.len(), self.residual.len());
+        for &i in &sparse.indices {
             g_e[i as usize] = 0.0;
         }
-        self.residual = g_e;
+        std::mem::swap(&mut self.residual, g_e);
     }
 
     /// residual update for AR-Topk's broadcast-index path: the *sent*
     /// entries are exactly the broadcast indices, regardless of the local
     /// top-k (Alg 1 lines 15-16).
     pub fn update_at_indices(&mut self, mut g_e: Vec<f32>, indices: &[u32]) {
+        self.update_at_indices_swap(&mut g_e, indices);
+    }
+
+    /// Swap-based [`EfState::update_at_indices`] (same contract as
+    /// [`EfState::update_swap`]).
+    pub fn update_at_indices_swap(&mut self, g_e: &mut Vec<f32>, indices: &[u32]) {
+        debug_assert_eq!(g_e.len(), self.residual.len());
         for &i in indices {
             g_e[i as usize] = 0.0;
         }
-        self.residual = g_e;
+        std::mem::swap(&mut self.residual, g_e);
     }
 
     pub fn reset(&mut self) {

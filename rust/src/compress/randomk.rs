@@ -10,22 +10,31 @@ use crate::tensor::Layout;
 use crate::util::rng::Rng;
 
 /// Random-k compressor. Workers constructed with the same seed draw
-/// identical index sets on every call (call-count keyed).
+/// identical index sets on every call (call-count keyed). Carries a
+/// per-instance index scratch so `compress_into` is allocation-free in
+/// steady state.
 #[derive(Debug, Clone)]
 pub struct RandomK {
     seed: u64,
     calls: u64,
+    idx_scratch: Vec<usize>,
 }
 
 impl RandomK {
     pub fn new(seed: u64) -> Self {
-        RandomK { seed, calls: 0 }
+        RandomK { seed, calls: 0, idx_scratch: Vec::new() }
     }
 
     /// The index set for a given step (pure function of seed + step).
     pub fn indices_for_step(&self, step: u64, len: usize, k: usize) -> Vec<usize> {
-        let mut rng = Rng::new(self.seed ^ step.wrapping_mul(0xA076_1D64_78BD_642F));
-        rng.sample_indices(len, k)
+        let mut out = Vec::new();
+        Self::indices_for_step_into(self.seed, step, len, k, &mut out);
+        out
+    }
+
+    fn indices_for_step_into(seed: u64, step: u64, len: usize, k: usize, out: &mut Vec<usize>) {
+        let mut rng = Rng::new(seed ^ step.wrapping_mul(0xA076_1D64_78BD_642F));
+        rng.sample_indices_into(len, k, out);
     }
 }
 
@@ -34,15 +43,21 @@ impl Compressor for RandomK {
         "randomk"
     }
 
-    fn compress(&mut self, g: &[f32], cr: f64, _layout: &Layout) -> SparseGrad {
+    fn compress(&mut self, g: &[f32], cr: f64, layout: &Layout) -> SparseGrad {
+        let mut out = SparseGrad::default();
+        self.compress_into(g, cr, layout, &mut out);
+        out
+    }
+
+    fn compress_into(&mut self, g: &[f32], cr: f64, _layout: &Layout, out: &mut SparseGrad) {
         let k = k_for(cr, g.len());
-        let idx = self.indices_for_step(self.calls, g.len(), k);
+        Self::indices_for_step_into(self.seed, self.calls, g.len(), k, &mut self.idx_scratch);
         self.calls += 1;
-        SparseGrad {
-            indices: idx.iter().map(|&i| i as u32).collect(),
-            values: idx.iter().map(|&i| g[i]).collect(),
-            dense_len: g.len(),
-        }
+        out.indices.clear();
+        out.indices.extend(self.idx_scratch.iter().map(|&i| i as u32));
+        out.values.clear();
+        out.values.extend(self.idx_scratch.iter().map(|&i| g[i]));
+        out.dense_len = g.len();
     }
 }
 

@@ -1,0 +1,346 @@
+//! Sampled-threshold Top-k with **exact-k repair** — cheaper selection,
+//! bitwise-identical output (DGC-style hierarchical selection, PAPERS.md).
+//!
+//! Full quickselect builds and partitions an O(G) pair buffer every step.
+//! This backend instead (1) draws a small deterministic sample of
+//! magnitudes, (2) picks a conservative threshold from the sample's order
+//! statistics, (3) makes ONE filtering pass over the gradient keeping only
+//! entries that rank at-or-before the threshold, and (4) runs the exact
+//! selection on those ~O(k) survivors.
+//!
+//! ## The exact-k repair contract
+//!
+//! The output index set and values are **bitwise identical** to
+//! [`crate::compress::topk::topk_indices_select`] (and the paper's heap)
+//! for every input, including ties, NaN and ±inf — not approximately, not
+//! w.h.p. The argument rests on `mag_desc_idx_asc` being a *total*
+//! order (descending |v|, NaN smallest, ties by ascending index):
+//!
+//! 1. The threshold `t` is a real element of `g`, so "ranks at-or-before
+//!    `t`" selects an exact **prefix** of the totally-ordered gradient.
+//! 2. If that prefix has `>= k` elements it necessarily contains the
+//!    top-k prefix,
+//!    and `select_nth_unstable_by(k-1)` over the survivors returns exactly
+//!    the same k pairs as running it over all of `g` (repair step).
+//! 3. If the sample misjudged and the prefix has `< k` elements, we fall
+//!    back to the full quickselect — so correctness never depends on the
+//!    sample being representative; only speed does.
+//!
+//! The sample itself is a pure function of `(g.len(), k)` via
+//! [`crate::util::rng::Rng`] — no per-worker or per-step state — so the
+//! selection is deterministic and identical across workers, steps, thread
+//! counts and sessions. Property tests below pin equivalence on random
+//! dims/CRs including k=0, k=dim, heavy ties, and NaN/±inf poisoning.
+
+use crate::compress::topk::{mag_desc_idx_asc, topk_indices_select, SelectScratch};
+use crate::compress::{k_for, Compressor, SparseGrad};
+use crate::tensor::Layout;
+use crate::util::rng::Rng;
+use std::cmp::Ordering;
+
+/// Sampled-threshold top-`k` of `g` into `out` (ascending indices),
+/// bitwise-identical to exact selection. `scratch` is only an arena.
+pub fn sampled_topk_into(g: &[f32], k: usize, scratch: &mut SelectScratch, out: &mut Vec<u32>) {
+    let len = g.len();
+    let k = k.min(len);
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    if k == len {
+        out.extend(0..len as u32);
+        return;
+    }
+
+    // Deterministic sample, seeded purely from the problem shape. With
+    // replacement: duplicates only blur the threshold estimate, never
+    // correctness (see the repair contract above), and avoid the O(s^2)
+    // cost of distinct sampling at this size.
+    let s = len.min(64 + len / 8);
+    let mut rng = Rng::new(
+        0x5A4D_714B_u64
+            ^ (len as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (k as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+    );
+    let sample = &mut scratch.sample;
+    sample.clear();
+    sample.extend((0..s).map(|_| {
+        let i = rng.below(len);
+        (g[i].abs(), i as u32)
+    }));
+
+    // Conservative sample rank: scale k to the sample plus slack, so the
+    // induced prefix usually holds >= k survivors without ballooning.
+    let q = (2 * ((k * s + len - 1) / len) + 8).min(s);
+    sample.select_nth_unstable_by(q - 1, mag_desc_idx_asc);
+    let threshold = sample[q - 1];
+
+    // One filtering pass: keep the exact prefix "ranks at-or-before t".
+    let cand = &mut scratch.pairs;
+    cand.clear();
+    for (i, &v) in g.iter().enumerate() {
+        let p = (v.abs(), i as u32);
+        if mag_desc_idx_asc(&p, &threshold) != Ordering::Greater {
+            cand.push(p);
+        }
+    }
+
+    if cand.len() < k {
+        // Sample misjudged (possible, not wrong): exact fallback.
+        out.extend(topk_indices_select(g, k));
+        return;
+    }
+    if cand.len() > k {
+        cand.select_nth_unstable_by(k - 1, mag_desc_idx_asc);
+    }
+    out.extend(cand[..k].iter().map(|&(_, i)| i));
+    out.sort_unstable();
+}
+
+/// Fused-tensor Top-k compressor over the sampled-threshold backend.
+/// Output is bitwise-identical to [`crate::compress::TopK`]; only
+/// `t_comp` differs. Carries its own scratch arena (per worker lane).
+#[derive(Debug, Clone, Default)]
+pub struct SampledK {
+    scratch: SelectScratch,
+}
+
+impl SampledK {
+    pub fn new() -> Self {
+        SampledK::default()
+    }
+}
+
+impl Compressor for SampledK {
+    fn name(&self) -> &'static str {
+        "sampledk"
+    }
+
+    fn compress(&mut self, g: &[f32], cr: f64, layout: &Layout) -> SparseGrad {
+        let mut out = SparseGrad::default();
+        self.compress_into(g, cr, layout, &mut out);
+        out
+    }
+
+    fn compress_into(&mut self, g: &[f32], cr: f64, _layout: &Layout, out: &mut SparseGrad) {
+        let k = k_for(cr, g.len());
+        let mut indices = std::mem::take(&mut out.indices);
+        sampled_topk_into(g, k, &mut self.scratch, &mut indices);
+        out.values.clear();
+        out.values.extend(indices.iter().map(|&i| g[i as usize]));
+        out.indices = indices;
+        out.dense_len = g.len();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::topk::{select_into, topk_indices, SelectBackend};
+    use crate::compress::{EfState, RandomK, TopK};
+    use crate::util::proptest::{check, ensure};
+
+    fn sampled(g: &[f32], k: usize) -> Vec<u32> {
+        let mut scratch = SelectScratch::default();
+        let mut out = Vec::new();
+        sampled_topk_into(g, k, &mut scratch, &mut out);
+        out
+    }
+
+    #[test]
+    fn k_edges_match_exact() {
+        let g = [0.3f32, -2.0, 0.0, 5.0, 1.0];
+        assert_eq!(sampled(&g, 0), Vec::<u32>::new());
+        assert_eq!(sampled(&g, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(sampled(&g, 99), vec![0, 1, 2, 3, 4]);
+        assert_eq!(sampled(&g, 2), topk_indices(&g, 2));
+        assert_eq!(sampled(&[], 0), Vec::<u32>::new());
+    }
+
+    /// The headline contract: identical index set to both exact backends
+    /// on random dims/k, including large-ish gradients where the sampled
+    /// threshold actually engages (len >> sample slack).
+    #[test]
+    fn sampled_equals_exact_randomized() {
+        check("sampled == exact selection", 120, |g| {
+            let n = g.usize_in(1, 3000);
+            let v = g.vec_normal(n, 1.0);
+            let k = g.usize_in(0, n);
+            let got = sampled(&v, k);
+            ensure(got == topk_indices_select(&v, k), format!("vs quickselect n={n} k={k}"))?;
+            ensure(got == topk_indices(&v, k), format!("vs heap n={n} k={k}"))
+        });
+    }
+
+    /// Heavy ties: quantized magnitudes make the threshold pair land in
+    /// the middle of long equal-magnitude runs, where only the index
+    /// tiebreak keeps the prefix exact.
+    #[test]
+    fn sampled_equals_exact_under_ties() {
+        check("sampled == exact under ties", 100, |g| {
+            let n = g.usize_in(1, 1200);
+            let levels = g.usize_in(1, 4) as f32;
+            let v: Vec<f32> = (0..n)
+                .map(|_| {
+                    let q = (g.f32_in(-levels, levels)).round();
+                    if g.bool() {
+                        q
+                    } else {
+                        -q
+                    }
+                })
+                .collect();
+            let k = g.usize_in(0, n);
+            ensure(
+                sampled(&v, k) == topk_indices_select(&v, k),
+                format!("ties mismatch n={n} k={k}"),
+            )
+        });
+    }
+
+    /// NaN/±inf poisoning (via the crate `nan_min_cmp` total order): the
+    /// sampled threshold may itself be NaN or inf; equivalence must hold.
+    #[test]
+    fn sampled_equals_exact_with_nan_inf() {
+        check("sampled == exact with NaN/inf", 100, |g| {
+            let n = g.usize_in(1, 800);
+            let mut v = g.vec_normal(n, 1.0);
+            for _ in 0..g.usize_in(0, n / 3 + 1) {
+                let at = g.usize_in(0, n - 1);
+                v[at] = *g.choose(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0]);
+            }
+            let k = g.usize_in(0, n);
+            ensure(
+                sampled(&v, k) == topk_indices_select(&v, k),
+                format!("NaN/inf mismatch n={n} k={k}"),
+            )
+        });
+    }
+
+    /// All-identical magnitudes force the worst tie case: the prefix is
+    /// resolved purely by index.
+    #[test]
+    fn constant_gradient_resolved_by_index() {
+        let g = vec![1.0f32; 500];
+        assert_eq!(sampled(&g, 7), (0..7).collect::<Vec<u32>>());
+        let g = vec![f32::INFINITY; 300];
+        assert_eq!(sampled(&g, 3), vec![0, 1, 2]);
+    }
+
+    /// `select_into` dispatch: every backend, same answer.
+    #[test]
+    fn all_backends_agree_via_select_into() {
+        check("select_into backends agree", 60, |g| {
+            let n = g.usize_in(1, 600);
+            let v = g.vec_normal(n, 1.0);
+            let k = g.usize_in(0, n);
+            let mut scratch = SelectScratch::default();
+            let mut heap = Vec::new();
+            let mut quick = Vec::new();
+            let mut samp = Vec::new();
+            select_into(SelectBackend::Heap, &v, k, &mut scratch, &mut heap);
+            select_into(SelectBackend::Quickselect, &v, k, &mut scratch, &mut quick);
+            select_into(SelectBackend::Sampled, &v, k, &mut scratch, &mut samp);
+            ensure(heap == quick && quick == samp, format!("backend split n={n} k={k}"))
+        });
+    }
+
+    fn bitwise_eq(a: &SparseGrad, b: &SparseGrad) -> bool {
+        a.dense_len == b.dense_len
+            && a.indices == b.indices
+            && a.values.len() == b.values.len()
+            && a.values.iter().zip(&b.values).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    /// Arena reuse across consecutive steps must be invisible: one
+    /// compressor instance driving `compress_into` into ONE reused
+    /// `SparseGrad` arena over >= 3 steps is bitwise-equal to a fresh
+    /// `compress` per step. Covers every backend with its own scratch
+    /// semantics (TopK heap/quickselect, SampledK, RandomK's stepped RNG).
+    #[test]
+    fn arena_reuse_is_bitwise_invisible() {
+        check("compress_into arena == fresh compress", 40, |g| {
+            let n = g.usize_in(1, 400);
+            let layout = Layout::single(n);
+            let steps = g.usize_in(3, 5);
+            let grads: Vec<Vec<f32>> = (0..steps).map(|_| g.vec_normal(n, 1.0)).collect();
+            let cr = g.f64_in(0.01, 1.0);
+            run_pair(TopK::new(), TopK::new(), &grads, cr, &layout, "topk-heap")?;
+            run_pair(
+                TopK::with_quickselect(),
+                TopK::with_quickselect(),
+                &grads,
+                cr,
+                &layout,
+                "topk-quick",
+            )?;
+            run_pair(SampledK::new(), SampledK::new(), &grads, cr, &layout, "sampledk")?;
+            run_pair(RandomK::new(7), RandomK::new(7), &grads, cr, &layout, "randomk")
+        });
+    }
+
+    fn run_pair<C: Compressor>(
+        mut fresh: C,
+        mut arena_c: C,
+        grads: &[Vec<f32>],
+        cr: f64,
+        layout: &Layout,
+        label: &str,
+    ) -> crate::util::proptest::PropResult {
+        let mut arena = SparseGrad::default();
+        for (step, grad) in grads.iter().enumerate() {
+            let want = fresh.compress(grad, cr, layout);
+            arena_c.compress_into(grad, cr, layout, &mut arena);
+            ensure(bitwise_eq(&want, &arena), format!("{label} diverged at step {step}"))?;
+        }
+        Ok(())
+    }
+
+    /// The swap-based error-feedback cycle (error_fed_into + update_swap)
+    /// must match the allocating one across steps — residuals, staged
+    /// buffers and compressed output all bitwise.
+    #[test]
+    fn ef_swap_cycle_matches_allocating_cycle() {
+        check("EfState swap == allocating", 40, |g| {
+            let n = g.usize_in(1, 300);
+            let layout = Layout::single(n);
+            let cr = g.f64_in(0.01, 0.9);
+            let steps = g.usize_in(3, 6);
+            let grads: Vec<Vec<f32>> = (0..steps).map(|_| g.vec_normal(n, 1.0)).collect();
+            let mut ef_a = EfState::new(n);
+            let mut ef_b = EfState::new(n);
+            let mut comp_a = SampledK::new();
+            let mut comp_b = SampledK::new();
+            let mut staged = Vec::new();
+            let mut part = SparseGrad::default();
+            for (step, grad) in grads.iter().enumerate() {
+                // Allocating path.
+                let g_e = ef_a.error_fed(grad);
+                let sparse = comp_a.compress(&g_e, cr, &layout);
+                ef_a.update(g_e, &sparse);
+                // Arena path.
+                ef_b.error_fed_into(grad, &mut staged);
+                comp_b.compress_into(&staged, cr, &layout, &mut part);
+                ef_b.update_swap(&mut staged, &part);
+                ensure(bitwise_eq(&sparse, &part), format!("sparse diverged at {step}"))?;
+                ensure(
+                    ef_a.residual.iter().zip(&ef_b.residual).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    format!("residual diverged at {step}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn compressor_interface() {
+        let mut c = SampledK::new();
+        let layout = Layout::single(10);
+        let g: Vec<f32> = (0..10).map(|i| i as f32).collect();
+        let s = c.compress(&g, 0.3, &layout);
+        assert_eq!(s.k(), 3);
+        assert_eq!(s.indices, vec![7, 8, 9]);
+        assert_eq!(s.values, vec![7.0, 8.0, 9.0]);
+        assert_eq!(c.name(), "sampledk");
+    }
+}

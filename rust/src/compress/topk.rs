@@ -24,7 +24,7 @@ use std::collections::BinaryHeap;
 /// NaN-smallest, a NaN entry never displaces a finite one from the top-k
 /// and selection stays deterministic, so a NaN step trains through and
 /// surfaces as a NaN loss instead of a panic.
-fn mag_desc_idx_asc(a: &(f32, u32), b: &(f32, u32)) -> Ordering {
+pub(crate) fn mag_desc_idx_asc(a: &(f32, u32), b: &(f32, u32)) -> Ordering {
     crate::tensor::nan_min_cmp_f32(b.0, a.0).then_with(|| a.1.cmp(&b.1))
 }
 
@@ -91,28 +91,113 @@ pub fn topk_indices_select(g: &[f32], k: usize) -> Vec<u32> {
     out
 }
 
-/// Fused-tensor exact Top-k compressor.
+/// Which exact top-k algorithm a selection call site runs. All three
+/// produce the IDENTICAL index set (and therefore identical values) under
+/// `mag_desc_idx_asc` — property-tested here and in
+/// [`crate::compress::sampledk`] — so backend choice only moves `t_comp`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectBackend {
+    /// Paper-verbatim max-heap: O(G) heapify + O(k log G) pops.
+    Heap,
+    /// `select_nth_unstable`-based quickselect: expected O(G).
+    Quickselect,
+    /// Sampled-threshold filter + exact-k repair
+    /// ([`crate::compress::sampledk::sampled_topk_into`]): expected O(G)
+    /// with a much smaller constant (one filtering pass over G, selection
+    /// only over a sample plus ~k survivors).
+    Sampled,
+}
+
+/// Reusable selection workspace (per worker lane, never shared across
+/// threads): quickselect's (|value|, index) pair buffer and the sampled
+/// backend's sample buffer. Holding one of these across steps removes the
+/// two O(G) allocations per selection.
+#[derive(Debug, Clone, Default)]
+pub struct SelectScratch {
+    pub(crate) pairs: Vec<(f32, u32)>,
+    pub(crate) sample: Vec<(f32, u32)>,
+}
+
+/// Run `backend`'s selection of the top `k` of `g` into the caller-owned
+/// `out` (cleared first; ascending index order — the wire format). All
+/// backends are bitwise-equivalent; `scratch` is only an arena.
+pub fn select_into(
+    backend: SelectBackend,
+    g: &[f32],
+    k: usize,
+    scratch: &mut SelectScratch,
+    out: &mut Vec<u32>,
+) {
+    match backend {
+        SelectBackend::Heap => {
+            out.clear();
+            out.extend(topk_indices(g, k));
+        }
+        SelectBackend::Quickselect => {
+            quickselect_into(g, k, scratch, out);
+        }
+        SelectBackend::Sampled => {
+            crate::compress::sampledk::sampled_topk_into(g, k, scratch, out);
+        }
+    }
+}
+
+/// Arena-reusing [`topk_indices_select`]: identical output, allocations
+/// amortised into `scratch`/`out`.
+fn quickselect_into(g: &[f32], k: usize, scratch: &mut SelectScratch, out: &mut Vec<u32>) {
+    let k = k.min(g.len());
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    if k == g.len() {
+        out.extend(0..g.len() as u32);
+        return;
+    }
+    let pairs = &mut scratch.pairs;
+    pairs.clear();
+    pairs.extend(g.iter().enumerate().map(|(i, &v)| (v.abs(), i as u32)));
+    pairs.select_nth_unstable_by(k - 1, mag_desc_idx_asc);
+    out.extend(pairs[..k].iter().map(|&(_, i)| i));
+    out.sort_unstable();
+}
+
+/// Fused-tensor exact Top-k compressor over a pluggable [`SelectBackend`].
 #[derive(Debug, Clone)]
 pub struct TopK {
-    quickselect: bool,
+    backend: SelectBackend,
+    scratch: SelectScratch,
 }
 
 impl TopK {
     pub fn new() -> Self {
-        TopK { quickselect: false }
+        TopK::with_backend(SelectBackend::Heap)
     }
 
     /// Perf-pass variant: expected-O(G) selection instead of the heap.
     pub fn with_quickselect() -> Self {
-        TopK { quickselect: true }
+        TopK::with_backend(SelectBackend::Quickselect)
     }
 
-    pub fn select(&self, g: &[f32], k: usize) -> Vec<u32> {
-        if self.quickselect {
-            topk_indices_select(g, k)
-        } else {
-            topk_indices(g, k)
-        }
+    pub fn with_backend(backend: SelectBackend) -> Self {
+        TopK { backend, scratch: SelectScratch::default() }
+    }
+
+    pub fn backend(&self) -> SelectBackend {
+        self.backend
+    }
+
+    /// Top-`k` indices of `g`, ascending. `&mut` because the selection
+    /// scratch arena is reused across calls (output is call-independent).
+    pub fn select(&mut self, g: &[f32], k: usize) -> Vec<u32> {
+        let mut out = Vec::new();
+        self.select_into(g, k, &mut out);
+        out
+    }
+
+    /// [`TopK::select`] into a caller-owned index buffer.
+    pub fn select_into(&mut self, g: &[f32], k: usize, out: &mut Vec<u32>) {
+        select_into(self.backend, g, k, &mut self.scratch, out);
     }
 }
 
@@ -127,11 +212,22 @@ impl Compressor for TopK {
         "topk"
     }
 
-    fn compress(&mut self, g: &[f32], cr: f64, _layout: &Layout) -> SparseGrad {
+    fn compress(&mut self, g: &[f32], cr: f64, layout: &Layout) -> SparseGrad {
+        let mut out = SparseGrad::default();
+        self.compress_into(g, cr, layout, &mut out);
+        out
+    }
+
+    fn compress_into(&mut self, g: &[f32], cr: f64, _layout: &Layout, out: &mut SparseGrad) {
         let k = k_for(cr, g.len());
-        let indices = self.select(g, k);
-        let values = indices.iter().map(|&i| g[i as usize]).collect();
-        SparseGrad { indices, values, dense_len: g.len() }
+        // Take the index buffer out of `out` so `self` and `out` don't
+        // overlap borrows; hand it back below.
+        let mut indices = std::mem::take(&mut out.indices);
+        self.select_into(g, k, &mut indices);
+        out.values.clear();
+        out.values.extend(indices.iter().map(|&i| g[i as usize]));
+        out.indices = indices;
+        out.dense_len = g.len();
     }
 }
 

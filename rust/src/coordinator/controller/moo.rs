@@ -345,7 +345,7 @@ mod tests {
             _ => panic!("legacy pin needs an adaptive config"),
         };
         let pool = ThreadPool::auto(cfg.threads);
-        let strategy = instantiate(cfg.strategy, cfg.n_workers, cfg.seed, pool);
+        let strategy = instantiate(cfg.strategy, cfg.n_workers, cfg.seed, pool.clone());
         let mut t = Trainer::with_parts(
             cfg,
             Box::new(HostMlp::default_preset(11)),

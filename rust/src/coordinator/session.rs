@@ -405,11 +405,15 @@ impl SessionBuilder {
                 workers_per_node: wpn,
             });
         }
+        // ONE persistent worker pool per session: spawned here, handle
+        // clones shared by the trainer and the strategy's operators, so
+        // every parallel region in the run reuses the same parked workers
+        // (DESIGN.md §7).
         let pool = ThreadPool::auto(cfg.threads);
         let from_registry = custom.is_none();
         let strategy = match custom {
             Some(s) => s,
-            None => instantiate(cfg.strategy, cfg.n_workers, cfg.seed, pool),
+            None => instantiate(cfg.strategy, cfg.n_workers, cfg.seed, pool.clone()),
         };
         if matches!(cfg.cr, CrControl::Adaptive(_)) && !strategy.is_compressed() {
             return Err(ConfigError::AdaptiveNeedsCompression {

@@ -23,7 +23,7 @@ use crate::artopk::{ArFlavor, ArTopk, SelectionPolicy};
 use crate::collectives::{
     allgather_sparse, collective, dense_op, CollectiveKind, CommReport,
 };
-use crate::compress::{gain::gain, Compressor, CompressorKind, EfState};
+use crate::compress::{gain::gain, Compressor, CompressorKind, EfState, SparseGrad};
 use crate::coordinator::metrics::StepMetrics;
 use crate::coordinator::observer::StrategySwitch;
 use crate::coordinator::selector;
@@ -246,10 +246,26 @@ impl CommStrategy for DenseStrategy {
     }
 }
 
+/// One simulated worker's lane on the AG path: its compressor instance
+/// plus the step arenas (error-fed staging buffer, compressed part)
+/// reused across steps. A lane is touched by exactly one pool slot per
+/// region, so no synchronization (DESIGN.md §7).
+struct AgWorker {
+    comp: Box<dyn Compressor>,
+    g_e: Vec<f32>,
+    part: SparseGrad,
+}
+
+impl AgWorker {
+    fn new(comp: Box<dyn Compressor>) -> Self {
+        AgWorker { comp, g_e: Vec::new(), part: SparseGrad::default() }
+    }
+}
+
 /// Compress-then-Allgather (LW/MS-Topk path): per-worker error-feed +
 /// compress concurrently on the pool, then a sparse allgather.
 pub struct AgCompressStrategy {
-    compressors: Vec<Box<dyn Compressor>>,
+    workers: Vec<AgWorker>,
 }
 
 impl AgCompressStrategy {
@@ -258,7 +274,7 @@ impl AgCompressStrategy {
     /// (the AR-compatible behaviour its module docs describe).
     pub fn new(kind: CompressorKind, n_workers: usize, seed: u64) -> Self {
         AgCompressStrategy {
-            compressors: (0..n_workers).map(|_| kind.build(seed)).collect(),
+            workers: (0..n_workers).map(|_| AgWorker::new(kind.build(seed))).collect(),
         }
     }
 }
@@ -277,7 +293,7 @@ impl CommStrategy for AgCompressStrategy {
     }
 
     fn exchange(&mut self, ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome {
-        ag_exchange(&mut self.compressors, ctx)
+        ag_exchange(&mut self.workers, ctx)
     }
 }
 
@@ -305,6 +321,17 @@ impl ArTopkStrategy {
         pool: ThreadPool,
     ) -> Self {
         ArTopkStrategy { op: ArTopk::new(policy, flavor).with_pool(pool), name }
+    }
+
+    /// AR-Topk over the sampled-threshold selection backend (the
+    /// `artopk-sampled` registry row). Bitwise-identical trajectories to
+    /// the quickselect operator — the exact-k repair contract in
+    /// [`crate::compress::sampledk`] — so this row only moves `t_comp`.
+    pub fn sampled(policy: SelectionPolicy, flavor: ArFlavor, pool: ThreadPool) -> Self {
+        ArTopkStrategy {
+            op: ArTopk::new(policy, flavor).with_sampled_topk().with_pool(pool),
+            name: "AR-Topk-sampled",
+        }
     }
 }
 
@@ -346,14 +373,16 @@ impl CommStrategy for ArTopkStrategy {
 /// ART-Tree per step on the probed link; both data paths are owned here.
 pub struct FlexibleStrategy {
     op: ArTopk,
-    compressors: Vec<Box<dyn Compressor>>,
+    ag_workers: Vec<AgWorker>,
 }
 
 impl FlexibleStrategy {
     pub fn new(policy: SelectionPolicy, n_workers: usize, seed: u64, pool: ThreadPool) -> Self {
         FlexibleStrategy {
             op: ArTopk::new(policy, ArFlavor::Ring).with_pool(pool),
-            compressors: (0..n_workers).map(|_| CompressorKind::TopK.build(seed)).collect(),
+            ag_workers: (0..n_workers)
+                .map(|_| AgWorker::new(CompressorKind::TopK.build(seed)))
+                .collect(),
         }
     }
 }
@@ -378,7 +407,7 @@ impl CommStrategy for FlexibleStrategy {
                 self.op.flavor = f;
                 art_exchange(&mut self.op, ctx)
             }
-            None => ag_exchange(&mut self.compressors, ctx),
+            None => ag_exchange(&mut self.ag_workers, ctx),
         }
     }
 
@@ -398,48 +427,54 @@ fn ar_kind(flavor: ArFlavor) -> CollectiveKind {
 
 /// AG path shared by [`AgCompressStrategy`] and [`FlexibleStrategy`]:
 /// error-feed + compress every worker's gradient concurrently across the
-/// pool (each worker owns its `EfState` and compressor — no shared mutable
-/// state), then allgather. `t_comp` is the max of per-worker durations
-/// MEASURED INSIDE the concurrently-running tasks — the critical-path
-/// worker a synchronous cluster step waits for, independent of this host's
-/// core count while the pool is not oversubscribed (DESIGN.md §7).
-fn ag_exchange(
-    compressors: &mut [Box<dyn Compressor>],
-    ctx: &mut ExchangeCtx<'_>,
-) -> ExchangeOutcome {
+/// pool (each worker lane owns its `EfState`, compressor and arenas — no
+/// shared mutable state), then allgather. The whole Eqn-2 cycle runs in
+/// the lane arenas (`error_fed_into` -> `compress_into` -> `update_swap`),
+/// so steady-state steps allocate nothing on the billed path. `t_comp` is
+/// the max of per-worker durations MEASURED INSIDE the
+/// concurrently-running tasks — the critical-path worker a synchronous
+/// cluster step waits for, independent of this host's core count while
+/// the pool is not oversubscribed (DESIGN.md §7).
+fn ag_exchange(workers: &mut [AgWorker], ctx: &mut ExchangeCtx<'_>) -> ExchangeOutcome {
     let n = ctx.n_workers();
     let dim = ctx.dim();
     let cr = ctx.cr;
     let grads = ctx.grads;
     let layout = ctx.layout;
-    let pool = ctx.pool;
-    let mut lanes: Vec<(&mut EfState, &mut Box<dyn Compressor>)> =
-        ctx.ef.iter_mut().zip(compressors.iter_mut()).collect();
+    let pool = ctx.pool.clone();
+    let mut lanes: Vec<(&mut EfState, &mut AgWorker)> =
+        ctx.ef.iter_mut().zip(workers.iter_mut()).collect();
     let results = pool.map_mut(&mut lanes, |w, lane| {
-        let (ef, comp) = lane;
+        let (ef, worker) = lane;
         let t0 = Instant::now();
-        let g_e = ef.error_fed(&grads[w]);
-        let sparse = comp.compress(&g_e, cr, layout);
+        ef.error_fed_into(&grads[w], &mut worker.g_e);
+        worker.comp.compress_into(&worker.g_e, cr, layout, &mut worker.part);
         let mut dt = t0.elapsed().as_secs_f64();
         // Gain bookkeeping is metrics-only — keep its O(G) pass OFF the
         // billed compression path (a cluster wouldn't run it).
-        let e_sq = crate::tensor::sq_norm(&g_e);
-        let g = gain(sparse.sq_norm(), e_sq);
+        let e_sq = crate::tensor::sq_norm(&worker.g_e);
+        let g = gain(worker.part.sq_norm(), e_sq);
         let t1 = Instant::now();
-        ef.update(g_e, &sparse);
+        ef.update_swap(&mut worker.g_e, &worker.part);
         dt += t1.elapsed().as_secs_f64();
-        (sparse, g, dt)
+        (g, dt)
     });
     drop(lanes);
-    let mut parts = Vec::with_capacity(n);
     let mut gain_acc = 0.0f64;
     let mut t_comp = 0.0f64;
-    for (sparse, g, dt) in results {
+    for (g, dt) in results {
         gain_acc += g;
         t_comp = t_comp.max(dt);
-        parts.push(sparse);
     }
+    // The collective wants a contiguous `&[SparseGrad]`: take the parts
+    // out of the lanes (cheap pointer moves), gather, hand them back so
+    // the arenas survive into the next step.
+    let mut parts: Vec<SparseGrad> =
+        workers.iter_mut().map(|w| std::mem::take(&mut w.part)).collect();
     let (mut update, comm) = allgather_sparse(&parts, dim, ctx.true_topo.inter);
+    for (w, p) in workers.iter_mut().zip(parts.drain(..)) {
+        w.part = p;
+    }
     crate::tensor::scale(&mut update, 1.0 / n as f32);
     ExchangeOutcome {
         update,
@@ -491,6 +526,7 @@ pub const STRATEGY_TABLE: &[(&str, Strategy)] = &[
     ("ag-lwtopk", Strategy::AgCompress { kind: CompressorKind::LwTopk }),
     ("ag-mstopk", Strategy::AgCompress { kind: CompressorKind::MsTopk }),
     ("ag-randomk", Strategy::AgCompress { kind: CompressorKind::RandomK }),
+    ("ag-sampledk", Strategy::AgCompress { kind: CompressorKind::SampledK }),
     (
         "artopk-star",
         Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
@@ -504,6 +540,10 @@ pub const STRATEGY_TABLE: &[(&str, Strategy)] = &[
         Strategy::ArTopkFixed { policy: SelectionPolicy::Var, flavor: ArFlavor::Ring },
     ),
     ("artopk-auto", Strategy::ArTopkAuto { flavor: ArFlavor::Ring }),
+    (
+        "artopk-sampled",
+        Strategy::ArTopkSampled { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+    ),
     ("flexible", Strategy::Flexible { policy: SelectionPolicy::Star }),
     ("flexible-var", Strategy::Flexible { policy: SelectionPolicy::Var }),
 ];
@@ -542,6 +582,9 @@ pub fn instantiate(
         Strategy::AgCompress { kind } => Box::new(AgCompressStrategy::new(kind, n_workers, seed)),
         Strategy::ArTopkFixed { policy, flavor } => {
             Box::new(ArTopkStrategy::new(policy, flavor, pool))
+        }
+        Strategy::ArTopkSampled { policy, flavor } => {
+            Box::new(ArTopkStrategy::sampled(policy, flavor, pool))
         }
         Strategy::Flexible { policy } => {
             Box::new(FlexibleStrategy::new(policy, n_workers, seed, pool))
@@ -589,7 +632,7 @@ mod tests {
     fn instantiate_covers_the_table() {
         let pool = ThreadPool::serial();
         for (name, strategy) in STRATEGY_TABLE {
-            let obj = instantiate(*strategy, 4, 0, pool);
+            let obj = instantiate(*strategy, 4, 0, pool.clone());
             assert_eq!(
                 obj.is_compressed(),
                 strategy.is_compressed(),

@@ -81,6 +81,10 @@ pub enum Strategy {
     /// AR-Topk that AUTO-switches STAR<->VAR from observed loss improvement
     /// (the paper's §5 future work), with the Eqn 5 ring/tree choice.
     ArTopkAuto { flavor: ArFlavor },
+    /// AR-Topk over the sampled-threshold selection backend
+    /// ([`crate::compress::sampledk`]): bitwise-identical trajectories to
+    /// [`Strategy::ArTopkFixed`], cheaper selection (`t_comp` only).
+    ArTopkSampled { policy: SelectionPolicy, flavor: ArFlavor },
 }
 
 impl Strategy {
@@ -144,7 +148,10 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Worker threads for per-worker gradient computation and compression
     /// (CLI `--threads`): 0 = available hardware parallelism, 1 = fully
-    /// sequential. With static CR control, numerics are bitwise identical
+    /// sequential. The builder spawns ONE persistent pool of this width
+    /// per session; workers park between parallel regions, so thread
+    /// spawn cost is paid once, not per step (DESIGN.md §7). With static
+    /// CR control, numerics are bitwise identical
     /// for every value — only measured wall time changes (DESIGN.md §7).
     /// The `moo` controller ([`CrControl::Adaptive`]) feeds MEASURED
     /// compression time into CR selection and so is not run-to-run
@@ -281,8 +288,12 @@ impl Trainer {
     #[cfg(test)]
     pub(crate) fn new(cfg: TrainConfig, source: Box<dyn GradSource>) -> Self {
         let pool = ThreadPool::auto(cfg.threads);
-        let strategy =
-            crate::coordinator::strategy::instantiate(cfg.strategy, cfg.n_workers, cfg.seed, pool);
+        let strategy = crate::coordinator::strategy::instantiate(
+            cfg.strategy,
+            cfg.n_workers,
+            cfg.seed,
+            pool.clone(),
+        );
         let controller = crate::coordinator::controller::default_stack(&cfg);
         Trainer::with_parts(cfg, source, strategy, Vec::new(), pool, controller)
     }
@@ -525,7 +536,7 @@ impl Trainer {
             true_topo,
             cr: self.cur_cr,
             step: self.step,
-            pool: self.pool,
+            pool: self.pool.clone(),
         });
         let t_comp = outcome.t_comp * self.cfg.comp_scale;
 

@@ -93,6 +93,56 @@ impl Bencher {
     pub fn black_box<T>(x: T) -> T {
         std::hint::black_box(x)
     }
+
+    /// Serialize every recorded measurement to `path` as a single JSON
+    /// document (hand-rolled — offline build, no `serde`). The shape is
+    /// stable so regression tooling can diff runs:
+    ///
+    /// ```json
+    /// {"bench": "hotpath", "measurements": [
+    ///   {"name": "...", "iters": 12, "mean_secs": 1.0e-5,
+    ///    "p50_secs": 1.0e-5, "p95_secs": 2.0e-5}, ...]}
+    /// ```
+    pub fn write_json(&self, bench: &str, path: &std::path::Path) -> std::io::Result<()> {
+        let mut out = String::new();
+        out.push_str(&format!("{{\"bench\": {},\n \"measurements\": [", json_str(bench)));
+        for (i, m) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n  {{\"name\": {}, \"iters\": {}, \"mean_secs\": {:e}, \
+                 \"p50_secs\": {:e}, \"p95_secs\": {:e}}}",
+                json_str(&m.name),
+                m.iters,
+                m.mean.as_secs_f64(),
+                m.p50.as_secs_f64(),
+                m.p95.as_secs_f64()
+            ));
+        }
+        out.push_str("\n]}\n");
+        std::fs::write(path, out)
+    }
+}
+
+/// Minimal JSON string encoder: quotes, backslashes and control bytes —
+/// bench names are ASCII labels, but escape correctly anyway.
+fn json_str(s: &str) -> String {
+    let mut q = String::with_capacity(s.len() + 2);
+    q.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => q.push_str("\\\""),
+            '\\' => q.push_str("\\\\"),
+            '\n' => q.push_str("\\n"),
+            '\r' => q.push_str("\\r"),
+            '\t' => q.push_str("\\t"),
+            c if (c as u32) < 0x20 => q.push_str(&format!("\\u{:04x}", c as u32)),
+            c => q.push(c),
+        }
+    }
+    q.push('"');
+    q
 }
 
 #[cfg(test)]
@@ -113,5 +163,37 @@ mod tests {
         assert!(m.iters > 0);
         assert!(m.mean > Duration::ZERO);
         assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn write_json_emits_every_measurement() {
+        let mut b = Bencher::new(
+            Duration::from_millis(1),
+            Duration::from_millis(5),
+            20,
+        );
+        b.bench("stage \"a\"", || {
+            Bencher::black_box((0..64).sum::<u32>());
+        });
+        b.bench("stage b", || {
+            Bencher::black_box((0..64).product::<u64>());
+        });
+        let path = std::env::temp_dir().join("flexcomm_bench_json_test.json");
+        b.write_json("hotpath", &path).expect("write json");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        std::fs::remove_file(&path).ok();
+        assert!(text.starts_with("{\"bench\": \"hotpath\""), "{text}");
+        assert!(text.contains("\"name\": \"stage \\\"a\\\"\""), "{text}");
+        assert!(text.contains("\"name\": \"stage b\""), "{text}");
+        assert!(text.contains("\"mean_secs\": "), "{text}");
+        assert_eq!(text.matches("\"iters\":").count(), 2, "{text}");
+        assert!(text.trim_end().ends_with("]}"), "{text}");
+    }
+
+    #[test]
+    fn json_str_escapes_specials() {
+        assert_eq!(json_str("plain"), "\"plain\"");
+        assert_eq!(json_str("a\"b\\c"), "\"a\\\"b\\\\c\"");
+        assert_eq!(json_str("x\n\t\u{1}"), "\"x\\n\\t\\u0001\"");
     }
 }

@@ -1,29 +1,215 @@
-//! First-party scoped thread pool (offline build: no `rayon`) — the
-//! execution engine behind the trainer's per-worker parallelism
+//! First-party persistent parked-worker pool (offline build: no `rayon`)
+//! — the execution engine behind the trainer's per-worker parallelism
 //! (DESIGN.md §7).
 //!
-//! Built on [`std::thread::scope`], so borrowed data (parameters,
-//! gradients, error-feedback state) crosses into worker threads without
-//! `Arc`/cloning, and every region joins before it returns — no detached
-//! threads, no channels, zero dependencies.
+//! Workers are spawned ONCE when the pool is created (one pool per
+//! `Session`, its handle cloned into the trainer and every operator) and
+//! parked on a condvar between parallel regions. A region publishes one
+//! type-erased job, wakes the workers, and blocks until every chunk
+//! reports done — so borrowed data (parameters, gradients, error-feedback
+//! state) still crosses into the workers without `Arc`/cloning, exactly as
+//! with the old `std::thread::scope` pool, but without paying a thread
+//! spawn/join per region. At small-tensor scale that spawn cost dominated
+//! the work itself (the §7 trade-off this design removes); the
+//! `hotpath` bench's spawn-vs-park stage measures the difference.
 //!
-//! Determinism contract: results are returned **by item index**, work is
-//! split into contiguous index chunks, and items never share mutable
-//! state (no atomics on floats, no reduction across threads), so the
-//! output of [`ThreadPool::map`]/[`ThreadPool::map_mut`] is bitwise
-//! identical for every thread count — only the wall-clock time changes.
-//! The trainer's parallel-vs-sequential property tests
-//! (`rust/tests/determinism.rs`) pin this end to end.
+//! Determinism contract (unchanged from the scoped pool): results are
+//! returned **by item index**, work is split into the same contiguous
+//! index chunks (`chunk = ceil(n / min(threads, n))`), and items never
+//! share mutable state (no atomics on floats, no reduction across
+//! threads), so the output of [`ThreadPool::map`]/[`ThreadPool::map_mut`]
+//! is bitwise identical for every thread count — parked-worker reuse only
+//! changes wall-clock time. The trainer's parallel-vs-sequential property
+//! tests (`rust/tests/determinism.rs`) pin this end to end, including the
+//! pool-lifecycle test (two sequential `Session::run()`s replay
+//! identically — worker reuse is invisible).
 
-/// A scoped fork-join pool: `threads` is the maximum worker-thread count
-/// per parallel region (1 = run inline on the caller's thread).
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+thread_local! {
+    /// Set while a thread is one of OUR parked workers: a nested
+    /// `map`/`map_mut` from inside a region runs inline instead of
+    /// re-entering the (non-reentrant) region protocol. Results are
+    /// identical by the determinism contract; only scheduling changes.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// The published job of one parallel region: a borrowed closure with its
+/// lifetime erased. Sound because [`Inner::run_region`] blocks until every
+/// participating worker has finished with it and clears it before
+/// returning, so the borrow outlives all uses.
+type RawJob = &'static (dyn Fn(usize) + Sync);
+
+/// Region/coordination state shared between the caller and the parked
+/// workers. All transitions happen under the one mutex; `work_cv` wakes
+/// parked workers on a new epoch, `done_cv` wakes the caller when the last
+/// chunk finishes.
+struct RegionState {
+    /// Bumped once per region; workers park while `epoch == last_seen`.
+    epoch: u64,
+    job: Option<RawJob>,
+    /// Worker slots participating in the current region (slot i runs chunk
+    /// i); workers with index >= slots skip the epoch and re-park.
+    slots: usize,
+    /// Participating slots that have not yet finished.
+    remaining: usize,
+    /// First panic payload out of the region's closures (re-raised on the
+    /// caller after the region completes, matching `std::thread::scope`).
+    panic: Option<Box<dyn std::any::Any + Send>>,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<RegionState>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Serializes whole regions: `map`/`map_mut` take `&self`, so two
+    /// threads sharing one handle must not interleave region setup.
+    region_lock: Mutex<()>,
+}
+
+/// The spawned-worker half of a pool; dropped (= shut down and joined)
+/// when the last [`ThreadPool`] handle goes away.
+struct Inner {
+    shared: Arc<Shared>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl Inner {
+    fn spawn(threads: usize) -> Inner {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(RegionState {
+                epoch: 0,
+                job: None,
+                slots: 0,
+                remaining: 0,
+                panic: None,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            region_lock: Mutex::new(()),
+        });
+        let handles = (0..threads)
+            .map(|w| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("flexcomm-pool-{w}"))
+                    .spawn(move || worker_loop(&shared, w))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Inner { shared, handles }
+    }
+
+    /// Publish `f` as the region job, wake the workers, block until all
+    /// `slots` chunks are done, then clear the job and re-raise any worker
+    /// panic. The blocking wait is what makes the lifetime erasure in
+    /// [`RawJob`] sound.
+    fn run_region(&self, slots: usize, f: &(dyn Fn(usize) + Sync)) {
+        // SAFETY: the job reference is only reachable through `state.job`,
+        // which is cleared below before this frame (and therefore the
+        // borrow) ends; workers touch it only between epoch publish and
+        // their `remaining` decrement, both inside this call's lifetime.
+        let job: RawJob = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), RawJob>(f)
+        };
+        let region = self.shared.region_lock.lock().unwrap();
+        let mut st = self.shared.state.lock().unwrap();
+        debug_assert!(st.job.is_none() && st.remaining == 0);
+        st.job = Some(job);
+        st.slots = slots;
+        st.remaining = slots;
+        st.epoch = st.epoch.wrapping_add(1);
+        self.shared.work_cv.notify_all();
+        while st.remaining > 0 {
+            st = self.shared.done_cv.wait(st).unwrap();
+        }
+        st.job = None;
+        let panic = st.panic.take();
+        // Release BOTH guards before re-raising: unwinding through a held
+        // guard would poison the mutex and wedge every later region — the
+        // pool must stay usable after a caught panicking region.
+        drop(st);
+        drop(region);
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
+        }
+    }
+}
+
+impl Drop for Inner {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, index: usize) {
+    IN_POOL_WORKER.with(|f| f.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    break;
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+            seen = st.epoch;
+            if index < st.slots {
+                st.job
+            } else {
+                None
+            }
+        };
+        if let Some(f) = job {
+            // Catch panics so the worker survives (the pool stays usable)
+            // and the payload reaches the caller, like scope() re-raising.
+            let result = catch_unwind(AssertUnwindSafe(|| f(index)));
+            let mut st = shared.state.lock().unwrap();
+            if let Err(p) = result {
+                if st.panic.is_none() {
+                    st.panic = Some(p);
+                }
+            }
+            st.remaining -= 1;
+            if st.remaining == 0 {
+                shared.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+/// Raw-pointer courier for handing a region's output (and `map_mut`'s
+/// items) to the workers. Each worker slot touches a disjoint contiguous
+/// index range, so the aliasing is sound by construction.
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// A persistent fork-join pool: `threads` worker threads are spawned at
+/// construction, parked between regions, and woken with contiguous-chunk
+/// tasks (1 = no threads are spawned and every region runs inline on the
+/// caller's thread).
 ///
-/// The pool is a cost-free handle (no spawned threads are kept alive
-/// between regions), so it is `Copy` and can be embedded in operators
-/// like [`crate::artopk::ArTopk`]. The flip side: every region pays a
-/// spawn/join, so for workloads whose per-item cost is smaller than a
-/// thread spawn (tens of µs), prefer `threads = 1` — results are
-/// identical by contract (DESIGN.md §7 records the trade-off).
+/// The handle is a cheap `Arc` clone — the builder creates ONE pool per
+/// `Session` and clones the handle into the trainer and every operator
+/// ([`crate::artopk::ArTopk`], the strategies), so all of a session's
+/// parallel regions share the same parked workers. Dropping the last
+/// handle shuts the workers down and joins them.
 ///
 /// ```
 /// use flexcomm::util::pool::ThreadPool;
@@ -31,15 +217,36 @@
 /// let squares = pool.map(8, |i| i * i);
 /// assert_eq!(squares, vec![0, 1, 4, 9, 16, 25, 36, 49]);
 /// ```
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Clone)]
 pub struct ThreadPool {
     threads: usize,
+    /// `None` for serial pools: no worker threads exist at all.
+    inner: Option<Arc<Inner>>,
 }
 
+impl std::fmt::Debug for ThreadPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ThreadPool").field("threads", &self.threads).finish()
+    }
+}
+
+/// Handles compare by capacity only — two pools of the same width are
+/// interchangeable under the determinism contract.
+impl PartialEq for ThreadPool {
+    fn eq(&self, other: &Self) -> bool {
+        self.threads == other.threads
+    }
+}
+
+impl Eq for ThreadPool {}
+
 impl ThreadPool {
-    /// Pool with an explicit thread cap (clamped to >= 1).
+    /// Pool with an explicit thread cap (clamped to >= 1). `threads > 1`
+    /// spawns the parked workers immediately.
     pub fn new(threads: usize) -> Self {
-        ThreadPool { threads: threads.max(1) }
+        let threads = threads.max(1);
+        let inner = (threads > 1).then(|| Arc::new(Inner::spawn(threads)));
+        ThreadPool { threads, inner }
     }
 
     /// `threads == 0` means "use the available hardware parallelism"
@@ -52,7 +259,7 @@ impl ThreadPool {
         }
     }
 
-    /// Single-threaded pool: every region runs inline.
+    /// Single-threaded pool: every region runs inline, no workers spawned.
     pub fn serial() -> Self {
         ThreadPool::new(1)
     }
@@ -66,40 +273,48 @@ impl ThreadPool {
         self.threads
     }
 
-    /// Compute `f(0), f(1), .., f(n-1)` across up to `threads` scoped
-    /// worker threads; returns the results in index order.
+    /// Compute `f(0), f(1), .., f(n-1)` across the parked workers; returns
+    /// the results in index order.
     ///
     /// `f` runs at most once per index. Panics in `f` propagate to the
-    /// caller after the scope joins.
+    /// caller after the region completes (the pool stays usable).
     pub fn map<R, F>(&self, n: usize, f: F) -> Vec<R>
     where
         R: Send,
         F: Fn(usize) -> R + Sync,
     {
         let workers = self.threads.min(n);
-        if workers <= 1 {
-            return (0..n).map(f).collect();
-        }
+        let inner = match &self.inner {
+            Some(inner) if workers > 1 && !IN_POOL_WORKER.with(|w| w.get()) => inner,
+            _ => return (0..n).map(f).collect(),
+        };
+        // Same chunking as the original scoped pool — part of the bitwise
+        // contract (results are by index either way, but keeping the
+        // shapes identical keeps per-chunk FP work identical too).
         let chunk = (n + workers - 1) / workers;
+        let slots = (n + chunk - 1) / chunk;
         let mut out: Vec<Option<R>> = Vec::with_capacity(n);
         out.resize_with(n, || None);
-        let f = &f;
-        std::thread::scope(|s| {
-            for (ci, slots) in out.chunks_mut(chunk).enumerate() {
-                s.spawn(move || {
-                    for (j, slot) in slots.iter_mut().enumerate() {
-                        *slot = Some(f(ci * chunk + j));
-                    }
-                });
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let job = |slot: usize| {
+            let start = slot * chunk;
+            let end = n.min(start + chunk);
+            for i in start..end {
+                let v = f(i);
+                // SAFETY: slot ranges are disjoint and each index is
+                // written exactly once; the old value is `None` (no-op
+                // drop on overwrite).
+                unsafe { *out_ptr.0.add(i) = Some(v) };
             }
-        });
+        };
+        inner.run_region(slots, &job);
         out.into_iter().map(|r| r.expect("every slot filled")).collect()
     }
 
     /// Like [`ThreadPool::map`] over disjoint mutable items: each worker
-    /// thread owns a contiguous sub-slice of `items`, so per-item state
-    /// (error-feedback residuals, per-worker compressors) mutates without
-    /// locks. Results come back in item order.
+    /// slot owns a contiguous sub-range of `items`, so per-item state
+    /// (error-feedback residuals, per-worker compressors, scratch arenas)
+    /// mutates without locks. Results come back in item order.
     ///
     /// ```
     /// use flexcomm::util::pool::ThreadPool;
@@ -120,24 +335,30 @@ impl ThreadPool {
     {
         let n = items.len();
         let workers = self.threads.min(n);
-        if workers <= 1 {
-            return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect();
-        }
+        let inner = match &self.inner {
+            Some(inner) if workers > 1 && !IN_POOL_WORKER.with(|w| w.get()) => inner,
+            _ => return items.iter_mut().enumerate().map(|(i, t)| f(i, t)).collect(),
+        };
         let chunk = (n + workers - 1) / workers;
+        let slots = (n + chunk - 1) / chunk;
         let mut out: Vec<Option<R>> = Vec::with_capacity(n);
         out.resize_with(n, || None);
-        let f = &f;
-        std::thread::scope(|s| {
-            for ((ci, slots), part) in
-                out.chunks_mut(chunk).enumerate().zip(items.chunks_mut(chunk))
-            {
-                s.spawn(move || {
-                    for (j, (slot, item)) in slots.iter_mut().zip(part.iter_mut()).enumerate() {
-                        *slot = Some(f(ci * chunk + j, item));
-                    }
-                });
+        let out_ptr = SendPtr(out.as_mut_ptr());
+        let items_ptr = SendPtr(items.as_mut_ptr());
+        let job = |slot: usize| {
+            let start = slot * chunk;
+            let end = n.min(start + chunk);
+            for i in start..end {
+                // SAFETY: slot index ranges are disjoint, so each item is
+                // exclusively borrowed by exactly one worker.
+                let item: &mut T = unsafe { &mut *items_ptr.0.add(i) };
+                let v = f(i, item);
+                // SAFETY: as in `map` — one writer per index, `None` old
+                // value.
+                unsafe { *out_ptr.0.add(i) = Some(v) };
             }
-        });
+        };
+        inner.run_region(slots, &job);
         out.into_iter().map(|r| r.expect("every slot filled")).collect()
     }
 }
@@ -213,6 +434,76 @@ mod tests {
         });
     }
 
+    /// The persistence property: the SAME workers serve many regions — the
+    /// set of OS threads that executed work never grows past the pool
+    /// width across hundreds of parked/woken regions.
+    #[test]
+    fn workers_are_reused_across_regions() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let pool = ThreadPool::new(3);
+        let seen: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        for _ in 0..200 {
+            pool.map(3, |i| {
+                seen.lock().unwrap().insert(std::thread::current().id());
+                i
+            });
+        }
+        let seen = seen.into_inner().unwrap();
+        assert!(
+            !seen.is_empty() && seen.len() <= 3,
+            "expected <= 3 persistent workers, saw {} distinct threads",
+            seen.len()
+        );
+        // And none of them is the caller: regions run on parked workers.
+        assert!(!seen.contains(&std::thread::current().id()));
+    }
+
+    /// Handle clones share one set of parked workers (the per-Session
+    /// ownership model: trainer + operators all hold clones).
+    #[test]
+    fn cloned_handles_share_workers() {
+        use std::collections::HashSet;
+        use std::sync::Mutex;
+        let pool = ThreadPool::new(2);
+        let clone = pool.clone();
+        let seen: Mutex<HashSet<std::thread::ThreadId>> = Mutex::new(HashSet::new());
+        for p in [&pool, &clone] {
+            for _ in 0..50 {
+                p.map(2, |i| {
+                    seen.lock().unwrap().insert(std::thread::current().id());
+                    i
+                });
+            }
+        }
+        assert!(seen.into_inner().unwrap().len() <= 2, "clones must not spawn new workers");
+        assert_eq!(pool, clone);
+    }
+
+    /// A nested map from inside a worker runs inline instead of
+    /// deadlocking on the region protocol; results are unchanged.
+    #[test]
+    fn nested_map_runs_inline() {
+        let pool = ThreadPool::new(2);
+        let outer = pool.clone();
+        let got = pool.map(4, move |i| outer.map(3, |j| i * 10 + j));
+        let want: Vec<Vec<usize>> =
+            (0..4).map(|i| (0..3).map(|j| i * 10 + j).collect()).collect();
+        assert_eq!(got, want);
+    }
+
+    /// Oversubscription (more workers than cores — and than items) parks
+    /// the excess workers; results are identical by contract.
+    #[test]
+    fn oversubscribed_pool_works() {
+        let pool = ThreadPool::new(16);
+        let got = pool.map(5, |i| i * i);
+        assert_eq!(got, vec![0, 1, 4, 9, 16]);
+        let mut xs = vec![1u32; 7];
+        pool.map_mut(&mut xs, |i, x| *x += i as u32);
+        assert_eq!(xs, vec![1, 2, 3, 4, 5, 6, 7]);
+    }
+
     #[test]
     fn auto_and_available() {
         assert!(ThreadPool::available() >= 1);
@@ -223,7 +514,7 @@ mod tests {
     }
 
     #[test]
-    #[should_panic] // scope re-raises after joining (payload may be rewrapped)
+    #[should_panic] // region re-raises after completion (payload rewrapped)
     fn worker_panics_propagate() {
         let pool = ThreadPool::new(2);
         pool.map(4, |i| {
@@ -232,5 +523,23 @@ mod tests {
             }
             i
         });
+    }
+
+    /// Workers survive a panicking region (the payload is re-raised on the
+    /// caller, the parked threads live on) — the pool remains usable.
+    #[test]
+    fn pool_survives_a_panicking_region() {
+        let pool = ThreadPool::new(2);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.map(4, |i| {
+                if i == 1 {
+                    panic!("poisoned region");
+                }
+                i
+            })
+        }));
+        assert!(result.is_err(), "panic must propagate");
+        // Same pool, next region: fully functional.
+        assert_eq!(pool.map(6, |i| i + 1), vec![1, 2, 3, 4, 5, 6]);
     }
 }

@@ -133,17 +133,33 @@ impl Rng {
 
     /// Sample `k` distinct indices from [0, n) (Floyd's algorithm), sorted.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        self.sample_indices_into(n, k, &mut out);
+        out
+    }
+
+    /// [`Rng::sample_indices`] into a caller-owned scratch buffer (cleared
+    /// first) — zero allocations once `out` has grown to capacity `k`.
+    ///
+    /// Membership is tracked in the sorted output itself via binary search
+    /// instead of a hash set: the `below` draw sequence and the accept /
+    /// replace-with-`j` decisions are identical to the hash-set
+    /// formulation (a pinned test proves it), so callers see the exact
+    /// same sorted index set — this is a pure allocation change.
+    pub fn sample_indices_into(&mut self, n: usize, k: usize, out: &mut Vec<usize>) {
         assert!(k <= n);
-        let mut chosen = std::collections::HashSet::with_capacity(k);
+        out.clear();
+        out.reserve(k);
         for j in (n - k)..n {
             let t = self.below(j + 1);
-            if !chosen.insert(t) {
-                chosen.insert(j);
+            match out.binary_search(&t) {
+                // `t` already chosen: Floyd inserts `j` instead — and `j`
+                // is strictly larger than every element so far, so it
+                // appends (keeping `out` sorted).
+                Ok(_) => out.push(j),
+                Err(pos) => out.insert(pos, t),
             }
         }
-        let mut v: Vec<usize> = chosen.into_iter().collect();
-        v.sort_unstable();
-        v
     }
 
     /// Draw from a categorical distribution given (unnormalised) weights.
@@ -215,6 +231,39 @@ mod tests {
         assert_eq!(idx.len(), 20);
         assert!(idx.windows(2).all(|w| w[0] < w[1]));
         assert!(idx.iter().all(|&i| i < 100));
+    }
+
+    /// The binary-search formulation must reproduce the original hash-set
+    /// Floyd sampler EXACTLY (same draws, same output) — Random-k's
+    /// shared-index AR-compatibility depends on this sequence never
+    /// changing. The closure below is the pre-arena implementation,
+    /// verbatim.
+    #[test]
+    fn sample_indices_into_matches_hashset_floyd() {
+        let old_floyd = |rng: &mut Rng, n: usize, k: usize| -> Vec<usize> {
+            let mut chosen = std::collections::HashSet::with_capacity(k);
+            for j in (n - k)..n {
+                let t = rng.below(j + 1);
+                if !chosen.insert(t) {
+                    chosen.insert(j);
+                }
+            }
+            let mut v: Vec<usize> = chosen.into_iter().collect();
+            v.sort_unstable();
+            v
+        };
+        let mut scratch = Vec::new();
+        for seed in 0..50u64 {
+            let mut a = Rng::new(seed);
+            let mut b = Rng::new(seed);
+            let n = 1 + (seed as usize * 37) % 500;
+            let k = (seed as usize * 13) % (n + 1);
+            let want = old_floyd(&mut a, n, k);
+            b.sample_indices_into(n, k, &mut scratch);
+            assert_eq!(scratch, want, "seed={seed} n={n} k={k}");
+            // And the generators are in the same state afterwards.
+            assert_eq!(a.next_u64(), b.next_u64(), "draw count differs");
+        }
     }
 
     #[test]

@@ -140,6 +140,84 @@ fn oversubscribed_threads_are_bitwise_identical() {
     }
 }
 
+/// The full thread matrix — 1 vs 3 vs 4 vs 16 (undersubscribed, odd,
+/// matched, oversubscribed) — across every strategy family AND both
+/// selection backends (exact quickselect and sampled-threshold). The
+/// persistent pool parks its workers between regions; this pins that the
+/// park/wake protocol and the per-worker scratch arenas are bitwise
+/// invisible at every pool width, including widths above the host core
+/// count where the same OS thread services many logical slots.
+#[test]
+fn thread_matrix_covers_all_families_and_selection_backends() {
+    let cases: [(&str, Strategy, f64); 5] = [
+        ("dense-ring", Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0),
+        ("ag-topk", Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05),
+        ("ag-sampledk", Strategy::AgCompress { kind: CompressorKind::SampledK }, 0.05),
+        (
+            "artopk-sampled",
+            Strategy::ArTopkSampled {
+                policy: SelectionPolicy::Star,
+                flavor: ArFlavor::Ring,
+            },
+            0.05,
+        ),
+        ("flexible", Strategy::Flexible { policy: SelectionPolicy::Star }, 0.05),
+    ];
+    for (label, strategy, cr) in cases {
+        let baseline = run(strategy, cr, 4, 1);
+        for threads in [3usize, 4, 16] {
+            let b = run(strategy, cr, 4, threads);
+            assert_bitwise_equal(&baseline, &b, &format!("{label}/threads={threads}"));
+        }
+    }
+}
+
+/// The sampled-threshold backend is not merely self-consistent: an
+/// AR-Topk run that selects via the sampled backend is bitwise identical
+/// to the exact-selection run with the same policy/flavor/seed. The
+/// exact-k repair step makes the two index sets (and hence the whole
+/// trajectory) coincide — `t_comp` is the only thing allowed to differ,
+/// and it is excluded from the bitwise contract by design.
+#[test]
+fn sampled_selection_trajectory_matches_exact_selection() {
+    for (policy, flavor) in [
+        (SelectionPolicy::Star, ArFlavor::Ring),
+        (SelectionPolicy::Var, ArFlavor::Tree),
+    ] {
+        let exact = run(Strategy::ArTopkFixed { policy, flavor }, 0.05, 4, 4);
+        let sampled = run(Strategy::ArTopkSampled { policy, flavor }, 0.05, 4, 4);
+        assert_bitwise_equal(
+            &exact,
+            &sampled,
+            &format!("sampled-vs-exact/{policy:?}/{flavor:?}"),
+        );
+    }
+}
+
+/// Pool lifecycle: two sequential `Session::run()`s in one process give
+/// identical trajectories. Each session spawns its own persistent pool
+/// and tears it down on drop, so worker reuse *within* a session (parked
+/// threads woken region after region) must be invisible — no state may
+/// leak from one region, step, or session into the next.
+#[test]
+fn sequential_sessions_in_one_process_are_bitwise_identical() {
+    for (label, strategy, cr) in [
+        ("ag-sampledk", Strategy::AgCompress { kind: CompressorKind::SampledK }, 0.05),
+        (
+            "artopk-star",
+            Strategy::ArTopkFixed {
+                policy: SelectionPolicy::Star,
+                flavor: ArFlavor::Ring,
+            },
+            0.05,
+        ),
+    ] {
+        let a = run(strategy, cr, 4, 4);
+        let b = run(strategy, cr, 4, 4);
+        assert_bitwise_equal(&a, &b, &format!("{label}/second-session"));
+    }
+}
+
 /// Control-plane determinism (DESIGN.md §10): EVERY registered controller
 /// is threads=1-vs-4 bitwise identical when its inputs are the static
 /// (simulated, thread-invariant) ones. `comp_scale = 0` zeroes the one

@@ -39,6 +39,14 @@ step() {
 
 step cargo build --release
 step cargo test -q
+# Thread-matrix determinism (DESIGN.md §7): the persistent parked-worker
+# pool must be bitwise invisible at every pool width. Run the determinism
+# suite at the default test harness settings AND with the harness forced
+# to 2 test threads (a cheap stand-in for a starved 2-core host, where
+# parked workers share cores with the test harness itself) — the pool's
+# outputs must not depend on how the OS schedules its workers.
+step cargo test -q --test determinism
+step cargo test -q --test determinism -- --test-threads=2
 # Trace round-trip smoke (DESIGN.md §9): the example writes a 3-phase
 # trace, loads it back and asserts `link_at` replays the written samples
 # exactly, then replays the shipped measured trace
@@ -54,7 +62,16 @@ step cargo run --release --example controller_compare -- --steps 24 --target 0.9
 # Benches are test = false (cargo test must not RUN them), so compile them
 # explicitly — otherwise table2/table6/fig2/fig5 could bit-rot silently.
 step cargo bench --no-run
+rm -f BENCH_hotpath.json # a stale record must not mask a silent skip
 step env FLEXCOMM_BENCH_FAST=1 cargo bench --bench hotpath
+# The hotpath bench doubles as the perf-regression harness: it must leave
+# a machine-readable record behind (spawn-vs-park and fresh-vs-arena
+# stages included). A missing file means the bench silently skipped its
+# reporting — fail loudly, same policy as the missing-toolchain check.
+if [ ! -f BENCH_hotpath.json ]; then
+    echo "verify: FATAL: BENCH_hotpath.json not written by the hotpath bench" >&2
+    status=1
+fi
 step cargo fmt --check
 # Lint gate over every target (lib, bin, tests, benches, examples). Some
 # minimal toolchains ship without the clippy component — that is a loud
