@@ -7,9 +7,16 @@
 //!     cargo run --release --example controller_compare -- \
 //!         [--steps 400] [--net c2] [--target 0.85] [--seed 7]
 //!
+//! `--net` accepts a comma-separated scenario list (ISSUE 7), so one
+//! invocation ranks every controller under several environments:
+//!
+//!     cargo run --release --example controller_compare -- \
+//!         --net straggler,hetero,churn --steps 24 --target 0.99
+//!
 //! The verify gate runs this at tiny step counts (`--steps 24`) across
-//! ALL `CONTROLLER_TABLE` entries, so an unregistered or panicking
-//! controller fails loudly there.
+//! ALL `CONTROLLER_TABLE` entries and the three fleet scenarios, so an
+//! unregistered or panicking controller — or one that breaks under
+//! stragglers, per-worker links or churn — fails loudly there.
 
 use anyhow::{ensure, Result};
 use flexcomm::coordinator::controller::CONTROLLER_TABLE;
@@ -19,32 +26,38 @@ use flexcomm::util::cli::Args;
 fn main() -> Result<()> {
     let args = Args::from_env()?;
     let steps = args.u64_or("steps", 400)?;
-    let scenario = args.str_or("net", "c2");
+    let scenarios = args.str_or("net", "c2");
     let target = args.f64_or("target", 0.85)?;
     let seed = args.u64_or("seed", 7)?;
 
-    let rows = controller_rows(&scenario, steps, seed, target)?;
-    print_controller_sweep(&scenario, &rows, target);
-
-    // Gate assertions (smoke mode relies on these): the sweep covered
-    // every registered controller and every run actually trained.
     let non_static = CONTROLLER_TABLE.iter().filter(|e| e.name != "static").count();
-    ensure!(
-        rows.len() == 2 + non_static,
-        "sweep rows {} != 2 static + {non_static} registry entries",
-        rows.len()
-    );
-    for r in &rows {
-        // Above-chance floor that holds even at smoke step counts (the
-        // host MLP has 16 classes, so chance is ~6%).
+    let mut total = 0usize;
+    for scenario in scenarios.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let rows = controller_rows(scenario, steps, seed, target)?;
+        print_controller_sweep(scenario, &rows, target);
+
+        // Gate assertions (smoke mode relies on these): the sweep covered
+        // every registered controller and every run actually trained.
         ensure!(
-            r.best_acc.is_finite() && r.best_acc > 0.15,
-            "{}: degenerate accuracy {}",
-            r.label,
-            r.best_acc
+            rows.len() == 2 + non_static,
+            "{scenario}: sweep rows {} != 2 static + {non_static} registry entries",
+            rows.len()
         );
-        ensure!(r.virtual_time_s > 0.0, "{}: no simulated time", r.label);
+        for r in &rows {
+            // Above-chance floor that holds even at smoke step counts (the
+            // host MLP has 16 classes, so chance is ~6%).
+            ensure!(
+                r.best_acc.is_finite() && r.best_acc > 0.15,
+                "{scenario}/{}: degenerate accuracy {}",
+                r.label,
+                r.best_acc
+            );
+            ensure!(r.virtual_time_s > 0.0, "{scenario}/{}: no simulated time", r.label);
+        }
+        total += rows.len();
+        println!();
     }
-    println!("\ncontroller sweep: {} rows OK", rows.len());
+    ensure!(total > 0, "no scenarios given");
+    println!("controller sweep: {total} rows OK");
     Ok(())
 }

@@ -2,23 +2,132 @@
 //! grows 2..8(..32), on a 5ms / 1Gbps link (ResNet50-sized tensor).
 //! Both the closed form and the real collective implementations.
 //!
+//! Second stage (ISSUE 7): the FLEET sweep — pure cost-model scale-out
+//! to 16384 workers under the `c1`, `c2` and `hetero` registry
+//! scenarios, locating the AG-vs-ART-Ring crossover N per scenario and
+//! emitting `BENCH_scaleout.json` for the verify gate. Heterogeneous
+//! fleets are priced through the ISSUE 7 conservative path (the
+//! componentwise-slowest worker link), exactly what
+//! `Collective::predict_hetero` does for the compressed ops.
+//!
 //!     cargo bench --bench fig5_scaleout
+//!     FLEXCOMM_BENCH_FAST=1 cargo bench --bench fig5_scaleout   (CI smoke)
 
 use flexcomm::artopk::{ArFlavor, ArTopk, SelectionPolicy};
-use flexcomm::collectives::allgather_sparse;
+use flexcomm::collectives::{allgather_sparse, cheapest_hetero};
 use flexcomm::compress::{Compressor, EfState, TopK};
 use flexcomm::netsim::cost_model::{self, LinkParams};
+use flexcomm::netsim::model::build_scenario;
 use flexcomm::tensor::Layout;
 use flexcomm::util::rng::Rng;
 use flexcomm::util::stats::sparkline;
 use flexcomm::util::table::Table;
 
+/// Minimal JSON string escape (mirrors util::bench's writer; keys here are
+/// ASCII scenario/op names so only quotes/backslashes matter).
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+struct SweepPoint {
+    n: usize,
+    ag_s: f64,
+    art_ring_s: f64,
+    dense_op: &'static str,
+    dense_s: f64,
+}
+
+struct ScenarioSweep {
+    name: &'static str,
+    crossover_n: Option<usize>,
+    points: Vec<SweepPoint>,
+}
+
+/// Cost-only fleet scale-out for one registry scenario: per-worker links at
+/// epoch 0, AG vs ART-Ring priced on the slowest participant (the
+/// conservative hetero path), plus the cheapest DENSE collective for
+/// reference. O(n) per point, no per-worker dense state.
+fn fleet_sweep(name: &'static str, m: f64, cr: f64, max_n: usize) -> ScenarioSweep {
+    let net = build_scenario(name, 2.0).expect("registry scenario");
+    let topo = net.topology_at(0.0);
+    let mut points = Vec::new();
+    let mut crossover_n = None;
+    let mut n = 2usize;
+    while n <= max_n {
+        let links: Vec<LinkParams> = (0..n).map(|w| net.worker_link_at(w, 0.0)).collect();
+        let slow = cost_model::slowest_link(&links);
+        let ag_s = cost_model::ag_topk(slow, m, n, cr);
+        let art_ring_s = cost_model::art_ring(slow, m, n, cr);
+        let (op, dense_s) = cheapest_hetero(topo, &links, m, cr);
+        if crossover_n.is_none() && art_ring_s < ag_s {
+            crossover_n = Some(n);
+        }
+        points.push(SweepPoint { n, ag_s, art_ring_s, dense_op: op.name(), dense_s });
+        n *= 2;
+    }
+    ScenarioSweep { name, crossover_n, points }
+}
+
+fn write_scaleout_json(
+    path: &std::path::Path,
+    m: f64,
+    cr: f64,
+    sweeps: &[ScenarioSweep],
+) -> std::io::Result<()> {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{{\"bench\": \"scaleout\",\n \"model_bytes\": {m:.1}, \"cr\": {cr},\n \"scenarios\": ["
+    ));
+    for (i, s) in sweeps.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let cross = match s.crossover_n {
+            Some(n) => n.to_string(),
+            None => "null".to_string(),
+        };
+        out.push_str(&format!(
+            "\n  {{\"name\": {}, \"crossover_n\": {cross}, \"sweep\": [",
+            json_str(s.name)
+        ));
+        for (j, p) in s.points.iter().enumerate() {
+            if j > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n   {{\"n\": {}, \"ag_s\": {:.6}, \"art_ring_s\": {:.6}, \
+                 \"dense_op\": {}, \"dense_s\": {:.6}}}",
+                p.n,
+                p.ag_s,
+                p.art_ring_s,
+                json_str(p.dense_op),
+                p.dense_s
+            ));
+        }
+        out.push_str("]}");
+    }
+    out.push_str("\n]}\n");
+    std::fs::write(path, out)
+}
+
 fn main() {
+    let fast = std::env::var("FLEXCOMM_BENCH_FAST").is_ok();
     let params = 25.6e6; // ResNet50
     let cr = 0.1;
     let l = LinkParams::from_ms_gbps(5.0, 1.0);
     let m = 4.0 * params;
-    let sim_dim = 100_000;
+    let sim_dim = if fast { 20_000 } else { 100_000 };
     let scale = params / sim_dim as f64;
     let ls = LinkParams { alpha: l.alpha, beta: l.beta * scale };
 
@@ -26,7 +135,9 @@ fn main() {
     let mut t = Table::new(["N", "AG model (ms)", "AG sim (ms)", "ART-Ring model (ms)", "ART-Ring sim (ms)"]);
     let mut ag_series = Vec::new();
     let mut art_series = Vec::new();
-    for n in [2usize, 3, 4, 5, 6, 7, 8, 16, 32] {
+    let ns: &[usize] =
+        if fast { &[2, 4, 8, 16] } else { &[2, 3, 4, 5, 6, 7, 8, 16, 32] };
+    for &n in ns {
         let mut rng = Rng::new(n as u64);
         let grads: Vec<Vec<f32>> = (0..n)
             .map(|_| {
@@ -64,4 +175,29 @@ fn main() {
          (bandwidth O(MN)); ART-Ring inclines gently (ring β-term ~ \
          independent of N, broadcast grows as log N)."
     );
+
+    // ---- Fleet scale-out (ISSUE 7): cost-only sweep to 16384 workers ----
+    let max_n = 16_384;
+    let sweeps: Vec<ScenarioSweep> = ["c1", "c2", "hetero"]
+        .into_iter()
+        .map(|s| fleet_sweep(s, m, cr, max_n))
+        .collect();
+
+    println!("\nFleet scale-out — AG vs ART-Ring crossover per scenario (n ≤ {max_n})\n");
+    let mut ft = Table::new(["scenario", "crossover N", "AG @16384 (s)", "ART-Ring @16384 (s)", "best dense @16384"]);
+    for s in &sweeps {
+        let last = s.points.last().expect("non-empty sweep");
+        ft.row([
+            s.name.to_string(),
+            s.crossover_n.map_or_else(|| format!("> {max_n}"), |n| n.to_string()),
+            format!("{:.2}", last.ag_s),
+            format!("{:.2}", last.art_ring_s),
+            format!("{} ({:.2}s)", last.dense_op, last.dense_s),
+        ]);
+    }
+    ft.print();
+
+    let json_path = std::path::Path::new("BENCH_scaleout.json");
+    write_scaleout_json(json_path, m, cr, &sweeps).expect("write BENCH_scaleout.json");
+    println!("\nwrote {} ({} scenarios)", json_path.display(), sweeps.len());
 }

@@ -149,6 +149,22 @@ pub trait Collective: Send + Sync {
         let _ = (topo, n);
         true
     }
+
+    /// Predicted seconds for one exchange over a HETEROGENEOUS fleet: one
+    /// link per worker (`links.len()` ranks), each round priced by the
+    /// slowest participant of that round's pattern (ISSUE 7 cost layer).
+    ///
+    /// The default prices the fleet's componentwise-slowest link with the
+    /// homogeneous closed form — exact when all links coincide (the fast
+    /// path the pattern-aware overrides also take), conservative
+    /// otherwise. Ring/HD/hierarchical override with true per-round
+    /// pattern costs; ops whose pattern is not yet modelled per-round
+    /// (tree, PS, the compressed trio) inherit the conservative default.
+    fn predict_hetero(&self, topo: Topology, links: &[LinkParams], m_bytes: f64, cr: f64) -> f64 {
+        let slow = cost_model::slowest_link(links);
+        let t = Topology { inter: slow, ..topo };
+        self.predict(t, m_bytes, links.len(), cr)
+    }
 }
 
 /// A dense in-place SUM allreduce: really moves/reduces the per-worker
@@ -185,6 +201,9 @@ impl Collective for RingAllreduceOp {
     fn predict(&self, topo: Topology, m_bytes: f64, n: usize, _cr: f64) -> f64 {
         cost_model::ring_allreduce(topo.inter, m_bytes, n)
     }
+    fn predict_hetero(&self, _topo: Topology, links: &[LinkParams], m_bytes: f64, _cr: f64) -> f64 {
+        cost_model::hetero_ring_allreduce(links, m_bytes)
+    }
 }
 
 impl DenseCollective for RingAllreduceOp {
@@ -215,6 +234,9 @@ impl Collective for HalvingDoublingOp {
     fn predict(&self, topo: Topology, m_bytes: f64, n: usize, _cr: f64) -> f64 {
         cost_model::halving_doubling_allreduce(topo.inter, m_bytes, n)
     }
+    fn predict_hetero(&self, _topo: Topology, links: &[LinkParams], m_bytes: f64, _cr: f64) -> f64 {
+        cost_model::hetero_halving_doubling_allreduce(links, m_bytes)
+    }
 }
 
 impl DenseCollective for HalvingDoublingOp {
@@ -232,6 +254,9 @@ impl Collective for HierarchicalOp {
     }
     fn auto_candidate(&self, topo: Topology, n: usize) -> bool {
         !topo.is_flat() && n % topo.workers_per_node.max(1) == 0
+    }
+    fn predict_hetero(&self, topo: Topology, links: &[LinkParams], m_bytes: f64, _cr: f64) -> f64 {
+        cost_model::hetero_hierarchical_allreduce(topo, links, m_bytes)
     }
 }
 
@@ -332,6 +357,34 @@ pub fn collective(kind: CollectiveKind) -> &'static dyn Collective {
         .copied()
         .find(|op| op.kind() == kind)
         .expect("every built-in CollectiveKind is registered")
+}
+
+/// Cheapest registered collective for a heterogeneous fleet of
+/// `links.len()` workers: the fleet-scale argmin `FleetSim` prices every
+/// round with. Considers every [`registry`] op whose
+/// [`Collective::auto_candidate`] admits `(topo, n)` — the same gate the
+/// homogeneous selectors use — scoring by [`Collective::predict_hetero`].
+/// Registry order breaks ties (strict argmin), mirroring
+/// `choose_dense_topo`. Panics on an empty fleet.
+pub fn cheapest_hetero(
+    topo: Topology,
+    links: &[LinkParams],
+    m_bytes: f64,
+    cr: f64,
+) -> (&'static dyn Collective, f64) {
+    assert!(!links.is_empty(), "cheapest_hetero over an empty fleet");
+    let n = links.len();
+    let mut best: Option<(&'static dyn Collective, f64)> = None;
+    for op in registry() {
+        if !op.auto_candidate(topo, n) {
+            continue;
+        }
+        let cost = op.predict_hetero(topo, links, m_bytes, cr);
+        if best.map_or(true, |(_, b)| cost < b) {
+            best = Some((*op, cost));
+        }
+    }
+    best.expect("ring/tree/HD are unconditional candidates")
 }
 
 #[cfg(test)]
@@ -530,6 +583,73 @@ mod tests {
         let c = crate::coordinator::selector::choose_dense_topo(two, 4e8, 8);
         assert_ne!(c.kind, CollectiveKind::HierarchicalAllreduce);
         assert!(c.predicted_s.is_finite());
+    }
+
+    /// `predict_hetero` on a coincident-link fleet equals `predict` with
+    /// that link BITWISE for every registered op — the homogeneous fast
+    /// path the ISSUE 7 determinism pins ride on — and the pattern-aware
+    /// overrides really price per-round (a one-worker degrade moves ring
+    /// and HD, and moves them differently from the conservative default).
+    #[test]
+    fn predict_hetero_fast_path_and_pattern_overrides() {
+        let inter = LinkParams::from_ms_gbps(4.0, 20.0);
+        let topo = Topology::two_level(LinkParams::from_ms_gbps(0.01, 100.0), inter, 4);
+        let (m, n, cr) = (4e8, 8usize, 0.01);
+        let links = vec![inter; n];
+        for op in registry() {
+            if !op.auto_candidate(topo, n) && op.kind() != CollectiveKind::PsStar {
+                continue;
+            }
+            let hom = op.predict(topo, m, n, cr);
+            let het = op.predict_hetero(topo, &links, m, cr);
+            assert_eq!(hom.to_bits(), het.to_bits(), "{} fast path", op.name());
+        }
+        // Degrade one worker: per-round ring cost stretches every round by
+        // the slow worker, matching the cost_model entry point exactly.
+        let mut degraded = links.clone();
+        degraded[3] = LinkParams::from_ms_gbps(40.0, 2.0);
+        let ring = collective(CollectiveKind::RingAllreduce);
+        assert_eq!(
+            ring.predict_hetero(topo, &degraded, m, cr).to_bits(),
+            cost_model::hetero_ring_allreduce(&degraded, m).to_bits()
+        );
+        let hd = collective(CollectiveKind::HalvingDoublingAllreduce);
+        assert_eq!(
+            hd.predict_hetero(topo, &degraded, m, cr).to_bits(),
+            cost_model::hetero_halving_doubling_allreduce(&degraded, m).to_bits()
+        );
+        let hier = collective(CollectiveKind::HierarchicalAllreduce);
+        assert_eq!(
+            hier.predict_hetero(topo, &degraded, m, cr).to_bits(),
+            cost_model::hetero_hierarchical_allreduce(topo, &degraded, m).to_bits()
+        );
+        assert!(
+            ring.predict_hetero(topo, &degraded, m, cr) > ring.predict(topo, m, n, cr),
+            "a straggling link must cost the ring something"
+        );
+    }
+
+    /// The fleet argmin honors auto-candidate gates and really minimizes.
+    #[test]
+    fn cheapest_hetero_is_a_gated_argmin() {
+        let inter = LinkParams::from_ms_gbps(4.0, 20.0);
+        let flat = Topology::flat(inter);
+        let mut links = vec![inter; 8];
+        links[2] = LinkParams::from_ms_gbps(32.0, 2.5);
+        let (op, cost) = cheapest_hetero(flat, &links, 4e8, 0.01);
+        assert!(cost.is_finite() && cost > 0.0);
+        assert_ne!(op.kind(), CollectiveKind::PsStar, "strawman never auto-picked");
+        assert_ne!(op.kind(), CollectiveKind::HierarchicalAllreduce, "flat topo");
+        for other in registry() {
+            if other.auto_candidate(flat, links.len()) {
+                assert!(
+                    cost <= other.predict_hetero(flat, &links, 4e8, 0.01),
+                    "{} beat the chosen {}",
+                    other.name(),
+                    op.name()
+                );
+            }
+        }
     }
 
     #[test]

@@ -171,6 +171,8 @@ mod tests {
             model_bytes: 4e6,
             n_workers: 4,
             compressed: true,
+            straggler_factor: 1.0,
+            active_workers: 4,
         }
     }
 

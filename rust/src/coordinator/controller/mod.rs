@@ -72,6 +72,14 @@ pub struct ControlCtx<'a> {
     pub n_workers: usize,
     /// Whether the active strategy compresses (CR semantics apply).
     pub compressed: bool,
+    /// Worst per-worker straggler slowdown this step
+    /// ([`NetworkModel::straggler_factor`](crate::netsim::model::NetworkModel::straggler_factor)
+    /// maxed over the fleet): 1.0 on straggler-free environments.
+    pub straggler_factor: f64,
+    /// Workers active this step under elastic membership
+    /// ([`NetworkModel::active_workers_at`](crate::netsim::model::NetworkModel::active_workers_at)):
+    /// equals `n_workers` on churn-free environments.
+    pub active_workers: usize,
 }
 
 /// One typed control action (see [`ControlDecision`]).
@@ -429,6 +437,8 @@ mod tests {
             model_bytes: 4e6,
             n_workers: 4,
             compressed: true,
+            straggler_factor: 1.0,
+            active_workers: 4,
         }
     }
 

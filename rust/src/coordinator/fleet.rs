@@ -1,0 +1,338 @@
+//! Event-driven fleet cost engine: price a full training run for
+//! 1024–16384 workers WITHOUT per-worker dense state (DESIGN.md §11).
+//!
+//! The numeric [`Trainer`](crate::coordinator::trainer::Trainer) carries
+//! O(n·dim) gradient/error-feedback state per worker, which caps honest
+//! simulation at a few dozen workers — far below the fleet scales where
+//! the paper's AG-vs-AR crossovers actually move. [`FleetSim`] drops the
+//! numerics and keeps ONLY the cost events: per step it reads the elastic
+//! membership ([`NetworkModel::active_workers_at`]), materializes the
+//! per-worker link view ([`NetworkModel::worker_link_at`]) as one
+//! TRANSIENT `Vec<LinkParams>` (O(n) f64 pairs, freed at step end),
+//! prices the exchange with the heterogeneous collective argmin
+//! ([`cheapest_hetero`](crate::collectives::cheapest_hetero)), and takes
+//! the straggler-scaled critical-path compute time through the same
+//! [`ComputeModel::step_time_stragglers`] primitive the trainer uses.
+//!
+//! Statistical efficiency is a *sampled proxy*: churn shrinks the
+//! aggregated batch, so per-step progress is scaled by
+//! `sqrt(active / n)` (gradient-noise-scale argument), while fleet-health
+//! telemetry (straggler factors, slow-link share) is estimated from a
+//! deterministic ≤[`SAMPLE_CAP`]-worker sample per step instead of an
+//! exact fleet scan. The run's peak memory-shaped state is accounted in
+//! f64 slots and hard-asserted O(n) — `model_bytes` enters only as a
+//! scalar, so the bound is independent of model size by construction.
+
+use crate::collectives::cheapest_hetero;
+use crate::coordinator::worker::ComputeModel;
+use crate::netsim::cost_model::LinkParams;
+use crate::netsim::model::NetworkModel;
+use crate::netsim::schedule::NetSchedule;
+use crate::util::rng::Rng;
+use std::collections::BTreeMap;
+
+/// Per-step sample size for the statistical-efficiency / fleet-health
+/// proxies: evenly spaced over the active fleet, deterministic.
+pub const SAMPLE_CAP: usize = 64;
+
+/// Fixed f64-slot budget for the report accumulators (everything that is
+/// not the transient per-worker link view) — part of the O(n) accounting.
+const FIXED_STATE_F64S: usize = 32;
+
+/// Cost-only fleet run configuration. No gradient source, no parameter
+/// vector: `model_bytes` is the one scalar through which model size
+/// enters, so state can never scale with `dim`.
+pub struct FleetConfig {
+    /// Configured fleet size (churn can idle workers below this).
+    pub n_workers: usize,
+    pub steps: u64,
+    pub steps_per_epoch: u64,
+    /// Effective message bytes per exchange (`4 · dim · msg_scale`).
+    pub model_bytes: f64,
+    /// Compression ratio the priced strategy runs at (1.0 = dense).
+    pub cr: f64,
+    /// The network environment (per-worker hooks drive everything).
+    pub net: Box<dyn NetworkModel>,
+    pub compute: ComputeModel,
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_workers: 4096,
+            steps: 100,
+            steps_per_epoch: 50,
+            // ResNet-50-class message: 25.6M params * 4 bytes.
+            model_bytes: 4.0 * 25.6e6,
+            cr: 0.01,
+            net: Box::new(NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0))),
+            compute: ComputeModel::fixed(0.005),
+            seed: 0,
+        }
+    }
+}
+
+/// What a fleet run cost, and how healthy the fleet was while paying it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetReport {
+    pub n_workers: usize,
+    pub steps: u64,
+    /// Total simulated seconds: compute + sync + catch-up.
+    pub virtual_time_s: f64,
+    /// Critical-path compute seconds (straggler-scaled max per step).
+    pub compute_s: f64,
+    /// Collective sync seconds (heterogeneous round-pattern pricing).
+    pub comm_s: f64,
+    /// Declared catch-up seconds charged on membership joins.
+    pub catchup_s: f64,
+    /// Membership edges observed between consecutive steps.
+    pub membership_changes: u64,
+    /// Smallest active fleet seen during the run.
+    pub min_active: usize,
+    /// Mean statistical-efficiency proxy over the run:
+    /// `sqrt(active / n_workers)` per step, 1.0 for a full fleet.
+    pub stat_efficiency: f64,
+    /// `steps / stat_efficiency` — steps a full fleet would have needed
+    /// for the same progress under the noise-scale proxy.
+    pub est_steps_to_parity: f64,
+    /// Sampled mean straggler factor over the run (1.0 = no tail).
+    pub sampled_mean_straggler: f64,
+    /// Worst sampled straggler factor over the run.
+    pub sampled_max_straggler: f64,
+    /// Sampled share of workers whose link is strictly slower than the
+    /// backbone `link_at` view (heterogeneous-fleet fingerprint).
+    pub slow_link_share: f64,
+    /// Steps won per collective, by registry name (pricing argmin).
+    pub collective_counts: Vec<(&'static str, u64)>,
+    /// Peak memory-shaped state in f64 slots: the transient per-worker
+    /// link view plus fixed accumulators. Hard-asserted ≤ `2n + 64` at
+    /// the end of every run — O(n), never O(n·dim).
+    pub peak_state_f64s: usize,
+}
+
+impl FleetReport {
+    /// The collective that won the most steps.
+    pub fn dominant_collective(&self) -> Option<&'static str> {
+        self.collective_counts.iter().max_by_key(|(_, c)| *c).map(|(n, _)| *n)
+    }
+}
+
+/// The event-driven fleet cost engine. See the module docs for the model;
+/// [`FleetSim::run`] is deterministic for a given config (pure-function
+/// network hooks + a dedicated seeded compute stream).
+pub struct FleetSim {
+    cfg: FleetConfig,
+}
+
+impl FleetSim {
+    pub fn new(cfg: FleetConfig) -> Self {
+        assert!(cfg.n_workers >= 1, "fleet of zero workers");
+        assert!(cfg.steps_per_epoch >= 1, "steps_per_epoch must be >= 1");
+        FleetSim { cfg }
+    }
+
+    pub fn run(&self) -> FleetReport {
+        let cfg = &self.cfg;
+        let n = cfg.n_workers;
+        let mut compute_rng = Rng::new(cfg.seed ^ 0xC0317);
+        let mut compute_s = 0.0;
+        let mut comm_s = 0.0;
+        let mut catchup_s = 0.0;
+        let mut membership_changes = 0u64;
+        let mut min_active = n;
+        let mut eff_sum = 0.0;
+        let mut straggler_sum = 0.0;
+        let mut straggler_samples = 0u64;
+        let mut straggler_max: f64 = 1.0;
+        let mut slow_links = 0u64;
+        let mut counts: BTreeMap<&'static str, u64> = BTreeMap::new();
+        let mut last_active: Option<usize> = None;
+        let mut peak_state = FIXED_STATE_F64S;
+
+        for step in 0..cfg.steps {
+            let epoch = step as f64 / cfg.steps_per_epoch as f64;
+            let active = cfg.net.active_workers_at(epoch, n);
+            min_active = min_active.min(active);
+
+            // Membership edge: count it, and charge the environment's
+            // declared catch-up cost when the fleet GREW.
+            if let Some(prev) = last_active {
+                if prev != active {
+                    membership_changes += 1;
+                    if active > prev {
+                        catchup_s += cfg.net.catchup_cost_at(epoch, cfg.model_bytes);
+                    }
+                }
+            }
+            last_active = Some(active);
+
+            // Critical-path compute: the same straggler-scaled primitive
+            // the numeric trainer uses (§7 purity contract).
+            compute_s += cfg.compute.step_time_stragglers(active, &mut compute_rng, |w| {
+                cfg.net.straggler_factor(w, step)
+            });
+
+            // Per-worker cost event: ONE transient O(active) link view,
+            // priced by the heterogeneous collective argmin.
+            let links: Vec<LinkParams> =
+                (0..active).map(|w| cfg.net.worker_link_at(w, epoch)).collect();
+            peak_state = peak_state.max(FIXED_STATE_F64S + 2 * links.len());
+            let topo = cfg.net.topology_at(epoch);
+            let (op, cost) = cheapest_hetero(topo, &links, cfg.model_bytes, cfg.cr);
+            *counts.entry(op.kind().name()).or_insert(0) += 1;
+            comm_s += cost;
+
+            // Sampled proxies: statistical efficiency from the membership
+            // noise scale, fleet health from a ≤SAMPLE_CAP evenly spaced
+            // worker sample (deterministic — no RNG).
+            eff_sum += (active as f64 / n as f64).sqrt();
+            let k = active.min(SAMPLE_CAP);
+            let backbone = cfg.net.link_at(epoch);
+            for i in 0..k {
+                let w = i * active / k;
+                let f = cfg.net.straggler_factor(w, step);
+                straggler_sum += f;
+                straggler_max = straggler_max.max(f);
+                let l = links[w];
+                if l.alpha > backbone.alpha || l.beta > backbone.beta {
+                    slow_links += 1;
+                }
+            }
+            straggler_samples += k as u64;
+        }
+
+        // The O(n)-not-O(n·dim) contract, enforced at every run: the
+        // transient link view is 2 f64s per worker, everything else is a
+        // fixed handful of accumulators.
+        assert!(
+            peak_state <= 2 * n + 2 * FIXED_STATE_F64S,
+            "fleet state grew past O(n): {peak_state} f64s for n={n}"
+        );
+
+        let steps_f = (cfg.steps.max(1)) as f64;
+        let stat_efficiency =
+            if cfg.steps == 0 { 1.0 } else { eff_sum / steps_f };
+        FleetReport {
+            n_workers: n,
+            steps: cfg.steps,
+            virtual_time_s: compute_s + comm_s + catchup_s,
+            compute_s,
+            comm_s,
+            catchup_s,
+            membership_changes,
+            min_active,
+            stat_efficiency,
+            est_steps_to_parity: steps_f / stat_efficiency,
+            sampled_mean_straggler: if straggler_samples == 0 {
+                1.0
+            } else {
+                straggler_sum / straggler_samples as f64
+            },
+            sampled_max_straggler: straggler_max,
+            slow_link_share: if straggler_samples == 0 {
+                0.0
+            } else {
+                slow_links as f64 / straggler_samples as f64
+            },
+            collective_counts: counts.into_iter().collect(),
+            peak_state_f64s: peak_state,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::netsim::model::build_scenario;
+
+    fn cfg_for(scenario: &str, n: usize, steps: u64) -> FleetConfig {
+        FleetConfig {
+            n_workers: n,
+            steps,
+            steps_per_epoch: steps.max(4) / 4,
+            net: build_scenario(scenario, 2.0).unwrap(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn homogeneous_fleet_prices_like_the_closed_form() {
+        let cfg = FleetConfig { n_workers: 1024, steps: 20, ..Default::default() };
+        let report = FleetSim::new(cfg).run();
+        // Static 4ms/20Gbps, fixed compute: every step costs the same.
+        let per_step_comm = report.comm_s / 20.0;
+        let links = vec![LinkParams::from_ms_gbps(4.0, 20.0); 1024];
+        let topo = crate::netsim::cost_model::Topology::flat(links[0]);
+        let (_, expect) = cheapest_hetero(topo, &links, 4.0 * 25.6e6, 0.01);
+        assert!((per_step_comm - expect).abs() < 1e-12, "{per_step_comm} vs {expect}");
+        assert!((report.compute_s - 20.0 * 0.005).abs() < 1e-12);
+        assert_eq!(report.membership_changes, 0);
+        assert_eq!(report.min_active, 1024);
+        assert!((report.stat_efficiency - 1.0).abs() < 1e-12);
+        assert!((report.sampled_mean_straggler - 1.0).abs() < 1e-12);
+        assert_eq!(report.slow_link_share, 0.0);
+        assert_eq!(report.collective_counts.iter().map(|(_, c)| c).sum::<u64>(), 20);
+    }
+
+    #[test]
+    fn fleet_runs_4096_workers_with_o_n_state_independent_of_model_size() {
+        for scenario in ["hetero", "straggler", "churn"] {
+            let small = FleetSim::new(FleetConfig {
+                model_bytes: 1e6,
+                ..cfg_for(scenario, 4096, 40)
+            })
+            .run();
+            let big = FleetSim::new(FleetConfig {
+                model_bytes: 1e9,
+                ..cfg_for(scenario, 4096, 40)
+            })
+            .run();
+            assert!(small.virtual_time_s > 0.0 && big.virtual_time_s > small.virtual_time_s);
+            // The O(n) contract: state never scales with model size.
+            assert_eq!(small.peak_state_f64s, big.peak_state_f64s, "{scenario}");
+            assert!(small.peak_state_f64s <= 2 * 4096 + 64, "{scenario}");
+        }
+    }
+
+    #[test]
+    fn churn_fleet_reports_membership_and_catchup() {
+        let report = FleetSim::new(cfg_for("churn", 1024, 40)).run();
+        // Registry churn at 2.0 epochs / spe 10: leave at step 5, leave at
+        // step 10, rejoin at step 15 -> 3 edges, one join charge.
+        assert_eq!(report.membership_changes, 3);
+        assert!(report.catchup_s > 0.0);
+        assert!(report.min_active < 1024);
+        assert!(report.stat_efficiency < 1.0);
+        assert!(report.est_steps_to_parity > 40.0);
+    }
+
+    #[test]
+    fn hetero_fleet_sees_slow_links_and_straggler_fleet_sees_tails() {
+        let hetero = FleetSim::new(cfg_for("hetero", 2048, 20)).run();
+        assert!(
+            hetero.slow_link_share > 0.05 && hetero.slow_link_share < 0.55,
+            "sampled slow share {} must resemble the configured 0.25",
+            hetero.slow_link_share
+        );
+        assert!((hetero.sampled_max_straggler - 1.0).abs() < 1e-12);
+        // A heterogeneous fleet is strictly more expensive than the same
+        // fleet on its backbone link alone.
+        let flat = FleetSim::new(cfg_for("c1", 2048, 20)).run();
+        assert!(hetero.comm_s > 0.0 && flat.comm_s > 0.0);
+
+        let straggler = FleetSim::new(cfg_for("straggler", 2048, 20)).run();
+        assert!(straggler.sampled_max_straggler > 1.5, "{}", straggler.sampled_max_straggler);
+        assert!(straggler.sampled_mean_straggler > 1.0);
+        assert!(straggler.compute_s > 20.0 * 0.005, "tails stretch the critical path");
+        assert_eq!(straggler.slow_link_share, 0.0);
+    }
+
+    #[test]
+    fn fleet_runs_are_deterministic() {
+        let a = FleetSim::new(cfg_for("hetero", 1024, 16)).run();
+        let b = FleetSim::new(cfg_for("hetero", 1024, 16)).run();
+        assert_eq!(a, b);
+        assert_eq!(a.dominant_collective(), b.dominant_collective());
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod checkpoint;
 pub mod controller;
+pub mod fleet;
 pub mod metrics;
 pub mod observer;
 pub mod policy_switch;
@@ -19,10 +20,11 @@ pub use controller::{
     AdaptiveConfig, ControlAction, ControlCtx, ControlDecision, Controller,
     ControllerError, GravacConfig, CONTROLLER_TABLE,
 };
+pub use fleet::{FleetConfig, FleetReport, FleetSim};
 pub use metrics::{MetricsLog, StepMetrics};
 pub use observer::{
-    CrChange, CsvSink, EvalRecord, NetChange, ProgressPrinter, StrategySwitch,
-    SwitchDimension, TrainObserver,
+    CrChange, CsvSink, EvalRecord, MembershipChange, NetChange, ProgressPrinter,
+    StrategySwitch, SwitchDimension, TrainObserver,
 };
 pub use session::{ConfigError, Session, SessionBuilder, TrainReport};
 pub use strategy::{CommPlan, CommStrategy, ExchangeCtx, ExchangeOutcome, StepCtx};

@@ -106,6 +106,23 @@ pub struct NetChange {
     pub to: LinkParams,
 }
 
+/// The simulated fleet's ACTIVE membership changed between recorded steps
+/// (a [`Churn`](crate::netsim::modifiers::Churn) join/leave event fired).
+/// Like [`NetChange`] this is ground truth about the environment; joins
+/// additionally charge the scenario's declared catch-up cost
+/// ([`NetworkModel::catchup_cost_at`](crate::netsim::model::NetworkModel::catchup_cost_at))
+/// to the step that observes them.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MembershipChange {
+    /// Recorded step at which the new membership first applied.
+    pub step: u64,
+    pub epoch: f64,
+    /// Active workers before the event.
+    pub from: usize,
+    /// Active workers after the event.
+    pub to: usize,
+}
+
 /// Typed event stream over a training run.
 ///
 /// All methods default to no-ops so observers implement only what they
@@ -133,6 +150,10 @@ pub trait TrainObserver: Send {
     /// The TRUE network conditions changed since the previous recorded
     /// step (fires before that step's `on_step`).
     fn on_net_change(&mut self, _n: &NetChange) {}
+
+    /// The fleet's active membership changed since the previous recorded
+    /// step (fires before that step's `on_step`).
+    fn on_membership_change(&mut self, _m: &MembershipChange) {}
 }
 
 /// The recorder: a [`MetricsLog`] is itself an observer, so custom
@@ -229,6 +250,13 @@ impl TrainObserver for CsvSink {
             n.to.bw_gbps()
         ));
     }
+
+    fn on_membership_change(&mut self, m: &MembershipChange) {
+        self.write_line(&format!(
+            "# membership_change step={} epoch={:.4} active={}->{}",
+            m.step, m.epoch, m.from, m.to
+        ));
+    }
 }
 
 impl Drop for CsvSink {
@@ -301,6 +329,16 @@ impl TrainObserver for ProgressPrinter {
             n.to.alpha_ms(),
             n.from.bw_gbps(),
             n.to.bw_gbps()
+        );
+    }
+
+    fn on_membership_change(&mut self, m: &MembershipChange) {
+        println!(
+            "fleet  step {:>6}  active {} -> {}{}",
+            m.step,
+            m.from,
+            m.to,
+            if m.to > m.from { "  (join: catch-up charged)" } else { "" }
         );
     }
 }
@@ -385,6 +423,30 @@ mod tests {
         let bad = blocker.join("x.csv");
         assert!(CsvSink::create(bad.to_str().unwrap()).is_err());
         let _ = std::fs::remove_file(&blocker);
+    }
+
+    #[test]
+    fn csv_sink_tags_membership_changes() {
+        let path = std::env::temp_dir().join("flexcomm_csv_sink_membership.csv");
+        let path = path.to_str().unwrap().to_string();
+        {
+            let mut sink = CsvSink::create(&path).unwrap();
+            sink.on_step(&m(0));
+            sink.on_membership_change(&MembershipChange {
+                step: 1,
+                epoch: 0.1,
+                from: 1024,
+                to: 768,
+            });
+            sink.on_step(&m(1));
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert!(
+            lines[2].starts_with("# membership_change step=1") && lines[2].contains("1024->768"),
+            "{text}"
+        );
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

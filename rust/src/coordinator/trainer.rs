@@ -27,7 +27,8 @@ use crate::coordinator::controller::{
 };
 use crate::coordinator::metrics::{MetricsLog, StepMetrics};
 use crate::coordinator::observer::{
-    CrChange, EvalRecord, NetChange, StrategySwitch, SwitchDimension, TrainObserver,
+    CrChange, EvalRecord, MembershipChange, NetChange, StrategySwitch, SwitchDimension,
+    TrainObserver,
 };
 use crate::coordinator::strategy::{CommStrategy, ExchangeCtx, StepCtx};
 use crate::coordinator::worker::{ComputeModel, GradSource};
@@ -210,7 +211,14 @@ pub struct Trainer {
     pub(crate) clock: VirtualClock,
     pub(crate) metrics: MetricsLog,
     pub(crate) observers: Vec<Box<dyn TrainObserver>>,
-    pub(crate) rng: Rng,
+    /// Dedicated stream for [`ComputeModel`] jitter/straggler draws.
+    /// Formerly a shared trainer `Rng`: because compute was its only
+    /// consumer the old stream is retired outright, and the dedicated
+    /// seed guarantees NO future consumer can entangle its draws with
+    /// compute jitter — trajectories stay comparable across compute
+    /// configs (the jitter-decoupling contract, pinned in
+    /// rust/tests/determinism.rs).
+    pub(crate) compute_rng: Rng,
     pub(crate) step: u64,
     pub(crate) cur_cr: f64,
     /// The control plane (DESIGN.md §10): consulted once per recorded
@@ -230,6 +238,14 @@ pub struct Trainer {
     /// [`NetChange`] when the environment crosses a phase/episode
     /// boundary between recorded steps.
     last_net_link: Option<LinkParams>,
+    /// Active membership of the previous recorded step — fires
+    /// [`MembershipChange`] (and charges the scenario's declared catch-up
+    /// cost on growth) when a churn event lands between recorded steps.
+    last_active: Option<usize>,
+    /// Worst per-worker straggler slowdown observed by the latest step
+    /// (1.0 on straggler-free environments) — surfaced to controllers via
+    /// [`ControlCtx::straggler_factor`].
+    cur_straggler_factor: f64,
 }
 
 impl Trainer {
@@ -267,7 +283,7 @@ impl Trainer {
             clock: VirtualClock::new(),
             metrics: MetricsLog::default(),
             observers,
-            rng: Rng::new(cfg.seed ^ 0x7EA1),
+            compute_rng: Rng::new(cfg.seed ^ 0xC0317),
             step: 0,
             cur_cr,
             controller,
@@ -275,6 +291,8 @@ impl Trainer {
             explore_overhead_s: 0.0,
             last_collective: None,
             last_net_link: None,
+            last_active: None,
+            cur_straggler_factor: 1.0,
             params,
             cfg,
             source,
@@ -394,6 +412,8 @@ impl Trainer {
             model_bytes: self.model_bytes(),
             n_workers: self.cfg.n_workers,
             compressed: self.strategy.is_compressed(),
+            straggler_factor: self.cur_straggler_factor,
+            active_workers: self.last_active.unwrap_or(self.cfg.n_workers),
         });
         self.apply_decisions(decisions, controller.as_mut(), probed, 0);
         self.controller = controller;
@@ -499,7 +519,27 @@ impl Trainer {
         let base_topo = self.cfg.net.topology_at(epoch);
         let true_topo = self.scaled_topo(base_topo);
         let probed_topo = Topology { inter: probed, ..base_topo };
-        let t_compute = self.cfg.compute.step_time(n, &mut self.rng);
+        // Per-worker straggler slowdowns (pure fn of (worker, step) — the
+        // §7 thread-invariance contract): the synchronous step waits for
+        // the slowest straggler-scaled worker. 1.0 everywhere on
+        // straggler-free environments, where `t * 1.0 == t` keeps the
+        // trajectory bitwise identical to the homogeneous path.
+        let factors: Vec<f64> =
+            (0..n).map(|w| self.cfg.net.straggler_factor(w, self.step)).collect();
+        self.cur_straggler_factor = factors.iter().fold(1.0, |a: f64, &f| a.max(f));
+        let t_compute =
+            self.cfg.compute.step_time_stragglers(n, &mut self.compute_rng, |w| factors[w]);
+        // Elastic membership (churn environments): joins charge the
+        // scenario's declared catch-up cost to the step that observes
+        // them. Committed steps only — exploration timelines are rolled
+        // back and must not consume membership edges.
+        let active = self.cfg.net.active_workers_at(epoch, n);
+        let t_catchup = match (record, self.last_active) {
+            (true, Some(prev)) if active > prev => {
+                self.cfg.net.catchup_cost_at(epoch, self.model_bytes())
+            }
+            _ => 0.0,
+        };
 
         // Per-worker gradients (real computation — PJRT or host backprop),
         // concurrent across TrainConfig::threads. Each worker's shard is an
@@ -557,7 +597,13 @@ impl Trainer {
             loss,
             t_compute,
             t_comp,
-            t_sync: outcome.comm.seconds,
+            // `+ 0.0` is not bitwise-neutral for a `-0.0` sync time, so
+            // the catch-up charge is folded in only when one was declared.
+            t_sync: if t_catchup > 0.0 {
+                outcome.comm.seconds + t_catchup
+            } else {
+                outcome.comm.seconds
+            },
             collective: outcome.collective,
             cr: if self.strategy.is_compressed() { self.cur_cr } else { 1.0 },
             selected_rank: outcome.selected_rank,
@@ -580,6 +626,15 @@ impl Trainer {
                 }
             }
             self.last_net_link = Some(cur_link);
+            if let Some(prev) = self.last_active {
+                if prev != active {
+                    let ev = MembershipChange { step: m.step, epoch, from: prev, to: active };
+                    for o in self.observers.iter_mut() {
+                        o.on_membership_change(&ev);
+                    }
+                }
+            }
+            self.last_active = Some(active);
             if let Some(prev) = self.last_collective {
                 if prev != m.collective {
                     let ev = StrategySwitch {
@@ -932,11 +987,130 @@ mod tests {
         assert_eq!(t.step_count(), 5);
     }
 
-    /// `threads` plumbing: any explicit value yields a working trainer and
-    /// 0 resolves to the host parallelism (determinism across thread
-    /// counts is pinned end-to-end in rust/tests/determinism.rs).
+    /// The compute-RNG decoupling bugfix: jitter draws live on their own
+    /// seeded stream, so toggling compute jitter changes t_compute and
+    /// NOTHING else — loss/parameter trajectories stay bitwise identical.
     #[test]
-    fn explicit_thread_counts_train() {
+    fn compute_jitter_never_perturbs_the_trajectory() {
+        let mk = |jitter: f64| {
+            let mut cfg = quick_cfg(
+                Strategy::ArTopkFixed { policy: SelectionPolicy::Star, flavor: ArFlavor::Ring },
+                0.05,
+                30,
+            );
+            cfg.compute = if jitter > 0.0 {
+                ComputeModel::with_jitter(0.01, jitter)
+            } else {
+                ComputeModel::fixed(0.01)
+            };
+            let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(7)));
+            t.run();
+            t
+        };
+        let off = mk(0.0);
+        let on = mk(0.3);
+        assert_eq!(off.params, on.params, "jitter must not leak into numerics");
+        for (a, b) in off.metrics.steps.iter().zip(&on.metrics.steps) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "step {}", a.step);
+            assert_eq!(a.t_sync.to_bits(), b.t_sync.to_bits(), "step {}", a.step);
+        }
+        assert!(
+            off.metrics.steps.iter().zip(&on.metrics.steps).any(|(a, b)| a.t_compute
+                != b.t_compute),
+            "jitter must actually move t_compute"
+        );
+    }
+
+    /// StragglerTail stretches the synchronous-step critical path
+    /// (t_compute) without touching numerics or sync time.
+    #[test]
+    fn straggler_factors_stretch_t_compute_only() {
+        use crate::netsim::modifiers::StragglerTail;
+        let base = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0));
+        let mk = |straggle: bool| {
+            let mut cfg = quick_cfg(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, 30);
+            cfg.net = if straggle {
+                Box::new(StragglerTail::wrap(base.clone(), 0.5, 8.0, 7).unwrap())
+            } else {
+                Box::new(base.clone())
+            };
+            let mut t = Trainer::new(cfg, Box::new(HostMlp::default_preset(7)));
+            t.run();
+            t
+        };
+        let plain = mk(false);
+        let tail = mk(true);
+        assert_eq!(plain.params, tail.params, "stragglers are a time model, not a numeric one");
+        let stretched = tail
+            .metrics
+            .steps
+            .iter()
+            .filter(|m| m.t_compute > 0.01 + 1e-15)
+            .count();
+        assert!(stretched > 10, "p=0.5 over 4 workers stretches most steps: {stretched}");
+        for (a, b) in plain.metrics.steps.iter().zip(&tail.metrics.steps) {
+            assert_eq!(a.t_sync.to_bits(), b.t_sync.to_bits());
+            assert!(b.t_compute >= a.t_compute);
+        }
+    }
+
+    /// Churn wiring end-to-end: membership edges fire the observer event,
+    /// and the JOIN edge charges the declared catch-up cost into t_sync.
+    #[test]
+    fn churn_fires_membership_events_and_charges_catchup_on_joins() {
+        use crate::coordinator::observer::MembershipChange;
+        use crate::netsim::modifiers::Churn;
+        use std::sync::{Arc, Mutex};
+
+        struct Capture(Arc<Mutex<Vec<MembershipChange>>>);
+        impl TrainObserver for Capture {
+            fn on_membership_change(&mut self, m: &MembershipChange) {
+                self.0.lock().unwrap().push(*m);
+            }
+        }
+
+        // 20 steps/epoch: a quarter leaves at epoch 1, rejoins at epoch 2.
+        let base = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0));
+        let net = Churn::wrap(base, vec![(1.0, -0.25), (2.0, 0.25)], 1.0).unwrap();
+        let cfg = {
+            let mut c = quick_cfg(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, 50);
+            c.net = Box::new(net);
+            c
+        };
+        let events = Arc::new(Mutex::new(Vec::new()));
+        let pool = ThreadPool::auto(cfg.threads);
+        let strategy = crate::coordinator::strategy::instantiate(
+            cfg.strategy,
+            cfg.n_workers,
+            cfg.seed,
+            pool.clone(),
+        );
+        let controller = crate::coordinator::controller::default_stack(&cfg);
+        let mut t = Trainer::with_parts(
+            cfg,
+            Box::new(HostMlp::default_preset(7)),
+            strategy,
+            vec![Box::new(Capture(events.clone()))],
+            pool,
+            controller,
+        );
+        t.run();
+        let evs = events.lock().unwrap().clone();
+        assert_eq!(evs.len(), 2, "{evs:?}");
+        assert_eq!((evs[0].from, evs[0].to, evs[0].step), (4, 3, 20));
+        assert_eq!((evs[1].from, evs[1].to, evs[1].step), (3, 4, 40));
+        // Leaves are free; the join step pays α + M·β on top of its ring.
+        let sync = |s: usize| t.metrics.steps[s].t_sync;
+        assert_eq!(sync(20).to_bits(), sync(19).to_bits(), "a leave charges nothing");
+        let link = LinkParams::from_ms_gbps(4.0, 20.0);
+        let catchup = link.alpha + t.model_bytes() * link.beta;
+        assert!(
+            (sync(40) - (sync(39) + catchup)).abs() < 1e-12,
+            "join step {} vs {} + {catchup}",
+            sync(40),
+            sync(39)
+        );
+    }
         for threads in [1usize, 2, 7] {
             let mut cfg = quick_cfg(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, 5);
             cfg.threads = threads;

@@ -72,13 +72,27 @@ impl ComputeModel {
 
     /// Synchronous-step compute time: max over the N workers' draws.
     pub fn step_time(&self, n_workers: usize, rng: &mut Rng) -> f64 {
+        self.step_time_stragglers(n_workers, rng, |_| 1.0)
+    }
+
+    /// [`ComputeModel::step_time`] with an environment-supplied per-worker
+    /// slowdown factor (the [`NetworkModel::straggler_factor`](crate::netsim::model::NetworkModel::straggler_factor)
+    /// hook): each worker's draw is multiplied by `factor(worker)` before
+    /// the synchronous max. `factor = |_| 1.0` reproduces `step_time`
+    /// bitwise — the draw order is identical and `t * 1.0 == t` exactly.
+    pub fn step_time_stragglers(
+        &self,
+        n_workers: usize,
+        rng: &mut Rng,
+        factor: impl Fn(usize) -> f64,
+    ) -> f64 {
         let mut worst: f64 = 0.0;
-        for _ in 0..n_workers.max(1) {
+        for w in 0..n_workers.max(1) {
             let mut t = self.base * (1.0 + self.jitter * (2.0 * rng.f64() - 1.0));
             if self.straggler_prob > 0.0 && rng.f64() < self.straggler_prob {
                 t *= self.straggler_slowdown;
             }
-            worst = worst.max(t);
+            worst = worst.max(t * factor(w));
         }
         worst
     }
@@ -112,6 +126,24 @@ mod tests {
             let t = m.step_time(4, &mut rng);
             assert!(t >= 0.08 - 1e-12 && t <= 0.12 + 1e-12);
         }
+    }
+
+    #[test]
+    fn straggler_factors_scale_the_critical_path() {
+        // Unit factors reproduce step_time bitwise from the same stream...
+        let m = ComputeModel { base: 0.01, jitter: 0.3, straggler_prob: 0.2, straggler_slowdown: 4.0 };
+        let mut a = Rng::new(9);
+        let mut b = Rng::new(9);
+        for _ in 0..100 {
+            let plain = m.step_time(8, &mut a);
+            let unit = m.step_time_stragglers(8, &mut b, |_| 1.0);
+            assert_eq!(plain.to_bits(), unit.to_bits());
+        }
+        // ...and a single slow worker dominates the synchronous max.
+        let fixed = ComputeModel::fixed(0.01);
+        let mut rng = Rng::new(3);
+        let t = fixed.step_time_stragglers(8, &mut rng, |w| if w == 5 { 7.0 } else { 1.0 });
+        assert!((t - 0.07).abs() < 1e-15, "critical path {t}");
     }
 
     #[test]

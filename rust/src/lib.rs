@@ -40,9 +40,10 @@ pub mod prelude {
         AdaptiveConfig, ControlAction, ControlCtx, ControlDecision, Controller,
         ControllerError, GravacConfig, CONTROLLER_TABLE,
     };
+    pub use crate::coordinator::fleet::{FleetConfig, FleetReport, FleetSim};
     pub use crate::coordinator::observer::{
-        CrChange, CsvSink, EvalRecord, NetChange, ProgressPrinter, StrategySwitch,
-        SwitchDimension, TrainObserver,
+        CrChange, CsvSink, EvalRecord, MembershipChange, NetChange, ProgressPrinter,
+        StrategySwitch, SwitchDimension, TrainObserver,
     };
     pub use crate::coordinator::session::{
         ConfigError, Session, SessionBuilder, TrainReport,
@@ -54,7 +55,8 @@ pub mod prelude {
     pub use crate::netsim::cost_model::{self, LinkParams, Topology};
     pub use crate::netsim::model::{parse_spec, NetModelError, NetworkModel, NET_TABLE};
     pub use crate::netsim::modifiers::{
-        AsymmetricDegrade, CongestionEpisodes, Diurnal, Flapping, Jitter, TwoLevel,
+        AsymmetricDegrade, Churn, CongestionEpisodes, Diurnal, Flapping, HeterogeneousLinks,
+        Jitter, StragglerTail, TwoLevel,
     };
     pub use crate::netsim::schedule::NetSchedule;
     pub use crate::netsim::trace::{TraceModel, TracePoint};

@@ -60,9 +60,11 @@ fn print_usage() {
          modifiers:   --jitter F  --congestion P,FACTOR  --diurnal AMP,PERIOD\n\
                       --flap PERIOD,DOWN,FACTOR  --asym AMULT,BWDIV  --net-seed N\n\
          controllers: --controller {} (--adaptive = --controller moo)\n\
+         fleet mode:  --fleet-n N [--fleet-mbytes MB] (cost-only, 1024-16384 workers)\n\
          try:   flexcomm train --model host-mlp --strategy artopk-star --cr 0.01\n\
                 flexcomm train --strategy flexible --net c2-hostile --progress\n\
                 flexcomm train --strategy flexible --net c2 --controller gravac\n\
+                flexcomm train --fleet-n 4096 --net hetero --steps 100\n\
                 flexcomm cost --table1\n\
                 flexcomm schedule --name c2-congested",
         Strategy::names().collect::<Vec<_>>().join("|"),
@@ -185,6 +187,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         )?);
     }
 
+    // Fleet cost mode (DESIGN.md §11): `--fleet-n N` prices a full run
+    // for an N-worker fleet through the event-driven FleetSim instead of
+    // the numeric trainer — per-worker links, stragglers and churn priced
+    // honestly, no per-worker dense state, so 1024-16384 workers are fine.
+    let fleet_n = args.usize_or("fleet-n", cfgfile.int_or("train.fleet_n", 0) as usize)?;
+    if fleet_n > 0 {
+        return run_fleet(args, &cfgfile, fleet_n, steps, spe, seed, net);
+    }
+
     // Control plane (DESIGN.md §10): `--controller <name>` picks from the
     // CONTROLLER_TABLE registry; `--adaptive` remains the shorthand that
     // implies the `moo` controller via CrControl::Adaptive. For any
@@ -283,6 +294,67 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(path) = out {
         println!("wrote {path}");
     }
+    Ok(())
+}
+
+/// `flexcomm train --fleet-n N`: the event-driven fleet cost engine.
+/// Message size comes from `--fleet-mbytes` (a scalar — fleet mode never
+/// allocates gradient-shaped state), the CR from the usual `--cr`.
+fn run_fleet(
+    args: &Args,
+    cfgfile: &Config,
+    fleet_n: usize,
+    steps: u64,
+    spe: u64,
+    seed: u64,
+    net: Box<dyn NetworkModel>,
+) -> Result<()> {
+    use flexcomm::coordinator::fleet::{FleetConfig, FleetSim};
+    let scenario = net.describe();
+    let cfg = FleetConfig {
+        n_workers: fleet_n,
+        steps,
+        steps_per_epoch: spe.max(1),
+        model_bytes: args.f64_or("fleet-mbytes", 102.4)? * 1e6,
+        cr: args.f64_or("cr", cfgfile.float_or("compress.cr", 0.01))?,
+        net,
+        compute: ComputeModel::with_jitter(
+            args.f64_or("compute-ms", cfgfile.float_or("train.compute_ms", 20.0))? * 1e-3,
+            0.05,
+        ),
+        seed,
+    };
+    println!("flexcomm fleet: n={fleet_n} steps={steps} net={scenario}");
+    let r = FleetSim::new(cfg).run();
+    let mut tab = Table::new(["metric", "value"]);
+    tab.row(["network", &scenario]);
+    tab.row(["workers", &r.n_workers.to_string()]);
+    tab.row(["steps", &r.steps.to_string()]);
+    tab.row(["virtual time (s)", &format!("{:.2}", r.virtual_time_s)]);
+    tab.row(["  compute (s)", &format!("{:.2}", r.compute_s)]);
+    tab.row(["  sync (s)", &format!("{:.2}", r.comm_s)]);
+    tab.row(["  catch-up (s)", &format!("{:.2}", r.catchup_s)]);
+    tab.row(["membership changes", &r.membership_changes.to_string()]);
+    tab.row(["min active", &r.min_active.to_string()]);
+    tab.row(["stat efficiency", &format!("{:.4}", r.stat_efficiency)]);
+    tab.row(["est steps to parity", &format!("{:.1}", r.est_steps_to_parity)]);
+    tab.row(["straggler mean/max", &format!(
+        "{:.2} / {:.2}",
+        r.sampled_mean_straggler, r.sampled_max_straggler
+    )]);
+    tab.row(["slow-link share", &fmt_pct(r.slow_link_share)]);
+    for (name, count) in &r.collective_counts {
+        tab.row([&format!("steps via {name}"), &count.to_string()]);
+    }
+    tab.row(["peak state (f64 slots)", &r.peak_state_f64s.to_string()]);
+    tab.print();
+    // The O(n)-not-O(n*dim) contract, grep-able by scripts/verify.sh.
+    println!(
+        "fleet state: peak {} f64 slots for n={} (O(n) bound {})",
+        r.peak_state_f64s,
+        r.n_workers,
+        2 * r.n_workers + 64
+    );
     Ok(())
 }
 

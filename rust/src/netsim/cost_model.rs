@@ -299,6 +299,110 @@ pub fn optimal_dense_ar(l: LinkParams, m: f64, n: usize) -> &'static str {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Heterogeneous-fleet costs (ISSUE 7): each entry point takes ONE link per
+// worker (`links.len()` IS the cluster size) and prices every round of the
+// collective's communication pattern by the slowest link participating in
+// that round — a bulk-synchronous round finishes when its slowest pair does.
+// When all links coincide, each function returns the homogeneous closed form
+// above BITWISE (an explicit fast path, pinned by property tests), so the
+// default `worker_link_at == link_at` world is untouched to the last ulp.
+// ---------------------------------------------------------------------------
+
+/// True when every per-worker link equals the first — the homogeneous
+/// fast-path guard shared by the `hetero_*` entry points.
+pub fn links_coincide(links: &[LinkParams]) -> bool {
+    links.windows(2).all(|w| w[0] == w[1])
+}
+
+/// Componentwise-slowest link of a participant group: max α and max β —
+/// the conservative single-link stand-in for a group that must all finish
+/// (used for hierarchical node groups). Equals the common link when the
+/// group is homogeneous.
+pub fn slowest_link(links: &[LinkParams]) -> LinkParams {
+    assert!(!links.is_empty(), "slowest_link of an empty group");
+    links.iter().skip(1).fold(links[0], |acc, l| LinkParams {
+        alpha: acc.alpha.max(l.alpha),
+        beta: acc.beta.max(l.beta),
+    })
+}
+
+/// One bulk-synchronous round moving `bytes` per participant: the round
+/// completes when the slowest participant's transfer does.
+fn round_cost(links: &[LinkParams], bytes: f64) -> f64 {
+    links.iter().map(|l| l.alpha + bytes * l.beta).fold(0.0, f64::max)
+}
+
+/// Ring allreduce over per-worker links: all `2(N-1)` rounds involve every
+/// worker (each sends a chunk to its neighbor simultaneously), so every
+/// round is priced by the slowest worker moving `M/N` bytes. Reduces to
+/// [`ring_allreduce`] exactly when the links coincide.
+pub fn hetero_ring_allreduce(links: &[LinkParams], m: f64) -> f64 {
+    let n = links.len();
+    assert!(n >= 1, "ring over an empty fleet");
+    if n == 1 || links_coincide(links) {
+        return ring_allreduce(links[0], m, n);
+    }
+    2.0 * (n as f64 - 1.0) * round_cost(links, m / n as f64)
+}
+
+/// Recursive halving-doubling over per-worker links. The power-of-two core
+/// (`links[..prev_pow2(n)]`) exchanges pairwise every round with bytes
+/// halving per round, so each of the `2·log2(np)` rounds is priced by the
+/// slowest core link at that round's byte count; the non-power-of-two fold
+/// pairs each extra rank `np+i` with rank `i` moving the whole tensor, so
+/// the two fold rounds are priced by the slowest link among exactly those
+/// participants. Reduces to [`halving_doubling_allreduce`] exactly when
+/// the links coincide.
+pub fn hetero_halving_doubling_allreduce(links: &[LinkParams], m: f64) -> f64 {
+    let n = links.len();
+    assert!(n >= 1, "halving-doubling over an empty fleet");
+    if n == 1 {
+        return 0.0;
+    }
+    if links_coincide(links) {
+        return halving_doubling_allreduce(links[0], m, n);
+    }
+    let np = prev_pow2(n);
+    let extra = n - np;
+    let mut cost = 0.0;
+    if extra > 0 {
+        let mut fold: Vec<LinkParams> = links[np..].to_vec();
+        fold.extend_from_slice(&links[..extra]);
+        cost += 2.0 * round_cost(&fold, m);
+    }
+    let core = &links[..np];
+    let mut chunk = m;
+    for _ in 0..np.trailing_zeros() {
+        chunk /= 2.0;
+        cost += 2.0 * round_cost(core, chunk);
+    }
+    cost
+}
+
+/// Two-level hierarchical allreduce over per-worker INTER links: the intra
+/// phases ride the topology's (homogeneous, in-machine) `intra` link
+/// unchanged, while each node's inter-facing cost is that of its
+/// componentwise-slowest member ([`slowest_link`] — the leader cannot ship
+/// a group's contribution faster than its slowest reachable member), and
+/// the leader ring is priced per-round by [`hetero_ring_allreduce`].
+/// `links.len()` must tile `t.workers_per_node` evenly. Reduces to
+/// [`hierarchical_allreduce`] (with `inter = links[0]`) exactly when the
+/// links coincide.
+pub fn hetero_hierarchical_allreduce(t: Topology, links: &[LinkParams], m: f64) -> f64 {
+    let n = links.len();
+    assert!(n >= 1, "hierarchical over an empty fleet");
+    let w = t.workers_per_node.max(1);
+    if links_coincide(links) {
+        let t2 = Topology { inter: links[0], ..t };
+        return hierarchical_allreduce(t2, m, n);
+    }
+    let _ = t.nodes(n); // ragged fleets are rejected exactly like the closed form
+    let leaders: Vec<LinkParams> = links.chunks(w).map(slowest_link).collect();
+    2.0 * ceil_log2f(w) * (t.intra.alpha + m * t.intra.beta)
+        + hetero_ring_allreduce(&leaders, m)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -589,5 +693,149 @@ mod tests {
                 format!("hierarchical: cost({m1}) = {h1} > cost({m2}) = {h2} at n={n}, wpn={wpn}"),
             )
         });
+    }
+
+    /// ISSUE 7 pin, exact-reduction half: with identical per-worker links
+    /// every heterogeneous entry point returns the homogeneous closed form
+    /// BITWISE — the fast path is the closed form, so the default
+    /// `worker_link_at == link_at` world cannot drift by even an ulp.
+    #[test]
+    fn hetero_costs_reduce_bitwise_to_homogeneous_closed_forms() {
+        check("hetero == homogeneous when links coincide", 400, |g| {
+            let p = l(g.f64_in(0.01, 100.0), g.f64_in(0.1, 100.0));
+            let m = g.f64_in(1e4, 1e9);
+            let n = g.usize_in(1, 64);
+            let links = vec![p; n];
+            ensure(
+                hetero_ring_allreduce(&links, m).to_bits()
+                    == ring_allreduce(p, m, n).to_bits(),
+                format!("ring n={n}"),
+            )?;
+            ensure(
+                hetero_halving_doubling_allreduce(&links, m).to_bits()
+                    == halving_doubling_allreduce(p, m, n).to_bits(),
+                format!("hd n={n}"),
+            )?;
+            let wpn = *g.choose(&[1usize, 2, 4]);
+            let nh = wpn * g.usize_in(1, 16);
+            let t = Topology::two_level(l(g.f64_in(0.0, 1.0), g.f64_in(1.0, 200.0)), p, wpn);
+            ensure(
+                hetero_hierarchical_allreduce(t, &vec![p; nh], m).to_bits()
+                    == hierarchical_allreduce(t, m, nh).to_bits(),
+                format!("hier n={nh} wpn={wpn}"),
+            )
+        });
+    }
+
+    /// ISSUE 7 pin, monotonicity half: degrading any SINGLE worker's link
+    /// (α and/or bandwidth by a factor >= 1) can never make any
+    /// heterogeneous collective cheaper — a slower participant can only
+    /// stretch the rounds it takes part in.
+    #[test]
+    fn hetero_costs_monotone_in_any_single_link_degradation() {
+        check("hetero cost monotone under one-link degrade", 400, |g| {
+            let m = g.f64_in(1e4, 1e9);
+            let nodes = g.usize_in(1, 16);
+            let wpn = *g.choose(&[1usize, 2, 4]);
+            let n = (nodes * wpn).max(2);
+            let mut links: Vec<LinkParams> =
+                (0..n).map(|_| l(g.f64_in(0.01, 50.0), g.f64_in(0.5, 50.0))).collect();
+            let before_ring = hetero_ring_allreduce(&links, m);
+            let before_hd = hetero_halving_doubling_allreduce(&links, m);
+            let t = Topology::two_level(l(0.01, 100.0), links[0], wpn);
+            let before_hier = if n % wpn == 0 {
+                Some(hetero_hierarchical_allreduce(t, &links, m))
+            } else {
+                None
+            };
+            let i = g.usize_in(0, n - 1);
+            let fa = g.f64_in(1.0, 16.0);
+            let fb = g.f64_in(1.0, 16.0);
+            links[i].alpha *= fa;
+            links[i].beta *= fb;
+            let tol = 1e-12;
+            ensure(
+                hetero_ring_allreduce(&links, m) >= before_ring * (1.0 - tol),
+                format!("ring regressed after degrading link {i} of {n}"),
+            )?;
+            ensure(
+                hetero_halving_doubling_allreduce(&links, m) >= before_hd * (1.0 - tol),
+                format!("hd regressed after degrading link {i} of {n}"),
+            )?;
+            if let Some(b) = before_hier {
+                ensure(
+                    hetero_hierarchical_allreduce(t, &links, m) >= b * (1.0 - tol),
+                    format!("hier regressed after degrading link {i} of {n} (wpn={wpn})"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// A single slow worker dominates the ring: every round waits for it.
+    #[test]
+    fn hetero_ring_waits_for_the_slowest_worker() {
+        let fast = l(1.0, 25.0);
+        let slow = l(8.0, 3.0);
+        let mut links = vec![fast; 8];
+        links[5] = slow;
+        let m = 4e8;
+        let got = hetero_ring_allreduce(&links, m);
+        let want = 2.0 * 7.0 * (slow.alpha + (m / 8.0) * slow.beta);
+        assert!((got - want).abs() < 1e-12, "{got} vs {want}");
+        // And it exceeds the all-fast fleet strictly.
+        assert!(got > hetero_ring_allreduce(&vec![fast; 8], m));
+    }
+
+    /// The hetero HD fold rounds only pay for the folded participants:
+    /// degrading a CORE-only link must not change the fold cost share,
+    /// while degrading an extra rank's link must.
+    #[test]
+    fn hetero_hd_fold_prices_only_its_participants() {
+        let fast = l(1.0, 25.0);
+        let slow = l(20.0, 1.0);
+        let m = 4e8;
+        // n = 6: core = ranks 0..4, extras = ranks 4..6 folding into 0..2.
+        let mut core_slow = vec![fast; 6];
+        core_slow[3] = slow; // core-only rank (not a fold participant)
+        let mut extra_slow = vec![fast; 6];
+        extra_slow[4] = slow; // fold participant
+        let base = hetero_halving_doubling_allreduce(&vec![fast; 6], m);
+        let with_core = hetero_halving_doubling_allreduce(&core_slow, m);
+        let with_extra = hetero_halving_doubling_allreduce(&extra_slow, m);
+        // Core-rank degrade stretches only the 2·log2(4) core rounds.
+        let core_round_delta = with_core - base;
+        let core_expect: f64 = [m / 2.0, m / 4.0]
+            .iter()
+            .map(|b| 2.0 * ((slow.alpha + b * slow.beta) - (fast.alpha + b * fast.beta)))
+            .sum();
+        assert!((core_round_delta - core_expect).abs() < 1e-9, "{core_round_delta}");
+        // Extra-rank degrade stretches only the two fold rounds.
+        let fold_delta = with_extra - base;
+        let fold_expect = 2.0 * ((slow.alpha + m * slow.beta) - (fast.alpha + m * fast.beta));
+        assert!((fold_delta - fold_expect).abs() < 1e-9, "{fold_delta}");
+    }
+
+    /// Hierarchical groups: a slow member slows ITS node's inter ring slot
+    /// via the componentwise-slowest leader link.
+    #[test]
+    fn hetero_hierarchical_groups_by_slowest_member() {
+        let fast = l(1.0, 25.0);
+        let slow = l(10.0, 2.0);
+        let intra = l(0.01, 100.0);
+        let t = Topology::two_level(intra, fast, 4);
+        let m = 4e8;
+        let mut links = vec![fast; 8];
+        links[6] = slow; // second node carries the slow member
+        let got = hetero_hierarchical_allreduce(t, &links, m);
+        let leaders = [fast, slowest_link(&[fast, fast, slow, fast])];
+        let want = 2.0 * 2.0 * (intra.alpha + m * intra.beta)
+            + hetero_ring_allreduce(&leaders, m);
+        assert!((got - want).abs() < 1e-9, "{got} vs {want}");
+        assert_eq!(slowest_link(&[fast, slow]), LinkParams {
+            alpha: slow.alpha.max(fast.alpha),
+            beta: slow.beta.max(fast.beta),
+        });
+        assert!(links_coincide(&[fast, fast]) && !links_coincide(&links));
     }
 }

@@ -23,7 +23,8 @@
 
 use crate::netsim::cost_model::{LinkParams, Topology};
 use crate::netsim::modifiers::{
-    AsymmetricDegrade, CongestionEpisodes, Diurnal, Flapping, Jitter,
+    AsymmetricDegrade, Churn, CongestionEpisodes, Diurnal, Flapping, HeterogeneousLinks,
+    Jitter, StragglerTail,
 };
 use crate::netsim::schedule::NetSchedule;
 use crate::netsim::trace::TraceModel;
@@ -45,6 +46,46 @@ pub trait NetworkModel: fmt::Debug + Send + Sync {
     /// single-link cluster riding [`NetworkModel::link_at`].
     fn topology_at(&self, epoch: f64) -> Topology {
         Topology::flat(self.link_at(epoch))
+    }
+
+    /// Effective link of ONE specific worker at a fractional epoch.
+    ///
+    /// Defaults to the fleet-shared [`NetworkModel::link_at`], so every
+    /// pre-existing model is a homogeneous fleet and replays bitwise
+    /// identically. Heterogeneous environments (fast/slow mixes) override
+    /// this per worker id; like `link_at` it must be a pure function of
+    /// `(self, worker, epoch)`.
+    fn worker_link_at(&self, worker: usize, epoch: f64) -> LinkParams {
+        let _ = worker;
+        self.link_at(epoch)
+    }
+
+    /// Multiplicative tail-latency factor (>= 1) on worker `worker`'s
+    /// compute time at `step`. Defaults to 1 (no stragglers). Must be a
+    /// pure function of `(self, worker, step)` — never of the thread
+    /// schedule — so the §7 thread-invariance contract extends to
+    /// straggler fleets.
+    fn straggler_factor(&self, worker: usize, step: u64) -> f64 {
+        let _ = (worker, step);
+        1.0
+    }
+
+    /// Live workers at a fractional epoch out of a configured fleet of
+    /// `n`. Defaults to `n` (fixed membership). Implementations clamp to
+    /// `[1, n]`: the numeric engine sizes per-worker state for `n` up
+    /// front, so churn can idle workers but never mint new ones.
+    fn active_workers_at(&self, epoch: f64, n: usize) -> usize {
+        let _ = epoch;
+        n
+    }
+
+    /// Declared parameter catch-up cost (simulated seconds) charged when
+    /// the engine observes a membership GROWTH at `epoch` — a joiner must
+    /// stream the current `model_bytes` before it contributes. Defaults
+    /// to free (no churn). Leave events declare no catch-up.
+    fn catchup_cost_at(&self, epoch: f64, model_bytes: f64) -> f64 {
+        let _ = (epoch, model_bytes);
+        0.0
     }
 
     /// Short base name (registry/CLI identity of the underlying scenario).
@@ -78,6 +119,22 @@ impl NetworkModel for Box<dyn NetworkModel> {
 
     fn topology_at(&self, epoch: f64) -> Topology {
         (**self).topology_at(epoch)
+    }
+
+    fn worker_link_at(&self, worker: usize, epoch: f64) -> LinkParams {
+        (**self).worker_link_at(worker, epoch)
+    }
+
+    fn straggler_factor(&self, worker: usize, step: u64) -> f64 {
+        (**self).straggler_factor(worker, step)
+    }
+
+    fn active_workers_at(&self, epoch: f64, n: usize) -> usize {
+        (**self).active_workers_at(epoch, n)
+    }
+
+    fn catchup_cost_at(&self, epoch: f64, model_bytes: f64) -> f64 {
+        (**self).catchup_cost_at(epoch, model_bytes)
     }
 
     fn name(&self) -> &str {
@@ -229,6 +286,33 @@ pub const NET_TABLE: &[NetScenario] = &[
             Box::new(AsymmetricDegrade::wrap(base, 50.0, 1.0).expect("registry params valid"))
         },
     },
+    NetScenario {
+        name: "straggler",
+        summary: "10% per-(worker,step) chance of a compute tail up to 8x (Agarwal-style)",
+        build: |_| {
+            let base = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0));
+            Box::new(StragglerTail::wrap(base, 0.1, 8.0, 21).expect("registry params valid"))
+        },
+    },
+    NetScenario {
+        name: "hetero",
+        summary: "per-worker links: 25% of the fleet rides an 8x-degraded path",
+        build: |_| {
+            let base = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0));
+            Box::new(
+                HeterogeneousLinks::wrap(base, 0.25, 8.0, 22).expect("registry params valid"),
+            )
+        },
+    },
+    NetScenario {
+        name: "churn",
+        summary: "elastic fleet: -25% at 1/4-run, -12.5% at mid-run, rejoin at 3/4",
+        build: |e| {
+            let base = NetSchedule::static_link(LinkParams::from_ms_gbps(4.0, 20.0));
+            let events = vec![(e * 0.25, -0.25), (e * 0.5, -0.125), (e * 0.75, 0.375)];
+            Box::new(Churn::wrap(base, events, 1.0).expect("registry params valid"))
+        },
+    },
 ];
 
 /// Every registered scenario name, in table order (usage/help text).
@@ -314,5 +398,52 @@ mod tests {
                 assert_eq!(la, lb, "{} at {e}", s.name);
             }
         }
+    }
+
+    /// The fleet hooks ship with homogeneous defaults: every scenario that
+    /// does not opt into heterogeneity/churn must report per-worker links
+    /// bitwise equal to the shared link, unit straggler factors and fixed
+    /// membership — that is the "pre-existing trajectories are untouched"
+    /// half of the ISSUE 7 contract. The three fleet scenarios must be
+    /// deterministic per (worker, step/epoch) and clamp membership sanely.
+    #[test]
+    fn fleet_hooks_default_homogeneous_and_stay_deterministic() {
+        let fleet = ["straggler", "hetero", "churn"];
+        for s in NET_TABLE {
+            let m = (s.build)(50.0);
+            let twin = (s.build)(50.0);
+            for e in [0.0, 12.5, 49.9] {
+                for w in [0usize, 3, 17, 1023] {
+                    assert_eq!(
+                        m.worker_link_at(w, e),
+                        twin.worker_link_at(w, e),
+                        "{} worker {w} at {e}",
+                        s.name
+                    );
+                    let f = m.straggler_factor(w, 7);
+                    assert!(f >= 1.0 && f.is_finite(), "{} factor {f}", s.name);
+                    assert_eq!(f, twin.straggler_factor(w, 7), "{}", s.name);
+                    if !fleet.contains(&s.name) {
+                        assert_eq!(m.worker_link_at(w, e), m.link_at(e), "{}", s.name);
+                        assert_eq!(f, 1.0, "{}", s.name);
+                    }
+                }
+                let n = m.active_workers_at(e, 1024);
+                assert!((1..=1024).contains(&n), "{} active {n}", s.name);
+                if !fleet.contains(&s.name) {
+                    assert_eq!(n, 1024, "{}", s.name);
+                    assert_eq!(m.catchup_cost_at(e, 1e8), 0.0, "{}", s.name);
+                }
+                assert!(m.catchup_cost_at(e, 1e8) >= 0.0, "{}", s.name);
+            }
+        }
+        // The fleet rows actually move their respective hooks.
+        let het = build_scenario("hetero", 50.0).unwrap();
+        assert!((0..64).any(|w| het.worker_link_at(w, 1.0) != het.link_at(1.0)));
+        let st = build_scenario("straggler", 50.0).unwrap();
+        assert!((0..64).any(|w| st.straggler_factor(w, 3) > 1.0));
+        let ch = build_scenario("churn", 50.0).unwrap();
+        assert!(ch.active_workers_at(20.0, 1024) < 1024);
+        assert_eq!(ch.active_workers_at(0.0, 1024), 1024);
     }
 }

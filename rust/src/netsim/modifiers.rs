@@ -29,6 +29,21 @@ fn bucket_rng(seed: u64, epoch: f64) -> Rng {
     Rng::new(seed ^ bucket.wrapping_mul(0x9E37_79B9_7F4A_7C15))
 }
 
+/// Per-worker RNG for draws that must be a pure function of worker id
+/// (fast/slow fleet splits). The odd multiplier decorrelates adjacent ids.
+fn worker_rng(seed: u64, worker: usize) -> Rng {
+    Rng::new(seed ^ (worker as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F))
+}
+
+/// Per-(worker, step) RNG for draws that must be a pure function of both
+/// (straggler tails) — NOT of thread schedule, preserving DESIGN.md §7.
+fn worker_step_rng(seed: u64, worker: usize, step: u64) -> Rng {
+    Rng::new(
+        seed ^ (worker as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F)
+            ^ step.wrapping_mul(0xE703_7ED1_A0B4_28DB),
+    )
+}
+
 fn bad(modifier: &'static str, reason: String) -> NetModelError {
     NetModelError::BadModifier { modifier, reason }
 }
@@ -44,6 +59,26 @@ macro_rules! impl_inter_modifier {
                 let mut t = self.inner.topology_at(epoch);
                 t.inter = self.perturb(t.inter, epoch);
                 t
+            }
+
+            // Fleet hooks pass through the stack so e.g. Jitter can wrap a
+            // HeterogeneousLinks fleet without flattening it. On a
+            // homogeneous inner model `worker_link_at == link_at` bitwise,
+            // because the same perturbation hits the same inner link.
+            fn worker_link_at(&self, worker: usize, epoch: f64) -> LinkParams {
+                self.perturb(self.inner.worker_link_at(worker, epoch), epoch)
+            }
+
+            fn straggler_factor(&self, worker: usize, step: u64) -> f64 {
+                self.inner.straggler_factor(worker, step)
+            }
+
+            fn active_workers_at(&self, epoch: f64, n: usize) -> usize {
+                self.inner.active_workers_at(epoch, n)
+            }
+
+            fn catchup_cost_at(&self, epoch: f64, model_bytes: f64) -> f64 {
+                self.inner.catchup_cost_at(epoch, model_bytes)
             }
 
             fn name(&self) -> &str {
@@ -324,12 +359,299 @@ impl NetworkModel for TwoLevel {
         }
     }
 
+    fn worker_link_at(&self, worker: usize, epoch: f64) -> LinkParams {
+        self.inner.worker_link_at(worker, epoch)
+    }
+
+    fn straggler_factor(&self, worker: usize, step: u64) -> f64 {
+        self.inner.straggler_factor(worker, step)
+    }
+
+    fn active_workers_at(&self, epoch: f64, n: usize) -> usize {
+        self.inner.active_workers_at(epoch, n)
+    }
+
+    fn catchup_cost_at(&self, epoch: f64, model_bytes: f64) -> f64 {
+        self.inner.catchup_cost_at(epoch, model_bytes)
+    }
+
     fn name(&self) -> &str {
         self.inner.name()
     }
 
     fn describe(&self) -> String {
         format!("{}+2level(x{})", self.inner.describe(), self.workers_per_node)
+    }
+
+    fn clone_model(&self) -> Box<dyn NetworkModel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Heterogeneous fleet links: a deterministic `slow_frac` share of workers
+/// (keyed by worker id + seed, stable across the whole run) rides a
+/// `degrade`-times-worse path — α multiplied, bandwidth divided. The
+/// fleet-shared `link_at` stays the inner model's backbone view (that is
+/// what the probe measures and what homogeneous fast paths price), so
+/// every consumer that never asks per-worker is untouched bitwise.
+#[derive(Debug, Clone)]
+pub struct HeterogeneousLinks {
+    inner: Box<dyn NetworkModel>,
+    slow_frac: f64,
+    degrade: f64,
+    seed: u64,
+}
+
+impl HeterogeneousLinks {
+    /// `slow_frac` in `[0, 1]`, `degrade >= 1`.
+    pub fn wrap(
+        inner: impl NetworkModel + 'static,
+        slow_frac: f64,
+        degrade: f64,
+        seed: u64,
+    ) -> Result<HeterogeneousLinks, NetModelError> {
+        if !(0.0..=1.0).contains(&slow_frac) {
+            return Err(bad("hetero", format!("slow_frac {slow_frac} outside [0, 1]")));
+        }
+        if degrade.is_nan() || degrade < 1.0 {
+            return Err(bad("hetero", format!("degrade {degrade} must be >= 1")));
+        }
+        Ok(HeterogeneousLinks { inner: Box::new(inner), slow_frac, degrade, seed })
+    }
+
+    /// True when `worker` is on the degraded path — a pure function of
+    /// (seed, worker), so the fast/slow split never moves mid-run.
+    pub fn is_slow(&self, worker: usize) -> bool {
+        worker_rng(self.seed, worker).f64() < self.slow_frac
+    }
+
+    fn suffix(&self) -> String {
+        format!("hetero({},{})", self.slow_frac, self.degrade)
+    }
+}
+
+impl NetworkModel for HeterogeneousLinks {
+    fn link_at(&self, epoch: f64) -> LinkParams {
+        self.inner.link_at(epoch)
+    }
+
+    fn topology_at(&self, epoch: f64) -> Topology {
+        self.inner.topology_at(epoch)
+    }
+
+    fn worker_link_at(&self, worker: usize, epoch: f64) -> LinkParams {
+        let mut l = self.inner.worker_link_at(worker, epoch);
+        if self.is_slow(worker) {
+            l.alpha *= self.degrade;
+            l.beta *= self.degrade; // bandwidth ÷ d  ⇔  β × d
+        }
+        l
+    }
+
+    fn straggler_factor(&self, worker: usize, step: u64) -> f64 {
+        self.inner.straggler_factor(worker, step)
+    }
+
+    fn active_workers_at(&self, epoch: f64, n: usize) -> usize {
+        self.inner.active_workers_at(epoch, n)
+    }
+
+    fn catchup_cost_at(&self, epoch: f64, model_bytes: f64) -> f64 {
+        self.inner.catchup_cost_at(epoch, model_bytes)
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn describe(&self) -> String {
+        format!("{}+{}", self.inner.describe(), self.suffix())
+    }
+
+    fn clone_model(&self) -> Box<dyn NetworkModel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Straggler tail on compute: with probability `prob` per (worker, step),
+/// that worker's compute time stretches by a uniform draw in
+/// `[1, slowdown]` — the tail-latency distribution Agarwal et al. show
+/// inverts compression speedup claims. A pure function of
+/// `(worker, step, seed)`, composing multiplicatively over any inner
+/// straggler source; links are untouched.
+#[derive(Debug, Clone)]
+pub struct StragglerTail {
+    inner: Box<dyn NetworkModel>,
+    prob: f64,
+    slowdown: f64,
+    seed: u64,
+}
+
+impl StragglerTail {
+    /// `prob` in `[0, 1]`, `slowdown >= 1`.
+    pub fn wrap(
+        inner: impl NetworkModel + 'static,
+        prob: f64,
+        slowdown: f64,
+        seed: u64,
+    ) -> Result<StragglerTail, NetModelError> {
+        if !(0.0..=1.0).contains(&prob) {
+            return Err(bad("straggler", format!("prob {prob} outside [0, 1]")));
+        }
+        if slowdown.is_nan() || slowdown < 1.0 {
+            return Err(bad("straggler", format!("slowdown {slowdown} must be >= 1")));
+        }
+        Ok(StragglerTail { inner: Box::new(inner), prob, slowdown, seed })
+    }
+
+    /// This wrapper's own factor (before composing with the inner model).
+    pub fn factor(&self, worker: usize, step: u64) -> f64 {
+        if self.prob == 0.0 {
+            return 1.0;
+        }
+        let mut rng = worker_step_rng(self.seed, worker, step);
+        if rng.f64() < self.prob {
+            1.0 + rng.f64() * (self.slowdown - 1.0)
+        } else {
+            1.0
+        }
+    }
+
+    fn suffix(&self) -> String {
+        format!("straggler({},{})", self.prob, self.slowdown)
+    }
+}
+
+impl NetworkModel for StragglerTail {
+    fn link_at(&self, epoch: f64) -> LinkParams {
+        self.inner.link_at(epoch)
+    }
+
+    fn topology_at(&self, epoch: f64) -> Topology {
+        self.inner.topology_at(epoch)
+    }
+
+    fn worker_link_at(&self, worker: usize, epoch: f64) -> LinkParams {
+        self.inner.worker_link_at(worker, epoch)
+    }
+
+    fn straggler_factor(&self, worker: usize, step: u64) -> f64 {
+        self.factor(worker, step) * self.inner.straggler_factor(worker, step)
+    }
+
+    fn active_workers_at(&self, epoch: f64, n: usize) -> usize {
+        self.inner.active_workers_at(epoch, n)
+    }
+
+    fn catchup_cost_at(&self, epoch: f64, model_bytes: f64) -> f64 {
+        self.inner.catchup_cost_at(epoch, model_bytes)
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn describe(&self) -> String {
+        format!("{}+{}", self.inner.describe(), self.suffix())
+    }
+
+    fn clone_model(&self) -> Box<dyn NetworkModel> {
+        Box::new(self.clone())
+    }
+}
+
+/// Elastic membership: a schedule of `(epoch, frac)` events, each shifting
+/// the live-worker count by `frac` of the configured fleet (negative =
+/// leave, positive = join). The count is clamped to `[1, n]` — the numeric
+/// engine sizes per-worker state up front, so churn idles workers rather
+/// than minting new ones. A join declares a catch-up cost: the joiner
+/// streams the current model over the link at the event's epoch,
+/// `catchup_factor × (α + M·β)` — charged once per observed growth by
+/// whichever engine notices the membership edge.
+#[derive(Debug, Clone)]
+pub struct Churn {
+    inner: Box<dyn NetworkModel>,
+    events: Vec<(f64, f64)>,
+    catchup_factor: f64,
+}
+
+impl Churn {
+    /// `events` non-empty with finite, strictly increasing, non-negative
+    /// epochs and finite non-zero fractions; `catchup_factor >= 0`.
+    pub fn wrap(
+        inner: impl NetworkModel + 'static,
+        events: Vec<(f64, f64)>,
+        catchup_factor: f64,
+    ) -> Result<Churn, NetModelError> {
+        if events.is_empty() {
+            return Err(bad("churn", "no membership events".into()));
+        }
+        let mut prev = f64::NEG_INFINITY;
+        for &(e, d) in &events {
+            if !e.is_finite() || e < 0.0 {
+                return Err(bad("churn", format!("event epoch {e} must be finite >= 0")));
+            }
+            if e <= prev {
+                return Err(bad("churn", format!("event epochs must strictly increase at {e}")));
+            }
+            if !d.is_finite() || d == 0.0 {
+                return Err(bad("churn", format!("event frac {d} must be finite nonzero")));
+            }
+            prev = e;
+        }
+        if catchup_factor.is_nan() || catchup_factor < 0.0 {
+            return Err(bad("churn", format!("catchup_factor {catchup_factor} must be >= 0")));
+        }
+        Ok(Churn { inner: Box::new(inner), events, catchup_factor })
+    }
+
+    fn suffix(&self) -> String {
+        format!("churn({}ev,x{})", self.events.len(), self.catchup_factor)
+    }
+}
+
+impl NetworkModel for Churn {
+    fn link_at(&self, epoch: f64) -> LinkParams {
+        self.inner.link_at(epoch)
+    }
+
+    fn topology_at(&self, epoch: f64) -> Topology {
+        self.inner.topology_at(epoch)
+    }
+
+    fn worker_link_at(&self, worker: usize, epoch: f64) -> LinkParams {
+        self.inner.worker_link_at(worker, epoch)
+    }
+
+    fn straggler_factor(&self, worker: usize, step: u64) -> f64 {
+        self.inner.straggler_factor(worker, step)
+    }
+
+    fn active_workers_at(&self, epoch: f64, n: usize) -> usize {
+        let base = self.inner.active_workers_at(epoch, n);
+        let cum: f64 =
+            self.events.iter().filter(|(e, _)| *e <= epoch).map(|(_, d)| d).sum();
+        let scaled = (base as f64 * (1.0 + cum).max(0.0)).round() as usize;
+        scaled.clamp(1, base)
+    }
+
+    fn catchup_cost_at(&self, epoch: f64, model_bytes: f64) -> f64 {
+        match self.events.iter().rev().find(|(e, _)| *e <= epoch) {
+            Some(&(_, d)) if d > 0.0 => {
+                let l = self.inner.link_at(epoch);
+                self.catchup_factor * (l.alpha + model_bytes * l.beta)
+                    + self.inner.catchup_cost_at(epoch, model_bytes)
+            }
+            _ => self.inner.catchup_cost_at(epoch, model_bytes),
+        }
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+
+    fn describe(&self) -> String {
+        format!("{}+{}", self.inner.describe(), self.suffix())
     }
 
     fn clone_model(&self) -> Box<dyn NetworkModel> {
@@ -548,5 +870,135 @@ mod tests {
         assert!(Flapping::wrap(base(), 1.0, 0.3, 0.9).is_err());
         assert!(AsymmetricDegrade::wrap(base(), 0.5, 1.0).is_err());
         assert!(TwoLevel::wrap(base(), LinkParams::from_ms_gbps(0.01, 100.0), 0).is_err());
+        assert!(matches!(
+            HeterogeneousLinks::wrap(base(), 1.5, 2.0, 0),
+            Err(NetModelError::BadModifier { modifier: "hetero", .. })
+        ));
+        assert!(HeterogeneousLinks::wrap(base(), 0.5, 0.9, 0).is_err());
+        assert!(matches!(
+            StragglerTail::wrap(base(), -0.1, 2.0, 0),
+            Err(NetModelError::BadModifier { modifier: "straggler", .. })
+        ));
+        assert!(StragglerTail::wrap(base(), 0.1, 0.5, 0).is_err());
+        assert!(matches!(
+            Churn::wrap(base(), vec![], 1.0),
+            Err(NetModelError::BadModifier { modifier: "churn", .. })
+        ));
+        assert!(Churn::wrap(base(), vec![(1.0, -0.2), (1.0, 0.2)], 1.0).is_err());
+        assert!(Churn::wrap(base(), vec![(1.0, 0.0)], 1.0).is_err());
+        assert!(Churn::wrap(base(), vec![(-1.0, 0.2)], 1.0).is_err());
+        assert!(Churn::wrap(base(), vec![(1.0, 0.2)], -1.0).is_err());
+    }
+
+    #[test]
+    fn hetero_splits_the_fleet_deterministically_and_leaves_link_at_alone() {
+        let h = HeterogeneousLinks::wrap(base(), 0.25, 8.0, 22).unwrap();
+        let shared = h.link_at(3.0);
+        assert_eq!(shared, base().at(3.0), "backbone view untouched");
+        let n = 1024;
+        let mut slow = 0;
+        for w in 0..n {
+            let l = h.worker_link_at(w, 3.0);
+            assert_eq!(h.is_slow(w), l != shared, "worker {w}");
+            if h.is_slow(w) {
+                slow += 1;
+                assert!((l.alpha / shared.alpha - 8.0).abs() < 1e-12);
+                assert!((l.beta / shared.beta - 8.0).abs() < 1e-12);
+            } else {
+                assert_eq!(l, shared);
+            }
+            // Stable across epochs: the split is keyed by id, not time.
+            assert_eq!(h.is_slow(w), h.worker_link_at(w, 40.0) != h.link_at(40.0));
+        }
+        let frac = slow as f64 / n as f64;
+        assert!((frac - 0.25).abs() < 0.05, "slow share {frac}");
+    }
+
+    #[test]
+    fn straggler_tail_is_pure_bounded_and_hits_its_rate() {
+        check("straggler factor pure + bounded", 200, |g| {
+            let prob = g.f64_in(0.0, 1.0);
+            let slow = g.f64_in(1.0, 16.0);
+            let seed = g.rng.next_u64();
+            let s = StragglerTail::wrap(base(), prob, slow, seed).unwrap();
+            let w = g.usize_in(0, 4096);
+            let step = g.usize_in(0, 10_000) as u64;
+            let f = s.straggler_factor(w, step);
+            ensure(
+                f >= 1.0 && f <= slow + 1e-12 && f == s.straggler_factor(w, step),
+                format!("factor {f} for prob {prob} slow {slow}"),
+            )
+        });
+        let s = StragglerTail::wrap(base(), 0.1, 8.0, 21).unwrap();
+        let mut hits = 0;
+        let trials = 4000;
+        for w in 0..200 {
+            for step in 0..(trials / 200) {
+                if s.straggler_factor(w, step) > 1.0 {
+                    hits += 1;
+                }
+            }
+        }
+        let rate = hits as f64 / trials as f64;
+        assert!((rate - 0.1).abs() < 0.03, "straggler rate {rate}");
+        // Links and topology are untouched.
+        assert_eq!(s.link_at(2.0), base().at(2.0));
+        assert_eq!(s.worker_link_at(7, 2.0), base().at(2.0));
+    }
+
+    #[test]
+    fn churn_walks_its_schedule_and_declares_catchup_on_joins_only() {
+        let events = vec![(5.0, -0.25), (10.0, -0.125), (15.0, 0.375)];
+        let c = Churn::wrap(base(), events, 1.0).unwrap();
+        let n = 1024;
+        assert_eq!(c.active_workers_at(0.0, n), 1024);
+        assert_eq!(c.active_workers_at(5.0, n), 768);
+        assert_eq!(c.active_workers_at(12.0, n), 640);
+        assert_eq!(c.active_workers_at(20.0, n), 1024);
+        // Clamped to >= 1 even if the schedule would empty the fleet.
+        let drain = Churn::wrap(base(), vec![(1.0, -2.0)], 0.0).unwrap();
+        assert_eq!(drain.active_workers_at(2.0, 8), 1);
+        // Never exceeds the configured fleet.
+        let grow = Churn::wrap(base(), vec![(1.0, 3.0)], 0.0).unwrap();
+        assert_eq!(grow.active_workers_at(2.0, 8), 8);
+        // Catch-up: zero before any event and after leaves; the declared
+        // join cost is the model stream over the link at that epoch.
+        let m = 1e8;
+        assert_eq!(c.catchup_cost_at(0.0, m), 0.0);
+        assert_eq!(c.catchup_cost_at(7.0, m), 0.0);
+        let l = base().at(16.0);
+        let want = l.alpha + m * l.beta;
+        assert!((c.catchup_cost_at(16.0, m) - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn outer_modifiers_preserve_per_worker_structure() {
+        let h = HeterogeneousLinks::wrap(base(), 0.5, 4.0, 9).unwrap();
+        let j = Jitter::wrap(h.clone(), 0.1, 5).unwrap();
+        // Jitter perturbs every worker's link the same way per epoch, so
+        // the slow/fast ratio survives wrapping.
+        let (slow, fast) = (0..64)
+            .map(|w| (w, h.is_slow(w)))
+            .fold((None, None), |(s, f), (w, is)| if is { (Some(w), f) } else { (s, Some(w)) });
+        let (ws, wf) = (slow.unwrap(), fast.unwrap());
+        let (ls, lf) = (j.worker_link_at(ws, 2.0), j.worker_link_at(wf, 2.0));
+        assert!((ls.alpha / lf.alpha - 4.0).abs() < 1e-9);
+        assert!((ls.beta / lf.beta - 4.0).abs() < 1e-9);
+        // And the straggler/churn hooks pass through macro'd wrappers.
+        let st = Jitter::wrap(
+            StragglerTail::wrap(base(), 1.0, 4.0, 3).unwrap(),
+            0.1,
+            6,
+        )
+        .unwrap();
+        assert!(st.straggler_factor(0, 0) > 1.0);
+        let ch = Jitter::wrap(
+            Churn::wrap(base(), vec![(1.0, -0.5)], 1.0).unwrap(),
+            0.1,
+            6,
+        )
+        .unwrap();
+        assert_eq!(ch.active_workers_at(2.0, 8), 4);
+        assert_eq!(ch.describe(), "static+churn(1ev,x1)+jitter(0.1)");
     }
 }

@@ -358,6 +358,39 @@ fn trace_driven_network_models_are_bitwise_identical_across_threads() {
     }
 }
 
+/// Fleet scenarios (per-worker straggler tails, heterogeneous links,
+/// elastic membership) preserve the §7 contract across the full thread
+/// matrix: `straggler_factor` is a pure function of (worker, step),
+/// `worker_link_at`/`active_workers_at` pure functions of (worker, epoch),
+/// so t_compute scaling, catch-up charges and membership edges land
+/// identically at every pool width — including t_compute, which the
+/// bitwise comparison covers.
+#[test]
+fn fleet_scenarios_are_bitwise_identical_across_the_thread_matrix() {
+    use flexcomm::netsim::model::build_scenario;
+    for scenario in ["straggler", "hetero", "churn"] {
+        let mk = |threads: usize| {
+            let mut c = cfg(
+                Strategy::Flexible { policy: SelectionPolicy::Star },
+                0.05,
+                4,
+                threads,
+            );
+            c.net = build_scenario(scenario, 2.0).expect("registry scenario");
+            Session::from_config(c)
+                .source(Box::new(HostMlp::default_preset(33)))
+                .build()
+                .expect("valid config")
+                .run()
+        };
+        let baseline = mk(1);
+        for threads in [3usize, 4, 16] {
+            let b = mk(threads);
+            assert_bitwise_equal(&baseline, &b, &format!("{scenario}/threads={threads}"));
+        }
+    }
+}
+
 /// The simulated-cost report of a raw AR-Topk exchange (the paper's Eqn 4
 /// object) is identical for any pool, including the traffic accounting.
 #[test]

@@ -59,6 +59,23 @@ step cargo run --release --example trace_replay
 # and non-degenerate accuracy, so an unregistered or panicking controller
 # fails this gate loudly.
 step cargo run --release --example controller_compare -- --steps 24 --target 0.99
+# Fleet-scenario controller sweep (ISSUE 7): every registered controller
+# must also rank under the heterogeneous-fleet scenarios — per-worker
+# compute tails (straggler), per-worker links (hetero) and membership
+# churn with catch-up charges (churn). Same in-binary gate assertions.
+step cargo run --release --example controller_compare -- \
+    --net straggler,hetero,churn --steps 24 --target 0.99
+# FleetSim smoke (ISSUE 7): price a 4096-worker heterogeneous fleet
+# cost-only. The binary hard-asserts peak transient state stays O(n)
+# (<= 2n + const f64 slots, independent of model size); additionally
+# grep the printed bound here so a silently-removed assert fails loudly.
+fleet_out=$(cargo run --release --quiet -- train --fleet-n 4096 --net hetero --steps 100) \
+    || { echo "FAILED: fleet smoke run" >&2; status=1; }
+echo "$fleet_out" | tail -n 5
+if ! echo "$fleet_out" | grep -q "fleet state: peak .* f64 slots for n=4096 (O(n) bound 8256)"; then
+    echo "verify: FATAL: fleet smoke did not report its O(n) state bound" >&2
+    status=1
+fi
 # Benches are test = false (cargo test must not RUN them), so compile them
 # explicitly — otherwise table2/table6/fig2/fig5 could bit-rot silently.
 step cargo bench --no-run
@@ -70,6 +87,15 @@ step env FLEXCOMM_BENCH_FAST=1 cargo bench --bench hotpath
 # reporting — fail loudly, same policy as the missing-toolchain check.
 if [ ! -f BENCH_hotpath.json ]; then
     echo "verify: FATAL: BENCH_hotpath.json not written by the hotpath bench" >&2
+    status=1
+fi
+# Fleet scale-out record (ISSUE 7): the fig5 bench's second stage sweeps
+# the cost model to 16384 workers under c1/c2/hetero and records the
+# AG-vs-ART-Ring crossover N per scenario. Same missing-file policy.
+rm -f BENCH_scaleout.json
+step env FLEXCOMM_BENCH_FAST=1 cargo bench --bench fig5_scaleout
+if [ ! -f BENCH_scaleout.json ]; then
+    echo "verify: FATAL: BENCH_scaleout.json not written by the fig5 bench" >&2
     status=1
 fi
 step cargo fmt --check
