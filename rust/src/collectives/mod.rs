@@ -157,9 +157,10 @@ pub trait Collective: Send + Sync {
     /// The default prices the fleet's componentwise-slowest link with the
     /// homogeneous closed form — exact when all links coincide (the fast
     /// path the pattern-aware overrides also take), conservative
-    /// otherwise. Ring/HD/hierarchical override with true per-round
-    /// pattern costs; ops whose pattern is not yet modelled per-round
-    /// (tree, PS, the compressed trio) inherit the conservative default.
+    /// otherwise. Ring/HD/hierarchical and the compressed trio
+    /// (AG-Topk, ART-Ring, ART-Tree) override with true per-round pattern
+    /// costs; ops whose pattern is not yet modelled per-round (tree, PS)
+    /// inherit the conservative default.
     fn predict_hetero(&self, topo: Topology, links: &[LinkParams], m_bytes: f64, cr: f64) -> f64 {
         let slow = cost_model::slowest_link(links);
         let t = Topology { inter: slow, ..topo };
@@ -291,6 +292,9 @@ impl Collective for AllgatherTopkOp {
     fn predict(&self, topo: Topology, m_bytes: f64, n: usize, cr: f64) -> f64 {
         cost_model::ag_topk(topo.inter, m_bytes, n, cr)
     }
+    fn predict_hetero(&self, _topo: Topology, links: &[LinkParams], m_bytes: f64, cr: f64) -> f64 {
+        cost_model::hetero_ag_topk(links, m_bytes, cr)
+    }
 }
 
 impl Collective for ArTopkRingOp {
@@ -300,6 +304,9 @@ impl Collective for ArTopkRingOp {
     fn predict(&self, topo: Topology, m_bytes: f64, n: usize, cr: f64) -> f64 {
         cost_model::art_ring(topo.inter, m_bytes, n, cr)
     }
+    fn predict_hetero(&self, _topo: Topology, links: &[LinkParams], m_bytes: f64, cr: f64) -> f64 {
+        cost_model::hetero_art_ring(links, m_bytes, cr)
+    }
 }
 
 impl Collective for ArTopkTreeOp {
@@ -308,6 +315,9 @@ impl Collective for ArTopkTreeOp {
     }
     fn predict(&self, topo: Topology, m_bytes: f64, n: usize, cr: f64) -> f64 {
         cost_model::art_tree(topo.inter, m_bytes, n, cr)
+    }
+    fn predict_hetero(&self, _topo: Topology, links: &[LinkParams], m_bytes: f64, cr: f64) -> f64 {
+        cost_model::hetero_art_tree(links, m_bytes, cr)
     }
 }
 
@@ -623,6 +633,31 @@ mod tests {
             hier.predict_hetero(topo, &degraded, m, cr).to_bits(),
             cost_model::hetero_hierarchical_allreduce(topo, &degraded, m).to_bits()
         );
+        // The compressed trio prices per-round too (ISSUE 8): same
+        // cost_model entry points, and the degraded fleet costs strictly
+        // more than the homogeneous prediction for each of the three.
+        let trio = [
+            (
+                CollectiveKind::AllgatherTopk,
+                cost_model::hetero_ag_topk(&degraded, m, cr),
+            ),
+            (CollectiveKind::ArTopkRing, cost_model::hetero_art_ring(&degraded, m, cr)),
+            (CollectiveKind::ArTopkTree, cost_model::hetero_art_tree(&degraded, m, cr)),
+        ];
+        for (kind, want) in trio {
+            let op = collective(kind);
+            assert_eq!(
+                op.predict_hetero(topo, &degraded, m, cr).to_bits(),
+                want.to_bits(),
+                "{} hetero entry point",
+                op.name()
+            );
+            assert!(
+                op.predict_hetero(topo, &degraded, m, cr) > op.predict(topo, m, n, cr),
+                "a straggling link must cost {} something",
+                op.name()
+            );
+        }
         assert!(
             ring.predict_hetero(topo, &degraded, m, cr) > ring.predict(topo, m, n, cr),
             "a straggling link must cost the ring something"

@@ -13,6 +13,7 @@ pub mod policy_switch;
 pub mod selector;
 pub mod session;
 pub mod strategy;
+pub mod sweep;
 pub mod trainer;
 pub mod worker;
 
@@ -28,5 +29,6 @@ pub use observer::{
 };
 pub use session::{ConfigError, Session, SessionBuilder, TrainReport};
 pub use strategy::{CommPlan, CommStrategy, ExchangeCtx, ExchangeOutcome, StepCtx};
+pub use sweep::{SweepCell, SweepError, SweepObserver, SweepReport, SweepRow, SweepSpec};
 pub use trainer::{Strategy, TrainConfig, Trainer};
 pub use worker::{ComputeModel, GradSource};

@@ -40,6 +40,7 @@ use crate::coordinator::policy_switch::PolicySwitcher;
 use crate::coordinator::strategy::{instantiate, CommStrategy};
 use crate::coordinator::trainer::{CrControl, Strategy, TrainConfig, Trainer};
 use crate::coordinator::worker::{ComputeModel, GradSource};
+use crate::models::{self, ModelError};
 use crate::netsim::model::{parse_spec, NetModelError, NetworkModel};
 use crate::netsim::schedule::NetSchedule;
 use crate::util::pool::ThreadPool;
@@ -83,6 +84,10 @@ pub enum ConfigError {
     /// trace, a bad modifier composition, or an unknown scenario spec
     /// (from [`SessionBuilder::network_spec`]).
     Network(NetModelError),
+    /// The model axis was rejected: an unknown `--model` spec (from
+    /// [`SessionBuilder::model_spec`]) — the error lists every
+    /// [`MODEL_TABLE`](crate::models::MODEL_TABLE) name.
+    Model(ModelError),
     /// The control plane was rejected: an unknown `--controller` spec,
     /// invalid STAR/VAR trial/commit windows, or a CR-adapting controller
     /// paired with an uncompressed strategy (DESIGN.md §10).
@@ -98,6 +103,12 @@ impl From<NetModelError> for ConfigError {
 impl From<ControllerError> for ConfigError {
     fn from(e: ControllerError) -> Self {
         ConfigError::Controller(e)
+    }
+}
+
+impl From<ModelError> for ConfigError {
+    fn from(e: ModelError) -> Self {
+        ConfigError::Model(e)
     }
 }
 
@@ -136,6 +147,7 @@ impl fmt::Display for ConfigError {
                  parameters but dim() reports {dim}"
             ),
             ConfigError::Network(e) => write!(f, "network environment rejected: {e}"),
+            ConfigError::Model(e) => write!(f, "model rejected: {e}"),
             ConfigError::Controller(e) => write!(f, "controller rejected: {e}"),
         }
     }
@@ -163,6 +175,13 @@ pub struct SessionBuilder {
     controller_spec: Option<String>,
     /// STAR/VAR trial/commit windows for the `artopk-auto` composition.
     policy_windows: Option<(u64, u64)>,
+    /// Deferred `--model` spec: resolved against
+    /// [`MODEL_TABLE`](crate::models::MODEL_TABLE) at `build()` when no
+    /// explicit [`SessionBuilder::source`] was given.
+    model_spec: Option<String>,
+    /// An externally-owned worker pool to run on (the sweep server's
+    /// shared-pool seam); `None` = spawn one pool for this session.
+    shared_pool: Option<ThreadPool>,
 }
 
 impl SessionBuilder {
@@ -345,9 +364,33 @@ impl SessionBuilder {
         self
     }
 
-    /// The model backend producing per-worker gradients (required).
+    /// The model backend producing per-worker gradients. Required unless
+    /// [`SessionBuilder::model_spec`] names one; an explicit source takes
+    /// precedence over the spec.
     pub fn source(mut self, source: Box<dyn GradSource>) -> Self {
         self.source = Some(source);
+        self
+    }
+
+    /// Defer a `--model`-style registry name (`mlp`, `matreg`,
+    /// `host-mlp`, `synthetic:<dim>`, ...) to `build()`, which resolves
+    /// it against [`MODEL_TABLE`](crate::models::MODEL_TABLE) at the
+    /// session seed — an unknown name surfaces as the typed
+    /// [`ConfigError::Model`] listing every registered model.
+    pub fn model_spec(mut self, spec: &str) -> Self {
+        self.model_spec = Some(spec.to_string());
+        self
+    }
+
+    /// Run this session on an externally-owned persistent [`ThreadPool`]
+    /// instead of spawning its own. Pool handles clone cheaply and share
+    /// the parked worker set; whole parallel regions are serialized across
+    /// handles (DESIGN.md §7), so many concurrent sessions can share one
+    /// pool — the sweep server's execution model. Chunking depends only on
+    /// `(threads, n)`, so per-session results stay bitwise identical to a
+    /// privately-owned pool of the same width.
+    pub fn pool(mut self, pool: ThreadPool) -> Self {
+        self.shared_pool = Some(pool);
         self
     }
 
@@ -364,6 +407,8 @@ impl SessionBuilder {
             custom_controller,
             controller_spec,
             policy_windows,
+            model_spec,
+            shared_pool,
         } = self;
         if cfg.n_workers == 0 {
             return Err(ConfigError::ZeroWorkers);
@@ -405,11 +450,12 @@ impl SessionBuilder {
                 workers_per_node: wpn,
             });
         }
-        // ONE persistent worker pool per session: spawned here, handle
+        // ONE persistent worker pool per session: spawned here (or handed
+        // in via `.pool()` — the sweep server's shared-pool seam), handle
         // clones shared by the trainer and the strategy's operators, so
         // every parallel region in the run reuses the same parked workers
         // (DESIGN.md §7).
-        let pool = ThreadPool::auto(cfg.threads);
+        let pool = shared_pool.unwrap_or_else(|| ThreadPool::auto(cfg.threads));
         let from_registry = custom.is_none();
         let strategy = match custom {
             Some(s) => s,
@@ -452,7 +498,13 @@ impl SessionBuilder {
         } else {
             primary
         };
-        let source = source.ok_or(ConfigError::MissingSource)?;
+        // Model axis: an explicit `.source()` wins; otherwise resolve the
+        // deferred `--model` spec against MODEL_TABLE at the session seed.
+        let source = match (source, model_spec) {
+            (Some(s), _) => s,
+            (None, Some(spec)) => models::build_model(&spec, cfg.seed)?,
+            (None, None) => return Err(ConfigError::MissingSource),
+        };
         let trainer = Trainer::with_parts(cfg, source, strategy, observers, pool, controller);
         // init_params ran exactly once inside with_parts; check its output
         // against the declared dimension here, where a broken GradSource
@@ -584,14 +636,17 @@ mod tests {
     use crate::netsim::cost_model::LinkParams;
     use crate::runtime::host_model::HostMlp;
 
-    fn base() -> SessionBuilder {
+    fn base_no_source() -> SessionBuilder {
         Session::builder()
             .workers(4)
             .steps(3)
             .steps_per_epoch(10)
             .seed(1)
             .compute(ComputeModel::fixed(0.01))
-            .source(Box::new(HostMlp::default_preset(1)))
+    }
+
+    fn base() -> SessionBuilder {
+        base_no_source().source(Box::new(HostMlp::default_preset(1)))
     }
 
     #[test]
@@ -902,6 +957,54 @@ mod tests {
         assert!(crs[..3].iter().all(|&c| (c - 0.08).abs() < 1e-12), "{crs:?}");
         assert!(crs[3..].iter().all(|&c| (c - 0.04).abs() < 1e-12), "{crs:?}");
         assert!((report.final_cr - 0.04).abs() < 1e-12);
+    }
+
+    /// `--model` specs resolve MODEL_TABLE at build time; unknown names
+    /// are the typed [`ConfigError::Model`] listing every registered
+    /// model, and an explicit `.source()` wins over the spec.
+    #[test]
+    fn model_specs_resolve_the_registry_at_build_time() {
+        let report = base_no_source().model_spec("mlp").build().unwrap().run();
+        assert!(report.model.starts_with("mlp-spirals"), "{}", report.model);
+        match base_no_source().model_spec("nope").build().err() {
+            Some(ConfigError::Model(ModelError::UnknownModel { spec })) => {
+                assert_eq!(spec, "nope")
+            }
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        let msg = base_no_source().model_spec("nope").build().err().unwrap().to_string();
+        assert!(msg.contains("mlp") && msg.contains("matreg"), "{msg}");
+        // Explicit source takes precedence over the spec.
+        let report = base().model_spec("matreg").build().unwrap().run();
+        assert!(report.model.starts_with("host-mlp"), "{}", report.model);
+    }
+
+    /// The `.pool()` seam: a session on an externally-owned pool replays
+    /// the privately-pooled run bitwise (same chunking contract), which is
+    /// what lets the sweep server share one pool across many sessions.
+    #[test]
+    fn injected_shared_pool_is_bitwise_invisible() {
+        let run = |pool: Option<ThreadPool>| {
+            let mut b = base_no_source()
+                .model_spec("matreg")
+                .threads(2)
+                .strategy(Strategy::parse("ag-topk").unwrap())
+                .static_cr(0.1);
+            if let Some(p) = pool {
+                b = b.pool(p);
+            }
+            b.build().unwrap().run()
+        };
+        let shared = ThreadPool::auto(2);
+        let a = run(None);
+        let b = run(Some(shared.clone()));
+        let c = run(Some(shared)); // pool reuse across sessions
+        assert_eq!(a.params, b.params);
+        assert_eq!(b.params, c.params);
+        for (x, y) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+            assert_eq!(x.loss.to_bits(), y.loss.to_bits());
+            assert_eq!(x.t_sync.to_bits(), y.t_sync.to_bits());
+        }
     }
 
     #[test]

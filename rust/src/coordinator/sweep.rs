@@ -1,0 +1,896 @@
+//! The sweep server: many Sessions, one pool (DESIGN.md §12).
+//!
+//! A [`SweepSpec`] names a grid — model × strategy × network scenario ×
+//! controller, every axis a list of registry specs — plus the run shape
+//! shared by every cell. [`SweepSpec::run`] expands the grid into
+//! [`SweepCell`]s and executes them CONCURRENTLY: a bounded window of
+//! `in_flight` OS threads claim cells off a shared atomic cursor, build
+//! each [`Session`] with the one shared persistent
+//! [`ThreadPool`](crate::util::pool::ThreadPool) injected through the
+//! [`SessionBuilder::pool`] seam, and write finished [`SweepRow`]s back by
+//! cell index. The pool's region lock serializes parallel regions across
+//! sessions and its chunking depends only on `(threads, n)`, so every
+//! recorded metric is bitwise identical for ANY `--threads` width and ANY
+//! in-flight window — concurrency moves wall-clock time, never results
+//! (the engine pins `comp_scale = 0`, the one wall-clock-coupled input).
+//!
+//! Sessions report progress through a batched [`SweepObserver`] (local
+//! event counters flushed into shared atomics every `OBSERVER_BATCH`
+//! events — cells never contend per step), and the finished grid
+//! aggregates into a [`SweepReport`]: per-cell rows in grid order, a
+//! ranked time-to-target-accuracy view, CSV, and the hand-rolled
+//! `BENCH_sweep.json` document `scripts/verify.sh` gates on.
+//!
+//! Axis validation happens before any cell runs: each axis resolves
+//! against its own registry and a bad spec is that axis's typed error
+//! ([`SweepError`]) listing every valid name. A cell that validates but
+//! still fails to build (e.g. a CR-adapting controller paired with a
+//! dense strategy) is not a hole in the table: its row records the
+//! [`ConfigError`] string and the sweep completes.
+
+use crate::coordinator::controller::{self, ControllerError};
+use crate::coordinator::observer::{EvalRecord, TrainObserver};
+use crate::coordinator::session::{Session, SessionBuilder, TrainReport};
+use crate::coordinator::trainer::Strategy;
+use crate::coordinator::worker::ComputeModel;
+use crate::experiments;
+use crate::models::{self, ModelError};
+use crate::netsim::model::{parse_spec as parse_net_spec, NetModelError};
+use crate::util::pool::ThreadPool;
+use crate::util::table::Table;
+use std::fmt;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Events a [`SweepObserver`] buffers locally before one atomic flush.
+const OBSERVER_BATCH: u64 = 32;
+
+/// An axis of the grid was rejected at validation, before any cell ran.
+/// One variant per axis, each carrying (or producing) the full list of
+/// valid names for that axis's registry — the `NET_TABLE` error style.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SweepError {
+    /// Model axis: not a [`MODEL_TABLE`](crate::models::MODEL_TABLE) name
+    /// or `synthetic:<dim>`.
+    Model(ModelError),
+    /// Strategy axis: not a
+    /// [`STRATEGY_TABLE`](crate::coordinator::strategy::STRATEGY_TABLE)
+    /// name.
+    Strategy { spec: String },
+    /// Network axis: not a
+    /// [`NET_TABLE`](crate::netsim::model::NET_TABLE) scenario or a
+    /// loadable `trace:<path>`.
+    Net(NetModelError),
+    /// Controller axis: not a
+    /// [`CONTROLLER_TABLE`](crate::coordinator::controller::CONTROLLER_TABLE)
+    /// name.
+    Controller(ControllerError),
+    /// An axis with zero entries: the grid would be empty.
+    EmptyAxis { axis: &'static str },
+}
+
+impl fmt::Display for SweepError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SweepError::Model(e) => write!(f, "sweep model axis: {e}"),
+            SweepError::Strategy { spec } => write!(
+                f,
+                "sweep strategy axis: unknown strategy `{spec}` (valid: {})",
+                Strategy::names().collect::<Vec<_>>().join(", ")
+            ),
+            SweepError::Net(e) => write!(f, "sweep network axis: {e}"),
+            SweepError::Controller(e) => write!(f, "sweep controller axis: {e}"),
+            SweepError::EmptyAxis { axis } => {
+                write!(f, "sweep {axis} axis is empty: the grid has no cells")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SweepError {}
+
+/// One grid point: four registry specs. Cells are value objects — the
+/// engine rebuilds the Session from these strings inside whichever worker
+/// thread claims the cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepCell {
+    pub model: String,
+    pub strategy: String,
+    pub net: String,
+    pub controller: String,
+}
+
+impl SweepCell {
+    /// Stable display id, `model/strategy/net/controller`.
+    pub fn id(&self) -> String {
+        format!("{}/{}/{}/{}", self.model, self.strategy, self.net, self.controller)
+    }
+}
+
+/// The grid plus the run shape every cell shares. Axis entries are
+/// registry specs (model / strategy / scenario / controller names);
+/// [`SweepSpec::validate`] resolves each against its table before
+/// anything runs.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    pub models: Vec<String>,
+    pub strategies: Vec<String>,
+    pub nets: Vec<String>,
+    pub controllers: Vec<String>,
+    /// Simulated workers per session.
+    pub workers: usize,
+    pub steps: u64,
+    pub steps_per_epoch: u64,
+    /// Learning rate for every cell; `0.0` = each model's registry
+    /// [`lr_hint`](crate::models::lr_hint) (the default — parameter
+    /// scales differ per learner).
+    pub lr: f32,
+    pub momentum: f32,
+    /// Static compression ratio for compressed strategies (dense cells
+    /// carry it inertly).
+    pub cr: f64,
+    /// Held-out eval cadence in steps (0 = final eval only).
+    pub eval_every: u64,
+    pub seed: u64,
+    /// Fixed per-step compute seconds (simulated; keeps cells comparable).
+    pub compute_s: f64,
+    /// Shared-pool width (0 = all cores, DESIGN.md §7).
+    pub threads: usize,
+    /// Concurrent-session window: how many cells run at once.
+    pub in_flight: usize,
+    /// Accuracy target for the ranked time-to-accuracy summary.
+    pub target_acc: f64,
+}
+
+impl Default for SweepSpec {
+    fn default() -> Self {
+        SweepSpec {
+            models: vec!["mlp".into(), "matreg".into()],
+            strategies: vec!["ag-topk".into(), "artopk-star".into(), "flexible".into()],
+            nets: vec!["c1".into(), "c2".into(), "flaky".into()],
+            controllers: vec!["static".into(), "gravac".into()],
+            workers: 4,
+            steps: 200,
+            steps_per_epoch: 50,
+            lr: 0.0,
+            momentum: 0.9,
+            cr: 0.1,
+            eval_every: 50,
+            seed: 7,
+            compute_s: 0.005,
+            threads: 0,
+            in_flight: 4,
+            target_acc: 0.6,
+        }
+    }
+}
+
+impl SweepSpec {
+    /// The verify.sh gate's grid: 2 real learners x 2 compressed
+    /// strategies x 2 scenarios x 1 controller, sized so every cell
+    /// finishes fast AND demonstrably learns past its chance floor.
+    pub fn smoke() -> Self {
+        SweepSpec {
+            models: vec!["mlp".into(), "matreg".into()],
+            strategies: vec!["ag-topk".into(), "flexible".into()],
+            nets: vec!["c1".into(), "c2".into()],
+            controllers: vec!["static".into()],
+            steps: 400,
+            steps_per_epoch: 100,
+            eval_every: 50,
+            in_flight: 4,
+            target_acc: 0.6,
+            ..SweepSpec::default()
+        }
+    }
+
+    /// Resolve every axis entry against its registry. Per-axis typed
+    /// errors; nothing has run yet when this rejects.
+    pub fn validate(&self) -> Result<(), SweepError> {
+        for (axis, list) in [
+            ("model", &self.models),
+            ("strategy", &self.strategies),
+            ("network", &self.nets),
+            ("controller", &self.controllers),
+        ] {
+            if list.is_empty() {
+                return Err(SweepError::EmptyAxis { axis });
+            }
+        }
+        for m in &self.models {
+            // Probe-construct (seed irrelevant): unknown names carry the
+            // full MODEL_TABLE listing.
+            models::build_model(m, 0).map(drop).map_err(SweepError::Model)?;
+        }
+        for s in &self.strategies {
+            if Strategy::parse(s).is_err() {
+                return Err(SweepError::Strategy { spec: s.clone() });
+            }
+        }
+        for n in &self.nets {
+            parse_net_spec(n, 1.0).map(drop).map_err(SweepError::Net)?;
+        }
+        for c in &self.controllers {
+            if !controller::controller_names().any(|n| n == c.as_str()) {
+                return Err(SweepError::Controller(ControllerError::UnknownController {
+                    spec: c.clone(),
+                }));
+            }
+        }
+        Ok(())
+    }
+
+    /// Expand the grid in fixed axis order (model outermost, controller
+    /// innermost) — row order in the report is this order.
+    pub fn expand(&self) -> Vec<SweepCell> {
+        let mut cells =
+            Vec::with_capacity(self.models.len() * self.strategies.len() * self.nets.len());
+        for m in &self.models {
+            for s in &self.strategies {
+                for n in &self.nets {
+                    for c in &self.controllers {
+                        cells.push(SweepCell {
+                            model: m.clone(),
+                            strategy: s.clone(),
+                            net: n.clone(),
+                            controller: c.clone(),
+                        });
+                    }
+                }
+            }
+        }
+        cells
+    }
+
+    /// Validate, expand and execute the whole grid (see module docs for
+    /// the concurrency model), returning per-cell rows in grid order.
+    pub fn run(&self) -> Result<SweepReport, SweepError> {
+        self.validate()?;
+        let cells = self.expand();
+        let n = cells.len();
+        let pool = ThreadPool::auto(self.threads);
+        let progress = Arc::new(SweepProgress::default());
+        let window = self.in_flight.clamp(1, n);
+        let cursor = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<SweepRow>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..window {
+                scope.spawn(|| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let row = run_cell(self, &cells[i], &pool, &progress);
+                    *slots[i].lock().unwrap() = Some(row);
+                    progress.cells_done.fetch_add(1, Ordering::Relaxed);
+                });
+            }
+        });
+        let rows = slots
+            .into_iter()
+            .map(|s| s.into_inner().unwrap().expect("every claimed cell writes its row"))
+            .collect();
+        Ok(SweepReport { rows, target_acc: self.target_acc, progress })
+    }
+}
+
+/// Build and run one cell's Session on the shared pool. Build rejections
+/// (typed [`ConfigError`](crate::coordinator::session::ConfigError)s —
+/// e.g. a CR-adapting controller on a dense strategy) become error rows,
+/// not sweep failures.
+fn run_cell(
+    spec: &SweepSpec,
+    cell: &SweepCell,
+    pool: &ThreadPool,
+    progress: &Arc<SweepProgress>,
+) -> SweepRow {
+    let lr = if spec.lr > 0.0 { spec.lr } else { models::lr_hint(&cell.model) };
+    let builder: SessionBuilder = Session::builder()
+        .workers(spec.workers)
+        .steps(spec.steps)
+        .steps_per_epoch(spec.steps_per_epoch)
+        .lr(lr)
+        .momentum(spec.momentum)
+        .static_cr(spec.cr)
+        .eval_every(spec.eval_every)
+        .seed(spec.seed)
+        .threads(spec.threads)
+        .compute(ComputeModel::fixed(spec.compute_s))
+        // The one wall-clock-coupled metric input: pinned off so recorded
+        // metrics are bitwise identical at any threads/in-flight window.
+        .comp_scale(0.0)
+        .model_spec(&cell.model)
+        .network_spec(&cell.net)
+        .controller_spec(&cell.controller)
+        .pool(pool.clone())
+        .observer(Box::new(SweepObserver::new(progress.clone())));
+    let builder = match Strategy::parse(&cell.strategy) {
+        Ok(s) => builder.strategy(s),
+        Err(e) => return SweepRow::failed(cell, &e.to_string()),
+    };
+    match builder.build() {
+        Ok(session) => SweepRow::from_report(cell, &session.run(), spec),
+        Err(e) => SweepRow::failed(cell, &e.to_string()),
+    }
+}
+
+/// Sweep-wide progress counters, fed in batches by every cell's
+/// [`SweepObserver`]. Read them live from another thread (they are plain
+/// atomics) or after the fact for totals.
+#[derive(Debug, Default)]
+pub struct SweepProgress {
+    pub steps_done: AtomicU64,
+    pub evals_done: AtomicU64,
+    pub cells_done: AtomicU64,
+}
+
+impl SweepProgress {
+    /// `(steps, evals, cells)` completed so far.
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.steps_done.load(Ordering::Relaxed),
+            self.evals_done.load(Ordering::Relaxed),
+            self.cells_done.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The batched per-session observer: counts events locally and flushes
+/// into the shared [`SweepProgress`] atomics every [`OBSERVER_BATCH`]
+/// events (and on drop), so N concurrent sessions never contend on a
+/// cache line per step.
+pub struct SweepObserver {
+    shared: Arc<SweepProgress>,
+    buf_steps: u64,
+    buf_evals: u64,
+}
+
+impl SweepObserver {
+    pub fn new(shared: Arc<SweepProgress>) -> Self {
+        SweepObserver { shared, buf_steps: 0, buf_evals: 0 }
+    }
+
+    fn flush(&mut self) {
+        if self.buf_steps > 0 {
+            self.shared.steps_done.fetch_add(self.buf_steps, Ordering::Relaxed);
+            self.buf_steps = 0;
+        }
+        if self.buf_evals > 0 {
+            self.shared.evals_done.fetch_add(self.buf_evals, Ordering::Relaxed);
+            self.buf_evals = 0;
+        }
+    }
+}
+
+impl TrainObserver for SweepObserver {
+    fn on_step(&mut self, _m: &crate::coordinator::metrics::StepMetrics) {
+        self.buf_steps += 1;
+        if self.buf_steps + self.buf_evals >= OBSERVER_BATCH {
+            self.flush();
+        }
+    }
+
+    fn on_eval(&mut self, _e: &EvalRecord) {
+        self.buf_evals += 1;
+    }
+}
+
+impl Drop for SweepObserver {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+/// One finished (or failed) cell. `error = Some(..)` rows carry the
+/// build rejection verbatim and NaN/None measurements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepRow {
+    pub cell: SweepCell,
+    /// Resolved model display name (`TrainReport::model`), `""` on error.
+    pub model_name: String,
+    /// Final held-out loss (last eval record).
+    pub final_loss: f64,
+    pub best_acc: f64,
+    pub final_acc: f64,
+    /// Simulated cluster seconds for the whole run.
+    pub virtual_time_s: f64,
+    /// Simulated seconds to the first eval at/above the sweep's
+    /// `target_acc` (incl. exploration overhead); `None` = never reached.
+    pub time_to_target_s: Option<f64>,
+    pub final_cr: f64,
+    pub error: Option<String>,
+}
+
+impl SweepRow {
+    fn from_report(cell: &SweepCell, r: &TrainReport, spec: &SweepSpec) -> SweepRow {
+        let (final_loss, final_acc) =
+            r.metrics.evals.last().map_or((f64::NAN, f64::NAN), |&(_, l, a)| (l, a));
+        SweepRow {
+            cell: cell.clone(),
+            model_name: r.model.clone(),
+            final_loss,
+            best_acc: r.best_accuracy().unwrap_or(f64::NAN),
+            final_acc,
+            virtual_time_s: r.virtual_time_s,
+            time_to_target_s: experiments::time_to_accuracy(
+                r,
+                spec.target_acc,
+                spec.steps_per_epoch,
+            ),
+            final_cr: r.final_cr,
+            error: None,
+        }
+    }
+
+    fn failed(cell: &SweepCell, error: &str) -> SweepRow {
+        SweepRow {
+            cell: cell.clone(),
+            model_name: String::new(),
+            final_loss: f64::NAN,
+            best_acc: f64::NAN,
+            final_acc: f64::NAN,
+            virtual_time_s: f64::NAN,
+            time_to_target_s: None,
+            final_cr: f64::NAN,
+            error: Some(error.to_string()),
+        }
+    }
+
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// The finished grid: rows in grid order plus the ranked views and
+/// emitters (`BENCH_sweep.json`, CSV, terminal table).
+pub struct SweepReport {
+    pub rows: Vec<SweepRow>,
+    pub target_acc: f64,
+    /// Final progress counters (all cells have flushed by now).
+    pub progress: Arc<SweepProgress>,
+}
+
+impl SweepReport {
+    pub fn failed_cells(&self) -> usize {
+        self.rows.iter().filter(|r| !r.ok()).count()
+    }
+
+    /// Time-to-target ranking: cells that reached the target first (by
+    /// ascending simulated time), then unreached-but-finished cells by
+    /// descending best accuracy, then error rows. NaN sorts last within
+    /// its group.
+    pub fn ranked(&self) -> Vec<&SweepRow> {
+        let mut rows: Vec<&SweepRow> = self.rows.iter().collect();
+        let key = |r: &SweepRow| -> (u8, f64) {
+            match (&r.error, r.time_to_target_s) {
+                (Some(_), _) => (2, f64::INFINITY),
+                (None, Some(t)) => (0, if t.is_nan() { f64::INFINITY } else { t }),
+                // Negate best_acc so "higher accuracy first" is ascending.
+                (None, None) => {
+                    (1, if r.best_acc.is_nan() { f64::INFINITY } else { -r.best_acc })
+                }
+            }
+        };
+        rows.sort_by(|a, b| {
+            let (ga, ka) = key(a);
+            let (gb, kb) = key(b);
+            ga.cmp(&gb).then(ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal))
+        });
+        rows
+    }
+
+    /// The verify.sh smoke gate: every grid cell of `spec` produced
+    /// exactly one row, none errored, every cell evaluated, and every
+    /// cell's best accuracy beat its model's registry chance floor
+    /// ([`chance_acc`](crate::models::chance_acc)) — i.e. every learner
+    /// demonstrably learned under every strategy/scenario in the grid.
+    pub fn verify_full_coverage(&self, spec: &SweepSpec) -> Result<(), String> {
+        let cells = spec.expand();
+        if self.rows.len() != cells.len() {
+            return Err(format!(
+                "coverage hole: {} rows for {} grid cells",
+                self.rows.len(),
+                cells.len()
+            ));
+        }
+        for (cell, row) in cells.iter().zip(&self.rows) {
+            if row.cell != *cell {
+                return Err(format!(
+                    "row order broke: expected {}, found {}",
+                    cell.id(),
+                    row.cell.id()
+                ));
+            }
+            if let Some(e) = &row.error {
+                return Err(format!("cell {} failed: {e}", cell.id()));
+            }
+            let floor = models::chance_acc(&cell.model);
+            if !(row.best_acc > floor) {
+                return Err(format!(
+                    "cell {} best accuracy {:.4} not above the {} chance floor {:.4}",
+                    cell.id(),
+                    row.best_acc,
+                    cell.model,
+                    floor
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// CSV of every row in grid order (empty cells for `None`/errors).
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from(
+            "model,strategy,net,controller,final_loss,best_acc,final_acc,\
+             virtual_time_s,time_to_target_s,final_cr,error\n",
+        );
+        for r in &self.rows {
+            let tta = r.time_to_target_s.map_or(String::new(), |t| format!("{t:.6}"));
+            let err = r.error.as_deref().unwrap_or("").replace(',', ";");
+            out.push_str(&format!(
+                "{},{},{},{},{:.6},{:.4},{:.4},{:.6},{},{:.4},{}\n",
+                r.cell.model,
+                r.cell.strategy,
+                r.cell.net,
+                r.cell.controller,
+                r.final_loss,
+                r.best_acc,
+                r.final_acc,
+                r.virtual_time_s,
+                tta,
+                r.final_cr,
+                err
+            ));
+        }
+        out
+    }
+
+    /// The `BENCH_sweep.json` document (hand-rolled — offline build, no
+    /// serde; same convention as
+    /// [`Bencher::write_json`](crate::util::bench::Bencher::write_json)).
+    /// Shape: `{"bench": "sweep", "target_acc": .., "cells": N,
+    /// "failed": k, "rows": [{..}, ..]}` with rows in grid order.
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{{\"bench\": \"sweep\", \"target_acc\": {}, \"cells\": {}, \"failed\": {},\n \
+             \"rows\": [",
+            self.target_acc,
+            self.rows.len(),
+            self.failed_cells()
+        ));
+        for (i, r) in self.rows.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let tta = r
+                .time_to_target_s
+                .map_or("null".to_string(), |t| format!("{t}"));
+            let err = r.error.as_deref().map_or("null".to_string(), json_str);
+            out.push_str(&format!(
+                "\n  {{\"model\": {}, \"strategy\": {}, \"net\": {}, \"controller\": {}, \
+                 \"final_loss\": {}, \"best_acc\": {}, \"final_acc\": {}, \
+                 \"virtual_time_s\": {}, \"time_to_target_s\": {}, \"final_cr\": {}, \
+                 \"error\": {}}}",
+                json_str(&r.cell.model),
+                json_str(&r.cell.strategy),
+                json_str(&r.cell.net),
+                json_str(&r.cell.controller),
+                json_num(r.final_loss),
+                json_num(r.best_acc),
+                json_num(r.final_acc),
+                json_num(r.virtual_time_s),
+                tta,
+                json_num(r.final_cr),
+                err
+            ));
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Write `BENCH_sweep.json` + the CSV (parent dirs created); returns
+    /// the two paths.
+    pub fn write_files(&self, json_path: &str, csv_path: &str) -> anyhow::Result<(String, String)> {
+        let j = experiments::write_csv(json_path, &self.to_json())?;
+        let c = experiments::write_csv(csv_path, &self.to_csv())?;
+        Ok((j, c))
+    }
+
+    /// Print the ranked time-to-accuracy table.
+    pub fn print_ranked(&self) {
+        let mut t = Table::new([
+            "rank",
+            "model",
+            "strategy",
+            "net",
+            "controller",
+            "tta_s",
+            "best_acc",
+            "vtime_s",
+            "status",
+        ]);
+        for (i, r) in self.ranked().iter().enumerate() {
+            t.row([
+                format!("{}", i + 1),
+                r.cell.model.clone(),
+                r.cell.strategy.clone(),
+                r.cell.net.clone(),
+                r.cell.controller.clone(),
+                r.time_to_target_s.map_or("-".into(), |t| format!("{t:.3}")),
+                if r.best_acc.is_nan() { "-".into() } else { format!("{:.3}", r.best_acc) },
+                if r.virtual_time_s.is_nan() {
+                    "-".into()
+                } else {
+                    format!("{:.3}", r.virtual_time_s)
+                },
+                match &r.error {
+                    Some(e) => format!("ERROR: {e}"),
+                    None if r.time_to_target_s.is_some() => "reached".into(),
+                    None => "below target".into(),
+                },
+            ]);
+        }
+        t.print();
+    }
+}
+
+/// JSON number: finite values verbatim, non-finite as null (JSON has no
+/// NaN/Infinity literals).
+fn json_num(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Minimal JSON string encoder (same contract as the bench harness's
+/// private helper — registry names are ASCII, escape correctly anyway).
+fn json_str(s: &str) -> String {
+    let mut q = String::with_capacity(s.len() + 2);
+    q.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => q.push_str("\\\""),
+            '\\' => q.push_str("\\\\"),
+            '\n' => q.push_str("\\n"),
+            '\r' => q.push_str("\\r"),
+            '\t' => q.push_str("\\t"),
+            c if (c as u32) < 0x20 => q.push_str(&format!("\\u{:04x}", c as u32)),
+            c => q.push(c),
+        }
+    }
+    q.push('"');
+    q
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A fast 2x2x1x1 grid for engine tests.
+    fn tiny() -> SweepSpec {
+        SweepSpec {
+            models: vec!["matreg".into(), "host-mlp".into()],
+            strategies: vec!["ag-topk".into(), "dense-ring".into()],
+            nets: vec!["c1".into()],
+            controllers: vec!["static".into()],
+            workers: 2,
+            steps: 4,
+            steps_per_epoch: 4,
+            eval_every: 2,
+            in_flight: 4,
+            ..SweepSpec::default()
+        }
+    }
+
+    #[test]
+    fn grid_expands_in_fixed_axis_order() {
+        let spec = tiny();
+        let cells = spec.expand();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].id(), "matreg/ag-topk/c1/static");
+        assert_eq!(cells[1].id(), "matreg/dense-ring/c1/static");
+        assert_eq!(cells[2].id(), "host-mlp/ag-topk/c1/static");
+        assert_eq!(cells[3].id(), "host-mlp/dense-ring/c1/static");
+    }
+
+    // Satellite: per-axis typed validation errors, each listing its
+    // registry's valid names.
+
+    #[test]
+    fn bad_model_axis_is_a_typed_listing_error() {
+        let spec = SweepSpec { models: vec!["nope".into()], ..tiny() };
+        match spec.validate() {
+            Err(SweepError::Model(ModelError::UnknownModel { spec })) => {
+                assert_eq!(spec, "nope")
+            }
+            other => panic!("expected Model error, got {other:?}"),
+        }
+        let msg = spec.validate().unwrap_err().to_string();
+        assert!(msg.contains("mlp") && msg.contains("matreg"), "{msg}");
+    }
+
+    #[test]
+    fn bad_strategy_axis_is_a_typed_listing_error() {
+        let spec = SweepSpec { strategies: vec!["nope".into()], ..tiny() };
+        match spec.validate() {
+            Err(SweepError::Strategy { spec }) => assert_eq!(spec, "nope"),
+            other => panic!("expected Strategy error, got {other:?}"),
+        }
+        let msg = spec.validate().unwrap_err().to_string();
+        assert!(msg.contains("ag-topk") && msg.contains("flexible"), "{msg}");
+    }
+
+    #[test]
+    fn bad_net_axis_is_a_typed_listing_error() {
+        let spec = SweepSpec { nets: vec!["nope".into()], ..tiny() };
+        match spec.validate() {
+            Err(SweepError::Net(NetModelError::UnknownScenario { spec })) => {
+                assert_eq!(spec, "nope")
+            }
+            other => panic!("expected Net error, got {other:?}"),
+        }
+        let msg = spec.validate().unwrap_err().to_string();
+        assert!(msg.contains("c1") && msg.contains("flaky"), "{msg}");
+    }
+
+    #[test]
+    fn bad_controller_axis_is_a_typed_listing_error() {
+        let spec = SweepSpec { controllers: vec!["nope".into()], ..tiny() };
+        match spec.validate() {
+            Err(SweepError::Controller(ControllerError::UnknownController { spec })) => {
+                assert_eq!(spec, "nope")
+            }
+            other => panic!("expected Controller error, got {other:?}"),
+        }
+        let msg = spec.validate().unwrap_err().to_string();
+        assert!(msg.contains("static") && msg.contains("gravac"), "{msg}");
+    }
+
+    #[test]
+    fn empty_axis_is_a_typed_error() {
+        let spec = SweepSpec { nets: vec![], ..tiny() };
+        assert_eq!(spec.validate(), Err(SweepError::EmptyAxis { axis: "network" }));
+    }
+
+    /// The acceptance pin: the SAME grid over different shared-pool
+    /// widths and in-flight windows produces bitwise-identical recorded
+    /// metrics in every row — concurrency never leaks into results.
+    #[test]
+    fn recorded_metrics_are_bitwise_invariant_to_threads_and_window() {
+        let serial = SweepSpec { threads: 1, in_flight: 1, ..tiny() };
+        let wide = SweepSpec { threads: 3, in_flight: 4, ..tiny() };
+        let a = serial.run().unwrap();
+        let b = wide.run().unwrap();
+        assert_eq!(a.rows.len(), b.rows.len());
+        for (x, y) in a.rows.iter().zip(&b.rows) {
+            assert_eq!(x.cell, y.cell);
+            assert_eq!(x.final_loss.to_bits(), y.final_loss.to_bits(), "{}", x.cell.id());
+            assert_eq!(x.best_acc.to_bits(), y.best_acc.to_bits(), "{}", x.cell.id());
+            assert_eq!(
+                x.virtual_time_s.to_bits(),
+                y.virtual_time_s.to_bits(),
+                "{}",
+                x.cell.id()
+            );
+            assert_eq!(x.time_to_target_s, y.time_to_target_s, "{}", x.cell.id());
+        }
+        // Progress counters observed every step/eval of every cell.
+        let (steps, evals, cells) = a.progress.snapshot();
+        assert_eq!(steps, 4 * 4);
+        assert_eq!(cells, 4);
+        assert!(evals >= 4, "{evals}");
+    }
+
+    /// A grid cell that validates but cannot build (CR-adapting gravac on
+    /// a dense strategy) becomes an error ROW; the sweep still completes
+    /// and the row carries the ConfigError text.
+    #[test]
+    fn unbuildable_cells_become_error_rows_not_failures() {
+        let spec = SweepSpec {
+            models: vec!["matreg".into()],
+            strategies: vec!["dense-ring".into(), "ag-topk".into()],
+            controllers: vec!["gravac".into()],
+            ..tiny()
+        };
+        let report = spec.run().unwrap();
+        assert_eq!(report.rows.len(), 2);
+        assert_eq!(report.failed_cells(), 1);
+        let bad = &report.rows[0];
+        assert!(!bad.ok());
+        assert!(bad.error.as_ref().unwrap().contains("gravac"), "{:?}", bad.error);
+        assert!(report.rows[1].ok());
+        // And the coverage gate refuses such a grid.
+        let err = report.verify_full_coverage(&spec).unwrap_err();
+        assert!(err.contains("dense-ring"), "{err}");
+    }
+
+    #[test]
+    fn ranking_orders_reached_then_unreached_then_errors() {
+        let cell = |m: &str| SweepCell {
+            model: m.into(),
+            strategy: "s".into(),
+            net: "n".into(),
+            controller: "c".into(),
+        };
+        let mut fast = SweepRow::failed(&cell("fast"), "x");
+        fast.error = None;
+        fast.time_to_target_s = Some(1.0);
+        fast.best_acc = 0.9;
+        let mut slow = fast.clone();
+        slow.cell = cell("slow");
+        slow.time_to_target_s = Some(2.0);
+        let mut high = SweepRow::failed(&cell("high"), "x");
+        high.error = None;
+        high.best_acc = 0.5;
+        let mut low = high.clone();
+        low.cell = cell("low");
+        low.best_acc = 0.2;
+        let err = SweepRow::failed(&cell("err"), "boom");
+        let report = SweepReport {
+            rows: vec![err, low, slow, high, fast],
+            target_acc: 0.6,
+            progress: Arc::new(SweepProgress::default()),
+        };
+        let order: Vec<&str> =
+            report.ranked().iter().map(|r| r.cell.model.as_str()).collect();
+        assert_eq!(order, ["fast", "slow", "high", "low", "err"]);
+    }
+
+    #[test]
+    fn json_and_csv_cover_every_row() {
+        let spec = SweepSpec {
+            models: vec!["matreg".into()],
+            strategies: vec!["ag-topk".into(), "dense-ring".into()],
+            controllers: vec!["gravac".into()], // dense cell -> error row
+            ..tiny()
+        };
+        let report = spec.run().unwrap();
+        let json = report.to_json();
+        assert!(json.starts_with("{\"bench\": \"sweep\""), "{json}");
+        assert!(json.contains("\"cells\": 2") && json.contains("\"failed\": 1"), "{json}");
+        assert_eq!(json.matches("\"strategy\":").count(), 2, "{json}");
+        // Error rows: null measurements + the error string; ok rows: a
+        // real number and a null error.
+        assert!(json.contains("\"error\": \"controller rejected"), "{json}");
+        assert!(json.contains("\"error\": null"), "{json}");
+        let csv = report.to_csv();
+        assert_eq!(csv.lines().count(), 3, "{csv}");
+        assert!(csv.lines().next().unwrap().starts_with("model,strategy,"), "{csv}");
+        assert!(csv.contains("matreg,ag-topk,c1,gravac"), "{csv}");
+    }
+
+    #[test]
+    fn coverage_gate_accepts_a_clean_grid_and_checks_the_chance_floor() {
+        let spec = SweepSpec {
+            models: vec!["matreg".into()],
+            strategies: vec!["ag-topk".into()],
+            controllers: vec!["static".into()],
+            steps: 120,
+            steps_per_epoch: 40,
+            eval_every: 40,
+            ..tiny()
+        };
+        let report = spec.run().unwrap();
+        report.verify_full_coverage(&spec).unwrap();
+        // Tampering with a row's accuracy trips the floor check.
+        let mut bad = SweepReport {
+            rows: report.rows.clone(),
+            target_acc: report.target_acc,
+            progress: report.progress.clone(),
+        };
+        bad.rows[0].best_acc = 0.0;
+        let err = bad.verify_full_coverage(&spec).unwrap_err();
+        assert!(err.contains("chance floor"), "{err}");
+    }
+
+    #[test]
+    fn json_num_and_str_helpers() {
+        assert_eq!(json_num(1.5), "1.5");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(f64::INFINITY), "null");
+        assert_eq!(json_str("a\"b"), "\"a\\\"b\"");
+    }
+}

@@ -1111,6 +1111,12 @@ mod tests {
             sync(39)
         );
     }
+
+    /// Every pool width runs the loop to completion — the smoke half of
+    /// the §7 thread-invariance contract (the bitwise half lives in
+    /// rust/tests/determinism.rs).
+    #[test]
+    fn pool_widths_run_to_completion() {
         for threads in [1usize, 2, 7] {
             let mut cfg = quick_cfg(Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0, 5);
             cfg.threads = threads;

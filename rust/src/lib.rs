@@ -25,6 +25,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod models;
 pub mod moo;
 pub mod netsim;
 pub mod runtime;
@@ -48,10 +49,17 @@ pub mod prelude {
     pub use crate::coordinator::session::{
         ConfigError, Session, SessionBuilder, TrainReport,
     };
+    pub use crate::coordinator::sweep::{
+        SweepCell, SweepError, SweepObserver, SweepProgress, SweepReport, SweepRow, SweepSpec,
+    };
     pub use crate::coordinator::strategy::{
         CommPlan, CommStrategy, ExchangeCtx, ExchangeOutcome, StepCtx,
     };
     pub use crate::coordinator::trainer::{CrControl, DenseFlavor, Strategy, TrainConfig, Trainer};
+    pub use crate::models::{
+        build_model, model_names, MatRegCheckpoint, MatrixRegressionSource, MlpSource,
+        ModelError, MODEL_TABLE,
+    };
     pub use crate::netsim::cost_model::{self, LinkParams, Topology};
     pub use crate::netsim::model::{parse_spec, NetModelError, NetworkModel, NET_TABLE};
     pub use crate::netsim::modifiers::{

@@ -2,16 +2,19 @@
 //!
 //! Subcommands:
 //!   train      run a training configuration (flags or --config file)
+//!   sweep      run a model x strategy x net x controller grid concurrently
 //!   cost       print α-β cost-model tables (Table I / II / VI, Fig 5)
 //!   schedule   print a network schedule (Fig 6) and probe it
 //!   info       artifacts + PJRT platform info
 //!
 //! Examples:
 //!   flexcomm train --model mlp --strategy artopk-star --cr 0.01 --steps 200
-//!   flexcomm train --model small --strategy flexible --adaptive --net c2
+//!   flexcomm train --model matreg --strategy flexible --adaptive --net c2
 //!   flexcomm train --strategy flexible --net c2-hostile --progress --out run.csv
 //!   flexcomm train --net trace:examples/traces/c2_measured.csv
 //!   flexcomm train --net c1 --jitter 0.05 --congestion 0.1,8
+//!   flexcomm sweep --models mlp,matreg --nets c1,c2,flaky --target-acc 0.6
+//!   flexcomm sweep --smoke
 //!   flexcomm cost --table2
 //!   flexcomm schedule --name c2 --epochs 50
 
@@ -19,8 +22,10 @@ use anyhow::{bail, Context, Result};
 use flexcomm::coordinator::controller::{controller_names, spec_adapts_cr, AdaptiveConfig};
 use flexcomm::coordinator::observer::{CsvSink, ProgressPrinter};
 use flexcomm::coordinator::session::Session;
+use flexcomm::coordinator::sweep::SweepSpec;
 use flexcomm::coordinator::trainer::{CrControl, Strategy};
 use flexcomm::coordinator::worker::{ComputeModel, GradSource};
+use flexcomm::models::{build_model, model_names};
 use flexcomm::netsim::cost_model::{self, LinkParams};
 use flexcomm::netsim::model::{parse_spec, scenario_names, NetworkModel};
 use flexcomm::netsim::modifiers::{
@@ -28,7 +33,7 @@ use flexcomm::netsim::modifiers::{
 };
 use flexcomm::netsim::probe::Probe;
 use flexcomm::netsim::schedule::NetSchedule;
-use flexcomm::runtime::{find_artifacts_dir, Engine, HostMlp, ModelArtifacts, PjrtModel, SyntheticGrad};
+use flexcomm::runtime::{find_artifacts_dir, Engine, ModelArtifacts, PjrtModel};
 use flexcomm::util::cli::Args;
 use flexcomm::util::config::Config;
 use flexcomm::util::table::{fmt_ms, fmt_pct, Table};
@@ -37,10 +42,11 @@ fn main() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_deref() {
         Some("train") => cmd_train(&args),
+        Some("sweep") => cmd_sweep(&args),
         Some("cost") => cmd_cost(&args),
         Some("schedule") => cmd_schedule(&args),
         Some("info") => cmd_info(),
-        Some(other) => bail!("unknown subcommand `{other}` (train|cost|schedule|info)"),
+        Some(other) => bail!("unknown subcommand `{other}` (train|sweep|cost|schedule|info)"),
         None => {
             print_usage();
             Ok(())
@@ -54,40 +60,105 @@ fn print_usage() {
     // drift.
     println!(
         "flexcomm — AR-Topk + flexible collectives + pluggable adaptation controllers\n\
-         usage: flexcomm <train|cost|schedule|info> [--flags]\n\
+         usage: flexcomm <train|sweep|cost|schedule|info> [--flags]\n\
+         models:      --model {}|synthetic:<dim>\n\
          strategies:  {}\n\
          networks:    --net static|{}|trace:<path>\n\
          modifiers:   --jitter F  --congestion P,FACTOR  --diurnal AMP,PERIOD\n\
                       --flap PERIOD,DOWN,FACTOR  --asym AMULT,BWDIV  --net-seed N\n\
          controllers: --controller {} (--adaptive = --controller moo)\n\
          fleet mode:  --fleet-n N [--fleet-mbytes MB] (cost-only, 1024-16384 workers)\n\
-         try:   flexcomm train --model host-mlp --strategy artopk-star --cr 0.01\n\
+         sweep mode:  flexcomm sweep --models A,B --strategies .. --nets .. \n\
+                      --controllers .. [--in-flight K] [--target-acc F] [--smoke]\n\
+         try:   flexcomm train --model mlp --strategy artopk-star --cr 0.01\n\
                 flexcomm train --strategy flexible --net c2-hostile --progress\n\
                 flexcomm train --strategy flexible --net c2 --controller gravac\n\
                 flexcomm train --fleet-n 4096 --net hetero --steps 100\n\
+                flexcomm sweep --models mlp,matreg --target-acc 0.6\n\
                 flexcomm cost --table1\n\
                 flexcomm schedule --name c2-congested",
+        model_names().collect::<Vec<_>>().join("|"),
         Strategy::names().collect::<Vec<_>>().join("|"),
         scenario_names().collect::<Vec<_>>().join("|"),
         controller_names().collect::<Vec<_>>().join("|"),
     );
 }
 
-/// Build a gradient source by model name.
+/// Build a gradient source by model spec: [`MODEL_TABLE`] names and
+/// `synthetic:<dim>` resolve through the registry
+/// ([`flexcomm::models::build_model`]); any other name is looked up as an
+/// AOT artifact for the PJRT runtime.
 fn build_source(model: &str, seed: u64) -> Result<Box<dyn GradSource>> {
-    match model {
-        "host-mlp" => Ok(Box::new(HostMlp::default_preset(seed))),
-        m if m.starts_with("synthetic:") => {
-            let dim: usize = m["synthetic:".len()..].parse().context("synthetic:<dim>")?;
-            Ok(Box::new(SyntheticGrad::new(dim, seed)))
-        }
-        name => {
-            let dir = find_artifacts_dir()?;
-            let arts = ModelArtifacts::load(&dir, name)?;
-            let engine = Engine::cpu()?;
-            Ok(Box::new(PjrtModel::load(&engine, arts, seed)?))
-        }
+    if model_names().any(|n| n == model) || model.starts_with("synthetic:") {
+        return Ok(build_model(model, seed)?);
     }
+    let dir = find_artifacts_dir()?;
+    let arts = ModelArtifacts::load(&dir, model)?;
+    let engine = Engine::cpu()?;
+    Ok(Box::new(PjrtModel::load(&engine, arts, seed)?))
+}
+
+/// `flexcomm sweep`: expand a model x strategy x net x controller grid and
+/// run every cell concurrently over ONE shared worker pool, then print the
+/// ranked time-to-accuracy table and emit BENCH_sweep.json + CSV.
+/// `--smoke` runs the verify.sh gate grid and enforces full coverage with
+/// every cell above its model's chance floor.
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut spec = if args.flag("smoke") { SweepSpec::smoke() } else { SweepSpec::default() };
+    let axis = |flag: &str, cur: &[String]| -> Vec<String> {
+        match args.opt(flag) {
+            Some(s) => s
+                .split(',')
+                .map(|x| x.trim().to_string())
+                .filter(|x| !x.is_empty())
+                .collect(),
+            None => cur.to_vec(),
+        }
+    };
+    spec.models = axis("models", &spec.models);
+    spec.strategies = axis("strategies", &spec.strategies);
+    spec.nets = axis("nets", &spec.nets);
+    spec.controllers = axis("controllers", &spec.controllers);
+    spec.workers = args.usize_or("workers", spec.workers)?;
+    spec.steps = args.u64_or("steps", spec.steps)?;
+    spec.steps_per_epoch = args.u64_or("steps-per-epoch", spec.steps_per_epoch)?;
+    spec.lr = args.f64_or("lr", spec.lr as f64)? as f32;
+    spec.momentum = args.f64_or("momentum", spec.momentum as f64)? as f32;
+    spec.cr = args.f64_or("cr", spec.cr)?;
+    spec.eval_every = args.u64_or("eval-every", spec.eval_every)?;
+    spec.seed = args.u64_or("seed", spec.seed)?;
+    spec.threads = args.usize_or("threads", spec.threads)?;
+    spec.in_flight = args.usize_or("in-flight", spec.in_flight)?;
+    spec.target_acc = args.f64_or("target-acc", spec.target_acc)?;
+    println!(
+        "flexcomm sweep: {} models x {} strategies x {} nets x {} controllers = {} cells \
+         (window {}, pool threads {})",
+        spec.models.len(),
+        spec.strategies.len(),
+        spec.nets.len(),
+        spec.controllers.len(),
+        spec.models.len() * spec.strategies.len() * spec.nets.len() * spec.controllers.len(),
+        spec.in_flight,
+        spec.threads,
+    );
+    let report = spec.run()?;
+    report.print_ranked();
+    let (json, csv) = report.write_files(
+        &args.str_or("out-json", "BENCH_sweep.json"),
+        &args.str_or("out-csv", "BENCH_sweep.csv"),
+    )?;
+    let (steps, evals, cells) = report.progress.snapshot();
+    println!(
+        "wrote {json} and {csv} ({cells} cells, {steps} steps, {evals} evals, {} failed)",
+        report.failed_cells()
+    );
+    if args.flag("smoke") {
+        report
+            .verify_full_coverage(&spec)
+            .map_err(|e| anyhow::anyhow!("sweep smoke gate: {e}"))?;
+        println!("sweep smoke gate: full row coverage, every cell above its chance floor");
+    }
+    Ok(())
 }
 
 fn cmd_train(args: &Args) -> Result<()> {

@@ -1,0 +1,530 @@
+//! A small first-party reverse-mode-autograd MLP ([`MlpSource`]) — the
+//! repo's first [`GradSource`] that *actually learns* a nonlinear task.
+//!
+//! The learner is deliberately tiny (a few hundred parameters) but real:
+//! a scalar tape ([`Tape`]) records the forward pass of a tanh MLP and a
+//! single reverse sweep produces exact gradients, micrograd-style. Two
+//! in-crate deterministic datasets exercise both head types:
+//!
+//! * **two-spirals** (softmax-CE head, 2 classes) — the classic
+//!   interleaved-arms task; linearly inseparable, so above-chance
+//!   accuracy proves the hidden layers are doing work.
+//! * **noisy sine** (MSE head, 1 output) — regression on
+//!   `0.8·sin(3u) + η`; "accuracy" is the fraction of held-out points
+//!   predicted within a fixed tolerance band.
+//!
+//! Everything is a pure function of `(seed, worker, n_workers, step)` —
+//! per-batch RNGs are derived with the same splitmix-style mixing as
+//! [`SyntheticGrad`](crate::runtime::host_model::SyntheticGrad) — so EF
+//! residuals, compressors and whole-run replay stay bitwise
+//! deterministic (DESIGN.md §7). Internally the tape is f64; the
+//! [`GradSource`] boundary is the crate-wide flat `Vec<f32>`.
+
+use std::f64::consts::PI;
+
+use crate::coordinator::worker::GradSource;
+use crate::tensor::Layout;
+use crate::util::rng::Rng;
+
+// ---------------------------------------------------------------------------
+// The tape: scalar reverse-mode autograd.
+// ---------------------------------------------------------------------------
+
+/// One tape node: its forward value plus up to two `(parent, ∂self/∂parent)`
+/// edges recorded at forward time. Leaves have zero parents.
+#[derive(Clone, Copy)]
+struct Node {
+    parents: [(u32, f64); 2],
+    n_parents: u8,
+    val: f64,
+}
+
+/// Append-only scalar tape. The forward pass pushes nodes in topological
+/// order, so one reverse sweep over the vec ([`Tape::backward`]) is a full
+/// reverse-mode gradient — no graph object, no recursion.
+struct Tape {
+    nodes: Vec<Node>,
+}
+
+impl Tape {
+    fn with_capacity(n: usize) -> Tape {
+        Tape { nodes: Vec::with_capacity(n) }
+    }
+
+    fn val(&self, i: usize) -> f64 {
+        self.nodes[i].val
+    }
+
+    fn leaf(&mut self, val: f64) -> usize {
+        self.nodes.push(Node { parents: [(0, 0.0); 2], n_parents: 0, val });
+        self.nodes.len() - 1
+    }
+
+    fn unary(&mut self, p: usize, val: f64, dp: f64) -> usize {
+        self.nodes.push(Node { parents: [(p as u32, dp), (0, 0.0)], n_parents: 1, val });
+        self.nodes.len() - 1
+    }
+
+    fn binary(&mut self, a: usize, b: usize, val: f64, da: f64, db: f64) -> usize {
+        self.nodes.push(Node {
+            parents: [(a as u32, da), (b as u32, db)],
+            n_parents: 2,
+            val,
+        });
+        self.nodes.len() - 1
+    }
+
+    fn add(&mut self, a: usize, b: usize) -> usize {
+        self.binary(a, b, self.nodes[a].val + self.nodes[b].val, 1.0, 1.0)
+    }
+
+    fn sub(&mut self, a: usize, b: usize) -> usize {
+        self.binary(a, b, self.nodes[a].val - self.nodes[b].val, 1.0, -1.0)
+    }
+
+    fn mul(&mut self, a: usize, b: usize) -> usize {
+        let (va, vb) = (self.nodes[a].val, self.nodes[b].val);
+        self.binary(a, b, va * vb, vb, va)
+    }
+
+    fn tanh(&mut self, a: usize) -> usize {
+        let t = self.nodes[a].val.tanh();
+        self.unary(a, t, 1.0 - t * t)
+    }
+
+    fn exp(&mut self, a: usize) -> usize {
+        let e = self.nodes[a].val.exp();
+        self.unary(a, e, e)
+    }
+
+    fn ln(&mut self, a: usize) -> usize {
+        let v = self.nodes[a].val;
+        self.unary(a, v.ln(), 1.0 / v)
+    }
+
+    /// `a + c` for a constant `c` (no gradient flows into the constant).
+    fn add_const(&mut self, a: usize, c: f64) -> usize {
+        self.unary(a, self.nodes[a].val + c, 1.0)
+    }
+
+    /// Reverse sweep from `out` (seeded with ∂out/∂out = 1). Returns the
+    /// adjoint of every node; callers read off the leaf slots.
+    fn backward(&self, out: usize) -> Vec<f64> {
+        let mut adj = vec![0.0f64; self.nodes.len()];
+        adj[out] = 1.0;
+        for i in (0..=out).rev() {
+            let g = adj[i];
+            if g == 0.0 {
+                continue;
+            }
+            let n = &self.nodes[i];
+            for k in 0..n.n_parents as usize {
+                let (p, d) = n.parents[k];
+                adj[p as usize] += g * d;
+            }
+        }
+        adj
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Datasets + heads.
+// ---------------------------------------------------------------------------
+
+/// Which loss head (and therefore which dataset family) the MLP runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Head {
+    /// Softmax cross-entropy over `out` logits; targets are class ids.
+    Softmax,
+    /// Scalar MSE; targets are real values, "accuracy" = within-band rate.
+    Mse,
+}
+
+/// Tolerance band for the MSE head's within-band "accuracy" (the sine
+/// target lives in `[-0.8, 0.8]`, so a chance predictor scores near zero).
+const MSE_ACC_BAND: f64 = 0.2;
+
+/// A reverse-mode-autograd tanh MLP over a deterministic in-crate dataset.
+///
+/// Construct via [`MlpSource::two_spirals`] (classification) or
+/// [`MlpSource::noisy_sine`] (regression); both are rows of
+/// [`MODEL_TABLE`](crate::models::MODEL_TABLE).
+pub struct MlpSource {
+    /// Layer widths, input first: e.g. `[2, 24, 16, 2]`.
+    sizes: Vec<usize>,
+    head: Head,
+    tag: &'static str,
+    layout: Layout,
+    seed: u64,
+    /// Per-worker per-step minibatch size.
+    batch: usize,
+    /// Input noise std (spirals) / target noise std (sine).
+    noise: f32,
+    /// Held-out eval batch, built lazily: (inputs flat, targets).
+    eval_cache: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl MlpSource {
+    fn new(
+        sizes: Vec<usize>,
+        head: Head,
+        tag: &'static str,
+        seed: u64,
+        batch: usize,
+        noise: f32,
+    ) -> Self {
+        assert!(sizes.len() >= 2, "need at least input and output layers");
+        let mut layer_sizes: Vec<(String, usize)> = Vec::new();
+        for i in 1..sizes.len() {
+            layer_sizes.push((format!("fc{}.w", i - 1), sizes[i - 1] * sizes[i]));
+            layer_sizes.push((format!("fc{}.b", i - 1), sizes[i]));
+        }
+        let refs: Vec<(&str, usize)> =
+            layer_sizes.iter().map(|(n, s)| (n.as_str(), *s)).collect();
+        let layout = Layout::from_sizes(&refs);
+        MlpSource { sizes, head, tag, layout, seed, batch, noise, eval_cache: None }
+    }
+
+    /// Two interleaved spiral arms, softmax-CE head, sizes `[2, 24, 16, 2]`.
+    pub fn two_spirals(seed: u64) -> Self {
+        MlpSource::new(vec![2, 24, 16, 2], Head::Softmax, "mlp-spirals", seed, 16, 0.06)
+    }
+
+    /// Noisy sine regression, MSE head, sizes `[1, 16, 16, 1]`.
+    pub fn noisy_sine(seed: u64) -> Self {
+        MlpSource::new(vec![1, 16, 16, 1], Head::Mse, "mlp-sine", seed, 16, 0.05)
+    }
+
+    fn in_features(&self) -> usize {
+        self.sizes[0]
+    }
+
+    fn out_features(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Draw one (input, target) pair. Softmax: a point on spiral arm `c`
+    /// with Gaussian jitter, target = class id. MSE: `u ∈ [-1, 1]`,
+    /// target = `0.8·sin(3u) + η`.
+    fn sample(&self, rng: &mut Rng, x: &mut Vec<f32>) -> f32 {
+        match self.head {
+            Head::Softmax => {
+                let c = rng.below(2);
+                let t = 0.3 + 0.7 * rng.f64();
+                let th = t * 2.0 * PI + c as f64 * PI;
+                x.push((t * th.sin()) as f32 + rng.normal_f32(0.0, self.noise));
+                x.push((t * th.cos()) as f32 + rng.normal_f32(0.0, self.noise));
+                c as f32
+            }
+            Head::Mse => {
+                let u = 2.0 * rng.f64() - 1.0;
+                x.push(u as f32);
+                (0.8 * (3.0 * u).sin()) as f32 + rng.normal_f32(0.0, self.noise)
+            }
+        }
+    }
+
+    /// Deterministic minibatch for `(worker, step)` — same splitmix-style
+    /// seed derivation as `SyntheticGrad`, so replay is bitwise.
+    fn batch_for(&self, worker: usize, step: u64, batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(
+            self.seed
+                ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ step.wrapping_mul(0xA076_1D64_78BD_642F),
+        );
+        let mut x = Vec::with_capacity(batch * self.in_features());
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let t = self.sample(&mut rng, &mut x);
+            y.push(t);
+        }
+        (x, y)
+    }
+
+    /// Tape forward for one sample: returns the output-logit node ids.
+    /// `params` leaves occupy tape slots `0..dim()` (pushed by the caller),
+    /// so leaf index == flat parameter index.
+    fn forward_tape(&self, tape: &mut Tape, x: &[f32]) -> Vec<usize> {
+        let mut acts: Vec<usize> = x.iter().map(|&v| tape.leaf(v as f64)).collect();
+        let mut off = 0usize;
+        for li in 1..self.sizes.len() {
+            let (din, dout) = (self.sizes[li - 1], self.sizes[li]);
+            let w_off = off;
+            let b_off = off + din * dout;
+            let mut next = Vec::with_capacity(dout);
+            for o in 0..dout {
+                // acc = b[o] + Σ_i w[o*din+i] * a[i]
+                let mut acc = b_off + o; // bias leaf
+                for (i, &a) in acts.iter().enumerate() {
+                    let prod = tape.mul(w_off + o * din + i, a);
+                    acc = tape.add(acc, prod);
+                }
+                // tanh on hidden layers, identity on the output layer.
+                next.push(if li + 1 < self.sizes.len() { tape.tanh(acc) } else { acc });
+            }
+            acts = next;
+            off = b_off + dout;
+        }
+        acts
+    }
+
+    /// Per-sample loss node from the logits and target.
+    fn loss_tape(&self, tape: &mut Tape, logits: &[usize], target: f32) -> usize {
+        match self.head {
+            Head::Softmax => {
+                // Stable log-sum-exp: subtracting the max as a CONSTANT
+                // leaves the gradient (softmax) unchanged.
+                let m = logits
+                    .iter()
+                    .map(|&l| tape.val(l))
+                    .fold(f64::NEG_INFINITY, f64::max);
+                let mut sum = None;
+                for &l in logits {
+                    let shifted = tape.add_const(l, -m);
+                    let e = tape.exp(shifted);
+                    sum = Some(match sum {
+                        None => e,
+                        Some(s) => tape.add(s, e),
+                    });
+                }
+                let lse = tape.ln(sum.unwrap());
+                let lse = tape.add_const(lse, m);
+                tape.sub(lse, logits[target as usize])
+            }
+            Head::Mse => {
+                let t = tape.leaf(target as f64);
+                let e = tape.sub(logits[0], t);
+                tape.mul(e, e)
+            }
+        }
+    }
+
+    /// Plain (tape-free) forward for eval.
+    fn forward_plain(&self, params: &[f32], x: &[f32]) -> Vec<f64> {
+        let mut acts: Vec<f64> = x.iter().map(|&v| v as f64).collect();
+        let mut off = 0usize;
+        for li in 1..self.sizes.len() {
+            let (din, dout) = (self.sizes[li - 1], self.sizes[li]);
+            let w = &params[off..off + din * dout];
+            let b = &params[off + din * dout..off + din * dout + dout];
+            let mut next = Vec::with_capacity(dout);
+            for o in 0..dout {
+                let mut acc = b[o] as f64;
+                for (i, &a) in acts.iter().enumerate() {
+                    acc += w[o * din + i] as f64 * a;
+                }
+                next.push(if li + 1 < self.sizes.len() { acc.tanh() } else { acc });
+            }
+            acts = next;
+            off += din * dout + dout;
+        }
+        acts
+    }
+
+    /// Held-out loss/accuracy on one sample's plain-forward outputs.
+    fn score(&self, out: &[f64], target: f32) -> (f64, bool) {
+        match self.head {
+            Head::Softmax => {
+                let m = out.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                let lse = m + out.iter().map(|&z| (z - m).exp()).sum::<f64>().ln();
+                let loss = lse - out[target as usize];
+                let pred = out
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| crate::tensor::nan_min_cmp(*a.1, *b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0);
+                (loss, pred == target as usize)
+            }
+            Head::Mse => {
+                let e = out[0] - target as f64;
+                (e * e, e.abs() < MSE_ACC_BAND)
+            }
+        }
+    }
+}
+
+impl GradSource for MlpSource {
+    fn dim(&self) -> usize {
+        self.layout.total()
+    }
+
+    fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        let mut rng = Rng::new(self.seed ^ 0x51AB_D00D);
+        let mut p = vec![0.0f32; self.dim()];
+        let mut off = 0usize;
+        for li in 1..self.sizes.len() {
+            let (din, dout) = (self.sizes[li - 1], self.sizes[li]);
+            // Xavier-ish for tanh; biases stay zero.
+            let std = (1.0 / din as f64).sqrt() as f32;
+            rng.fill_normal(&mut p[off..off + din * dout], std);
+            off += din * dout + dout;
+        }
+        p
+    }
+
+    fn grad(
+        &self,
+        params: &[f32],
+        worker: usize,
+        _n_workers: usize,
+        step: u64,
+    ) -> (f64, Vec<f32>) {
+        let (x, y) = self.batch_for(worker, step, self.batch);
+        let dim = self.dim();
+        // One tape per batch: parameter leaves first (leaf index == flat
+        // parameter index), then every sample's forward + loss, summed.
+        // ~2 nodes per weight per sample (mul + add) plus activations/head.
+        let mut tape = Tape::with_capacity(dim * (1 + 3 * self.batch));
+        for &p in params {
+            tape.leaf(p as f64);
+        }
+        let mut total = None;
+        for s in 0..self.batch {
+            let xi = &x[s * self.in_features()..(s + 1) * self.in_features()];
+            let logits = self.forward_tape(&mut tape, xi);
+            let loss = self.loss_tape(&mut tape, &logits, y[s]);
+            total = Some(match total {
+                None => loss,
+                Some(t) => tape.add(t, loss),
+            });
+        }
+        let total = total.expect("batch >= 1");
+        let adj = tape.backward(total);
+        let inv_b = 1.0 / self.batch as f64;
+        let grad: Vec<f32> = adj[..dim].iter().map(|&g| (g * inv_b) as f32).collect();
+        (tape.val(total) * inv_b, grad)
+    }
+
+    fn eval(&mut self, params: &[f32]) -> (f64, f64) {
+        const EVAL_N: usize = 256;
+        if self.eval_cache.is_none() {
+            // Worker-independent held-out draw (disjoint from any training
+            // batch's (worker, step) seed by the usize::MAX/2 convention).
+            self.eval_cache = Some(self.batch_for(usize::MAX / 2, u64::MAX / 2, EVAL_N));
+        }
+        let (x, y) = self.eval_cache.as_ref().unwrap();
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for s in 0..EVAL_N {
+            let xi = &x[s * self.in_features()..(s + 1) * self.in_features()];
+            let out = self.forward_plain(params, xi);
+            let (l, ok) = self.score(&out, y[s]);
+            loss += l;
+            correct += ok as usize;
+        }
+        (loss / EVAL_N as f64, correct as f64 / EVAL_N as f64)
+    }
+
+    fn name(&self) -> String {
+        format!("{}{:?}", self.tag, self.sizes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Central finite differences agree with the tape gradient — the
+    /// autograd correctness pin (satellite: gradcheck vs FD).
+    fn gradcheck(mut src: MlpSource) {
+        let params = src.init_params();
+        let (_, g) = src.grad(&params, 0, 2, 3);
+        let dim = src.dim();
+        let eps = 1e-3f32;
+        for &i in &[0usize, 5, 17, dim / 2, dim - 1] {
+            let mut p = params.clone();
+            p[i] = params[i] + eps;
+            let (lp, _) = src.grad(&p, 0, 2, 3);
+            p[i] = params[i] - eps;
+            let (lm, _) = src.grad(&p, 0, 2, 3);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let tol = 2e-2 * (1.0 + fd.abs());
+            assert!(
+                (g[i] as f64 - fd).abs() < tol,
+                "{}: param {i}: autograd {} vs fd {fd}",
+                src.name(),
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn spirals_gradcheck_vs_finite_differences() {
+        gradcheck(MlpSource::two_spirals(7));
+    }
+
+    #[test]
+    fn sine_gradcheck_vs_finite_differences() {
+        gradcheck(MlpSource::noisy_sine(11));
+    }
+
+    #[test]
+    fn grads_deterministic_and_vary_by_worker_and_step() {
+        let mut src = MlpSource::two_spirals(5);
+        let p = src.init_params();
+        let (l1, g1) = src.grad(&p, 1, 4, 9);
+        let (l2, g2) = src.grad(&p, 1, 4, 9);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1, g2);
+        let (_, g3) = src.grad(&p, 2, 4, 9);
+        let (_, g4) = src.grad(&p, 1, 4, 10);
+        assert_ne!(g1, g3, "worker shards must differ");
+        assert_ne!(g1, g4, "steps must differ");
+    }
+
+    /// Momentum SGD on the tape gradients learns the spirals well above
+    /// the 50% chance floor — the "actually learns" pin for the
+    /// classification head.
+    #[test]
+    fn spirals_learn_with_momentum_sgd() {
+        let mut src = MlpSource::two_spirals(1);
+        let mut p = src.init_params();
+        let (loss0, acc0) = src.eval(&p);
+        let mut m = vec![0.0f32; p.len()];
+        for step in 0..500u64 {
+            let (_, g) = src.grad(&p, 0, 1, step);
+            for i in 0..p.len() {
+                m[i] = 0.9 * m[i] + g[i];
+                p[i] -= 0.3 * m[i];
+            }
+        }
+        let (loss1, acc1) = src.eval(&p);
+        assert!(loss1 < loss0 * 0.8, "loss {loss0} -> {loss1}");
+        assert!(acc1 > 0.75 && acc1 > acc0, "accuracy {acc0} -> {acc1}");
+    }
+
+    /// The MSE head fits the sine to within the accuracy band on most of
+    /// the held-out points.
+    #[test]
+    fn sine_learns_with_momentum_sgd() {
+        let mut src = MlpSource::noisy_sine(2);
+        let mut p = src.init_params();
+        let (loss0, _) = src.eval(&p);
+        let mut m = vec![0.0f32; p.len()];
+        for step in 0..500u64 {
+            let (_, g) = src.grad(&p, 0, 1, step);
+            for i in 0..p.len() {
+                m[i] = 0.9 * m[i] + g[i];
+                p[i] -= 0.1 * m[i];
+            }
+        }
+        let (loss1, acc1) = src.eval(&p);
+        assert!(loss1 < loss0 * 0.5, "loss {loss0} -> {loss1}");
+        assert!(acc1 > 0.5, "within-band accuracy {acc1}");
+    }
+
+    #[test]
+    fn layout_covers_dim_and_names_layers() {
+        let src = MlpSource::two_spirals(0);
+        assert_eq!(src.layout().total(), src.dim());
+        assert_eq!(src.layout().num_layers(), 6); // 3 layers x (w, b)
+        assert_eq!(src.layout().layers[0].name, "fc0.w");
+        // [2,24,16,2]: 2*24+24 + 24*16+16 + 16*2+2
+        assert_eq!(src.dim(), 72 + 400 + 34);
+    }
+}

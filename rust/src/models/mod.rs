@@ -1,0 +1,198 @@
+//! Real-workload learners + the one model-name table.
+//!
+//! Every built-in [`GradSource`] is a row of [`MODEL_TABLE`] — the same
+//! single-registry pattern as
+//! [`STRATEGY_TABLE`](crate::coordinator::strategy::STRATEGY_TABLE),
+//! [`NET_TABLE`](crate::netsim::model::NET_TABLE) and
+//! [`CONTROLLER_TABLE`](crate::coordinator::controller::CONTROLLER_TABLE):
+//! CLI parsing (`--model`), the sweep server's model axis, `--help` text
+//! and error messages all read from here, so a new learner is one new row.
+//!
+//! The learners themselves live in the submodules: [`mlp::MlpSource`]
+//! (first-party reverse-mode autograd, two-spirals / noisy-sine) and
+//! [`regression::MatrixRegressionSource`] (NNUE-style closed-form matrix
+//! regression with bitwise JSON checkpoints). Both speak the flat-`Vec`
+//! [`GradSource`] contract, so EF residuals, every compressor and Session
+//! checkpoints work on them unchanged.
+
+pub mod mlp;
+pub mod regression;
+
+pub use mlp::MlpSource;
+pub use regression::{MatRegCheckpoint, MatrixRegressionSource};
+
+use crate::coordinator::worker::GradSource;
+use crate::runtime::host_model::{HostMlp, SyntheticGrad};
+
+/// One registered model: its CLI name, a one-line summary for `--help`,
+/// a seed-parameterized constructor, and the per-model defaults the sweep
+/// server reads — a suggested learning rate (`lr_hint`; parameter scales
+/// differ wildly between learners, one global default diverges some and
+/// stalls others) and the accuracy a parameter-free guesser scores
+/// (`chance_acc`; the sweep smoke gate's "demonstrably above chance"
+/// floor).
+pub struct ModelEntry {
+    pub name: &'static str,
+    pub summary: &'static str,
+    /// Momentum-SGD learning rate this learner is known to converge under.
+    pub lr_hint: f32,
+    /// Top-1 accuracy of random guessing on this learner's eval metric.
+    pub chance_acc: f64,
+    pub build: fn(seed: u64) -> Box<dyn GradSource>,
+}
+
+/// The one model-name table (see module docs). `synthetic:<dim>` is the
+/// only spec handled outside the table (it carries a parameter), exactly
+/// as `trace:<path>` is for [`NET_TABLE`](crate::netsim::model::NET_TABLE).
+pub const MODEL_TABLE: &[ModelEntry] = &[
+    ModelEntry {
+        name: "mlp",
+        summary: "two-spirals tanh MLP, softmax-CE head (tape autograd)",
+        lr_hint: 0.3,
+        chance_acc: 0.5, // 2 balanced classes
+        build: |seed| Box::new(MlpSource::two_spirals(seed)),
+    },
+    ModelEntry {
+        name: "mlp-sine",
+        summary: "noisy-sine tanh MLP, MSE head (tape autograd)",
+        lr_hint: 0.1,
+        // Within-band regression accuracy: a constant-zero predictor is
+        // inside the +/-0.2 band for roughly a third of the sine's range.
+        chance_acc: 0.35,
+        build: |seed| Box::new(MlpSource::noisy_sine(seed)),
+    },
+    ModelEntry {
+        name: "matreg",
+        summary: "NNUE-style CReLU matrix regression, JSON checkpoints",
+        lr_hint: 0.05,
+        chance_acc: 0.1, // +/-0.1 band around a ~unit-scale teacher output
+        build: |seed| Box::new(MatrixRegressionSource::default_preset(seed)),
+    },
+    ModelEntry {
+        name: "host-mlp",
+        summary: "Gaussian-clusters hand-backprop MLP (64->256->128->16)",
+        lr_hint: 0.3,
+        chance_acc: 1.0 / 16.0, // 16 balanced clusters
+        build: |seed| Box::new(HostMlp::default_preset(seed)),
+    },
+];
+
+/// The registry's suggested learning rate for a model spec (the sweep
+/// server's per-cell default; `synthetic:<dim>` and unknown specs fall
+/// back to a conservative 0.1 — validation rejects unknowns elsewhere).
+pub fn lr_hint(spec: &str) -> f32 {
+    MODEL_TABLE.iter().find(|e| e.name == spec).map_or(0.1, |e| e.lr_hint)
+}
+
+/// Random-guess accuracy for a model spec (the sweep smoke gate's floor;
+/// specs outside the table score 0.0, i.e. any accuracy passes).
+pub fn chance_acc(spec: &str) -> f64 {
+    MODEL_TABLE.iter().find(|e| e.name == spec).map_or(0.0, |e| e.chance_acc)
+}
+
+/// Typed model-axis errors ([`ConfigError::Model`](crate::coordinator::session::ConfigError)
+/// wraps this). The unknown-spec message lists every valid name, matching
+/// the `NET_TABLE` error style.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ModelError {
+    UnknownModel { spec: String },
+    /// Checkpoint (de)serialization failures ([`MatRegCheckpoint`]).
+    Checkpoint { msg: String },
+}
+
+impl std::fmt::Display for ModelError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ModelError::UnknownModel { spec } => write!(
+                f,
+                "unknown model `{spec}` (valid: {}; or `synthetic:<dim>` for a cost-only source)",
+                model_names().collect::<Vec<_>>().join(", ")
+            ),
+            ModelError::Checkpoint { msg } => write!(f, "checkpoint: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+/// Every valid model name, in table order (CLI help text).
+pub fn model_names() -> impl Iterator<Item = &'static str> {
+    MODEL_TABLE.iter().map(|e| e.name)
+}
+
+/// Resolve a model spec to a constructed [`GradSource`]: a [`MODEL_TABLE`]
+/// name, or `synthetic:<dim>` for the cost-only synthetic source.
+pub fn build_model(spec: &str, seed: u64) -> Result<Box<dyn GradSource>, ModelError> {
+    if let Some(dim) = spec.strip_prefix("synthetic:") {
+        let dim: usize = dim
+            .parse()
+            .map_err(|_| ModelError::UnknownModel { spec: spec.to_string() })?;
+        if dim == 0 {
+            return Err(ModelError::UnknownModel { spec: spec.to_string() });
+        }
+        return Ok(Box::new(SyntheticGrad::new(dim, seed)));
+    }
+    match MODEL_TABLE.iter().find(|e| e.name == spec) {
+        Some(e) => Ok((e.build)(seed)),
+        None => Err(ModelError::UnknownModel { spec: spec.to_string() }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Every table row constructs, self-reports a consistent dim/layout,
+    /// and produces a deterministic gradient.
+    #[test]
+    fn table_rows_construct_and_are_consistent() {
+        for e in MODEL_TABLE {
+            let mut m = (e.build)(5);
+            let p = m.init_params();
+            assert_eq!(p.len(), m.dim(), "{}", e.name);
+            assert_eq!(m.layout().total(), m.dim(), "{}", e.name);
+            let (l1, g1) = m.grad(&p, 0, 2, 1);
+            let (l2, g2) = m.grad(&p, 0, 2, 1);
+            assert_eq!(l1.to_bits(), l2.to_bits(), "{}", e.name);
+            assert_eq!(g1, g2, "{}", e.name);
+            assert_eq!(g1.len(), m.dim(), "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn build_model_resolves_names_and_synthetic() {
+        for e in MODEL_TABLE {
+            assert!(build_model(e.name, 0).unwrap().dim() > 0, "{}", e.name);
+        }
+        assert_eq!(build_model("synthetic:1000", 0).unwrap().dim(), 1000);
+        assert!(build_model("synthetic:0", 0).is_err());
+        assert!(build_model("synthetic:abc", 0).is_err());
+    }
+
+    /// Per-model defaults read by the sweep server: every row's lr hint
+    /// is usable and its chance floor is a proper probability.
+    #[test]
+    fn table_hints_are_sane() {
+        for e in MODEL_TABLE {
+            assert!(e.lr_hint > 0.0 && e.lr_hint <= 1.0, "{}", e.name);
+            assert!(e.chance_acc >= 0.0 && e.chance_acc < 1.0, "{}", e.name);
+            assert_eq!(lr_hint(e.name), e.lr_hint, "{}", e.name);
+            assert_eq!(chance_acc(e.name), e.chance_acc, "{}", e.name);
+        }
+        assert_eq!(lr_hint("synthetic:100"), 0.1);
+        assert_eq!(chance_acc("synthetic:100"), 0.0);
+    }
+
+    /// The unknown-model error lists every valid name plus the synthetic
+    /// hint — the NET_TABLE error style (satellite: listing parse errors).
+    #[test]
+    fn unknown_model_error_lists_the_table() {
+        let err = build_model("nope", 0).unwrap_err();
+        let msg = err.to_string();
+        for e in MODEL_TABLE {
+            assert!(msg.contains(e.name), "{msg}");
+        }
+        assert!(msg.contains("synthetic:<dim>"), "{msg}");
+        assert!(matches!(err, ModelError::UnknownModel { .. }));
+    }
+}

@@ -1,0 +1,481 @@
+//! [`MatrixRegressionSource`] — an NNUE-style fixed-size matrix regression
+//! learner with hand-rolled closed-form gradients and a JSON-serializable
+//! checkpoint.
+//!
+//! The model is the classic efficiently-updatable shape: one dense input
+//! matrix into a clipped-ReLU (`clamp(·, 0, 1)`) hidden band, then a
+//! scalar linear head. Targets come from a *teacher* network of the same
+//! shape (frozen, drawn from the seed) plus small Gaussian noise, so the
+//! task is exactly realizable and the loss floor is the noise power —
+//! a clean target for the accuracy-vs-CR pareto measurements the sweep
+//! server produces.
+//!
+//! Gradients are written out by hand (no tape): the CReLU derivative is
+//! the indicator of the open band `(0, 1)`, everything else is the chain
+//! rule on two matmuls. Checkpoints ([`MatRegCheckpoint`]) serialize
+//! parameters AND gradients to JSON using Rust's shortest-roundtrip float
+//! formatting, so `save → load` is **bitwise** lossless for every finite
+//! f32 — pinned by the round-trip test below.
+
+use crate::coordinator::worker::GradSource;
+use crate::models::ModelError;
+use crate::tensor::Layout;
+use crate::util::rng::Rng;
+
+/// Within-band tolerance for the regression "accuracy": the fraction of
+/// held-out points predicted within ±0.1 of the teacher target.
+const ACC_BAND: f64 = 0.1;
+
+/// Teacher-target observation noise (std) — the realizable loss floor.
+const TARGET_NOISE: f32 = 0.02;
+
+/// NNUE-style `x → clamp(W1·x + b1, 0, 1) → w2·h + b2` regression.
+pub struct MatrixRegressionSource {
+    input: usize,
+    hidden: usize,
+    layout: Layout,
+    seed: u64,
+    batch: usize,
+    /// Frozen teacher parameters (same flat layout as the student).
+    teacher: Vec<f32>,
+    eval_cache: Option<(Vec<f32>, Vec<f32>)>,
+}
+
+impl MatrixRegressionSource {
+    /// The registry preset: 8 features into a 16-wide CReLU band.
+    pub fn default_preset(seed: u64) -> Self {
+        MatrixRegressionSource::new(8, 16, seed, 32)
+    }
+
+    pub fn new(input: usize, hidden: usize, seed: u64, batch: usize) -> Self {
+        let layout = Layout::from_sizes(&[
+            ("w1", input * hidden),
+            ("b1", hidden),
+            ("w2", hidden),
+            ("b2", 1),
+        ]);
+        let dim = layout.total();
+        // The teacher is a fixed random net of the same shape: w1 spread
+        // wide enough that the CReLU band actually clips, b1 centered in
+        // the band, a small head.
+        let mut rng = Rng::new(seed ^ 0x7EAC_4E2);
+        let mut teacher = vec![0.0f32; dim];
+        rng.fill_normal(&mut teacher[..input * hidden], 0.6);
+        for j in 0..hidden {
+            teacher[input * hidden + j] = rng.normal_f32(0.5, 0.1);
+        }
+        let w2_off = input * hidden + hidden;
+        let w2_std = (1.0 / hidden as f64).sqrt() as f32;
+        rng.fill_normal(&mut teacher[w2_off..w2_off + hidden], w2_std);
+        teacher[dim - 1] = 0.0;
+        MatrixRegressionSource {
+            input,
+            hidden,
+            layout,
+            seed,
+            batch,
+            teacher,
+            eval_cache: None,
+        }
+    }
+
+    /// Forward pass; when `h_out` is given, the post-CReLU hidden vector
+    /// and pre-activations are written for the backward pass.
+    fn forward(
+        &self,
+        params: &[f32],
+        x: &[f32],
+        mut pre_h: Option<(&mut [f64], &mut [f64])>,
+    ) -> f64 {
+        let (inp, hid) = (self.input, self.hidden);
+        let w2_off = inp * hid + hid;
+        let mut y = params[w2_off + hid] as f64; // b2
+        for j in 0..hid {
+            let mut pre = params[inp * hid + j] as f64; // b1[j]
+            for i in 0..inp {
+                pre += params[j * inp + i] as f64 * x[i] as f64;
+            }
+            let h = pre.clamp(0.0, 1.0);
+            if let Some((pres, hs)) = pre_h.as_mut() {
+                pres[j] = pre;
+                hs[j] = h;
+            }
+            y += params[w2_off + j] as f64 * h;
+        }
+        y
+    }
+
+    /// Deterministic `(inputs, teacher targets)` batch for `(worker, step)`
+    /// — same splitmix-style derivation as the other sources.
+    fn batch_for(&self, worker: usize, step: u64, batch: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(
+            self.seed
+                ^ (worker as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ step.wrapping_mul(0xA076_1D64_78BD_642F),
+        );
+        let mut x = Vec::with_capacity(batch * self.input);
+        let mut y = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let s0 = x.len();
+            for _ in 0..self.input {
+                x.push(rng.normal_f32(0.0, 1.0));
+            }
+            let t = self.forward(&self.teacher, &x[s0..], None);
+            y.push(t as f32 + rng.normal_f32(0.0, TARGET_NOISE));
+        }
+        (x, y)
+    }
+
+    /// Bundle `(params, grads)` at `step` into a serializable checkpoint.
+    /// `grad` is `&self`-pure, so the caller owns both vectors — the source
+    /// never caches them.
+    pub fn checkpoint(&self, step: u64, params: &[f32], grads: &[f32]) -> MatRegCheckpoint {
+        MatRegCheckpoint {
+            model: GradSource::name(self),
+            step,
+            params: params.to_vec(),
+            grads: grads.to_vec(),
+        }
+    }
+}
+
+impl GradSource for MatrixRegressionSource {
+    fn dim(&self) -> usize {
+        self.layout.total()
+    }
+
+    fn layout(&self) -> &Layout {
+        &self.layout
+    }
+
+    fn init_params(&mut self) -> Vec<f32> {
+        let (inp, hid) = (self.input, self.hidden);
+        let mut rng = Rng::new(self.seed ^ 0x57CD_E47);
+        let mut p = vec![0.0f32; self.dim()];
+        rng.fill_normal(&mut p[..inp * hid], 0.3);
+        for j in 0..hid {
+            // Start inside the CReLU band so gradients flow from step 0.
+            p[inp * hid + j] = rng.normal_f32(0.5, 0.05);
+        }
+        let w2_off = inp * hid + hid;
+        rng.fill_normal(&mut p[w2_off..w2_off + hid], 0.1);
+        p
+    }
+
+    fn grad(
+        &self,
+        params: &[f32],
+        worker: usize,
+        _n_workers: usize,
+        step: u64,
+    ) -> (f64, Vec<f32>) {
+        let (inp, hid) = (self.input, self.hidden);
+        let w2_off = inp * hid + hid;
+        let (x, y) = self.batch_for(worker, step, self.batch);
+        let mut g = vec![0.0f64; self.dim()];
+        let mut pre = vec![0.0f64; hid];
+        let mut h = vec![0.0f64; hid];
+        let mut loss = 0.0f64;
+        for s in 0..self.batch {
+            let xi = &x[s * inp..(s + 1) * inp];
+            let pred = self.forward(params, xi, Some((&mut pre, &mut h)));
+            let e = pred - y[s] as f64;
+            loss += e * e;
+            let dy = 2.0 * e;
+            g[self.dim() - 1] += dy; // b2
+            for j in 0..hid {
+                g[w2_off + j] += dy * h[j];
+                // CReLU subgradient: the open band (0, 1) passes, the
+                // clipped rails block.
+                if pre[j] > 0.0 && pre[j] < 1.0 {
+                    let dpre = dy * params[w2_off + j] as f64;
+                    g[inp * hid + j] += dpre; // b1[j]
+                    for i in 0..inp {
+                        g[j * inp + i] += dpre * xi[i] as f64;
+                    }
+                }
+            }
+        }
+        let inv_b = 1.0 / self.batch as f64;
+        (loss * inv_b, g.iter().map(|&v| (v * inv_b) as f32).collect())
+    }
+
+    fn eval(&mut self, params: &[f32]) -> (f64, f64) {
+        const EVAL_N: usize = 256;
+        if self.eval_cache.is_none() {
+            self.eval_cache = Some(self.batch_for(usize::MAX / 2, u64::MAX / 2, EVAL_N));
+        }
+        let (x, y) = self.eval_cache.as_ref().unwrap();
+        let mut loss = 0.0f64;
+        let mut within = 0usize;
+        for s in 0..EVAL_N {
+            let pred = self.forward(params, &x[s * self.input..(s + 1) * self.input], None);
+            let e = pred - y[s] as f64;
+            loss += e * e;
+            within += (e.abs() < ACC_BAND) as usize;
+        }
+        (loss / EVAL_N as f64, within as f64 / EVAL_N as f64)
+    }
+
+    fn name(&self) -> String {
+        format!("matreg[{}x{}]", self.input, self.hidden)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint: hand-rolled JSON (the repo has no serde — DESIGN.md §6), with
+// shortest-roundtrip float formatting so finite f32s survive bitwise.
+// ---------------------------------------------------------------------------
+
+/// A `(model, step, params, grads)` snapshot. `to_json`/`from_json` are
+/// exact inverses on finite values: Rust's `{}` formatting of an `f32` is
+/// the shortest string that parses back to the identical bits.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatRegCheckpoint {
+    pub model: String,
+    pub step: u64,
+    pub params: Vec<f32>,
+    pub grads: Vec<f32>,
+}
+
+impl MatRegCheckpoint {
+    pub fn to_json(&self) -> String {
+        let mut s = String::with_capacity(32 + 12 * (self.params.len() + self.grads.len()));
+        s.push_str("{\"model\":\"");
+        // The model tag is internal ASCII (`matreg[8x16]`) — escape the
+        // JSON delimiters anyway so a hand-edited tag cannot corrupt the
+        // file.
+        for c in self.model.chars() {
+            match c {
+                '"' => s.push_str("\\\""),
+                '\\' => s.push_str("\\\\"),
+                c => s.push(c),
+            }
+        }
+        s.push_str("\",\"step\":");
+        s.push_str(&self.step.to_string());
+        push_f32_array(&mut s, ",\"params\":[", &self.params);
+        push_f32_array(&mut s, ",\"grads\":[", &self.grads);
+        s.push('}');
+        s
+    }
+
+    pub fn from_json(text: &str) -> Result<Self, ModelError> {
+        let model = parse_string_field(text, "model")?;
+        let step_raw = field_value(text, "step")?;
+        let step: u64 = step_raw
+            .trim()
+            .parse()
+            .map_err(|_| bad(format!("step `{step_raw}` is not a u64")))?;
+        Ok(MatRegCheckpoint {
+            model,
+            step,
+            params: parse_f32_array(text, "params")?,
+            grads: parse_f32_array(text, "grads")?,
+        })
+    }
+
+    pub fn save(&self, path: &str) -> Result<(), ModelError> {
+        std::fs::write(path, self.to_json())
+            .map_err(|e| bad(format!("write {path}: {e}")))
+    }
+
+    pub fn load(path: &str) -> Result<Self, ModelError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| bad(format!("read {path}: {e}")))?;
+        MatRegCheckpoint::from_json(&text)
+    }
+}
+
+fn bad(msg: String) -> ModelError {
+    ModelError::Checkpoint { msg }
+}
+
+fn push_f32_array(s: &mut String, prefix: &str, vals: &[f32]) {
+    use std::fmt::Write;
+    s.push_str(prefix);
+    for (i, v) in vals.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        // `{}` on f32 is shortest-roundtrip; non-finite values print as
+        // `NaN`/`inf`/`-inf`, which `f32::from_str` also accepts (strictly
+        // that is beyond JSON, but this is a first-party format).
+        let _ = write!(s, "{v}");
+    }
+    s.push(']');
+}
+
+/// The raw text after `"key":` up to the next top-level delimiter.
+fn field_value<'a>(text: &'a str, key: &str) -> Result<&'a str, ModelError> {
+    let pat = format!("\"{key}\":");
+    let at = text
+        .find(&pat)
+        .ok_or_else(|| bad(format!("missing field `{key}`")))?;
+    let rest = &text[at + pat.len()..];
+    let end = rest.find([',', '}', ']']).unwrap_or(rest.len());
+    Ok(&rest[..end])
+}
+
+fn parse_string_field(text: &str, key: &str) -> Result<String, ModelError> {
+    // Scan to the closing unescaped quote directly — the value may contain
+    // `]`/`}` (the model tag does: `matreg[8x16]`), so the delimiter-based
+    // `field_value` scan would truncate it.
+    let pat = format!("\"{key}\":\"");
+    let at = text
+        .find(&pat)
+        .ok_or_else(|| bad(format!("missing string field `{key}`")))?;
+    let rest = &text[at + pat.len()..];
+    let mut out = String::new();
+    let mut escaped = false;
+    for c in rest.chars() {
+        if escaped {
+            out.push(c);
+            escaped = false;
+        } else if c == '\\' {
+            escaped = true;
+        } else if c == '"' {
+            return Ok(out);
+        } else {
+            out.push(c);
+        }
+    }
+    Err(bad(format!("unterminated string field `{key}`")))
+}
+
+fn parse_f32_array(text: &str, key: &str) -> Result<Vec<f32>, ModelError> {
+    let pat = format!("\"{key}\":[");
+    let at = text
+        .find(&pat)
+        .ok_or_else(|| bad(format!("missing array field `{key}`")))?;
+    let rest = &text[at + pat.len()..];
+    let end = rest
+        .find(']')
+        .ok_or_else(|| bad(format!("unterminated array `{key}`")))?;
+    let body = &rest[..end];
+    if body.trim().is_empty() {
+        return Ok(Vec::new());
+    }
+    body.split(',')
+        .map(|tok| {
+            tok.trim()
+                .parse::<f32>()
+                .map_err(|_| bad(format!("`{key}` element `{tok}` is not an f32")))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gradcheck_vs_finite_differences() {
+        let mut src = MatrixRegressionSource::default_preset(3);
+        let params = src.init_params();
+        let (_, g) = src.grad(&params, 0, 2, 5);
+        let dim = src.dim();
+        let eps = 1e-3f32;
+        for &i in &[0usize, 7, 40, dim / 2, dim - 2, dim - 1] {
+            let mut p = params.clone();
+            p[i] = params[i] + eps;
+            let (lp, _) = src.grad(&p, 0, 2, 5);
+            p[i] = params[i] - eps;
+            let (lm, _) = src.grad(&p, 0, 2, 5);
+            let fd = (lp - lm) / (2.0 * eps as f64);
+            let tol = 2e-2 * (1.0 + fd.abs());
+            assert!(
+                (g[i] as f64 - fd).abs() < tol,
+                "param {i}: closed-form {} vs fd {fd}",
+                g[i]
+            );
+        }
+    }
+
+    #[test]
+    fn grads_deterministic_and_vary_by_worker_and_step() {
+        let mut src = MatrixRegressionSource::default_preset(9);
+        let p = src.init_params();
+        let (l1, g1) = src.grad(&p, 0, 4, 2);
+        let (l2, g2) = src.grad(&p, 0, 4, 2);
+        assert_eq!(l1.to_bits(), l2.to_bits());
+        assert_eq!(g1, g2);
+        assert_ne!(g1, src.grad(&p, 1, 4, 2).1);
+        assert_ne!(g1, src.grad(&p, 0, 4, 3).1);
+    }
+
+    /// The task is realizable (teacher of the same shape), so momentum SGD
+    /// drives the loss toward the noise floor and the within-band accuracy
+    /// well above its untrained level.
+    #[test]
+    fn learns_toward_the_teacher() {
+        let mut src = MatrixRegressionSource::default_preset(1);
+        let mut p = src.init_params();
+        let (loss0, acc0) = src.eval(&p);
+        let mut m = vec![0.0f32; p.len()];
+        for step in 0..400u64 {
+            let (_, g) = src.grad(&p, 0, 1, step);
+            for i in 0..p.len() {
+                m[i] = 0.9 * m[i] + g[i];
+                p[i] -= 0.05 * m[i];
+            }
+        }
+        let (loss1, acc1) = src.eval(&p);
+        assert!(loss1 < loss0 * 0.5, "loss {loss0} -> {loss1}");
+        assert!(acc1 > acc0 && acc1 > 0.3, "band accuracy {acc0} -> {acc1}");
+    }
+
+    /// save → load is BITWISE lossless for params and grads — the
+    /// shortest-roundtrip formatting contract.
+    #[test]
+    fn checkpoint_json_roundtrip_is_bitwise() {
+        let mut src = MatrixRegressionSource::default_preset(4);
+        let params = src.init_params();
+        let (_, grads) = src.grad(&params, 2, 4, 17);
+        let ck = src.checkpoint(17, &params, &grads);
+        let back = MatRegCheckpoint::from_json(&ck.to_json()).unwrap();
+        assert_eq!(back.model, ck.model);
+        assert_eq!(back.step, 17);
+        assert_eq!(back.params.len(), ck.params.len());
+        for (a, b) in ck.params.iter().zip(&back.params) {
+            assert_eq!(a.to_bits(), b.to_bits(), "params not bitwise");
+        }
+        for (a, b) in ck.grads.iter().zip(&back.grads) {
+            assert_eq!(a.to_bits(), b.to_bits(), "grads not bitwise");
+        }
+        // Awkward but finite values survive too.
+        let odd = MatRegCheckpoint {
+            model: "m".into(),
+            step: 0,
+            params: vec![f32::MIN_POSITIVE, -0.0, 1e-38, 3.4e38],
+            grads: vec![],
+        };
+        let back = MatRegCheckpoint::from_json(&odd.to_json()).unwrap();
+        for (a, b) in odd.params.iter().zip(&back.params) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn checkpoint_file_roundtrip_and_errors() {
+        let dir = std::env::temp_dir().join("flexcomm_matreg_ck");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ck.json");
+        let path = path.to_str().unwrap();
+        let mut src = MatrixRegressionSource::default_preset(8);
+        let params = src.init_params();
+        let (_, grads) = src.grad(&params, 0, 1, 0);
+        src.checkpoint(3, &params, &grads).save(path).unwrap();
+        let back = MatRegCheckpoint::load(path).unwrap();
+        assert_eq!(back.step, 3);
+        assert_eq!(back.params, params);
+        // Typed errors carry what went wrong.
+        let err = MatRegCheckpoint::from_json("{}").unwrap_err();
+        assert!(err.to_string().contains("model"), "{err}");
+        let err = MatRegCheckpoint::from_json(
+            "{\"model\":\"m\",\"step\":1,\"params\":[x],\"grads\":[]}",
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("params"), "{err}");
+    }
+}

@@ -403,6 +403,57 @@ pub fn hetero_hierarchical_allreduce(t: Topology, links: &[LinkParams], m: f64) 
         + hetero_ring_allreduce(&leaders, m)
 }
 
+/// Allgather of a Top-k compressed tensor over per-worker links (ISSUE 8:
+/// the compressed trio priced like the dense ops). Dissemination
+/// (Bruck-style) allgather: round `i` ships the `min(2^i, N-2^i)` blocks
+/// accumulated so far — each block the `2Mc` value+index bytes of one
+/// worker's contribution — and the block counts sum to `N-1`, so every
+/// byte of the homogeneous `2Mcβ(N-1)` term is priced by the slowest link
+/// of its round. Reduces to [`ag_topk`] exactly when the links coincide.
+pub fn hetero_ag_topk(links: &[LinkParams], m: f64, c: f64) -> f64 {
+    let n = links.len();
+    assert!(n >= 1, "allgather over an empty fleet");
+    if n == 1 || links_coincide(links) {
+        return ag_topk(links[0], m, n, c);
+    }
+    let block = 2.0 * m * c;
+    let mut cost = 0.0;
+    let mut sent = 1usize;
+    while sent < n {
+        cost += round_cost(links, sent.min(n - sent) as f64 * block);
+        sent *= 2;
+    }
+    cost
+}
+
+/// AR-Topk ring (Eqn 4a) over per-worker links: a `log N`-round broadcast
+/// of the `Mc` selected-index bytes plus a `2(N-1)`-round ring allreduce
+/// of the `Mc` value bytes in `Mc/N` chunks, every round priced by its
+/// slowest participant. Reduces to [`art_ring`] exactly when the links
+/// coincide.
+pub fn hetero_art_ring(links: &[LinkParams], m: f64, c: f64) -> f64 {
+    let n = links.len();
+    assert!(n >= 1, "AR-Topk ring over an empty fleet");
+    if n == 1 || links_coincide(links) {
+        return art_ring(links[0], m, n, c);
+    }
+    ceil_log2f(n) * round_cost(links, m * c)
+        + 2.0 * (n as f64 - 1.0) * round_cost(links, m * c / n as f64)
+}
+
+/// AR-Topk tree (Eqn 4b) over per-worker links: three `log N`-round tree
+/// traversals each moving the `Mc` compressed bytes, every round priced by
+/// its slowest participant. Reduces to [`art_tree`] exactly when the
+/// links coincide.
+pub fn hetero_art_tree(links: &[LinkParams], m: f64, c: f64) -> f64 {
+    let n = links.len();
+    assert!(n >= 1, "AR-Topk tree over an empty fleet");
+    if n == 1 || links_coincide(links) {
+        return art_tree(links[0], m, n, c);
+    }
+    3.0 * ceil_log2f(n) * round_cost(links, m * c)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -716,6 +767,20 @@ mod tests {
                     == halving_doubling_allreduce(p, m, n).to_bits(),
                 format!("hd n={n}"),
             )?;
+            // The compressed trio (ISSUE 8): same exact-reduction contract.
+            let c = g.f64_in(1e-3, 1.0);
+            ensure(
+                hetero_ag_topk(&links, m, c).to_bits() == ag_topk(p, m, n, c).to_bits(),
+                format!("ag-topk n={n}"),
+            )?;
+            ensure(
+                hetero_art_ring(&links, m, c).to_bits() == art_ring(p, m, n, c).to_bits(),
+                format!("art-ring n={n}"),
+            )?;
+            ensure(
+                hetero_art_tree(&links, m, c).to_bits() == art_tree(p, m, n, c).to_bits(),
+                format!("art-tree n={n}"),
+            )?;
             let wpn = *g.choose(&[1usize, 2, 4]);
             let nh = wpn * g.usize_in(1, 16);
             let t = Topology::two_level(l(g.f64_in(0.0, 1.0), g.f64_in(1.0, 200.0)), p, wpn);
@@ -740,8 +805,12 @@ mod tests {
             let n = (nodes * wpn).max(2);
             let mut links: Vec<LinkParams> =
                 (0..n).map(|_| l(g.f64_in(0.01, 50.0), g.f64_in(0.5, 50.0))).collect();
+            let c = g.f64_in(1e-3, 1.0);
             let before_ring = hetero_ring_allreduce(&links, m);
             let before_hd = hetero_halving_doubling_allreduce(&links, m);
+            let before_ag = hetero_ag_topk(&links, m, c);
+            let before_art_ring = hetero_art_ring(&links, m, c);
+            let before_art_tree = hetero_art_tree(&links, m, c);
             let t = Topology::two_level(l(0.01, 100.0), links[0], wpn);
             let before_hier = if n % wpn == 0 {
                 Some(hetero_hierarchical_allreduce(t, &links, m))
@@ -762,6 +831,18 @@ mod tests {
                 hetero_halving_doubling_allreduce(&links, m) >= before_hd * (1.0 - tol),
                 format!("hd regressed after degrading link {i} of {n}"),
             )?;
+            ensure(
+                hetero_ag_topk(&links, m, c) >= before_ag * (1.0 - tol),
+                format!("ag-topk regressed after degrading link {i} of {n}"),
+            )?;
+            ensure(
+                hetero_art_ring(&links, m, c) >= before_art_ring * (1.0 - tol),
+                format!("art-ring regressed after degrading link {i} of {n}"),
+            )?;
+            ensure(
+                hetero_art_tree(&links, m, c) >= before_art_tree * (1.0 - tol),
+                format!("art-tree regressed after degrading link {i} of {n}"),
+            )?;
             if let Some(b) = before_hier {
                 ensure(
                     hetero_hierarchical_allreduce(t, &links, m) >= b * (1.0 - tol),
@@ -770,6 +851,35 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The compressed trio's hetero structure: one slow worker stretches
+    /// every round it participates in, and the AG dissemination rounds'
+    /// block counts account for exactly the homogeneous `2Mcβ(N-1)` bytes.
+    #[test]
+    fn hetero_compressed_trio_waits_for_the_slowest_worker() {
+        let fast = l(1.0, 25.0);
+        let slow = l(8.0, 3.0);
+        let m = 4e8;
+        let c = 0.01;
+        let mut links = vec![fast; 8];
+        links[5] = slow;
+        // Every round of each pattern is priced by the slow link: AG's
+        // dissemination rounds ship 1, 2, 4 blocks of 2Mc bytes (= 7
+        // contributions, N-1); ART-Ring broadcasts Mc over log2(8) rounds
+        // then rings Mc in Mc/8 chunks; ART-Tree walks 3 log2(8) rounds
+        // of Mc.
+        let per = |bytes: f64| slow.alpha + bytes * slow.beta;
+        let want_ag = per(2.0 * m * c) + per(2.0 * 2.0 * m * c) + per(4.0 * 2.0 * m * c);
+        assert!((hetero_ag_topk(&links, m, c) - want_ag).abs() < 1e-12);
+        let want_ring = 3.0 * per(m * c) + 14.0 * per(m * c / 8.0);
+        assert!((hetero_art_ring(&links, m, c) - want_ring).abs() < 1e-12);
+        let want_tree = 9.0 * per(m * c);
+        assert!((hetero_art_tree(&links, m, c) - want_tree).abs() < 1e-12);
+        // And each strictly exceeds its all-fast fleet.
+        assert!(hetero_ag_topk(&links, m, c) > hetero_ag_topk(&vec![fast; 8], m, c));
+        assert!(hetero_art_ring(&links, m, c) > hetero_art_ring(&vec![fast; 8], m, c));
+        assert!(hetero_art_tree(&links, m, c) > hetero_art_tree(&vec![fast; 8], m, c));
     }
 
     /// A single slow worker dominates the ring: every round waits for it.

@@ -172,6 +172,35 @@ fn thread_matrix_covers_all_families_and_selection_backends() {
     }
 }
 
+/// The §7 contract extends to the real-workload learners (ISSUE 8): the
+/// first-party autograd MLP, resolved from the model registry via
+/// `.model_spec("mlp")`, replays bitwise across the full thread matrix
+/// (1/3/4/16) under both a dense and a compressed strategy. Its gradient
+/// is a batched tape replay per worker — this pins that the tape build,
+/// the minibatch draw and the eval pass are pure functions of
+/// (seed, worker, step), never of pool scheduling.
+#[test]
+fn mlp_model_is_bitwise_identical_across_the_thread_matrix() {
+    for (label, strategy, cr) in [
+        ("dense-ring", Strategy::DenseSgd { flavor: DenseFlavor::Ring }, 1.0),
+        ("ag-topk", Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05),
+    ] {
+        let mk = |threads: usize| {
+            Session::from_config(cfg(strategy, cr, 4, threads))
+                .model_spec("mlp")
+                .build()
+                .expect("registry model builds")
+                .run()
+        };
+        let baseline = mk(1);
+        assert_eq!(baseline.model, "mlp-spirals[2, 24, 16, 2]", "registry identity");
+        for threads in [3usize, 4, 16] {
+            let b = mk(threads);
+            assert_bitwise_equal(&baseline, &b, &format!("mlp/{label}/threads={threads}"));
+        }
+    }
+}
+
 /// The sampled-threshold backend is not merely self-consistent: an
 /// AR-Topk run that selects via the sampled backend is bitwise identical
 /// to the exact-selection run with the same policy/flavor/seed. The

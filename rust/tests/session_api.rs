@@ -132,6 +132,61 @@ fn builder_rejects_misconfigurations_with_typed_errors() {
         base().network_spec("trace:/no/such/file.csv").build().err(),
         Some(ConfigError::Network(NetModelError::TraceIo { .. }))
     ));
+    // Model registry rejections surface typed too (ISSUE 8): an unknown
+    // `--model` spec names the registry in its message.
+    let err = Session::builder()
+        .workers(4)
+        .steps(1)
+        .compute(ComputeModel::fixed(0.01))
+        .model_spec("not-a-model")
+        .build()
+        .err();
+    assert!(matches!(err, Some(ConfigError::Model(_))), "{err:?}");
+    assert!(err.unwrap().to_string().contains("matreg"), "message lists registry");
+}
+
+/// ISSUE 8 acceptance: both real learners resolve from the registry via
+/// `.model_spec(..)`, demonstrably learn under exact DenseSGD, and stay
+/// within tolerance of the dense accuracy under AG-Topk at CR = 0.1 —
+/// compression costs bytes, not convergence.
+#[test]
+fn real_models_learn_dense_and_survive_compression() {
+    // (spec, lr hint, chance-level accuracy floor for that dataset).
+    for (model, lr, chance) in [("mlp", 0.3f32, 0.5), ("matreg", 0.05, 0.1)] {
+        let run = |strategy: &str, cr: f64| {
+            Session::builder()
+                .workers(4)
+                .steps(400)
+                .steps_per_epoch(100)
+                .lr(lr)
+                .momentum(0.9)
+                .strategy(Strategy::parse(strategy).unwrap())
+                .static_cr(cr)
+                .compute(ComputeModel::fixed(0.005))
+                .eval_every(100)
+                .seed(7)
+                .model_spec(model)
+                .build()
+                .expect("registry model builds")
+                .run()
+        };
+        let dense = run("dense-ring", 1.0);
+        let dense_acc = dense.best_accuracy().unwrap();
+        assert!(
+            dense_acc > chance + 0.15,
+            "{model}: dense best acc {dense_acc} not clearly above chance {chance}"
+        );
+        let comp = run("ag-topk", 0.1);
+        let comp_acc = comp.best_accuracy().unwrap();
+        assert!(
+            comp_acc > chance,
+            "{model}: compressed best acc {comp_acc} at or below chance {chance}"
+        );
+        assert!(
+            comp_acc >= dense_acc - 0.25,
+            "{model}: CR=0.1 destroyed learning: dense {dense_acc} vs compressed {comp_acc}"
+        );
+    }
 }
 
 #[derive(Default)]

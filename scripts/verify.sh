@@ -98,6 +98,17 @@ if [ ! -f BENCH_scaleout.json ]; then
     echo "verify: FATAL: BENCH_scaleout.json not written by the fig5 bench" >&2
     status=1
 fi
+# Sweep-server smoke (ISSUE 8, DESIGN.md §12): real learners x strategies
+# x networks run as CONCURRENT sessions over one shared pool. --smoke
+# enables the in-binary full-coverage gate (every grid cell produced a
+# row, no error rows, every cell above its model's chance-accuracy
+# floor), and the run must leave its machine-readable ranking behind.
+rm -f BENCH_sweep.json # same stale-record policy as the bench gates
+step cargo run --release --quiet -- sweep --smoke
+if [ ! -f BENCH_sweep.json ]; then
+    echo "verify: FATAL: BENCH_sweep.json not written by the sweep smoke" >&2
+    status=1
+fi
 step cargo fmt --check
 # Lint gate over every target (lib, bin, tests, benches, examples). Some
 # minimal toolchains ship without the clippy component — that is a loud
