@@ -1,0 +1,612 @@
+//! # flexlint — first-party invariant lints (DESIGN.md §13)
+//!
+//! A hand-rolled static-analysis pass over `rust/src/**` that turns this
+//! repo's determinism, billing and registry conventions into a machine
+//! gate (`cargo run --release --bin flexlint`, a verify.sh stage). No
+//! `syn`, no dylint: the scanner is a length-preserving comment/string
+//! stripper plus brace-matched `fn` spans ([`scan`]), and every rule is a
+//! pure text check over that model ([`rules`]).
+//!
+//! The registry mirrors `STRATEGY_TABLE`/`NET_TABLE` style: [`RULE_TABLE`]
+//! is the single source of truth — the CLI `--rule` filter, `--list`
+//! output, the fixture suite and the suppression validator all read from
+//! it, so adding a rule is one new row (name, docs line, three embedded
+//! fixtures, check fn).
+//!
+//! ## Suppression
+//!
+//! An allow annotation — a line comment of `allow(<rule>): <reason>`
+//! prefixed with the `flexlint::` marker — on the finding's line or the
+//! line above suppresses that rule there; the `allow-file(<rule>):
+//! <reason>` form at any line suppresses the rule for the whole file. The
+//! reason is mandatory and the rule name must exist — a bare or
+//! misspelled allow is itself a finding (`malformed-allow`), and that
+//! rule cannot be suppressed, so the audit trail cannot rot silently.
+//! Unused allows are tolerated (a fixed site may keep its annotation one
+//! PR longer); block comments cannot carry allows (scanner limitation,
+//! see [`scan`]).
+
+pub mod report;
+pub mod rules;
+pub mod scan;
+
+use scan::SourceFile;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One raw lint hit. `line` is 1-indexed; `excerpt` is the trimmed source
+/// line for the human table.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub excerpt: String,
+    pub message: String,
+}
+
+/// One row of [`RULE_TABLE`].
+pub struct RuleEntry {
+    pub name: &'static str,
+    /// One-line docs (shown by `--list` and in LINT_REPORT.json).
+    pub summary: &'static str,
+    /// Embedded fixture that MUST fire the rule (exercised by the fixture
+    /// suite and by `flexlint --self-test`).
+    pub fires_on: &'static str,
+    /// Embedded fixture that must stay silent.
+    pub clean_on: &'static str,
+    /// Positive fixture plus an allow annotation that must suppress it;
+    /// `None` only for rules that are unsuppressable by design.
+    pub suppressed_on: Option<&'static str>,
+    pub check: fn(&Workspace) -> Vec<Finding>,
+}
+
+/// The rule registry. Order is the report order.
+pub const RULE_TABLE: &[RuleEntry] = &[
+    RuleEntry {
+        name: "nan-partial-cmp",
+        summary: "float comparator via partial_cmp().unwrap()/expect()/unwrap_or(Equal) — \
+                  use tensor::nan_min_cmp / nan_min_cmp_f32 (PR 2 NaN-panic class)",
+        fires_on: r#"
+fn rank(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+"#,
+        clean_on: r#"
+fn rank(v: &mut Vec<f64>) {
+    v.sort_by(|a, b| crate::tensor::nan_min_cmp(*a, *b));
+    let handled = 1.0_f64.partial_cmp(&2.0);
+    let _ = handled.unwrap_or(std::cmp::Ordering::Less);
+}
+"#,
+        suppressed_on: Some(
+            r#"
+fn rank(v: &mut Vec<f64>) {
+    // flexlint::allow(nan-partial-cmp): inputs pre-validated finite by the caller
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+"#,
+        ),
+        check: rules::nan_partial_cmp,
+    },
+    RuleEntry {
+        name: "unsanctioned-clock",
+        summary: "Instant::now() outside the billing-sanctioned hot paths — breaks the \
+                  DESIGN §7 t_comp contract (time is measured inside pool tasks)",
+        fires_on: r#"
+fn time_it() -> u64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}
+"#,
+        clean_on: r#"
+fn advance(clock: &mut f64, dt: f64) {
+    *clock += dt.max(0.0);
+}
+"#,
+        suppressed_on: Some(
+            r#"
+// flexlint::allow-file(unsanctioned-clock): fixture models a billed hot path
+fn time_it() -> u64 {
+    let t = std::time::Instant::now();
+    t.elapsed().as_nanos() as u64
+}
+"#,
+        ),
+        check: rules::unsanctioned_clock,
+    },
+    RuleEntry {
+        name: "shared-rng",
+        summary: "shared/stateful or non-worker-keyed rng draw in a per-worker fn — \
+                  order-dependent randomness broke §7 thread-invariance (PR 7 jitter bug)",
+        fires_on: r#"
+impl Trainer {
+    fn grad(&mut self, worker: usize) -> f64 {
+        let r = Rng::new(42);
+        self.rng = self.rng.wrapping_add(1);
+        r.next_f64() + worker as f64
+    }
+}
+"#,
+        clean_on: r#"
+fn grad(seed: u64, worker: usize) -> f64 {
+    let mut r = Rng::new(seed ^ (worker as u64 + 1).wrapping_mul(0x9E37));
+    r.next_f64()
+}
+"#,
+        suppressed_on: Some(
+            r#"
+impl Trainer {
+    fn grad(&mut self, worker: usize) -> f64 {
+        // flexlint::allow(shared-rng): single-worker probe path, draw order audited
+        self.rng = self.rng.wrapping_add(worker as u64);
+        0.0
+    }
+}
+"#,
+        ),
+        check: rules::shared_rng,
+    },
+    RuleEntry {
+        name: "registry-coverage",
+        summary: "config-surface enum variant missing from its registry table, or a \
+                  duplicate registry name (PR 5 review drift class)",
+        fires_on: r#"
+enum FixtureKind { Alpha, Beta, Gamma }
+const FIXTURE_TABLE: &[(&str, FixtureKind)] = &[
+    ("alpha", FixtureKind::Alpha),
+    ("alpha", FixtureKind::Beta),
+];
+"#,
+        clean_on: r#"
+enum FixtureKind { Alpha, Beta }
+const FIXTURE_TABLE: &[(&str, FixtureKind)] = &[
+    ("alpha", FixtureKind::Alpha),
+    ("beta", FixtureKind::Beta),
+];
+"#,
+        suppressed_on: Some(
+            r#"
+enum FixtureKind {
+    Alpha,
+    // flexlint::allow(registry-coverage): staged variant, table row lands next PR
+    Gamma,
+}
+const FIXTURE_TABLE: &[(&str, FixtureKind)] = &[("alpha", FixtureKind::Alpha)];
+"#,
+        ),
+        check: rules::registry_coverage,
+    },
+    RuleEntry {
+        name: "release-silent-assert",
+        summary: "debug_assert! guarding an ordering invariant with no release-path \
+                  fallback — release runs the arithmetic on garbage (VirtualClock class)",
+        fires_on: r#"
+fn ceil_log2(n: usize) -> u32 {
+    debug_assert!(n >= 1);
+    usize::BITS - (n - 1).leading_zeros()
+}
+"#,
+        clean_on: r#"
+fn advance(now: f64, t: f64) -> f64 {
+    debug_assert!(t >= now);
+    now + (t - now).max(0.0)
+}
+"#,
+        suppressed_on: Some(
+            r#"
+fn below(n: u64) -> u64 {
+    // flexlint::allow(release-silent-assert): release still panics loudly (mod by zero)
+    debug_assert!(n > 0);
+    n.wrapping_neg() % n
+}
+"#,
+        ),
+        check: rules::release_silent_assert,
+    },
+    RuleEntry {
+        name: "take-without-putback",
+        summary: "mem::take (or swap-with-empty) on an arena lane with no restore in the \
+                  same fn — the lane is left empty and reallocates (PR 6 AG-lane hazard)",
+        fires_on: r#"
+fn drain(bufs: &mut Vec<Vec<f32>>) -> usize {
+    let lane = std::mem::take(&mut bufs[0]);
+    lane.len()
+}
+"#,
+        clean_on: r#"
+fn reuse(bufs: &mut Vec<Vec<f32>>) {
+    let mut lane = std::mem::take(&mut bufs[0]);
+    lane.push(1.0);
+    bufs[0] = lane;
+}
+"#,
+        suppressed_on: Some(
+            r#"
+fn hand_off(bufs: &mut Vec<Vec<f32>>) -> Vec<f32> {
+    // flexlint::allow(take-without-putback): ownership moves to the caller by design
+    std::mem::take(&mut bufs[0])
+}
+"#,
+        ),
+        check: rules::take_without_putback,
+    },
+    RuleEntry {
+        name: "malformed-allow",
+        summary: "flexlint::allow with no (rule), an unknown rule name, or no `: reason` — \
+                  suppressions are audited and cannot rot (this rule is unsuppressable)",
+        fires_on: r#"
+fn noop() {
+    // flexlint::allow(nan-partial-cmp)
+    let _x = 1;
+}
+"#,
+        clean_on: r#"
+fn noop() {
+    // flexlint::allow(take-without-putback): audited, the caller restores the lane
+    let _x = 1;
+}
+"#,
+        suppressed_on: None,
+        check: rules::malformed_allow,
+    },
+];
+
+/// Iterator over registered rule names (report order).
+pub fn rule_names() -> impl Iterator<Item = &'static str> {
+    RULE_TABLE.iter().map(|r| r.name)
+}
+
+/// Resolve a `--rule` CLI argument against [`RULE_TABLE`].
+pub fn parse_rule_filter(name: &str) -> Result<&'static str, String> {
+    rule_names().find(|n| *n == name).ok_or_else(|| {
+        format!(
+            "unknown rule `{name}` (valid: {})",
+            rule_names().collect::<Vec<_>>().join(", ")
+        )
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Registry bindings: which enums must be covered by which tables.
+// ---------------------------------------------------------------------------
+
+/// How an enum's variants are proven reachable.
+pub enum Coverage {
+    /// `Enum::Variant` must appear inside the `[...]` initializer of the
+    /// named `const`/`static` in the named file.
+    TableSpan { table: &'static str, file: &'static str },
+    /// `Enum::Variant` must appear in the body of SOME fn with one of
+    /// these names, anywhere in the workspace (e.g. the `kind()` impls).
+    FnBodies { fns: &'static [&'static str] },
+}
+
+pub struct EnumBinding {
+    pub enum_name: &'static str,
+    /// File (relative to the scan root) declaring the enum.
+    pub enum_file: &'static str,
+    pub coverage: Coverage,
+    /// Variants exempt from coverage (e.g. `Custom` escape hatches).
+    pub exempt: &'static [&'static str],
+}
+
+/// A string-keyed registry table whose names must be unique.
+pub struct NameTable {
+    pub table: &'static str,
+    pub file: &'static str,
+}
+
+pub struct Bindings {
+    pub enums: &'static [EnumBinding],
+    pub tables: &'static [NameTable],
+}
+
+/// The real tree's bindings (used by `Workspace::load`).
+pub const REGISTRY_BINDINGS: Bindings = Bindings {
+    enums: &[
+        EnumBinding {
+            enum_name: "Strategy",
+            enum_file: "coordinator/trainer.rs",
+            coverage: Coverage::TableSpan {
+                table: "STRATEGY_TABLE",
+                file: "coordinator/strategy.rs",
+            },
+            exempt: &[],
+        },
+        EnumBinding {
+            enum_name: "DenseFlavor",
+            enum_file: "coordinator/trainer.rs",
+            coverage: Coverage::TableSpan {
+                table: "STRATEGY_TABLE",
+                file: "coordinator/strategy.rs",
+            },
+            exempt: &[],
+        },
+        EnumBinding {
+            enum_name: "CompressorKind",
+            enum_file: "compress/mod.rs",
+            coverage: Coverage::TableSpan {
+                table: "STRATEGY_TABLE",
+                file: "coordinator/strategy.rs",
+            },
+            exempt: &[],
+        },
+        EnumBinding {
+            enum_name: "SelectionPolicy",
+            enum_file: "artopk.rs",
+            coverage: Coverage::TableSpan {
+                table: "STRATEGY_TABLE",
+                file: "coordinator/strategy.rs",
+            },
+            exempt: &[],
+        },
+        EnumBinding {
+            enum_name: "ArFlavor",
+            enum_file: "artopk.rs",
+            coverage: Coverage::TableSpan {
+                table: "STRATEGY_TABLE",
+                file: "coordinator/strategy.rs",
+            },
+            exempt: &[],
+        },
+        EnumBinding {
+            enum_name: "CollectiveKind",
+            enum_file: "collectives/mod.rs",
+            coverage: Coverage::FnBodies { fns: &["kind"] },
+            exempt: &["Custom"],
+        },
+    ],
+    tables: &[
+        NameTable { table: "STRATEGY_TABLE", file: "coordinator/strategy.rs" },
+        NameTable { table: "NET_TABLE", file: "netsim/model.rs" },
+        NameTable { table: "CONTROLLER_TABLE", file: "coordinator/controller/mod.rs" },
+        NameTable { table: "MODEL_TABLE", file: "models/mod.rs" },
+    ],
+};
+
+/// Bindings for single-file fixture workspaces (`Workspace::fixture`):
+/// the registry rule reads `enum FixtureKind` / `FIXTURE_TABLE` from the
+/// synthetic `fixture.rs`.
+pub const FIXTURE_BINDINGS: Bindings = Bindings {
+    enums: &[EnumBinding {
+        enum_name: "FixtureKind",
+        enum_file: "fixture.rs",
+        coverage: Coverage::TableSpan { table: "FIXTURE_TABLE", file: "fixture.rs" },
+        exempt: &[],
+    }],
+    tables: &[NameTable { table: "FIXTURE_TABLE", file: "fixture.rs" }],
+};
+
+// ---------------------------------------------------------------------------
+// Workspace + driver.
+// ---------------------------------------------------------------------------
+
+/// The parsed scan set: every `.rs` file under the root (sorted by path
+/// for deterministic output) plus the registry bindings in force.
+pub struct Workspace {
+    pub files: Vec<SourceFile>,
+    pub bindings: Bindings,
+}
+
+impl Workspace {
+    /// Parse every `.rs` file under `root` with the real-tree bindings.
+    pub fn load(root: &Path) -> io::Result<Workspace> {
+        let mut rels = Vec::new();
+        walk(root, root, &mut rels)?;
+        rels.sort();
+        let mut files = Vec::with_capacity(rels.len());
+        for rel in &rels {
+            let raw = fs::read_to_string(root.join(rel))?;
+            files.push(SourceFile::parse(rel, &raw));
+        }
+        Ok(Workspace { files, bindings: REGISTRY_BINDINGS })
+    }
+
+    /// One synthetic `fixture.rs` with [`FIXTURE_BINDINGS`] (tests).
+    pub fn fixture(src: &str) -> Workspace {
+        Workspace {
+            files: vec![SourceFile::parse("fixture.rs", src)],
+            bindings: FIXTURE_BINDINGS,
+        }
+    }
+
+    /// Look up a file by its root-relative path.
+    pub fn file(&self, rel: &str) -> Option<&SourceFile> {
+        self.files.iter().find(|f| f.rel == rel)
+    }
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<String>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(root, &path, out)?;
+        } else if path.extension().and_then(|e| e.to_str()) == Some("rs") {
+            let rel = path
+                .strip_prefix(root)
+                .expect("walk stays under root")
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(rel);
+        }
+    }
+    Ok(())
+}
+
+/// One lint run's outcome.
+pub struct RunResult {
+    /// Unsuppressed findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+    /// Findings silenced by a well-formed allow.
+    pub suppressed: usize,
+    /// Rules actually executed (respects the `--rule` filter).
+    pub rules_run: Vec<&'static str>,
+}
+
+/// Run every rule (or just `filter`) over the workspace and apply the
+/// suppression policy: a finding is silenced by a well-formed allow for
+/// ITS rule on its line, the line above, or anywhere file-level.
+/// `malformed-allow` findings are never suppressable.
+pub fn run(ws: &Workspace, filter: Option<&str>) -> RunResult {
+    let mut findings = Vec::new();
+    let mut suppressed = 0usize;
+    let mut rules_run = Vec::new();
+    for rule in RULE_TABLE {
+        if let Some(f) = filter {
+            if rule.name != f {
+                continue;
+            }
+        }
+        rules_run.push(rule.name);
+        for finding in (rule.check)(ws) {
+            if is_suppressed(ws, &finding) {
+                suppressed += 1;
+            } else {
+                findings.push(finding);
+            }
+        }
+    }
+    findings.sort_by(|a, b| {
+        a.file.cmp(&b.file).then(a.line.cmp(&b.line)).then(a.rule.cmp(b.rule))
+    });
+    RunResult { findings, suppressed, rules_run }
+}
+
+fn is_suppressed(ws: &Workspace, f: &Finding) -> bool {
+    if f.rule == "malformed-allow" {
+        return false;
+    }
+    let Some(file) = ws.file(&f.file) else { return false };
+    file.allows.iter().any(|a| {
+        a.rule == f.rule
+            && a.reason.is_some()
+            && (a.file_level || a.line == f.line || a.line + 1 == f.line)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_rule_fires_stays_silent_and_honors_suppression() {
+        for rule in RULE_TABLE {
+            let ws = Workspace::fixture(rule.fires_on);
+            let r = run(&ws, Some(rule.name));
+            assert!(!r.findings.is_empty(), "{}: positive fixture must fire", rule.name);
+            assert!(
+                r.findings.iter().all(|f| f.rule == rule.name),
+                "{}: filtered run leaked findings from other rules",
+                rule.name
+            );
+
+            let ws = Workspace::fixture(rule.clean_on);
+            let r = run(&ws, Some(rule.name));
+            assert!(
+                r.findings.is_empty(),
+                "{}: negative fixture fired: {:?}",
+                rule.name,
+                r.findings
+                    .iter()
+                    .map(|f| format!("{}:{} {}", f.file, f.line, f.message))
+                    .collect::<Vec<_>>()
+            );
+
+            if let Some(src) = rule.suppressed_on {
+                let ws = Workspace::fixture(src);
+                let r = run(&ws, Some(rule.name));
+                assert!(
+                    r.findings.is_empty(),
+                    "{}: suppression fixture still fired",
+                    rule.name
+                );
+                assert!(r.suppressed >= 1, "{}: nothing was suppressed", rule.name);
+            }
+        }
+    }
+
+    #[test]
+    fn rule_registry_is_complete_unique_and_cli_reachable() {
+        assert!(RULE_TABLE.len() >= 6, "the issue mandates >= 6 rules");
+        for rule in RULE_TABLE {
+            assert!(!rule.summary.trim().is_empty(), "{}: docs line missing", rule.name);
+            assert!(
+                rule.name.chars().all(|c| c.is_ascii_lowercase() || c == '-'),
+                "{}: rule names are kebab-case",
+                rule.name
+            );
+            assert_eq!(parse_rule_filter(rule.name), Ok(rule.name));
+        }
+        let mut names: Vec<_> = rule_names().collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), RULE_TABLE.len(), "duplicate rule name");
+        assert!(parse_rule_filter("no-such-rule").is_err());
+    }
+
+    #[test]
+    fn malformed_allow_cannot_be_suppressed() {
+        let src = "// flexlint::allow(malformed-allow): trying to silence the auditor\n\
+                   // flexlint::allow(nan-partial-cmp)\n\
+                   fn f() {}\n";
+        let ws = Workspace::fixture(src);
+        let r = run(&ws, Some("malformed-allow"));
+        assert_eq!(r.findings.len(), 1, "the bare allow on line 2 must survive");
+        assert_eq!(r.findings[0].line, 2);
+        assert_eq!(r.suppressed, 0);
+    }
+
+    #[test]
+    fn unknown_rule_allow_is_flagged_and_never_suppresses() {
+        let src = "fn f(v: &mut Vec<f64>) {\n    \
+                   // flexlint::allow(nan-partialcmp): typo in the rule name\n    \
+                   v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+        let ws = Workspace::fixture(src);
+        let r = run(&ws, None);
+        assert!(r.findings.iter().any(|f| f.rule == "nan-partial-cmp"));
+        assert!(r.findings.iter().any(|f| f.rule == "malformed-allow"));
+    }
+
+    #[test]
+    fn disguised_swap_take_flagged_but_live_swap_clean() {
+        let bad = "fn f(bufs: &mut Vec<Vec<f32>>) {\n    \
+                   std::mem::swap(&mut bufs[0], &mut Vec::new());\n}\n";
+        let r = run(&Workspace::fixture(bad), Some("take-without-putback"));
+        assert_eq!(r.findings.len(), 1);
+
+        let ok = "fn g(a: &mut Vec<f32>, b: &mut Vec<f32>) {\n    \
+                  std::mem::swap(a, b);\n}\n";
+        let r = run(&Workspace::fixture(ok), Some("take-without-putback"));
+        assert!(r.findings.is_empty(), "swap of two live places is self-restoring");
+    }
+
+    #[test]
+    fn file_level_allow_covers_every_site_in_the_file() {
+        let src = "// flexlint::allow-file(unsanctioned-clock): whole module is billed\n\
+                   fn a() { let _ = std::time::Instant::now(); }\n\
+                   fn b() { let _ = std::time::Instant::now(); }\n";
+        let ws = Workspace::fixture(src);
+        let r = run(&ws, Some("unsanctioned-clock"));
+        assert!(r.findings.is_empty());
+        assert_eq!(r.suppressed, 2);
+    }
+
+    #[test]
+    fn registry_rule_reports_missing_variant_and_duplicate_name_lines() {
+        let fires = RULE_TABLE
+            .iter()
+            .find(|r| r.name == "registry-coverage")
+            .unwrap()
+            .fires_on;
+        let r = run(&Workspace::fixture(fires), Some("registry-coverage"));
+        assert!(
+            r.findings.iter().any(|f| f.message.contains("FixtureKind::Gamma")),
+            "missing variant not reported: {:?}",
+            r.findings.iter().map(|f| &f.message).collect::<Vec<_>>()
+        );
+        assert!(r.findings.iter().any(|f| f.message.contains("duplicate registry name")));
+    }
+}

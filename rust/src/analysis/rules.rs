@@ -1,0 +1,810 @@
+//! The rule implementations behind [`RULE_TABLE`](crate::analysis::RULE_TABLE).
+//!
+//! Every rule is a pure function `fn(&Workspace) -> Vec<Finding>` over the
+//! stripped source model ([`scan`](crate::analysis::scan)): no I/O, no
+//! global state, so the fixture suite can run each rule against a
+//! one-file synthetic workspace. Suppression is NOT applied here — the
+//! driver ([`run`](crate::analysis::run)) matches raw findings against
+//! the `flexlint::` allow annotations afterwards, so a rule never needs
+//! to know about allows.
+
+use super::scan::SourceFile;
+use super::{Coverage, Finding, Workspace};
+
+// ---------------------------------------------------------------------------
+// Text helpers (shared by several rules).
+// ---------------------------------------------------------------------------
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Word-boundary substring search: `word` occurs in `text` with non-ident
+/// characters (or text edges) on both sides.
+fn contains_word(text: &str, word: &str) -> bool {
+    let bytes = text.as_bytes();
+    let mut from = 0;
+    while let Some(p) = text[from..].find(word) {
+        let at = from + p;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let after = at + word.len();
+        let after_ok = after >= bytes.len() || !is_ident(bytes[after]);
+        if before_ok && after_ok {
+            return true;
+        }
+        from = at + 1;
+    }
+    false
+}
+
+/// Skip whitespace (including newlines) from `i`; returns the next index.
+fn skip_ws(bytes: &[u8], mut i: usize) -> usize {
+    while i < bytes.len() && (bytes[i] as char).is_whitespace() {
+        i += 1;
+    }
+    i
+}
+
+/// Given the index of an opening delimiter, return the index ONE PAST its
+/// balanced closing partner (best-effort: returns `len` when unbalanced).
+fn skip_balanced(bytes: &[u8], open: usize) -> usize {
+    let (o, c) = match bytes[open] {
+        b'(' => (b'(', b')'),
+        b'[' => (b'[', b']'),
+        b'{' => (b'{', b'}'),
+        _ => return open + 1,
+    };
+    let mut depth = 0i32;
+    let mut i = open;
+    while i < bytes.len() {
+        if bytes[i] == o {
+            depth += 1;
+        } else if bytes[i] == c {
+            depth -= 1;
+            if depth == 0 {
+                return i + 1;
+            }
+        }
+        i += 1;
+    }
+    bytes.len()
+}
+
+/// Remove ALL whitespace (place-expression normalization: `bufs[g * w]`
+/// and `bufs[g*w]` must compare equal for the put-back check).
+fn squash(text: &str) -> String {
+    text.chars().filter(|c| !c.is_whitespace()).collect()
+}
+
+fn finding(f: &SourceFile, rule: &'static str, line: usize, message: String) -> Finding {
+    Finding {
+        rule,
+        file: f.rel.clone(),
+        line,
+        excerpt: f.raw_line(line).to_string(),
+        message,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Rule: nan-partial-cmp
+// ---------------------------------------------------------------------------
+
+/// `.partial_cmp(..)` chained into `.unwrap()`, `.expect(..)` or
+/// `.unwrap_or(..Equal..)` — the float-comparator NaN panic/non-total-order
+/// class PR 2 fixed in artopk/topk that keeps reappearing. The sanctioned
+/// comparator is `tensor::nan_min_cmp`/`nan_min_cmp_f32`.
+pub fn nan_partial_cmp(ws: &Workspace) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &ws.files {
+        let code = &f.code;
+        let bytes = code.as_bytes();
+        let mut from = 0;
+        while let Some(p) = code[from..].find(".partial_cmp") {
+            let at = from + p;
+            from = at + 1;
+            let mut j = at + ".partial_cmp".len();
+            if j < bytes.len() && is_ident(bytes[j]) {
+                continue; // `.partial_cmp_something`
+            }
+            j = skip_ws(bytes, j);
+            if j >= bytes.len() || bytes[j] != b'(' {
+                continue;
+            }
+            let after_args = skip_balanced(bytes, j);
+            let k = skip_ws(bytes, after_args);
+            let rest = &code[k..];
+            let bad = if rest.starts_with(".unwrap()") || rest.starts_with(".expect(") {
+                true
+            } else if rest.starts_with(".unwrap_or(") {
+                let open = k + ".unwrap_or".len();
+                let close = skip_balanced(bytes, open);
+                code[open..close].contains("Equal")
+            } else {
+                false
+            };
+            if bad {
+                out.push(finding(
+                    f,
+                    "nan-partial-cmp",
+                    f.line_of(at),
+                    "NaN-unsafe float comparator: route through tensor::nan_min_cmp / \
+                     nan_min_cmp_f32 (the crate NaN total order) — unwrap panics on NaN, \
+                     unwrap_or(Equal) is not transitive and can panic sort/select_nth"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: unsanctioned-clock
+// ---------------------------------------------------------------------------
+
+/// Any `Instant::now()` — wall-clock reads are only honest inside the
+/// billing-sanctioned hot paths (artopk, ag_exchange, util::bench), which
+/// carry audited allow annotations. Everywhere else a clock read breaks
+/// the DESIGN §7 `t_comp` contract (time must be measured INSIDE pool
+/// tasks on the critical path, never on the coordinator).
+pub fn unsanctioned_clock(ws: &Workspace) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &ws.files {
+        let mut from = 0;
+        while let Some(p) = f.code[from..].find("Instant::now") {
+            let at = from + p;
+            from = at + 1;
+            out.push(finding(
+                f,
+                "unsanctioned-clock",
+                f.line_of(at),
+                "wall-clock read outside a billing-sanctioned module: t_comp must be \
+                 measured inside pool tasks on the critical path (DESIGN.md §7); add an \
+                 audited flexlint::allow if this site is genuinely billed"
+                    .to_string(),
+            ));
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: shared-rng
+// ---------------------------------------------------------------------------
+
+/// Per-worker code paths (any `fn` with a `worker` parameter) must derive
+/// randomness as a pure function of the worker id (`worker_rng` /
+/// `worker_step_rng` style, i.e. the seed expression mentions `worker`).
+/// Draws from a shared stateful rng (`self.*rng*`), from the epoch-bucket
+/// rng, or from a fresh rng NOT keyed by the worker are order- or
+/// identity-dependent — the PR 7 compute-jitter bug class, which broke
+/// DESIGN §7 bitwise thread-invariance.
+pub fn shared_rng(ws: &Workspace) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &ws.files {
+        let bytes = f.code.as_bytes();
+        for span in &f.fns {
+            // Per-worker path = the PARAMETER LIST names a `worker`.
+            let params = match span.header.find('(') {
+                Some(p) => &span.header[p..],
+                None => continue,
+            };
+            if !contains_word(params, "worker") {
+                continue;
+            }
+            let body = &f.code[span.body_range.0..span.body_range.1];
+            let base = span.body_range.0;
+
+            // (a) shared stateful rng fields: `self.<ident containing rng>`.
+            let mut from = 0;
+            while let Some(p) = body[from..].find("self.") {
+                let at = from + p;
+                from = at + 1;
+                let mut j = at + "self.".len();
+                let start = j;
+                while j < body.len() && is_ident(body.as_bytes()[j]) {
+                    j += 1;
+                }
+                if body[start..j].to_ascii_lowercase().contains("rng") {
+                    out.push(finding(
+                        f,
+                        "shared-rng",
+                        f.line_of(base + at),
+                        format!(
+                            "draw from shared rng field `self.{}` in per-worker fn \
+                             `{}`: derive a worker_rng/worker_step_rng instead \
+                             (order-dependent draws break §7 thread-invariance)",
+                            &body[start..j],
+                            span.name
+                        ),
+                    ));
+                }
+            }
+
+            // (b) epoch-bucket rng in a per-worker path.
+            let mut from = 0;
+            while let Some(p) = body[from..].find("bucket_rng(") {
+                let at = from + p;
+                from = at + 1;
+                out.push(finding(
+                    f,
+                    "shared-rng",
+                    f.line_of(base + at),
+                    format!(
+                        "bucket_rng (shared across workers) in per-worker fn `{}`: \
+                         key the derivation by worker (worker_rng/worker_step_rng)",
+                        span.name
+                    ),
+                ));
+            }
+
+            // (c) fresh rng whose seed expression ignores the worker id.
+            let mut from = 0;
+            while let Some(p) = body[from..].find("Rng::new(") {
+                let at = from + p;
+                from = at + 1;
+                let open = base + at + "Rng::new".len();
+                let close = skip_balanced(bytes, open);
+                let args = &f.code[open..close];
+                if !contains_word(args, "worker") {
+                    out.push(finding(
+                        f,
+                        "shared-rng",
+                        f.line_of(base + at),
+                        format!(
+                            "fresh Rng in per-worker fn `{}` not keyed by `worker`: \
+                             identical streams across workers (or a stream keyed only \
+                             by call order) — derive from (seed, worker[, step])",
+                            span.name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: registry-coverage
+// ---------------------------------------------------------------------------
+
+/// Every config-surface enum variant must be reachable from its registry
+/// table (the PR 5 review drift class: a hardcoded name list silently
+/// missing a new row), and registry names must be unique within a table.
+pub fn registry_coverage(ws: &Workspace) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for b in ws.bindings.enums {
+        let Some(ef) = ws.file(b.enum_file) else {
+            out.push(Finding {
+                rule: "registry-coverage",
+                file: b.enum_file.to_string(),
+                line: 1,
+                excerpt: String::new(),
+                message: format!(
+                    "registry binding broken: file `{}` (declaring enum {}) not in \
+                     the scan root",
+                    b.enum_file, b.enum_name
+                ),
+            });
+            continue;
+        };
+        let Some(variants) = enum_variants(ef, b.enum_name) else {
+            out.push(finding(
+                ef,
+                "registry-coverage",
+                1,
+                format!("registry binding broken: `enum {}` not found", b.enum_name),
+            ));
+            continue;
+        };
+        // Collect the coverage text: the table initializer span, or the
+        // concatenated bodies of the named fns across the workspace.
+        let covered = |variant: &str| -> bool {
+            let token = format!("{}::{}", b.enum_name, variant);
+            match b.coverage {
+                Coverage::TableSpan { table, file } => ws
+                    .file(file)
+                    .and_then(|tf| table_span(tf, table).map(|(s, e)| (tf, s, e)))
+                    .map_or(false, |(tf, s, e)| contains_word(&tf.code[s..e], &token)),
+                Coverage::FnBodies { fns } => ws.files.iter().any(|f| {
+                    f.fns.iter().any(|span| {
+                        fns.contains(&span.name.as_str())
+                            && contains_word(
+                                &f.code[span.body_range.0..span.body_range.1],
+                                &token,
+                            )
+                    })
+                }),
+            }
+        };
+        // A broken table binding should fail loudly ONCE, not once per
+        // variant.
+        if let Coverage::TableSpan { table, file } = b.coverage {
+            let ok = ws.file(file).and_then(|tf| table_span(tf, table)).is_some();
+            if !ok {
+                out.push(Finding {
+                    rule: "registry-coverage",
+                    file: file.to_string(),
+                    line: 1,
+                    excerpt: String::new(),
+                    message: format!(
+                        "registry binding broken: table `{table}` not found in `{file}`"
+                    ),
+                });
+                continue;
+            }
+        }
+        for (variant, line) in &variants {
+            if b.exempt.contains(&variant.as_str()) {
+                continue;
+            }
+            if !covered(variant) {
+                out.push(finding(
+                    ef,
+                    "registry-coverage",
+                    *line,
+                    format!(
+                        "enum variant {}::{} is not reachable from its registry ({}) — \
+                         add the table row (the config/CLI surface reads ONLY the table)",
+                        b.enum_name,
+                        variant,
+                        match b.coverage {
+                            Coverage::TableSpan { table, .. } => table,
+                            Coverage::FnBodies { .. } => "kind() impls",
+                        }
+                    ),
+                ));
+            }
+        }
+    }
+    // Duplicate-name detection within the string-keyed tables.
+    for t in ws.bindings.tables {
+        let Some(tf) = ws.file(t.file) else { continue };
+        let Some((s, e)) = table_span(tf, t.table) else {
+            out.push(Finding {
+                rule: "registry-coverage",
+                file: t.file.to_string(),
+                line: 1,
+                excerpt: String::new(),
+                message: format!(
+                    "registry binding broken: table `{}` not found in `{}`",
+                    t.table, t.file
+                ),
+            });
+            continue;
+        };
+        let mut seen: Vec<(String, usize)> = Vec::new();
+        for (name, off) in table_names(&tf.nocomment[s..e]) {
+            let line = tf.line_of(s + off);
+            if let Some((_, first)) = seen.iter().find(|(n, _)| *n == name) {
+                out.push(finding(
+                    tf,
+                    "registry-coverage",
+                    line,
+                    format!(
+                        "duplicate registry name \"{}\" in {} (first at line {}): \
+                         parse() resolves only the first row",
+                        name, t.table, first
+                    ),
+                ));
+            } else {
+                seen.push((name, line));
+            }
+        }
+    }
+    out
+}
+
+/// Variants of `enum <name>` in `file` as `(ident, 1-indexed line)`.
+fn enum_variants(f: &SourceFile, name: &str) -> Option<Vec<(String, usize)>> {
+    let pat = format!("enum {name}");
+    let bytes = f.code.as_bytes();
+    let mut from = 0;
+    let at = loop {
+        let p = f.code[from..].find(&pat)?;
+        let at = from + p;
+        from = at + 1;
+        let after = at + pat.len();
+        let before_ok = at == 0 || !is_ident(bytes[at.saturating_sub(1)]);
+        let after_ok = after >= bytes.len() || !is_ident(bytes[after]);
+        if before_ok && after_ok {
+            break at;
+        }
+    };
+    let open = at + f.code[at..].find('{')?;
+    let close = skip_balanced(bytes, open) - 1;
+    let body = &f.code[open + 1..close];
+    let mut vars = Vec::new();
+    let mut depth = 0i32;
+    let mut expecting = true;
+    let mut i = 0;
+    let bb = body.as_bytes();
+    while i < bb.len() {
+        match bb[i] {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            b',' if depth == 0 => expecting = true,
+            c if depth == 0 && expecting && is_ident(c) && !c.is_ascii_digit() => {
+                let start = i;
+                while i < bb.len() && is_ident(bb[i]) {
+                    i += 1;
+                }
+                vars.push((body[start..i].to_string(), f.line_of(open + 1 + start)));
+                expecting = false;
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    Some(vars)
+}
+
+/// Byte range (in the file's stripped text) of the `[...]` initializer of
+/// `const`/`static` item `table`.
+fn table_span(f: &SourceFile, table: &str) -> Option<(usize, usize)> {
+    let bytes = f.code.as_bytes();
+    for kw in ["const ", "static "] {
+        let mut from = 0;
+        while let Some(p) = f.code[from..].find(kw) {
+            let at = from + p;
+            from = at + 1;
+            if at > 0 && is_ident(bytes[at - 1]) {
+                continue; // e.g. `some_const ` — not the keyword
+            }
+            let rest = skip_ws(bytes, at + kw.len());
+            if !f.code[rest..].starts_with(table)
+                || is_ident(*bytes.get(rest + table.len()).unwrap_or(&b' '))
+            {
+                continue;
+            }
+            let eq = at + f.code[at..].find('=')?;
+            let open = eq + f.code[eq..].find('[')?;
+            let close = skip_balanced(bytes, open) - 1;
+            return Some((open + 1, close));
+        }
+    }
+    None
+}
+
+/// Registry names inside a table initializer span (the `nocomment` rep,
+/// strings intact): string literals that either follow a `name:` field or
+/// open a depth-1 tuple element. Returns `(name, byte offset in span)`.
+fn table_names(span: &str) -> Vec<(String, usize)> {
+    let bytes = span.as_bytes();
+    let mut out = Vec::new();
+    let mut depth = 0i32;
+    let mut awaiting_tuple = false;
+    let mut i = 0;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'(' => {
+                depth += 1;
+                if depth == 1 {
+                    awaiting_tuple = true;
+                }
+            }
+            b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            b'"' => {
+                let start = i + 1;
+                let mut j = start;
+                while j < bytes.len() && bytes[j] != b'"' {
+                    if bytes[j] == b'\\' {
+                        j += 1;
+                    }
+                    j += 1;
+                }
+                let lit = span[start..j.min(span.len())].to_string();
+                let is_name_field = {
+                    let before = span[..i].trim_end();
+                    before.ends_with("name:")
+                };
+                if (awaiting_tuple && depth == 1) || is_name_field {
+                    out.push((lit, i));
+                }
+                awaiting_tuple = false;
+                i = j + 1;
+                continue;
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Rule: release-silent-assert
+// ---------------------------------------------------------------------------
+
+/// A bool-form `debug_assert!` whose condition is an ordering comparison,
+/// in a function with NO release-path fallback: release builds skip the
+/// assert and run the unguarded arithmetic on garbage (the
+/// `VirtualClock::advance` backwards-clock class, fixed in PR 4 by
+/// pairing the assert with `.max(0.0)`).
+pub fn release_silent_assert(ws: &Workspace) -> Vec<Finding> {
+    const MARKERS: &[&str] = &[
+        ".max(",
+        ".min(",
+        ".clamp(",
+        "panic!(",
+        "bail!(",
+        "unreachable!(",
+        "return Err",
+        "cfg!(debug_assertions)",
+    ];
+    let mut out = Vec::new();
+    for f in &ws.files {
+        let bytes = f.code.as_bytes();
+        for span in &f.fns {
+            let body = &f.code[span.body_range.0..span.body_range.1];
+            let base = span.body_range.0;
+            let mut from = 0;
+            while let Some(p) = body[from..].find("debug_assert!(") {
+                let at = from + p;
+                from = at + 1;
+                let open = base + at + "debug_assert!".len();
+                let close = skip_balanced(bytes, open);
+                let args = &f.code[open + 1..close.saturating_sub(1)];
+                let cond = first_macro_arg(args);
+                if !has_ordering_cmp(cond) {
+                    continue;
+                }
+                let guarded = MARKERS.iter().any(|m| body.contains(m))
+                    || has_plain_assert(body);
+                if !guarded {
+                    out.push(finding(
+                        f,
+                        "release-silent-assert",
+                        f.line_of(base + at),
+                        format!(
+                            "debug_assert! guards an ordering invariant in `{}` but \
+                             release builds skip it with no fallback (.max/.min/.clamp/\
+                             assert!/panic path): the unguarded arithmetic runs on \
+                             out-of-range input silently",
+                            span.name
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    out
+}
+
+/// The condition (first macro argument, up to a top-level comma).
+fn first_macro_arg(args: &str) -> &str {
+    let bytes = args.as_bytes();
+    let mut depth = 0i32;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            b',' if depth == 0 => return &args[..i],
+            _ => {}
+        }
+    }
+    args
+}
+
+/// Does `cond` contain an ordering comparison (`<`, `>`, `<=`, `>=`)?
+/// Arrows (`->`, `=>`), shifts (`<<`, `>>`) and turbofish (`::<`) are
+/// excluded; `==`/`!=` are equality, not ordering, and never match.
+fn has_ordering_cmp(cond: &str) -> bool {
+    let b = cond.as_bytes();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'<' || c == b'>' {
+            let prev = if i == 0 { b' ' } else { b[i - 1] };
+            let next = *b.get(i + 1).unwrap_or(&b' ');
+            if next == c {
+                i += 2; // shift
+                continue;
+            }
+            if c == b'>' && (prev == b'-' || prev == b'=') {
+                i += 1; // arrow
+                continue;
+            }
+            if c == b'<' && prev == b':' {
+                i += 1; // turbofish
+                continue;
+            }
+            return true;
+        }
+        i += 1;
+    }
+    false
+}
+
+/// A plain `assert!(` (not `debug_assert!(`) anywhere in the body.
+fn has_plain_assert(body: &str) -> bool {
+    let mut from = 0;
+    while let Some(p) = body[from..].find("assert!(") {
+        let at = from + p;
+        from = at + 1;
+        if !body[..at].ends_with("debug_") {
+            return true;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rule: take-without-putback
+// ---------------------------------------------------------------------------
+
+/// `mem::take` (or a `mem::swap` against a freshly-made empty value — a
+/// disguised take) on a place with no restoring assignment/swap later in
+/// the same function. The taken arena lane survives as an EMPTY Vec, so
+/// the next step silently reallocates (or computes on nothing) — the PR 6
+/// AG-lane hazard that the take/put-back dance in `ag_exchange` exists to
+/// prevent.
+pub fn take_without_putback(ws: &Workspace) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &ws.files {
+        let bytes = f.code.as_bytes();
+        for span in &f.fns {
+            let body = &f.code[span.body_range.0..span.body_range.1];
+            let base = span.body_range.0;
+
+            // `report_at`/`rest_from` are BODY-relative offsets: where to
+            // attribute the finding, and where the put-back search starts
+            // (just past the take call, so the call's own text never
+            // satisfies it).
+            let mut check = |report_at: usize, rest_from: usize, place_raw: &str, what: &str| {
+                let mut t = place_raw.trim();
+                while let Some(r) = t.strip_prefix('&') {
+                    t = r.trim_start();
+                }
+                if let Some(r) = t.strip_prefix("mut ") {
+                    t = r.trim_start();
+                }
+                let place = squash(t);
+                if place.is_empty() {
+                    return;
+                }
+                let rest = squash(&body[rest_from..]);
+                if !restored(&rest, &place) {
+                    out.push(finding(
+                        f,
+                        "take-without-putback",
+                        f.line_of(base + report_at),
+                        format!(
+                            "{what} of `{place}` in `{}` with no put-back in the same \
+                             function (no later `{place} = ..`, swap or replace): the \
+                             lane is left empty and the arena contract breaks",
+                            span.name
+                        ),
+                    ));
+                }
+            };
+
+            // mem::take(&mut PLACE)
+            let mut from = 0;
+            while let Some(p) = body[from..].find("mem::take(") {
+                let at = from + p;
+                from = at + 1;
+                let open = base + at + "mem::take".len();
+                let close = skip_balanced(bytes, open);
+                let args = &f.code[open + 1..close.saturating_sub(1)];
+                check(at, close - base, args, "mem::take");
+            }
+
+            // mem::swap(a, b) where one side is a freshly-made empty value.
+            let mut from = 0;
+            while let Some(p) = body[from..].find("mem::swap(") {
+                let at = from + p;
+                from = at + 1;
+                let open = base + at + "mem::swap".len();
+                let close = skip_balanced(bytes, open);
+                let args = &f.code[open + 1..close.saturating_sub(1)];
+                let (a, b) = split_two_args(args);
+                let disguised = |s: &str| {
+                    let s = squash(s);
+                    s.contains("Vec::new()")
+                        || s.contains("String::new()")
+                        || s.contains("::default()")
+                        || s.contains("mem::take")
+                };
+                let victim = if disguised(a) && !disguised(b) {
+                    Some(b)
+                } else if disguised(b) && !disguised(a) {
+                    Some(a)
+                } else {
+                    None
+                };
+                if let Some(v) = victim {
+                    check(at, close - base, v, "disguised take (swap with empty)");
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Split a two-argument list at its top-level comma.
+fn split_two_args(args: &str) -> (&str, &str) {
+    let bytes = args.as_bytes();
+    let mut depth = 0i32;
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'(' | b'[' | b'{' => depth += 1,
+            b')' | b']' | b'}' => depth -= 1,
+            b',' if depth == 0 => return (&args[..i], &args[i + 1..]),
+            _ => {}
+        }
+    }
+    (args, "")
+}
+
+/// Does the (whitespace-squashed) tail of the function restore `place`?
+/// Restores: `place=` (not `==`), or a later `mem::swap`/`mem::replace`
+/// mentioning the place.
+fn restored(rest: &str, place: &str) -> bool {
+    let bytes = rest.as_bytes();
+    let mut from = 0;
+    while let Some(p) = rest[from..].find(place) {
+        let at = from + p;
+        from = at + 1;
+        let before_ok = at == 0 || !is_ident(bytes[at - 1]);
+        let after = at + place.len();
+        if !before_ok {
+            continue;
+        }
+        if bytes.get(after) == Some(&b'=') && bytes.get(after + 1) != Some(&b'=') {
+            return true;
+        }
+    }
+    for re in ["mem::swap(", "mem::replace("] {
+        let mut from = 0;
+        while let Some(p) = rest[from..].find(re) {
+            let at = from + p;
+            from = at + 1;
+            let open = at + re.len() - 1;
+            let close = skip_balanced(bytes, open);
+            if rest[open..close].contains(place) {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------------
+// Rule: malformed-allow
+// ---------------------------------------------------------------------------
+
+/// Suppressions are themselves audited: a bare allow (no `: reason`), an
+/// allow with no `(rule)`, or an allow naming a rule that is not in
+/// `RULE_TABLE` is a finding — so suppressions can never silently rot.
+pub fn malformed_allow(ws: &Workspace) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &ws.files {
+        for a in &f.allows {
+            let msg = if a.rule.is_empty() {
+                Some("flexlint::allow without a (rule): name the rule being suppressed".to_string())
+            } else if !super::RULE_TABLE.iter().any(|r| r.name == a.rule) {
+                Some(format!(
+                    "flexlint::allow names unknown rule `{}` (valid: {})",
+                    a.rule,
+                    super::rule_names().collect::<Vec<_>>().join(", ")
+                ))
+            } else if a.reason.is_none() {
+                Some(format!(
+                    "bare flexlint::allow({}) — the audit reason after `:` is mandatory",
+                    a.rule
+                ))
+            } else {
+                None
+            };
+            if let Some(message) = msg {
+                out.push(finding(f, "malformed-allow", a.line, message));
+            }
+        }
+    }
+    out
+}

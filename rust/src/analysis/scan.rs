@@ -1,0 +1,569 @@
+//! Source model for `flexlint`: a hand-rolled, line-oriented scanner over
+//! Rust source (offline build: no `syn`, no proc-macro machinery).
+//!
+//! Every file is modelled three ways, all LENGTH-PRESERVING (stripped
+//! characters become spaces, newlines survive), so byte offsets map 1:1
+//! between representations and findings can always name a real line:
+//!
+//! * `raw` — the text as written.
+//! * `nocomment` — comments blanked, string/char literals intact (registry
+//!   tables are scanned here, because their rows ARE string names).
+//! * `code` — comments blanked AND literal *contents* blanked (rules scan
+//!   here, so a doc comment or an embedded fixture string mentioning
+//!   `partial_cmp().unwrap()` can never fire a finding).
+//!
+//! On top of the stripped text the scanner extracts:
+//! * [`Allow`] suppressions from line comments (`allow(<rule>): <reason>`
+//!   behind the `flexlint::` marker, plus the file-level `allow-file`
+//!   form — see [`crate::analysis`] for the policy), and
+//! * [`FnSpan`]s — `fn` item boundaries by brace matching over `code`,
+//!   used by the function-scoped rules (take/put-back, silent asserts,
+//!   per-worker rng paths).
+//!
+//! Known limitations (documented in DESIGN.md §13): block comments cannot
+//! carry allows, macro definition bodies are scanned as ordinary code, and
+//! closures do not open their own span (they belong to the innermost `fn`).
+
+/// One suppression annotation parsed from a line comment.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allow {
+    /// Rule name inside the parens (may be unknown — that is a finding).
+    pub rule: String,
+    /// Mandatory audit reason after the colon; `None` is itself a finding
+    /// and never suppresses anything.
+    pub reason: Option<String>,
+    /// The `allow-file(...)` variant: applies to the whole file.
+    pub file_level: bool,
+    /// 1-indexed line the annotation sits on.
+    pub line: usize,
+}
+
+/// One `fn` item with a body, located by brace matching.
+#[derive(Debug, Clone)]
+pub struct FnSpan {
+    pub name: String,
+    /// Signature text (stripped `code` rep) from `fn` to the body `{`.
+    pub header: String,
+    /// 1-indexed line of the `fn` keyword.
+    pub start: usize,
+    /// 1-indexed line of the closing `}`.
+    pub end: usize,
+    /// Byte range of the body (between the braces) in the joined text.
+    pub body_range: (usize, usize),
+}
+
+/// One scanned file: stripped representations + extracted structure.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Path relative to the scan root, `/`-separated.
+    pub rel: String,
+    pub raw: String,
+    pub nocomment: String,
+    pub code: String,
+    /// Byte offset of each line start in the (length-preserved) text.
+    pub line_starts: Vec<usize>,
+    pub allows: Vec<Allow>,
+    pub fns: Vec<FnSpan>,
+}
+
+impl SourceFile {
+    /// Build the model from source text. `rel` is the display path.
+    pub fn parse(rel: &str, raw: &str) -> SourceFile {
+        let (nocomment, code, comments) = strip(raw);
+        let line_starts = line_starts(raw);
+        let allows = parse_allows(&comments, &line_starts);
+        let fns = fn_spans(&code, &line_starts);
+        SourceFile {
+            rel: rel.to_string(),
+            raw: raw.to_string(),
+            nocomment,
+            code,
+            line_starts,
+            allows,
+            fns,
+        }
+    }
+
+    /// 1-indexed line containing byte `offset`.
+    pub fn line_of(&self, offset: usize) -> usize {
+        match self.line_starts.binary_search(&offset) {
+            Ok(i) => i + 1,
+            Err(i) => i, // insertion point = lines fully before offset
+        }
+    }
+
+    /// The raw text of 1-indexed `line`, trimmed (finding excerpts).
+    pub fn raw_line(&self, line: usize) -> &str {
+        let start = self.line_starts[line - 1];
+        let end = self
+            .line_starts
+            .get(line)
+            .map(|&e| e.saturating_sub(1))
+            .unwrap_or(self.raw.len());
+        self.raw[start..end.max(start)].trim()
+    }
+
+    /// Innermost `fn` span whose body contains byte `offset`.
+    pub fn fn_at(&self, offset: usize) -> Option<&FnSpan> {
+        self.fns
+            .iter()
+            .filter(|f| offset >= f.body_range.0 && offset < f.body_range.1)
+            .min_by_key(|f| f.body_range.1 - f.body_range.0)
+    }
+}
+
+/// Byte offsets of line starts (first line starts at 0).
+fn line_starts(text: &str) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, b) in text.bytes().enumerate() {
+        if b == b'\n' {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+/// The stripping state machine. Returns `(nocomment, code, comments)`,
+/// each the same byte length as `raw`:
+/// * `nocomment`: comment bytes → spaces;
+/// * `code`: comment bytes AND string/char literal contents → spaces;
+/// * `comments`: everything EXCEPT comment text → spaces (allow parsing).
+fn strip(raw: &str) -> (String, String, String) {
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(u32),
+        Str,
+        RawStr(u32),
+        Char,
+    }
+    let bytes = raw.as_bytes();
+    let n = bytes.len();
+    let mut nocomment = vec![b' '; n];
+    let mut code = vec![b' '; n];
+    let mut comments = vec![b' '; n];
+    let mut st = St::Code;
+    let mut i = 0;
+    // Copy a byte into the representations that keep it. Multi-byte UTF-8
+    // sequences pass through byte-by-byte (states never switch mid-char:
+    // every delimiter is ASCII).
+    while i < n {
+        let b = bytes[i];
+        match st {
+            St::Code => {
+                if b == b'/' && i + 1 < n && bytes[i + 1] == b'/' {
+                    st = St::LineComment;
+                    i += 2;
+                    continue;
+                }
+                if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    st = St::BlockComment(1);
+                    i += 2;
+                    continue;
+                }
+                if b == b'"' {
+                    nocomment[i] = b;
+                    code[i] = b;
+                    st = St::Str;
+                    i += 1;
+                    continue;
+                }
+                // Raw (and byte/raw-byte) strings: r"", r#""#, br"", ...
+                if (b == b'r' || b == b'b') && !ident_char(prev_byte(bytes, i)) {
+                    if let Some((hashes, skip)) = raw_str_open(bytes, i) {
+                        for j in i..i + skip {
+                            nocomment[j] = bytes[j];
+                            code[j] = bytes[j];
+                        }
+                        st = St::RawStr(hashes);
+                        i += skip;
+                        continue;
+                    }
+                }
+                if b == b'\'' {
+                    // Lifetime (`'a`, `'static`) vs char literal: a
+                    // lifetime's ident is NOT followed by a closing quote.
+                    let mut j = i + 1;
+                    while j < n && ident_char(bytes[j]) {
+                        j += 1;
+                    }
+                    let is_lifetime = j > i + 1 && (j >= n || bytes[j] != b'\'');
+                    if !is_lifetime {
+                        nocomment[i] = b;
+                        code[i] = b;
+                        st = St::Char;
+                        i += 1;
+                        continue;
+                    }
+                }
+                if b == b'\n' {
+                    nocomment[i] = b;
+                    code[i] = b;
+                    comments[i] = b;
+                } else {
+                    nocomment[i] = b;
+                    code[i] = b;
+                }
+                i += 1;
+            }
+            St::LineComment => {
+                if b == b'\n' {
+                    nocomment[i] = b;
+                    code[i] = b;
+                    comments[i] = b;
+                    st = St::Code;
+                } else {
+                    comments[i] = b;
+                }
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                if b == b'\n' {
+                    nocomment[i] = b;
+                    code[i] = b;
+                    comments[i] = b;
+                    i += 1;
+                } else if b == b'*' && i + 1 < n && bytes[i + 1] == b'/' {
+                    st = if depth == 1 { St::Code } else { St::BlockComment(depth - 1) };
+                    i += 2;
+                } else if b == b'/' && i + 1 < n && bytes[i + 1] == b'*' {
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if b == b'\\' && i + 1 < n {
+                    nocomment[i] = b;
+                    nocomment[i + 1] = bytes[i + 1];
+                    i += 2;
+                } else {
+                    if b == b'\n' || b == b'"' {
+                        nocomment[i] = b;
+                        code[i] = if b == b'\n' { b } else { b'"' };
+                        if b == b'"' {
+                            st = St::Code;
+                        }
+                    } else {
+                        nocomment[i] = b;
+                    }
+                    i += 1;
+                }
+            }
+            St::RawStr(hashes) => {
+                if b == b'"' && raw_str_close(bytes, i, hashes) {
+                    for j in i..(i + 1 + hashes as usize).min(n) {
+                        nocomment[j] = bytes[j];
+                        code[j] = bytes[j];
+                    }
+                    st = St::Code;
+                    i += 1 + hashes as usize;
+                } else {
+                    nocomment[i] = b;
+                    if b == b'\n' {
+                        code[i] = b;
+                    }
+                    i += 1;
+                }
+            }
+            St::Char => {
+                if b == b'\\' && i + 1 < n {
+                    nocomment[i] = b;
+                    nocomment[i + 1] = bytes[i + 1];
+                    i += 2;
+                } else {
+                    nocomment[i] = b;
+                    if b == b'\'' {
+                        code[i] = b;
+                        st = St::Code;
+                    } else if b == b'\n' {
+                        code[i] = b;
+                        comments[i] = b;
+                        // Unterminated char on one line: bail to Code so a
+                        // stray quote can't swallow the rest of the file.
+                        st = St::Code;
+                    }
+                    i += 1;
+                }
+            }
+        }
+    }
+    // The buffers only ever hold ASCII substitutions or original bytes at
+    // original positions, so they remain valid UTF-8.
+    (
+        String::from_utf8(nocomment).expect("stripped text stays utf-8"),
+        String::from_utf8(code).expect("stripped text stays utf-8"),
+        String::from_utf8(comments).expect("stripped text stays utf-8"),
+    )
+}
+
+fn prev_byte(bytes: &[u8], i: usize) -> u8 {
+    if i == 0 {
+        b' '
+    } else {
+        bytes[i - 1]
+    }
+}
+
+fn ident_char(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// If `bytes[i..]` opens a raw string (`r`/`br` + hashes + `"`), return
+/// `(hash_count, bytes_consumed_through_quote)`.
+fn raw_str_open(bytes: &[u8], i: usize) -> Option<(u32, usize)> {
+    let mut j = i;
+    if bytes[j] == b'b' {
+        j += 1;
+        if j >= bytes.len() || bytes[j] != b'r' {
+            return None;
+        }
+    }
+    if bytes[j] != b'r' {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0u32;
+    while j < bytes.len() && bytes[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < bytes.len() && bytes[j] == b'"' {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+/// True when the `"` at `i` closes a raw string opened with `hashes` `#`s
+/// (i.e. exactly `hashes` `#` bytes follow; too few remaining bytes fail).
+fn raw_str_close(bytes: &[u8], i: usize, hashes: u32) -> bool {
+    let need = hashes as usize;
+    bytes[i + 1..].iter().take(need).filter(|&&b| b == b'#').count() == need
+}
+
+/// Parse `allow(<rule>): <reason>` / `allow-file(..)` annotations (the
+/// `MARK`-prefixed forms) out of the comments-only text. A missing
+/// reason is recorded as `reason: None` (the `malformed-allow` rule
+/// fires on it). The marker is spelled out only inside `MARK` below so
+/// the scanner cannot flag its own documentation.
+fn parse_allows(comments: &str, line_starts: &[usize]) -> Vec<Allow> {
+    const MARK: &str = "flexlint::allow";
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = comments[from..].find(MARK) {
+        let at = from + pos;
+        let mut j = at + MARK.len();
+        let rest = &comments[j..];
+        let file_level = rest.starts_with("-file");
+        if file_level {
+            j += "-file".len();
+        }
+        let line = match line_starts.binary_search(&at) {
+            Ok(i) => i + 1,
+            Err(i) => i,
+        };
+        // Expect `(<rule>)` immediately (no spaces: the annotation is a
+        // fixed token, not prose).
+        let after = &comments[j..];
+        let parsed = after.strip_prefix('(').and_then(|r| {
+            r.find(')').map(|close| (r[..close].trim().to_string(), j + 1 + close + 1))
+        });
+        match parsed {
+            Some((rule, after_paren)) => {
+                // Reason: `: non-empty text` on the same line.
+                let tail = &comments[after_paren..];
+                let eol = tail.find('\n').unwrap_or(tail.len());
+                let same_line = &tail[..eol];
+                let reason = same_line.strip_prefix(':').map(str::trim).and_then(|r| {
+                    if r.is_empty() {
+                        None
+                    } else {
+                        Some(r.to_string())
+                    }
+                });
+                out.push(Allow { rule, reason, file_level, line });
+                from = after_paren;
+            }
+            None => {
+                // A marker with no parens at all: record it as a
+                // malformed (rule-less) annotation rather than ignoring it.
+                out.push(Allow {
+                    rule: String::new(),
+                    reason: None,
+                    file_level,
+                    line,
+                });
+                from = j;
+            }
+        }
+    }
+    out
+}
+
+/// Locate every `fn` item WITH a body by brace matching over `code`.
+fn fn_spans(code: &str, line_starts: &[usize]) -> Vec<FnSpan> {
+    let bytes = code.as_bytes();
+    let n = bytes.len();
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i + 2 < n {
+        // Word-boundary `fn`.
+        if &code[i..i + 2] == "fn"
+            && !ident_char(prev_byte(bytes, i))
+            && i + 2 < n
+            && !ident_char(bytes[i + 2])
+        {
+            let mut j = i + 2;
+            while j < n && (bytes[j] as char).is_whitespace() {
+                j += 1;
+            }
+            let name_start = j;
+            while j < n && ident_char(bytes[j]) {
+                j += 1;
+            }
+            let name = code[name_start..j].to_string();
+            if name.is_empty() {
+                i += 2;
+                continue;
+            }
+            // Scan to the body `{`; a `;` at paren/bracket depth 0 first
+            // means a bodyless trait/extern declaration. `<`/`>` generics
+            // are NOT tracked as depth (comparison operators would skew
+            // it); braces inside generic bounds don't occur in this crate.
+            let mut depth = 0i32;
+            let mut body_open = None;
+            while j < n {
+                match bytes[j] {
+                    b'(' | b'[' => depth += 1,
+                    b')' | b']' => depth -= 1,
+                    b';' if depth == 0 => break,
+                    b'{' if depth == 0 => {
+                        body_open = Some(j);
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            if let Some(open) = body_open {
+                let mut braces = 1i32;
+                let mut k = open + 1;
+                while k < n && braces > 0 {
+                    match bytes[k] {
+                        b'{' => braces += 1,
+                        b'}' => braces -= 1,
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                let close = k.saturating_sub(1);
+                let line = |off: usize| match line_starts.binary_search(&off) {
+                    Ok(x) => x + 1,
+                    Err(x) => x,
+                };
+                out.push(FnSpan {
+                    name,
+                    header: code[i..open].to_string(),
+                    start: line(i),
+                    end: line(close),
+                    body_range: (open + 1, close),
+                });
+                // Continue INSIDE the body so nested fns are found too.
+                i = open + 1;
+                continue;
+            }
+            i = j.max(i + 2);
+            continue;
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked_in_code() {
+        let src = "let x = \"partial_cmp().unwrap()\"; // Instant::now()\nlet y = 1;\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.code.contains("partial_cmp"));
+        assert!(!f.code.contains("Instant::now"));
+        assert!(f.code.contains("let x ="));
+        assert!(f.code.contains("let y = 1;"));
+        // nocomment keeps the string but drops the comment.
+        assert!(f.nocomment.contains("partial_cmp"));
+        assert!(!f.nocomment.contains("Instant::now"));
+        assert_eq!(f.code.len(), src.len(), "length-preserving");
+    }
+
+    #[test]
+    fn raw_strings_and_chars_and_lifetimes() {
+        let src = "let r = r#\"Instant::now() \"quoted\"\"#;\nlet c = '\\n';\nfn f<'a>(x: &'a str) -> &'a str { x }\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.code.contains("Instant::now"));
+        assert!(f.code.contains("fn f<'a>"), "lifetimes survive: {}", f.code);
+        assert_eq!(f.fns.len(), 1);
+        assert_eq!(f.fns[0].name, "f");
+    }
+
+    #[test]
+    fn block_comments_nest_and_blank() {
+        let src = "/* outer /* Instant::now() */ still comment */ let z = 3;\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert!(!f.code.contains("Instant::now"));
+        assert!(f.code.contains("let z = 3;"));
+    }
+
+    #[test]
+    fn allow_parsing_and_malformed_forms() {
+        let src = "\
+// flexlint::allow(nan-partial-cmp): audited, this is the policy home\n\
+let a = 1;\n\
+// flexlint::allow(shared-rng)\n\
+// flexlint::allow-file(unsanctioned-clock): bench harness measures time\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.allows.len(), 3);
+        assert_eq!(f.allows[0].rule, "nan-partial-cmp");
+        assert_eq!(f.allows[0].line, 1);
+        assert!(f.allows[0].reason.is_some() && !f.allows[0].file_level);
+        assert_eq!(f.allows[1].rule, "shared-rng");
+        assert!(f.allows[1].reason.is_none(), "bare allow has no reason");
+        assert!(f.allows[2].file_level);
+        assert_eq!(f.allows[2].line, 4);
+    }
+
+    #[test]
+    fn fn_spans_cover_bodies_and_skip_trait_decls() {
+        let src = "\
+trait T {\n\
+    fn no_body(&self) -> u32;\n\
+}\n\
+fn outer(worker: usize) -> u32 {\n\
+    fn inner() -> u32 { 7 }\n\
+    inner() + worker as u32\n\
+}\n";
+        let f = SourceFile::parse("t.rs", src);
+        let names: Vec<&str> = f.fns.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["outer", "inner"]);
+        let outer = &f.fns[0];
+        assert!(outer.header.contains("worker"));
+        assert_eq!((outer.start, outer.end), (4, 7));
+        // Innermost-span resolution: a byte inside `inner` maps to inner.
+        let off = src.find("{ 7 }").unwrap() + 2;
+        assert_eq!(f.fn_at(off).unwrap().name, "inner");
+    }
+
+    #[test]
+    fn line_mapping_is_exact() {
+        let src = "a\nbb\nccc\n";
+        let f = SourceFile::parse("t.rs", src);
+        assert_eq!(f.line_of(0), 1);
+        assert_eq!(f.line_of(2), 2);
+        assert_eq!(f.line_of(5), 3);
+        assert_eq!(f.raw_line(2), "bb");
+    }
+}

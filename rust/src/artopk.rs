@@ -15,6 +15,7 @@
 //! Total cost = Eqn 4a (ring) / 4b (tree); the flexible strategy picks
 //! ring/tree/AG per Eqn 5 ([`crate::coordinator::selector`]).
 
+// flexlint::allow-file(unsanctioned-clock): the whole module is the billed compression hot path — t_comp is measured here inside pool tasks by design (DESIGN.md §7)
 use crate::collectives::{broadcast, ring_allreduce, tree_allreduce, CommReport};
 use crate::compress::topk::{select_into, SelectBackend, SelectScratch};
 use crate::compress::{k_for, EfState, SparseGrad};

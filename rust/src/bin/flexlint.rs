@@ -1,0 +1,120 @@
+//! flexlint — the repo's first-party invariant linter (DESIGN.md §13).
+//!
+//! Scans `rust/src/**` with the hand-rolled analyzer in
+//! `flexcomm::analysis`, prints a human table, writes `LINT_REPORT.json`
+//! and exits nonzero on any unsuppressed finding (the verify.sh gate).
+//!
+//! Exit codes: 0 clean, 1 findings, 2 configuration/self-test error.
+
+use flexcomm::analysis::{self, report, Workspace, RULE_TABLE};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: flexlint [--root <dir>] [--rule <name>] [--report <path>] \
+                     [--list] [--self-test]\n\
+                     \n\
+                     --root <dir>     scan root (default: rust/src)\n\
+                     --rule <name>    run a single rule (see --list)\n\
+                     --report <path>  JSON report path (default: LINT_REPORT.json)\n\
+                     --list           print the rule registry and exit\n\
+                     --self-test      run every rule's embedded fixtures and exit";
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from("rust/src");
+    let mut report_path = PathBuf::from("LINT_REPORT.json");
+    let mut filter: Option<&'static str> = None;
+    let mut list = false;
+    let mut self_test = false;
+
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => match args.next() {
+                Some(v) => root = PathBuf::from(v),
+                None => return usage_error("--root needs a directory"),
+            },
+            "--report" => match args.next() {
+                Some(v) => report_path = PathBuf::from(v),
+                None => return usage_error("--report needs a path"),
+            },
+            "--rule" => match args.next() {
+                Some(v) => match analysis::parse_rule_filter(&v) {
+                    Ok(name) => filter = Some(name),
+                    Err(e) => return usage_error(&e),
+                },
+                None => return usage_error("--rule needs a name"),
+            },
+            "--list" => list = true,
+            "--self-test" => self_test = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => return usage_error(&format!("unknown argument `{other}`")),
+        }
+    }
+
+    if list {
+        print!("{}", report::rule_list());
+        return ExitCode::SUCCESS;
+    }
+    if self_test {
+        return run_self_test();
+    }
+
+    let ws = match Workspace::load(&root) {
+        Ok(ws) => ws,
+        Err(e) => {
+            eprintln!("flexlint: cannot scan {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    let result = analysis::run(&ws, filter);
+    if let Err(e) = report::write_report(&report_path, &ws, &result) {
+        eprintln!("flexlint: cannot write {}: {e}", report_path.display());
+        return ExitCode::from(2);
+    }
+    print!("{}", report::human_table(&ws, &result));
+    if result.findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn usage_error(msg: &str) -> ExitCode {
+    eprintln!("flexlint: {msg}\n{USAGE}");
+    ExitCode::from(2)
+}
+
+/// Exercise every RULE_TABLE fixture (the same contract the unit suite
+/// pins): positive fires, negative is silent, suppression holds.
+fn run_self_test() -> ExitCode {
+    let mut failed = 0usize;
+    for rule in RULE_TABLE {
+        let fires = !analysis::run(&Workspace::fixture(rule.fires_on), Some(rule.name))
+            .findings
+            .is_empty();
+        let clean = analysis::run(&Workspace::fixture(rule.clean_on), Some(rule.name))
+            .findings
+            .is_empty();
+        let suppressed = rule.suppressed_on.map_or(true, |src| {
+            let r = analysis::run(&Workspace::fixture(src), Some(rule.name));
+            r.findings.is_empty() && r.suppressed >= 1
+        });
+        let ok = fires && clean && suppressed;
+        println!(
+            "{} {} (fires: {fires}, clean: {clean}, suppression: {suppressed})",
+            if ok { "ok  " } else { "FAIL" },
+            rule.name
+        );
+        if !ok {
+            failed += 1;
+        }
+    }
+    if failed == 0 {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(2)
+    }
+}

@@ -57,9 +57,10 @@ impl MsTopk {
         }
         if cand.len() > cap {
             cand.select_nth_unstable_by(cap - 1, |a, b| {
-                b.1.abs()
-                    .partial_cmp(&a.1.abs())
-                    .unwrap_or(std::cmp::Ordering::Equal)
+                // Total order (NaN can't pass the >= tau filter, but
+                // unwrap_or(Equal) is non-transitive and select_nth may
+                // panic on inconsistent comparators).
+                crate::tensor::nan_min_cmp_f32(b.1.abs(), a.1.abs())
                     .then_with(|| a.0.cmp(&b.0))
             });
             cand.truncate(cap);
@@ -94,6 +95,21 @@ mod tests {
     use super::*;
     use crate::compress::topk::topk_indices;
     use crate::util::proptest::{check, ensure};
+
+    /// A NaN-poisoned gradient must not panic the selection path (NaN
+    /// fails the `>= tau` filter, and the quickselect comparator is a
+    /// total order now), and the output must be NaN-free + deterministic.
+    #[test]
+    fn nan_gradient_does_not_panic_and_is_deterministic() {
+        let mut g: Vec<f32> = (1..=500).map(|i| i as f32 / 500.0).collect();
+        g[7] = f32::NAN;
+        g[311] = f32::NAN;
+        let mut ms = MsTopk::new(25);
+        let a = ms.compress(&g, 0.05, &Layout::single(g.len()));
+        assert!(a.values.iter().all(|v| !v.is_nan()), "NaN must be filtered");
+        let b = ms.compress(&g, 0.05, &Layout::single(g.len()));
+        assert_eq!(a.indices, b.indices);
+    }
 
     #[test]
     fn threshold_brackets_k() {

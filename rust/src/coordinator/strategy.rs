@@ -446,6 +446,7 @@ fn ag_exchange(workers: &mut [AgWorker], ctx: &mut ExchangeCtx<'_>) -> ExchangeO
         ctx.ef.iter_mut().zip(workers.iter_mut()).collect();
     let results = pool.map_mut(&mut lanes, |w, lane| {
         let (ef, worker) = lane;
+        // flexlint::allow(unsanctioned-clock): billed t_comp — measured INSIDE the pool task, on the critical path (DESIGN.md §7)
         let t0 = Instant::now();
         ef.error_fed_into(&grads[w], &mut worker.g_e);
         worker.comp.compress_into(&worker.g_e, cr, layout, &mut worker.part);
@@ -454,6 +455,7 @@ fn ag_exchange(workers: &mut [AgWorker], ctx: &mut ExchangeCtx<'_>) -> ExchangeO
         // billed compression path (a cluster wouldn't run it).
         let e_sq = crate::tensor::sq_norm(&worker.g_e);
         let g = gain(worker.part.sq_norm(), e_sq);
+        // flexlint::allow(unsanctioned-clock): second billed segment, resumes after the unbilled gain bookkeeping
         let t1 = Instant::now();
         ef.update_swap(&mut worker.g_e, &worker.part);
         dt += t1.elapsed().as_secs_f64();

@@ -474,7 +474,7 @@ impl SweepReport {
         rows.sort_by(|a, b| {
             let (ga, ka) = key(a);
             let (gb, kb) = key(b);
-            ga.cmp(&gb).then(ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal))
+            ga.cmp(&gb).then(crate::tensor::nan_min_cmp(ka, kb))
         });
         rows
     }
@@ -698,6 +698,49 @@ mod tests {
 
     // Satellite: per-axis typed validation errors, each listing its
     // registry's valid names.
+
+    /// NaN-poisoned ranking keys (NaN time-to-target, NaN best_acc) must
+    /// neither panic nor perturb the group order now that the tiebreak
+    /// runs through the crate NaN total order.
+    #[test]
+    fn ranked_survives_nan_rows_deterministically() {
+        let cell = |m: &str| SweepCell {
+            model: m.into(),
+            strategy: "s".into(),
+            net: "n".into(),
+            controller: "c".into(),
+        };
+        let row = |m: &str, ttt: Option<f64>, best: f64| SweepRow {
+            cell: cell(m),
+            model_name: m.into(),
+            final_loss: 0.0,
+            best_acc: best,
+            final_acc: best,
+            virtual_time_s: 1.0,
+            time_to_target_s: ttt,
+            final_cr: 0.1,
+            error: None,
+        };
+        let report = SweepReport {
+            rows: vec![
+                row("a", Some(f64::NAN), 0.9),
+                row("b", Some(2.0), 0.9),
+                row("c", None, f64::NAN),
+                row("d", None, 0.8),
+                row("e", Some(1.0), 0.9),
+            ],
+            target_acc: 0.9,
+            progress: Arc::new(SweepProgress::default()),
+        };
+        let ids: Vec<String> =
+            report.ranked().iter().map(|r| r.cell.model.clone()).collect();
+        // Reached cells ascending by time (NaN maps to INFINITY, last);
+        // then unreached by descending accuracy (NaN last).
+        assert_eq!(ids, vec!["e", "b", "a", "d", "c"]);
+        let again: Vec<String> =
+            report.ranked().iter().map(|r| r.cell.model.clone()).collect();
+        assert_eq!(ids, again, "ranking must be deterministic");
+    }
 
     #[test]
     fn bad_model_axis_is_a_typed_listing_error() {

@@ -19,6 +19,7 @@
 //! (PRNG, config, CLI, stats/KDE, property testing, bench harness) is
 //! first-party under [`util`].
 
+pub mod analysis;
 pub mod artopk;
 pub mod collectives;
 pub mod compress;

@@ -105,7 +105,7 @@ fn crowding_distances(objs: &[Vec<f64>], front: &[usize]) -> Vec<f64> {
     for d in 0..n_obj {
         let mut order: Vec<usize> = (0..front.len()).collect();
         order.sort_by(|&a, &b| {
-            objs[front[a]][d].partial_cmp(&objs[front[b]][d]).unwrap()
+            crate::tensor::nan_min_cmp(objs[front[a]][d], objs[front[b]][d])
         });
         let lo = objs[front[order[0]]][d];
         let hi = objs[front[*order.last().unwrap()]][d];
@@ -215,7 +215,7 @@ pub fn optimize<P: Problem>(problem: &P, cfg: &Nsga2Config) -> Nsga2Result {
             let mut members: Vec<(usize, f64)> =
                 front.iter().copied().zip(dists).collect();
             if next.len() + members.len() > cfg.pop_size {
-                members.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+                members.sort_by(|a, b| crate::tensor::nan_min_cmp(b.1, a.1));
                 members.truncate(cfg.pop_size - next.len());
             }
             for (idx, crowd) in members {
@@ -329,5 +329,82 @@ mod tests {
         for ind in &res.population {
             assert!((0.0..=1.0).contains(&ind.genes[0]));
         }
+    }
+
+    /// A problem that injects NaN objectives for part of the gene range —
+    /// the crowding/selection sorts must neither panic nor go
+    /// non-deterministic now that they use the crate NaN total order.
+    struct NanPoisoned;
+
+    impl Problem for NanPoisoned {
+        fn n_var(&self) -> usize {
+            1
+        }
+        fn n_obj(&self) -> usize {
+            2
+        }
+        fn evaluate(&self, x: &[f64]) -> Vec<f64> {
+            if x[0] > 0.7 {
+                vec![f64::NAN, x[0]]
+            } else {
+                vec![x[0], (1.0 - x[0]) * (1.0 - x[0])]
+            }
+        }
+    }
+
+    #[test]
+    fn nan_objectives_do_not_panic_and_stay_deterministic() {
+        let cfg = Nsga2Config { seed: 11, generations: 12, ..Default::default() };
+        let a = optimize(&NanPoisoned, &cfg);
+        let b = optimize(&NanPoisoned, &cfg);
+        let ga: Vec<u64> = a.population.iter().map(|i| i.genes[0].to_bits()).collect();
+        let gb: Vec<u64> = b.population.iter().map(|i| i.genes[0].to_bits()).collect();
+        assert_eq!(ga, gb, "NaN-poisoned run must stay bitwise-deterministic");
+    }
+
+    /// The comparator swap (`partial_cmp().unwrap()` -> `nan_min_cmp`) must
+    /// be behavior-preserving on non-NaN inputs: pin the crowding sort and
+    /// descending selection order bitwise against a reference ordering.
+    #[test]
+    fn non_nan_ordering_pinned_bitwise_unchanged() {
+        let objs = vec![
+            vec![0.3, 2.0],
+            vec![0.1, 3.0],
+            vec![0.7, 1.0],
+            vec![0.5, 1.5],
+            vec![0.2, 2.5],
+        ];
+        let front: Vec<usize> = (0..objs.len()).collect();
+        let dists = crowding_distances(&objs, &front);
+        // Reference: the exact same crowding computation with the old
+        // comparator (total on these finite inputs).
+        let mut ref_dist = vec![0.0f64; front.len()];
+        for d in 0..2 {
+            let mut order: Vec<usize> = (0..front.len()).collect();
+            // flexlint::allow(nan-partial-cmp): reference comparator the pin test compares against
+            order.sort_by(|&a, &b| objs[a][d].partial_cmp(&objs[b][d]).unwrap());
+            let lo = objs[order[0]][d];
+            let hi = objs[*order.last().unwrap()][d];
+            ref_dist[order[0]] = f64::INFINITY;
+            ref_dist[*order.last().unwrap()] = f64::INFINITY;
+            if hi > lo {
+                for w in 1..order.len() - 1 {
+                    ref_dist[order[w]] += (objs[order[w + 1]][d] - objs[order[w - 1]][d]) / (hi - lo);
+                }
+            }
+        }
+        let got: Vec<u64> = dists.iter().map(|d| d.to_bits()).collect();
+        let want: Vec<u64> = ref_dist.iter().map(|d| d.to_bits()).collect();
+        assert_eq!(got, want, "crowding distances changed on non-NaN inputs");
+
+        // Descending selection sort order identical to the old comparator.
+        let mut members: Vec<(usize, f64)> = front.iter().copied().zip(dists.clone()).collect();
+        members.sort_by(|a, b| crate::tensor::nan_min_cmp(b.1, a.1));
+        let mut reference: Vec<(usize, f64)> = front.iter().copied().zip(dists).collect();
+        // flexlint::allow(nan-partial-cmp): reference comparator the pin test compares against
+        reference.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        let got: Vec<usize> = members.iter().map(|m| m.0).collect();
+        let want: Vec<usize> = reference.iter().map(|m| m.0).collect();
+        assert_eq!(got, want, "selection order changed on non-NaN inputs");
     }
 }

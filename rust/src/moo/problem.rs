@@ -53,7 +53,7 @@ pub struct CrProblem {
 impl CrProblem {
     pub fn new(mut profiles: Vec<CandidateProfile>) -> Self {
         assert!(profiles.len() >= 2, "need at least two candidate profiles");
-        profiles.sort_by(|a, b| a.cr.partial_cmp(&b.cr).unwrap());
+        profiles.sort_by(|a, b| crate::tensor::nan_min_cmp(a.cr, b.cr));
         for p in &profiles {
             assert!(p.cr > 0.0 && p.gain > 0.0 && p.gain <= 1.0 + 1e-9);
         }
@@ -174,6 +174,17 @@ mod tests {
         let p = CrProblem::new(ladder());
         let c = p.solve(11);
         assert!(c >= 0.001 - 1e-12 && c <= 0.1 + 1e-12);
+    }
+
+    /// A NaN `cr` must no longer panic inside the sort comparator: the
+    /// total order places it first and the TYPED validation (`cr > 0.0`)
+    /// rejects it with a meaningful assert instead.
+    #[test]
+    #[should_panic(expected = "p.cr > 0.0")]
+    fn nan_cr_is_rejected_by_validation_not_comparator() {
+        let mut profs = ladder();
+        profs[2].cr = f64::NAN;
+        let _ = CrProblem::new(profs);
     }
 
     #[test]

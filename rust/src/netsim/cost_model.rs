@@ -53,7 +53,9 @@ fn log2f(n: usize) -> f64 {
 /// the simulated ops, which can't run fractional rounds).
 #[inline]
 fn ceil_log2f(n: usize) -> f64 {
-    debug_assert!(n >= 1);
+    // Plain assert (matching prev_pow2 below): in release a debug_assert
+    // would vanish and `n - 1` wraps to a 64-round "collective".
+    assert!(n >= 1);
     (usize::BITS - (n - 1).leading_zeros()) as f64
 }
 

@@ -442,9 +442,22 @@ mod tests {
         assert!(e9 < e0 * 0.5, "energy must decay: {e0} -> {e9}");
         // Heavy tail: top 1% carries far more than 1% of the energy.
         let mut mags: Vec<f32> = g0.iter().map(|v| v * v).collect();
-        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        mags.sort_by(|a, b| crate::tensor::nan_min_cmp_f32(*b, *a));
         let top1: f64 = mags[..500].iter().map(|&v| v as f64).sum();
         assert!(top1 / e0 > 0.05, "top-1% energy share {}", top1 / e0);
+    }
+
+    /// The magnitude sort above runs through the crate f32 NaN total
+    /// order: a poisoned gradient must sort deterministically (NaN last
+    /// in descending order), never panic.
+    #[test]
+    fn magnitude_sort_survives_nan_poisoning() {
+        let mut mags = vec![3.0f32, f32::NAN, 1.0, 2.0];
+        mags.sort_by(|a, b| crate::tensor::nan_min_cmp_f32(*b, *a));
+        assert_eq!(mags[0], 3.0);
+        assert_eq!(mags[1], 2.0);
+        assert_eq!(mags[2], 1.0);
+        assert!(mags[3].is_nan(), "NaN is smallest, so last when descending");
     }
 
     #[test]

@@ -120,6 +120,7 @@ pub fn sq_norm(x: &[f32]) -> f64 {
 pub fn nan_min_cmp(a: f64, b: f64) -> std::cmp::Ordering {
     use std::cmp::Ordering;
     match (a.is_nan(), b.is_nan()) {
+        // flexlint::allow(nan-partial-cmp): this IS the total-order implementation — both sides proven non-NaN
         (false, false) => a.partial_cmp(&b).expect("non-NaN values compare"),
         (true, true) => Ordering::Equal,
         (true, false) => Ordering::Less,

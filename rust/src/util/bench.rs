@@ -4,6 +4,7 @@
 //! benchmark warms up, then runs timed iterations until a wall-clock budget
 //! or max-iteration cap is hit, and reports mean/p50/p95 per iteration.
 
+// flexlint::allow-file(unsanctioned-clock): the bench harness measures wall time by definition
 use std::time::{Duration, Instant};
 
 /// One benchmark measurement.

@@ -31,7 +31,7 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| crate::tensor::nan_min_cmp(*a, *b));
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -190,10 +190,24 @@ mod tests {
             .density
             .iter()
             .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .max_by(|a, b| crate::tensor::nan_min_cmp(*a.1, *b.1))
             .unwrap()
             .0;
         assert!((k.grid[peak]).abs() < 0.3);
+    }
+
+    #[test]
+    fn percentile_survives_nan_poisoning() {
+        // NaN sorts first under the crate total order (nan_min_cmp): no
+        // panic, deterministic placement, finite percentiles unchanged at
+        // the top end.
+        let xs = [3.0, f64::NAN, 1.0, 2.0];
+        let p100 = percentile(&xs, 100.0);
+        assert_eq!(p100, 3.0);
+        let p0 = percentile(&xs, 0.0);
+        assert!(p0.is_nan(), "NaN is smallest under the total order");
+        // Repeat runs are bitwise-stable (sort is deterministic).
+        assert_eq!(percentile(&xs, 100.0).to_bits(), p100.to_bits());
     }
 
     #[test]

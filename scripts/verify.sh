@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # flexcomm verify gate (DESIGN.md §6):
-#   1. tier-1: release build + full test suite (unit, integration, doctests)
+#   1. tier-1: release build, flexlint static-analysis gate (DESIGN.md §13),
+#      then the full test suite (unit, integration, doctests)
 #   2. smoke-mode hotpath bench: runs the threaded worker engine with
 #      threads=1 and threads=N and hard-fails (assert inside the bench) if
 #      the parallel grad+compress stage is not bitwise-identical to serial;
@@ -38,6 +39,19 @@ step() {
 }
 
 step cargo build --release
+# First-party static analysis (ISSUE 9, DESIGN.md §13): flexlint scans
+# rust/src/** for determinism/billing/registry contract violations and
+# exits nonzero on any unsuppressed finding. Runs BEFORE the test stages
+# so a contract break is the first thing a red run shows. Same
+# stale-record policy as the bench gates: a report left over from an
+# earlier run must not mask a binary that silently stopped writing one.
+rm -f LINT_REPORT.json
+step cargo run --release --bin flexlint
+if [ ! -f LINT_REPORT.json ]; then
+    echo "verify: FATAL: LINT_REPORT.json not written by flexlint" >&2
+    status=1
+fi
+step cargo run --release --bin flexlint -- --self-test
 step cargo test -q
 # Thread-matrix determinism (DESIGN.md §7): the persistent parked-worker
 # pool must be bitwise invisible at every pool width. Run the determinism
