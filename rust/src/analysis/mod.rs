@@ -233,6 +233,42 @@ fn hand_off(bufs: &mut Vec<Vec<f32>>) -> Vec<f32> {
         check: rules::take_without_putback,
     },
     RuleEntry {
+        name: "hot-loop-outside-kernels",
+        summary: "scalar .map(..).sum() reduction or manual index-zeroing store in an \
+                  audited hot file (compress/, tensor/, artopk.rs) bypassing \
+                  tensor::kernels — the chunked kernel layer is the hot-path contract",
+        fires_on: r#"
+fn gain_denominator(g: &[f32]) -> f64 {
+    g.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+fn zero_sent(g_e: &mut [f32], idx: &[u32]) {
+    for &i in idx {
+        g_e[i as usize] = 0.0;
+    }
+}
+"#,
+        clean_on: r#"
+fn gain_denominator(g: &[f32]) -> f64 {
+    crate::tensor::kernels::sq_norm_lanes(g)
+}
+fn zero_sent(g_e: &mut [f32], idx: &[u32]) {
+    crate::tensor::kernels::scatter_zero(g_e, idx);
+}
+fn labels(names: &[&str]) -> Vec<String> {
+    names.iter().map(|n| n.to_uppercase()).collect()
+}
+"#,
+        suppressed_on: Some(
+            r#"
+fn reference_sq_norm(g: &[f32]) -> f64 {
+    // flexlint::allow(hot-loop-outside-kernels): verbatim scalar reference for the bitwise pin test
+    g.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+"#,
+        ),
+        check: rules::hot_loop_outside_kernels,
+    },
+    RuleEntry {
         name: "malformed-allow",
         summary: "flexlint::allow with no (rule), an unknown rule name, or no `: reason` — \
                   suppressions are audited and cannot rot (this rule is unsuppressable)",

@@ -775,6 +775,98 @@ fn restored(rest: &str, place: &str) -> bool {
 }
 
 // ---------------------------------------------------------------------------
+// Rule: hot-loop-outside-kernels
+// ---------------------------------------------------------------------------
+
+/// Files on the compression hot path, where every inner loop must route
+/// through `tensor::kernels` (DESIGN.md §7 "Kernel layer"). Directory
+/// entries (trailing `/`) match by prefix, the rest exactly. `fixture.rs`
+/// is in the set so the rule's own fixtures exercise it; the kernel home
+/// itself is exempt — its chunked bodies and in-test verbatim scalar
+/// references are the sanctioned implementations.
+const KERNEL_AUDITED: &[&str] = &["compress/", "tensor/", "artopk.rs", "fixture.rs"];
+const KERNEL_EXEMPT: &[&str] = &["tensor/kernels.rs"];
+
+fn kernel_audited(rel: &str) -> bool {
+    if KERNEL_EXEMPT.contains(&rel) {
+        return false;
+    }
+    KERNEL_AUDITED.iter().any(|p| {
+        if let Some(dir) = p.strip_suffix('/') {
+            rel.starts_with(dir) && rel.as_bytes().get(dir.len()) == Some(&b'/')
+        } else {
+            rel == *p
+        }
+    })
+}
+
+/// Scalar hot loops in the audited hot files (`compress/`, `tensor/`,
+/// `artopk.rs`) that bypass `tensor::kernels`:
+///
+/// * `.map(...).sum()` / `.sum::<..>()` — a sequential iterator reduction
+///   where the lane-split kernels (`sq_norm_lanes`, `dot_lanes`,
+///   `sq_norm_gather_lanes`) are the crate policy;
+/// * `x[i as usize] = 0.0` — a manual index-zeroing store, the
+///   `kernels::scatter_zero` pattern written by hand.
+///
+/// Verbatim scalar references inside kernel pin tests carry audited
+/// allows — the reason is mandatory, so every bypass is on the record.
+pub fn hot_loop_outside_kernels(ws: &Workspace) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in &ws.files {
+        if !kernel_audited(&f.rel) {
+            continue;
+        }
+        let code = &f.code;
+        let bytes = code.as_bytes();
+
+        // Pattern (a): `.map( ... ).sum()` — chained sequential reduction.
+        let mut from = 0;
+        while let Some(p) = code[from..].find(".map") {
+            let at = from + p;
+            from = at + 1;
+            let mut j = at + ".map".len();
+            if j < bytes.len() && is_ident(bytes[j]) {
+                continue; // `.map_while` etc.
+            }
+            j = skip_ws(bytes, j);
+            if j >= bytes.len() || bytes[j] != b'(' {
+                continue;
+            }
+            let after_args = skip_balanced(bytes, j);
+            let k = skip_ws(bytes, after_args);
+            let rest = &code[k..];
+            if rest.starts_with(".sum()") || rest.starts_with(".sum::<") {
+                out.push(finding(
+                    f,
+                    "hot-loop-outside-kernels",
+                    f.line_of(at),
+                    "sequential .map(..).sum() reduction on the hot path — route \
+                     through tensor::kernels (sq_norm_lanes / dot_lanes / \
+                     sq_norm_gather_lanes), the crate's lane-split reduction policy"
+                        .to_string(),
+                ));
+            }
+        }
+
+        // Pattern (b): manual `x[i as usize] = 0.0` zeroing store.
+        for (ln, line) in code.lines().enumerate() {
+            if squash(line).contains("asusize]=0.0") {
+                out.push(finding(
+                    f,
+                    "hot-loop-outside-kernels",
+                    ln + 1,
+                    "manual index-zeroing store on the hot path — use \
+                     kernels::scatter_zero (the sorted-index residual-zero kernel)"
+                        .to_string(),
+                ));
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
 // Rule: malformed-allow
 // ---------------------------------------------------------------------------
 

@@ -17,10 +17,10 @@
 
 // flexlint::allow-file(unsanctioned-clock): the whole module is the billed compression hot path — t_comp is measured here inside pool tasks by design (DESIGN.md §7)
 use crate::collectives::{broadcast, ring_allreduce, tree_allreduce, CommReport};
-use crate::compress::topk::{select_into, SelectBackend, SelectScratch};
+use crate::compress::topk::{select_mags_into, SelectBackend, SelectScratch};
 use crate::compress::{k_for, EfState, SparseGrad};
 use crate::netsim::cost_model::LinkParams;
-use crate::tensor::nan_min_cmp;
+use crate::tensor::{kernels, nan_min_cmp};
 use crate::util::pool::ThreadPool;
 
 /// Worker-selection policy (§3-B).
@@ -80,12 +80,18 @@ struct WorkerLane {
     /// Staged error-fed gradient; swapped with the residual at the update
     /// phase, so the outgoing residual Vec becomes next step's staging.
     g_e: Vec<f32>,
+    /// `|g_e|` magnitudes, filled in the SAME fused error-feed pass
+    /// (`kernels::error_feed_abs_into`) so selection never re-scans for
+    /// `abs`. For STAR only the selected lane's buffer is read — the
+    /// non-selected lanes' magnitudes are the (cheap, fused) price of
+    /// keeping the error-feed phase uniform across lanes.
+    mag: Vec<f32>,
     /// This worker's own values at the broadcast indices (allreduce input).
     vals: Vec<f32>,
     /// Local top-k indices (fresh for VAR on all lanes; for STAR only on
     /// the selected lane — stale elsewhere and never read).
     idx: Vec<u32>,
-    /// Selection scratch for [`select_into`].
+    /// Selection scratch for [`select_mags_into`].
     scratch: SelectScratch,
 }
 
@@ -180,7 +186,9 @@ impl ArTopk {
         let ef_ro: &[EfState] = ef;
         let ef_dts = pool.map_mut(&mut self.lanes[..n], |r, lane| {
             let t0 = std::time::Instant::now();
-            ef_ro[r].error_fed_into(&grads[r], &mut lane.g_e);
+            // Fused Eqn-2a: g_e AND |g_e| in one pass, so the selection
+            // phase below runs over precomputed magnitudes.
+            ef_ro[r].error_fed_abs_into(&grads[r], &mut lane.g_e, &mut lane.mag);
             t0.elapsed().as_secs_f64()
         });
         let mut comp_wall_s = ef_dts.iter().copied().fold(0.0f64, f64::max);
@@ -195,19 +203,20 @@ impl ArTopk {
         let selected = match self.policy {
             SelectionPolicy::Star => {
                 let selected = (step % n as u64) as usize;
-                let WorkerLane { g_e, idx, scratch, .. } = &mut self.lanes[selected];
+                let WorkerLane { mag, idx, scratch, .. } = &mut self.lanes[selected];
                 let t0 = std::time::Instant::now();
-                select_into(backend, g_e, k, scratch, idx);
+                select_mags_into(backend, mag, k, scratch, idx);
                 comp_wall_s += t0.elapsed().as_secs_f64();
                 selected
             }
             SelectionPolicy::Var => {
                 let per_worker: Vec<(f64, f64)> = pool.map_mut(&mut self.lanes[..n], |_r, lane| {
-                    let WorkerLane { g_e, idx, scratch, .. } = lane;
+                    let WorkerLane { g_e, mag, idx, scratch, .. } = lane;
                     let t0 = std::time::Instant::now();
-                    select_into(backend, g_e, k, scratch, idx);
-                    let var: f64 =
-                        idx.iter().map(|&i| (g_e[i as usize] as f64).powi(2)).sum();
+                    select_mags_into(backend, mag, k, scratch, idx);
+                    // ||g_c||² under the crate lane-split reduction policy
+                    // (kernels, DESIGN.md §7).
+                    let var = kernels::sq_norm_gather_lanes(g_e, idx);
                     (var, t0.elapsed().as_secs_f64())
                 });
                 comp_wall_s += per_worker.iter().map(|p| p.1).fold(0.0f64, f64::max);
@@ -348,6 +357,7 @@ mod tests {
         let k = k_for(0.2, 50);
         assert_eq!(r.update.k(), k);
         for (&i, &v) in r.update.indices.iter().zip(&r.update.values) {
+            // flexlint::allow(hot-loop-outside-kernels): test-only n-worker reference sum (strided across workers, not a hot-path reduction)
             let want: f32 = grads.iter().map(|g| g[i as usize]).sum();
             assert!((v - want).abs() < 1e-4, "idx {i}: {v} vs {want}");
         }

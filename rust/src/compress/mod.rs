@@ -20,7 +20,7 @@ pub use randomk::RandomK;
 pub use sampledk::SampledK;
 pub use topk::{select_into, topk_indices, SelectBackend, SelectScratch, TopK};
 
-use crate::tensor::Layout;
+use crate::tensor::{kernels, Layout};
 use anyhow::{bail, Result};
 
 /// A compressed gradient: `k` (index, value) pairs over a dense vector.
@@ -49,15 +49,14 @@ impl SparseGrad {
     /// Scatter into a fresh dense vector.
     pub fn to_dense(&self) -> Vec<f32> {
         let mut out = vec![0.0; self.dense_len];
-        for (&i, &v) in self.indices.iter().zip(&self.values) {
-            out[i as usize] += v;
-        }
+        kernels::scatter_add(&mut out, &self.indices, &self.values);
         out
     }
 
-    /// Sum of squared values (the gain numerator ||g_c||^2).
+    /// Sum of squared values (the gain numerator ||g_c||^2), under the
+    /// crate's lane-split reduction policy.
     pub fn sq_norm(&self) -> f64 {
-        self.values.iter().map(|&v| (v as f64) * (v as f64)).sum()
+        kernels::sq_norm_lanes(&self.values)
     }
 }
 
@@ -129,7 +128,9 @@ impl EfState {
         EfState { residual: vec![0.0; dim] }
     }
 
-    /// `g_e = g + residual` (Eqn 2a).
+    /// `g_e = g + residual` (Eqn 2a). Delegates through the `add_into`
+    /// kernel, which pre-reserves `g.len()` — the convenience path no
+    /// longer grows a zero-capacity Vec through `extend`.
     pub fn error_fed(&self, g: &[f32]) -> Vec<f32> {
         let mut out = Vec::new();
         self.error_fed_into(g, &mut out);
@@ -142,8 +143,16 @@ impl EfState {
     /// allocation-free in steady state.
     pub fn error_fed_into(&self, g: &[f32], out: &mut Vec<f32>) {
         debug_assert_eq!(g.len(), self.residual.len());
-        out.clear();
-        out.extend(g.iter().zip(&self.residual).map(|(a, b)| a + b));
+        kernels::add_into(g, &self.residual, out);
+    }
+
+    /// Fused Eqn-2a: one pass filling both `g_e = g + residual` and its
+    /// magnitude buffer `mag[i] = |g_e[i]|`, so top-k selection can run
+    /// over precomputed magnitudes without a second sweep (see
+    /// `kernels::error_feed_abs_into` and `topk::select_mags_into`).
+    pub fn error_fed_abs_into(&self, g: &[f32], g_e: &mut Vec<f32>, mag: &mut Vec<f32>) {
+        debug_assert_eq!(g.len(), self.residual.len());
+        kernels::error_feed_abs_into(g, &self.residual, g_e, mag);
     }
 
     /// Update residual after compressing `g_e` into `sparse`
@@ -159,9 +168,7 @@ impl EfState {
     /// allocations.
     pub fn update_swap(&mut self, g_e: &mut Vec<f32>, sparse: &SparseGrad) {
         debug_assert_eq!(g_e.len(), self.residual.len());
-        for &i in &sparse.indices {
-            g_e[i as usize] = 0.0;
-        }
+        kernels::scatter_zero(g_e, &sparse.indices);
         std::mem::swap(&mut self.residual, g_e);
     }
 
@@ -176,9 +183,7 @@ impl EfState {
     /// [`EfState::update_swap`]).
     pub fn update_at_indices_swap(&mut self, g_e: &mut Vec<f32>, indices: &[u32]) {
         debug_assert_eq!(g_e.len(), self.residual.len());
-        for &i in indices {
-            g_e[i as usize] = 0.0;
-        }
+        kernels::scatter_zero(g_e, indices);
         std::mem::swap(&mut self.residual, g_e);
     }
 
@@ -187,8 +192,13 @@ impl EfState {
     }
 }
 
-/// Exact top-k count for a compression ratio: `ceil(cr * len)`, min 1.
+/// Exact top-k count for a compression ratio: `ceil(cr * len)`, min 1 —
+/// except an EMPTY gradient, where the only valid k is 0 (`clamp(1, 0)`
+/// would panic with `min > max`).
 pub fn k_for(cr: f64, len: usize) -> usize {
+    if len == 0 {
+        return 0;
+    }
     ((cr * len as f64).ceil() as usize).clamp(1, len)
 }
 
@@ -225,6 +235,40 @@ mod tests {
         assert_eq!(k_for(1.0, 7), 7);
         assert_eq!(k_for(0.0, 7), 1); // never zero
         assert_eq!(k_for(0.015, 1000), 15);
+        // Regression: len == 0 used to hit clamp(1, 0) and panic.
+        assert_eq!(k_for(0.1, 0), 0);
+        assert_eq!(k_for(1.0, 0), 0);
+    }
+
+    #[test]
+    fn empty_gradient_compresses_to_empty() {
+        // k_for(_, 0) == 0 must carry through every compressor without a
+        // panic and produce the empty SparseGrad.
+        let layout = Layout::single(0);
+        let g: Vec<f32> = vec![];
+        for kind in [
+            CompressorKind::TopK,
+            CompressorKind::MsTopk,
+            CompressorKind::RandomK,
+            CompressorKind::SampledK,
+        ] {
+            let mut c = kind.build(7);
+            let s = c.compress(&g, 0.1, &layout);
+            assert_eq!(s.k(), 0, "{}", c.name());
+            assert_eq!(s.dense_len, 0, "{}", c.name());
+        }
+    }
+
+    #[test]
+    fn error_fed_abs_matches_separate_passes() {
+        let mut ef = EfState::new(4);
+        ef.residual = vec![0.5, 0.0, -3.5, 0.0];
+        let g = vec![1.0, -2.0, 3.0, 4.0];
+        let (mut g_e, mut mag) = (Vec::new(), Vec::new());
+        ef.error_fed_abs_into(&g, &mut g_e, &mut mag);
+        assert_eq!(g_e, ef.error_fed(&g));
+        let want: Vec<f32> = g_e.iter().map(|v| v.abs()).collect();
+        assert_eq!(mag, want);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! implementation to the kernels through the exported `ef_topk` artifact.
 
 use crate::compress::{k_for, Compressor, SparseGrad};
-use crate::tensor::Layout;
+use crate::tensor::{kernels, Layout};
 
 /// Threshold-estimation Top-k.
 #[derive(Debug, Clone)]
@@ -28,14 +28,17 @@ impl MsTopk {
     /// the final bracket (errs toward keeping slightly more than k, like
     /// the Pallas kernel).
     pub fn estimate_threshold(&self, g: &[f32], k: usize) -> f32 {
-        let mut hi = g.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        // Chunked kernels, bitwise-equal to the old sequential fold/count
+        // (max over magnitudes is order-insensitive; the count is integer)
+        // — the pjrt_roundtrip.rs artifact pin is untouched.
+        let mut hi = kernels::abs_max(g);
         let mut lo = 0.0f32;
         if hi == 0.0 {
             return 0.0;
         }
         for _ in 0..self.rounds {
             let mid = 0.5 * (lo + hi);
-            let count = g.iter().filter(|&&v| v.abs() > mid).count();
+            let count = kernels::threshold_count(g, mid);
             if count > k {
                 lo = mid;
             } else {
@@ -132,10 +135,10 @@ mod tests {
                 (s.k() as f64 - k as f64).abs() <= (0.06 * k as f64).max(2.0),
                 format!("k deviates: got {} want {k}", s.k()),
             )?;
-            let exact: f64 = topk_indices(&g, k)
-                .iter()
-                .map(|&i| (g[i as usize] as f64).powi(2))
-                .sum();
+            // Reduction rewired through the crate lane-split policy (was
+            // a sequential .map().sum(); the 0.9-factor bound is far
+            // above the low-bit policy drift).
+            let exact = kernels::sq_norm_gather_lanes(&g, &topk_indices(&g, k));
             ensure(
                 s.sq_norm() >= 0.9 * exact,
                 format!("energy {} < 0.9 * exact {exact}", s.sq_norm()),

@@ -34,9 +34,57 @@
 
 use crate::compress::topk::{mag_desc_idx_asc, topk_indices_select, SelectScratch};
 use crate::compress::{k_for, Compressor, SparseGrad};
-use crate::tensor::Layout;
+use crate::tensor::{kernels, Layout};
 use crate::util::rng::Rng;
-use std::cmp::Ordering;
+
+/// Draw the deterministic sample and pick the conservative threshold pair
+/// for a gradient of `len` entries at rank `k`; `mag_at(i)` supplies
+/// `|g[i]|` (the g-path computes it, the mags-path reads it). Callers
+/// guarantee `0 < k < len`.
+///
+/// The sample is seeded purely from the problem shape. With replacement:
+/// duplicates only blur the threshold estimate, never correctness (see
+/// the repair contract above), and avoid the O(s^2) cost of distinct
+/// sampling at this size.
+fn sample_threshold(
+    len: usize,
+    k: usize,
+    sample: &mut Vec<(f32, u32)>,
+    mut mag_at: impl FnMut(usize) -> f32,
+) -> (f32, u32) {
+    let s = len.min(64 + len / 8);
+    let mut rng = Rng::new(
+        0x5A4D_714B_u64
+            ^ (len as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (k as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
+    );
+    sample.clear();
+    sample.extend((0..s).map(|_| {
+        let i = rng.below(len);
+        (mag_at(i), i as u32)
+    }));
+
+    // Conservative sample rank: scale k to the sample plus slack, so the
+    // induced prefix usually holds >= k survivors without ballooning.
+    let q = (2 * ((k * s + len - 1) / len) + 8).min(s);
+    sample.select_nth_unstable_by(q - 1, mag_desc_idx_asc);
+    sample[q - 1]
+}
+
+/// Exact-k repair over the filtered prefix: `false` means the sample
+/// misjudged (prefix held `< k` survivors — possible, not wrong) and the
+/// caller must run its exact fallback.
+fn repair_prefix(cand: &mut Vec<(f32, u32)>, k: usize, out: &mut Vec<u32>) -> bool {
+    if cand.len() < k {
+        return false;
+    }
+    if cand.len() > k {
+        cand.select_nth_unstable_by(k - 1, mag_desc_idx_asc);
+    }
+    out.extend(cand[..k].iter().map(|&(_, i)| i));
+    out.sort_unstable();
+    true
+}
 
 /// Sampled-threshold top-`k` of `g` into `out` (ascending indices),
 /// bitwise-identical to exact selection. `scratch` is only an arena.
@@ -52,49 +100,46 @@ pub fn sampled_topk_into(g: &[f32], k: usize, scratch: &mut SelectScratch, out: 
         return;
     }
 
-    // Deterministic sample, seeded purely from the problem shape. With
-    // replacement: duplicates only blur the threshold estimate, never
-    // correctness (see the repair contract above), and avoid the O(s^2)
-    // cost of distinct sampling at this size.
-    let s = len.min(64 + len / 8);
-    let mut rng = Rng::new(
-        0x5A4D_714B_u64
-            ^ (len as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            ^ (k as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9),
-    );
-    let sample = &mut scratch.sample;
-    sample.clear();
-    sample.extend((0..s).map(|_| {
-        let i = rng.below(len);
-        (g[i].abs(), i as u32)
-    }));
+    let threshold = sample_threshold(len, k, &mut scratch.sample, |i| g[i].abs());
 
-    // Conservative sample rank: scale k to the sample plus slack, so the
-    // induced prefix usually holds >= k survivors without ballooning.
-    let q = (2 * ((k * s + len - 1) / len) + 8).min(s);
-    sample.select_nth_unstable_by(q - 1, mag_desc_idx_asc);
-    let threshold = sample[q - 1];
+    // One branch-free filtering pass: keep the exact prefix "ranks
+    // at-or-before t" (kernels::threshold_filter_into — bitwise-equal to
+    // the comparator push-loop it replaced).
+    kernels::threshold_filter_into(g, threshold, &mut scratch.pairs);
 
-    // One filtering pass: keep the exact prefix "ranks at-or-before t".
-    let cand = &mut scratch.pairs;
-    cand.clear();
-    for (i, &v) in g.iter().enumerate() {
-        let p = (v.abs(), i as u32);
-        if mag_desc_idx_asc(&p, &threshold) != Ordering::Greater {
-            cand.push(p);
-        }
-    }
-
-    if cand.len() < k {
-        // Sample misjudged (possible, not wrong): exact fallback.
+    if !repair_prefix(&mut scratch.pairs, k, out) {
         out.extend(topk_indices_select(g, k));
+    }
+}
+
+/// [`sampled_topk_into`] over a PRECOMPUTED magnitude buffer (`mags[i]`
+/// must equal `|g[i]|`): identical selection — the sample, threshold,
+/// filter and repair all see the same (magnitude, index) pairs.
+pub fn sampled_topk_mags_into(
+    mags: &[f32],
+    k: usize,
+    scratch: &mut SelectScratch,
+    out: &mut Vec<u32>,
+) {
+    let len = mags.len();
+    let k = k.min(len);
+    out.clear();
+    if k == 0 {
         return;
     }
-    if cand.len() > k {
-        cand.select_nth_unstable_by(k - 1, mag_desc_idx_asc);
+    if k == len {
+        out.extend(0..len as u32);
+        return;
     }
-    out.extend(cand[..k].iter().map(|&(_, i)| i));
-    out.sort_unstable();
+
+    let threshold = sample_threshold(len, k, &mut scratch.sample, |i| mags[i]);
+    kernels::threshold_filter_mags_into(mags, threshold, &mut scratch.pairs);
+
+    if !repair_prefix(&mut scratch.pairs, k, out) {
+        // `abs` is idempotent on magnitudes (non-negative or NaN), so the
+        // g-path fallback selects identically over `mags`.
+        out.extend(topk_indices_select(mags, k));
+    }
 }
 
 /// Fused-tensor Top-k compressor over the sampled-threshold backend.

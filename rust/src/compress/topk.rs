@@ -8,7 +8,7 @@
 //! [`TopK::with_quickselect`].
 
 use crate::compress::{k_for, Compressor, SparseGrad};
-use crate::tensor::Layout;
+use crate::tensor::{kernels, Layout};
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
@@ -70,24 +70,27 @@ pub fn topk_indices(g: &[f32], k: usize) -> Vec<u32> {
     out
 }
 
+/// [`topk_indices`] over a PRECOMPUTED magnitude buffer (the fused
+/// error-feed, `kernels::error_feed_abs_into`, already paid the `abs`
+/// pass). Selection is identical: `mags[i]` must equal `|g[i]|`.
+pub fn topk_indices_mags(mags: &[f32], k: usize) -> Vec<u32> {
+    let k = k.min(mags.len());
+    let mut heap: BinaryHeap<Entry> =
+        mags.iter().enumerate().map(|(i, &m)| Entry(m, i as u32)).collect();
+    let mut out = Vec::with_capacity(k);
+    for _ in 0..k {
+        out.push(heap.pop().expect("k <= len").1);
+    }
+    out.sort_unstable();
+    out
+}
+
 /// Quickselect top-k: O(G) expected. Same selection as [`topk_indices`]
 /// (ties broken by lower index).
 pub fn topk_indices_select(g: &[f32], k: usize) -> Vec<u32> {
-    let k = k.min(g.len());
-    if k == 0 {
-        return Vec::new();
-    }
-    if k == g.len() {
-        return (0..g.len() as u32).collect();
-    }
-    let mut pairs: Vec<(f32, u32)> =
-        g.iter().enumerate().map(|(i, &v)| (v.abs(), i as u32)).collect();
-    // Order DESC by magnitude (NaN smallest), ties ASC by index; take the
-    // first k. The comparator is a total order, which
-    // `select_nth_unstable_by` requires even on NaN-poisoned gradients.
-    pairs.select_nth_unstable_by(k - 1, mag_desc_idx_asc);
-    let mut out: Vec<u32> = pairs[..k].iter().map(|&(_, i)| i).collect();
-    out.sort_unstable();
+    let mut scratch = SelectScratch::default();
+    let mut out = Vec::new();
+    quickselect_into(g, k, &mut scratch, &mut out);
     out
 }
 
@@ -142,6 +145,40 @@ pub fn select_into(
     }
 }
 
+/// [`select_into`] over a PRECOMPUTED magnitude buffer (`mags[i]` must
+/// equal `|g[i]|`): same backends, same selection, no `abs` pass.
+pub fn select_mags_into(
+    backend: SelectBackend,
+    mags: &[f32],
+    k: usize,
+    scratch: &mut SelectScratch,
+    out: &mut Vec<u32>,
+) {
+    match backend {
+        SelectBackend::Heap => {
+            out.clear();
+            out.extend(topk_indices_mags(mags, k));
+        }
+        SelectBackend::Quickselect => {
+            quickselect_mags_into(mags, k, scratch, out);
+        }
+        SelectBackend::Sampled => {
+            crate::compress::sampledk::sampled_topk_mags_into(mags, k, scratch, out);
+        }
+    }
+}
+
+/// Shared quickselect core over prepared (magnitude, index) pairs.
+/// Order DESC by magnitude (NaN smallest), ties ASC by index; take the
+/// first k. The comparator is a total order, which
+/// `select_nth_unstable_by` requires even on NaN-poisoned gradients.
+/// Callers guarantee `0 < k < pairs.len()`.
+fn quickselect_pairs(pairs: &mut [(f32, u32)], k: usize, out: &mut Vec<u32>) {
+    pairs.select_nth_unstable_by(k - 1, mag_desc_idx_asc);
+    out.extend(pairs[..k].iter().map(|&(_, i)| i));
+    out.sort_unstable();
+}
+
 /// Arena-reusing [`topk_indices_select`]: identical output, allocations
 /// amortised into `scratch`/`out`.
 fn quickselect_into(g: &[f32], k: usize, scratch: &mut SelectScratch, out: &mut Vec<u32>) {
@@ -154,12 +191,23 @@ fn quickselect_into(g: &[f32], k: usize, scratch: &mut SelectScratch, out: &mut 
         out.extend(0..g.len() as u32);
         return;
     }
-    let pairs = &mut scratch.pairs;
-    pairs.clear();
-    pairs.extend(g.iter().enumerate().map(|(i, &v)| (v.abs(), i as u32)));
-    pairs.select_nth_unstable_by(k - 1, mag_desc_idx_asc);
-    out.extend(pairs[..k].iter().map(|&(_, i)| i));
-    out.sort_unstable();
+    kernels::abs_pairs_into(g, &mut scratch.pairs);
+    quickselect_pairs(&mut scratch.pairs, k, out);
+}
+
+/// [`quickselect_into`] over precomputed magnitudes.
+fn quickselect_mags_into(mags: &[f32], k: usize, scratch: &mut SelectScratch, out: &mut Vec<u32>) {
+    let k = k.min(mags.len());
+    out.clear();
+    if k == 0 {
+        return;
+    }
+    if k == mags.len() {
+        out.extend(0..mags.len() as u32);
+        return;
+    }
+    kernels::pairs_into(mags, &mut scratch.pairs);
+    quickselect_pairs(&mut scratch.pairs, k, out);
 }
 
 /// Fused-tensor exact Top-k compressor over a pluggable [`SelectBackend`].
@@ -321,6 +369,32 @@ mod tests {
                 topk_indices(&v, k) == topk_indices_select(&v, k),
                 format!("mismatch n={n} k={k}"),
             )
+        });
+    }
+
+    /// The precomputed-magnitude path must make the SAME selection as the
+    /// g-path for every backend — NaN/ties included — since AR-Topk's
+    /// fused error-feed hands `select_mags_into` the `|g_e|` buffer.
+    #[test]
+    fn mags_path_selects_identically_for_all_backends() {
+        check("select_mags == select", 100, |g| {
+            let n = g.usize_in(1, 400);
+            let mut v = g.vec_normal(n, 1.0);
+            for _ in 0..g.usize_in(0, n / 5 + 1) {
+                v[g.usize_in(0, n - 1)] = f32::NAN;
+            }
+            let mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+            let k = g.usize_in(0, n);
+            for backend in
+                [SelectBackend::Heap, SelectBackend::Quickselect, SelectBackend::Sampled]
+            {
+                let mut scratch = SelectScratch::default();
+                let (mut a, mut b) = (Vec::new(), Vec::new());
+                select_into(backend, &v, k, &mut scratch, &mut a);
+                select_mags_into(backend, &mags, k, &mut scratch, &mut b);
+                ensure(a == b, format!("{backend:?} n={n} k={k}"))?;
+            }
+            Ok(())
         });
     }
 

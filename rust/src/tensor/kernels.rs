@@ -1,0 +1,779 @@
+//! Chunked, branch-free kernels for the compression hot path — the single
+//! audited home for every inner loop the AG and AR Eqn-2 cycles run
+//! (DESIGN.md §7 "Kernel layer").
+//!
+//! Every kernel walks its input in fixed chunks of [`LANES`] = 8 elements
+//! (`chunks_exact` + a scalar tail), with straight-line bodies the
+//! autovectorizer can turn into SIMD and FMA without a gather or a
+//! data-dependent branch. The `hot-loop-outside-kernels` flexlint rule
+//! keeps new hot-path code from bypassing this module.
+//!
+//! ## The bitwise contract
+//!
+//! Kernels fall into exactly two classes, and each is pinned by property
+//! tests against a **verbatim scalar reference** (tails `0..=17`, ties,
+//! NaN and ±inf poisoning, empty input):
+//!
+//! * **Elementwise kernels** (`add_into`, `error_feed_abs_into`, `axpy`,
+//!   `scale`, `abs_pairs_into`, `pairs_into`, `scatter_zero`,
+//!   `scatter_add`, `abs_max`, `threshold_count`,
+//!   `threshold_filter_into`) are **bitwise identical** to the scalar
+//!   loops they replaced: each output element depends on exactly one
+//!   input element (or, for `abs_max`, on an order-insensitive max), so
+//!   chunking cannot move a single bit.
+//! * **Lane-split reductions** (`sq_norm_lanes`, `dot_lanes`,
+//!   `sq_norm_gather_lanes`) are THE crate reduction policy: element `i`
+//!   accumulates into f64 lane `i % LANES`, and the 8 lane sums combine
+//!   in one fixed pairwise order ([`combine_lanes`]). The result is a
+//!   pure function of the input — invariant to thread count, chunking
+//!   and call site by construction — but it is NOT the old sequential
+//!   left-fold sum: rewiring `tensor::{sq_norm, dot}` through these
+//!   kernels changed the low bits of gain terms and VAR variances
+//!   crate-wide (every consumer moved together; run-vs-run determinism
+//!   is untouched).
+//!
+//! ## Adding a kernel
+//!
+//! Write the chunked body here, keep the scalar reference **verbatim** in
+//! this file's tests (that reference is the contract, not dead code), pin
+//! it bitwise across tail lengths `0..=17` and NaN/±inf inputs, add a
+//! scalar-vs-chunked pair to the `kernels` stage of
+//! `rust/benches/hotpath.rs`, and rewire the call sites — the lint rule
+//! will flag any that remain scalar.
+
+/// Fixed chunk width (elements per vectorized step) shared by every
+/// kernel. 8 f32 lanes = one AVX2 register; on narrower ISAs the compiler
+/// splits the chunk, on wider ones it fuses two — the *numeric* result
+/// never depends on what the hardware does because the lane policy is
+/// defined in terms of this constant, not the target.
+pub const LANES: usize = 8;
+
+// ---------------------------------------------------------------------------
+// Elementwise kernels (bitwise-equal to their scalar loops).
+// ---------------------------------------------------------------------------
+
+/// `out = a + b` elementwise — the fused error-feed `g + residual`
+/// (Eqn 2a). `out` is cleared and fully overwritten; capacity is reserved
+/// up front so the convenience path never pays realloc churn.
+pub fn add_into(a: &[f32], b: &[f32], out: &mut Vec<f32>) {
+    assert_eq!(a.len(), b.len(), "add_into: length mismatch");
+    out.clear();
+    out.reserve(a.len());
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        let mut buf = [0.0f32; LANES];
+        for j in 0..LANES {
+            buf[j] = xa[j] + xb[j];
+        }
+        out.extend_from_slice(&buf);
+    }
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        out.push(x + y);
+    }
+}
+
+/// One pass producing BOTH `g_e = g + residual` and its magnitude buffer
+/// `mag[i] = |g_e[i]|` — fusing the error-feed pass and the `|v|`
+/// pair-building pass every top-k variant used to run separately. `mag`
+/// feeds [`crate::compress::topk::select_mags_into`]; bitwise, `g_e`
+/// matches [`add_into`] and `mag[i]` matches `g_e[i].abs()` exactly.
+pub fn error_feed_abs_into(g: &[f32], residual: &[f32], g_e: &mut Vec<f32>, mag: &mut Vec<f32>) {
+    assert_eq!(g.len(), residual.len(), "error_feed_abs_into: length mismatch");
+    g_e.clear();
+    g_e.reserve(g.len());
+    mag.clear();
+    mag.reserve(g.len());
+    let mut cg = g.chunks_exact(LANES);
+    let mut cr = residual.chunks_exact(LANES);
+    for (xg, xr) in (&mut cg).zip(&mut cr) {
+        let mut sum = [0.0f32; LANES];
+        let mut abs = [0.0f32; LANES];
+        for j in 0..LANES {
+            let s = xg[j] + xr[j];
+            sum[j] = s;
+            abs[j] = s.abs();
+        }
+        g_e.extend_from_slice(&sum);
+        mag.extend_from_slice(&abs);
+    }
+    for (x, y) in cg.remainder().iter().zip(cr.remainder()) {
+        let s = x + y;
+        g_e.push(s);
+        mag.push(s.abs());
+    }
+}
+
+/// `y += a * x` (FMA-friendly: one mul-add per lane, no cross-lane dep).
+pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(y.len(), x.len(), "axpy: length mismatch");
+    let mut cy = y.chunks_exact_mut(LANES);
+    let mut cx = x.chunks_exact(LANES);
+    for (ya, xa) in (&mut cy).zip(&mut cx) {
+        for j in 0..LANES {
+            ya[j] += a * xa[j];
+        }
+    }
+    for (yi, xi) in cy.into_remainder().iter_mut().zip(cx.remainder()) {
+        *yi += a * xi;
+    }
+}
+
+/// `x *= a`.
+pub fn scale(x: &mut [f32], a: f32) {
+    let mut cx = x.chunks_exact_mut(LANES);
+    for ch in &mut cx {
+        for j in 0..LANES {
+            ch[j] *= a;
+        }
+    }
+    for xi in cx.into_remainder() {
+        *xi *= a;
+    }
+}
+
+/// Build the `(|g[i]|, i)` selection pairs — the magnitude pass of
+/// quickselect/sampled top-k. `out` is cleared and fully overwritten.
+pub fn abs_pairs_into(g: &[f32], out: &mut Vec<(f32, u32)>) {
+    out.clear();
+    out.reserve(g.len());
+    let mut c = g.chunks_exact(LANES);
+    let mut base = 0u32;
+    for ch in &mut c {
+        let mut buf = [(0.0f32, 0u32); LANES];
+        for j in 0..LANES {
+            buf[j] = (ch[j].abs(), base + j as u32);
+        }
+        out.extend_from_slice(&buf);
+        base += LANES as u32;
+    }
+    for (j, &v) in c.remainder().iter().enumerate() {
+        out.push((v.abs(), base + j as u32));
+    }
+}
+
+/// [`abs_pairs_into`] over a PRECOMPUTED magnitude buffer (no `abs` —
+/// the fused [`error_feed_abs_into`] already paid it).
+pub fn pairs_into(mags: &[f32], out: &mut Vec<(f32, u32)>) {
+    out.clear();
+    out.reserve(mags.len());
+    let mut c = mags.chunks_exact(LANES);
+    let mut base = 0u32;
+    for ch in &mut c {
+        let mut buf = [(0.0f32, 0u32); LANES];
+        for j in 0..LANES {
+            buf[j] = (ch[j], base + j as u32);
+        }
+        out.extend_from_slice(&buf);
+        base += LANES as u32;
+    }
+    for (j, &m) in c.remainder().iter().enumerate() {
+        out.push((m, base + j as u32));
+    }
+}
+
+/// Zero `x` at the given SORTED indices — the residual-update store
+/// stream of `update_swap`/`update_at_indices_swap` (Eqn 2b). Sorted
+/// ascending is the wire format every compressor and broadcast emits;
+/// the kernel's store loop is branch-free either way, but sortedness
+/// keeps the stores a forward stream the prefetcher can follow.
+pub fn scatter_zero(x: &mut [f32], indices: &[u32]) {
+    // flexlint::allow(release-silent-assert): sortedness is a prefetch hint, not a correctness invariant — zero-stores are order-insensitive and an out-of-range index still panics via slice indexing
+    debug_assert!(
+        indices.windows(2).all(|w| w[0] <= w[1]),
+        "scatter_zero expects sorted indices (the wire format)"
+    );
+    for &i in indices {
+        x[i as usize] = 0.0;
+    }
+}
+
+/// `out[indices[j]] += values[j]` — the `SparseGrad::to_dense` scatter.
+/// Duplicate indices accumulate (matching the scalar loop exactly).
+pub fn scatter_add(out: &mut [f32], indices: &[u32], values: &[f32]) {
+    assert_eq!(indices.len(), values.len(), "scatter_add: length mismatch");
+    for (&i, &v) in indices.iter().zip(values) {
+        out[i as usize] += v;
+    }
+}
+
+/// `max_i |x[i]|`, NaN-ignoring (a NaN entry never becomes the max, and
+/// an all-NaN or empty input returns 0.0) — the bisection upper bound of
+/// MSTopk. Bitwise-equal to `x.iter().fold(0.0, |m, &v| m.max(v.abs()))`:
+/// max over non-negative magnitudes is order-insensitive and
+/// `f32::max(acc, NaN) == acc`.
+pub fn abs_max(x: &[f32]) -> f32 {
+    let mut acc = [0.0f32; LANES];
+    let mut c = x.chunks_exact(LANES);
+    for ch in &mut c {
+        for j in 0..LANES {
+            acc[j] = acc[j].max(ch[j].abs());
+        }
+    }
+    for (j, &v) in c.remainder().iter().enumerate() {
+        acc[j] = acc[j].max(v.abs());
+    }
+    let mut m = acc[0];
+    for &a in &acc[1..] {
+        m = m.max(a);
+    }
+    m
+}
+
+/// Count of `|x[i]| > tau`, predicate-as-integer (no branch in the loop
+/// body) — MSTopk's per-round bisection count. NaN entries never pass
+/// (`NaN > tau` is false), matching the scalar `filter(..).count()`.
+pub fn threshold_count(x: &[f32], tau: f32) -> usize {
+    let mut acc = [0usize; LANES];
+    let mut c = x.chunks_exact(LANES);
+    for ch in &mut c {
+        for j in 0..LANES {
+            acc[j] += (ch[j].abs() > tau) as usize;
+        }
+    }
+    for (j, &v) in c.remainder().iter().enumerate() {
+        acc[j] += (v.abs() > tau) as usize;
+    }
+    let mut total = 0;
+    for &a in &acc {
+        total += a;
+    }
+    total
+}
+
+/// The `mag_desc_idx_asc` total order (descending magnitude, NaN
+/// smallest, ties by ascending index — see
+/// [`crate::compress::topk`]) collapsed into ONE u64 so that
+/// `a` ranks at-or-before `b` ⟺ `rank_key(a) >= rank_key(b)`:
+/// an integer compare is the whole predicate, which is what makes
+/// [`threshold_filter_into`] branch-free.
+///
+/// `mag` must be a magnitude: non-negative or NaN (i.e. produced by
+/// `abs()`). The IEEE-754 bit pattern of a non-negative f32 is monotone
+/// in its value, so `bits + 1` orders finite/inf magnitudes; NaN maps to
+/// 0 (below everything, any payload), and the bitwise-NOT of the index
+/// makes lower indices rank earlier within a magnitude tie.
+#[inline]
+pub fn rank_key(mag: f32, idx: u32) -> u64 {
+    debug_assert!(
+        mag.is_nan() || mag.is_sign_positive(),
+        "rank_key expects a magnitude (non-negative or NaN), got {mag}"
+    );
+    let m = if mag.is_nan() { 0u64 } else { mag.to_bits() as u64 + 1 };
+    (m << 32) | (!idx) as u64
+}
+
+/// The sampled-top-k filtering pass: keep every `(|g[i]|, i)` pair that
+/// ranks at-or-before `threshold` under the total order (the exact prefix
+/// the repair contract needs — see [`crate::compress::sampledk`]).
+/// Branch-free compaction: every pair is written to the write cursor,
+/// which advances by the integer predicate — no data-dependent branch for
+/// the predictor to miss on. Output order and contents are bitwise-equal
+/// to the scalar `push`-if loop.
+pub fn threshold_filter_into(g: &[f32], threshold: (f32, u32), out: &mut Vec<(f32, u32)>) {
+    let tk = rank_key(threshold.0, threshold.1);
+    let len = g.len();
+    // Grow-only: stale slots past the write cursor are never read (we
+    // truncate to exactly the slots written this call).
+    if out.len() < len {
+        out.resize(len, (0.0, 0));
+    }
+    let mut w = 0usize;
+    for (i, &v) in g.iter().enumerate() {
+        let p = (v.abs(), i as u32);
+        out[w] = p;
+        w += (rank_key(p.0, p.1) >= tk) as usize;
+    }
+    out.truncate(w);
+}
+
+/// [`threshold_filter_into`] over a PRECOMPUTED magnitude buffer.
+pub fn threshold_filter_mags_into(
+    mags: &[f32],
+    threshold: (f32, u32),
+    out: &mut Vec<(f32, u32)>,
+) {
+    let tk = rank_key(threshold.0, threshold.1);
+    let len = mags.len();
+    if out.len() < len {
+        out.resize(len, (0.0, 0));
+    }
+    let mut w = 0usize;
+    for (i, &m) in mags.iter().enumerate() {
+        out[w] = (m, i as u32);
+        w += (rank_key(m, i as u32) >= tk) as usize;
+    }
+    out.truncate(w);
+}
+
+// ---------------------------------------------------------------------------
+// Lane-split f64 reductions — THE crate reduction policy.
+// ---------------------------------------------------------------------------
+
+/// Combine the 8 lane accumulators in ONE fixed pairwise order. This
+/// order is part of the reduction policy: changing it changes results
+/// crate-wide and invalidates every recorded metric baseline.
+#[inline]
+fn combine_lanes(acc: [f64; LANES]) -> f64 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// `Σ x[i]²` in f64, lane-split: element `i` accumulates into lane
+/// `i % LANES`, lanes combine via [`combine_lanes`]. A pure function of
+/// the input — thread- and chunk-invariant by construction — and ~LANES×
+/// more instruction-level parallelism than the sequential fold (each
+/// scalar add had to wait for the previous one; the 8 lane chains run
+/// concurrently in the FPU).
+pub fn sq_norm_lanes(x: &[f32]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut c = x.chunks_exact(LANES);
+    for ch in &mut c {
+        for j in 0..LANES {
+            let v = ch[j] as f64;
+            acc[j] += v * v;
+        }
+    }
+    for (j, &v) in c.remainder().iter().enumerate() {
+        let v = v as f64;
+        acc[j] += v * v;
+    }
+    combine_lanes(acc)
+}
+
+/// `Σ a[i]·b[i]` in f64 under the same lane-split policy.
+pub fn dot_lanes(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len(), "dot_lanes: length mismatch");
+    let mut acc = [0.0f64; LANES];
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        for j in 0..LANES {
+            acc[j] += xa[j] as f64 * xb[j] as f64;
+        }
+    }
+    for (j, (&x, &y)) in ca.remainder().iter().zip(cb.remainder()).enumerate() {
+        acc[j] += x as f64 * y as f64;
+    }
+    combine_lanes(acc)
+}
+
+/// `Σ x[idx[j]]²` — the gathered sq-norm of AR-Topk's VAR variance pass,
+/// lane-split over the GATHER position `j` (not the gathered index), so
+/// the result is a pure function of `(x, idx)`.
+pub fn sq_norm_gather_lanes(x: &[f32], idx: &[u32]) -> f64 {
+    let mut acc = [0.0f64; LANES];
+    let mut c = idx.chunks_exact(LANES);
+    for ch in &mut c {
+        for j in 0..LANES {
+            let v = x[ch[j] as usize] as f64;
+            acc[j] += v * v;
+        }
+    }
+    for (j, &i) in c.remainder().iter().enumerate() {
+        let v = x[i as usize] as f64;
+        acc[j] += v * v;
+    }
+    combine_lanes(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, ensure, Gen};
+
+    // -----------------------------------------------------------------
+    // Verbatim scalar references. These are the contract: the elementwise
+    // references are the exact pre-kernel loops, and the lane references
+    // are the reduction policy written as a plain strided scalar loop.
+    // The lint rule is allowed here by design — a reference that itself
+    // routed through the kernels would pin nothing.
+    // -----------------------------------------------------------------
+
+    fn ref_add(a: &[f32], b: &[f32]) -> Vec<f32> {
+        a.iter().zip(b).map(|(x, y)| x + y).collect()
+    }
+
+    fn ref_axpy(y: &mut [f32], a: f32, x: &[f32]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += a * xi;
+        }
+    }
+
+    fn ref_scale(x: &mut [f32], a: f32) {
+        for xi in x.iter_mut() {
+            *xi *= a;
+        }
+    }
+
+    fn ref_abs_pairs(g: &[f32]) -> Vec<(f32, u32)> {
+        g.iter().enumerate().map(|(i, &v)| (v.abs(), i as u32)).collect()
+    }
+
+    fn ref_abs_max(x: &[f32]) -> f32 {
+        x.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    fn ref_threshold_count(x: &[f32], tau: f32) -> usize {
+        x.iter().filter(|&&v| v.abs() > tau).count()
+    }
+
+    /// The filtering pass exactly as `sampled_topk_into` wrote it before
+    /// the kernel: comparator-based, one push per survivor.
+    fn ref_threshold_filter(g: &[f32], t: (f32, u32)) -> Vec<(f32, u32)> {
+        use crate::compress::topk::mag_desc_idx_asc;
+        let mut out = Vec::new();
+        for (i, &v) in g.iter().enumerate() {
+            let p = (v.abs(), i as u32);
+            if mag_desc_idx_asc(&p, &t) != std::cmp::Ordering::Greater {
+                out.push(p);
+            }
+        }
+        out
+    }
+
+    /// The lane-split policy as a plain strided scalar loop — the
+    /// sequential-reference DEFINITION the chunked reductions are pinned
+    /// against (NOT the old left-fold sum, which is a different policy).
+    // flexlint::allow(hot-loop-outside-kernels): this IS the policy's scalar reference definition
+    fn ref_sq_norm_lanes(x: &[f32]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        for (i, &v) in x.iter().enumerate() {
+            let v = v as f64;
+            acc[i % LANES] += v * v;
+        }
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+    }
+
+    // flexlint::allow(hot-loop-outside-kernels): scalar reference definition (see above)
+    fn ref_dot_lanes(a: &[f32], b: &[f32]) -> f64 {
+        let mut acc = [0.0f64; LANES];
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            acc[i % LANES] += x as f64 * y as f64;
+        }
+        ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+    }
+
+    /// The OLD sequential left-fold (pre-kernel `tensor::sq_norm`) — kept
+    /// only to bound how far the policy change moved results.
+    // flexlint::allow(hot-loop-outside-kernels): verbatim pre-kernel loop kept as a drift bound
+    fn ref_sq_norm_seq(x: &[f32]) -> f64 {
+        x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    fn bits(v: &[f32]) -> Vec<u32> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    fn pair_bits(v: &[(f32, u32)]) -> Vec<(u32, u32)> {
+        v.iter().map(|&(m, i)| (m.to_bits(), i)).collect()
+    }
+
+    /// A gradient with NaN/±inf/±0 poison sprinkled in — every kernel
+    /// property runs over these, per the bitwise contract.
+    fn poisoned(g: &mut Gen, n: usize) -> Vec<f32> {
+        let mut v = g.vec_normal(n, 1.0);
+        if n > 0 {
+            for _ in 0..g.usize_in(0, n / 3 + 1) {
+                let at = g.usize_in(0, n - 1);
+                v[at] = *g.choose(&[f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 0.0, -0.0]);
+            }
+        }
+        v
+    }
+
+    /// Every tail length beyond two chunk widths, plus empty — the sizes
+    /// the chunk/remainder split must cover, then a random size on top.
+    fn case_lens(g: &mut Gen) -> Vec<usize> {
+        let mut lens: Vec<usize> = (0..=2 * LANES + 1).collect();
+        lens.push(g.usize_in(1, 3000));
+        lens
+    }
+
+    #[test]
+    fn add_into_bitwise_equals_scalar() {
+        check("add_into == scalar", 60, |g| {
+            for n in case_lens(g) {
+                let a = poisoned(g, n);
+                let b = poisoned(g, n);
+                let mut out = Vec::new();
+                add_into(&a, &b, &mut out);
+                ensure(bits(&out) == bits(&ref_add(&a, &b)), format!("n={n}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn error_feed_abs_fuses_both_passes_bitwise() {
+        check("error_feed_abs == add + abs", 60, |g| {
+            for n in case_lens(g) {
+                let a = poisoned(g, n);
+                let r = poisoned(g, n);
+                let (mut g_e, mut mag) = (Vec::new(), Vec::new());
+                error_feed_abs_into(&a, &r, &mut g_e, &mut mag);
+                let want = ref_add(&a, &r);
+                ensure(bits(&g_e) == bits(&want), format!("g_e n={n}"))?;
+                let want_mag: Vec<f32> = want.iter().map(|v| v.abs()).collect();
+                ensure(bits(&mag) == bits(&want_mag), format!("mag n={n}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn axpy_and_scale_bitwise_equal_scalar() {
+        check("axpy/scale == scalar", 60, |g| {
+            for n in case_lens(g) {
+                let x = poisoned(g, n);
+                let a = g.f32_in(-3.0, 3.0);
+                let mut y1 = poisoned(g, n);
+                let mut y2 = y1.clone();
+                axpy(&mut y1, a, &x);
+                ref_axpy(&mut y2, a, &x);
+                ensure(bits(&y1) == bits(&y2), format!("axpy n={n}"))?;
+                scale(&mut y1, a);
+                ref_scale(&mut y2, a);
+                ensure(bits(&y1) == bits(&y2), format!("scale n={n}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pair_builders_bitwise_equal_scalar() {
+        check("abs_pairs/pairs == scalar", 60, |g| {
+            for n in case_lens(g) {
+                let v = poisoned(g, n);
+                let mut out = Vec::new();
+                abs_pairs_into(&v, &mut out);
+                ensure(pair_bits(&out) == pair_bits(&ref_abs_pairs(&v)), format!("abs n={n}"))?;
+                let mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+                pairs_into(&mags, &mut out);
+                ensure(
+                    pair_bits(&out) == pair_bits(&ref_abs_pairs(&v)),
+                    format!("mags n={n}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn scatter_kernels_bitwise_equal_scalar() {
+        check("scatter_zero/add == scalar", 60, |g| {
+            let n = g.usize_in(1, 500);
+            let k = g.usize_in(0, n);
+            let mut rng = crate::util::rng::Rng::new(g.rng.next_u64());
+            let idx_usize = rng.sample_indices(n, k);
+            let idx: Vec<u32> = idx_usize.iter().map(|&i| i as u32).collect();
+            let base = poisoned(g, n);
+
+            let mut a = base.clone();
+            let mut b = base.clone();
+            scatter_zero(&mut a, &idx);
+            for &i in &idx {
+                b[i as usize] = 0.0;
+            }
+            ensure(bits(&a) == bits(&b), format!("zero n={n} k={k}"))?;
+
+            let vals = poisoned(g, k);
+            let mut a = base.clone();
+            let mut b = base;
+            scatter_add(&mut a, &idx, &vals);
+            for (&i, &v) in idx.iter().zip(&vals) {
+                b[i as usize] += v;
+            }
+            ensure(bits(&a) == bits(&b), format!("add n={n} k={k}"))
+        });
+    }
+
+    #[test]
+    fn abs_max_and_threshold_count_equal_scalar() {
+        check("abs_max/threshold_count == scalar", 60, |g| {
+            for n in case_lens(g) {
+                let v = poisoned(g, n);
+                ensure(
+                    abs_max(&v).to_bits() == ref_abs_max(&v).to_bits(),
+                    format!("abs_max n={n}"),
+                )?;
+                let tau = if n > 0 && g.bool() {
+                    v[g.usize_in(0, n - 1)].abs()
+                } else {
+                    g.f32_in(0.0, 2.0)
+                };
+                ensure(
+                    threshold_count(&v, tau) == ref_threshold_count(&v, tau),
+                    format!("count n={n} tau={tau}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    /// `rank_key` IS the total order: for all pairs (NaN, inf, ties, ±0
+    /// included), integer comparison of keys agrees with
+    /// `mag_desc_idx_asc` — "ranks at-or-before" ⟺ `key >= key`.
+    #[test]
+    fn rank_key_encodes_the_total_order() {
+        use crate::compress::topk::mag_desc_idx_asc;
+        check("rank_key == mag_desc_idx_asc", 150, |g| {
+            let mag = |g: &mut Gen| -> f32 {
+                if g.bool() {
+                    g.f32_in(0.0, 3.0)
+                } else {
+                    (*g.choose(&[f32::NAN, f32::INFINITY, 0.0, 1.0, f32::MIN_POSITIVE])).abs()
+                }
+            };
+            let a = (mag(g), g.usize_in(0, 40) as u32);
+            let b = (mag(g), g.usize_in(0, 40) as u32);
+            let want = mag_desc_idx_asc(&a, &b);
+            let got = rank_key(b.0, b.1).cmp(&rank_key(a.0, a.1));
+            ensure(got == want, format!("{a:?} vs {b:?}: key {got:?} order {want:?}"))
+        });
+    }
+
+    #[test]
+    fn threshold_filter_bitwise_equals_comparator_loop() {
+        check("threshold_filter == scalar", 80, |g| {
+            for n in case_lens(g) {
+                let v = poisoned(g, n);
+                let t = if n > 0 && g.bool() {
+                    let i = g.usize_in(0, n - 1);
+                    (v[i].abs(), i as u32)
+                } else {
+                    (g.f32_in(0.0, 2.0), g.usize_in(0, 50) as u32)
+                };
+                let want = ref_threshold_filter(&v, t);
+                let mut out = Vec::new();
+                threshold_filter_into(&v, t, &mut out);
+                ensure(pair_bits(&out) == pair_bits(&want), format!("g-path n={n} t={t:?}"))?;
+                // Arena reuse: a dirty, oversized buffer must not leak.
+                threshold_filter_into(&v, t, &mut out);
+                ensure(pair_bits(&out) == pair_bits(&want), format!("reuse n={n}"))?;
+                let mags: Vec<f32> = v.iter().map(|x| x.abs()).collect();
+                threshold_filter_mags_into(&mags, t, &mut out);
+                ensure(pair_bits(&out) == pair_bits(&want), format!("mags n={n}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    /// The chunked reductions match their strided scalar DEFINITION
+    /// bitwise, and sit within float-rounding distance of the old
+    /// sequential fold (the policy change moved low bits, not values).
+    #[test]
+    fn lane_reductions_match_their_scalar_definition() {
+        check("lane reductions == strided reference", 60, |g| {
+            for n in case_lens(g) {
+                let a = g.vec_normal(n, 1.0);
+                let b = g.vec_normal(n, 1.0);
+                ensure(
+                    sq_norm_lanes(&a).to_bits() == ref_sq_norm_lanes(&a).to_bits(),
+                    format!("sq_norm n={n}"),
+                )?;
+                ensure(
+                    dot_lanes(&a, &b).to_bits() == ref_dot_lanes(&a, &b).to_bits(),
+                    format!("dot n={n}"),
+                )?;
+                let seq = ref_sq_norm_seq(&a);
+                let lanes = sq_norm_lanes(&a);
+                ensure(
+                    (lanes - seq).abs() <= 1e-9 * seq.abs().max(1.0),
+                    format!("policy drift n={n}: {lanes} vs {seq}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lane_reductions_poisoned_inputs_match_definition() {
+        check("lane reductions poisoned", 60, |g| {
+            for n in case_lens(g) {
+                let a = poisoned(g, n);
+                let b = poisoned(g, n);
+                ensure(
+                    sq_norm_lanes(&a).to_bits() == ref_sq_norm_lanes(&a).to_bits(),
+                    format!("sq_norm n={n}"),
+                )?;
+                ensure(
+                    dot_lanes(&a, &b).to_bits() == ref_dot_lanes(&a, &b).to_bits(),
+                    format!("dot n={n}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gather_reduction_matches_strided_definition() {
+        check("sq_norm_gather == strided reference", 60, |g| {
+            let n = g.usize_in(1, 800);
+            let k = g.usize_in(0, n);
+            let v = poisoned(g, n);
+            let mut rng = crate::util::rng::Rng::new(g.rng.next_u64());
+            let idx: Vec<u32> =
+                rng.sample_indices(n, k).into_iter().map(|i| i as u32).collect();
+            let got = sq_norm_gather_lanes(&v, &idx);
+            let mut acc = [0.0f64; LANES];
+            for (j, &i) in idx.iter().enumerate() {
+                let x = v[i as usize] as f64;
+                acc[j % LANES] += x * x;
+            }
+            let want = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+                + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+            ensure(got.to_bits() == want.to_bits(), format!("n={n} k={k}"))
+        });
+    }
+
+    /// Empty input is a hard edge for every kernel (chunks_exact(0) and
+    /// the k_for(len=0) fix both land here).
+    #[test]
+    fn empty_inputs_are_well_defined() {
+        let mut out = Vec::new();
+        add_into(&[], &[], &mut out);
+        assert!(out.is_empty());
+        let (mut g_e, mut mag) = (vec![1.0f32], vec![1.0f32]);
+        error_feed_abs_into(&[], &[], &mut g_e, &mut mag);
+        assert!(g_e.is_empty() && mag.is_empty());
+        axpy(&mut [], 2.0, &[]);
+        scale(&mut [], 2.0);
+        let mut pairs = vec![(1.0f32, 7u32)];
+        abs_pairs_into(&[], &mut pairs);
+        assert!(pairs.is_empty());
+        scatter_zero(&mut [], &[]);
+        scatter_add(&mut [], &[], &[]);
+        assert_eq!(abs_max(&[]), 0.0);
+        assert_eq!(threshold_count(&[], 0.0), 0);
+        let mut filt = vec![(1.0f32, 7u32)];
+        threshold_filter_into(&[], (0.5, 3), &mut filt);
+        assert!(filt.is_empty());
+        assert_eq!(sq_norm_lanes(&[]), 0.0);
+        assert_eq!(dot_lanes(&[], &[]), 0.0);
+        assert_eq!(sq_norm_gather_lanes(&[], &[]), 0.0);
+    }
+
+    /// Ties: equal magnitudes must survive/fall together with the index
+    /// tiebreak, exactly as the comparator loop decided.
+    #[test]
+    fn threshold_filter_ties_resolved_by_index() {
+        let g = [1.0f32, -1.0, 1.0, 0.5, 1.0];
+        // Threshold at (1.0, idx 2): survivors are magnitude > 1.0 (none)
+        // plus magnitude == 1.0 with index <= 2.
+        let mut out = Vec::new();
+        threshold_filter_into(&g, (1.0, 2), &mut out);
+        assert_eq!(out, vec![(1.0, 0), (1.0, 1), (1.0, 2)]);
+        assert_eq!(pair_bits(&out), pair_bits(&ref_threshold_filter(&g, (1.0, 2))));
+    }
+
+    #[test]
+    fn lane_assignment_is_position_mod_lanes() {
+        // Direct witness of the documented policy: moving one element to
+        // a different position (different lane) changes nothing about the
+        // total when values are equal, and the tail joins lanes 0..tail.
+        let x = [2.0f32; 11]; // 8 + 3 tail: lanes 0..3 get two elements
+        let want: f64 = 11.0 * 4.0;
+        assert_eq!(sq_norm_lanes(&x), want);
+        assert_eq!(ref_sq_norm_lanes(&x), want);
+    }
+}

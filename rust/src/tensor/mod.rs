@@ -7,6 +7,8 @@
 
 use anyhow::{bail, Context, Result};
 
+pub mod kernels;
+
 /// One named parameter tensor inside the flat vector.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LayerInfo {
@@ -93,24 +95,22 @@ impl Layout {
 /// Flat f32 parameter/gradient vector.
 pub type ParamVec = Vec<f32>;
 
-/// y += a * x
+/// y += a * x — delegates to the chunked kernel (bitwise-equal to the
+/// scalar loop; see `tensor::kernels`).
 pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
-    debug_assert_eq!(y.len(), x.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
-    }
+    kernels::axpy(y, a, x);
 }
 
 /// x *= a
 pub fn scale(x: &mut [f32], a: f32) {
-    for xi in x.iter_mut() {
-        *xi *= a;
-    }
+    kernels::scale(x, a);
 }
 
-/// Sum of squares (f64 accumulation — gradient norms get large).
+/// Sum of squares (f64 accumulation — gradient norms get large). Uses the
+/// crate's lane-split reduction policy (`kernels::sq_norm_lanes`): the
+/// result is a pure function of the input, not of chunking or threads.
 pub fn sq_norm(x: &[f32]) -> f64 {
-    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    kernels::sq_norm_lanes(x)
 }
 
 /// The crate-wide NaN ordering policy: a total order on `f64` treating NaN
@@ -134,15 +134,16 @@ pub fn nan_min_cmp_f32(a: f32, b: f32) -> std::cmp::Ordering {
     nan_min_cmp(a as f64, b as f64)
 }
 
+/// Dot product under the same lane-split policy as [`sq_norm`].
 pub fn dot(a: &[f32], b: &[f32]) -> f64 {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+    kernels::dot_lanes(a, b)
 }
 
 /// Elementwise add into a fresh vector.
 pub fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
-    debug_assert_eq!(a.len(), b.len());
-    a.iter().zip(b).map(|(x, y)| x + y).collect()
+    let mut out = Vec::new();
+    kernels::add_into(a, b, &mut out);
+    out
 }
 
 /// Load a little-endian f32 binary file (e.g. `artifacts/<m>_init.f32`).

@@ -172,6 +172,38 @@ fn thread_matrix_covers_all_families_and_selection_backends() {
     }
 }
 
+/// The kernel-rewired hot paths (ISSUE 10): after the chunked kernel
+/// layer took over error-feed (`error_feed_abs_into`), selection
+/// magnitudes, residual zeroing (`scatter_zero`), and the lane-split
+/// reductions (`sq_norm_lanes` / `sq_norm_gather_lanes` in VAR variance
+/// and gain terms), every rewired trajectory must STILL be a pure
+/// function of the config — bitwise-identical across the 1/3/4/16 thread
+/// matrix. VAR + Tree is deliberate: it drives the gathered variance
+/// reduction and the broadcast-index residual path on every lane, the
+/// two spots where a thread-dependent reduction order would first show.
+#[test]
+fn kernel_rewired_paths_bitwise_across_thread_matrix() {
+    let cases: [(&str, Strategy, f64); 3] = [
+        ("ag-topk", Strategy::AgCompress { kind: CompressorKind::TopK }, 0.05),
+        ("ag-sampledk", Strategy::AgCompress { kind: CompressorKind::SampledK }, 0.05),
+        (
+            "artopk-sampled-var",
+            Strategy::ArTopkSampled {
+                policy: SelectionPolicy::Var,
+                flavor: ArFlavor::Tree,
+            },
+            0.05,
+        ),
+    ];
+    for (label, strategy, cr) in cases {
+        let baseline = run(strategy, cr, 4, 1);
+        for threads in [3usize, 4, 16] {
+            let b = run(strategy, cr, 4, threads);
+            assert_bitwise_equal(&baseline, &b, &format!("kernels/{label}/threads={threads}"));
+        }
+    }
+}
+
 /// The §7 contract extends to the real-workload learners (ISSUE 8): the
 /// first-party autograd MLP, resolved from the model registry via
 /// `.model_spec("mlp")`, replays bitwise across the full thread matrix

@@ -96,9 +96,11 @@ step cargo bench --no-run
 rm -f BENCH_hotpath.json # a stale record must not mask a silent skip
 step env FLEXCOMM_BENCH_FAST=1 cargo bench --bench hotpath
 # The hotpath bench doubles as the perf-regression harness: it must leave
-# a machine-readable record behind (spawn-vs-park and fresh-vs-arena
-# stages included). A missing file means the bench silently skipped its
-# reporting — fail loudly, same policy as the missing-toolchain check.
+# a machine-readable record behind (spawn-vs-park, fresh-vs-arena, and the
+# kernels stage — scalar reference vs chunked tensor::kernels primitive,
+# hard bitwise assert inside the bench — all included). A missing file
+# means the bench silently skipped its reporting — fail loudly, same
+# policy as the missing-toolchain check.
 if [ ! -f BENCH_hotpath.json ]; then
     echo "verify: FATAL: BENCH_hotpath.json not written by the hotpath bench" >&2
     status=1
